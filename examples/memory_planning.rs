@@ -1,0 +1,55 @@
+//! Memory-planning walkthrough: what a user runs before training to pick a
+//! strategy and row granularity for their (network, device, batch) — the
+//! paper's §III-C/§IV-A/§IV-B machinery end to end.
+//!
+//!   cargo run --release --example memory_planning
+
+use lr_cnn::baselines::Base;
+use lr_cnn::memory::{sim, DeviceModel};
+use lr_cnn::metrics::{fmt_bytes, Table};
+use lr_cnn::model::{resnet50, vgg16};
+use lr_cnn::planner::{solve_granularity, RowMode, Strategy};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    for net in [vgg16(), resnet50()] {
+        for dev in [DeviceModel::rtx3090(), DeviceModel::rtx3080()] {
+            println!(
+                "\n=== {} on {} ({} usable HBM) ===",
+                net.name,
+                dev.name,
+                fmt_bytes(dev.usable_hbm())
+            );
+            // how big a batch does the user want? probe a ladder
+            let mut t = Table::new(
+                "granularity solver (Eqs. 9/10/12/16): min N that fits",
+                &["batch", "Base fits?", "OverL-H N", "2PS-H N", "OverL-H peak", "2PS-H peak"],
+            );
+            for b in [8usize, 32, 64, 128, 256] {
+                let base_fits = Base
+                    .schedule(&net, b, net.h, net.w)
+                    .ok()
+                    .and_then(|s| sim::check_fits(&s, Base.xi(&net), dev.usable_hbm(), "Base").ok())
+                    .is_some();
+                let overl = solve_granularity(RowMode::Overlap, &net, b, net.h, net.w, &dev, 32, true);
+                let tps = solve_granularity(RowMode::TwoPhase, &net, b, net.h, net.w, &dev, 32, true);
+                t.row(vec![
+                    b.to_string(),
+                    if base_fits { "yes" } else { "OOM" }.into(),
+                    overl.as_ref().map(|s| s.n.to_string()).unwrap_or("-".into()),
+                    tps.as_ref().map(|s| s.n.to_string()).unwrap_or("-".into()),
+                    overl
+                        .as_ref()
+                        .map(|s| fmt_bytes(s.peak_bytes + s.xi))
+                        .unwrap_or("OOM".into()),
+                    tps.as_ref()
+                        .map(|s| fmt_bytes(s.peak_bytes + s.xi))
+                        .unwrap_or("OOM".into()),
+                ]);
+            }
+            t.print();
+        }
+    }
+    println!("\nRule of thumb (paper §V): OverL-H when compute is plentiful (RTX 3090),");
+    println!("2PS-H when the device is weaker (RTX 3080) or memory is the only concern.");
+    Ok(())
+}

@@ -1,0 +1,33 @@
+//! Quickstart: open the artifact bundle, run one row-centric forward pass,
+//! verify it is bit-near the column-centric oracle, then take one training
+//! step. This is the 5-minute tour of the whole three-layer stack.
+use lr_cnn::coordinator::{Mode, Trainer};
+use lr_cnn::data::SyntheticCorpus;
+use lr_cnn::runtime::Runtime;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let rt = Runtime::open(dir)?;
+    println!("PJRT platform: {} | model: {}", rt.platform(), rt.manifest.model.name);
+    let m = rt.manifest.model.clone();
+    let corpus = SyntheticCorpus::new(m.n_classes, 3, m.h, m.w, 7);
+    let (x, y, _) = corpus.batch(0, m.batch);
+
+    // row-centric forward == column-centric forward (the paper's §III-B
+    // coordination guarantee)
+    let mut row = Trainer::new(&rt, Mode::RowHybrid, 0.02, 42);
+    let mut col = Trainer::new(&rt, Mode::Base, 0.02, 42);
+    let z_row = row.forward(&x)?;
+    let z_col = col.forward(&x)?;
+    let diff = z_row.data.iter().zip(&z_col.data).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+    println!("row-centric vs column z^L max |diff| = {diff:.2e} over {} elems", z_col.len());
+    assert!(diff < 1e-4, "row/column forward diverged");
+
+    // one training step each; same loss to float tolerance
+    let s_row = row.step(&x, &y)?;
+    let s_col = col.step(&x, &y)?;
+    println!("losses: row-centric {:.5} vs base {:.5}", s_row.loss, s_col.loss);
+    println!("coordinator peak (row-centric): {} bytes vs z^L-everything footprint", s_row.peak_bytes);
+    println!("OK");
+    Ok(())
+}

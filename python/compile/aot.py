@@ -1,0 +1,268 @@
+"""AOT compile path: lower every L2 entry point to HLO *text* + manifest.
+
+Python runs exactly once (`make artifacts`); the Rust coordinator then
+loads `artifacts/manifest.json`, compiles each `*.hlo.txt` on the PJRT CPU
+client and never touches Python again.
+
+HLO text (not `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .rowplan import Segment
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+class Registry:
+    def __init__(self, cfg: M.NetConfig):
+        self.cfg = cfg
+        self.entries: List[dict] = []
+        self.fns: Dict[str, Tuple] = {}
+
+    def add(self, name: str, fn, arg_specs: Sequence[jax.ShapeDtypeStruct], **meta):
+        self.fns[name] = (fn, list(arg_specs))
+        self.entries.append(
+            dict(
+                name=name,
+                path=f"{name}.hlo.txt",
+                inputs=[list(s.shape) for s in arg_specs],
+                **meta,
+            )
+        )
+
+    def lower_all(self, out_dir: str) -> None:
+        os.makedirs(out_dir, exist_ok=True)
+        for e in self.entries:
+            fn, arg_specs = self.fns[e["name"]]
+            lowered = jax.jit(fn).lower(*arg_specs)
+            out_tree = jax.eval_shape(fn, *arg_specs)
+            leaves = jax.tree_util.tree_leaves(out_tree)
+            e["outputs"] = [list(l.shape) for l in leaves]
+            text = to_hlo_text(lowered)
+            path = os.path.join(out_dir, e["path"])
+            with open(path, "w") as f:
+                f.write(text)
+            e["sha256"] = hashlib.sha256(text.encode()).hexdigest()[:16]
+            print(f"  {e['name']}: {len(text)} chars, {len(e['inputs'])} in / {len(e['outputs'])} out")
+
+
+def build_registry(cfg: M.NetConfig) -> Tuple[Registry, dict]:
+    reg = Registry(cfg)
+    B = cfg.batch
+    cps = M.conv_param_shapes(cfg.layers)
+    pshapes = M.param_shapes(cfg)
+    cp_specs = [spec(*s) for s in cps]
+    hL, wL, cL = cfg.heights()[-1], cfg.w_out, cfg.c_out
+
+    # -- column-centric -------------------------------------------------------
+    reg.add(
+        "base_fwd",
+        lambda x, *ps: M.base_fwd(cfg, x, *ps),
+        [spec(B, 3, cfg.h, cfg.w), *cp_specs],
+        kind="base_fwd",
+    )
+    reg.add(
+        "base_step",
+        lambda x, y, *ps: M.base_step(cfg, x, y, *ps),
+        [spec(B, 3, cfg.h, cfg.w), spec(B, cfg.n_classes), *[spec(*s) for s in pshapes]],
+        kind="base_step",
+    )
+    reg.add(
+        "head",
+        lambda z, y, wf, bf: M.head(cfg, z, y, wf, bf),
+        [spec(B, cL, hL, wL), spec(B, cfg.n_classes), spec(*pshapes[-2]), spec(*pshapes[-1])],
+        kind="head",
+    )
+
+    # -- OverL-H segmented rows ------------------------------------------------
+    segA, segB = M.segments(cfg, M.MINIVGG_CKPT_SPLIT)
+    n_rows = M.MINIVGG_ROWS
+    plan: dict = dict(
+        ckpt_split=M.MINIVGG_CKPT_SPLIT,
+        n_rows=n_rows,
+        tps_rows=M.MINIVGG_TPS_ROWS,
+        naive_rows=n_rows,
+        segments=[],
+    )
+    seg_param_slices = [(0, 4), (4, len(cps))]
+    for si, (seg, tag) in enumerate([(segA, "segA"), (segB, "segB")]):
+        lo, hi = seg_param_slices[si]
+        seg_cp_specs = cp_specs[lo:hi]
+        ivs = seg.even_partition(n_rows)
+        seg_meta = dict(
+            name=tag,
+            h_in=seg.h_in,
+            h_out=seg.h_out,
+            c_in=seg.layers[0].c_in,
+            c_out=seg.layers[-1].c_out,
+            param_lo=lo,
+            param_hi=hi,
+            rows=[],
+        )
+        need_dx = si > 0  # segment A's dx is the image gradient: unused
+        for r, iv in enumerate(ivs):
+            f_fwd, chain = M.make_row_fwd(seg, iv)
+            in_iv = chain[0].in_iv
+            c_in = seg.layers[0].c_in
+            x_spec = spec(B, c_in, in_iv[1] - in_iv[0], cfg.w if si == 0 else cfg.w_out)
+            reg.add(
+                f"{tag}_row{r}_fwd",
+                f_fwd,
+                [x_spec, *seg_cp_specs],
+                kind="row_fwd",
+                segment=tag,
+                row=r,
+            )
+            f_bwd, _ = M.make_row_bwd(seg, iv, need_dx=need_dx)
+            c_out = seg.layers[-1].c_out
+            w_out = cfg.w if si == 0 else cfg.w_out  # W never partitioned; pools shrink it
+            # actual output width comes from the segment's layers:
+            wv = cfg.w
+            for l in (segA.layers if si == 0 else list(segA.layers) + list(segB.layers)):
+                wv = (wv + 2 * l.p - l.k) // l.s + 1
+            dz_spec = spec(B, c_out, iv[1] - iv[0], wv)
+            reg.add(
+                f"{tag}_row{r}_bwd",
+                f_bwd,
+                [x_spec, *seg_cp_specs, dz_spec],
+                kind="row_bwd",
+                segment=tag,
+                row=r,
+                need_dx=need_dx,
+            )
+            seg_meta["rows"].append(
+                dict(
+                    out_iv=list(iv),
+                    in_iv=list(in_iv),
+                    chain=[
+                        dict(
+                            in_iv=list(sl.in_iv),
+                            out_iv=list(sl.out_iv),
+                            pad_top=sl.pad_top,
+                            pad_bottom=sl.pad_bottom,
+                        )
+                        for sl in chain
+                    ],
+                )
+            )
+        plan["segments"].append(seg_meta)
+
+    # -- 2PS full-depth rows ----------------------------------------------------
+    seg_full = Segment(list(cfg.layers), cfg.h)
+    n_tps = M.MINIVGG_TPS_ROWS
+    step = seg_full.h_out // n_tps
+    cuts = [i * step for i in range(n_tps)] + [seg_full.h_out]
+    tps_meta = dict(cuts=cuts, rows=[])
+    for r in range(n_tps):
+        f, geo = M.make_tps_row_fwd(seg_full, cuts, r)
+        b = geo["bounds"]
+        x_spec = spec(B, 3, b[0][r + 1] - b[0][r], cfg.w)
+        widths = [cfg.w]
+        for l in cfg.layers:
+            widths.append((widths[-1] + 2 * l.p - l.k) // l.s + 1)
+        cache_in_specs = []
+        for idx, civ in enumerate(geo["cache_in"]):
+            if civ is not None:
+                c = cfg.layers[idx].c_in
+                cache_in_specs.append(spec(B, c, civ[1] - civ[0], widths[idx]))
+        reg.add(
+            f"tps_row{r}_fwd",
+            f,
+            [x_spec, *cache_in_specs, *cp_specs],
+            kind="tps_row_fwd",
+            row=r,
+        )
+        tps_meta["rows"].append(
+            dict(
+                own_iv=[b[0][r], b[0][r + 1]],
+                bounds=[list(cuts_l) for cuts_l in b],  # bounds[layer][cut]
+                cache_in=[list(c) if c else None for c in geo["cache_in"]],
+                cache_out=[list(c) if c else None for c in geo["cache_out"]],
+            )
+        )
+    plan["tps"] = tps_meta
+
+    # -- naive broken rows --------------------------------------------------------
+    rh = cfg.h // n_rows
+    zh = cfg.heights()[-1] // n_rows
+    f_nf = M.make_naive_row_fwd(cfg, n_rows)
+    f_nb = M.make_naive_row_bwd(cfg, n_rows)
+    for r in range(n_rows):
+        x_spec = spec(B, 3, rh, cfg.w)
+        reg.add(f"naive_row{r}_fwd", f_nf, [x_spec, *cp_specs], kind="naive_row_fwd", row=r)
+        dz_spec = spec(B, cL, zh, wL)
+        reg.add(
+            f"naive_row{r}_bwd",
+            f_nb,
+            [x_spec, *cp_specs, dz_spec],
+            kind="naive_row_bwd",
+            row=r,
+        )
+    return reg, plan
+
+
+def manifest_dict(cfg: M.NetConfig, reg: Registry, plan: dict) -> dict:
+    return dict(
+        model=dict(
+            name=cfg.name,
+            batch=cfg.batch,
+            h=cfg.h,
+            w=cfg.w,
+            n_classes=cfg.n_classes,
+            layers=[
+                dict(kind=l.kind, k=l.k, s=l.s, p=l.p, c_in=l.c_in, c_out=l.c_out)
+                for l in cfg.layers
+            ],
+            heights=cfg.heights(),
+            w_out=cfg.w_out,
+            fc_in=cfg.fc_in,
+            param_shapes=[list(s) for s in M.param_shapes(cfg)],
+            n_conv_params=len(M.conv_param_shapes(cfg.layers)),
+        ),
+        plan=plan,
+        executables=reg.entries,
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    cfg = M.MINIVGG
+    print(f"Lowering {cfg.name} entry points to HLO text ...")
+    reg, plan = build_registry(cfg)
+    reg.lower_all(args.out_dir)
+    man = manifest_dict(cfg, reg, plan)
+    path = os.path.join(args.out_dir, "manifest.json")
+    with open(path, "w") as f:
+        json.dump(man, f, indent=1)
+    print(f"wrote {path}: {len(reg.entries)} executables")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""L1 Pallas kernels (build-time only; lowered into HLO by aot.py)."""
+
+from .conv2d import conv2d, conv2d_valid, conv2d_dw, conv2d_dx  # noqa: F401
+from .dense import dense, matmul  # noqa: F401
+from .pool2d import maxpool2d  # noqa: F401

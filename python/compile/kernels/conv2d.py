@@ -1,0 +1,191 @@
+"""L1 Pallas kernels: 2-D convolution forward + backward (dx, dw).
+
+The convolution is LR-CNN's compute hot-spot: every row-slab FP/BP step is a
+stack of these kernels.  The kernel is written MXU-first (see
+DESIGN.md §Hardware-Adaptation): the k×k spatial taps are unrolled
+statically and each tap is a (C_out, C_in) × (C_in, H·W) contraction
+(`lax.dot_general`), which maps onto the TPU systolic array; the grid runs
+over the batch dimension so each grid step stages one (C, H, W) image block
+from HBM into VMEM via BlockSpec (double-buffered by Pallas).
+
+Everything runs `interpret=True` — the CPU PJRT plugin cannot execute
+Mosaic custom-calls — so these lower to plain HLO that the Rust runtime can
+compile (see /opt/xla-example/README.md).
+
+Layout: NCHW activations, OIHW weights, f32.  Padding is *semi-closed* and
+is applied by the caller (`jnp.pad` in the jitted graph) so the kernel
+itself is a pure VALID convolution; LR-CNN's row planner decides per-slab
+how much true-boundary padding each side receives.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def _conv_valid_kernel(x_ref, w_ref, b_ref, o_ref, *, k: int, s: int):
+    """VALID conv for one batch element: o = conv(x, w) + b.
+
+    x_ref: (1, C_in, H_in, W_in) VMEM block
+    w_ref: (C_out, C_in, k, k)
+    b_ref: (C_out,)
+    o_ref: (1, C_out, H_out, W_out)
+    """
+    x = x_ref[...]
+    w = w_ref[...]
+    _, c_out, h_out, w_out = o_ref.shape
+    c_in = x.shape[1]
+    acc = jnp.zeros((c_out, h_out * w_out), dtype=jnp.float32)
+    # Static unroll over the k*k taps: each tap is one MXU contraction.
+    for i in range(k):
+        for j in range(k):
+            xs = x[0, :, i : i + s * h_out : s, j : j + s * w_out : s]
+            xs2 = xs.reshape(c_in, h_out * w_out)
+            wij = w[:, :, i, j]  # (C_out, C_in)
+            acc = acc + lax.dot_general(
+                wij,
+                xs2,
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+    out = acc.reshape(c_out, h_out, w_out) + b_ref[...][:, None, None]
+    o_ref[...] = out[None]
+
+
+def conv2d_valid(x, w, b, *, stride: int = 1):
+    """VALID Pallas convolution.  x: (B, C_in, H, W), w: (C_out, C_in, k, k)."""
+    bsz, c_in, h_in, w_in = x.shape
+    c_out, c_in_w, k, k2 = w.shape
+    assert c_in == c_in_w and k == k2, (x.shape, w.shape)
+    h_out = (h_in - k) // stride + 1
+    w_out = (w_in - k) // stride + 1
+    assert h_out >= 1 and w_out >= 1, f"kernel {k} larger than input {x.shape}"
+    kern = functools.partial(_conv_valid_kernel, k=k, s=stride)
+    return pl.pallas_call(
+        kern,
+        grid=(bsz,),
+        in_specs=[
+            pl.BlockSpec((1, c_in, h_in, w_in), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((c_out, c_in, k, k), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((c_out,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, c_out, h_out, w_out), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, c_out, h_out, w_out), jnp.float32),
+        interpret=True,
+    )(x, w, b)
+
+
+def _conv_dw_kernel(x_ref, dy_ref, dw_ref, db_ref, *, k: int, s: int):
+    """Weight/bias gradient for one batch element, accumulated across the grid.
+
+    dw[o,c,i,j] = sum_{h,w} dy[o,h,w] * x[c, h*s+i, w*s+j]
+    """
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        dw_ref[...] = jnp.zeros_like(dw_ref)
+        db_ref[...] = jnp.zeros_like(db_ref)
+
+    x = x_ref[...]
+    dy = dy_ref[...]
+    _, c_out, h_out, w_out = dy.shape
+    c_in = x.shape[1]
+    dy2 = dy[0].reshape(c_out, h_out * w_out)
+    for i in range(k):
+        for j in range(k):
+            xs = x[0, :, i : i + s * h_out : s, j : j + s * w_out : s]
+            xs2 = xs.reshape(c_in, h_out * w_out)
+            # (C_out, HW) x (C_in, HW)^T -> (C_out, C_in)
+            contrib = lax.dot_general(
+                dy2,
+                xs2,
+                (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+            dw_ref[:, :, i, j] += contrib
+    db_ref[...] += jnp.sum(dy2, axis=1)
+
+
+def conv2d_dw(x, dy, *, k: int, stride: int = 1):
+    """Gradient wrt weights and bias of `conv2d_valid`."""
+    bsz, c_in, h_in, w_in = x.shape
+    bsz2, c_out, h_out, w_out = dy.shape
+    assert bsz == bsz2
+    kern = functools.partial(_conv_dw_kernel, k=k, s=stride)
+    return pl.pallas_call(
+        kern,
+        grid=(bsz,),
+        in_specs=[
+            pl.BlockSpec((1, c_in, h_in, w_in), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, c_out, h_out, w_out), lambda i: (i, 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((c_out, c_in, k, k), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((c_out,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((c_out, c_in, k, k), jnp.float32),
+            jax.ShapeDtypeStruct((c_out,), jnp.float32),
+        ],
+        interpret=True,
+    )(x, dy)
+
+
+def conv2d_dx(dy, w, *, stride: int = 1):
+    """Gradient wrt input of a stride-1 VALID conv.
+
+    For s=1, dx = VALID-conv(pad(dy, k-1), flip_hw(w).transpose(O<->I)) — the
+    classic transposed-convolution identity — so the *same* MXU forward
+    kernel is reused for the backward data pass.  LR-CNN's live path only
+    uses stride-1 convs (downsampling is done by pool layers); strided convs
+    appear only in the planner-side layer graphs (ResNet-50).
+    """
+    assert stride == 1, "conv2d_dx only implements stride-1 (see docstring)"
+    c_out, c_in, k, _ = w.shape
+    # (O, I, k, k) -> flipped (I, O, k, k)
+    wt = jnp.transpose(w[:, :, ::-1, ::-1], (1, 0, 2, 3))
+    dy_pad = jnp.pad(dy, ((0, 0), (0, 0), (k - 1, k - 1), (k - 1, k - 1)))
+    zero_b = jnp.zeros((c_in,), dtype=jnp.float32)
+    return conv2d_valid(dy_pad, wt, zero_b, stride=1)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrapper: padding + VALID conv with a custom VJP whose
+# backward passes are themselves Pallas kernels (the paper's BP recompute
+# path runs through these).
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def conv2d(x, w, b, stride: int = 1, pads=((0, 0), (0, 0))):
+    """Semi-closed padded conv: pads = ((pad_top, pad_bottom), (pad_l, pad_r))."""
+    (pt, pb), (pleft, pright) = pads
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pt, pb), (pleft, pright)))
+    return conv2d_valid(xp, w, b, stride=stride)
+
+
+def _conv2d_fwd(x, w, b, stride, pads):
+    (pt, pb), (pleft, pright) = pads
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pt, pb), (pleft, pright)))
+    y = conv2d_valid(xp, w, b, stride=stride)
+    return y, (xp, w)
+
+
+def _conv2d_bwd(stride, pads, res, dy):
+    xp, w = res
+    k = w.shape[2]
+    dw, db = conv2d_dw(xp, dy, k=k, stride=stride)
+    dxp = conv2d_dx(dy, w, stride=stride)
+    (pt, pb), (pleft, pright) = pads
+    h, wd = xp.shape[2] - pt - pb, xp.shape[3] - pleft - pright
+    dx = dxp[:, :, pt : pt + h, pleft : pleft + wd]
+    return dx, dw, db
+
+
+conv2d.defvjp(_conv2d_fwd, _conv2d_bwd)

@@ -1,0 +1,64 @@
+"""L1 Pallas kernel: dense (fully-connected) matmul, forward + backward.
+
+LR-CNN does not row-partition FC layers (strong many-to-many dependency,
+paper §III-A); the whole concatenated z^L flows through this kernel once
+per iteration, so a single full-matrix MXU contraction per grid step is the
+right shape.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = lax.dot_general(
+        a_ref[...],
+        b_ref[...],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def matmul(a, b):
+    """(M, K) @ (K, N) via a single-block Pallas MXU kernel."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((m, k), lambda i: (0, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, n), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+@jax.custom_vjp
+def dense(x, w, b):
+    """x: (B, F) @ w: (F, N) + b: (N,)."""
+    return matmul(x, w) + b[None, :]
+
+
+def _dense_fwd(x, w, b):
+    return dense(x, w, b), (x, w)
+
+
+def _dense_bwd(res, dy):
+    x, w = res
+    dx = matmul(dy, w.T)
+    dw = matmul(x.T, dy)
+    db = jnp.sum(dy, axis=0)
+    return dx, dw, db
+
+
+dense.defvjp(_dense_fwd, _dense_bwd)

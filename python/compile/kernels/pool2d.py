@@ -1,0 +1,85 @@
+"""L1 Pallas kernels: 2x2/2 max pooling forward + backward.
+
+Pooling is the layer class with k == s, i.e. *zero* inter-row dependency
+(the 2PS cache size k - s = 0) — LR-CNN's row planner relies on this, so
+the kernel asserts the k == s contract.
+
+Backward distributes dy to every argmax position (ties receive the full
+gradient each, consistently in kernel and in the pure-jnp reference — see
+python/tests/test_kernel.py; synthetic f32 data makes ties measure-zero).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _maxpool_kernel(x_ref, o_ref, *, k: int):
+    x = x_ref[...]
+    _, c, h, w = x.shape
+    xr = x.reshape(1, c, h // k, k, w // k, k)
+    o_ref[...] = jnp.max(xr, axis=(3, 5))
+
+
+def maxpool2d_fwd_pallas(x, *, k: int = 2):
+    bsz, c, h, w = x.shape
+    assert h % k == 0 and w % k == 0, f"pool {k} on non-divisible {x.shape}"
+    kern = functools.partial(_maxpool_kernel, k=k)
+    return pl.pallas_call(
+        kern,
+        grid=(bsz,),
+        in_specs=[pl.BlockSpec((1, c, h, w), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, c, h // k, w // k), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, c, h // k, w // k), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+def _maxpool_bwd_kernel(x_ref, y_ref, dy_ref, dx_ref, *, k: int):
+    x = x_ref[...]
+    y = y_ref[...]
+    dy = dy_ref[...]
+    _, c, h, w = x.shape
+    yb = jnp.repeat(jnp.repeat(y, k, axis=2), k, axis=3)
+    dyb = jnp.repeat(jnp.repeat(dy, k, axis=2), k, axis=3)
+    dx_ref[...] = jnp.where(x == yb, dyb, 0.0)
+
+
+def maxpool2d_bwd_pallas(x, y, dy, *, k: int = 2):
+    bsz, c, h, w = x.shape
+    kern = functools.partial(_maxpool_bwd_kernel, k=k)
+    return pl.pallas_call(
+        kern,
+        grid=(bsz,),
+        in_specs=[
+            pl.BlockSpec((1, c, h, w), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, c, h // k, w // k), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, c, h // k, w // k), lambda i: (i, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, c, h, w), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, c, h, w), jnp.float32),
+        interpret=True,
+    )(x, y, dy)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def maxpool2d(x, k: int = 2):
+    """2-D max pooling with kernel == stride == k (no inter-row dependency)."""
+    return maxpool2d_fwd_pallas(x, k=k)
+
+
+def _maxpool2d_fwd(x, k):
+    y = maxpool2d_fwd_pallas(x, k=k)
+    return y, (x, y)
+
+
+def _maxpool2d_bwd(k, res, dy):
+    x, y = res
+    return (maxpool2d_bwd_pallas(x, y, dy, k=k),)
+
+
+maxpool2d.defvjp(_maxpool2d_fwd, _maxpool2d_bwd)

@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every L1 Pallas kernel.
+
+These are the correctness ground truth: pytest (with hypothesis sweeps)
+asserts the Pallas kernels match these over shapes/strides/paddings, and
+the L2 row-centric model is checked against a column-centric model built
+from the same primitives.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv2d_ref(x, w, b, *, stride: int = 1, pads=((0, 0), (0, 0))):
+    """Reference conv, NCHW/OIHW, explicit asymmetric padding."""
+    (pt, pb), (pleft, pright) = pads
+    y = lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=((pt, pb), (pleft, pright)),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return y + b[None, :, None, None]
+
+
+def maxpool2d_ref(x, k: int = 2):
+    return lax.reduce_window(
+        x,
+        -jnp.inf,
+        lax.max,
+        window_dimensions=(1, 1, k, k),
+        window_strides=(1, 1, k, k),
+        padding="VALID",
+    )
+
+
+def maxpool2d_bwd_ref(x, y, dy, k: int = 2):
+    """Tie rule must match the kernel: every argmax gets the full gradient."""
+    yb = jnp.repeat(jnp.repeat(y, k, axis=2), k, axis=3)
+    dyb = jnp.repeat(jnp.repeat(dy, k, axis=2), k, axis=3)
+    return jnp.where(x == yb, dyb, 0.0)
+
+
+def dense_ref(x, w, b):
+    return x @ w + b[None, :]
+
+
+def conv2d_dw_ref(xp, dy, *, k: int, stride: int = 1):
+    """Weight gradient of a VALID conv on (already padded) xp."""
+    bsz, c_in, _, _ = xp.shape
+    _, c_out, h_out, w_out = dy.shape
+    dw = jnp.zeros((c_out, c_in, k, k), dtype=jnp.float32)
+    for i in range(k):
+        for j in range(k):
+            xs = xp[:, :, i : i + stride * h_out : stride, j : j + stride * w_out : stride]
+            # (B, C_out, HW) x (B, C_in, HW) -> (C_out, C_in)
+            contrib = jnp.einsum("bohw,bchw->oc", dy, xs)
+            dw = dw.at[:, :, i, j].set(contrib)
+    db = jnp.sum(dy, axis=(0, 2, 3))
+    return dw, db

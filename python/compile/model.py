@@ -1,0 +1,346 @@
+"""L2: the CNN fwd/bwd compute graphs, built on the L1 Pallas kernels.
+
+Entry points lowered to HLO by aot.py (all pure functions of arrays):
+
+  column-centric (Base oracle/baseline)
+    base_fwd(x, conv_params...)                  -> z^L
+    base_step(x, y1h, all_params...)             -> (loss, grads...)
+  FC head (never row-partitioned, paper §III-A)
+    head(z^L, y1h, Wfc, bfc)                     -> (loss, dz^L, dWfc, dbfc)
+  OverL-H row slabs (halo-replicated, independent rows; exact by interval
+  back-propagation — see rowplan.py)
+    row_fwd(seg)(x_slab, seg_params...)          -> z_rows
+    row_bwd(seg)(x_slab, seg_params..., dz_rows) -> (seg_grads..., [dx_slab])
+  2PS rows (boundary caches handed row-to-row; paper §IV-A)
+    tps_row_fwd(x_own, caches..., params...)     -> (z_rows, out_caches...)
+  Broken ablation (no halo, closed padding — Fig. 11 "w/o sharing")
+    naive_row_fwd / naive_row_bwd
+
+`row_bwd` recomputes the slab forward inside the executable (jax.vjp over
+the slab function): this *is* the paper's BP recompute — the Rust
+coordinator releases every intermediate feature map after FP and hands BP
+only the raw input slab.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv2d, dense, maxpool2d
+from .rowplan import Interval, LayerSpec, Segment, SlabLayer, conv, pool
+
+
+@dataclass(frozen=True)
+class NetConfig:
+    name: str
+    layers: Tuple[LayerSpec, ...]
+    h: int
+    w: int
+    batch: int
+    n_classes: int
+
+    def heights(self) -> List[int]:
+        hs = [self.h]
+        for l in self.layers:
+            hs.append(l.out_h(hs[-1]))
+        return hs
+
+    @property
+    def c_out(self) -> int:
+        return self.layers[-1].c_out
+
+    @property
+    def w_out(self) -> int:
+        w = self.w
+        for l in self.layers:
+            w = (w + 2 * l.p - l.k) // l.s + 1
+        return w
+
+    @property
+    def fc_in(self) -> int:
+        return self.c_out * self.heights()[-1] * self.w_out
+
+    def conv_indices(self) -> List[int]:
+        return [i for i, l in enumerate(self.layers) if l.kind == "conv"]
+
+
+MINIVGG = NetConfig(
+    name="minivgg",
+    layers=(
+        conv(3, 16),
+        pool(16),
+        conv(16, 32),
+        pool(32),
+        conv(32, 64),
+        conv(64, 64),
+    ),
+    h=32,
+    w=32,
+    batch=8,
+    n_classes=10,
+)
+
+# The live hybrid plan: one checkpoint after pool2 (layer index 4) — the
+# paper's -H variants partition between checkpoints so the halo does not
+# blow up through pooling upsampling (OverL feasibility N <= H/o_r^0).
+MINIVGG_CKPT_SPLIT = 4
+MINIVGG_ROWS = 4  # rows per segment in the live OverL-H plan
+MINIVGG_TPS_ROWS = 2  # rows in the live full-depth 2PS plan
+
+
+def segments(cfg: NetConfig, split: int) -> Tuple[Segment, Segment]:
+    hs = cfg.heights()
+    return (
+        Segment(list(cfg.layers[:split]), cfg.h),
+        Segment(list(cfg.layers[split:]), hs[split]),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Parameter plumbing.  Conv params are a flat sequence [W1, b1, W2, b2, ...]
+# in layer order (pool layers contribute nothing); the FC head appends
+# [Wfc, bfc].
+# ---------------------------------------------------------------------------
+
+
+def conv_param_shapes(layers: Sequence[LayerSpec]) -> List[Tuple[int, ...]]:
+    shapes: List[Tuple[int, ...]] = []
+    for l in layers:
+        if l.kind == "conv":
+            shapes.append((l.c_out, l.c_in, l.k, l.k))
+            shapes.append((l.c_out,))
+    return shapes
+
+
+def param_shapes(cfg: NetConfig) -> List[Tuple[int, ...]]:
+    return conv_param_shapes(cfg.layers) + [
+        (cfg.fc_in, cfg.n_classes),
+        (cfg.n_classes,),
+    ]
+
+
+def init_params(cfg: NetConfig, seed: int = 0) -> List[jnp.ndarray]:
+    """He-normal init (python-side, for tests; Rust has its own init)."""
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for shp in param_shapes(cfg):
+        key, sub = jax.random.split(key)
+        if len(shp) == 1:
+            out.append(jnp.zeros(shp, jnp.float32))
+        else:
+            fan_in = shp[1] * shp[2] * shp[3] if len(shp) == 4 else shp[0]
+            out.append(jax.random.normal(sub, shp, jnp.float32) * jnp.sqrt(2.0 / fan_in))
+    return out
+
+
+def _apply_layers(
+    layers: Sequence[LayerSpec],
+    x: jnp.ndarray,
+    params: Sequence[jnp.ndarray],
+    hpads: Sequence[Tuple[int, int]],
+) -> jnp.ndarray:
+    """Run a layer stack with explicit per-layer H padding (semi-closed)."""
+    pi = 0
+    for layer, (pt, pb) in zip(layers, hpads):
+        if layer.kind == "conv":
+            w, b = params[pi], params[pi + 1]
+            pi += 2
+            x = conv2d(x, w, b, layer.s, ((pt, pb), (layer.p, layer.p)))
+            # ReLU: pointwise, so the interval calculus is untouched; its
+            # output is *abandoned* from the memory accounting and
+            # recomputed in BP (paper §II-A, following SuperNeurons/Tsplit)
+            x = jnp.maximum(x, 0.0)
+        else:
+            x = maxpool2d(x, layer.k)
+    assert pi == len(params), (pi, len(params))
+    return x
+
+
+def column_hpads(layers: Sequence[LayerSpec]) -> List[Tuple[int, int]]:
+    return [(l.p, l.p) for l in layers]
+
+
+# -- column-centric oracle ---------------------------------------------------
+
+
+def base_fwd(cfg: NetConfig, x, *conv_params):
+    return _apply_layers(cfg.layers, x, conv_params, column_hpads(cfg.layers))
+
+
+def head(cfg: NetConfig, z_l, y1h, w_fc, b_fc):
+    """Softmax cross-entropy head.  Returns (loss, dz^L, dWfc, dbfc)."""
+
+    def loss_fn(z, wf, bf):
+        logits = dense(z.reshape(cfg.batch, cfg.fc_in), wf, bf)
+        logz = jax.nn.logsumexp(logits, axis=1, keepdims=True)
+        return -jnp.mean(jnp.sum(y1h * (logits - logz), axis=1))
+
+    loss, grads = jax.value_and_grad(loss_fn, argnums=(0, 1, 2))(z_l, w_fc, b_fc)
+    return loss, grads[0], grads[1], grads[2]
+
+
+def base_step(cfg: NetConfig, x, y1h, *params):
+    """Full column-centric training step: (loss, grad per param)."""
+    n_conv = len(conv_param_shapes(cfg.layers))
+
+    def loss_fn(ps):
+        z = base_fwd(cfg, x, *ps[:n_conv])
+        logits = dense(z.reshape(cfg.batch, cfg.fc_in), ps[n_conv], ps[n_conv + 1])
+        logz = jax.nn.logsumexp(logits, axis=1, keepdims=True)
+        return -jnp.mean(jnp.sum(y1h * (logits - logz), axis=1))
+
+    loss, grads = jax.value_and_grad(loss_fn)(list(params))
+    return (loss, *grads)
+
+
+# -- OverL row slabs ----------------------------------------------------------
+
+
+def slab_fwd(seg: Segment, chain: List[SlabLayer], x_slab, *seg_params):
+    hpads = [(sl.pad_top, sl.pad_bottom) for sl in chain]
+    return _apply_layers(seg.layers, x_slab, seg_params, hpads)
+
+
+def make_row_fwd(seg: Segment, out_iv: Interval):
+    chain = seg.slab(out_iv)
+
+    def f(x_slab, *seg_params):
+        return slab_fwd(seg, chain, x_slab, *seg_params)
+
+    return f, chain
+
+
+def make_row_bwd(seg: Segment, out_iv: Interval, need_dx: bool):
+    """vjp of the slab forward; recomputes FP internally (paper BP).
+
+    The recomputed z_r is returned as the LAST output: it pins the full
+    forward in the graph (otherwise XLA dead-code-eliminates the final
+    bias parameter, changing the executable arity) and matches Algorithm 1
+    line 17 — BP really does reproduce the row's feature maps.
+    """
+    chain = seg.slab(out_iv)
+
+    def f(x_slab, *rest):
+        seg_params, dz = rest[:-1], rest[-1]
+
+        def fwd(xs, ps):
+            return slab_fwd(seg, chain, xs, *ps)
+
+        z, vjp = jax.vjp(fwd, x_slab, list(seg_params))
+        dx, dps = vjp(dz)
+        if need_dx:
+            return (*dps, dx, z)
+        return (*dps, z)
+
+    return f, chain
+
+
+# -- 2PS rows -----------------------------------------------------------------
+
+
+def make_tps_row_fwd(seg: Segment, out_cuts: List[int], r: int):
+    """Row r of a 2PS forward (paper §IV-A).
+
+    Inputs:  x_own (input rows bounds[0][r]..bounds[0][r+1]),
+             caches_in (one per layer with a nonzero cache, r > 0),
+             conv params.
+    Outputs: (z_rows, caches_out... for r < N-1).
+
+    The cache at layer idx covers input rows [needed_start(r+1), own_end):
+    (k − s) rows for interior conv layers — the paper's (k^l − s^l)·W^l —
+    and nothing for pools (k == s).
+    """
+    n = len(out_cuts) - 1
+    bounds = seg.tps_boundaries(out_cuts)
+    hs = seg.heights()
+
+    cache_in_ivs: List[Optional[Interval]] = []
+    cache_out_ivs: List[Optional[Interval]] = []
+    for idx, layer in enumerate(seg.layers):
+        if r > 0:
+            needed = max(0, bounds[idx + 1][r] * layer.s - layer.p)
+            own = bounds[idx][r]
+            cache_in_ivs.append((needed, own) if needed < own else None)
+        else:
+            cache_in_ivs.append(None)
+        if r < n - 1:
+            nns = max(0, bounds[idx + 1][r + 1] * layer.s - layer.p)
+            own_end = bounds[idx][r + 1]
+            cache_out_ivs.append((nns, own_end) if nns < own_end else None)
+        else:
+            cache_out_ivs.append(None)
+
+    def f(x_own, *rest):
+        n_caches = sum(1 for c in cache_in_ivs if c is not None)
+        caches_in, params = list(rest[:n_caches]), rest[n_caches:]
+        pi = 0
+        ci = 0
+        cur = x_own
+        cur_iv = (bounds[0][r], bounds[0][r + 1])
+        caches_out = []
+        for idx, layer in enumerate(seg.layers):
+            h_in = hs[idx]
+            out_iv = (bounds[idx + 1][r], bounds[idx + 1][r + 1])
+            if cache_in_ivs[idx] is not None:
+                full = jnp.concatenate([caches_in[ci], cur], axis=2)
+                full_iv = (cache_in_ivs[idx][0], cur_iv[1])
+                ci += 1
+            else:
+                full, full_iv = cur, cur_iv
+            if cache_out_ivs[idx] is not None:
+                a, bnd = cache_out_ivs[idx]
+                caches_out.append(full[:, :, a - full_iv[0] : bnd - full_iv[0], :])
+            if layer.kind == "conv":
+                w, b = params[pi], params[pi + 1]
+                pi += 2
+                start_u = out_iv[0] * layer.s - layer.p
+                end_u = (out_iv[1] - 1) * layer.s - layer.p + layer.k
+                pt, pb = max(0, -start_u), max(0, end_u - h_in)
+                assert full_iv == (max(0, start_u), min(h_in, end_u)), (
+                    idx,
+                    full_iv,
+                    (start_u, end_u),
+                )
+                cur = conv2d(full, w, b, layer.s, ((pt, pb), (layer.p, layer.p)))
+                cur = jnp.maximum(cur, 0.0)  # match _apply_layers
+            else:
+                cur = maxpool2d(full, layer.k)
+            cur_iv = out_iv
+        return (cur, *caches_out)
+
+    geo = dict(bounds=bounds, cache_in=cache_in_ivs, cache_out=cache_out_ivs)
+    return f, geo
+
+
+# -- broken ablation (Fig. 11 "w/o sharing") ----------------------------------
+
+
+def make_naive_row_fwd(cfg: NetConfig, n_rows: int):
+    """No halo, *closed* padding: every slab is convolved as if it were a
+    full image (zeros at interior boundaries) — the paper's Fig. 3(b)
+    feature-loss / padding-redundancy failure mode, for Fig. 11 w/o."""
+    assert cfg.h % n_rows == 0
+
+    def f(x_rows, *conv_params):
+        return _apply_layers(cfg.layers, x_rows, conv_params, column_hpads(cfg.layers))
+
+    return f
+
+
+def make_naive_row_bwd(cfg: NetConfig, n_rows: int):
+    def f(x_rows, *rest):
+        conv_params, dz = rest[:-1], rest[-1]
+
+        def fwd(ps):
+            return _apply_layers(cfg.layers, x_rows, ps, column_hpads(cfg.layers))
+
+        z, vjp = jax.vjp(fwd, list(conv_params))
+        (dps,) = vjp(dz)
+        # z returned last: keeps the final bias live (see make_row_bwd)
+        return (*dps, z)
+
+    return f

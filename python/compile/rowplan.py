@@ -1,0 +1,192 @@
+"""Row-partitioning interval calculus (L2 side).
+
+This is the generalized form of the paper's height recursions:
+
+  * Eq. (11)  H_1^l   = (H_1^{l+1} - 1)·s + k − p          (first row, 2PS)
+  * Eq. (13)  H_r^l   = (H_r^{l+1} - 1)·s + s              (middle rows, 2PS)
+  * Eq. (14)  H_N^l   = (H_N^{l+1} - 1)·s + s − p          (last row, 2PS)
+  * Eq. (15)  o_r^{l-1} = (o_r^l − 1)·s + k                (halo, OverL)
+
+all of which are special cases of exact *interval back-propagation*: output
+rows [a, b) of a k/s/p layer need input rows
+
+    [ a·s − p ,  (b−1)·s − p + k )  ∩  [0, H_in)
+
+with the clipped amount re-introduced as padding **only when the clip is at
+a true image boundary** — the paper's "semi-closed padding" (§III-B) falls
+out automatically from the clamp.  Because the backward map is the exact
+preimage, walking a slab forward again produces *exactly* the target
+interval at every layer: row-concat output is bit-equal to column output
+(tested in python/tests/test_rowequiv.py) — this is the coordination that
+the broken "w/o sharing" ablation (Fig. 11) lacks.
+
+The same calculus is mirrored in Rust (`rust/src/shapes/interval.rs`) and
+cross-checked against the manifest this module emits.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+Interval = Tuple[int, int]  # half-open [a, b)
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    """One conv/pool layer in a segment.  Pool layers have k == s, p == 0."""
+
+    kind: str  # "conv" | "pool"
+    k: int
+    s: int
+    p: int
+    c_in: int
+    c_out: int
+
+    def out_h(self, h_in: int) -> int:
+        return (h_in + 2 * self.p - self.k) // self.s + 1
+
+
+def conv(c_in: int, c_out: int, k: int = 3, s: int = 1, p: int = 1) -> LayerSpec:
+    return LayerSpec("conv", k, s, p, c_in, c_out)
+
+
+def pool(c: int, k: int = 2) -> LayerSpec:
+    return LayerSpec("pool", k, k, 0, c, c)
+
+
+@dataclass(frozen=True)
+class SlabLayer:
+    """Per-layer slab geometry of one row's forward pass."""
+
+    in_iv: Interval  # rows of the layer input held by the slab
+    out_iv: Interval  # rows of the layer output the slab produces
+    pad_top: int  # true-boundary padding (semi-closed)
+    pad_bottom: int
+
+
+def back_interval(layer: LayerSpec, out_iv: Interval, h_in: int) -> Tuple[Interval, int, int]:
+    """Exact preimage of output rows [a, b) with semi-closed padding."""
+    a, b = out_iv
+    assert 0 <= a < b, out_iv
+    start_u = a * layer.s - layer.p
+    end_u = (b - 1) * layer.s - layer.p + layer.k
+    ia, ib = max(0, start_u), min(h_in, end_u)
+    pad_top = ia - start_u
+    pad_bottom = end_u - ib
+    assert pad_top <= layer.p and pad_bottom <= layer.p, (layer, out_iv)
+    return (ia, ib), pad_top, pad_bottom
+
+
+def fwd_interval(layer: LayerSpec, in_iv: Interval, pad_top: int, pad_bottom: int) -> Interval:
+    """Output rows produced by a slab covering in_iv with the given pads."""
+    ia, ib = in_iv
+    lo = ia - pad_top  # first covered row of the padded space
+    hi = ib + pad_bottom
+    o_start = -(-(lo + layer.p) // layer.s)  # ceil
+    o_end = (hi + layer.p - layer.k) // layer.s + 1
+    return (o_start, o_end)
+
+
+@dataclass
+class Segment:
+    """A stack of conv/pool layers row-partitioned as a unit.
+
+    In the hybrid (-H) variants a segment is the span between two
+    checkpoints; without checkpointing there is a single segment covering
+    all conv layers.
+    """
+
+    layers: List[LayerSpec]
+    h_in: int
+
+    def heights(self) -> List[int]:
+        hs = [self.h_in]
+        for l in self.layers:
+            hs.append(l.out_h(hs[-1]))
+        return hs
+
+    @property
+    def h_out(self) -> int:
+        return self.heights()[-1]
+
+    def slab(self, out_iv: Interval) -> List[SlabLayer]:
+        """Full slab chain (input layer first) producing out_iv at the end."""
+        hs = self.heights()
+        # walk backward collecting required input intervals
+        ivs: List[Tuple[Interval, int, int]] = [(out_iv, 0, 0)]
+        iv = out_iv
+        for idx in range(len(self.layers) - 1, -1, -1):
+            iv, pt, pb = back_interval(self.layers[idx], iv, hs[idx])
+            ivs.append((iv, pt, pb))
+        ivs.reverse()  # ivs[i] = (interval at layer-i input, pads of layer i)
+        chain: List[SlabLayer] = []
+        for idx, layer in enumerate(self.layers):
+            in_iv, pt, pb = ivs[idx]
+            produced = fwd_interval(layer, in_iv, pt, pb)
+            expected = ivs[idx + 1][0]
+            assert produced == expected, (idx, produced, expected)
+            chain.append(SlabLayer(in_iv, produced, pt, pb))
+        return chain
+
+    # -- OverL -------------------------------------------------------------
+
+    def even_partition(self, n: int) -> List[Interval]:
+        """Even division of the *last* layer's rows (paper §IV-B: divide the
+        last layer evenly, deconvolve to size the input slabs)."""
+        h = self.h_out
+        assert n >= 1
+        if n > h:
+            raise ValueError(f"N={n} rows > H^L={h} (infeasible, see Eq. 15 discussion)")
+        cuts = [round(i * h / n) for i in range(n + 1)]
+        return [(cuts[i], cuts[i + 1]) for i in range(n)]
+
+    def overlap_rows(self, ivs: List[Interval]) -> List[int]:
+        """o_r^0 per adjacent pair: input rows shared by rows r and r+1."""
+        out = []
+        for r in range(len(ivs) - 1):
+            a = self.slab(ivs[r])[0].in_iv
+            b = self.slab(ivs[r + 1])[0].in_iv
+            out.append(max(0, a[1] - b[0]))
+        return out
+
+    # -- 2PS ---------------------------------------------------------------
+
+    def tps_boundaries(self, out_cuts: List[int]) -> List[List[int]]:
+        """Two-phase-sharing ownership boundaries, top-down per layer.
+
+        out_cuts: boundaries at the segment output, e.g. [0, 4, 8].
+        Returns bounds[layer_input_index][r] — the partition of every layer's
+        *input* rows implied by Eq. (11)/(13)/(14): the rows r's outputs can
+        reach using only its own data plus the (k−s)-row cache from r−1.
+        """
+        hs = self.heights()
+        assert out_cuts[0] == 0 and out_cuts[-1] == hs[-1], out_cuts
+        bounds = [list(out_cuts)]
+        cuts = list(out_cuts)
+        for idx in range(len(self.layers) - 1, -1, -1):
+            layer, h_in = self.layers[idx], hs[idx]
+            cuts = [
+                0 if c == 0 else min(h_in, (c - 1) * layer.s - layer.p + layer.k)
+                for c in cuts
+            ]
+            bounds.append(cuts)
+        bounds.reverse()  # bounds[i] = partition of layer-i input rows
+        return bounds
+
+    def tps_cache_rows(self, bounds: List[List[int]], r: int) -> List[Tuple[int, int]]:
+        """Rows of each layer input that row r reuses from row r−1's cache.
+
+        Cache at layer idx = [needed_start, own_start) where needed_start is
+        the preimage start of row r's output interval; size is k − s interior
+        (0 for pools since k == s), matching the paper's (k^l − s^l)·W^l.
+        """
+        assert r >= 1
+        caches = []
+        for idx, layer in enumerate(self.layers):
+            own_start = bounds[idx][r]
+            out_start = bounds[idx + 1][r]
+            needed = max(0, out_start * layer.s - layer.p)
+            assert needed <= own_start, (idx, needed, own_start)
+            caches.append((needed, own_start))
+        return caches

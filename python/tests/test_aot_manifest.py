@@ -1,0 +1,99 @@
+"""AOT bundle integrity: the registry/manifest the Rust runtime trusts."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def registry():
+    return aot.build_registry(M.MINIVGG)
+
+
+def test_registry_covers_all_modes(registry):
+    reg, plan = registry
+    names = {e["name"] for e in reg.entries}
+    assert {"base_fwd", "base_step", "head"} <= names
+    for r in range(M.MINIVGG_ROWS):
+        for seg in ("segA", "segB"):
+            assert f"{seg}_row{r}_fwd" in names
+            assert f"{seg}_row{r}_bwd" in names
+        assert f"naive_row{r}_fwd" in names
+        assert f"naive_row{r}_bwd" in names
+    for r in range(M.MINIVGG_TPS_ROWS):
+        assert f"tps_row{r}_fwd" in names
+    assert len(plan["segments"]) == 2
+
+
+def test_row_input_shapes_match_slab_chains(registry):
+    reg, plan = registry
+    by_name = {e["name"]: e for e in reg.entries}
+    for seg_meta in plan["segments"]:
+        for r, row in enumerate(seg_meta["rows"]):
+            e = by_name[f"{seg_meta['name']}_row{r}_fwd"]
+            a, b = row["in_iv"]
+            assert e["inputs"][0][2] == b - a, (e["name"], e["inputs"][0], row)
+            oa, ob = row["out_iv"]
+            # bwd dz input is the assigned output rows
+            eb = by_name[f"{seg_meta['name']}_row{r}_bwd"]
+            assert eb["inputs"][-1][2] == ob - oa
+
+
+def test_bwd_outputs_include_recomputed_z(registry):
+    reg, _ = registry
+    for e in reg.entries:
+        if e["kind"] == "row_bwd":
+            fn, specs = reg.fns[e["name"]]
+            out = jax.eval_shape(fn, *specs)
+            leaves = jax.tree_util.tree_leaves(out)
+            # grads (+dx) + z — z's channel count matches the segment output
+            assert leaves[-1].shape[0] == M.MINIVGG.batch
+
+
+def test_tps_cache_shapes_are_k_minus_s(registry):
+    reg, plan = registry
+    by_name = {e["name"]: e for e in reg.entries}
+    row1 = plan["tps"]["rows"][1]
+    e = by_name["tps_row1_fwd"]
+    # inputs: x_own, caches..., 8 conv params
+    n_caches = len(e["inputs"]) - 1 - 8
+    cache_ivs = [c for c in row1["cache_in"] if c is not None]
+    assert n_caches == len(cache_ivs)
+    for shape, (a, b) in zip(e["inputs"][1 : 1 + n_caches], cache_ivs):
+        assert shape[2] == b - a == 2  # k - s for every 3/1 conv
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_manifest_on_disk_consistent_with_rebuild():
+    man = json.load(open(os.path.join(ART, "manifest.json")))
+    reg, plan = aot.build_registry(M.MINIVGG)
+    want = aot.manifest_dict(M.MINIVGG, reg, plan)
+    assert man["model"] == want["model"]
+    assert man["plan"] == want["plan"]
+    disk = {e["name"]: (e["inputs"]) for e in man["executables"]}
+    mem = {e["name"]: (e["inputs"]) for e in want["executables"]}
+    assert disk == mem
+    for e in man["executables"]:
+        assert os.path.exists(os.path.join(ART, e["path"])), e["path"]
+
+
+def test_hlo_text_is_parseable_entry(registry):
+    """Lower one small entry and sanity-check the HLO text format the Rust
+    loader depends on (text, ENTRY computation, no serialized proto)."""
+    reg, _ = registry
+    fn, specs = reg.fns["head"]
+    lowered = jax.jit(fn).lower(*specs)
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text and "HloModule" in text
+    assert text.count("parameter(") >= 4

@@ -1,0 +1,147 @@
+"""L2 row-centric == column-centric equivalence — the paper's §III-B
+convergence guarantee, asserted numerically:
+
+  * OverL-H: concatenated row outputs equal the column forward; the sum of
+    per-row slab-vjp gradients equals the column gradient (linearity).
+  * 2PS: boundary-cache forward equals the column forward.
+  * naive (w/o sharing): genuinely differs — the Fig. 11 ablation is real.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.rowplan import Segment
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = M.MINIVGG
+    params = M.init_params(cfg, 0)
+    n_conv = len(M.conv_param_shapes(cfg.layers))
+    rng = np.random.RandomState(1)
+    x = jnp.asarray(rng.randn(cfg.batch, 3, cfg.h, cfg.w), jnp.float32)
+    y = jax.nn.one_hot(jnp.asarray(rng.randint(0, 10, cfg.batch)), 10).astype(jnp.float32)
+    return cfg, params, n_conv, x, y
+
+
+def run_segment_fp(seg, x_in, seg_params, n):
+    ivs = seg.even_partition(n)
+    outs, chains = [], []
+    for iv in ivs:
+        f, chain = M.make_row_fwd(seg, iv)
+        a, b = chain[0].in_iv
+        outs.append(f(x_in[:, :, a:b, :], *seg_params))
+        chains.append(chain)
+    return jnp.concatenate(outs, axis=2), ivs, chains
+
+
+def test_overlh_forward_bit_equal(setup):
+    cfg, params, n_conv, x, _ = setup
+    cp = params[:n_conv]
+    z_col = M.base_fwd(cfg, x, *cp)
+    segA, segB = M.segments(cfg, M.MINIVGG_CKPT_SPLIT)
+    z_ck, _, _ = run_segment_fp(segA, x, cp[:4], M.MINIVGG_ROWS)
+    z_row, _, _ = run_segment_fp(segB, z_ck, cp[4:], M.MINIVGG_ROWS)
+    np.testing.assert_allclose(z_row, z_col, rtol=1e-5, atol=1e-5)
+
+
+def test_row_gradients_sum_to_column_gradients(setup):
+    cfg, params, n_conv, x, y = setup
+    cp = params[:n_conv]
+    full = M.base_step(cfg, x, y, *params)
+    loss_col, grads_col = full[0], full[1:]
+
+    segA, segB = M.segments(cfg, M.MINIVGG_CKPT_SPLIT)
+    z_ck, ivsA, _ = run_segment_fp(segA, x, cp[:4], M.MINIVGG_ROWS)
+    z_row, ivsB, _ = run_segment_fp(segB, z_ck, cp[4:], M.MINIVGG_ROWS)
+    loss, dzL, dwfc, dbfc = M.head(cfg, z_row, y, params[-2], params[-1])
+    assert abs(float(loss) - float(loss_col)) < 1e-4
+
+    dz_ck = jnp.zeros_like(z_ck)
+    gB = [jnp.zeros(s) for s in M.conv_param_shapes(segB.layers)]
+    for iv in ivsB:
+        fb, chain = M.make_row_bwd(segB, iv, need_dx=True)
+        a, b = chain[0].in_iv
+        out = fb(z_ck[:, :, a:b, :], *cp[4:], dzL[:, :, iv[0]:iv[1], :])
+        dps, dx, _z = out[:-2], out[-2], out[-1]
+        gB = [p + q for p, q in zip(gB, dps)]
+        dz_ck = dz_ck.at[:, :, a:b, :].add(dx)
+    gA = [jnp.zeros(s) for s in M.conv_param_shapes(segA.layers)]
+    for iv in ivsA:
+        fb, chain = M.make_row_bwd(segA, iv, need_dx=False)
+        a, b = chain[0].in_iv
+        out = fb(x[:, :, a:b, :], *cp[:4], dz_ck[:, :, iv[0]:iv[1], :])
+        dps = out[:-1]
+        gA = [p + q for p, q in zip(gA, dps)]
+
+    grow = list(gA) + list(gB) + [dwfc, dbfc]
+    for i, (a, c) in enumerate(zip(grow, grads_col)):
+        scale = max(float(jnp.abs(c).max()), 1.0)
+        np.testing.assert_allclose(a, c, rtol=0, atol=2e-4 * scale, err_msg=f"grad {i}")
+
+
+def test_tps_forward_equals_column(setup):
+    cfg, params, n_conv, x, _ = setup
+    cp = params[:n_conv]
+    z_col = M.base_fwd(cfg, x, *cp)
+    seg = Segment(list(cfg.layers), cfg.h)
+    cuts = [0, 4, 8]
+    f0, g0 = M.make_tps_row_fwd(seg, cuts, 0)
+    f1, _ = M.make_tps_row_fwd(seg, cuts, 1)
+    b = g0["bounds"]
+    out0 = f0(x[:, :, b[0][0]:b[0][1], :], *cp)
+    z0, caches = out0[0], out0[1:]
+    out1 = f1(x[:, :, b[0][1]:b[0][2], :], *caches, *cp)
+    z_tps = jnp.concatenate([z0, out1[0]], axis=2)
+    np.testing.assert_allclose(z_tps, z_col, rtol=1e-5, atol=1e-5)
+
+
+def test_tps_cache_contents_are_shared_feature_rows(setup):
+    """The cache handed to row 1 must literally be rows of the column
+    feature maps — the paper's 'shared sub-feature-map'."""
+    cfg, params, n_conv, x, _ = setup
+    cp = params[:n_conv]
+    seg = Segment(list(cfg.layers), cfg.h)
+    f0, g0 = M.make_tps_row_fwd(seg, [0, 4, 8], 0)
+    out0 = f0(x[:, :, : g0["bounds"][0][1], :], *cp)
+    caches = out0[1:]
+    # cache 0 is input rows [25, 27)
+    np.testing.assert_allclose(caches[0], x[:, :, 25:27, :])
+    # cache for conv2 (layer idx 2) is pool1-output rows [11, 13)
+    z = x
+    from compile.kernels import conv2d, maxpool2d
+
+    z = jnp.maximum(conv2d(z, cp[0], cp[1], 1, ((1, 1), (1, 1))), 0.0)
+    z = maxpool2d(z, 2)
+    np.testing.assert_allclose(caches[1], z[:, :, 11:13, :], rtol=1e-5, atol=1e-5)
+
+
+def test_naive_rows_differ_from_column(setup):
+    cfg, params, n_conv, x, _ = setup
+    cp = params[:n_conv]
+    z_col = M.base_fwd(cfg, x, *cp)
+    f = M.make_naive_row_fwd(cfg, 4)
+    zn = jnp.concatenate([f(x[:, :, 8 * r : 8 * r + 8, :], *cp) for r in range(4)], axis=2)
+    assert float(jnp.abs(zn - z_col).max()) > 0.1, "ablation must actually break"
+
+
+def test_head_matches_autodiff_oracle(setup):
+    cfg, params, _, x, y = setup
+    rng = np.random.RandomState(3)
+    z = jnp.asarray(
+        rng.randn(cfg.batch, cfg.c_out, cfg.heights()[-1], cfg.w_out), jnp.float32
+    )
+    loss, dz, dw, db = M.head(cfg, z, y, params[-2], params[-1])
+
+    def oracle(z, w, b):
+        logits = z.reshape(cfg.batch, cfg.fc_in) @ w + b
+        logz = jax.nn.logsumexp(logits, axis=1, keepdims=True)
+        return -jnp.mean(jnp.sum(y * (logits - logz), axis=1))
+
+    lo, go = jax.value_and_grad(oracle, argnums=(0, 1, 2))(z, params[-2], params[-1])
+    assert abs(float(loss - lo)) < 1e-5
+    for a, b_ in zip((dz, dw, db), go):
+        np.testing.assert_allclose(a, b_, rtol=1e-4, atol=1e-5)

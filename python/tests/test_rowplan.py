@@ -1,0 +1,101 @@
+"""Interval calculus properties (mirrors rust/src/shapes/interval.rs tests)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.rowplan import (
+    Segment,
+    back_interval,
+    conv,
+    fwd_interval,
+    pool,
+)
+
+settings.register_profile("ci", max_examples=50, deadline=None)
+settings.load_profile("ci")
+
+
+layer_strat = st.one_of(
+    st.tuples(st.sampled_from([1, 3, 5, 7]), st.integers(1, 2), st.integers(0, 3)).map(
+        lambda t: conv(4, 4, k=t[0], s=t[1], p=min(t[2], t[0] - 1))
+    ),
+    st.sampled_from([pool(4, 2)]),
+)
+
+
+@given(layer_strat, st.integers(8, 64), st.integers(0, 2 ** 31 - 1))
+def test_fwd_is_exact_inverse_of_back(layer, h_in, seed):
+    h_out = layer.out_h(h_in)
+    if h_out < 1:
+        return
+    rng = np.random.default_rng(seed)
+    a = int(rng.integers(0, h_out))
+    b = int(rng.integers(a + 1, h_out + 1))
+    iv, pt, pb = back_interval(layer, (a, b), h_in)
+    assert fwd_interval(layer, iv, pt, pb) == (a, b)
+    # semi-closed: padding only at true boundaries
+    if a > 0:
+        assert pt == 0 or a * layer.s - layer.p >= 0 or pt <= layer.p
+    assert pt <= layer.p and pb <= layer.p
+
+
+@given(st.integers(1, 4), st.integers(0, 2 ** 31 - 1))
+def test_slab_chain_consistency_random_stacks(depth, seed):
+    rng = np.random.default_rng(seed)
+    layers = []
+    c = 3
+    for _ in range(depth):
+        if rng.random() < 0.3:
+            layers.append(pool(c, 2))
+        else:
+            layers.append(conv(c, c, k=3, s=1, p=1))
+    seg = Segment(layers, 32)
+    h_out = seg.h_out
+    if h_out < 2:
+        return
+    n = int(rng.integers(2, min(4, h_out) + 1))
+    ivs = seg.even_partition(n)
+    # chains exist, their input intervals cover [0, H), are sorted, and the
+    # final produced interval equals the assigned one
+    starts, ends = [], []
+    for iv in ivs:
+        chain = seg.slab(iv)
+        assert chain[-1].out_iv == iv
+        starts.append(chain[0].in_iv[0])
+        ends.append(chain[0].in_iv[1])
+    assert starts[0] == 0
+    assert ends[-1] == 32
+    assert all(s2 >= s1 for s1, s2 in zip(starts, starts[1:]))
+
+
+def test_tps_boundaries_match_paper_minivgg():
+    layers = [
+        conv(3, 16), pool(16), conv(16, 32), pool(32), conv(32, 64), conv(64, 64),
+    ]
+    seg = Segment(layers, 32)
+    bounds = seg.tps_boundaries([0, 4, 8])
+    assert bounds[0] == [0, 27, 32]
+    caches = seg.tps_cache_rows(bounds, 1)
+    # (k - s) = 2 rows at conv layers, nothing at pools
+    assert caches[0] == (25, 27)
+    assert caches[1][1] - caches[1][0] == 0 or caches[1] == (caches[1][0], caches[1][0])
+    assert caches[2] == (11, 13)
+    assert caches[4] == (4, 6)
+    assert caches[5] == (3, 5)
+
+
+@given(st.integers(2, 6), st.integers(16, 64))
+def test_tps_cache_size_is_k_minus_s_interior(n, h):
+    # stride-1 k=3 conv stack over large input: all interior caches are 2 rows
+    layers = [conv(3, 8), conv(8, 8)]
+    seg = Segment(layers, h)
+    if n > seg.h_out:
+        return
+    cuts = [round(i * seg.h_out / n) for i in range(n + 1)]
+    if len(set(cuts)) != n + 1:
+        return
+    bounds = seg.tps_boundaries(cuts)
+    for r in range(1, n):
+        for (a, b), layer in zip(seg.tps_cache_rows(bounds, r), layers):
+            if b > a and all(bounds[i][r] > 0 for i in range(len(layers))):
+                assert b - a <= layer.k - layer.s + layer.p

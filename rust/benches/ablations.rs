@@ -1,0 +1,102 @@
+//! Design-choice ablations (DESIGN.md calls these out):
+//!
+//!  A1. Checkpoint placement policy: argmin search (ours) vs √n-by-count
+//!      (Chen et al.'s rule applied naively) vs pool-boundary.
+//!  A2. Hybrid checkpoint spacing for the row planners: pool-boundary vs
+//!      byte-balanced-derived placements, peak at N=8.
+//!  A3. Granularity solver minimality: peak(N*) vs peak(N*+2) vs peak(2N*)
+//!      — diminishing returns justify "prefer small N" (Eq. 9/10).
+
+use lr_cnn::baselines::Ckp;
+use lr_cnn::memory::{sim, DeviceModel};
+use lr_cnn::metrics::{fmt_bytes, Table};
+use lr_cnn::model::{resnet50, vgg16};
+use lr_cnn::planner::{checkpoint, solve_granularity, RowCentric, RowMode, Strategy};
+
+fn peak(s: &dyn Strategy, net: &lr_cnn::model::Network, b: usize) -> u64 {
+    sim::simulate(&s.schedule(net, b, net.h, net.w).unwrap())
+        .unwrap()
+        .peak_bytes
+}
+
+fn main() {
+    let (b, n_rows) = (8usize, 8usize);
+
+    let mut t = Table::new(
+        "A1 — Ckp checkpoint placement policy (peak bytes, B=8)",
+        &["network", "argmin (ours)", "sqrt-by-count", "pool-boundary"],
+    );
+    for net in [vgg16(), resnet50()] {
+        let argmin = Ckp::auto(&net);
+        let sqrt = Ckp::with(checkpoint::sqrt_checkpoints(net.layers.len()));
+        let pools = Ckp::with(checkpoint::pool_boundary_checkpoints(
+            &net,
+            (net.layers.len() as f64).sqrt().ceil() as usize,
+        ));
+        t.row(vec![
+            net.name.clone(),
+            fmt_bytes(peak(&argmin, &net, b)),
+            fmt_bytes(peak(&sqrt, &net, b)),
+            fmt_bytes(peak(&pools, &net, b)),
+        ]);
+    }
+    t.print();
+
+    let mut t = Table::new(
+        "A2 — hybrid checkpoint spacing (OverL-H N=8 peak, B=8)",
+        &["network", "pool-boundary", "dense (every 3)", "sparse (every 7)"],
+    );
+    for net in [vgg16(), resnet50()] {
+        let mk = |step: usize| {
+            let cks: Vec<usize> = (1..net.layers.len() / step)
+                .map(|i| i * step)
+                .filter(|&c| c < net.layers.len())
+                .collect();
+            RowCentric::hybrid(RowMode::Overlap, n_rows, cks)
+        };
+        let pools = RowCentric::hybrid(
+            RowMode::Overlap,
+            n_rows,
+            checkpoint::pool_boundary_checkpoints(&net, 5),
+        );
+        t.row(vec![
+            net.name.clone(),
+            fmt_bytes(peak(&pools, &net, b)),
+            fmt_bytes(peak(&mk(3), &net, b)),
+            fmt_bytes(peak(&mk(7), &net, b)),
+        ]);
+    }
+    t.print();
+
+    let mut t = Table::new(
+        "A3 — solver minimality: extra rows past N* give diminishing returns",
+        &["network", "device", "N*", "peak(N*)", "peak(N*+2)", "peak(2N*)"],
+    );
+    for net in [vgg16()] {
+        for dev in [DeviceModel::rtx3090(), DeviceModel::rtx3080()] {
+            // a batch that forces partitioning
+            let b = 64;
+            if let Ok(sol) =
+                solve_granularity(RowMode::Overlap, &net, b, net.h, net.w, &dev, 32, true)
+            {
+                let probe = |n: usize| {
+                    let rc = RowCentric::hybrid(
+                        RowMode::Overlap,
+                        n,
+                        sol.plan.checkpoints.clone(),
+                    );
+                    fmt_bytes(peak(&rc, &net, b))
+                };
+                t.row(vec![
+                    net.name.clone(),
+                    dev.name.clone(),
+                    sol.n.to_string(),
+                    probe(sol.n),
+                    probe(sol.n + 2),
+                    probe(sol.n * 2),
+                ]);
+            }
+        }
+    }
+    t.print();
+}

@@ -1,0 +1,16 @@
+//! Fig. 10 — overall memory consumption vs granularity N, and the SD/OD
+//! data volumes that explain its shape (VGG-16, B=64, RTX 3090; §V-C).
+//!
+//! Expected shape: both hybrids descend steeply then flatten; 2PS-H's
+//! curve turns back up once accumulated sharing data (SD) offsets the row
+//! savings — the paper finds the best point near N ≈ 8 and a 2PS-H/OverL-H
+//! crossover near N ≈ 6.
+
+use lr_cnn::figures::fig10_memory_vs_n;
+use lr_cnn::memory::DeviceModel;
+use lr_cnn::model::vgg16;
+
+fn main() {
+    let net = vgg16();
+    fig10_memory_vs_n(&net, 64, &DeviceModel::rtx3090(), 14).print();
+}

@@ -1,0 +1,25 @@
+//! Fig. 6 — the largest batch size each solution reaches, VGG-16 and
+//! ResNet-50 on the RTX 3090 and RTX 3080 device models (paper §V-B).
+//!
+//! Expected shape (not absolute numbers): Base < Ckp < OffLoad ≤ Tsplit <
+//! {2PS, OverL} < {2PS-H, OverL-H}, with 2PS(-H) ≥ OverL(-H).
+
+use lr_cnn::figures::fig6_max_batch;
+use lr_cnn::memory::DeviceModel;
+use lr_cnn::metrics::bench;
+use lr_cnn::model::{resnet50, vgg16};
+
+fn main() {
+    for net in [vgg16(), resnet50()] {
+        for dev in [DeviceModel::rtx3090(), DeviceModel::rtx3080()] {
+            let r = bench::time(
+                &format!("fig6 probe {} {}", net.name, dev.name),
+                0,
+                1,
+                || fig6_max_batch(&net, &dev),
+            );
+            fig6_max_batch(&net, &dev).print();
+            println!("{}", r.report());
+        }
+    }
+}

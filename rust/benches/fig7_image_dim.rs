@@ -1,0 +1,23 @@
+//! Fig. 7 — the largest image dimension (H = W, batch size 8) each
+//! solution reaches (paper §V-B).  The paper grows dimensions by
+//! concatenating original images; we probe in 32 px steps accordingly.
+
+use lr_cnn::figures::fig7_max_dim;
+use lr_cnn::memory::DeviceModel;
+use lr_cnn::metrics::bench;
+use lr_cnn::model::{resnet50, vgg16};
+
+fn main() {
+    for net in [vgg16(), resnet50()] {
+        for dev in [DeviceModel::rtx3090(), DeviceModel::rtx3080()] {
+            let r = bench::time(
+                &format!("fig7 probe {} {}", net.name, dev.name),
+                0,
+                1,
+                || fig7_max_dim(&net, &dev, 8),
+            );
+            fig7_max_dim(&net, &dev, 8).print();
+            println!("{}", r.report());
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! Fig. 8 — per-epoch runtime at the Fig. 6 settings (paper §V-B).
+//!
+//! Expected shape: Base 1.0×; Ckp ≈ +15 %; OverL ≈ +40 %; 2PS ≈ +81 %;
+//! hybrids ≈ +100–110 %; OffLoad worst (paper: up to +356 %).
+
+use lr_cnn::figures::fig8_runtime;
+use lr_cnn::memory::DeviceModel;
+use lr_cnn::model::{resnet50, vgg16};
+
+fn main() {
+    for net in [vgg16(), resnet50()] {
+        for dev in [DeviceModel::rtx3090(), DeviceModel::rtx3080()] {
+            fig8_runtime(&net, &dev).print();
+        }
+    }
+}

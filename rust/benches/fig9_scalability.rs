@@ -1,0 +1,15 @@
+//! Fig. 9 — training runtime and CI/OD counters vs row granularity N
+//! (VGG-16, batch size 64, both devices; paper §V-C).
+//!
+//! Expected shape: sublinear runtime growth in N for both hybrids; CI and
+//! OD counters grow linearly; 2PS-H overtakes OverL-H on the weaker
+//! RTX 3080 (interruptions are compute-insensitive, redundant overlap
+//! compute is not).
+
+use lr_cnn::figures::fig9_scalability;
+use lr_cnn::model::vgg16;
+
+fn main() {
+    let net = vgg16();
+    fig9_scalability(&net, 64, 14).print();
+}

@@ -1,0 +1,114 @@
+//! L3 hot-path micro-benchmarks (the §Perf deliverable's measurement rig):
+//!
+//! * tensor plumbing: slice_h / concat_h / add_h on live-path shapes;
+//! * planner throughput: full schedule build + simulate for VGG-16;
+//! * live step timing (if artifacts are present): Base vs OverL-H vs 2PS,
+//!   splitting PJRT execute time from coordinator overhead.
+
+use lr_cnn::baselines::Base;
+use lr_cnn::coordinator::{Mode, Trainer};
+use lr_cnn::data::SyntheticCorpus;
+use lr_cnn::memory::sim;
+use lr_cnn::metrics::bench;
+use lr_cnn::model::vgg16;
+use lr_cnn::planner::{RowCentric, RowMode, Strategy};
+use lr_cnn::runtime::{Runtime, Tensor};
+
+fn tensor_plumbing() {
+    let t = Tensor::new(
+        vec![8, 32, 8, 8],
+        (0..8 * 32 * 8 * 8).map(|i| i as f32).collect(),
+    )
+    .unwrap();
+    println!(
+        "{}",
+        bench::time("tensor.slice_h 8x32x8x8 -> 2 rows", 100, 2000, || {
+            t.slice_h(2, 4).unwrap()
+        })
+        .report()
+    );
+    let parts: Vec<Tensor> = (0..4).map(|_| t.slice_h(0, 2).unwrap()).collect();
+    let refs: Vec<&Tensor> = parts.iter().collect();
+    println!(
+        "{}",
+        bench::time("tensor.concat_h 4x(8x32x2x8)", 100, 2000, || {
+            Tensor::concat_h(&refs).unwrap()
+        })
+        .report()
+    );
+    let mut acc = Tensor::zeros(&[8, 32, 8, 8]);
+    let piece = t.slice_h(0, 4).unwrap();
+    println!(
+        "{}",
+        bench::time("tensor.add_h 8x32x4x8 into 8x32x8x8", 100, 2000, || {
+            acc.add_h(2, &piece).unwrap()
+        })
+        .report()
+    );
+}
+
+fn planner_throughput() {
+    let net = vgg16();
+    let rc = RowCentric::hybrid(
+        RowMode::Overlap,
+        8,
+        lr_cnn::planner::checkpoint::pool_boundary_checkpoints(&net, 5),
+    );
+    println!(
+        "{}",
+        bench::time("planner OverL-H schedule+simulate vgg16 B=64", 3, 50, || {
+            let s = rc.schedule(&net, 64, 224, 224).unwrap();
+            sim::simulate(&s).unwrap().peak_bytes
+        })
+        .report()
+    );
+    println!(
+        "{}",
+        bench::time("planner Base schedule+simulate vgg16 B=64", 3, 50, || {
+            let s = Base.schedule(&net, 64, 224, 224).unwrap();
+            sim::simulate(&s).unwrap().peak_bytes
+        })
+        .report()
+    );
+}
+
+fn live_steps() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("(artifacts missing — run `make artifacts` for live-step benches)");
+        return;
+    }
+    let rt = Runtime::open(dir).unwrap();
+    rt.compile_all().unwrap();
+    let m = rt.manifest.model.clone();
+    let corpus = SyntheticCorpus::new(m.n_classes, 3, m.h, m.w, 1);
+    let (x, y, _) = corpus.batch(0, m.batch);
+    for mode in [Mode::Base, Mode::RowHybrid, Mode::Tps, Mode::Naive] {
+        let mut tr = Trainer::new(&rt, mode, 0.0, 9);
+        let s0 = rt.stats();
+        let r = bench::time(
+            &format!("live step {}", mode.label()),
+            3,
+            30,
+            || tr.step(&x, &y).unwrap().loss,
+        );
+        let s1 = rt.stats();
+        let execs = (s1.executions - s0.executions) as f64 / 33.0;
+        let exec_ms = (s1.execute_ms - s0.execute_ms) / 33.0;
+        let conv_ms = (s1.convert_ms - s0.convert_ms) / 33.0;
+        println!(
+            "{}   [{:.1} execs/step, pjrt {:.2} ms, convert {:.2} ms, coord {:.2} ms]",
+            r.report(),
+            execs,
+            exec_ms,
+            conv_ms,
+            (r.mean_ms - exec_ms - conv_ms).max(0.0)
+        );
+    }
+}
+
+fn main() {
+    tensor_plumbing();
+    planner_throughput();
+    live_steps();
+}

@@ -1,0 +1,16 @@
+//! Table I — the impact of checkpointing on OverL and 2PS: number of
+//! layers involved in row-centric update and the sum of rows across those
+//! layers, for VGG-16 and ResNet-50 (paper §V-B).
+//!
+//! Expected shape: the -H variants dominate both metrics on both networks
+//! (paper: VGG-16 OverL 6→13 layers / 42→54 rows; ResNet-50 2PS 10→49
+//! layers / 40→142 rows).
+
+use lr_cnn::figures::table1;
+use lr_cnn::model::{resnet50, vgg16};
+
+fn main() {
+    let v = vgg16();
+    let r = resnet50();
+    table1(&[&v, &r], 8).print();
+}

@@ -1,0 +1,80 @@
+//! Base — stock column-centric training (the paper's `Base`).
+//!
+//! All L feature maps are accumulated during FP (Eq. 3) and released one by
+//! one as BP walks back.  Fastest (no recompute, no transfers), heaviest.
+
+use crate::costmodel::CostCounters;
+use crate::error::Result;
+use crate::memory::Schedule;
+use crate::model::Network;
+use crate::planner::{slab_bytes, with_iteration_frame, Strategy};
+
+#[derive(Debug, Clone, Default)]
+pub struct Base;
+
+impl Strategy for Base {
+    fn name(&self) -> String {
+        "Base".into()
+    }
+
+    fn schedule(&self, net: &Network, b: usize, h: usize, w: usize) -> Result<Schedule> {
+        let hs = net.heights(h);
+        let ws = net.widths(w);
+        let nl = net.layers.len();
+        with_iteration_frame(net, b, h, w, |s| {
+            s.mark("fp");
+            for (i, l) in net.layers.iter().enumerate() {
+                s.alloc(format!("fmap{i}"), slab_bytes(b, l.c_out, hs[i + 1], ws[i + 1]));
+            }
+            s.mark("head");
+            s.alloc(
+                "deltaL",
+                slab_bytes(b, net.layers[nl - 1].c_out, hs[nl], ws[nl]),
+            );
+            s.mark("bp");
+            for i in (0..nl).rev() {
+                let l = &net.layers[i];
+                // δ at the layer input; z^{l-1} (fmap{i-1}) still live
+                s.alloc(format!("delta{i}"), slab_bytes(b, l.c_in, hs[i], ws[i]));
+                s.free(format!("fmap{i}"));
+                if i == nl - 1 {
+                    s.free("deltaL");
+                } else {
+                    s.free(format!("delta{}", i + 1));
+                }
+            }
+            s.free("delta0");
+            Ok(())
+        })
+    }
+
+    fn cost(&self, net: &Network, b: usize, h: usize, w: usize) -> Result<CostCounters> {
+        let tau = net.conv_flops(b, h, w) + net.fc_flops(b);
+        Ok(CostCounters {
+            fp_flops: tau,
+            bp_flops: 2 * tau,
+            ..Default::default()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::sim::simulate;
+    use crate::model::vgg16;
+
+    #[test]
+    fn base_peak_is_sum_of_feature_maps() {
+        let net = vgg16();
+        let (b, h, w) = (8, 224, 224);
+        let s = Base.schedule(&net, b, h, w).unwrap();
+        let rep = simulate(&s).unwrap();
+        assert_eq!(rep.final_bytes, 0);
+        let omega = net.total_feature_bytes(b, h, w);
+        let input = net.feature_bytes(b, h, w)[0];
+        // peak ≥ Ω + input (plus transient δ)
+        assert!(rep.peak_bytes >= omega + input);
+        assert!(rep.peak_bytes < (omega + input) * 12 / 10);
+    }
+}

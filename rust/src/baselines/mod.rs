@@ -1,0 +1,14 @@
+//! Competitor strategies from the paper's evaluation (§V-A):
+//! Base (stock PyTorch), Ckp (Chen et al. checkpointing), OffLoad
+//! (vDNN/ZeRO-Offload-style GPU→CPU offloading), and Tsplit (tensor
+//! splitting + checkpoint/offload hybrid, modelled from its description).
+
+pub mod base;
+pub mod ckp;
+pub mod offload;
+pub mod tsplit;
+
+pub use base::Base;
+pub use ckp::Ckp;
+pub use offload::OffLoad;
+pub use tsplit::Tsplit;

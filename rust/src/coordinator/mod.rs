@@ -1,0 +1,23 @@
+//! L3 coordinator: the live row-centric training scheduler.
+//!
+//! This is the runtime realization of Algorithm 1: FP walks the rows of
+//! each segment through the PJRT row executables, releasing feature maps
+//! eagerly; the concatenated z^L feeds the FC head; BP re-walks the rows in
+//! reverse, recomputing slabs *inside* the row_bwd executables and
+//! accumulating parameter gradients across rows.  Python is never invoked —
+//! only the AOT artifacts are.
+//!
+//! Four execution modes mirror the paper's Fig. 11 branches plus Base:
+//! * [`Mode::Base`]      — column-centric oracle (1 executable/step)
+//! * [`Mode::RowHybrid`] — OverL-H: halo slabs, checkpoint at pool2
+//! * [`Mode::Tps`]       — 2PS FP (boundary caches handed row-to-row)
+//! * [`Mode::Naive`]     — broken w/o-sharing ablation (closed padding)
+
+pub mod optim;
+pub mod params;
+pub mod redundancy;
+pub mod trainer;
+
+pub use optim::{Optimizer, OptimizerKind};
+pub use params::ParamSet;
+pub use trainer::{Mode, StepStats, Trainer};

@@ -1,0 +1,223 @@
+//! Optimizers over [`ParamSet`] gradients.
+//!
+//! The paper trains with plain SGD; momentum and Adam are provided because
+//! any real adopter needs them — and because optimizer state is part of ξ
+//! (always-resident bytes), which the planners must account for: see
+//! [`Optimizer::state_bytes`] and `Strategy::xi`.
+
+use crate::error::{Error, Result};
+use crate::runtime::Tensor;
+
+use super::ParamSet;
+
+/// Optimizer algorithm + hyper-parameters.
+#[derive(Debug, Clone)]
+pub enum OptimizerKind {
+    Sgd,
+    Momentum { beta: f32 },
+    Adam { beta1: f32, beta2: f32, eps: f32 },
+}
+
+/// Stateful optimizer over a fixed parameter layout.
+#[derive(Debug)]
+pub struct Optimizer {
+    pub kind: OptimizerKind,
+    pub lr: f32,
+    /// first-moment buffers (momentum / Adam m)
+    m: Vec<Tensor>,
+    /// second-moment buffers (Adam v)
+    v: Vec<Tensor>,
+    t: u64,
+}
+
+impl Optimizer {
+    pub fn sgd(lr: f32) -> Optimizer {
+        Optimizer {
+            kind: OptimizerKind::Sgd,
+            lr,
+            m: Vec::new(),
+            v: Vec::new(),
+            t: 0,
+        }
+    }
+
+    pub fn momentum(lr: f32, beta: f32) -> Optimizer {
+        Optimizer {
+            kind: OptimizerKind::Momentum { beta },
+            lr,
+            m: Vec::new(),
+            v: Vec::new(),
+            t: 0,
+        }
+    }
+
+    pub fn adam(lr: f32) -> Optimizer {
+        Optimizer {
+            kind: OptimizerKind::Adam {
+                beta1: 0.9,
+                beta2: 0.999,
+                eps: 1e-8,
+            },
+            lr,
+            m: Vec::new(),
+            v: Vec::new(),
+            t: 0,
+        }
+    }
+
+    fn ensure_state(&mut self, params: &ParamSet) {
+        let need_m = !matches!(self.kind, OptimizerKind::Sgd);
+        let need_v = matches!(self.kind, OptimizerKind::Adam { .. });
+        if need_m && self.m.is_empty() {
+            self.m = params.grad_zeros();
+        }
+        if need_v && self.v.is_empty() {
+            self.v = params.grad_zeros();
+        }
+    }
+
+    /// Bytes of optimizer state — goes into ξ for planning purposes.
+    pub fn state_bytes(&self, params: &ParamSet) -> u64 {
+        let per = params.size_bytes();
+        match self.kind {
+            OptimizerKind::Sgd => 0,
+            OptimizerKind::Momentum { .. } => per,
+            OptimizerKind::Adam { .. } => 2 * per,
+        }
+    }
+
+    /// Apply one update: params ← params − lr · direction(grads).
+    pub fn step(&mut self, params: &mut ParamSet, grads: &[Tensor]) -> Result<()> {
+        if grads.len() != params.tensors.len() {
+            return Err(Error::Runtime(format!(
+                "optimizer: {} grads for {} params",
+                grads.len(),
+                params.tensors.len()
+            )));
+        }
+        self.ensure_state(params);
+        self.t += 1;
+        match self.kind {
+            OptimizerKind::Sgd => params.sgd(grads, self.lr),
+            OptimizerKind::Momentum { beta } => {
+                for ((p, g), m) in params.tensors.iter_mut().zip(grads).zip(&mut self.m) {
+                    for (mi, gi) in m.data.iter_mut().zip(&g.data) {
+                        *mi = beta * *mi + gi;
+                    }
+                    p.axpy(-self.lr, m)?;
+                }
+                Ok(())
+            }
+            OptimizerKind::Adam { beta1, beta2, eps } => {
+                let bc1 = 1.0 - beta1.powi(self.t as i32);
+                let bc2 = 1.0 - beta2.powi(self.t as i32);
+                for (((p, g), m), v) in params
+                    .tensors
+                    .iter_mut()
+                    .zip(grads)
+                    .zip(&mut self.m)
+                    .zip(&mut self.v)
+                {
+                    for ((pi, gi), (mi, vi)) in p
+                        .data
+                        .iter_mut()
+                        .zip(&g.data)
+                        .zip(m.data.iter_mut().zip(v.data.iter_mut()))
+                    {
+                        *mi = beta1 * *mi + (1.0 - beta1) * gi;
+                        *vi = beta2 * *vi + (1.0 - beta2) * gi * gi;
+                        let mh = *mi / bc1;
+                        let vh = *vi / bc2;
+                        *pi -= self.lr * mh / (vh.sqrt() + eps);
+                    }
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::ModelInfo;
+
+    fn params() -> ParamSet {
+        let model = ModelInfo {
+            name: "t".into(),
+            batch: 1,
+            h: 4,
+            w: 4,
+            n_classes: 2,
+            layers: vec![],
+            heights: vec![4],
+            w_out: 4,
+            fc_in: 4,
+            param_shapes: vec![vec![2, 2]],
+            n_conv_params: 0,
+        };
+        ParamSet::init(&model, 1)
+    }
+
+    fn grad_ones(p: &ParamSet) -> Vec<Tensor> {
+        p.tensors
+            .iter()
+            .map(|t| Tensor::new(t.shape.clone(), vec![1.0; t.len()]).unwrap())
+            .collect()
+    }
+
+    #[test]
+    fn sgd_matches_param_set_sgd() {
+        let mut a = params();
+        let mut b = params();
+        let g = grad_ones(&a);
+        Optimizer::sgd(0.1).step(&mut a, &g).unwrap();
+        b.sgd(&g, 0.1).unwrap();
+        assert_eq!(a.tensors[0].data, b.tensors[0].data);
+    }
+
+    #[test]
+    fn momentum_accumulates_velocity() {
+        let mut p = params();
+        let before = p.tensors[0].data[0];
+        let g = grad_ones(&p);
+        let mut opt = Optimizer::momentum(0.1, 0.9);
+        opt.step(&mut p, &g).unwrap(); // v=1, Δ=0.1
+        opt.step(&mut p, &g).unwrap(); // v=1.9, Δ=0.19
+        let moved = before - p.tensors[0].data[0];
+        assert!((moved - 0.29).abs() < 1e-6, "{moved}");
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        // minimize f(x) = x² elementwise from x0; Adam should approach 0
+        let mut p = params();
+        let mut opt = Optimizer::adam(0.05);
+        for _ in 0..400 {
+            let g: Vec<Tensor> = p
+                .tensors
+                .iter()
+                .map(|t| {
+                    Tensor::new(t.shape.clone(), t.data.iter().map(|x| 2.0 * x).collect())
+                        .unwrap()
+                })
+                .collect();
+            opt.step(&mut p, &g).unwrap();
+        }
+        assert!(p.tensors[0].data.iter().all(|x| x.abs() < 1e-2));
+    }
+
+    #[test]
+    fn state_bytes_scale_with_kind() {
+        let p = params();
+        assert_eq!(Optimizer::sgd(0.1).state_bytes(&p), 0);
+        assert_eq!(Optimizer::momentum(0.1, 0.9).state_bytes(&p), p.size_bytes());
+        assert_eq!(Optimizer::adam(0.1).state_bytes(&p), 2 * p.size_bytes());
+    }
+
+    #[test]
+    fn arity_mismatch_errors() {
+        let mut p = params();
+        assert!(Optimizer::adam(0.1).step(&mut p, &[]).is_err());
+    }
+}

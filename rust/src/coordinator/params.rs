@@ -1,0 +1,142 @@
+//! Parameter set: He-initialized tensors + SGD update.
+//!
+//! Parameters never leave the coordinator (ξ in the paper's accounting);
+//! gradients are accumulated across rows here — the linearity that makes
+//! row-partitioned BP exact (DESIGN.md §5).
+
+use crate::error::{Error, Result};
+use crate::runtime::manifest::ModelInfo;
+use crate::runtime::Tensor;
+use crate::util::rng::XorShift;
+
+/// All trainable parameters, conv layers first then the FC head, matching
+/// the manifest's `param_shapes` order: [W1, b1, ..., Wfc, bfc].
+#[derive(Debug, Clone)]
+pub struct ParamSet {
+    pub tensors: Vec<Tensor>,
+}
+
+impl ParamSet {
+    /// He-normal init for weights, zeros for biases.
+    pub fn init(model: &ModelInfo, seed: u64) -> ParamSet {
+        let mut rng = XorShift::new(seed);
+        let tensors = model
+            .param_shapes
+            .iter()
+            .map(|shape| {
+                let n: usize = shape.iter().product();
+                if shape.len() == 1 {
+                    Tensor::zeros(shape)
+                } else {
+                    // conv OIHW: fan_in = I*k*k; dense (in,out): fan_in = in
+                    let fan_in: usize = if shape.len() == 4 {
+                        shape[1] * shape[2] * shape[3]
+                    } else {
+                        shape[0]
+                    };
+                    let std = (2.0f32 / fan_in as f32).sqrt();
+                    let data = (0..n).map(|_| rng.normal() * std).collect();
+                    Tensor::new(shape.clone(), data).unwrap()
+                }
+            })
+            .collect();
+        ParamSet { tensors }
+    }
+
+    pub fn n_conv(&self, model: &ModelInfo) -> usize {
+        model.n_conv_params
+    }
+
+    /// Conv-layer parameters (flat [W, b] pairs in layer order).
+    pub fn conv_slice(&self, model: &ModelInfo) -> &[Tensor] {
+        &self.tensors[..model.n_conv_params]
+    }
+
+    pub fn fc_w(&self, model: &ModelInfo) -> &Tensor {
+        &self.tensors[model.n_conv_params]
+    }
+
+    pub fn fc_b(&self, model: &ModelInfo) -> &Tensor {
+        &self.tensors[model.n_conv_params + 1]
+    }
+
+    /// Zero-filled gradient accumulators of matching shapes.
+    pub fn grad_zeros(&self) -> Vec<Tensor> {
+        self.tensors
+            .iter()
+            .map(|t| Tensor::zeros(&t.shape))
+            .collect()
+    }
+
+    pub fn size_bytes(&self) -> u64 {
+        self.tensors.iter().map(|t| t.size_bytes()).sum()
+    }
+
+    /// SGD step: p ← p − lr · g.
+    pub fn sgd(&mut self, grads: &[Tensor], lr: f32) -> Result<()> {
+        if grads.len() != self.tensors.len() {
+            return Err(Error::Runtime(format!(
+                "sgd: {} grads for {} params",
+                grads.len(),
+                self.tensors.len()
+            )));
+        }
+        for (p, g) in self.tensors.iter_mut().zip(grads) {
+            p.axpy(-lr, g)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::ModelInfo;
+
+    fn tiny_model() -> ModelInfo {
+        ModelInfo {
+            name: "t".into(),
+            batch: 2,
+            h: 8,
+            w: 8,
+            n_classes: 3,
+            layers: vec![],
+            heights: vec![8],
+            w_out: 8,
+            fc_in: 16,
+            param_shapes: vec![vec![4, 3, 3, 3], vec![4], vec![16, 3], vec![3]],
+            n_conv_params: 2,
+        }
+    }
+
+    #[test]
+    fn init_shapes_and_scaling() {
+        let m = tiny_model();
+        let p = ParamSet::init(&m, 0);
+        assert_eq!(p.tensors.len(), 4);
+        assert_eq!(p.tensors[0].shape, vec![4, 3, 3, 3]);
+        assert!(p.tensors[1].data.iter().all(|&v| v == 0.0)); // bias zeros
+        // He std ≈ sqrt(2/27) ≈ 0.27
+        let w = &p.tensors[0].data;
+        let var: f32 = w.iter().map(|v| v * v).sum::<f32>() / w.len() as f32;
+        assert!((var.sqrt() - 0.27).abs() < 0.1, "std {}", var.sqrt());
+    }
+
+    #[test]
+    fn sgd_moves_parameters() {
+        let m = tiny_model();
+        let mut p = ParamSet::init(&m, 0);
+        let before = p.tensors[0].data[0];
+        let mut g = p.grad_zeros();
+        g[0].data[0] = 2.0;
+        p.sgd(&g, 0.1).unwrap();
+        assert!((p.tensors[0].data[0] - (before - 0.2)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sgd_arity_mismatch_errors() {
+        let m = tiny_model();
+        let mut p = ParamSet::init(&m, 0);
+        assert!(p.sgd(&[], 0.1).is_err());
+    }
+}

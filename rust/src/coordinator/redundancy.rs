@@ -1,0 +1,104 @@
+//! Redundancy accounting for overlapping partitioning (paper §IV-B).
+//!
+//! The paper de-duplicates weight-gradient contributions from replicated
+//! halo rows by *recording the redundant times and averaging the
+//! accumulated sum*.  Our live path instead partitions the cotangent δ^L by
+//! row (never replicating it), which is exact by linearity and needs no
+//! averaging (DESIGN.md §5) — but the counting machinery is still the
+//! source of the OD metrics in Figs. 9/10, and this module implements it
+//! faithfully so the paper-faithful variant can be expressed and tested.
+
+use crate::runtime::manifest::SegmentInfo;
+
+/// Per-output-row computation multiplicity for one segment layer.
+///
+/// `counts[i]` = how many rows compute output row `i` of that layer; 1 =
+/// exclusive, ≥2 = replicated (the Fig. 5 shared receptive field).
+pub fn row_multiplicity(seg: &SegmentInfo, layer_idx: usize, h_out: usize) -> Vec<u32> {
+    let mut counts = vec![0u32; h_out];
+    for row in &seg.rows {
+        let link = &row.chain[layer_idx];
+        for i in link.out_iv[0]..link.out_iv[1] {
+            counts[i] += 1;
+        }
+    }
+    counts
+}
+
+/// Total replicated rows across a segment (the OD row counter of Fig. 9).
+pub fn redundant_rows(seg: &SegmentInfo, heights_out: &[usize]) -> u64 {
+    let mut total = 0u64;
+    for (idx, &h_out) in heights_out.iter().enumerate() {
+        total += row_multiplicity(seg, idx, h_out)
+            .iter()
+            .map(|&c| c.saturating_sub(1) as u64)
+            .sum::<u64>();
+    }
+    total
+}
+
+/// The paper's count-and-average correction: given per-row contributions
+/// `parts` to a value computed with multiplicity `mult` (every row that
+/// touched a replicated region added its share), the corrected sum divides
+/// each region's accumulation by its multiplicity.  For a scalar reduced
+/// over rows this collapses to `sum(parts[i] / mult[i])`.
+pub fn average_by_multiplicity(parts: &[f32], mult: &[u32]) -> f32 {
+    assert_eq!(parts.len(), mult.len());
+    parts
+        .iter()
+        .zip(mult)
+        .map(|(&p, &m)| if m == 0 { 0.0 } else { p / m as f32 })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{ChainLink, RowInfo, SegmentInfo};
+
+    fn seg_two_rows() -> SegmentInfo {
+        // one conv layer, h_out = 4; rows produce [0,3) and [1,4): rows 1-2
+        // are replicated (multiplicity 2)
+        let mk_row = |out: [usize; 2]| RowInfo {
+            out_iv: out,
+            in_iv: out,
+            chain: vec![ChainLink {
+                in_iv: out,
+                out_iv: out,
+                pad_top: 0,
+                pad_bottom: 0,
+            }],
+        };
+        SegmentInfo {
+            name: "s".into(),
+            h_in: 4,
+            h_out: 4,
+            c_in: 1,
+            c_out: 1,
+            param_lo: 0,
+            param_hi: 2,
+            rows: vec![mk_row([0, 3]), mk_row([1, 4])],
+        }
+    }
+
+    #[test]
+    fn multiplicity_counts_overlap() {
+        let seg = seg_two_rows();
+        assert_eq!(row_multiplicity(&seg, 0, 4), vec![1, 2, 2, 1]);
+        assert_eq!(redundant_rows(&seg, &[4]), 2);
+    }
+
+    #[test]
+    fn averaging_recovers_exact_value() {
+        // replicated rows contribute twice; averaging recovers the truth
+        let truth = [1.0f32, 2.0, 3.0, 4.0];
+        let mult = [1u32, 2, 2, 1];
+        let accumulated: Vec<f32> = truth
+            .iter()
+            .zip(&mult)
+            .map(|(&t, &m)| t * m as f32)
+            .collect();
+        let corrected = average_by_multiplicity(&accumulated, &mult);
+        assert!((corrected - truth.iter().sum::<f32>()).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,382 @@
+//! The live training loop over PJRT artifacts (Algorithm 1 realized).
+
+use std::time::Instant;
+
+use crate::data::SyntheticCorpus;
+use crate::error::{Error, Result};
+use crate::memory::Tracker;
+use crate::runtime::{Runtime, Tensor};
+
+use super::{Optimizer, ParamSet};
+
+/// Execution strategy for the live path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// column-centric single-executable step (the paper's Base)
+    Base,
+    /// OverL-H: segmented halo slabs, checkpoint after pool2
+    RowHybrid,
+    /// 2PS forward (boundary caches handed between rows) + row-slab BP
+    Tps,
+    /// broken w/o-sharing ablation (Fig. 11's diverging branch)
+    Naive,
+}
+
+impl Mode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Mode::Base => "Base",
+            Mode::RowHybrid => "OverL-H",
+            Mode::Tps => "2PS",
+            Mode::Naive => "naive(w/o sharing)",
+        }
+    }
+}
+
+/// Per-step observability.
+#[derive(Debug, Clone)]
+pub struct StepStats {
+    pub loss: f32,
+    /// coordinator-held activation bytes at the step's peak
+    pub peak_bytes: u64,
+    pub step_ms: f64,
+    /// PJRT executions issued
+    pub executions: u64,
+}
+
+/// Row-centric trainer over an artifact bundle.
+pub struct Trainer<'r> {
+    pub rt: &'r Runtime,
+    pub params: ParamSet,
+    pub optimizer: Optimizer,
+    pub mode: Mode,
+    pub tracker: Tracker,
+}
+
+impl<'r> Trainer<'r> {
+    pub fn new(rt: &'r Runtime, mode: Mode, lr: f32, seed: u64) -> Trainer<'r> {
+        Trainer::with_optimizer(rt, mode, Optimizer::sgd(lr), seed)
+    }
+
+    /// Use a stateful optimizer (momentum/Adam); its state bytes belong to
+    /// ξ in the planners' accounting (`Optimizer::state_bytes`).
+    pub fn with_optimizer(rt: &'r Runtime, mode: Mode, optimizer: Optimizer, seed: u64) -> Trainer<'r> {
+        let params = ParamSet::init(&rt.manifest.model, seed);
+        Trainer {
+            rt,
+            params,
+            optimizer,
+            mode,
+            tracker: Tracker::new(),
+        }
+    }
+
+    /// One training step on (x, y); returns the loss.
+    pub fn step(&mut self, x: &Tensor, y1h: &Tensor) -> Result<StepStats> {
+        let t0 = Instant::now();
+        let exec0 = self.rt.stats().executions;
+        // activation buffers are strictly per-step; start a fresh ledger
+        self.tracker = Tracker::new();
+        let (loss, grads) = match self.mode {
+            Mode::Base => self.step_base(x, y1h)?,
+            Mode::RowHybrid => self.step_row_hybrid(x, y1h, false)?,
+            Mode::Tps => self.step_row_hybrid(x, y1h, true)?,
+            Mode::Naive => self.step_naive(x, y1h)?,
+        };
+        self.optimizer.step(&mut self.params, &grads)?;
+        Ok(StepStats {
+            loss,
+            peak_bytes: self.tracker.peak(),
+            step_ms: t0.elapsed().as_secs_f64() * 1e3,
+            executions: self.rt.stats().executions - exec0,
+        })
+    }
+
+    /// Forward-only pass producing z^L (used by tests + quickstart).
+    pub fn forward(&mut self, x: &Tensor) -> Result<Tensor> {
+        self.tracker = Tracker::new();
+        match self.mode {
+            Mode::Base => {
+                let model = &self.rt.manifest.model;
+                let mut args: Vec<&Tensor> = vec![x];
+                args.extend(self.params.conv_slice(model).iter());
+                Ok(self.rt.execute("base_fwd", &args)?.remove(0))
+            }
+            Mode::RowHybrid => {
+                let zck = self.segment_fp(0, x)?;
+                self.segment_fp(1, &zck)
+            }
+            Mode::Tps => self.tps_fp(x),
+            Mode::Naive => self.naive_fp(x),
+        }
+    }
+
+    // ---------------- Base ----------------
+
+    fn step_base(&mut self, x: &Tensor, y1h: &Tensor) -> Result<(f32, Vec<Tensor>)> {
+        self.tracker.mark("base.step");
+        let mut args: Vec<&Tensor> = vec![x, y1h];
+        args.extend(self.params.tensors.iter());
+        let mut out = self.rt.execute("base_step", &args)?;
+        let grads = out.split_off(1);
+        let loss = out[0].data[0];
+        Ok((loss, grads))
+    }
+
+    // ---------------- OverL-H (and 2PS-fwd variant) ----------------
+
+    /// FP of one segment, row by row; returns the concatenated output.
+    fn segment_fp(&mut self, si: usize, input: &Tensor) -> Result<Tensor> {
+        let seg = self.rt.manifest.plan.segments[si].clone();
+        // borrow, don't clone, the segment's weights (perf pass)
+        let params = &self.params.tensors[seg.param_lo..seg.param_hi];
+        let mut rows: Vec<Tensor> = Vec::with_capacity(seg.rows.len());
+        for (r, row) in seg.rows.iter().enumerate() {
+            self.tracker.mark(format!("fp.{}.row{r}", seg.name));
+            let slab = input.slice_h(row.in_iv[0], row.in_iv[1])?;
+            self.tracker.alloc(format!("fp.{}.slab{r}", seg.name), slab.size_bytes());
+            let mut args: Vec<&Tensor> = vec![&slab];
+            args.extend(params.iter());
+            let z = self
+                .rt
+                .execute(&format!("{}_row{r}_fwd", seg.name), &args)?
+                .remove(0);
+            self.tracker.alloc(format!("fp.{}.z{r}", seg.name), z.size_bytes());
+            // the input slab is released as soon as the row is done —
+            // the row-centric memory reuse (Algorithm 1 line 9)
+            self.tracker.free(&format!("fp.{}.slab{r}", seg.name));
+            rows.push(z);
+        }
+        let out = Tensor::concat_h(&rows.iter().collect::<Vec<_>>())?;
+        self.tracker
+            .alloc(format!("fp.{}.out", seg.name), out.size_bytes());
+        for r in 0..rows.len() {
+            self.tracker.free(&format!("fp.{}.z{r}", seg.name));
+        }
+        Ok(out)
+    }
+
+    /// 2PS forward over the full depth (N = tps_rows), caches handed
+    /// row-to-row exactly as §IV-A describes.
+    fn tps_fp(&mut self, x: &Tensor) -> Result<Tensor> {
+        let tps = self.rt.manifest.plan.tps.clone();
+        let n_conv = self.rt.manifest.model.n_conv_params;
+        let conv = &self.params.tensors[..n_conv];
+        let mut rows: Vec<Tensor> = Vec::new();
+        let mut caches: Vec<Tensor> = Vec::new();
+        for (r, row) in tps.rows.iter().enumerate() {
+            self.tracker.mark(format!("fp.tps.row{r}"));
+            let own = x.slice_h(row.own_iv[0], row.own_iv[1])?;
+            self.tracker.alloc(format!("tps.own{r}"), own.size_bytes());
+            let mut args: Vec<&Tensor> = vec![&own];
+            args.extend(caches.iter()); // caches from row r−1 (empty for r=0)
+            args.extend(conv.iter());
+            let mut out = self.rt.execute(&format!("tps_row{r}_fwd"), &args)?;
+            let z = out.remove(0);
+            // free consumed caches, keep newly produced ones
+            for (i, c) in caches.iter().enumerate() {
+                let _ = c;
+                self.tracker.free(&format!("tps.cache{}.{i}", r - 1));
+            }
+            caches = out;
+            for (i, c) in caches.iter().enumerate() {
+                self.tracker.alloc(format!("tps.cache{r}.{i}"), c.size_bytes());
+            }
+            self.tracker.alloc(format!("tps.z{r}"), z.size_bytes());
+            self.tracker.free(&format!("tps.own{r}"));
+            rows.push(z);
+        }
+        for (i, c) in caches.iter().enumerate() {
+            let _ = c;
+            self.tracker
+                .free(&format!("tps.cache{}.{i}", tps.rows.len() - 1));
+        }
+        let z_l = Tensor::concat_h(&rows.iter().collect::<Vec<_>>())?;
+        self.tracker.alloc("tps.zL", z_l.size_bytes());
+        for r in 0..rows.len() {
+            self.tracker.free(&format!("tps.z{r}"));
+        }
+        Ok(z_l)
+    }
+
+    /// Shared head + row-wise BP for the hybrid and 2PS modes.
+    fn step_row_hybrid(
+        &mut self,
+        x: &Tensor,
+        y1h: &Tensor,
+        tps_forward: bool,
+    ) -> Result<(f32, Vec<Tensor>)> {
+        let model = self.rt.manifest.model.clone();
+        // ---- FP ----
+        let zck = self.segment_fp(0, x)?; // checkpoint (pool2 output)
+        let z_l = if tps_forward {
+            // 2PS forward recomputes from the input; the checkpoint is
+            // still produced for BP (2PS-H keeps checkpoints too)
+            self.tps_fp(x)?
+        } else {
+            self.segment_fp(1, &zck)?
+        };
+        // ---- head ----
+        self.tracker.mark("head");
+        let loss_out = self.rt.execute(
+            "head",
+            &[&z_l, y1h, self.params.fc_w(&model), self.params.fc_b(&model)],
+        )?;
+        let loss = loss_out[0].data[0];
+        let dz_l = &loss_out[1];
+        self.tracker.alloc("dzL", dz_l.size_bytes());
+        // z^L consumed by the head
+        if tps_forward {
+            self.tracker.free("tps.zL");
+        } else {
+            self.tracker.free("fp.segB.out");
+        }
+
+        let mut grads = self.params.grad_zeros();
+        let n_conv = model.n_conv_params;
+        grads[n_conv] = loss_out[2].clone(); // dWfc
+        grads[n_conv + 1] = loss_out[3].clone(); // dbfc
+
+        // ---- BP segment B (rows reversed; recompute inside row_bwd) ----
+        let seg_b = self.rt.manifest.plan.segments[1].clone();
+        let mut dz_ck = Tensor::zeros(&zck.shape);
+        self.tracker.alloc("dzck", dz_ck.size_bytes());
+        for (r, row) in seg_b.rows.iter().enumerate().rev() {
+            self.tracker.mark(format!("bp.segB.row{r}"));
+            let slab = zck.slice_h(row.in_iv[0], row.in_iv[1])?;
+            let dz = dz_l.slice_h(row.out_iv[0], row.out_iv[1])?;
+            self.tracker
+                .alloc(format!("bp.segB.slab{r}"), slab.size_bytes() + dz.size_bytes());
+            let params: Vec<&Tensor> =
+                self.params.tensors[seg_b.param_lo..seg_b.param_hi].iter().collect();
+            let mut args: Vec<&Tensor> = vec![&slab];
+            args.extend(params);
+            args.push(&dz);
+            let mut out = self.rt.execute(&format!("segB_row{r}_bwd"), &args)?;
+            let _z = out.pop().expect("bwd returns recomputed z last");
+            let dx = out.pop().expect("segB bwd returns dx before z");
+            for (i, g) in out.into_iter().enumerate() {
+                grads[seg_b.param_lo + i].axpy(1.0, &g)?;
+            }
+            // overlapping slab input-gradients accumulate by linearity
+            dz_ck.add_h(row.in_iv[0], &dx)?;
+            self.tracker.free(&format!("bp.segB.slab{r}"));
+        }
+        self.tracker.free("dzL");
+
+        // ---- BP segment A ----
+        let seg_a = self.rt.manifest.plan.segments[0].clone();
+        for (r, row) in seg_a.rows.iter().enumerate().rev() {
+            self.tracker.mark(format!("bp.segA.row{r}"));
+            let slab = x.slice_h(row.in_iv[0], row.in_iv[1])?;
+            let dz = dz_ck.slice_h(row.out_iv[0], row.out_iv[1])?;
+            self.tracker
+                .alloc(format!("bp.segA.slab{r}"), slab.size_bytes() + dz.size_bytes());
+            let params: Vec<&Tensor> =
+                self.params.tensors[seg_a.param_lo..seg_a.param_hi].iter().collect();
+            let mut args: Vec<&Tensor> = vec![&slab];
+            args.extend(params);
+            args.push(&dz);
+            let mut out = self.rt.execute(&format!("segA_row{r}_bwd"), &args)?;
+            out.pop().expect("bwd returns recomputed z last");
+            for (i, g) in out.into_iter().enumerate() {
+                grads[seg_a.param_lo + i].axpy(1.0, &g)?;
+            }
+            self.tracker.free(&format!("bp.segA.slab{r}"));
+        }
+        self.tracker.free("dzck");
+        self.tracker.free("fp.segA.out"); // checkpoint consumed
+        Ok((loss, grads))
+    }
+
+    // ---------------- naive (w/o sharing) ----------------
+
+    fn naive_fp(&mut self, x: &Tensor) -> Result<Tensor> {
+        let model = self.rt.manifest.model.clone();
+        let n = self.rt.manifest.plan.naive_rows;
+        let rh = model.h / n;
+        let conv = &self.params.tensors[..model.n_conv_params];
+        let mut rows = Vec::with_capacity(n);
+        for r in 0..n {
+            let slab = x.slice_h(r * rh, (r + 1) * rh)?;
+            let mut args: Vec<&Tensor> = vec![&slab];
+            args.extend(conv.iter());
+            rows.push(
+                self.rt
+                    .execute(&format!("naive_row{r}_fwd"), &args)?
+                    .remove(0),
+            );
+        }
+        Tensor::concat_h(&rows.iter().collect::<Vec<_>>())
+    }
+
+    fn step_naive(&mut self, x: &Tensor, y1h: &Tensor) -> Result<(f32, Vec<Tensor>)> {
+        let model = self.rt.manifest.model.clone();
+        self.tracker.mark("naive.fp");
+        let z_l = self.naive_fp(x)?;
+        self.tracker.alloc("naive.zL", z_l.size_bytes());
+        let loss_out = self.rt.execute(
+            "head",
+            &[&z_l, y1h, self.params.fc_w(&model), self.params.fc_b(&model)],
+        )?;
+        let loss = loss_out[0].data[0];
+        let dz_l = &loss_out[1];
+        let mut grads = self.params.grad_zeros();
+        let n_conv = model.n_conv_params;
+        grads[n_conv] = loss_out[2].clone();
+        grads[n_conv + 1] = loss_out[3].clone();
+        let n = self.rt.manifest.plan.naive_rows;
+        let rh = model.h / n;
+        let zh = dz_l.shape[2] / n;
+        self.tracker.mark("naive.bp");
+        for r in (0..n).rev() {
+            let slab = x.slice_h(r * rh, (r + 1) * rh)?;
+            let dz = dz_l.slice_h(r * zh, (r + 1) * zh)?;
+            let conv: Vec<&Tensor> = self.params.conv_slice(&model).iter().collect();
+            let mut args: Vec<&Tensor> = vec![&slab];
+            args.extend(conv);
+            args.push(&dz);
+            let mut out = self.rt.execute(&format!("naive_row{r}_bwd"), &args)?;
+            out.pop().expect("bwd returns recomputed z last");
+            for (i, g) in out.into_iter().enumerate() {
+                grads[i].axpy(1.0, &g)?;
+            }
+        }
+        self.tracker.free("naive.zL");
+        Ok((loss, grads))
+    }
+}
+
+/// Convenience: train `steps` steps on the synthetic corpus; returns the
+/// per-step losses.
+pub fn train_loop(
+    trainer: &mut Trainer<'_>,
+    corpus: &SyntheticCorpus,
+    steps: u64,
+    log_every: u64,
+) -> Result<Vec<f32>> {
+    let b = trainer.rt.manifest.model.batch;
+    let mut losses = Vec::with_capacity(steps as usize);
+    for s in 0..steps {
+        let (x, y, _) = corpus.batch(s, b);
+        let stats = trainer.step(&x, &y)?;
+        if log_every > 0 && s % log_every == 0 {
+            println!(
+                "  [{}] step {s:4}  loss {:.4}  peak {:>9}  {:.1} ms  {} execs",
+                trainer.mode.label(),
+                stats.loss,
+                crate::metrics::fmt_bytes(stats.peak_bytes),
+                stats.step_ms,
+                stats.executions
+            );
+        }
+        if !stats.loss.is_finite() {
+            return Err(Error::Runtime(format!(
+                "loss diverged to {} at step {s}",
+                stats.loss
+            )));
+        }
+        losses.push(stats.loss);
+    }
+    Ok(losses)
+}

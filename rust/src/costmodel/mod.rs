@@ -1,0 +1,126 @@
+//! Analytic time-cost model (the simulated stand-in for CUDA wall-clock).
+//!
+//! Every strategy compiles its iteration into [`CostCounters`]; the model
+//! turns them into seconds on a [`DeviceModel`].  All reproduced figures
+//! (Figs. 8, 9) report latency *relative to Base on the same device*, so
+//! only the ratios matter — they are driven by the paper's own quantities:
+//!
+//! * τ — column-equivalent conv FLOPs (paper §IV-B),
+//! * recompute FLOPs — the extra FP all recompute-based schemes pay,
+//! * ι — redundant overlap FLOPs (OverL),
+//! * CI — coordination interruptions (2PS cache extract/concat),
+//! * PCIe bytes — offload traffic, partially overlapped with compute.
+
+use crate::memory::DeviceModel;
+
+/// Per-iteration cost counters emitted by a strategy's planner.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CostCounters {
+    /// column-equivalent FP conv FLOPs (τ)
+    pub fp_flops: u64,
+    /// BP FLOPs (≈ 2τ for the conv chain: dx + dw)
+    pub bp_flops: u64,
+    /// extra FP FLOPs from recomputation (Ckp segments, row-slab BP)
+    pub recompute_flops: u64,
+    /// redundant FLOPs on replicated halo rows (ι, OverL only)
+    pub overlap_flops: u64,
+    /// coordination interruptions (CI, 2PS cache extract/concat ops)
+    pub interruptions: u64,
+    /// bytes moved over PCIe (OffLoad/Tsplit), both directions
+    pub pcie_bytes: u64,
+    /// fraction of PCIe time hidden behind compute (0 = fully exposed)
+    pub pcie_overlap: f64,
+    /// FLOPs executed as small row slabs (throughput discounted by
+    /// `DeviceModel::slab_efficiency`); subset of the totals above
+    pub slab_flops: u64,
+    /// extra sharing-data volume (2PS SD counter, Fig. 10b)
+    pub sharing_bytes: u64,
+    /// replicated overlap-data volume (OverL OD counter, Fig. 9/10b)
+    pub overlap_bytes: u64,
+    /// overlapped dimensions counter (OD rows, Fig. 9)
+    pub overlap_rows: u64,
+}
+
+impl CostCounters {
+    /// Seconds for one iteration on `dev`.
+    pub fn iter_seconds(&self, dev: &DeviceModel) -> f64 {
+        let full_speed = dev.flops_per_sec;
+        let slab_speed = dev.flops_per_sec * dev.slab_efficiency;
+        let total = self.fp_flops + self.bp_flops + self.recompute_flops + self.overlap_flops;
+        let slab = self.slab_flops.min(total);
+        let bulk = total - slab;
+        let compute = bulk as f64 / full_speed + slab as f64 / slab_speed;
+        let interrupts = self.interruptions as f64 * dev.interrupt_cost_sec;
+        let pcie = self.pcie_bytes as f64 / dev.pcie_bytes_per_sec;
+        let pcie_exposed = (pcie - compute * self.pcie_overlap).max(pcie * 0.1).min(pcie);
+        let pcie_cost = if self.pcie_bytes == 0 { 0.0 } else { pcie_exposed };
+        compute + interrupts + pcie_cost
+    }
+
+    /// Seconds for one epoch of `iters` iterations.
+    pub fn epoch_seconds(&self, dev: &DeviceModel, iters: usize) -> f64 {
+        self.iter_seconds(dev) * iters as f64
+    }
+
+    /// Latency relative to a baseline (1.0 = same; 1.4 = 40 % slower).
+    pub fn relative_to(&self, base: &CostCounters, dev: &DeviceModel) -> f64 {
+        self.iter_seconds(dev) / base.iter_seconds(dev)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base_counters() -> CostCounters {
+        CostCounters {
+            fp_flops: 1_000_000_000_000,
+            bp_flops: 2_000_000_000_000,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn recompute_increases_latency() {
+        let dev = DeviceModel::rtx3090();
+        let base = base_counters();
+        let mut ckp = base.clone();
+        ckp.recompute_flops = base.fp_flops;
+        let rel = ckp.relative_to(&base, &dev);
+        assert!(rel > 1.2 && rel < 1.5, "{rel}");
+    }
+
+    #[test]
+    fn interruptions_hurt_more_on_weak_devices_relatively() {
+        let base = base_counters();
+        let mut tps = base.clone();
+        tps.interruptions = 10_000;
+        // absolute interruption penalty is device-independent but the
+        // relative penalty is larger where compute is cheaper
+        let r90 = tps.relative_to(&base, &DeviceModel::rtx3090());
+        let r80 = tps.relative_to(&base, &DeviceModel::rtx3080());
+        assert!(r90 > 1.0 && r80 > 1.0);
+    }
+
+    #[test]
+    fn pcie_dominates_offload() {
+        let dev = DeviceModel::rtx3090();
+        let base = base_counters();
+        let mut off = base.clone();
+        off.pcie_bytes = 20 << 30;
+        off.pcie_overlap = 0.8;
+        let rel = off.relative_to(&base, &dev);
+        assert!(rel > 2.0, "{rel}");
+    }
+
+    #[test]
+    fn slab_efficiency_discount() {
+        let base = base_counters();
+        let mut overl = base.clone();
+        overl.slab_flops = base.fp_flops + base.bp_flops;
+        let dev80 = DeviceModel::rtx3080();
+        let dev90 = DeviceModel::rtx3090();
+        // the weaker device pays a bigger slab penalty (paper §V-C)
+        assert!(overl.relative_to(&base, &dev80) > overl.relative_to(&base, &dev90));
+    }
+}

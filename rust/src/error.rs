@@ -1,0 +1,58 @@
+//! Crate-wide error type.
+
+use std::fmt;
+
+/// Errors surfaced by planners, the memory simulator and the runtime.
+#[derive(Debug)]
+pub enum Error {
+    /// A plan (or baseline schedule) does not fit the device memory.
+    OutOfMemory {
+        strategy: String,
+        required: u64,
+        capacity: u64,
+    },
+    /// Row granularity is infeasible (e.g. OverL N > H/o_r, empty 2PS row).
+    InfeasiblePlan(String),
+    /// Artifact bundle problems: missing file, bad manifest, shape mismatch.
+    Artifact(String),
+    /// PJRT / XLA runtime failure.
+    Runtime(String),
+    /// Configuration error (bad CLI/layer-graph parameters).
+    Config(String),
+    Io(std::io::Error),
+    /// JSON parse/shape error from the in-tree parser (util::json).
+    Json2(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::OutOfMemory {
+                strategy,
+                required,
+                capacity,
+            } => write!(
+                f,
+                "{strategy}: out of memory — requires {} MiB > capacity {} MiB",
+                required >> 20,
+                capacity >> 20
+            ),
+            Error::InfeasiblePlan(m) => write!(f, "infeasible plan: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Json2(e) => write!(f, "json error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,373 @@
+//! Figure/table regeneration harness — one function per table AND figure
+//! of the paper's evaluation (§V).  Each returns a [`Table`] with the same
+//! rows/series the paper reports; the `rust/benches/*` binaries print them
+//! and EXPERIMENTS.md records paper-vs-measured.
+
+use crate::baselines::{Base, Ckp, OffLoad, Tsplit};
+use crate::costmodel::CostCounters;
+use crate::error::Result;
+use crate::memory::{sim, DeviceModel};
+use crate::metrics::{fmt_bytes, Table};
+use crate::model::Network;
+use crate::planner::{checkpoint, granularity::max_feasible, RowCentric, RowMode, Strategy};
+
+/// The eight strategies of §V-A, in the paper's order.
+pub fn strategy_names() -> Vec<&'static str> {
+    vec!["Base", "Ckp", "OffLoad", "Tsplit", "2PS", "OverL", "2PS-H", "OverL-H"]
+}
+
+fn hybrid_cks(net: &Network) -> Vec<usize> {
+    checkpoint::pool_boundary_checkpoints(net, (net.layers.len() as f64).sqrt().ceil() as usize)
+}
+
+/// Build strategy `name` with row target `n_rows` for `net` on `dev`.
+pub fn strategy_by_name(
+    name: &str,
+    net: &Network,
+    dev: &DeviceModel,
+    n_rows: usize,
+) -> Box<dyn Strategy> {
+    match name {
+        "Base" => Box::new(Base),
+        "Ckp" => Box::new(Ckp::auto(net)),
+        "OffLoad" => Box::new(OffLoad::full(dev)),
+        "Tsplit" => Box::new(Tsplit::auto(dev)),
+        "2PS" => Box::new(RowCentric::new(RowMode::TwoPhase, n_rows)),
+        "OverL" => Box::new(RowCentric::new(RowMode::Overlap, n_rows)),
+        "2PS-H" => Box::new(RowCentric::hybrid(RowMode::TwoPhase, n_rows, hybrid_cks(net))),
+        "OverL-H" => Box::new(RowCentric::hybrid(RowMode::Overlap, n_rows, hybrid_cks(net))),
+        other => panic!("unknown strategy {other}"),
+    }
+}
+
+/// Row-granularity candidates per strategy family.  The plain variants
+/// operate in single digits (paper Table I: ~6 rows/layer — without
+/// checkpoints the coordination structures grow too fast beyond that);
+/// the hybrids can push much deeper.
+fn n_candidates(name: &str) -> Vec<usize> {
+    if name.ends_with("-H") {
+        vec![2, 4, 8, 12, 16, 24, 32]
+    } else if name.contains("2PS") || name.contains("OverL") {
+        vec![2, 4, 8]
+    } else {
+        vec![1]
+    }
+}
+
+/// Does `name` fit (b, h) on `dev`, searching row granularity if needed?
+pub fn fits(name: &str, net: &Network, dev: &DeviceModel, b: usize, h: usize) -> bool {
+    if !net.supports_h(h) {
+        return false; // geometry invalid (e.g. global pool larger than map)
+    }
+    let n_candidates: Vec<usize> = n_candidates(name);
+    for n in n_candidates {
+        let s = strategy_by_name(name, net, dev, n);
+        if let Ok(sched) = s.schedule(net, b, h, h) {
+            if sim::check_fits(&sched, s.xi(net), dev.usable_hbm(), name).is_ok() {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// Fig. 6 — the largest batch size each solution reaches (image dim = 224).
+pub fn fig6_max_batch(net: &Network, dev: &DeviceModel) -> Table {
+    let mut t = Table::new(
+        format!("Fig. 6 — largest batch size, {} on {}", net.name, dev.name),
+        &["strategy", "max batch", "vs Base"],
+    );
+    let h = net.h;
+    let base = max_feasible(|b| fits("Base", net, dev, b, h), 4096);
+    for name in strategy_names() {
+        let mb = max_feasible(|b| fits(name, net, dev, b, h), 4096);
+        t.row(vec![
+            name.to_string(),
+            mb.to_string(),
+            if base > 0 {
+                format!("{:.2}x", mb as f64 / base as f64)
+            } else {
+                "-".into()
+            },
+        ]);
+    }
+    t
+}
+
+/// Fig. 7 — the largest (square) image dimension at batch size 8.
+pub fn fig7_max_dim(net: &Network, dev: &DeviceModel, b: usize) -> Table {
+    let mut t = Table::new(
+        format!("Fig. 7 — largest image dimension (B={b}), {} on {}", net.name, dev.name),
+        &["strategy", "max H=W", "vs Base"],
+    );
+    // probe in steps of 32 px like the paper's image-concatenation
+    // protocol, starting from the network's minimum viable dimension
+    // (ResNet-50's global 7x7 pool needs H ≥ 224)
+    let step = 32usize;
+    let min_k = (1..=64).find(|&k| net.supports_h(k * step)).unwrap_or(1);
+    let probe = |name: &str| -> usize {
+        let m = max_feasible(|k| fits(name, net, dev, b, (min_k - 1 + k) * step), 1024);
+        if m == 0 {
+            0
+        } else {
+            (min_k - 1 + m) * step
+        }
+    };
+    let base = probe("Base");
+    for name in strategy_names() {
+        let md = probe(name);
+        t.row(vec![
+            name.to_string(),
+            md.to_string(),
+            if base > 0 {
+                format!("{:.2}x", md as f64 / base as f64)
+            } else {
+                "-".into()
+            },
+        ]);
+    }
+    t
+}
+
+/// Minimal row granularity at which `name` fits (b, h) — Eq. (9)/(10)'s
+/// "prefer small N" principle; 1 for the non-row strategies.
+pub fn operating_n(name: &str, net: &Network, dev: &DeviceModel, b: usize, h: usize) -> usize {
+    if !(name.contains("2PS") || name.contains("OverL")) {
+        return 1;
+    }
+    let cands = n_candidates(name);
+    for &n in &cands {
+        let s = strategy_by_name(name, net, dev, n);
+        if let Ok(sched) = s.schedule(net, b, h, h) {
+            if sim::check_fits(&sched, s.xi(net), dev.usable_hbm(), name).is_ok() {
+                return n;
+            }
+        }
+    }
+    *cands.last().unwrap()
+}
+
+/// Fig. 8 — per-epoch runtime relative to Base, each strategy at *its*
+/// Fig. 6 operating point (its max batch, its minimal fitting N); the
+/// comparison is per-image (a fixed dataset ⇒ per-epoch ∝ per-image).
+pub fn fig8_runtime(net: &Network, dev: &DeviceModel) -> Table {
+    let mut t = Table::new(
+        format!("Fig. 8 — per-epoch runtime at the Fig. 6 settings, {} on {}", net.name, dev.name),
+        &["strategy", "B", "N", "per-image ms", "relative to Base"],
+    );
+    let h = net.h;
+    let base_b = max_feasible(|b| fits("Base", net, dev, b, h), 4096).max(1);
+    let base_cost = Base.cost(net, base_b, net.h, net.w).unwrap();
+    let base_per_img = base_cost.iter_seconds(dev) / base_b as f64;
+    for name in strategy_names() {
+        let b = max_feasible(|b| fits(name, net, dev, b, h), 4096).max(1);
+        let n = operating_n(name, net, dev, b, h);
+        match strategy_by_name(name, net, dev, n).cost(net, b, net.h, net.w) {
+            Ok(c) => {
+                let per_img = c.iter_seconds(dev) / b as f64;
+                t.row(vec![
+                    name.to_string(),
+                    b.to_string(),
+                    n.to_string(),
+                    format!("{:.2}", per_img * 1e3),
+                    format!("{:.2}x", per_img / base_per_img),
+                ]);
+            }
+            Err(e) => t.row(vec![
+                name.to_string(),
+                b.to_string(),
+                n.to_string(),
+                "-".into(),
+                e.to_string(),
+            ]),
+        }
+    }
+    t
+}
+
+/// Fig. 9 — runtime + CI/OD counters vs granularity N (hybrids only).
+pub fn fig9_scalability(net: &Network, b: usize, n_max: usize) -> Table {
+    let mut t = Table::new(
+        format!("Fig. 9 — runtime & counters vs N ({}, B={b})", net.name),
+        &[
+            "N",
+            "OverL-H RT 3090",
+            "2PS-H RT 3090",
+            "OverL-H RT 3080",
+            "2PS-H RT 3080",
+            "OD rows",
+            "CI ops",
+        ],
+    );
+    let d90 = DeviceModel::rtx3090();
+    let d80 = DeviceModel::rtx3080();
+    let base = Base.cost(net, b, net.h, net.w).unwrap();
+    for n in 1..=n_max {
+        let overl = RowCentric::hybrid(RowMode::Overlap, n, hybrid_cks(net));
+        let tps = RowCentric::hybrid(RowMode::TwoPhase, n, hybrid_cks(net));
+        let co = overl.cost(net, b, net.h, net.w).unwrap();
+        let ct = tps.cost(net, b, net.h, net.w).unwrap();
+        t.row(vec![
+            n.to_string(),
+            format!("{:.2}x", co.relative_to(&base, &d90)),
+            format!("{:.2}x", ct.relative_to(&base, &d90)),
+            format!("{:.2}x", co.relative_to(&base, &d80)),
+            format!("{:.2}x", ct.relative_to(&base, &d80)),
+            co.overlap_rows.to_string(),
+            ct.interruptions.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Fig. 10 — peak memory and SD/OD volumes vs granularity N.
+pub fn fig10_memory_vs_n(net: &Network, b: usize, dev: &DeviceModel, n_max: usize) -> Table {
+    let mut t = Table::new(
+        format!(
+            "Fig. 10 — memory vs N ({}, B={b}, {})",
+            net.name, dev.name
+        ),
+        &["N", "OverL-H peak", "2PS-H peak", "OD volume", "SD volume"],
+    );
+    for n in 1..=n_max {
+        let overl = RowCentric::hybrid(RowMode::Overlap, n, hybrid_cks(net));
+        let tps = RowCentric::hybrid(RowMode::TwoPhase, n, hybrid_cks(net));
+        let po = sim::simulate(&overl.schedule(net, b, net.h, net.w).unwrap())
+            .unwrap()
+            .peak_bytes;
+        let pt = sim::simulate(&tps.schedule(net, b, net.h, net.w).unwrap())
+            .unwrap()
+            .peak_bytes;
+        let co = overl.cost(net, b, net.h, net.w).unwrap();
+        let ct = tps.cost(net, b, net.h, net.w).unwrap();
+        t.row(vec![
+            n.to_string(),
+            fmt_bytes(po + overl.xi(net)),
+            fmt_bytes(pt + tps.xi(net)),
+            fmt_bytes(co.overlap_bytes),
+            fmt_bytes(ct.sharing_bytes),
+        ]);
+    }
+    t
+}
+
+/// Table I — layers involved in row-centric update and Σ rows.
+pub fn table1(nets: &[&Network], n_rows: usize) -> Table {
+    let mut t = Table::new(
+        "Table I — impact of checkpointing on OverL and 2PS",
+        &["solution", "network", "# layers", "# rows"],
+    );
+    for net in nets {
+        for (label, rc) in [
+            ("OverL", RowCentric::new(RowMode::Overlap, n_rows)),
+            (
+                "OverL-H",
+                RowCentric::hybrid(RowMode::Overlap, n_rows, hybrid_cks(net)),
+            ),
+            ("2PS", RowCentric::new(RowMode::TwoPhase, n_rows)),
+            (
+                "2PS-H",
+                RowCentric::hybrid(RowMode::TwoPhase, n_rows, hybrid_cks(net)),
+            ),
+        ] {
+            let (layers, rows) = rc.table1_metrics(net, net.h, net.w);
+            t.row(vec![
+                label.to_string(),
+                net.name.clone(),
+                layers.to_string(),
+                rows.to_string(),
+            ]);
+        }
+    }
+    t
+}
+
+/// Common cost summary used by the fig8/fig9 benches for assertions.
+pub fn cost_of(name: &str, net: &Network, dev: &DeviceModel, b: usize, n: usize) -> Result<CostCounters> {
+    strategy_by_name(name, net, dev, n).cost(net, b, net.h, net.w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{resnet50, vgg16};
+
+    #[test]
+    fn fig6_ordering_matches_paper_shape() {
+        // who-wins ordering on the 3090 (paper Fig. 6a): Base < Ckp <
+        // OffLoad ≤ Tsplit < row-centric hybrids
+        let net = vgg16();
+        let dev = DeviceModel::rtx3090();
+        let h = net.h;
+        let mb = |name: &str| max_feasible(|b| fits(name, &net, &dev, b, h), 4096);
+        let base = mb("Base");
+        let ckp = mb("Ckp");
+        let off = mb("OffLoad");
+        let tsp = mb("Tsplit");
+        let tps_h = mb("2PS-H");
+        let overl_h = mb("OverL-H");
+        assert!(base < ckp, "Base {base} < Ckp {ckp}");
+        assert!(ckp < off, "Ckp {ckp} < OffLoad {off}");
+        assert!(off <= tsp, "OffLoad {off} <= Tsplit {tsp}");
+        assert!(tsp < tps_h, "Tsplit {tsp} < 2PS-H {tps_h}");
+        assert!(tsp < overl_h, "Tsplit {tsp} < OverL-H {overl_h}");
+    }
+
+    #[test]
+    fn fig8_ordering_matches_paper_shape() {
+        // per-image latency at each strategy's operating point:
+        // Base fastest; Ckp small penalty (+15% paper); row-centric in
+        // between (+40%/+81%); OffLoad worst (+356% paper)
+        let net = vgg16();
+        let dev = DeviceModel::rtx3090();
+        let h = net.h;
+        let per_img = |name: &str| {
+            let b = max_feasible(|b| fits(name, &net, &dev, b, h), 4096).max(1);
+            let n = operating_n(name, &net, &dev, b, h);
+            cost_of(name, &net, &dev, b, n).unwrap().iter_seconds(&dev) / b as f64
+        };
+        let base = per_img("Base");
+        let ckp = per_img("Ckp") / base;
+        let overl = per_img("OverL") / base;
+        let tps = per_img("2PS") / base;
+        let off = per_img("OffLoad") / base;
+        assert!(ckp > 1.05 && ckp < 1.6, "Ckp {ckp}");
+        assert!(overl > ckp && overl < 3.0, "OverL {overl} vs Ckp {ckp}");
+        assert!(tps > ckp && tps < 3.0, "2PS {tps}");
+        assert!(off > overl.max(tps), "OffLoad {off} must be worst");
+    }
+
+    #[test]
+    fn fig9_crossover_2psh_wins_on_weak_device() {
+        // paper §V-C: 2PS-H beats OverL-H on the RTX 3080
+        let net = vgg16();
+        let b = 64;
+        let d80 = DeviceModel::rtx3080();
+        let base = Base.cost(&net, b, net.h, net.w).unwrap();
+        let n = 12;
+        let co = cost_of("OverL-H", &net, &d80, b, n).unwrap();
+        let ct = cost_of("2PS-H", &net, &d80, b, n).unwrap();
+        assert!(
+            ct.relative_to(&base, &d80) < co.relative_to(&base, &d80),
+            "2PS-H should win on the 3080 at large N"
+        );
+    }
+
+    #[test]
+    fn table1_hybrids_dominate() {
+        for net in [vgg16(), resnet50()] {
+            for mode in [RowMode::Overlap, RowMode::TwoPhase] {
+                let flat = RowCentric::new(mode, 8);
+                let hyb = RowCentric::hybrid(mode, 8, hybrid_cks(&net));
+                let (lf, rf) = flat.table1_metrics(&net, net.h, net.w);
+                let (lh, rh) = hyb.table1_metrics(&net, net.h, net.w);
+                assert!(
+                    lh >= lf && rh >= rf,
+                    "{} {:?}: flat ({lf},{rf}) vs hybrid ({lh},{rh})",
+                    net.name,
+                    mode
+                );
+            }
+        }
+    }
+}

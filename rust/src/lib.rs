@@ -1,0 +1,50 @@
+//! # LR-CNN — Lightweight Row-centric CNN Training for Memory Reduction
+//!
+//! Rust + JAX + Pallas reproduction of *LR-CNN* (Wang et al., 2024).
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer stack:
+//!
+//! * **L1** — Pallas kernels (conv/pool/dense fwd+bwd) authored in
+//!   `python/compile/kernels/`, lowered once at build time.
+//! * **L2** — the JAX row-slab model (`python/compile/model.py`), exported
+//!   as HLO text into `artifacts/` by `make artifacts`.
+//! * **L3** — this crate: the paper's contribution (row-centric FP/BP
+//!   scheduling) plus every substrate it needs — conv interval calculus,
+//!   layer-graph IR, a byte-exact memory simulator standing in for the
+//!   paper's GPUs, the 2PS/OverL/checkpoint planners, the
+//!   Base/Ckp/OffLoad/Tsplit baselines, an analytic cost model, and a PJRT
+//!   runtime that executes the AOT artifacts on the live training path.
+//!
+//! Python never runs at training time: after `make artifacts` the binary is
+//! self-contained.
+//!
+//! ## Map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`shapes`] | conv/pool arithmetic + interval (halo) calculus |
+//! | [`model`] | layer-graph IR + VGG-16 / ResNet-50 / MiniVGG builders |
+//! | [`memory`] | device models + allocation-replay memory simulator |
+//! | [`planner`] | 2PS, OverL, checkpointing, hybrids, granularity solver |
+//! | [`baselines`] | Base, Ckp, OffLoad, Tsplit memory/time schedules |
+//! | [`costmodel`] | τ/ι FLOP model, CI/OD counters, relative latency |
+//! | [`runtime`] | PJRT client, manifest, executable cache |
+//! | [`coordinator`] | live row scheduler: FP/BP loops, SGD, training |
+//! | [`data`] | synthetic 10-class corpus |
+//! | [`metrics`] | counters + report tables for the benches |
+
+pub mod baselines;
+pub mod coordinator;
+pub mod costmodel;
+pub mod data;
+pub mod error;
+pub mod figures;
+pub mod memory;
+pub mod metrics;
+pub mod model;
+pub mod planner;
+pub mod runtime;
+pub mod shapes;
+pub mod util;
+
+pub use error::{Error, Result};

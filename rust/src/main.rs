@@ -1,0 +1,302 @@
+//! lr-cnn — CLI launcher for the LR-CNN reproduction.
+//!
+//! Subcommands (argument parsing is hand-rolled; clap is unavailable in the
+//! offline build environment — DESIGN.md §2):
+//!
+//!   plan   --net vgg16|resnet50 --device rtx3090|rtx3080 --batch B \
+//!          [--dim H] [--rows N]
+//!          — memory-plan an iteration and print peak/fit per strategy
+//!   train  --mode base|overl-h|2ps|naive [--steps N] [--lr F] [--artifacts DIR]
+//!          — live training on the PJRT artifacts (MiniVGG, synthetic data)
+//!   info   [--artifacts DIR]
+//!          — print the artifact bundle inventory
+//!   trace  --net vgg16 --strategy overl-h [--batch B] [--rows N] [--out FILE]
+//!          — export a plan's memory profile as Chrome trace JSON
+
+use lr_cnn::baselines::{Base, Ckp, OffLoad, Tsplit};
+use lr_cnn::coordinator::{trainer::train_loop, Mode, Trainer};
+use lr_cnn::data::SyntheticCorpus;
+use lr_cnn::memory::{sim, DeviceModel};
+use lr_cnn::metrics::{fmt_bytes, Table};
+use lr_cnn::model::{resnet50, vgg16, Network};
+use lr_cnn::planner::{RowCentric, RowMode, Strategy};
+use lr_cnn::runtime::Runtime;
+
+use std::collections::HashMap;
+use std::process::ExitCode;
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut map = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = args.get(i + 1).cloned().unwrap_or_default();
+            map.insert(key.to_string(), val);
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    map
+}
+
+fn net_by_name(name: &str) -> Option<Network> {
+    match name {
+        "vgg16" => Some(vgg16()),
+        "vgg19" => Some(lr_cnn::model::vgg19()),
+        "resnet50" => Some(resnet50()),
+        "resnet18" => Some(lr_cnn::model::resnet18()),
+        "alexnet" => Some(lr_cnn::model::alexnet()),
+        "minivgg" => Some(lr_cnn::model::minivgg()),
+        _ => None,
+    }
+}
+
+fn device_by_name(name: &str) -> Option<DeviceModel> {
+    match name {
+        "rtx3090" => Some(DeviceModel::rtx3090()),
+        "rtx3080" => Some(DeviceModel::rtx3080()),
+        "a100" => Some(DeviceModel::a100_80g()),
+        _ => None,
+    }
+}
+
+fn strategies(net: &Network, dev: &DeviceModel, n_rows: usize) -> Vec<Box<dyn Strategy>> {
+    let cks = lr_cnn::planner::checkpoint::pool_boundary_checkpoints(
+        net,
+        (net.layers.len() as f64).sqrt().ceil() as usize,
+    );
+    vec![
+        Box::new(Base),
+        Box::new(Ckp::auto(net)),
+        Box::new(OffLoad::full(dev)),
+        Box::new(Tsplit::auto(dev)),
+        Box::new(RowCentric::new(RowMode::TwoPhase, n_rows)),
+        Box::new(RowCentric::new(RowMode::Overlap, n_rows)),
+        Box::new(RowCentric::hybrid(RowMode::TwoPhase, n_rows, cks.clone())),
+        Box::new(RowCentric::hybrid(RowMode::Overlap, n_rows, cks)),
+    ]
+}
+
+fn cmd_plan(flags: &HashMap<String, String>) -> Result<(), String> {
+    let net = net_by_name(flags.get("net").map(String::as_str).unwrap_or("vgg16"))
+        .ok_or("unknown --net (vgg16|resnet50|minivgg)")?;
+    let dev = device_by_name(flags.get("device").map(String::as_str).unwrap_or("rtx3090"))
+        .ok_or("unknown --device (rtx3090|rtx3080|a100)")?;
+    let b: usize = flags
+        .get("batch")
+        .map(String::as_str)
+        .unwrap_or("8")
+        .parse()
+        .map_err(|_| "bad --batch")?;
+    let default_dim = net.h.to_string();
+    let h: usize = flags
+        .get("dim")
+        .map(String::as_str)
+        .unwrap_or(&default_dim)
+        .parse()
+        .map_err(|_| "bad --dim")?;
+    let n_rows: usize = flags
+        .get("rows")
+        .map(String::as_str)
+        .unwrap_or("8")
+        .parse()
+        .map_err(|_| "bad --rows")?;
+    println!(
+        "planning {} B={} {}x{} on {} ({} usable)",
+        net.name,
+        b,
+        h,
+        h,
+        dev.name,
+        fmt_bytes(dev.usable_hbm())
+    );
+    let mut table = Table::new(
+        format!("{} iteration plan", net.name),
+        &["strategy", "peak", "peak+xi", "fits", "rel. latency", "peak at"],
+    );
+    let base_cost = Base.cost(&net, b, h, h).map_err(|e| e.to_string())?;
+    for s in strategies(&net, &dev, n_rows) {
+        let xi = s.xi(&net);
+        match s.schedule(&net, b, h, h) {
+            Ok(sched) => {
+                let rep = sim::simulate(&sched).map_err(|e| e.to_string())?;
+                let fits = rep.peak_bytes + xi < dev.usable_hbm();
+                let rel = s
+                    .cost(&net, b, h, h)
+                    .map(|c| format!("{:.2}x", c.relative_to(&base_cost, &dev)))
+                    .unwrap_or_else(|_| "-".into());
+                table.row(vec![
+                    s.name(),
+                    fmt_bytes(rep.peak_bytes),
+                    fmt_bytes(rep.peak_bytes + xi),
+                    if fits { "yes" } else { "OOM" }.into(),
+                    rel,
+                    rep.peak_at,
+                ]);
+            }
+            Err(e) => table.row(vec![
+                s.name(),
+                "-".into(),
+                "-".into(),
+                "infeasible".into(),
+                "-".into(),
+                e.to_string().chars().take(40).collect(),
+            ]),
+        }
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_train(flags: &HashMap<String, String>) -> Result<(), String> {
+    let dir = flags
+        .get("artifacts")
+        .cloned()
+        .unwrap_or_else(|| "artifacts".into());
+    let mode = match flags.get("mode").map(String::as_str).unwrap_or("overl-h") {
+        "base" => Mode::Base,
+        "overl-h" => Mode::RowHybrid,
+        "2ps" => Mode::Tps,
+        "naive" => Mode::Naive,
+        other => return Err(format!("unknown --mode {other}")),
+    };
+    let steps: u64 = flags
+        .get("steps")
+        .map(String::as_str)
+        .unwrap_or("100")
+        .parse()
+        .map_err(|_| "bad --steps")?;
+    let lr: f32 = flags
+        .get("lr")
+        .map(String::as_str)
+        .unwrap_or("0.02")
+        .parse()
+        .map_err(|_| "bad --lr")?;
+    let rt = Runtime::open(dir).map_err(|e| e.to_string())?;
+    println!(
+        "platform {} | model {} | mode {}",
+        rt.platform(),
+        rt.manifest.model.name,
+        mode.label()
+    );
+    let m = rt.manifest.model.clone();
+    let corpus = SyntheticCorpus::new(m.n_classes, 3, m.h, m.w, 1234);
+    let mut tr = Trainer::new(&rt, mode, lr, 7);
+    let losses =
+        train_loop(&mut tr, &corpus, steps, (steps / 20).max(1)).map_err(|e| e.to_string())?;
+    let head = losses.iter().take(10).sum::<f32>() / losses.len().min(10) as f32;
+    let tail = losses.iter().rev().take(10).sum::<f32>() / losses.len().min(10) as f32;
+    println!(
+        "loss {head:.4} -> {tail:.4} over {} steps | runtime stats: {:?}",
+        losses.len(),
+        rt.stats()
+    );
+    Ok(())
+}
+
+fn cmd_info(flags: &HashMap<String, String>) -> Result<(), String> {
+    let dir = flags
+        .get("artifacts")
+        .cloned()
+        .unwrap_or_else(|| "artifacts".into());
+    let rt = Runtime::open(dir).map_err(|e| e.to_string())?;
+    let m = &rt.manifest;
+    println!(
+        "model {} | {}x{}x3 batch {} | {} conv/pool layers | fc_in {}",
+        m.model.name,
+        m.model.h,
+        m.model.w,
+        m.model.batch,
+        m.model.layers.len(),
+        m.model.fc_in
+    );
+    let mut t = Table::new("executables", &["name", "kind", "inputs", "outputs"]);
+    for e in &m.executables {
+        t.row(vec![
+            e.name.clone(),
+            e.kind.clone(),
+            e.inputs.len().to_string(),
+            e.outputs.len().to_string(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_trace(flags: &HashMap<String, String>) -> Result<(), String> {
+    let net = net_by_name(flags.get("net").map(String::as_str).unwrap_or("vgg16"))
+        .ok_or("unknown --net")?;
+    let dev = device_by_name(flags.get("device").map(String::as_str).unwrap_or("rtx3090"))
+        .ok_or("unknown --device")?;
+    let b: usize = flags
+        .get("batch")
+        .map(String::as_str)
+        .unwrap_or("8")
+        .parse()
+        .map_err(|_| "bad --batch")?;
+    let n: usize = flags
+        .get("rows")
+        .map(String::as_str)
+        .unwrap_or("8")
+        .parse()
+        .map_err(|_| "bad --rows")?;
+    let name = flags.get("strategy").map(String::as_str).unwrap_or("overl-h");
+    let strat: Box<dyn Strategy> = match name {
+        "base" => Box::new(Base),
+        "ckp" => Box::new(Ckp::auto(&net)),
+        "offload" => Box::new(OffLoad::full(&dev)),
+        "tsplit" => Box::new(Tsplit::auto(&dev)),
+        "2ps" => Box::new(RowCentric::new(RowMode::TwoPhase, n)),
+        "overl" => Box::new(RowCentric::new(RowMode::Overlap, n)),
+        "2ps-h" | "overl-h" => {
+            let cks = lr_cnn::planner::checkpoint::pool_boundary_checkpoints(
+                &net,
+                (net.layers.len() as f64).sqrt().ceil() as usize,
+            );
+            let mode = if name.starts_with("2ps") { RowMode::TwoPhase } else { RowMode::Overlap };
+            Box::new(RowCentric::hybrid(mode, n, cks))
+        }
+        other => return Err(format!("unknown --strategy {other}")),
+    };
+    let sched = strat.schedule(&net, b, net.h, net.w).map_err(|e| e.to_string())?;
+    let trace = lr_cnn::memory::trace::to_chrome_trace(&sched, &strat.name())
+        .map_err(|e| e.to_string())?;
+    let default_out = format!("{}_{}_trace.json", net.name, name);
+    let out = flags.get("out").map(String::as_str).unwrap_or(&default_out);
+    std::fs::write(out, trace).map_err(|e| e.to_string())?;
+    let rep = sim::simulate(&sched).map_err(|e| e.to_string())?;
+    println!(
+        "wrote {out} ({} events, peak {} at {}) — open in chrome://tracing",
+        sched.events.len(),
+        fmt_bytes(rep.peak_bytes),
+        rep.peak_at
+    );
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match args.split_first() {
+        Some((c, r)) => (c.as_str(), r.to_vec()),
+        None => {
+            eprintln!("usage: lr-cnn <plan|train|info|trace> [flags]");
+            return ExitCode::FAILURE;
+        }
+    };
+    let flags = parse_flags(&rest);
+    let res = match cmd {
+        "plan" => cmd_plan(&flags),
+        "train" => cmd_train(&flags),
+        "info" => cmd_info(&flags),
+        "trace" => cmd_trace(&flags),
+        other => Err(format!("unknown command {other}")),
+    };
+    match res {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

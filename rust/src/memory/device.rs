@@ -1,0 +1,94 @@
+//! Device models — the simulated stand-ins for the paper's testbeds.
+//!
+//! Numbers are public spec-sheet values; the cost model only ever uses
+//! *ratios* against Base on the same device, so absolute calibration does
+//! not affect any reproduced figure's shape (DESIGN.md §2).
+
+/// A GPU-like accelerator attached to a host over PCIe.
+#[derive(Debug, Clone)]
+pub struct DeviceModel {
+    pub name: String,
+    /// accelerator memory capacity (the paper's HBM2 sizes)
+    pub hbm_bytes: u64,
+    /// host RAM usable by offloading strategies
+    pub cpu_ram_bytes: u64,
+    /// PCIe bandwidth, bytes/s (both servers use PCIe 3.0 x16 ≈ 12 GB/s eff.)
+    pub pcie_bytes_per_sec: f64,
+    /// sustained f32 FLOP/s for conv workloads
+    pub flops_per_sec: f64,
+    /// fixed cost of one coordination interruption (kernel-launch + sync +
+    /// allocator round-trip) — drives the 2PS CI penalty
+    pub interrupt_cost_sec: f64,
+    /// fraction of peak the device reaches on the small, irregular slab
+    /// kernels produced by row partitioning (lower on weaker devices)
+    pub slab_efficiency: f64,
+}
+
+const GIB: u64 = 1 << 30;
+
+impl DeviceModel {
+    /// Dell Precision testbed: RTX 3090, 24 GB, 64 GB host RAM.
+    pub fn rtx3090() -> DeviceModel {
+        DeviceModel {
+            name: "RTX3090".into(),
+            hbm_bytes: 24 * GIB,
+            cpu_ram_bytes: 64 * GIB,
+            pcie_bytes_per_sec: 12.0e9,
+            flops_per_sec: 29.0e12, // ~80% of 35.6 TF peak on convs
+            // a 2PS coordination interruption = sync + allocator round-trip
+            // + tensor extract/concat + cold-pipeline relaunch; the paper
+            // stresses it is *compute-insensitive* (§V-C), so the stall is
+            // the same figure on both testbeds
+            interrupt_cost_sec: 300e-6,
+            slab_efficiency: 0.90,
+        }
+    }
+
+    /// LENOVO testbed: RTX 3080, 10 GB, 64 GB host RAM.
+    pub fn rtx3080() -> DeviceModel {
+        DeviceModel {
+            name: "RTX3080".into(),
+            hbm_bytes: 10 * GIB,
+            cpu_ram_bytes: 64 * GIB,
+            pcie_bytes_per_sec: 12.0e9,
+            flops_per_sec: 24.0e12,
+            interrupt_cost_sec: 300e-6,
+            // weaker device: redundant slab compute parallelizes much worse
+            // (paper §V-C: 2PS-H beats OverL-H on the RTX 3080 because the
+            // 3080 cannot hide OverL's replicated-halo FLOPs)
+            slab_efficiency: 0.50,
+        }
+    }
+
+    /// A100-80G, used for the paper's §I motivating claim.
+    pub fn a100_80g() -> DeviceModel {
+        DeviceModel {
+            name: "A100-80G".into(),
+            hbm_bytes: 80 * GIB,
+            cpu_ram_bytes: 256 * GIB,
+            pcie_bytes_per_sec: 25.0e9,
+            flops_per_sec: 120.0e12,
+            interrupt_cost_sec: 300e-6,
+            slab_efficiency: 0.95,
+        }
+    }
+
+    /// Capacity available to feature maps after the framework reserve.
+    pub fn usable_hbm(&self) -> u64 {
+        // CUDA context + framework workspace reserve (~6%)
+        self.hbm_bytes - self.hbm_bytes / 16
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn device_capacities() {
+        assert!(DeviceModel::rtx3090().hbm_bytes > DeviceModel::rtx3080().hbm_bytes);
+        let d = DeviceModel::rtx3090();
+        assert!(d.usable_hbm() < d.hbm_bytes);
+        assert!(d.usable_hbm() > d.hbm_bytes * 9 / 10);
+    }
+}

@@ -1,0 +1,19 @@
+//! Memory substrate: device models, the allocation-replay simulator, and
+//! the live-path tracker.
+//!
+//! The paper's evaluation is "largest batch / image dimension before OOM on
+//! an RTX 3090/3080".  Those are *accounting* claims, so the simulator
+//! replays each strategy's allocation schedule byte-exactly and reports the
+//! peak; OOM is `peak + ξ ≥ capacity`.  The live PJRT path uses [`Tracker`]
+//! with the same byte arithmetic, and integration tests assert the two
+//! agree — the simulator is validated against real executions, not just
+//! against itself.
+
+pub mod device;
+pub mod sim;
+pub mod trace;
+pub mod tracker;
+
+pub use device::DeviceModel;
+pub use sim::{Event, Schedule, SimReport};
+pub use tracker::Tracker;

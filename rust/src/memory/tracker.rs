@@ -1,0 +1,95 @@
+//! Live-path memory tracker.
+//!
+//! The coordinator registers every activation/cache/gradient buffer it
+//! holds during a real PJRT training step; the tracker maintains
+//! current/peak byte counts with the same arithmetic as the simulator, so
+//! planner predictions can be validated against actual executions
+//! (rust/tests/live_vs_sim.rs).
+
+use std::collections::HashMap;
+
+/// Byte-accounting tracker for live buffers.
+#[derive(Debug, Default)]
+pub struct Tracker {
+    live: HashMap<String, u64>,
+    cur: u64,
+    peak: u64,
+    peak_at: String,
+    phase: String,
+}
+
+impl Tracker {
+    pub fn new() -> Self {
+        Tracker::default()
+    }
+
+    pub fn mark(&mut self, phase: impl Into<String>) {
+        self.phase = phase.into();
+    }
+
+    pub fn alloc(&mut self, id: impl Into<String>, bytes: u64) {
+        let id = id.into();
+        let prev = self.live.insert(id.clone(), bytes);
+        assert!(prev.is_none(), "double alloc of '{id}'");
+        self.cur += bytes;
+        if self.cur > self.peak {
+            self.peak = self.cur;
+            self.peak_at = self.phase.clone();
+        }
+    }
+
+    pub fn free(&mut self, id: &str) {
+        let bytes = self
+            .live
+            .remove(id)
+            .unwrap_or_else(|| panic!("free of unknown buffer '{id}'"));
+        self.cur -= bytes;
+    }
+
+    pub fn current(&self) -> u64 {
+        self.cur
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.peak
+    }
+
+    pub fn peak_at(&self) -> &str {
+        &self.peak_at
+    }
+
+    /// Reset peak statistics but keep live buffers (per-step reporting).
+    pub fn reset_peak(&mut self) {
+        self.peak = self.cur;
+        self.peak_at = self.phase.clone();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracks_peak_like_sim() {
+        let mut t = Tracker::new();
+        t.mark("fp");
+        t.alloc("x", 10);
+        t.alloc("y", 20);
+        t.free("x");
+        t.mark("bp");
+        t.alloc("z", 5);
+        assert_eq!(t.peak(), 30);
+        assert_eq!(t.current(), 25);
+        assert_eq!(t.peak_at(), "fp");
+        t.reset_peak();
+        assert_eq!(t.peak(), 25);
+    }
+
+    #[test]
+    #[should_panic]
+    fn double_alloc_panics() {
+        let mut t = Tracker::new();
+        t.alloc("x", 1);
+        t.alloc("x", 1);
+    }
+}

@@ -1,0 +1,231 @@
+//! Reporting + micro-benchmark substrate.
+//!
+//! * [`Table`] — markdown/CSV tables printed by every figure/table bench.
+//! * [`bench`] — a tiny criterion replacement (offline environment): warms
+//!   up, runs timed iterations, reports mean/p50/p95.
+//! * [`prop`] — a tiny proptest replacement: runs a property over many
+//!   deterministic random cases and reports the failing case.
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+use crate::util::rng::XorShift;
+
+/// A simple column-aligned table that renders as markdown and CSV.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Table {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "ragged table row");
+        self.rows.push(cells);
+    }
+
+    pub fn markdown(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "\n### {}\n", self.title);
+        let hdr: Vec<String> = self
+            .headers
+            .iter()
+            .enumerate()
+            .map(|(i, h)| format!("{:w$}", h, w = widths[i]))
+            .collect();
+        let _ = writeln!(out, "| {} |", hdr.join(" | "));
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        let _ = writeln!(out, "| {} |", sep.join(" | "));
+        for row in &self.rows {
+            let cells: Vec<String> = row
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:w$}", c, w = widths[i]))
+                .collect();
+            let _ = writeln!(out, "| {} |", cells.join(" | "));
+        }
+        out
+    }
+
+    pub fn csv(&self) -> String {
+        let mut out = self.headers.join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.markdown());
+    }
+}
+
+/// Format bytes as MiB/GiB with 1 decimal.
+pub fn fmt_bytes(b: u64) -> String {
+    const GIB: f64 = (1u64 << 30) as f64;
+    const MIB: f64 = (1u64 << 20) as f64;
+    let bf = b as f64;
+    if bf >= GIB {
+        format!("{:.2} GiB", bf / GIB)
+    } else {
+        format!("{:.1} MiB", bf / MIB)
+    }
+}
+
+pub mod bench {
+    //! Minimal timed-benchmark harness (criterion substitute).
+
+    use super::*;
+
+    #[derive(Debug, Clone)]
+    pub struct BenchResult {
+        pub name: String,
+        pub iters: usize,
+        pub mean_ms: f64,
+        pub p50_ms: f64,
+        pub p95_ms: f64,
+    }
+
+    impl BenchResult {
+        pub fn report(&self) -> String {
+            format!(
+                "{:40} {:5} iters  mean {:9.3} ms  p50 {:9.3} ms  p95 {:9.3} ms",
+                self.name, self.iters, self.mean_ms, self.p50_ms, self.p95_ms
+            )
+        }
+    }
+
+    /// Run `f` for `warmup` unmeasured + `iters` measured iterations.
+    pub fn time<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
+        for _ in 0..warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let p95_idx = ((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1);
+        BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_ms: mean,
+            p50_ms: samples[samples.len() / 2],
+            p95_ms: samples[p95_idx],
+        }
+    }
+}
+
+pub mod prop {
+    //! Minimal property-test harness (proptest substitute): runs a
+    //! property over `cases` deterministic random inputs; panics with the
+    //! seed + case index on failure so it can be replayed exactly.
+
+    use super::*;
+
+    pub struct Cases {
+        pub seed: u64,
+        pub cases: usize,
+    }
+
+    impl Default for Cases {
+        fn default() -> Self {
+            Cases {
+                seed: 0xC0FFEE,
+                cases: 256,
+            }
+        }
+    }
+
+    impl Cases {
+        pub fn new(seed: u64, cases: usize) -> Self {
+            Cases { seed, cases }
+        }
+
+        /// Run `prop(rng, case_idx)`; the property panics/asserts on failure.
+        pub fn run(&self, mut prop: impl FnMut(&mut XorShift, usize)) {
+            for i in 0..self.cases {
+                let mut rng = XorShift::new(self.seed.wrapping_add(i as u64));
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    prop(&mut rng, i)
+                }));
+                if let Err(e) = result {
+                    eprintln!(
+                        "property failed at case {i} (seed {:#x}); replay with Cases::new({:#x}, 1) after advancing",
+                        self.seed, self.seed.wrapping_add(i as u64)
+                    );
+                    std::panic::resume_unwind(e);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_markdown_and_csv() {
+        let mut t = Table::new("demo", &["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let md = t.markdown();
+        assert!(md.contains("### demo"));
+        assert!(md.contains("| a | bb |"));
+        assert_eq!(t.csv(), "a,bb\n1,2\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn ragged_row_panics() {
+        let mut t = Table::new("x", &["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn bench_time_runs() {
+        let r = bench::time("noop", 1, 8, || 1 + 1);
+        assert_eq!(r.iters, 8);
+        assert!(r.mean_ms >= 0.0);
+        assert!(r.p95_ms >= r.p50_ms);
+    }
+
+    #[test]
+    fn prop_cases_run_deterministically() {
+        let mut seen = Vec::new();
+        prop::Cases::new(7, 16).run(|rng, _| {
+            seen.push(rng.next_u64());
+        });
+        let mut seen2 = Vec::new();
+        prop::Cases::new(7, 16).run(|rng, _| {
+            seen2.push(rng.next_u64());
+        });
+        assert_eq!(seen, seen2);
+    }
+
+    #[test]
+    fn fmt_bytes_scales() {
+        assert_eq!(fmt_bytes(3 << 30), "3.00 GiB");
+        assert!(fmt_bytes(5 << 20).contains("MiB"));
+    }
+}

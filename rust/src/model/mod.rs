@@ -1,0 +1,250 @@
+//! Layer-graph IR: the conv/pool stack + FC head of a CNN, with the byte
+//! and FLOP accounting (Eq. 3) every planner and baseline runs on.
+//!
+//! Activation/BatchNorm outputs are excluded from the accounting: the paper
+//! (§II-A, following SuperNeurons/Tsplit) abandons cheap-to-recompute data,
+//! and so do all strategies compared here, keeping the comparison fair.
+
+pub mod zoo;
+
+pub use zoo::{alexnet, minivgg, resnet18, resnet50, vgg16, vgg19};
+
+use crate::shapes::conv_out;
+
+pub const F32_BYTES: u64 = 4;
+
+/// A spatial layer (conv or pool) in the chain.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Layer {
+    pub kind: LayerKind,
+    pub k: usize,
+    pub s: usize,
+    pub p: usize,
+    pub c_in: usize,
+    pub c_out: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv,
+    Pool,
+}
+
+impl Layer {
+    pub fn conv(c_in: usize, c_out: usize, k: usize, s: usize, p: usize) -> Layer {
+        Layer {
+            kind: LayerKind::Conv,
+            k,
+            s,
+            p,
+            c_in,
+            c_out,
+        }
+    }
+
+    /// Pool with k == s (the common VGG form; no inter-row dependency).
+    pub fn pool(c: usize, k: usize) -> Layer {
+        Layer {
+            kind: LayerKind::Pool,
+            k,
+            s: k,
+            p: 0,
+            c_in: c,
+            c_out: c,
+        }
+    }
+
+    /// General pooling window (ResNet stem uses k=3, s=2, p=1).
+    pub fn pool_ksp(c: usize, k: usize, s: usize, p: usize) -> Layer {
+        Layer {
+            kind: LayerKind::Pool,
+            k,
+            s,
+            p,
+            c_in: c,
+            c_out: c,
+        }
+    }
+
+    pub fn is_conv(&self) -> bool {
+        self.kind == LayerKind::Conv
+    }
+
+    pub fn out_h(&self, h: usize) -> usize {
+        conv_out(h, self.k, self.s, self.p)
+    }
+
+    /// Parameter count (weights + bias); pools are parameter-free.
+    pub fn param_count(&self) -> u64 {
+        match self.kind {
+            LayerKind::Conv => {
+                (self.c_out * self.c_in * self.k * self.k) as u64 + self.c_out as u64
+            }
+            LayerKind::Pool => 0,
+        }
+    }
+
+    /// MACs ×2 for an output of `h_out × w_out` and batch `b` — the paper's
+    /// per-layer term in τ: 2·k²·B·C_{l−1}·C_l·H_l·W_l.
+    pub fn flops(&self, b: usize, h_out: usize, w_out: usize) -> u64 {
+        match self.kind {
+            LayerKind::Conv => {
+                2 * (self.k * self.k) as u64
+                    * b as u64
+                    * self.c_in as u64
+                    * self.c_out as u64
+                    * (h_out * w_out) as u64
+            }
+            // comparisons, negligible next to convs but tracked anyway
+            LayerKind::Pool => (self.k * self.k) as u64 * b as u64 * (self.c_out * h_out * w_out) as u64,
+        }
+    }
+}
+
+/// A full network: spatial chain + FC head.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub name: String,
+    pub layers: Vec<Layer>,
+    /// FC layer dims (in, out); applied to the flattened final feature map.
+    pub fc: Vec<(usize, usize)>,
+    /// default input (C, H, W)
+    pub c_in: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl Network {
+    /// Per-layer feature map heights for input height `h` (len = L+1).
+    pub fn heights(&self, h: usize) -> Vec<usize> {
+        let mut hs = vec![h];
+        for l in &self.layers {
+            hs.push(l.out_h(*hs.last().unwrap()));
+        }
+        hs
+    }
+
+    pub fn widths(&self, w: usize) -> Vec<usize> {
+        self.heights(w) // same arithmetic, square windows
+    }
+
+    /// ρ^l: bytes of the feature map output by layer l (1-based over the
+    /// chain; l=0 is the input batch itself) — Eq. (3) per-layer term.
+    pub fn feature_bytes(&self, b: usize, h: usize, w: usize) -> Vec<u64> {
+        let hs = self.heights(h);
+        let ws = self.widths(w);
+        let mut out = vec![(b * self.c_in * h * w) as u64 * F32_BYTES];
+        for (i, l) in self.layers.iter().enumerate() {
+            out.push((b * l.c_out * hs[i + 1] * ws[i + 1]) as u64 * F32_BYTES);
+        }
+        out
+    }
+
+    /// Ω: total feature-map bytes accumulated across layers (Eq. 3) —
+    /// what column-centric training must hold at the BP peak.
+    pub fn total_feature_bytes(&self, b: usize, h: usize, w: usize) -> u64 {
+        // input batch excluded: every strategy holds it
+        self.feature_bytes(b, h, w)[1..].iter().sum()
+    }
+
+    /// ξ contribution: parameters + gradients (+ FC activations, which are
+    /// tiny and held by every strategy alike).
+    pub fn param_bytes(&self) -> u64 {
+        let conv: u64 = self.layers.iter().map(|l| l.param_count()).sum();
+        let fc: u64 = self.fc.iter().map(|&(i, o)| (i * o + o) as u64).sum();
+        (conv + fc) * F32_BYTES
+    }
+
+    /// Total FLOPs of one FP pass over the conv chain (the paper's τ).
+    pub fn conv_flops(&self, b: usize, h: usize, w: usize) -> u64 {
+        let hs = self.heights(h);
+        let ws = self.widths(w);
+        self.layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| l.flops(b, hs[i + 1], ws[i + 1]))
+            .sum()
+    }
+
+    pub fn fc_flops(&self, b: usize) -> u64 {
+        self.fc.iter().map(|&(i, o)| 2 * (i * o) as u64 * b as u64).sum()
+    }
+
+    /// Flattened feature size entering the FC head.
+    pub fn fc_in(&self, h: usize, w: usize) -> usize {
+        let hs = self.heights(h);
+        let ws = self.widths(w);
+        self.layers.last().map(|l| l.c_out).unwrap_or(self.c_in) * hs.last().unwrap() * ws.last().unwrap()
+    }
+
+    pub fn n_conv_layers(&self) -> usize {
+        self.layers.iter().filter(|l| l.is_conv()).count()
+    }
+
+    /// Can the chain shape-check at input height `h`?  (e.g. ResNet-50's
+    /// global 7x7 pool needs the map to still be ≥7 rows when it arrives.)
+    pub fn supports_h(&self, h: usize) -> bool {
+        let mut cur = h;
+        for l in &self.layers {
+            if cur + 2 * l.p < l.k {
+                return false;
+            }
+            cur = (cur + 2 * l.p - l.k) / l.s + 1;
+            if cur == 0 {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg16_shape_walk() {
+        let net = vgg16();
+        let hs = net.heights(224);
+        assert_eq!(*hs.last().unwrap(), 7);
+        assert_eq!(net.fc_in(224, 224), 7 * 7 * 512);
+        assert_eq!(net.n_conv_layers(), 13);
+        // ~138M params
+        let params = net.param_bytes() / F32_BYTES;
+        assert!((130_000_000..150_000_000).contains(&(params as usize)), "{params}");
+    }
+
+    #[test]
+    fn resnet50_shape_walk() {
+        let net = resnet50();
+        let hs = net.heights(224);
+        // 7x7 before the global average pool, 1x1 after it
+        assert_eq!(hs[hs.len() - 2], 7);
+        assert_eq!(*hs.last().unwrap(), 1);
+        assert_eq!(net.fc_in(224, 224), 2048);
+        // ~25.5M params (linearized chain; see zoo.rs docs)
+        let params = net.param_bytes() / F32_BYTES;
+        assert!((23_000_000..28_000_000).contains(&(params as usize)), "{params}");
+    }
+
+    #[test]
+    fn feature_bytes_match_paper_scale() {
+        // classic figure: VGG-16 activations ≈ 58 MB/image fp32 → ~0.45 GB at B=8
+        let net = vgg16();
+        let total = net.total_feature_bytes(8, 224, 224);
+        assert!(total > 300 << 20, "{total}");
+        assert!(total < 1 << 30, "{total}");
+        // Paper §I: ResNet-50, B=8, 3600×2400 ≈ 120 GB of feature maps
+        // (their figure includes framework workspaces; same order here).
+        let rn = resnet50();
+        let big = rn.total_feature_bytes(8, 3600, 2400) as f64 / (1u64 << 30) as f64;
+        assert!((40.0..240.0).contains(&big), "{big} GiB");
+    }
+
+    #[test]
+    fn minivgg_matches_live_plan() {
+        let net = minivgg();
+        assert_eq!(net.heights(32), vec![32, 32, 16, 16, 8, 8, 8]);
+        assert_eq!(net.fc_in(32, 32), 4096);
+    }
+}

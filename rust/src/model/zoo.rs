@@ -1,0 +1,213 @@
+//! Network builders: the paper's two benchmarks (VGG-16, ResNet-50) plus
+//! the live-path MiniVGG.
+//!
+//! ResNet-50 is modelled as its *linearized* conv chain (stem + every conv
+//! of every bottleneck, stage order).  Residual skip tensors alias the
+//! block-input feature map whose lifetime the chain already accounts for,
+//! so linearization preserves the Eq. (3) byte totals that all the
+//! paper's memory experiments depend on; the halo calculus is likewise
+//! exact because 1x1 convs contribute zero halo and the skip join uses the
+//! same row interval as the main branch.  (DESIGN.md §2.)
+
+use super::{Layer, Network};
+
+/// VGG-16 (configuration D), 224×224 ImageNet layout.
+pub fn vgg16() -> Network {
+    let mut layers = Vec::new();
+    let blocks: &[(usize, usize)] = &[(2, 64), (2, 128), (3, 256), (3, 512), (3, 512)];
+    let mut c_in = 3;
+    for &(reps, c) in blocks {
+        for _ in 0..reps {
+            layers.push(Layer::conv(c_in, c, 3, 1, 1));
+            c_in = c;
+        }
+        layers.push(Layer::pool(c, 2));
+    }
+    Network {
+        name: "vgg16".into(),
+        layers,
+        fc: vec![(7 * 7 * 512, 4096), (4096, 4096), (4096, 1000)],
+        c_in: 3,
+        h: 224,
+        w: 224,
+    }
+}
+
+/// ResNet-50, linearized (see module docs).
+pub fn resnet50() -> Network {
+    let mut layers = Vec::new();
+    // stem
+    layers.push(Layer::conv(3, 64, 7, 2, 3));
+    layers.push(Layer::pool_ksp(64, 3, 2, 1));
+    // bottleneck stages: (reps, mid channels, out channels, first stride)
+    let stages: &[(usize, usize, usize, usize)] = &[
+        (3, 64, 256, 1),
+        (4, 128, 512, 2),
+        (6, 256, 1024, 2),
+        (3, 512, 2048, 2),
+    ];
+    let mut c_in = 64;
+    for &(reps, mid, out, stride) in stages {
+        for r in 0..reps {
+            let s = if r == 0 { stride } else { 1 };
+            layers.push(Layer::conv(c_in, mid, 1, 1, 0));
+            layers.push(Layer::conv(mid, mid, 3, s, 1)); // v1.5: stride on the 3x3
+            layers.push(Layer::conv(mid, out, 1, 1, 0));
+            // projection shortcut on the first block of each stage,
+            // linearized as a stride-1 1x1 at the post-stride resolution so
+            // the height walk stays exact (zoo module docs / DESIGN.md §2)
+            if r == 0 {
+                layers.push(Layer::conv(c_in, out, 1, 1, 0));
+            }
+            c_in = out;
+        }
+    }
+    // global average pool to 1x1
+    layers.push(Layer::pool(2048, 7));
+    Network {
+        name: "resnet50".into(),
+        layers,
+        fc: vec![(2048, 1000)],
+        c_in: 3,
+        h: 224,
+        w: 224,
+    }
+}
+
+/// VGG-19 (configuration E) — a deeper stress case for the planners.
+pub fn vgg19() -> Network {
+    let mut layers = Vec::new();
+    let blocks: &[(usize, usize)] = &[(2, 64), (2, 128), (4, 256), (4, 512), (4, 512)];
+    let mut c_in = 3;
+    for &(reps, c) in blocks {
+        for _ in 0..reps {
+            layers.push(Layer::conv(c_in, c, 3, 1, 1));
+            c_in = c;
+        }
+        layers.push(Layer::pool(c, 2));
+    }
+    Network {
+        name: "vgg19".into(),
+        layers,
+        fc: vec![(7 * 7 * 512, 4096), (4096, 4096), (4096, 1000)],
+        c_in: 3,
+        h: 224,
+        w: 224,
+    }
+}
+
+/// ResNet-18 (basic blocks, linearized like resnet50 — see module docs).
+pub fn resnet18() -> Network {
+    let mut layers = Vec::new();
+    layers.push(Layer::conv(3, 64, 7, 2, 3));
+    layers.push(Layer::pool_ksp(64, 3, 2, 1));
+    let stages: &[(usize, usize, usize)] = &[(2, 64, 1), (2, 128, 2), (2, 256, 2), (2, 512, 2)];
+    let mut c_in = 64;
+    for &(reps, c, stride) in stages {
+        for r in 0..reps {
+            let s = if r == 0 { stride } else { 1 };
+            layers.push(Layer::conv(c_in, c, 3, s, 1));
+            layers.push(Layer::conv(c, c, 3, 1, 1));
+            if r == 0 && (s != 1 || c_in != c) {
+                layers.push(Layer::conv(c_in, c, 1, 1, 0)); // projection (post-stride)
+            }
+            c_in = c;
+        }
+    }
+    layers.push(Layer::pool(512, 7));
+    Network {
+        name: "resnet18".into(),
+        layers,
+        fc: vec![(512, 1000)],
+        c_in: 3,
+        h: 224,
+        w: 224,
+    }
+}
+
+/// AlexNet — the small/shallow end of the spectrum (big early kernels,
+/// stride-4 stem: exercises non-trivial k/s in the interval calculus).
+pub fn alexnet() -> Network {
+    Network {
+        name: "alexnet".into(),
+        layers: vec![
+            Layer::conv(3, 64, 11, 4, 2),
+            Layer::pool_ksp(64, 3, 2, 0),
+            Layer::conv(64, 192, 5, 1, 2),
+            Layer::pool_ksp(192, 3, 2, 0),
+            Layer::conv(192, 384, 3, 1, 1),
+            Layer::conv(384, 256, 3, 1, 1),
+            Layer::conv(256, 256, 3, 1, 1),
+            Layer::pool_ksp(256, 3, 2, 0),
+        ],
+        fc: vec![(256 * 6 * 6, 4096), (4096, 4096), (4096, 1000)],
+        c_in: 3,
+        h: 224,
+        w: 224,
+    }
+}
+
+/// The live-path network: 4 convs + 2 pools + FC over 32×32×3, 10 classes.
+/// Mirrors `python/compile/model.py::MINIVGG` (cross-checked vs manifest).
+pub fn minivgg() -> Network {
+    Network {
+        name: "minivgg".into(),
+        layers: vec![
+            Layer::conv(3, 16, 3, 1, 1),
+            Layer::pool(16, 2),
+            Layer::conv(16, 32, 3, 1, 1),
+            Layer::pool(32, 2),
+            Layer::conv(32, 64, 3, 1, 1),
+            Layer::conv(64, 64, 3, 1, 1),
+        ],
+        fc: vec![(4096, 10)],
+        c_in: 3,
+        h: 32,
+        w: 32,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg16_layer_count() {
+        let n = vgg16();
+        assert_eq!(n.layers.len(), 13 + 5);
+    }
+
+    #[test]
+    fn resnet50_conv_count() {
+        let n = resnet50();
+        // 1 stem + 3*3+4*3+6*3+3*3 bottleneck convs + 4 projections = 53
+        assert_eq!(n.n_conv_layers(), 53);
+    }
+
+    #[test]
+    fn vgg19_and_resnet18_walk() {
+        let v = vgg19();
+        assert_eq!(v.n_conv_layers(), 16);
+        assert_eq!(*v.heights(224).last().unwrap(), 7);
+        let r = resnet18();
+        // 1 stem + 2*2*4 basic convs + 3 projections = 20
+        assert_eq!(r.n_conv_layers(), 20);
+        let hs = r.heights(224);
+        assert_eq!(hs[hs.len() - 2], 7);
+        assert_eq!(r.fc_in(224, 224), 512);
+        // ~11.7M params
+        let p = r.param_bytes() / crate::model::F32_BYTES;
+        assert!((10_500_000..13_000_000).contains(&(p as usize)), "{p}");
+    }
+
+    #[test]
+    fn alexnet_walk() {
+        let a = alexnet();
+        let hs = a.heights(224);
+        assert_eq!(*hs.last().unwrap(), 6);
+        assert_eq!(a.fc_in(224, 224), 256 * 6 * 6);
+        // ~61M params (FC-dominated)
+        let p = a.param_bytes() / crate::model::F32_BYTES;
+        assert!((55_000_000..65_000_000).contains(&(p as usize)), "{p}");
+    }
+}

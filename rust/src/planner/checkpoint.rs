@@ -1,0 +1,148 @@
+//! Checkpoint placement and segment views (Chen et al. [10] + §IV hybrids).
+//!
+//! A checkpoint at position `c` means the output feature map of layer
+//! `c−1` (1-based: `heights[c]`) is *kept* for the whole iteration; the
+//! hybrids row-partition each span between consecutive checkpoints
+//! independently, which truncates the depth L that inflates 2PS cache
+//! skew (Eq. 11–14) and OverL halos (Eq. 15).
+
+use crate::model::{Layer, Network};
+
+/// A contiguous span of the conv chain treated as one row-partitioned unit.
+#[derive(Debug, Clone)]
+pub struct SegmentView<'n> {
+    /// global index of the first layer in the segment
+    pub l0: usize,
+    pub layers: &'n [Layer],
+    /// per-layer input heights, len = layers.len() + 1
+    pub heights: Vec<usize>,
+    pub widths: Vec<usize>,
+}
+
+impl<'n> SegmentView<'n> {
+    pub fn h_in(&self) -> usize {
+        self.heights[0]
+    }
+
+    pub fn h_out(&self) -> usize {
+        *self.heights.last().unwrap()
+    }
+
+    pub fn c_in(&self) -> usize {
+        self.layers[0].c_in
+    }
+
+    pub fn c_out(&self) -> usize {
+        self.layers.last().unwrap().c_out
+    }
+}
+
+/// Split `net` at checkpoint positions (exclusive layer indices, sorted,
+/// in (0, L)).  Empty -> one segment covering the whole chain.
+pub fn split_segments<'n>(
+    net: &'n Network,
+    checkpoints: &[usize],
+    h: usize,
+    w: usize,
+) -> Vec<SegmentView<'n>> {
+    let hs = net.heights(h);
+    let ws = net.widths(w);
+    let mut cuts = vec![0usize];
+    for &c in checkpoints {
+        assert!(c > 0 && c < net.layers.len(), "checkpoint {c} out of range");
+        assert!(*cuts.last().unwrap() < c, "checkpoints must be sorted/unique");
+        cuts.push(c);
+    }
+    cuts.push(net.layers.len());
+    cuts.windows(2)
+        .map(|wd| {
+            let (lo, hi) = (wd[0], wd[1]);
+            SegmentView {
+                l0: lo,
+                layers: &net.layers[lo..hi],
+                heights: hs[lo..=hi].to_vec(),
+                widths: ws[lo..=hi].to_vec(),
+            }
+        })
+        .collect()
+}
+
+/// Chen et al.'s preferred √n spacing: checkpoints every ⌈√L⌉ layers.
+pub fn sqrt_checkpoints(n_layers: usize) -> Vec<usize> {
+    if n_layers < 4 {
+        return Vec::new();
+    }
+    let step = (n_layers as f64).sqrt().ceil() as usize;
+    (1..)
+        .map(|i| i * step)
+        .take_while(|&c| c < n_layers)
+        .collect()
+}
+
+/// Checkpoint positions that keep every segment's *depth-driven* halo in
+/// check while preferring pool boundaries (cheap to keep: smallest maps).
+/// Used by the hybrids when the caller does not pin placements.
+pub fn pool_boundary_checkpoints(net: &Network, max_segment_len: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut last = 0usize;
+    for (i, l) in net.layers.iter().enumerate() {
+        let pos = i + 1;
+        if pos == net.layers.len() {
+            break;
+        }
+        let due = pos - last >= max_segment_len;
+        let at_pool = !l.is_conv();
+        if at_pool || due {
+            out.push(pos);
+            last = pos;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{minivgg, vgg16};
+
+    #[test]
+    fn split_covers_whole_chain() {
+        let net = vgg16();
+        let segs = split_segments(&net, &[4, 9], 224, 224);
+        assert_eq!(segs.len(), 3);
+        assert_eq!(segs[0].l0, 0);
+        assert_eq!(
+            segs.iter().map(|s| s.layers.len()).sum::<usize>(),
+            net.layers.len()
+        );
+        // heights chain: each segment's h_out is the next one's h_in
+        assert_eq!(segs[0].h_out(), segs[1].h_in());
+        assert_eq!(segs[1].h_out(), segs[2].h_in());
+    }
+
+    #[test]
+    fn single_segment_when_no_checkpoints() {
+        let net = minivgg();
+        let segs = split_segments(&net, &[], 32, 32);
+        assert_eq!(segs.len(), 1);
+        assert_eq!(segs[0].h_in(), 32);
+        assert_eq!(segs[0].h_out(), 8);
+    }
+
+    #[test]
+    fn sqrt_spacing() {
+        assert_eq!(sqrt_checkpoints(16), vec![4, 8, 12]);
+        assert_eq!(sqrt_checkpoints(3), Vec::<usize>::new());
+        let cks = sqrt_checkpoints(18); // VGG-16 chain
+        assert!(!cks.is_empty());
+        assert!(cks.iter().all(|&c| c < 18));
+    }
+
+    #[test]
+    fn pool_boundaries_preferred() {
+        let net = minivgg();
+        let cks = pool_boundary_checkpoints(&net, 4);
+        // pools are at layer indices 1 and 3 -> checkpoints after them
+        assert_eq!(cks, vec![2, 4]);
+    }
+}

@@ -1,0 +1,140 @@
+//! Row-granularity solver — Eqs. (9)/(10)/(12)/(16).
+//!
+//! The paper's two principles (§III-C): the plan must fit the device
+//! (peak + ξ < M), and N should be as *small* as possible to preserve
+//! parallelism and bound coordination costs.  `solve_granularity` probes
+//! N = 1, 2, … and returns the first feasible plan; infeasible geometries
+//! (empty 2PS rows, OverL halo ≥ own share) are skipped, and the solver
+//! can escalate to the hybrid variant when the flat plan never fits.
+
+use crate::error::{Error, Result};
+use crate::memory::{sim, DeviceModel};
+use crate::model::Network;
+
+use super::{checkpoint, RowCentric, RowMode, Strategy};
+
+/// Result of a granularity search.
+#[derive(Debug, Clone)]
+pub struct GranularitySolution {
+    pub plan: RowCentric,
+    pub n: usize,
+    pub peak_bytes: u64,
+    pub xi: u64,
+}
+
+/// Find min N ≤ `n_max` such that the plan fits `dev`.  If `hybrid` is
+/// true, checkpoints are placed at pool boundaries (max segment length
+/// ⌈√L⌉) before searching — the -H variants.
+pub fn solve_granularity(
+    mode: RowMode,
+    net: &Network,
+    b: usize,
+    h: usize,
+    w: usize,
+    dev: &DeviceModel,
+    n_max: usize,
+    hybrid: bool,
+) -> Result<GranularitySolution> {
+    let checkpoints = if hybrid {
+        let seg_len = (net.layers.len() as f64).sqrt().ceil() as usize;
+        checkpoint::pool_boundary_checkpoints(net, seg_len)
+    } else {
+        Vec::new()
+    };
+    let mut last_err: Option<Error> = None;
+    for n in 1..=n_max {
+        let plan = RowCentric {
+            mode,
+            n_rows: n,
+            checkpoints: checkpoints.clone(),
+        };
+        let sched = match plan.schedule(net, b, h, w) {
+            Ok(s) => s,
+            Err(e @ Error::InfeasiblePlan(_)) => {
+                // larger N in the same family will not become feasible for
+                // 2PS (rows shrink), but OverL infeasibility is monotone in
+                // N too — stop probing this family
+                last_err = Some(e);
+                break;
+            }
+            Err(e) => return Err(e),
+        };
+        let xi = plan.xi(net);
+        match sim::check_fits(&sched, xi, dev.usable_hbm(), &plan.name()) {
+            Ok(rep) => {
+                return Ok(GranularitySolution {
+                    n,
+                    peak_bytes: rep.peak_bytes,
+                    xi,
+                    plan,
+                })
+            }
+            Err(Error::OutOfMemory { .. }) => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Err(last_err.unwrap_or_else(|| Error::OutOfMemory {
+        strategy: format!("{}{}", mode.label(), if hybrid { "-H" } else { "" }),
+        required: 0,
+        capacity: dev.usable_hbm(),
+    }))
+}
+
+/// Largest batch size for which `solve` succeeds (the Fig. 6 probe).
+/// Doubling ramp followed by binary search; probes `f(b) -> fits?`.
+pub fn max_feasible(mut fits: impl FnMut(usize) -> bool, cap: usize) -> usize {
+    if !fits(1) {
+        return 0;
+    }
+    let mut lo = 1usize; // known-fits
+    let mut hi = 2usize;
+    while hi <= cap && fits(hi) {
+        lo = hi;
+        hi *= 2;
+    }
+    let mut hi = hi.min(cap + 1); // known-oom (or cap+1)
+    while hi - lo > 1 {
+        let mid = (lo + hi) / 2;
+        if fits(mid) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::vgg16;
+
+    #[test]
+    fn solver_prefers_small_n() {
+        let net = vgg16();
+        let dev = DeviceModel::rtx3090();
+        let sol =
+            solve_granularity(RowMode::Overlap, &net, 8, 224, 224, &dev, 32, true).unwrap();
+        assert!(sol.n >= 1);
+        // with B=8 at 224x224 even modest N must fit a 24 GB card
+        assert!(sol.peak_bytes + sol.xi < dev.usable_hbm());
+        // minimality: N-1 must not fit (or N == 1)
+        if sol.n > 1 {
+            let smaller = RowCentric {
+                mode: RowMode::Overlap,
+                n_rows: sol.n - 1,
+                checkpoints: sol.plan.checkpoints.clone(),
+            };
+            let sched = smaller.schedule(&net, 8, 224, 224).unwrap();
+            assert!(sim::check_fits(&sched, smaller.xi(&net), dev.usable_hbm(), "x").is_err());
+        }
+    }
+
+    #[test]
+    fn max_feasible_binary_search() {
+        assert_eq!(max_feasible(|b| b <= 37, 1024), 37);
+        assert_eq!(max_feasible(|b| b <= 1, 1024), 1);
+        assert_eq!(max_feasible(|_| false, 1024), 0);
+        assert_eq!(max_feasible(|b| b <= 2000, 1024), 1024);
+    }
+}

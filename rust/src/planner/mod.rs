@@ -1,0 +1,253 @@
+//! Row-partitioning planners — the paper's §III/§IV contribution.
+//!
+//! A [`Strategy`] compiles one training iteration of a [`Network`] into
+//! (a) an allocation [`Schedule`] for the memory simulator and (b)
+//! [`CostCounters`] for the time model.  The row-centric strategies are:
+//!
+//! * [`RowCentric`] with [`RowMode::TwoPhase`] — 2PS (§IV-A): skewed rows
+//!   planned by the backward height recursion, (k−s)-row caches shared
+//!   between consecutive rows, coordination interruptions counted.
+//! * [`RowCentric`] with [`RowMode::Overlap`] — OverL (§IV-B): even rows
+//!   with replicated halos, redundant compute counted as ι.
+//! * either mode with checkpoints — the hybrids 2PS-H / OverL-H: rows are
+//!   planned *between* consecutive checkpoints, truncating the depth that
+//!   inflates halos/caches (§IV-A "Impact of N", §IV-B OverL-H).
+//!
+//! Baselines (Base/Ckp/OffLoad/Tsplit) implement the same trait in
+//! [`crate::baselines`].
+
+pub mod analysis;
+pub mod checkpoint;
+pub mod granularity;
+pub mod overlap;
+pub mod twophase;
+
+use crate::costmodel::CostCounters;
+use crate::error::Result;
+use crate::memory::{Schedule, Tracker};
+use crate::model::{Network, F32_BYTES};
+
+pub use checkpoint::{sqrt_checkpoints, SegmentView};
+pub use granularity::{solve_granularity, GranularitySolution};
+
+/// A memory-reduction strategy: everything the benches compare.
+pub trait Strategy {
+    fn name(&self) -> String;
+
+    /// Compile one iteration into an allocation schedule.
+    fn schedule(&self, net: &Network, b: usize, h: usize, w: usize) -> Result<Schedule>;
+
+    /// Per-iteration cost counters for the time model.
+    fn cost(&self, net: &Network, b: usize, h: usize, w: usize) -> Result<CostCounters>;
+
+    /// Bytes of always-resident state (ξ): parameters + gradients (+
+    /// optimizer state would go here too; plain SGD has none).
+    fn xi(&self, net: &Network) -> u64 {
+        2 * net.param_bytes()
+    }
+}
+
+/// Which weak-dependency mechanism a row-centric plan uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RowMode {
+    /// 2PS — cache & share boundary rows between consecutive rows.
+    TwoPhase,
+    /// OverL — replicate halo rows; rows fully independent.
+    Overlap,
+}
+
+impl RowMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            RowMode::TwoPhase => "2PS",
+            RowMode::Overlap => "OverL",
+        }
+    }
+}
+
+/// A concrete row-centric plan: mode + rows-per-segment + checkpoints.
+#[derive(Debug, Clone)]
+pub struct RowCentric {
+    pub mode: RowMode,
+    /// rows per segment (N = N_BP, paper §III-C)
+    pub n_rows: usize,
+    /// checkpoint positions (indices into `net.layers`, exclusive
+    /// boundaries); empty = single segment over the whole conv chain
+    pub checkpoints: Vec<usize>,
+}
+
+impl RowCentric {
+    pub fn new(mode: RowMode, n_rows: usize) -> Self {
+        RowCentric {
+            mode,
+            n_rows,
+            checkpoints: Vec::new(),
+        }
+    }
+
+    pub fn hybrid(mode: RowMode, n_rows: usize, checkpoints: Vec<usize>) -> Self {
+        RowCentric {
+            mode,
+            n_rows,
+            checkpoints,
+        }
+    }
+
+    pub fn is_hybrid(&self) -> bool {
+        !self.checkpoints.is_empty()
+    }
+
+    /// Split the network into segments at the checkpoints.
+    ///
+    /// The *flat* variants (no checkpoints) row-partition only the longest
+    /// layer **prefix** on which the target N is still effective/feasible,
+    /// leaving the remainder column-centric — this is what the paper's
+    /// Table I reports for plain OverL/2PS (e.g. only 6 of VGG-16's 18
+    /// layers are involved): the early high-resolution layers dominate ρ^l,
+    /// and partitioning deeper layers without checkpoints lets halos/caches
+    /// blow up (§IV-A/§IV-B "Impact of N").
+    pub fn segments<'n>(&self, net: &'n Network, h: usize, w: usize) -> Vec<SegmentView<'n>> {
+        if !self.checkpoints.is_empty() {
+            return checkpoint::split_segments(net, &self.checkpoints, h, w);
+        }
+        let l = net.layers.len();
+        let d = self.flat_prefix_len(net, h, w);
+        if d == 0 || d >= l {
+            checkpoint::split_segments(net, &[], h, w)
+        } else {
+            checkpoint::split_segments(net, &[d], h, w)
+        }
+    }
+
+    /// Longest prefix depth on which `n_rows` is effective for this mode.
+    fn flat_prefix_len(&self, net: &Network, h: usize, w: usize) -> usize {
+        let hs = net.heights(h);
+        let ws = net.widths(w);
+        let mut best = 0usize;
+        for d in 1..=net.layers.len() {
+            let seg = SegmentView {
+                l0: 0,
+                layers: &net.layers[0..d],
+                heights: hs[0..=d].to_vec(),
+                widths: ws[0..=d].to_vec(),
+            };
+            let ok = match self.mode {
+                RowMode::TwoPhase => {
+                    let want = self.n_rows.min(seg.h_out()).max(1);
+                    want >= 2 && twophase::max_feasible_n(&seg, self.n_rows) >= want
+                }
+                RowMode::Overlap => overlap::prefix_effective(&seg, self.n_rows),
+            };
+            if ok {
+                best = d;
+            }
+        }
+        best
+    }
+
+    /// Per-segment row targets: hybrids partition every segment; flat
+    /// plans partition only the auto-selected prefix (segment 0) and keep
+    /// the tail column-centric (paper Table I: plain variants involve only
+    /// a subset of layers).
+    pub fn segment_targets(&self, n_segments: usize) -> Vec<usize> {
+        (0..n_segments)
+            .map(|i| {
+                if self.is_hybrid() || i == 0 {
+                    self.n_rows
+                } else {
+                    1
+                }
+            })
+            .collect()
+    }
+
+    /// Effective rows per segment after the feasibility degradation the
+    /// paper's §IV analysis mandates (2PS: no empty own-rows; OverL: at
+    /// least one non-replicated row).
+    pub fn effective_rows(&self, net: &Network, h: usize, w: usize) -> Vec<usize> {
+        let segs = self.segments(net, h, w);
+        let targets = self.segment_targets(segs.len());
+        segs.iter()
+            .zip(targets)
+            .map(|(seg, t)| match self.mode {
+                RowMode::TwoPhase => twophase::max_feasible_n(seg, t),
+                RowMode::Overlap => overlap::max_effective_n(seg, t),
+            })
+            .collect()
+    }
+
+    /// Table-I metrics: (#layers involved in row-centric update, Σ rows).
+    ///
+    /// A segment's layers count as row-centric when the segment is actually
+    /// partitioned (effective N ≥ 2); each conv layer contributes N rows.
+    pub fn table1_metrics(&self, net: &Network, h: usize, w: usize) -> (usize, usize) {
+        let mut layers = 0usize;
+        let mut rows = 0usize;
+        for (seg, n) in self
+            .segments(net, h, w)
+            .iter()
+            .zip(self.effective_rows(net, h, w))
+        {
+            if n >= 2 {
+                layers += seg.layers.len();
+                rows += n * seg.layers.iter().filter(|l| l.is_conv()).count();
+            }
+        }
+        (layers, rows)
+    }
+}
+
+impl Strategy for RowCentric {
+    fn name(&self) -> String {
+        let base = self.mode.label();
+        if self.is_hybrid() {
+            format!("{base}-H(N={})", self.n_rows)
+        } else {
+            format!("{base}(N={})", self.n_rows)
+        }
+    }
+
+    fn schedule(&self, net: &Network, b: usize, h: usize, w: usize) -> Result<Schedule> {
+        match self.mode {
+            RowMode::TwoPhase => twophase::schedule(self, net, b, h, w),
+            RowMode::Overlap => overlap::schedule(self, net, b, h, w),
+        }
+    }
+
+    fn cost(&self, net: &Network, b: usize, h: usize, w: usize) -> Result<CostCounters> {
+        match self.mode {
+            RowMode::TwoPhase => twophase::cost(self, net, b, h, w),
+            RowMode::Overlap => overlap::cost(self, net, b, h, w),
+        }
+    }
+}
+
+/// Bytes of a feature-map slab: `b · c · rows · w`.
+pub(crate) fn slab_bytes(b: usize, c: usize, rows: usize, w: usize) -> u64 {
+    (b * c * rows * w) as u64 * F32_BYTES
+}
+
+/// Shared helper: schedule the always-held input batch + final z^L + FC
+/// head window around a body closure.  Used by every row-centric schedule.
+pub(crate) fn with_iteration_frame(
+    net: &Network,
+    b: usize,
+    h: usize,
+    w: usize,
+    body: impl FnOnce(&mut Schedule) -> Result<()>,
+) -> Result<Schedule> {
+    let mut s = Schedule::new();
+    s.mark("input");
+    s.alloc("input", slab_bytes(b, net.c_in, h, w));
+    body(&mut s)?;
+    s.free("input");
+    Ok(s)
+}
+
+/// Validate a live tracker's peak against a simulated schedule's peak.
+/// (Used in tests; exposed for the examples' reporting.)
+pub fn validate_tracker(sim_peak: u64, tracker: &Tracker, tolerance_frac: f64) -> bool {
+    let live = tracker.peak() as f64;
+    let sim = sim_peak as f64;
+    (live - sim).abs() <= sim * tolerance_frac
+}

@@ -1,0 +1,382 @@
+//! OverL — Overlapping row partitioning (paper §IV-B).
+//!
+//! The segment output is divided evenly; each row's input slab is the exact
+//! preimage of its output interval (Eq. 15 generalized by
+//! `shapes::slab_chain`), so consecutive slabs *replicate* the halo rows
+//! and every row runs with zero coordination.  The price is redundant
+//! compute on the replicated rows (ι) and the replicated bytes themselves
+//! (OD) — both counted here for Figs. 8–10.
+
+use crate::costmodel::CostCounters;
+use crate::error::{Error, Result};
+use crate::memory::Schedule;
+use crate::model::Network;
+use crate::shapes::{even_partition, slab_chain, Interval, SlabChain};
+
+use super::{slab_bytes, with_iteration_frame, RowCentric, SegmentView};
+
+/// Per-segment OverL geometry.
+pub struct OverlapSegment<'n> {
+    pub seg: SegmentView<'n>,
+    pub n: usize,
+    /// output interval per row
+    pub ivs: Vec<Interval>,
+    /// slab chain per row
+    pub chains: Vec<SlabChain>,
+}
+
+/// Largest N ≤ `target` whose partitioning still has at least one
+/// non-replicated row somewhere — beyond that every slab covers the whole
+/// input and the scheme is pure overhead (the paper's `N > H / o_r^0`
+/// ineffectiveness, §IV-B "Impact of N").  Growing-but-finite halos are
+/// *allowed*: they are what produces the Fig. 10 U-shape.
+pub fn max_effective_n(seg: &SegmentView<'_>, target: usize) -> usize {
+    let cap = target.min(seg.h_out()).max(1);
+    (2..=cap)
+        .rev()
+        .find(|&n| {
+            let ivs = even_partition(seg.h_out(), n);
+            ivs.iter().any(|&iv| {
+                let ch = slab_chain(seg.layers, &seg.heights, iv);
+                let (a, b) = ch[0].in_iv;
+                (b - a) < seg.h_in()
+            })
+        })
+        .unwrap_or(1)
+}
+
+/// Strict effectiveness for *flat-prefix* selection: every slab's halo
+/// must stay below the row's own input share (the paper's N ≤ H/o_r^0
+/// operating regime, §IV-B) — beyond this point partitioning still works
+/// but replication dominates, which is -H territory.
+pub fn prefix_effective(seg: &SegmentView<'_>, target: usize) -> bool {
+    let n = target.min(seg.h_out());
+    if n < 2 {
+        return false;
+    }
+    let ivs = even_partition(seg.h_out(), n);
+    let share = (seg.h_in() + n - 1) / n;
+    ivs.iter().all(|&iv| {
+        let ch = slab_chain(seg.layers, &seg.heights, iv);
+        let slab = ch[0].in_iv.1 - ch[0].in_iv.0;
+        slab.saturating_sub(share) < share.max(1)
+    })
+}
+
+/// Plan per-segment geometry, degrading N per segment to the largest
+/// effective value (§IV-B; the hybrids exist to keep this close to the
+/// target by truncating depth).
+pub fn plan<'n>(
+    rc: &RowCentric,
+    net: &'n Network,
+    h: usize,
+    w: usize,
+) -> Result<Vec<OverlapSegment<'n>>> {
+    let mut out = Vec::new();
+    let segs = rc.segments(net, h, w);
+    let targets = rc.segment_targets(segs.len());
+    for (seg, target) in segs.into_iter().zip(targets) {
+        if seg.layers.is_empty() {
+            return Err(Error::InfeasiblePlan("empty segment".into()));
+        }
+        let h_out = seg.h_out();
+        let n = max_effective_n(&seg, target);
+        if n == 1 {
+            out.push(OverlapSegment {
+                seg,
+                n: 1,
+                ivs: vec![(0, h_out)],
+                chains: Vec::new(),
+            });
+            continue;
+        }
+        let ivs = even_partition(h_out, n);
+        let chains: Vec<SlabChain> = ivs
+            .iter()
+            .map(|&iv| slab_chain(seg.layers, &seg.heights, iv))
+            .collect();
+        out.push(OverlapSegment {
+            seg,
+            n,
+            ivs,
+            chains,
+        });
+    }
+    Ok(out)
+}
+
+pub fn schedule(rc: &RowCentric, net: &Network, b: usize, h: usize, w: usize) -> Result<Schedule> {
+    let segs = plan(rc, net, h, w)?;
+    let last_si = segs.len() - 1;
+    with_iteration_frame(net, b, h, w, |s| {
+        // ---------------- FP ----------------
+        for (si, os) in segs.iter().enumerate() {
+            s.mark(format!("fp.seg{si}"));
+            let seg = &os.seg;
+            let nl = seg.layers.len();
+            if os.n == 1 {
+                for (idx, l) in seg.layers.iter().enumerate() {
+                    s.alloc(
+                        format!("s{si}.l{idx}"),
+                        slab_bytes(b, l.c_out, seg.heights[idx + 1], seg.widths[idx + 1]),
+                    );
+                    if idx > 0 {
+                        s.free(format!("s{si}.l{}", idx - 1));
+                    }
+                }
+                s.alloc(
+                    format!("ck{si}"),
+                    slab_bytes(b, seg.c_out(), seg.h_out(), *seg.widths.last().unwrap()),
+                );
+                if nl > 0 {
+                    s.free(format!("s{si}.l{}", nl - 1));
+                }
+                continue;
+            }
+            for (r, chain) in os.chains.iter().enumerate() {
+                s.mark(format!("fp.seg{si}.row{r}"));
+                // the replicated input slab is materialized per row (the
+                // "pull before training" copy of Fig. 5)
+                s.alloc(
+                    format!("s{si}.r{r}.slab"),
+                    slab_bytes(
+                        b,
+                        seg.c_in(),
+                        chain[0].in_iv.1 - chain[0].in_iv.0,
+                        seg.widths[0],
+                    ),
+                );
+                for (idx, link) in chain.iter().enumerate() {
+                    let l = &seg.layers[idx];
+                    let rows = link.out_iv.1 - link.out_iv.0;
+                    s.alloc(
+                        format!("s{si}.r{r}.l{idx}"),
+                        slab_bytes(b, l.c_out, rows, seg.widths[idx + 1]),
+                    );
+                    if idx == 0 {
+                        s.free(format!("s{si}.r{r}.slab"));
+                    } else {
+                        s.free(format!("s{si}.r{r}.l{}", idx - 1));
+                    }
+                }
+            }
+            // concat rows into checkpoint / z^L
+            s.alloc(
+                format!("ck{si}"),
+                slab_bytes(b, seg.c_out(), seg.h_out(), *seg.widths.last().unwrap()),
+            );
+            for r in 0..os.n {
+                s.free(format!("s{si}.r{r}.l{}", nl - 1));
+            }
+        }
+
+        // ---------------- head + δ^L ----------------
+        s.mark("head");
+        let zl_bytes = slab_bytes(
+            b,
+            segs[last_si].seg.c_out(),
+            segs[last_si].seg.h_out(),
+            *segs[last_si].seg.widths.last().unwrap(),
+        );
+        s.alloc("deltaL", zl_bytes);
+
+        // ---------------- BP ----------------
+        for (si, os) in segs.iter().enumerate().rev() {
+            s.mark(format!("bp.seg{si}"));
+            let seg = &os.seg;
+            let nl = seg.layers.len();
+            let delta_in = if si == last_si {
+                "deltaL".to_string()
+            } else {
+                format!("dck{si}")
+            };
+            if si > 0 {
+                s.alloc(
+                    format!("dck{}", si - 1),
+                    slab_bytes(b, seg.c_in(), seg.h_in(), seg.widths[0]),
+                );
+            }
+            if os.n == 1 {
+                for (idx, l) in seg.layers.iter().enumerate() {
+                    s.alloc(
+                        format!("s{si}.bp.l{idx}"),
+                        slab_bytes(b, l.c_out, seg.heights[idx + 1], seg.widths[idx + 1]),
+                    );
+                }
+                for idx in (0..nl).rev() {
+                    let l = &seg.layers[idx];
+                    s.alloc(
+                        format!("s{si}.bp.d{idx}"),
+                        slab_bytes(b, l.c_in, seg.heights[idx], seg.widths[idx]),
+                    );
+                    s.free(format!("s{si}.bp.l{idx}"));
+                    if idx < nl - 1 {
+                        s.free(format!("s{si}.bp.d{}", idx + 1));
+                    }
+                }
+                s.free(format!("s{si}.bp.d0"));
+            } else {
+                for (r, chain) in os.chains.iter().enumerate().rev() {
+                    s.mark(format!("bp.seg{si}.row{r}"));
+                    // recompute & keep all slab maps of row r
+                    s.alloc(
+                        format!("s{si}.bp.r{r}.slab"),
+                        slab_bytes(
+                            b,
+                            seg.c_in(),
+                            chain[0].in_iv.1 - chain[0].in_iv.0,
+                            seg.widths[0],
+                        ),
+                    );
+                    for (idx, link) in chain.iter().enumerate() {
+                        let l = &seg.layers[idx];
+                        let rows = link.out_iv.1 - link.out_iv.0;
+                        s.alloc(
+                            format!("s{si}.bp.r{r}.l{idx}"),
+                            slab_bytes(b, l.c_out, rows, seg.widths[idx + 1]),
+                        );
+                    }
+                    // δ slabs back down the chain
+                    for idx in (0..nl).rev() {
+                        let l = &seg.layers[idx];
+                        let link = &chain[idx];
+                        let rows = link.in_iv.1 - link.in_iv.0;
+                        s.alloc(
+                            format!("s{si}.bp.r{r}.d{idx}"),
+                            slab_bytes(b, l.c_in, rows, seg.widths[idx]),
+                        );
+                        s.free(format!("s{si}.bp.r{r}.l{idx}"));
+                        if idx < nl - 1 {
+                            s.free(format!("s{si}.bp.r{r}.d{}", idx + 1));
+                        }
+                    }
+                    s.free(format!("s{si}.bp.r{r}.d0"));
+                    s.free(format!("s{si}.bp.r{r}.slab"));
+                }
+            }
+            s.free(delta_in);
+            if si > 0 {
+                s.free(format!("ck{}", si - 1));
+            }
+        }
+        s.free(format!("ck{last_si}"));
+        Ok(())
+    })
+}
+
+pub fn cost(rc: &RowCentric, net: &Network, b: usize, h: usize, w: usize) -> Result<CostCounters> {
+    let segs = plan(rc, net, h, w)?;
+    let tau: u64 = net.conv_flops(b, h, w) + net.fc_flops(b);
+    let mut c = CostCounters {
+        fp_flops: tau,
+        bp_flops: 2 * tau,
+        recompute_flops: net.conv_flops(b, h, w),
+        ..Default::default()
+    };
+    for os in &segs {
+        if os.n <= 1 {
+            continue;
+        }
+        let seg = &os.seg;
+        let seg_conv: u64 = seg
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| l.flops(b, seg.heights[i + 1], seg.widths[i + 1]))
+            .sum();
+        c.slab_flops += 4 * seg_conv;
+        // ι: rows computed by *both* of two adjacent rows (the replicated
+        // receptive-field region of Fig. 5), per layer; paid in FP, in the
+        // BP recompute, and twice in BP (paper: 4ι)
+        let mut iota = 0u64;
+        for r in 0..os.n - 1 {
+            let (a, bnext) = (&os.chains[r], &os.chains[r + 1]);
+            // replicated *input* rows (o^0, Eq. 15) count toward OD
+            let ov_in = a[0].in_iv.1.saturating_sub(bnext[0].in_iv.0);
+            c.overlap_bytes += slab_bytes(b, seg.c_in(), ov_in, seg.widths[0]);
+            c.overlap_rows += ov_in as u64;
+            for (idx, l) in seg.layers.iter().enumerate() {
+                let ov = a[idx].out_iv.1.saturating_sub(bnext[idx].out_iv.0);
+                iota += l.flops(b, ov, seg.widths[idx + 1]);
+                c.overlap_bytes += slab_bytes(b, l.c_out, ov, seg.widths[idx + 1]);
+                c.overlap_rows += ov as u64;
+            }
+        }
+        c.overlap_flops += 4 * iota;
+        c.slab_flops += 4 * iota;
+    }
+    Ok(c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::sim::simulate;
+    use crate::model::{minivgg, vgg16};
+    use crate::planner::{RowCentric, RowMode, Strategy};
+
+    #[test]
+    fn hybrid_minivgg_schedule_replays_clean() {
+        let net = minivgg();
+        let rc = RowCentric::hybrid(RowMode::Overlap, 4, vec![4]);
+        let s = rc.schedule(&net, 8, 32, 32).unwrap();
+        let rep = simulate(&s).unwrap();
+        assert_eq!(rep.final_bytes, 0, "leak in OverL schedule");
+    }
+
+    #[test]
+    fn flat_overl_partitions_only_an_effective_prefix() {
+        // full-depth halos through two pools ≈ 19+ rows of 32: the flat
+        // plan must confine partitioning to a prefix (paper Table I) and
+        // keep the tail column-centric; the hybrid covers more layers
+        let net = minivgg();
+        let flat = RowCentric::new(RowMode::Overlap, 4);
+        let eff = flat.effective_rows(&net, 32, 32);
+        assert!(eff.len() >= 2, "flat plan should split off a prefix: {eff:?}");
+        assert_eq!(*eff.last().unwrap(), 1, "tail must stay column: {eff:?}");
+        let hybrid = RowCentric::hybrid(RowMode::Overlap, 4, vec![4]);
+        let (lf, rf) = flat.table1_metrics(&net, 32, 32);
+        let (lh, rh) = hybrid.table1_metrics(&net, 32, 32);
+        assert!(lh >= lf && rh >= rf, "({lf},{rf}) vs ({lh},{rh})");
+        // both replay clean and both beat Base
+        let base = simulate(&crate::baselines::Base.schedule(&net, 8, 32, 32).unwrap())
+            .unwrap()
+            .peak_bytes;
+        for rc in [flat, hybrid] {
+            let rep = simulate(&rc.schedule(&net, 8, 32, 32).unwrap()).unwrap();
+            assert_eq!(rep.final_bytes, 0);
+            assert!(rep.peak_bytes < base, "{} vs base {base}", rep.peak_bytes);
+        }
+    }
+
+    #[test]
+    fn overl_h_reduces_peak_on_vgg16() {
+        let net = vgg16();
+        let base = crate::baselines::Base.schedule(&net, 8, 224, 224).unwrap();
+        let base_peak = simulate(&base).unwrap().peak_bytes;
+        let cks = crate::planner::checkpoint::pool_boundary_checkpoints(&net, 4);
+        let rc = RowCentric::hybrid(RowMode::Overlap, 8, cks);
+        let peak = simulate(&rc.schedule(&net, 8, 224, 224).unwrap())
+            .unwrap()
+            .peak_bytes;
+        assert!(
+            (peak as f64) < base_peak as f64 * 0.5,
+            "OverL-H peak {peak} vs Base {base_peak}"
+        );
+    }
+
+    #[test]
+    fn overlap_cost_counts_iota_and_od() {
+        let net = vgg16();
+        let cks = crate::planner::checkpoint::pool_boundary_checkpoints(&net, 4);
+        let c4 = RowCentric::hybrid(RowMode::Overlap, 4, cks.clone())
+            .cost(&net, 8, 224, 224)
+            .unwrap();
+        let c8 = RowCentric::hybrid(RowMode::Overlap, 8, cks)
+            .cost(&net, 8, 224, 224)
+            .unwrap();
+        assert!(c4.overlap_flops > 0);
+        assert!(c8.overlap_rows > c4.overlap_rows, "OD grows with N (Fig. 9)");
+        assert_eq!(c4.interruptions, 0, "OverL has no interruptions");
+    }
+}

@@ -1,0 +1,389 @@
+//! 2PS — Two-Phase Sharing row partitioning (paper §IV-A).
+//!
+//! Rows are skewed: ownership boundaries follow the backward height
+//! recursion (Eqs. 11/13/14, generalized in `shapes::tps_boundaries`).
+//! Consecutive rows share a (k−s)-row cache per conv layer, preserved
+//! across both phases (FP hand-off *and* BP recompute), which is exactly
+//! the `B(N−1)Σ(k^l−s^l)W^l C^l` term of Eq. (12).  Cache extract/concat
+//! operations are counted as coordination interruptions (CI, Fig. 9).
+
+use crate::costmodel::CostCounters;
+use crate::error::{Error, Result};
+use crate::memory::Schedule;
+use crate::model::Network;
+use crate::shapes::{even_partition, tps_boundaries, tps_cache_rows};
+
+use super::{slab_bytes, with_iteration_frame, RowCentric, SegmentView};
+
+/// Per-segment 2PS geometry, shared by schedule() and cost().
+pub struct TpsSegment<'n> {
+    pub seg: SegmentView<'n>,
+    /// effective rows in this segment (1 = not partitioned)
+    pub n: usize,
+    /// bounds[layer_input][cut]
+    pub bounds: Vec<Vec<usize>>,
+    /// caches[r][layer] for r in 1..n
+    pub caches: Vec<Vec<Option<(usize, usize)>>>,
+}
+
+/// Feasibility of one candidate N on a segment: every row must own at
+/// least one input row at every layer, otherwise the backward recursion
+/// degenerates (the paper's `(N−1)(k−s) > max{H}` failure — §IV-A).
+fn feasible_bounds(
+    seg: &SegmentView<'_>,
+    n: usize,
+) -> Option<(Vec<usize>, Vec<Vec<usize>>)> {
+    let h_out = seg.h_out();
+    let cuts: Vec<usize> = even_partition(h_out, n)
+        .iter()
+        .map(|iv| iv.0)
+        .chain(std::iter::once(h_out))
+        .collect();
+    let bounds = tps_boundaries(seg.layers, &seg.heights, &cuts);
+    for layer_cuts in &bounds {
+        for r in 0..n {
+            if layer_cuts[r] >= layer_cuts[r + 1] {
+                return None;
+            }
+        }
+    }
+    Some((cuts, bounds))
+}
+
+/// Largest feasible N ≤ `target` for this segment (≥ 1).  This is the
+/// paper's adaptive response to the depth constraint: the hybrid variants
+/// exist exactly because deeper segments force N down (§IV-A "Impact of N").
+pub fn max_feasible_n(seg: &SegmentView<'_>, target: usize) -> usize {
+    let cap = target.min(seg.h_out()).max(1);
+    (2..=cap)
+        .rev()
+        .find(|&n| feasible_bounds(seg, n).is_some())
+        .unwrap_or(1)
+}
+
+/// Plan the per-segment geometry, degrading N per segment to the largest
+/// feasible value.  Errors only if even N=1 cannot be expressed.
+pub fn plan<'n>(
+    rc: &RowCentric,
+    net: &'n Network,
+    h: usize,
+    w: usize,
+) -> Result<Vec<TpsSegment<'n>>> {
+    let mut out = Vec::new();
+    let segs = rc.segments(net, h, w);
+    let targets = rc.segment_targets(segs.len());
+    for (seg, target) in segs.into_iter().zip(targets) {
+        if seg.layers.is_empty() {
+            return Err(Error::InfeasiblePlan("empty segment".into()));
+        }
+        let n = max_feasible_n(&seg, target);
+        if n == 1 {
+            out.push(TpsSegment {
+                seg,
+                n: 1,
+                bounds: Vec::new(),
+                caches: Vec::new(),
+            });
+            continue;
+        }
+        let (_cuts, bounds) = feasible_bounds(&seg, n).expect("checked by max_feasible_n");
+        let caches = (1..n)
+            .map(|r| tps_cache_rows(seg.layers, &bounds, r))
+            .collect();
+        out.push(TpsSegment {
+            seg,
+            n,
+            bounds,
+            caches,
+        });
+    }
+    Ok(out)
+}
+
+fn own_rows(bounds: &[Vec<usize>], idx: usize, r: usize) -> usize {
+    bounds[idx][r + 1] - bounds[idx][r]
+}
+
+pub fn schedule(rc: &RowCentric, net: &Network, b: usize, h: usize, w: usize) -> Result<Schedule> {
+    let segs = plan(rc, net, h, w)?;
+    let last_si = segs.len() - 1;
+    with_iteration_frame(net, b, h, w, |s| {
+        // ---------------- FP ----------------
+        for (si, ts) in segs.iter().enumerate() {
+            s.mark(format!("fp.seg{si}"));
+            let seg = &ts.seg;
+            let nl = seg.layers.len();
+            if ts.n == 1 {
+                // unpartitioned segment: column-centric within, keep only
+                // the working pair + the segment output (checkpoint / z^L)
+                for (idx, l) in seg.layers.iter().enumerate() {
+                    s.alloc(
+                        format!("s{si}.l{idx}"),
+                        slab_bytes(b, l.c_out, seg.heights[idx + 1], seg.widths[idx + 1]),
+                    );
+                    if idx > 0 {
+                        s.free(format!("s{si}.l{}", idx - 1));
+                    }
+                }
+                // rename: the final buffer doubles as checkpoint/zL
+                s.alloc(
+                    format!("ck{si}"),
+                    slab_bytes(b, seg.c_out(), seg.h_out(), *seg.widths.last().unwrap()),
+                );
+                if nl > 0 {
+                    s.free(format!("s{si}.l{}", nl - 1));
+                }
+                continue;
+            }
+            for r in 0..ts.n {
+                s.mark(format!("fp.seg{si}.row{r}"));
+                // caches produced by this row for row r+1 (alive until the
+                // consumer's BP — "preserved in FP and BP", §IV-A)
+                if r + 1 < ts.n {
+                    for (idx, c) in ts.caches[r + 1 - 1].iter().enumerate() {
+                        if let Some((a, e)) = c {
+                            s.alloc(
+                                format!("s{si}.cache.r{}.l{idx}", r + 1),
+                                slab_bytes(b, seg.layers[idx].c_in, e - a, seg.widths[idx]),
+                            );
+                        }
+                    }
+                }
+                for idx in 0..nl {
+                    let rows = own_rows(&ts.bounds, idx + 1, r);
+                    let l = &seg.layers[idx];
+                    let is_last = idx == nl - 1;
+                    let id = if is_last {
+                        format!("s{si}.zrow{r}")
+                    } else {
+                        format!("s{si}.r{r}.l{idx}")
+                    };
+                    s.alloc(id, slab_bytes(b, l.c_out, rows, seg.widths[idx + 1]));
+                    if idx > 0 {
+                        s.free(format!("s{si}.r{r}.l{}", idx - 1));
+                    }
+                }
+            }
+            // concat the segment output rows into the checkpoint / z^L buffer
+            s.alloc(
+                format!("ck{si}"),
+                slab_bytes(b, seg.c_out(), seg.h_out(), *seg.widths.last().unwrap()),
+            );
+            for r in 0..ts.n {
+                s.free(format!("s{si}.zrow{r}"));
+            }
+        }
+
+        // ---------------- head + δ^L ----------------
+        s.mark("head");
+        let zl_bytes = slab_bytes(
+            b,
+            segs[last_si].seg.c_out(),
+            segs[last_si].seg.h_out(),
+            *segs[last_si].seg.widths.last().unwrap(),
+        );
+        s.alloc("deltaL", zl_bytes);
+
+        // ---------------- BP ----------------
+        for (si, ts) in segs.iter().enumerate().rev() {
+            s.mark(format!("bp.seg{si}"));
+            let seg = &ts.seg;
+            let nl = seg.layers.len();
+            // δ buffer entering this segment (δ^L for the last)
+            let delta_in = if si == last_si {
+                "deltaL".to_string()
+            } else {
+                format!("dck{si}")
+            };
+            // δ to hand to the previous segment (accumulated across rows)
+            if si > 0 {
+                s.alloc(
+                    format!("dck{}", si - 1),
+                    slab_bytes(b, seg.c_in(), seg.h_in(), seg.widths[0]),
+                );
+            }
+            if ts.n == 1 {
+                // column BP within the segment: recompute all maps, then walk back
+                for (idx, l) in seg.layers.iter().enumerate() {
+                    s.alloc(
+                        format!("s{si}.bp.l{idx}"),
+                        slab_bytes(b, l.c_out, seg.heights[idx + 1], seg.widths[idx + 1]),
+                    );
+                }
+                for idx in (0..nl).rev() {
+                    let l = &seg.layers[idx];
+                    s.alloc(
+                        format!("s{si}.bp.d{idx}"),
+                        slab_bytes(b, l.c_in, seg.heights[idx], seg.widths[idx]),
+                    );
+                    s.free(format!("s{si}.bp.l{idx}"));
+                    if idx < nl - 1 {
+                        s.free(format!("s{si}.bp.d{}", idx + 1));
+                    }
+                }
+                s.free(format!("s{si}.bp.d0"));
+            } else {
+                for r in (0..ts.n).rev() {
+                    s.mark(format!("bp.seg{si}.row{r}"));
+                    // recompute & keep all own slabs of row r (Eq. 8)
+                    for idx in 0..nl {
+                        let l = &seg.layers[idx];
+                        let rows = own_rows(&ts.bounds, idx + 1, r);
+                        s.alloc(
+                            format!("s{si}.bp.r{r}.l{idx}"),
+                            slab_bytes(b, l.c_out, rows, seg.widths[idx + 1]),
+                        );
+                    }
+                    // δ slabs, two live at a time
+                    for idx in (0..nl).rev() {
+                        let l = &seg.layers[idx];
+                        let rows = own_rows(&ts.bounds, idx, r);
+                        s.alloc(
+                            format!("s{si}.bp.r{r}.d{idx}"),
+                            slab_bytes(b, l.c_in, rows, seg.widths[idx]),
+                        );
+                        s.free(format!("s{si}.bp.r{r}.l{idx}"));
+                        if idx < nl - 1 {
+                            s.free(format!("s{si}.bp.r{r}.d{}", idx + 1));
+                        }
+                    }
+                    s.free(format!("s{si}.bp.r{r}.d0"));
+                    // caches consumed by row r are no longer needed
+                    if r >= 1 {
+                        for (idx, c) in ts.caches[r - 1].iter().enumerate() {
+                            if c.is_some() {
+                                s.free(format!("s{si}.cache.r{r}.l{idx}"));
+                            }
+                        }
+                    }
+                }
+            }
+            // the δ that fed this segment is consumed
+            s.free(delta_in);
+            // the checkpoint feeding this segment's recompute is consumed
+            // (segment 0 recomputes from the input batch, freed by the frame)
+            if si > 0 {
+                s.free(format!("ck{}", si - 1));
+            }
+        }
+        s.free(format!("ck{last_si}"));
+        Ok(())
+    })
+}
+
+pub fn cost(rc: &RowCentric, net: &Network, b: usize, h: usize, w: usize) -> Result<CostCounters> {
+    let segs = plan(rc, net, h, w)?;
+    let hs = net.heights(h);
+    let ws = net.widths(w);
+    let tau: u64 = net.conv_flops(b, h, w) + net.fc_flops(b);
+    let mut c = CostCounters {
+        fp_flops: tau,
+        bp_flops: 2 * tau,
+        recompute_flops: net.conv_flops(b, h, w), // full re-FP during BP
+        ..Default::default()
+    };
+    let _ = (&hs, &ws);
+    for ts in &segs {
+        if ts.n <= 1 {
+            continue;
+        }
+        let seg = &ts.seg;
+        // every conv executed as slabs, FP + recompute + BP
+        let seg_conv: u64 = seg
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| l.flops(b, seg.heights[i + 1], seg.widths[i + 1]))
+            .sum();
+        c.slab_flops += 4 * seg_conv;
+        // CI: one extract + one concat per cached layer per consuming row,
+        // in FP and again in the BP recompute
+        for caches in &ts.caches {
+            for (idx, cch) in caches.iter().enumerate() {
+                if let Some((a, e)) = cch {
+                    c.interruptions += 2 * 2;
+                    c.sharing_bytes += slab_bytes(b, seg.layers[idx].c_in, e - a, seg.widths[idx]);
+                }
+            }
+        }
+    }
+    // SD volume counted once; CI already includes both phases
+    Ok(c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::sim::simulate;
+    use crate::model::{minivgg, vgg16};
+    use crate::planner::{RowCentric, RowMode, Strategy};
+
+    #[test]
+    fn minivgg_n2_schedule_replays_clean() {
+        let net = minivgg();
+        let rc = RowCentric::new(RowMode::TwoPhase, 2);
+        let s = rc.schedule(&net, 8, 32, 32).unwrap();
+        let rep = simulate(&s).unwrap();
+        assert_eq!(rep.final_bytes, 0, "leak in 2PS schedule");
+        assert!(rep.peak_bytes > 0);
+    }
+
+    #[test]
+    fn deep_2ps_degrades_and_hybrid_recovers_rows() {
+        // minivgg's 8-row output + 6-layer depth exhausts 2PS ownership
+        // quickly (§IV-A "Impact of N"): full-depth N degrades...
+        let net = minivgg();
+        let rc = RowCentric::new(RowMode::TwoPhase, 4);
+        let eff = rc.effective_rows(&net, 32, 32);
+        // flat: a partitioned prefix + a column tail (Table I's "subset of
+        // layers" for the plain variants)
+        assert_eq!(*eff.last().unwrap(), 1, "tail must stay column: {eff:?}");
+        let flat_rows: usize = eff.iter().sum();
+        let s = rc.schedule(&net, 8, 32, 32).unwrap();
+        assert_eq!(simulate(&s).unwrap().final_bytes, 0);
+        // ...and checkpoints recover the granularity (Table I's story)
+        let rch = RowCentric::hybrid(RowMode::TwoPhase, 4, vec![2, 4]);
+        let (l_flat, r_flat) = rc.table1_metrics(&net, 32, 32);
+        let (l_h, r_h) = rch.table1_metrics(&net, 32, 32);
+        assert!(
+            l_h >= l_flat && r_h > r_flat,
+            "Table I: -H must dominate ({l_flat},{r_flat}) vs ({l_h},{r_h})"
+        );
+        let s = rch.schedule(&net, 8, 32, 32).unwrap();
+        assert_eq!(simulate(&s).unwrap().final_bytes, 0);
+        // VGG-16 at 224² replays clean too (large maps keep ownership alive)
+        let net = vgg16();
+        let rc = RowCentric::new(RowMode::TwoPhase, 8);
+        let s = rc.schedule(&net, 8, 224, 224).unwrap();
+        assert_eq!(simulate(&s).unwrap().final_bytes, 0);
+    }
+
+    #[test]
+    fn partitioning_reduces_peak() {
+        let net = minivgg();
+        let base = crate::baselines::Base.schedule(&net, 8, 32, 32).unwrap();
+        let base_peak = simulate(&base).unwrap().peak_bytes;
+        let rc = RowCentric::new(RowMode::TwoPhase, 2);
+        let peak = simulate(&rc.schedule(&net, 8, 32, 32).unwrap())
+            .unwrap()
+            .peak_bytes;
+        assert!(
+            peak < base_peak,
+            "2PS peak {peak} should beat Base {base_peak}"
+        );
+    }
+
+    #[test]
+    fn cost_counts_interruptions_linear_in_n() {
+        let net = minivgg();
+        let cks = vec![2usize, 4];
+        let c2 = RowCentric::hybrid(RowMode::TwoPhase, 2, cks.clone())
+            .cost(&net, 8, 32, 32)
+            .unwrap();
+        let c3 = RowCentric::hybrid(RowMode::TwoPhase, 3, cks)
+            .cost(&net, 8, 32, 32)
+            .unwrap();
+        assert!(c3.interruptions > c2.interruptions, "{:?} vs {:?}", c3.interruptions, c2.interruptions);
+        assert!(c2.sharing_bytes > 0);
+    }
+}

@@ -1,0 +1,308 @@
+//! `artifacts/manifest.json` schema — the contract between `aot.py` (L2)
+//! and this coordinator (L3).
+//!
+//! The manifest carries the model's layer graph, the row plan geometry the
+//! artifacts were compiled for (slab intervals, 2PS bounds/caches), and the
+//! I/O signature of every HLO executable.  The Rust shape calculus
+//! (`shapes::interval`) is cross-checked against these numbers in tests so
+//! the two implementations of the paper's Eq. (11)–(15) cannot drift apart.
+//!
+//! Parsed with the in-tree JSON parser (`util::json`) — serde is not
+//! available in the offline build environment.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::JsonValue;
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: ModelInfo,
+    pub plan: PlanInfo,
+    pub executables: Vec<ExecutableInfo>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub batch: usize,
+    pub h: usize,
+    pub w: usize,
+    pub n_classes: usize,
+    pub layers: Vec<LayerInfo>,
+    pub heights: Vec<usize>,
+    pub w_out: usize,
+    pub fc_in: usize,
+    pub param_shapes: Vec<Vec<usize>>,
+    pub n_conv_params: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct LayerInfo {
+    pub kind: String,
+    pub k: usize,
+    pub s: usize,
+    pub p: usize,
+    pub c_in: usize,
+    pub c_out: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct PlanInfo {
+    pub ckpt_split: usize,
+    pub n_rows: usize,
+    pub tps_rows: usize,
+    pub naive_rows: usize,
+    pub segments: Vec<SegmentInfo>,
+    pub tps: TpsInfo,
+}
+
+#[derive(Debug, Clone)]
+pub struct SegmentInfo {
+    pub name: String,
+    pub h_in: usize,
+    pub h_out: usize,
+    pub c_in: usize,
+    pub c_out: usize,
+    pub param_lo: usize,
+    pub param_hi: usize,
+    pub rows: Vec<RowInfo>,
+}
+
+#[derive(Debug, Clone)]
+pub struct RowInfo {
+    pub out_iv: [usize; 2],
+    pub in_iv: [usize; 2],
+    pub chain: Vec<ChainLink>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ChainLink {
+    pub in_iv: [usize; 2],
+    pub out_iv: [usize; 2],
+    pub pad_top: usize,
+    pub pad_bottom: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct TpsInfo {
+    pub cuts: Vec<usize>,
+    pub rows: Vec<TpsRowInfo>,
+}
+
+#[derive(Debug, Clone)]
+pub struct TpsRowInfo {
+    pub own_iv: [usize; 2],
+    /// bounds[layer][cut]: ownership boundaries of every layer input.
+    pub bounds: Vec<Vec<usize>>,
+    pub cache_in: Vec<Option<[usize; 2]>>,
+    pub cache_out: Vec<Option<[usize; 2]>>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ExecutableInfo {
+    pub name: String,
+    pub path: String,
+    pub kind: String,
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: Vec<Vec<usize>>,
+    pub segment: Option<String>,
+    pub row: Option<usize>,
+    pub need_dx: bool,
+}
+
+fn shapes(v: &JsonValue) -> Result<Vec<Vec<usize>>> {
+    v.as_array()?.iter().map(|s| s.usize_vec()).collect()
+}
+
+fn opt_pairs(v: &JsonValue) -> Result<Vec<Option<[usize; 2]>>> {
+    v.as_array()?
+        .iter()
+        .map(|e| match e {
+            JsonValue::Null => Ok(None),
+            other => other.usize_pair().map(Some),
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = JsonValue::parse(text)?;
+        let m = v.get("model")?;
+        let model = ModelInfo {
+            name: m.get("name")?.as_str()?.to_string(),
+            batch: m.get("batch")?.as_usize()?,
+            h: m.get("h")?.as_usize()?,
+            w: m.get("w")?.as_usize()?,
+            n_classes: m.get("n_classes")?.as_usize()?,
+            layers: m
+                .get("layers")?
+                .as_array()?
+                .iter()
+                .map(|l| {
+                    Ok(LayerInfo {
+                        kind: l.get("kind")?.as_str()?.to_string(),
+                        k: l.get("k")?.as_usize()?,
+                        s: l.get("s")?.as_usize()?,
+                        p: l.get("p")?.as_usize()?,
+                        c_in: l.get("c_in")?.as_usize()?,
+                        c_out: l.get("c_out")?.as_usize()?,
+                    })
+                })
+                .collect::<Result<_>>()?,
+            heights: m.get("heights")?.usize_vec()?,
+            w_out: m.get("w_out")?.as_usize()?,
+            fc_in: m.get("fc_in")?.as_usize()?,
+            param_shapes: shapes(m.get("param_shapes")?)?,
+            n_conv_params: m.get("n_conv_params")?.as_usize()?,
+        };
+
+        let p = v.get("plan")?;
+        let segments = p
+            .get("segments")?
+            .as_array()?
+            .iter()
+            .map(|s| {
+                Ok(SegmentInfo {
+                    name: s.get("name")?.as_str()?.to_string(),
+                    h_in: s.get("h_in")?.as_usize()?,
+                    h_out: s.get("h_out")?.as_usize()?,
+                    c_in: s.get("c_in")?.as_usize()?,
+                    c_out: s.get("c_out")?.as_usize()?,
+                    param_lo: s.get("param_lo")?.as_usize()?,
+                    param_hi: s.get("param_hi")?.as_usize()?,
+                    rows: s
+                        .get("rows")?
+                        .as_array()?
+                        .iter()
+                        .map(|r| {
+                            Ok(RowInfo {
+                                out_iv: r.get("out_iv")?.usize_pair()?,
+                                in_iv: r.get("in_iv")?.usize_pair()?,
+                                chain: r
+                                    .get("chain")?
+                                    .as_array()?
+                                    .iter()
+                                    .map(|c| {
+                                        Ok(ChainLink {
+                                            in_iv: c.get("in_iv")?.usize_pair()?,
+                                            out_iv: c.get("out_iv")?.usize_pair()?,
+                                            pad_top: c.get("pad_top")?.as_usize()?,
+                                            pad_bottom: c.get("pad_bottom")?.as_usize()?,
+                                        })
+                                    })
+                                    .collect::<Result<_>>()?,
+                            })
+                        })
+                        .collect::<Result<_>>()?,
+                })
+            })
+            .collect::<Result<_>>()?;
+        let t = p.get("tps")?;
+        let tps = TpsInfo {
+            cuts: t.get("cuts")?.usize_vec()?,
+            rows: t
+                .get("rows")?
+                .as_array()?
+                .iter()
+                .map(|r| {
+                    Ok(TpsRowInfo {
+                        own_iv: r.get("own_iv")?.usize_pair()?,
+                        bounds: r
+                            .get("bounds")?
+                            .as_array()?
+                            .iter()
+                            .map(|b| b.usize_vec())
+                            .collect::<Result<_>>()?,
+                        cache_in: opt_pairs(r.get("cache_in")?)?,
+                        cache_out: opt_pairs(r.get("cache_out")?)?,
+                    })
+                })
+                .collect::<Result<_>>()?,
+        };
+        let plan = PlanInfo {
+            ckpt_split: p.get("ckpt_split")?.as_usize()?,
+            n_rows: p.get("n_rows")?.as_usize()?,
+            tps_rows: p.get("tps_rows")?.as_usize()?,
+            naive_rows: p.get("naive_rows")?.as_usize()?,
+            segments,
+            tps,
+        };
+
+        let executables = v
+            .get("executables")?
+            .as_array()?
+            .iter()
+            .map(|e| {
+                Ok(ExecutableInfo {
+                    name: e.get("name")?.as_str()?.to_string(),
+                    path: e.get("path")?.as_str()?.to_string(),
+                    kind: e.get("kind")?.as_str()?.to_string(),
+                    inputs: shapes(e.get("inputs")?)?,
+                    outputs: shapes(e.get("outputs")?)?,
+                    segment: match e.opt("segment") {
+                        Some(s) => Some(s.as_str()?.to_string()),
+                        None => None,
+                    },
+                    row: match e.opt("row") {
+                        Some(r) => Some(r.as_usize()?),
+                        None => None,
+                    },
+                    need_dx: match e.opt("need_dx") {
+                        Some(b) => b.as_bool()?,
+                        None => false,
+                    },
+                })
+            })
+            .collect::<Result<_>>()?;
+
+        Ok(Manifest {
+            model,
+            plan,
+            executables,
+        })
+    }
+
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} — run `make artifacts` first ({e})",
+                path.display()
+            ))
+        })?;
+        let man = Manifest::parse(&text)?;
+        man.validate(dir)?;
+        Ok(man)
+    }
+
+    /// Every referenced HLO file must exist and every executable be unique.
+    fn validate(&self, dir: &Path) -> Result<()> {
+        let mut seen: HashMap<&str, ()> = HashMap::new();
+        for e in &self.executables {
+            if seen.insert(e.name.as_str(), ()).is_some() {
+                return Err(Error::Artifact(format!("duplicate executable {}", e.name)));
+            }
+            let p = dir.join(&e.path);
+            if !p.exists() {
+                return Err(Error::Artifact(format!("missing HLO file {}", p.display())));
+            }
+        }
+        if self.model.heights.len() != self.model.layers.len() + 1 {
+            return Err(Error::Artifact("heights/layers length mismatch".into()));
+        }
+        Ok(())
+    }
+
+    pub fn executable(&self, name: &str) -> Result<&ExecutableInfo> {
+        self.executables
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| Error::Artifact(format!("no executable named {name}")))
+    }
+
+    pub fn hlo_path(&self, dir: &Path, name: &str) -> Result<PathBuf> {
+        Ok(dir.join(&self.executable(name)?.path))
+    }
+}

@@ -1,0 +1,187 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them.
+//!
+//! Adapted from /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Executables are compiled lazily on first use and cached for the rest of
+//! the process (one compile per model variant, per the AOT design).
+//!
+//! All executables are lowered with `return_tuple=True`, so every result is
+//! a tuple literal that we decompose into [`Tensor`]s.
+
+pub mod manifest;
+pub mod tensor;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::time::Instant;
+
+pub use manifest::Manifest;
+pub use tensor::Tensor;
+
+use crate::error::{Error, Result};
+
+/// Execution statistics kept by the runtime (consumed by metrics/benches).
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeStats {
+    pub compiles: u64,
+    pub executions: u64,
+    pub compile_ms: f64,
+    pub execute_ms: f64,
+    /// host<->literal conversion time, part of L3 coordinator overhead
+    pub convert_ms: f64,
+}
+
+/// PJRT-backed executor over an artifact bundle.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    stats: RefCell<RuntimeStats>,
+}
+
+impl Runtime {
+    /// Open an artifact bundle (directory containing manifest.json).
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("PjRtClient::cpu: {e}")))?;
+        Ok(Runtime {
+            client,
+            dir,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+
+    /// Compile (or fetch from cache) an executable by manifest name.
+    pub fn ensure_compiled(&self, name: &str) -> Result<()> {
+        if self.cache.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let path = self.manifest.hlo_path(&self.dir, name)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| Error::Artifact(format!("parse {}: {e}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| Error::Runtime(format!("compile {name}: {e}")))?;
+        let mut stats = self.stats.borrow_mut();
+        stats.compiles += 1;
+        stats.compile_ms += t0.elapsed().as_secs_f64() * 1e3;
+        self.cache.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Pre-compile every executable in the bundle (warm start).
+    pub fn compile_all(&self) -> Result<()> {
+        let names: Vec<String> = self
+            .manifest
+            .executables
+            .iter()
+            .map(|e| e.name.clone())
+            .collect();
+        for n in &names {
+            self.ensure_compiled(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute `name` on host tensors; returns the decomposed output tuple.
+    ///
+    /// Input shapes are validated against the manifest signature before the
+    /// call — a mismatch is an [`Error::Artifact`], not a PJRT crash.
+    pub fn execute(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let info = self.manifest.executable(name)?;
+        if info.inputs.len() != inputs.len() {
+            return Err(Error::Artifact(format!(
+                "{name}: expected {} inputs, got {}",
+                info.inputs.len(),
+                inputs.len()
+            )));
+        }
+        for (i, (t, expect)) in inputs.iter().zip(info.inputs.iter()).enumerate() {
+            if &t.shape != expect {
+                return Err(Error::Artifact(format!(
+                    "{name}: input {i} shape {:?} != manifest {:?}",
+                    t.shape, expect
+                )));
+            }
+        }
+        self.ensure_compiled(name)?;
+
+        let t0 = Instant::now();
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| tensor_to_literal(t))
+            .collect::<Result<_>>()?;
+        let conv_in_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        let t1 = Instant::now();
+        let cache = self.cache.borrow();
+        let exe = cache.get(name).expect("ensured above");
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| Error::Runtime(format!("execute {name}: {e}")))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("fetch {name}: {e}")))?;
+        let exec_ms = t1.elapsed().as_secs_f64() * 1e3;
+
+        let t2 = Instant::now();
+        let parts = result
+            .to_tuple()
+            .map_err(|e| Error::Runtime(format!("untuple {name}: {e}")))?;
+        let mut out = Vec::with_capacity(parts.len());
+        for lit in parts {
+            out.push(literal_to_tensor(&lit)?);
+        }
+        let conv_out_ms = t2.elapsed().as_secs_f64() * 1e3;
+
+        let mut stats = self.stats.borrow_mut();
+        stats.executions += 1;
+        stats.execute_ms += exec_ms;
+        stats.convert_ms += conv_in_ms + conv_out_ms;
+
+        if out.len() != info.outputs.len() {
+            return Err(Error::Artifact(format!(
+                "{name}: manifest promises {} outputs, got {}",
+                info.outputs.len(),
+                out.len()
+            )));
+        }
+        Ok(out)
+    }
+}
+
+fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    // single-copy path (perf pass: vec1+reshape copied the buffer twice)
+    let bytes = unsafe {
+        std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
+    };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, &t.shape, bytes)
+        .map_err(|e| Error::Runtime(format!("literal {:?}: {e}", t.shape)))
+}
+
+fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit
+        .array_shape()
+        .map_err(|e| Error::Runtime(format!("array_shape: {e}")))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit
+        .to_vec::<f32>()
+        .map_err(|e| Error::Runtime(format!("to_vec: {e}")))?;
+    Tensor::new(dims, data)
+}

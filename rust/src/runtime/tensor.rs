@@ -1,0 +1,198 @@
+//! Host-side dense f32 tensor (row-major), the currency of the coordinator.
+//!
+//! The coordinator moves activations, gradients and parameters around as
+//! `Tensor`s; the runtime converts them to/from PJRT literals at the
+//! executable boundary.  Row-centric plumbing needs exactly two non-trivial
+//! ops: slicing / concatenating along the **H axis** (axis 2 of NCHW), which
+//! is how z^L is assembled from row outputs and δ^L is split back into rows.
+
+use crate::error::{Error, Result};
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(Error::Runtime(format!(
+                "tensor shape {:?} ({} elems) vs data len {}",
+                shape,
+                n,
+                data.len()
+            )));
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn size_bytes(&self) -> u64 {
+        (self.data.len() * 4) as u64
+    }
+
+    /// Slice rows `[a, b)` along the H axis (axis 2) of an NCHW tensor.
+    pub fn slice_h(&self, a: usize, b: usize) -> Result<Tensor> {
+        let [n, c, h, w] = self.dims4()?;
+        if a >= b || b > h {
+            return Err(Error::Runtime(format!("slice_h [{a},{b}) of H={h}")));
+        }
+        let rows = b - a;
+        let mut out = Vec::with_capacity(n * c * rows * w);
+        for ni in 0..n {
+            for ci in 0..c {
+                let base = ((ni * c + ci) * h + a) * w;
+                out.extend_from_slice(&self.data[base..base + rows * w]);
+            }
+        }
+        Tensor::new(vec![n, c, rows, w], out)
+    }
+
+    /// Concatenate NCHW tensors along the H axis (axis 2).
+    pub fn concat_h(parts: &[&Tensor]) -> Result<Tensor> {
+        if parts.is_empty() {
+            return Err(Error::Runtime("concat_h of zero tensors".into()));
+        }
+        let [n, c, _, w] = parts[0].dims4()?;
+        let mut h_total = 0usize;
+        for p in parts {
+            let [pn, pc, ph, pw] = p.dims4()?;
+            if pn != n || pc != c || pw != w {
+                return Err(Error::Runtime(format!(
+                    "concat_h mismatch {:?} vs {:?}",
+                    parts[0].shape, p.shape
+                )));
+            }
+            h_total += ph;
+        }
+        let mut out = vec![0.0f32; n * c * h_total * w];
+        for ni in 0..n {
+            for ci in 0..c {
+                let mut row = 0usize;
+                for p in parts {
+                    let ph = p.shape[2];
+                    let src = ((ni * c + ci) * ph) * w;
+                    let dst = ((ni * c + ci) * h_total + row) * w;
+                    out[dst..dst + ph * w].copy_from_slice(&p.data[src..src + ph * w]);
+                    row += ph;
+                }
+            }
+        }
+        Tensor::new(vec![n, c, h_total, w], out)
+    }
+
+    /// Accumulate `other` into rows `[a, a+other.h)` of self (NCHW, H axis).
+    /// This is the δ-accumulation for overlapping slab input-gradients.
+    pub fn add_h(&mut self, a: usize, other: &Tensor) -> Result<()> {
+        let [n, c, h, w] = self.dims4()?;
+        let [on, oc, oh, ow] = other.dims4()?;
+        if on != n || oc != c || ow != w || a + oh > h {
+            return Err(Error::Runtime(format!(
+                "add_h {:?} at row {a} into {:?}",
+                other.shape, self.shape
+            )));
+        }
+        for ni in 0..n {
+            for ci in 0..c {
+                let src = ((ni * c + ci) * oh) * w;
+                let dst = ((ni * c + ci) * h + a) * w;
+                for i in 0..oh * w {
+                    self.data[dst + i] += other.data[src + i];
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Element-wise `self += scale * other` (gradient accumulation / SGD).
+    pub fn axpy(&mut self, scale: f32, other: &Tensor) -> Result<()> {
+        if self.shape != other.shape {
+            return Err(Error::Runtime(format!(
+                "axpy shape mismatch {:?} vs {:?}",
+                self.shape, other.shape
+            )));
+        }
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += scale * b;
+        }
+        Ok(())
+    }
+
+    fn dims4(&self) -> Result<[usize; 4]> {
+        if self.shape.len() != 4 {
+            return Err(Error::Runtime(format!("expected NCHW, got {:?}", self.shape)));
+        }
+        Ok([self.shape[0], self.shape[1], self.shape[2], self.shape[3]])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor::new(shape.to_vec(), (0..n).map(|i| i as f32).collect()).unwrap()
+    }
+
+    #[test]
+    fn slice_concat_roundtrip() {
+        let t = seq(&[2, 3, 8, 5]);
+        let a = t.slice_h(0, 3).unwrap();
+        let b = t.slice_h(3, 8).unwrap();
+        let back = Tensor::concat_h(&[&a, &b]).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn slice_h_values() {
+        let t = seq(&[1, 1, 4, 2]);
+        let s = t.slice_h(1, 3).unwrap();
+        assert_eq!(s.shape, vec![1, 1, 2, 2]);
+        assert_eq!(s.data, vec![2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn add_h_accumulates() {
+        let mut t = Tensor::zeros(&[1, 2, 4, 2]);
+        let p = seq(&[1, 2, 2, 2]);
+        t.add_h(1, &p).unwrap();
+        t.add_h(1, &p).unwrap();
+        assert_eq!(t.data[2], 0.0); // row 0 untouched
+        assert_eq!(t.data[1 * 2 + 0], 2.0 * 0.0);
+        assert_eq!(t.data[1 * 2 + 1], 2.0 * 1.0);
+    }
+
+    #[test]
+    fn bad_shapes_error() {
+        assert!(Tensor::new(vec![2, 2], vec![0.0; 3]).is_err());
+        let t = seq(&[1, 1, 4, 2]);
+        assert!(t.slice_h(3, 3).is_err());
+        assert!(t.slice_h(2, 9).is_err());
+    }
+}

@@ -1,0 +1,292 @@
+//! Exact row-interval (halo) calculus — the generalized Eq. (11)–(15).
+//!
+//! Output rows `[a, b)` of a k/s/p layer need input rows
+//! `[a·s − p, (b−1)·s − p + k) ∩ [0, H_in)`, with the clipped amount
+//! re-introduced as padding **only at true image boundaries** — the paper's
+//! semi-closed padding (§III-B).  Because this backward map is the exact
+//! preimage, re-running a slab forward reproduces exactly the target
+//! interval at every layer; row-concatenation is bit-equal to the
+//! column-centric result.
+
+use crate::model::Layer;
+
+/// Half-open row interval `[start, end)`.
+pub type Interval = (usize, usize);
+
+/// Per-layer slab geometry for one row's forward pass.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SlabLayer {
+    /// rows of the layer *input* held by the slab
+    pub in_iv: Interval,
+    /// rows of the layer *output* the slab produces
+    pub out_iv: Interval,
+    /// semi-closed padding actually applied (non-zero at true edges only)
+    pub pad_top: usize,
+    pub pad_bottom: usize,
+}
+
+/// Full slab chain of one row through a layer stack (input layer first).
+pub type SlabChain = Vec<SlabLayer>;
+
+/// Exact preimage of output rows `out_iv` through `layer` with input height
+/// `h_in`.  Returns (input interval, pad_top, pad_bottom).
+pub fn back_interval(layer: &Layer, out_iv: Interval, h_in: usize) -> (Interval, usize, usize) {
+    let (a, b) = out_iv;
+    assert!(a < b, "empty interval {out_iv:?}");
+    let start_u = a as i64 * layer.s as i64 - layer.p as i64;
+    let end_u = (b as i64 - 1) * layer.s as i64 - layer.p as i64 + layer.k as i64;
+    let ia = start_u.max(0) as usize;
+    let ib = (end_u.min(h_in as i64)) as usize;
+    let pad_top = (ia as i64 - start_u) as usize;
+    let pad_bottom = (end_u - ib as i64) as usize;
+    debug_assert!(pad_top <= layer.p && pad_bottom <= layer.p);
+    ((ia, ib), pad_top, pad_bottom)
+}
+
+/// Output rows produced by a slab covering `in_iv` with the given pads.
+pub fn fwd_interval(layer: &Layer, in_iv: Interval, pad_top: usize, pad_bottom: usize) -> Interval {
+    let (ia, ib) = in_iv;
+    let lo = ia as i64 - pad_top as i64;
+    let hi = ib as i64 + pad_bottom as i64;
+    let s = layer.s as i64;
+    let o_start = (lo + layer.p as i64 + s - 1).div_euclid(s); // ceil
+    let o_end = (hi + layer.p as i64 - layer.k as i64).div_euclid(s) + 1;
+    (o_start.max(0) as usize, o_end.max(0) as usize)
+}
+
+/// Build the slab chain producing `out_iv` at the end of `layers`, whose
+/// per-layer input heights are `heights[0..layers.len()]`.
+///
+/// Panics (debug assert in release: returns garbage-free chain) if the
+/// forward replay does not reproduce the backward intervals — that would
+/// mean the calculus itself is broken, not the caller.
+pub fn slab_chain(layers: &[Layer], heights: &[usize], out_iv: Interval) -> SlabChain {
+    assert_eq!(heights.len(), layers.len() + 1);
+    // walk backward collecting required input intervals
+    let mut ivs: Vec<(Interval, usize, usize)> = vec![(out_iv, 0, 0)];
+    let mut iv = out_iv;
+    for idx in (0..layers.len()).rev() {
+        let (niv, pt, pb) = back_interval(&layers[idx], iv, heights[idx]);
+        ivs.push((niv, pt, pb));
+        iv = niv;
+    }
+    ivs.reverse(); // ivs[i] = (interval at layer-i input, pads of layer i)
+    let mut chain = SlabChain::with_capacity(layers.len());
+    for (idx, layer) in layers.iter().enumerate() {
+        let (in_iv, pt, pb) = ivs[idx];
+        let produced = fwd_interval(layer, in_iv, pt, pb);
+        let expected = ivs[idx + 1].0;
+        assert_eq!(
+            produced, expected,
+            "interval calculus broke at layer {idx}: {produced:?} != {expected:?}"
+        );
+        chain.push(SlabLayer {
+            in_iv,
+            out_iv: produced,
+            pad_top: pt,
+            pad_bottom: pb,
+        });
+    }
+    chain
+}
+
+/// Even division of `h` rows into `n` intervals (paper §IV-B: divide the
+/// last layer evenly, deconvolve to size the input slabs).
+pub fn even_partition(h: usize, n: usize) -> Vec<Interval> {
+    assert!(n >= 1 && n <= h, "N={n} rows over H={h}");
+    let cuts: Vec<usize> = (0..=n).map(|i| (i * h + n / 2) / n).collect();
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        assert!(cuts[i] < cuts[i + 1], "empty row {i} in partition of {h} by {n}");
+        out.push((cuts[i], cuts[i + 1]));
+    }
+    out
+}
+
+/// Overlap (replicated input rows) between adjacent slabs — Eq. (15)'s
+/// o_r^0, computed exactly instead of by the closed-form recursion.
+pub fn overlap_rows(layers: &[Layer], heights: &[usize], ivs: &[Interval]) -> Vec<usize> {
+    let mut out = Vec::new();
+    for r in 0..ivs.len().saturating_sub(1) {
+        let a = slab_chain(layers, heights, ivs[r])[0].in_iv;
+        let b = slab_chain(layers, heights, ivs[r + 1])[0].in_iv;
+        out.push(a.1.saturating_sub(b.0));
+    }
+    out
+}
+
+/// 2PS ownership boundaries per layer input, top-down (Eq. (11)/(13)/(14)).
+///
+/// `out_cuts` are the boundaries at the segment output (e.g. `[0, 4, 8]`).
+/// Returns `bounds[layer_input_idx][cut_idx]`.
+pub fn tps_boundaries(layers: &[Layer], heights: &[usize], out_cuts: &[usize]) -> Vec<Vec<usize>> {
+    assert_eq!(heights.len(), layers.len() + 1);
+    assert_eq!(out_cuts[0], 0);
+    assert_eq!(*out_cuts.last().unwrap(), *heights.last().unwrap());
+    let mut bounds = vec![out_cuts.to_vec()];
+    let mut cuts = out_cuts.to_vec();
+    for idx in (0..layers.len()).rev() {
+        let l = &layers[idx];
+        let h_in = heights[idx];
+        cuts = cuts
+            .iter()
+            .map(|&c| {
+                if c == 0 {
+                    0
+                } else {
+                    h_in.min(((c - 1) * l.s + l.k).saturating_sub(l.p))
+                }
+            })
+            .collect();
+        bounds.push(cuts.clone());
+    }
+    bounds.reverse();
+    bounds
+}
+
+/// Rows of each layer input that 2PS row `r` reuses from row r−1's cache:
+/// `[needed_start, own_start)` — (k − s) rows interior, 0 for pools.
+pub fn tps_cache_rows(
+    layers: &[Layer],
+    bounds: &[Vec<usize>],
+    r: usize,
+) -> Vec<Option<(usize, usize)>> {
+    assert!(r >= 1);
+    layers
+        .iter()
+        .enumerate()
+        .map(|(idx, l)| {
+            let own_start = bounds[idx][r];
+            let out_start = bounds[idx + 1][r];
+            let needed = (out_start * l.s).saturating_sub(l.p);
+            if needed < own_start {
+                Some((needed, own_start))
+            } else {
+                None
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Layer;
+
+    fn conv3() -> Layer {
+        Layer::conv(8, 8, 3, 1, 1)
+    }
+
+    fn pool2() -> Layer {
+        Layer::pool(8, 2)
+    }
+
+    #[test]
+    fn back_interval_interior_and_edges() {
+        let l = conv3();
+        // interior: [2,4) of a 3x3 SAME conv needs [1,5), no padding
+        assert_eq!(back_interval(&l, (2, 4), 8), ((1, 5), 0, 0));
+        // top edge: [0,2) needs [0,3) + 1 row of padding at the top
+        assert_eq!(back_interval(&l, (0, 2), 8), ((0, 3), 1, 0));
+        // bottom edge
+        assert_eq!(back_interval(&l, (6, 8), 8), ((5, 8), 0, 1));
+        // pool: no dependency across row boundary
+        assert_eq!(back_interval(&pool2(), (1, 3), 8), ((2, 6), 0, 0));
+    }
+
+    #[test]
+    fn fwd_is_exact_inverse_of_back() {
+        for layer in [conv3(), pool2(), Layer::conv(8, 8, 7, 2, 3), Layer::conv(8, 8, 1, 1, 0)] {
+            let h_in = 64;
+            let h_out = crate::shapes::conv_out(h_in, layer.k, layer.s, layer.p);
+            for a in 0..h_out {
+                for b in (a + 1)..=h_out {
+                    let (iv, pt, pb) = back_interval(&layer, (a, b), h_in);
+                    assert_eq!(
+                        fwd_interval(&layer, iv, pt, pb),
+                        (a, b),
+                        "layer {layer:?} iv ({a},{b})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn slab_chain_minivgg_matches_known_geometry() {
+        // segment A of the live MiniVGG plan: conv-pool-conv-pool over H=32.
+        let layers = vec![
+            Layer::conv(3, 16, 3, 1, 1),
+            Layer::pool(16, 2),
+            Layer::conv(16, 32, 3, 1, 1),
+            Layer::pool(32, 2),
+        ];
+        let heights = vec![32, 32, 16, 16, 8];
+        // values cross-checked against python rowplan (and the manifest)
+        let chain = slab_chain(&layers, &heights, (0, 2));
+        assert_eq!(chain[0].in_iv, (0, 11));
+        let chain = slab_chain(&layers, &heights, (2, 4));
+        assert_eq!(chain[0].in_iv, (5, 19));
+        let chain = slab_chain(&layers, &heights, (6, 8));
+        assert_eq!(chain[0].in_iv, (21, 32));
+        assert_eq!(chain.last().unwrap().out_iv, (6, 8));
+    }
+
+    #[test]
+    fn even_partition_covers_and_is_monotone() {
+        for h in [7usize, 8, 13, 224] {
+            for n in 1..=h.min(14) {
+                let ivs = even_partition(h, n);
+                assert_eq!(ivs[0].0, 0);
+                assert_eq!(ivs.last().unwrap().1, h);
+                for w in ivs.windows(2) {
+                    assert_eq!(w[0].1, w[1].0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tps_boundaries_match_paper_recursion() {
+        // full-depth MiniVGG, N=2, cuts at the conv4 output [0,4,8]:
+        // the backward recursion must give own-intervals [0,27) / [27,32)
+        // at the input (cross-checked with the AOT manifest).
+        let layers = vec![
+            Layer::conv(3, 16, 3, 1, 1),
+            Layer::pool(16, 2),
+            Layer::conv(16, 32, 3, 1, 1),
+            Layer::pool(32, 2),
+            Layer::conv(32, 64, 3, 1, 1),
+            Layer::conv(64, 64, 3, 1, 1),
+        ];
+        let heights = vec![32, 32, 16, 16, 8, 8, 8];
+        let bounds = tps_boundaries(&layers, &heights, &[0, 4, 8]);
+        assert_eq!(bounds[0], vec![0, 27, 32]);
+        // cache sizes are k - s = 2 rows at interior conv layers, none at pools
+        let caches = tps_cache_rows(&layers, &bounds, 1);
+        assert_eq!(caches[0], Some((25, 27)));
+        assert_eq!(caches[1], None); // pool
+        assert_eq!(caches[2], Some((11, 13)));
+        assert_eq!(caches[3], None); // pool
+        assert_eq!(caches[4], Some((4, 6)));
+        assert_eq!(caches[5], Some((3, 5)));
+    }
+
+    #[test]
+    fn overlap_grows_with_depth() {
+        let mk = |n_conv: usize| -> (Vec<Layer>, Vec<usize>) {
+            let layers: Vec<Layer> = (0..n_conv).map(|_| conv3()).collect();
+            let heights = vec![64; n_conv + 1];
+            (layers, heights)
+        };
+        let (l1, h1) = mk(2);
+        let (l2, h2) = mk(6);
+        let ivs = even_partition(64, 4);
+        let o_small = overlap_rows(&l1, &h1, &ivs)[1];
+        let o_big = overlap_rows(&l2, &h2, &ivs)[1];
+        assert!(o_big > o_small, "{o_big} vs {o_small}");
+        // k=3,s=1 stack: halo is exactly `depth` rows each side → 2*depth shared
+        assert_eq!(o_small, 4);
+        assert_eq!(o_big, 12);
+    }
+}

@@ -1,0 +1,41 @@
+//! Convolution shape arithmetic and the row-interval (halo) calculus.
+//!
+//! This is the Rust mirror of `python/compile/rowplan.py` — the generalized
+//! form of the paper's Eq. (11)/(13)/(14)/(15) height recursions.  Both
+//! sides are cross-checked against the AOT manifest in integration tests
+//! (`rust/tests/manifest_crosscheck.rs`).
+
+pub mod interval;
+
+pub use interval::{
+    back_interval, even_partition, fwd_interval, overlap_rows, slab_chain, tps_boundaries,
+    tps_cache_rows, Interval, SlabChain, SlabLayer,
+};
+
+/// Output spatial size of a k/s/p window over `n` input positions.
+pub fn conv_out(n: usize, k: usize, s: usize, p: usize) -> usize {
+    assert!(
+        n + 2 * p >= k,
+        "window {k} larger than padded input {n}+2*{p}"
+    );
+    (n + 2 * p - k) / s + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_out_same_and_valid() {
+        assert_eq!(conv_out(32, 3, 1, 1), 32); // SAME 3x3
+        assert_eq!(conv_out(32, 3, 1, 0), 30); // VALID 3x3
+        assert_eq!(conv_out(32, 2, 2, 0), 16); // pool 2/2
+        assert_eq!(conv_out(224, 7, 2, 3), 112); // ResNet stem
+    }
+
+    #[test]
+    #[should_panic]
+    fn conv_out_too_small() {
+        conv_out(1, 3, 1, 0);
+    }
+}

@@ -1,0 +1,156 @@
+//! Integration: real PJRT executions over the AOT bundle.
+//!
+//! Requires `make artifacts`; tests no-op (pass) if the bundle is absent so
+//! `cargo test` stays green pre-AOT, but the Makefile's `test` target
+//! always builds artifacts first.
+
+use lr_cnn::coordinator::{Mode, Trainer};
+use lr_cnn::data::SyntheticCorpus;
+use lr_cnn::error::Error;
+use lr_cnn::model::minivgg;
+use lr_cnn::runtime::{Runtime, Tensor};
+
+use std::path::{Path, PathBuf};
+
+fn artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn runtime() -> Option<Runtime> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        return None;
+    }
+    Some(Runtime::open(dir).expect("bundle present but unreadable"))
+}
+
+fn batch(rt: &Runtime, step: u64) -> (Tensor, Tensor) {
+    let m = &rt.manifest.model;
+    let corpus = SyntheticCorpus::new(m.n_classes, 3, m.h, m.w, 99);
+    let (x, y, _) = corpus.batch(step, m.batch);
+    (x, y)
+}
+
+#[test]
+fn all_coordinated_modes_agree_with_base() {
+    let Some(rt) = runtime() else { return };
+    let (x, y) = batch(&rt, 0);
+    let mut losses = Vec::new();
+    for mode in [Mode::Base, Mode::RowHybrid, Mode::Tps] {
+        let mut tr = Trainer::new(&rt, mode, 0.05, 42);
+        let s = tr.step(&x, &y).unwrap();
+        losses.push(s.loss);
+    }
+    // §III-B: proper inter-row coordination is *exact* — losses match
+    assert!((losses[0] - losses[1]).abs() < 1e-4, "{losses:?}");
+    assert!((losses[0] - losses[2]).abs() < 1e-4, "{losses:?}");
+}
+
+#[test]
+fn naive_mode_diverges_from_base() {
+    let Some(rt) = runtime() else { return };
+    let (x, y) = batch(&rt, 0);
+    let base = Trainer::new(&rt, Mode::Base, 0.05, 42).step(&x, &y).unwrap().loss;
+    let naive = Trainer::new(&rt, Mode::Naive, 0.05, 42).step(&x, &y).unwrap().loss;
+    // same init, but closed padding perturbs the forward — Fig. 3(b)
+    assert!((base - naive).abs() > 1e-3, "base {base} vs naive {naive}");
+}
+
+#[test]
+fn row_forward_is_bit_near_column() {
+    let Some(rt) = runtime() else { return };
+    let (x, _) = batch(&rt, 1);
+    let mut row = Trainer::new(&rt, Mode::RowHybrid, 0.05, 7);
+    let mut tps = Trainer::new(&rt, Mode::Tps, 0.05, 7);
+    let mut col = Trainer::new(&rt, Mode::Base, 0.05, 7);
+    let zr = row.forward(&x).unwrap();
+    let zt = tps.forward(&x).unwrap();
+    let zc = col.forward(&x).unwrap();
+    let d1 = zr.data.iter().zip(&zc.data).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+    let d2 = zt.data.iter().zip(&zc.data).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+    assert!(d1 < 1e-4, "OverL-H fwd diff {d1}");
+    assert!(d2 < 1e-4, "2PS fwd diff {d2}");
+}
+
+#[test]
+fn training_reduces_loss_row_centric() {
+    let Some(rt) = runtime() else { return };
+    let m = rt.manifest.model.clone();
+    let corpus = SyntheticCorpus::new(m.n_classes, 3, m.h, m.w, 5);
+    let mut tr = Trainer::new(&rt, Mode::RowHybrid, 0.02, 3);
+    let mut first = 0.0;
+    let mut last = 0.0;
+    for s in 0..40u64 {
+        let (x, y) = {
+            let (x, y, _) = corpus.batch(s, m.batch);
+            (x, y)
+        };
+        let stats = tr.step(&x, &y).unwrap();
+        if s == 0 {
+            first = stats.loss;
+        }
+        last = stats.loss;
+        assert!(stats.loss.is_finite());
+    }
+    assert!(
+        last < first * 0.8,
+        "loss should fall: {first} -> {last} after 40 steps"
+    );
+}
+
+#[test]
+fn tracker_shows_row_centric_holding_less_than_omega() {
+    let Some(rt) = runtime() else { return };
+    let (x, y) = batch(&rt, 2);
+    let mut tr = Trainer::new(&rt, Mode::RowHybrid, 0.05, 11);
+    let stats = tr.step(&x, &y).unwrap();
+    // Ω for minivgg at B=8, 32x32 — what column-centric training holds
+    let net = minivgg();
+    let omega = net.total_feature_bytes(rt.manifest.model.batch, 32, 32);
+    assert!(
+        stats.peak_bytes < omega,
+        "coordinator peak {} must undercut Ω {}",
+        stats.peak_bytes,
+        omega
+    );
+}
+
+#[test]
+fn shape_mismatch_is_a_typed_artifact_error() {
+    let Some(rt) = runtime() else { return };
+    let bad = Tensor::zeros(&[1, 3, 32, 32]); // wrong batch
+    let m = rt.manifest.model.clone();
+    let p = lr_cnn::coordinator::ParamSet::init(&m, 0);
+    let mut args: Vec<&Tensor> = vec![&bad];
+    args.extend(p.conv_slice(&m).iter());
+    match rt.execute("base_fwd", &args) {
+        Err(Error::Artifact(msg)) => assert!(msg.contains("shape"), "{msg}"),
+        other => panic!("expected Artifact error, got {other:?}"),
+    }
+}
+
+#[test]
+fn wrong_arity_is_a_typed_artifact_error() {
+    let Some(rt) = runtime() else { return };
+    match rt.execute("head", &[]) {
+        Err(Error::Artifact(msg)) => assert!(msg.contains("inputs"), "{msg}"),
+        other => panic!("expected Artifact error, got {other:?}"),
+    }
+}
+
+#[test]
+fn missing_bundle_is_a_typed_error() {
+    match Runtime::open("/nonexistent/artifact/dir") {
+        Err(Error::Artifact(msg)) => assert!(msg.contains("make artifacts"), "{msg}"),
+        other => panic!("expected Artifact error, got {:?}", other.is_ok()),
+    }
+}
+
+#[test]
+fn unknown_executable_is_a_typed_error() {
+    let Some(rt) = runtime() else { return };
+    match rt.execute("no_such_exe", &[]) {
+        Err(Error::Artifact(msg)) => assert!(msg.contains("no_such_exe"), "{msg}"),
+        other => panic!("expected Artifact error, got {other:?}"),
+    }
+}

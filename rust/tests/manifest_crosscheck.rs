@@ -1,0 +1,125 @@
+//! Cross-check the Rust interval calculus (shapes::interval) against the
+//! geometry the Python side (rowplan.py) baked into the AOT manifest.
+//! The two implementations of Eq. (11)–(15) must agree exactly — this is
+//! what licenses the Rust planner to reason about artifacts it didn't
+//! generate.
+
+use lr_cnn::model::{minivgg, Layer};
+use lr_cnn::runtime::Manifest;
+use lr_cnn::shapes;
+
+use std::path::Path;
+
+fn manifest() -> Option<Manifest> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Manifest::load(&dir).ok()
+}
+
+fn layers_from_manifest(man: &Manifest) -> Vec<Layer> {
+    man.model
+        .layers
+        .iter()
+        .map(|l| {
+            if l.kind == "conv" {
+                Layer::conv(l.c_in, l.c_out, l.k, l.s, l.p)
+            } else {
+                Layer::pool(l.c_in, l.k)
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn model_info_matches_zoo_minivgg() {
+    let Some(man) = manifest() else { return };
+    let net = minivgg();
+    assert_eq!(man.model.heights, net.heights(32));
+    assert_eq!(man.model.fc_in, net.fc_in(32, 32));
+    let layers = layers_from_manifest(&man);
+    assert_eq!(layers, net.layers);
+}
+
+#[test]
+fn segment_slab_chains_match_manifest() {
+    let Some(man) = manifest() else { return };
+    let layers = layers_from_manifest(&man);
+    let split = man.plan.ckpt_split;
+    let heights = man.model.heights.clone();
+    for (si, seg) in man.plan.segments.iter().enumerate() {
+        let (lo, hi) = if si == 0 { (0, split) } else { (split, layers.len()) };
+        let seg_layers = &layers[lo..hi];
+        let seg_heights = &heights[lo..=hi];
+        for row in &seg.rows {
+            let chain = shapes::slab_chain(
+                seg_layers,
+                seg_heights,
+                (row.out_iv[0], row.out_iv[1]),
+            );
+            assert_eq!(
+                (chain[0].in_iv.0, chain[0].in_iv.1),
+                (row.in_iv[0], row.in_iv[1]),
+                "segment {si} row {:?}",
+                row.out_iv
+            );
+            for (link, mlink) in chain.iter().zip(&row.chain) {
+                assert_eq!(link.in_iv, (mlink.in_iv[0], mlink.in_iv[1]));
+                assert_eq!(link.out_iv, (mlink.out_iv[0], mlink.out_iv[1]));
+                assert_eq!(link.pad_top, mlink.pad_top);
+                assert_eq!(link.pad_bottom, mlink.pad_bottom);
+            }
+        }
+    }
+}
+
+#[test]
+fn tps_bounds_and_caches_match_manifest() {
+    let Some(man) = manifest() else { return };
+    let layers = layers_from_manifest(&man);
+    let heights = man.model.heights.clone();
+    let bounds = shapes::tps_boundaries(&layers, &heights, &man.plan.tps.cuts);
+    for row in &man.plan.tps.rows {
+        assert_eq!(bounds.len(), row.bounds.len());
+        for (ours, theirs) in bounds.iter().zip(&row.bounds) {
+            assert_eq!(ours, theirs);
+        }
+    }
+    // caches of row 1
+    let caches = shapes::tps_cache_rows(&layers, &bounds, 1);
+    let m_caches = &man.plan.tps.rows[1].cache_in;
+    for (ours, theirs) in caches.iter().zip(m_caches) {
+        match (ours, theirs) {
+            (Some((a, b)), Some([ma, mb])) => {
+                // manifest stores only nonempty caches as Some
+                if b > a {
+                    assert_eq!((*a, *b), (*ma, *mb));
+                }
+            }
+            (None, None) => {}
+            (Some((a, b)), None) => assert_eq!(a, b, "empty cache stored as None"),
+            (None, Some(c)) => panic!("rust says no cache, manifest says {c:?}"),
+        }
+    }
+}
+
+#[test]
+fn executable_shapes_match_slab_geometry() {
+    let Some(man) = manifest() else { return };
+    let b = man.model.batch;
+    for e in &man.executables {
+        if e.kind == "row_fwd" {
+            let seg = man
+                .plan
+                .segments
+                .iter()
+                .find(|s| Some(&s.name) == e.segment.as_ref())
+                .unwrap();
+            let row = &seg.rows[e.row.unwrap()];
+            let h = row.in_iv[1] - row.in_iv[0];
+            assert_eq!(e.inputs[0][0], b);
+            assert_eq!(e.inputs[0][1], seg.c_in);
+            assert_eq!(e.inputs[0][2], h);
+            let oh = row.out_iv[1] - row.out_iv[0];
+            assert_eq!(e.outputs[0][2], oh);
+        }
+    }
+}
