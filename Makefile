@@ -1,0 +1,28 @@
+# LR-CNN build/test/bench entry points.
+#
+# The Rust crate builds fully offline (no PJRT) by default; `make
+# artifacts` lowers the JAX/Pallas model to HLO text for the live path
+# (requires the Python toolchain + an `xla`-enabled rebuild, see
+# rust/Cargo.toml).
+
+RUST_MANIFEST := rust/Cargo.toml
+
+.PHONY: build test artifacts bench-hotpath bench-hotpath-quick
+
+build:
+	cargo build --release --manifest-path $(RUST_MANIFEST)
+
+test:
+	cargo test -q --manifest-path $(RUST_MANIFEST)
+
+artifacts:
+	cd python/compile && python3 aot.py --out-dir ../../rust/artifacts
+
+# Full hot-path measurement; writes rust/BENCH_l3_hotpath.json
+# (live-step benches skip gracefully when artifacts are absent).
+bench-hotpath:
+	cargo bench --bench l3_hotpath --manifest-path $(RUST_MANIFEST)
+
+# CI smoke variant: reduced iteration counts, same JSON schema.
+bench-hotpath-quick:
+	BENCH_QUICK=1 cargo bench --bench l3_hotpath --manifest-path $(RUST_MANIFEST)

@@ -28,7 +28,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     ];
     let mut curves: Vec<Vec<f32>> = Vec::new();
     for (label, mode) in branches {
-        let mut tr = Trainer::new(&rt, mode, 0.02, 42); // identical init
+        let mut tr = Trainer::new(&rt, mode, 0.02, 42)?; // identical init
         let mut curve = Vec::new();
         for e in 0..epochs {
             let mut sum = 0.0f32;

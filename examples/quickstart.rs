@@ -15,8 +15,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
 
     // row-centric forward == column-centric forward (the paper's §III-B
     // coordination guarantee)
-    let mut row = Trainer::new(&rt, Mode::RowHybrid, 0.02, 42);
-    let mut col = Trainer::new(&rt, Mode::Base, 0.02, 42);
+    let mut row = Trainer::new(&rt, Mode::RowHybrid, 0.02, 42)?;
+    let mut col = Trainer::new(&rt, Mode::Base, 0.02, 42)?;
     let z_row = row.forward(&x)?;
     let z_col = col.forward(&x)?;
     let diff = z_row.data.iter().zip(&z_col.data).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);

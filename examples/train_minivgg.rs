@@ -63,7 +63,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     );
     let m = rt.manifest.model.clone();
     let corpus = SyntheticCorpus::new(m.n_classes, 3, m.h, m.w, 1234);
-    let mut tr = Trainer::new(&rt, mode, 0.02, 7);
+    let mut tr = Trainer::new(&rt, mode, 0.02, 7)?;
 
     let mut losses = Vec::new();
     let mut peak = 0u64;

@@ -20,4 +20,4 @@ pub mod trainer;
 
 pub use optim::{Optimizer, OptimizerKind};
 pub use params::ParamSet;
-pub use trainer::{Mode, StepStats, Trainer};
+pub use trainer::{naive_row_extents, Mode, StepPlan, StepStats, Trainer};

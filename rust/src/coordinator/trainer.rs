@@ -1,11 +1,23 @@
 //! The live training loop over PJRT artifacts (Algorithm 1 realized).
+//!
+//! ## Step-plan architecture (docs/HOTPATH.md)
+//!
+//! All per-row bookkeeping that used to be re-derived every step — manifest
+//! name formatting, `Segment`/`TpsPlan` clones, tracker-key strings — is
+//! now computed **once** in [`StepPlan::build`] when the [`Trainer`] is
+//! constructed: executable names resolve to integer [`ExecHandle`]s, row
+//! intervals are copied out of the manifest, and every tracker buffer/phase
+//! name is interned to a [`BufId`].  `Trainer::step` then walks the
+//! prebuilt table performing **zero `format!`/`String` allocations** and,
+//! thanks to [`TensorView`], zero input-slab copies.
 
 use std::time::Instant;
 
 use crate::data::SyntheticCorpus;
 use crate::error::{Error, Result};
-use crate::memory::Tracker;
-use crate::runtime::{Runtime, Tensor};
+use crate::memory::{BufId, Tracker};
+use crate::runtime::manifest::Manifest;
+use crate::runtime::{ExecHandle, Runtime, Tensor, TensorView};
 
 use super::{Optimizer, ParamSet};
 
@@ -44,31 +56,317 @@ pub struct StepStats {
     pub executions: u64,
 }
 
+/// Row extents for the naive equal-split ablation.
+///
+/// The AOT artifacts are compiled for *equal* slabs (`aot.py` asserts
+/// `h % n_rows == 0`), so an uneven split is a planning error — the seed
+/// code silently truncated the remainder rows instead, which both
+/// under-trained and disagreed with the compiled shapes.
+pub fn naive_row_extents(h: usize, n: usize) -> Result<Vec<[usize; 2]>> {
+    if n == 0 || h == 0 {
+        return Err(Error::InfeasiblePlan(format!(
+            "naive split of H={h} into n={n} rows"
+        )));
+    }
+    if h % n != 0 {
+        return Err(Error::InfeasiblePlan(format!(
+            "naive(w/o sharing) requires n | H: H={h}, n={n} leaves remainder {} — \
+             the AOT artifacts are compiled for equal slabs",
+            h % n
+        )));
+    }
+    let rh = h / n;
+    Ok((0..n).map(|r| [r * rh, (r + 1) * rh]).collect())
+}
+
+/// One row of a segment in the prebuilt execution table.
+#[derive(Debug, Clone)]
+struct RowPlan {
+    fwd: ExecHandle,
+    bwd: ExecHandle,
+    in_iv: [usize; 2],
+    out_iv: [usize; 2],
+    fp_phase: BufId,   // "fp.{seg}.row{r}"
+    bp_phase: BufId,   // "bp.{seg}.row{r}"
+    slab_id: BufId,    // "fp.{seg}.slab{r}"
+    z_id: BufId,       // "fp.{seg}.z{r}"
+    bp_slab_id: BufId, // "bp.{seg}.slab{r}"
+}
+
+#[derive(Debug, Clone)]
+struct SegPlan {
+    param_lo: usize,
+    param_hi: usize,
+    rows: Vec<RowPlan>,
+    out_id: BufId, // "fp.{seg}.out"
+}
+
+#[derive(Debug, Clone)]
+struct TpsRowPlan {
+    fwd: ExecHandle,
+    own_iv: [usize; 2],
+    phase: BufId,           // "fp.tps.row{r}"
+    own_id: BufId,          // "tps.own{r}"
+    z_id: BufId,            // "tps.z{r}"
+    cache_ids: Vec<BufId>,  // "tps.cache{r}.{i}"
+}
+
+#[derive(Debug, Clone)]
+struct TpsPlan {
+    rows: Vec<TpsRowPlan>,
+    zl_id: BufId, // "tps.zL"
+}
+
+#[derive(Debug, Clone)]
+struct BasePlan {
+    step: ExecHandle,
+    fwd: ExecHandle,
+    phase: BufId, // "base.step"
+    n_conv: usize,
+}
+
+#[derive(Debug, Clone)]
+struct HybridPlan {
+    segs: Vec<SegPlan>, // [segA (below checkpoint), segB (above)]
+    head: ExecHandle,
+    head_phase: BufId, // "head"
+    dzl_id: BufId,     // "dzL"
+    dzck_id: BufId,    // "dzck"
+    n_conv: usize,
+    /// `Some` for [`Mode::Tps`]: forward runs 2PS over the full depth
+    tps: Option<TpsPlan>,
+}
+
+#[derive(Debug, Clone)]
+struct NaiveRowPlan {
+    fwd: ExecHandle,
+    bwd: ExecHandle,
+    x_iv: [usize; 2],
+    z_iv: [usize; 2],
+}
+
+#[derive(Debug, Clone)]
+struct NaivePlan {
+    rows: Vec<NaiveRowPlan>,
+    head: ExecHandle,
+    fp_phase: BufId, // "naive.fp"
+    bp_phase: BufId, // "naive.bp"
+    zl_id: BufId,    // "naive.zL"
+    n_conv: usize,
+}
+
+#[derive(Debug, Clone)]
+enum PlanKind {
+    Base(BasePlan),
+    Hybrid(HybridPlan),
+    Naive(NaivePlan),
+    /// The naive split is infeasible for this manifest (uneven rows); the
+    /// error is surfaced at `step`/`forward` time so `Trainer` construction
+    /// for the other modes is unaffected.
+    NaiveInfeasible(String),
+}
+
+/// Prebuilt execution table for one [`Mode`]: everything `step` needs,
+/// resolved once.
+#[derive(Debug, Clone)]
+pub struct StepPlan {
+    kind: PlanKind,
+}
+
+impl StepPlan {
+    /// Resolve executables, row geometry and tracker IDs for `mode`.
+    /// String formatting and name lookup happen here — never in `step`.
+    pub fn build(man: &Manifest, mode: Mode, tracker: &mut Tracker) -> Result<StepPlan> {
+        let h = |name: &str| -> Result<ExecHandle> { man.index_of(name).map(ExecHandle) };
+        let n_conv = man.model.n_conv_params;
+        let kind = match mode {
+            Mode::Base => PlanKind::Base(BasePlan {
+                step: h("base_step")?,
+                fwd: h("base_fwd")?,
+                phase: tracker.intern("base.step"),
+                n_conv,
+            }),
+            Mode::RowHybrid | Mode::Tps => {
+                if man.plan.segments.len() != 2 {
+                    return Err(Error::Artifact(format!(
+                        "hybrid plan expects 2 segments, manifest has {}",
+                        man.plan.segments.len()
+                    )));
+                }
+                let mut segs = Vec::with_capacity(man.plan.segments.len());
+                for seg in &man.plan.segments {
+                    let mut rows = Vec::with_capacity(seg.rows.len());
+                    for (r, row) in seg.rows.iter().enumerate() {
+                        rows.push(RowPlan {
+                            fwd: h(&format!("{}_row{r}_fwd", seg.name))?,
+                            bwd: h(&format!("{}_row{r}_bwd", seg.name))?,
+                            in_iv: row.in_iv,
+                            out_iv: row.out_iv,
+                            fp_phase: tracker.intern(format!("fp.{}.row{r}", seg.name)),
+                            bp_phase: tracker.intern(format!("bp.{}.row{r}", seg.name)),
+                            slab_id: tracker.intern(format!("fp.{}.slab{r}", seg.name)),
+                            z_id: tracker.intern(format!("fp.{}.z{r}", seg.name)),
+                            bp_slab_id: tracker.intern(format!("bp.{}.slab{r}", seg.name)),
+                        });
+                    }
+                    segs.push(SegPlan {
+                        param_lo: seg.param_lo,
+                        param_hi: seg.param_hi,
+                        rows,
+                        out_id: tracker.intern(format!("fp.{}.out", seg.name)),
+                    });
+                }
+                let tps = if mode == Mode::Tps {
+                    let mut rows = Vec::with_capacity(man.plan.tps.rows.len());
+                    for (r, row) in man.plan.tps.rows.iter().enumerate() {
+                        let fwd = h(&format!("tps_row{r}_fwd"))?;
+                        // outputs are [z, caches...]: cache count from the
+                        // executable signature, ids interned up front
+                        let n_caches =
+                            man.executables[fwd.index()].outputs.len().saturating_sub(1);
+                        rows.push(TpsRowPlan {
+                            fwd,
+                            own_iv: row.own_iv,
+                            phase: tracker.intern(format!("fp.tps.row{r}")),
+                            own_id: tracker.intern(format!("tps.own{r}")),
+                            z_id: tracker.intern(format!("tps.z{r}")),
+                            cache_ids: (0..n_caches)
+                                .map(|i| tracker.intern(format!("tps.cache{r}.{i}")))
+                                .collect(),
+                        });
+                    }
+                    Some(TpsPlan {
+                        rows,
+                        zl_id: tracker.intern("tps.zL"),
+                    })
+                } else {
+                    None
+                };
+                PlanKind::Hybrid(HybridPlan {
+                    segs,
+                    head: h("head")?,
+                    head_phase: tracker.intern("head"),
+                    dzl_id: tracker.intern("dzL"),
+                    dzck_id: tracker.intern("dzck"),
+                    n_conv,
+                    tps,
+                })
+            }
+            Mode::Naive => {
+                let n = man.plan.naive_rows;
+                let z_h = man.model.heights.last().copied().unwrap_or(0);
+                match (
+                    naive_row_extents(man.model.h, n),
+                    naive_row_extents(z_h, n),
+                ) {
+                    (Ok(x_ivs), Ok(z_ivs)) => {
+                        let mut rows = Vec::with_capacity(n);
+                        for r in 0..n {
+                            rows.push(NaiveRowPlan {
+                                fwd: h(&format!("naive_row{r}_fwd"))?,
+                                bwd: h(&format!("naive_row{r}_bwd"))?,
+                                x_iv: x_ivs[r],
+                                z_iv: z_ivs[r],
+                            });
+                        }
+                        PlanKind::Naive(NaivePlan {
+                            rows,
+                            head: h("head")?,
+                            fp_phase: tracker.intern("naive.fp"),
+                            bp_phase: tracker.intern("naive.bp"),
+                            zl_id: tracker.intern("naive.zL"),
+                            n_conv,
+                        })
+                    }
+                    (Err(e), _) | (_, Err(e)) => PlanKind::NaiveInfeasible(e.to_string()),
+                }
+            }
+        };
+        Ok(StepPlan { kind })
+    }
+
+    /// Every executable the plan will run — what the trainer warm-compiles
+    /// at construction.
+    pub fn handles(&self) -> Vec<ExecHandle> {
+        let mut out = Vec::new();
+        match &self.kind {
+            PlanKind::Base(bp) => out.extend([bp.step, bp.fwd]),
+            PlanKind::Hybrid(hp) => {
+                for seg in &hp.segs {
+                    for rp in &seg.rows {
+                        out.push(rp.fwd);
+                        out.push(rp.bwd);
+                    }
+                }
+                if let Some(tp) = &hp.tps {
+                    for rp in &tp.rows {
+                        out.push(rp.fwd);
+                    }
+                }
+                out.push(hp.head);
+            }
+            PlanKind::Naive(np) => {
+                for rp in &np.rows {
+                    out.push(rp.fwd);
+                    out.push(rp.bwd);
+                }
+                out.push(np.head);
+            }
+            PlanKind::NaiveInfeasible(_) => {}
+        }
+        out
+    }
+}
+
 /// Row-centric trainer over an artifact bundle.
 pub struct Trainer<'r> {
     pub rt: &'r Runtime,
     pub params: ParamSet,
     pub optimizer: Optimizer,
-    pub mode: Mode,
+    /// Fixed at construction: the [`StepPlan`] is built for this mode, so
+    /// the field is read-only (swapping modes means a new `Trainer`).
+    mode: Mode,
     pub tracker: Tracker,
+    plan: StepPlan,
 }
 
 impl<'r> Trainer<'r> {
-    pub fn new(rt: &'r Runtime, mode: Mode, lr: f32, seed: u64) -> Trainer<'r> {
+    pub fn new(rt: &'r Runtime, mode: Mode, lr: f32, seed: u64) -> Result<Trainer<'r>> {
         Trainer::with_optimizer(rt, mode, Optimizer::sgd(lr), seed)
     }
 
     /// Use a stateful optimizer (momentum/Adam); its state bytes belong to
     /// ξ in the planners' accounting (`Optimizer::state_bytes`).
-    pub fn with_optimizer(rt: &'r Runtime, mode: Mode, optimizer: Optimizer, seed: u64) -> Trainer<'r> {
+    ///
+    /// Builds the mode's [`StepPlan`] here — executable resolution, row
+    /// geometry and tracker-ID interning all happen once, not per step.
+    pub fn with_optimizer(
+        rt: &'r Runtime,
+        mode: Mode,
+        optimizer: Optimizer,
+        seed: u64,
+    ) -> Result<Trainer<'r>> {
         let params = ParamSet::init(&rt.manifest.model, seed);
-        Trainer {
+        let mut tracker = Tracker::new();
+        let plan = StepPlan::build(&rt.manifest, mode, &mut tracker)?;
+        // warm start: compile every executable the plan references now, so
+        // no step (and no step timing) ever includes a first-use compile
+        for h in plan.handles() {
+            rt.ensure_compiled_h(h)?;
+        }
+        Ok(Trainer {
             rt,
             params,
             optimizer,
             mode,
-            tracker: Tracker::new(),
-        }
+            tracker,
+            plan,
+        })
+    }
+
+    /// The execution mode the step plan was built for.
+    pub fn mode(&self) -> Mode {
+        self.mode
     }
 
     /// One training step on (x, y); returns the loss.
@@ -76,12 +374,19 @@ impl<'r> Trainer<'r> {
         let t0 = Instant::now();
         let exec0 = self.rt.stats().executions;
         // activation buffers are strictly per-step; start a fresh ledger
-        self.tracker = Tracker::new();
-        let (loss, grads) = match self.mode {
-            Mode::Base => self.step_base(x, y1h)?,
-            Mode::RowHybrid => self.step_row_hybrid(x, y1h, false)?,
-            Mode::Tps => self.step_row_hybrid(x, y1h, true)?,
-            Mode::Naive => self.step_naive(x, y1h)?,
+        // (the interner survives — plan BufIds stay valid)
+        self.tracker.reset();
+        let (loss, grads) = match &self.plan.kind {
+            PlanKind::Base(bp) => {
+                Self::step_base(self.rt, &self.params, &mut self.tracker, bp, x, y1h)?
+            }
+            PlanKind::Hybrid(hp) => {
+                Self::step_hybrid(self.rt, &self.params, &mut self.tracker, hp, x, y1h)?
+            }
+            PlanKind::Naive(np) => {
+                Self::step_naive(self.rt, &self.params, &mut self.tracker, np, x, y1h)?
+            }
+            PlanKind::NaiveInfeasible(msg) => return Err(Error::InfeasiblePlan(msg.clone())),
         };
         self.optimizer.step(&mut self.params, &grads)?;
         Ok(StepStats {
@@ -94,30 +399,50 @@ impl<'r> Trainer<'r> {
 
     /// Forward-only pass producing z^L (used by tests + quickstart).
     pub fn forward(&mut self, x: &Tensor) -> Result<Tensor> {
-        self.tracker = Tracker::new();
-        match self.mode {
-            Mode::Base => {
-                let model = &self.rt.manifest.model;
-                let mut args: Vec<&Tensor> = vec![x];
-                args.extend(self.params.conv_slice(model).iter());
-                Ok(self.rt.execute("base_fwd", &args)?.remove(0))
+        self.tracker.reset();
+        match &self.plan.kind {
+            PlanKind::Base(bp) => {
+                let mut args: Vec<TensorView> = Vec::with_capacity(1 + bp.n_conv);
+                args.push(x.view());
+                args.extend(self.params.tensors[..bp.n_conv].iter().map(|t| t.view()));
+                Ok(self.rt.execute_h(bp.fwd, &args)?.remove(0))
             }
-            Mode::RowHybrid => {
-                let zck = self.segment_fp(0, x)?;
-                self.segment_fp(1, &zck)
-            }
-            Mode::Tps => self.tps_fp(x),
-            Mode::Naive => self.naive_fp(x),
+            PlanKind::Hybrid(hp) => match &hp.tps {
+                Some(tp) => {
+                    Self::tps_fp(self.rt, &self.params, &mut self.tracker, tp, hp.n_conv, x)
+                }
+                None => {
+                    let zck = Self::segment_fp(
+                        self.rt,
+                        &self.params,
+                        &mut self.tracker,
+                        &hp.segs[0],
+                        x,
+                    )?;
+                    Self::segment_fp(self.rt, &self.params, &mut self.tracker, &hp.segs[1], &zck)
+                }
+            },
+            PlanKind::Naive(np) => Self::naive_fp(self.rt, &self.params, np, x),
+            PlanKind::NaiveInfeasible(msg) => Err(Error::InfeasiblePlan(msg.clone())),
         }
     }
 
     // ---------------- Base ----------------
 
-    fn step_base(&mut self, x: &Tensor, y1h: &Tensor) -> Result<(f32, Vec<Tensor>)> {
-        self.tracker.mark("base.step");
-        let mut args: Vec<&Tensor> = vec![x, y1h];
-        args.extend(self.params.tensors.iter());
-        let mut out = self.rt.execute("base_step", &args)?;
+    fn step_base(
+        rt: &Runtime,
+        params: &ParamSet,
+        tracker: &mut Tracker,
+        bp: &BasePlan,
+        x: &Tensor,
+        y1h: &Tensor,
+    ) -> Result<(f32, Vec<Tensor>)> {
+        tracker.mark_id(bp.phase);
+        let mut args: Vec<TensorView> = Vec::with_capacity(2 + params.tensors.len());
+        args.push(x.view());
+        args.push(y1h.view());
+        args.extend(params.tensors.iter().map(|t| t.view()));
+        let mut out = rt.execute_h(bp.step, &args)?;
         let grads = out.split_off(1);
         let loss = out[0].data[0];
         Ok((loss, grads))
@@ -126,223 +451,257 @@ impl<'r> Trainer<'r> {
     // ---------------- OverL-H (and 2PS-fwd variant) ----------------
 
     /// FP of one segment, row by row; returns the concatenated output.
-    fn segment_fp(&mut self, si: usize, input: &Tensor) -> Result<Tensor> {
-        let seg = self.rt.manifest.plan.segments[si].clone();
-        // borrow, don't clone, the segment's weights (perf pass)
-        let params = &self.params.tensors[seg.param_lo..seg.param_hi];
+    fn segment_fp(
+        rt: &Runtime,
+        params: &ParamSet,
+        tracker: &mut Tracker,
+        seg: &SegPlan,
+        input: &Tensor,
+    ) -> Result<Tensor> {
+        let seg_params = &params.tensors[seg.param_lo..seg.param_hi];
         let mut rows: Vec<Tensor> = Vec::with_capacity(seg.rows.len());
-        for (r, row) in seg.rows.iter().enumerate() {
-            self.tracker.mark(format!("fp.{}.row{r}", seg.name));
-            let slab = input.slice_h(row.in_iv[0], row.in_iv[1])?;
-            self.tracker.alloc(format!("fp.{}.slab{r}", seg.name), slab.size_bytes());
-            let mut args: Vec<&Tensor> = vec![&slab];
-            args.extend(params.iter());
-            let z = self
-                .rt
-                .execute(&format!("{}_row{r}_fwd", seg.name), &args)?
-                .remove(0);
-            self.tracker.alloc(format!("fp.{}.z{r}", seg.name), z.size_bytes());
+        for rp in &seg.rows {
+            tracker.mark_id(rp.fp_phase);
+            // zero-copy: a strided view, gathered only at the literal boundary
+            let slab = input.slice_h(rp.in_iv[0], rp.in_iv[1])?;
+            tracker.alloc_id(rp.slab_id, slab.size_bytes());
+            let z = {
+                let mut args: Vec<TensorView> = Vec::with_capacity(1 + seg_params.len());
+                args.push(slab);
+                args.extend(seg_params.iter().map(|t| t.view()));
+                rt.execute_h(rp.fwd, &args)?.remove(0)
+            };
+            tracker.alloc_id(rp.z_id, z.size_bytes());
             // the input slab is released as soon as the row is done —
             // the row-centric memory reuse (Algorithm 1 line 9)
-            self.tracker.free(&format!("fp.{}.slab{r}", seg.name));
+            tracker.free_id(rp.slab_id);
             rows.push(z);
         }
-        let out = Tensor::concat_h(&rows.iter().collect::<Vec<_>>())?;
-        self.tracker
-            .alloc(format!("fp.{}.out", seg.name), out.size_bytes());
-        for r in 0..rows.len() {
-            self.tracker.free(&format!("fp.{}.z{r}", seg.name));
+        let out = {
+            let views: Vec<TensorView> = rows.iter().map(|t| t.view()).collect();
+            Tensor::concat_h(&views)?
+        };
+        tracker.alloc_id(seg.out_id, out.size_bytes());
+        for rp in &seg.rows {
+            tracker.free_id(rp.z_id);
         }
         Ok(out)
     }
 
     /// 2PS forward over the full depth (N = tps_rows), caches handed
     /// row-to-row exactly as §IV-A describes.
-    fn tps_fp(&mut self, x: &Tensor) -> Result<Tensor> {
-        let tps = self.rt.manifest.plan.tps.clone();
-        let n_conv = self.rt.manifest.model.n_conv_params;
-        let conv = &self.params.tensors[..n_conv];
-        let mut rows: Vec<Tensor> = Vec::new();
+    fn tps_fp(
+        rt: &Runtime,
+        params: &ParamSet,
+        tracker: &mut Tracker,
+        tp: &TpsPlan,
+        n_conv: usize,
+        x: &Tensor,
+    ) -> Result<Tensor> {
+        let conv = &params.tensors[..n_conv];
+        let mut rows: Vec<Tensor> = Vec::with_capacity(tp.rows.len());
         let mut caches: Vec<Tensor> = Vec::new();
-        for (r, row) in tps.rows.iter().enumerate() {
-            self.tracker.mark(format!("fp.tps.row{r}"));
-            let own = x.slice_h(row.own_iv[0], row.own_iv[1])?;
-            self.tracker.alloc(format!("tps.own{r}"), own.size_bytes());
-            let mut args: Vec<&Tensor> = vec![&own];
-            args.extend(caches.iter()); // caches from row r−1 (empty for r=0)
-            args.extend(conv.iter());
-            let mut out = self.rt.execute(&format!("tps_row{r}_fwd"), &args)?;
+        for (r, rp) in tp.rows.iter().enumerate() {
+            tracker.mark_id(rp.phase);
+            let own = x.slice_h(rp.own_iv[0], rp.own_iv[1])?;
+            tracker.alloc_id(rp.own_id, own.size_bytes());
+            let mut out = {
+                let mut args: Vec<TensorView> =
+                    Vec::with_capacity(1 + caches.len() + conv.len());
+                args.push(own);
+                args.extend(caches.iter().map(|t| t.view())); // from row r−1
+                args.extend(conv.iter().map(|t| t.view()));
+                rt.execute_h(rp.fwd, &args)?
+            };
             let z = out.remove(0);
             // free consumed caches, keep newly produced ones
-            for (i, c) in caches.iter().enumerate() {
-                let _ = c;
-                self.tracker.free(&format!("tps.cache{}.{i}", r - 1));
+            if r > 0 {
+                for id in &tp.rows[r - 1].cache_ids {
+                    tracker.free_id(*id);
+                }
             }
             caches = out;
-            for (i, c) in caches.iter().enumerate() {
-                self.tracker.alloc(format!("tps.cache{r}.{i}"), c.size_bytes());
+            debug_assert_eq!(caches.len(), rp.cache_ids.len());
+            for (id, c) in rp.cache_ids.iter().zip(&caches) {
+                tracker.alloc_id(*id, c.size_bytes());
             }
-            self.tracker.alloc(format!("tps.z{r}"), z.size_bytes());
-            self.tracker.free(&format!("tps.own{r}"));
+            tracker.alloc_id(rp.z_id, z.size_bytes());
+            tracker.free_id(rp.own_id);
             rows.push(z);
         }
-        for (i, c) in caches.iter().enumerate() {
-            let _ = c;
-            self.tracker
-                .free(&format!("tps.cache{}.{i}", tps.rows.len() - 1));
+        if let Some(last) = tp.rows.last() {
+            for id in &last.cache_ids {
+                tracker.free_id(*id);
+            }
         }
-        let z_l = Tensor::concat_h(&rows.iter().collect::<Vec<_>>())?;
-        self.tracker.alloc("tps.zL", z_l.size_bytes());
-        for r in 0..rows.len() {
-            self.tracker.free(&format!("tps.z{r}"));
+        let z_l = {
+            let views: Vec<TensorView> = rows.iter().map(|t| t.view()).collect();
+            Tensor::concat_h(&views)?
+        };
+        tracker.alloc_id(tp.zl_id, z_l.size_bytes());
+        for rp in &tp.rows {
+            tracker.free_id(rp.z_id);
         }
         Ok(z_l)
     }
 
     /// Shared head + row-wise BP for the hybrid and 2PS modes.
-    fn step_row_hybrid(
-        &mut self,
+    fn step_hybrid(
+        rt: &Runtime,
+        params: &ParamSet,
+        tracker: &mut Tracker,
+        hp: &HybridPlan,
         x: &Tensor,
         y1h: &Tensor,
-        tps_forward: bool,
     ) -> Result<(f32, Vec<Tensor>)> {
-        let model = self.rt.manifest.model.clone();
+        let seg_a = &hp.segs[0];
+        let seg_b = &hp.segs[1];
         // ---- FP ----
-        let zck = self.segment_fp(0, x)?; // checkpoint (pool2 output)
-        let z_l = if tps_forward {
+        let zck = Self::segment_fp(rt, params, tracker, seg_a, x)?; // checkpoint
+        let (z_l, zl_id) = match &hp.tps {
             // 2PS forward recomputes from the input; the checkpoint is
             // still produced for BP (2PS-H keeps checkpoints too)
-            self.tps_fp(x)?
-        } else {
-            self.segment_fp(1, &zck)?
+            Some(tp) => (Self::tps_fp(rt, params, tracker, tp, hp.n_conv, x)?, tp.zl_id),
+            None => (
+                Self::segment_fp(rt, params, tracker, seg_b, &zck)?,
+                seg_b.out_id,
+            ),
         };
         // ---- head ----
-        self.tracker.mark("head");
-        let loss_out = self.rt.execute(
-            "head",
-            &[&z_l, y1h, self.params.fc_w(&model), self.params.fc_b(&model)],
+        tracker.mark_id(hp.head_phase);
+        let loss_out = rt.execute_h(
+            hp.head,
+            &[
+                z_l.view(),
+                y1h.view(),
+                params.tensors[hp.n_conv].view(),
+                params.tensors[hp.n_conv + 1].view(),
+            ],
         )?;
         let loss = loss_out[0].data[0];
         let dz_l = &loss_out[1];
-        self.tracker.alloc("dzL", dz_l.size_bytes());
+        tracker.alloc_id(hp.dzl_id, dz_l.size_bytes());
         // z^L consumed by the head
-        if tps_forward {
-            self.tracker.free("tps.zL");
-        } else {
-            self.tracker.free("fp.segB.out");
-        }
+        tracker.free_id(zl_id);
 
-        let mut grads = self.params.grad_zeros();
-        let n_conv = model.n_conv_params;
+        let mut grads = params.grad_zeros();
+        let n_conv = hp.n_conv;
         grads[n_conv] = loss_out[2].clone(); // dWfc
         grads[n_conv + 1] = loss_out[3].clone(); // dbfc
 
         // ---- BP segment B (rows reversed; recompute inside row_bwd) ----
-        let seg_b = self.rt.manifest.plan.segments[1].clone();
+        let seg_b_params = &params.tensors[seg_b.param_lo..seg_b.param_hi];
         let mut dz_ck = Tensor::zeros(&zck.shape);
-        self.tracker.alloc("dzck", dz_ck.size_bytes());
-        for (r, row) in seg_b.rows.iter().enumerate().rev() {
-            self.tracker.mark(format!("bp.segB.row{r}"));
-            let slab = zck.slice_h(row.in_iv[0], row.in_iv[1])?;
-            let dz = dz_l.slice_h(row.out_iv[0], row.out_iv[1])?;
-            self.tracker
-                .alloc(format!("bp.segB.slab{r}"), slab.size_bytes() + dz.size_bytes());
-            let params: Vec<&Tensor> =
-                self.params.tensors[seg_b.param_lo..seg_b.param_hi].iter().collect();
-            let mut args: Vec<&Tensor> = vec![&slab];
-            args.extend(params);
-            args.push(&dz);
-            let mut out = self.rt.execute(&format!("segB_row{r}_bwd"), &args)?;
+        tracker.alloc_id(hp.dzck_id, dz_ck.size_bytes());
+        for rp in seg_b.rows.iter().rev() {
+            tracker.mark_id(rp.bp_phase);
+            let slab = zck.slice_h(rp.in_iv[0], rp.in_iv[1])?;
+            let dz = dz_l.slice_h(rp.out_iv[0], rp.out_iv[1])?;
+            tracker.alloc_id(rp.bp_slab_id, slab.size_bytes() + dz.size_bytes());
+            let mut out = {
+                let mut args: Vec<TensorView> = Vec::with_capacity(2 + seg_b_params.len());
+                args.push(slab);
+                args.extend(seg_b_params.iter().map(|t| t.view()));
+                args.push(dz);
+                rt.execute_h(rp.bwd, &args)?
+            };
             let _z = out.pop().expect("bwd returns recomputed z last");
             let dx = out.pop().expect("segB bwd returns dx before z");
             for (i, g) in out.into_iter().enumerate() {
                 grads[seg_b.param_lo + i].axpy(1.0, &g)?;
             }
             // overlapping slab input-gradients accumulate by linearity
-            dz_ck.add_h(row.in_iv[0], &dx)?;
-            self.tracker.free(&format!("bp.segB.slab{r}"));
+            dz_ck.add_h(rp.in_iv[0], &dx)?;
+            tracker.free_id(rp.bp_slab_id);
         }
-        self.tracker.free("dzL");
+        tracker.free_id(hp.dzl_id);
 
         // ---- BP segment A ----
-        let seg_a = self.rt.manifest.plan.segments[0].clone();
-        for (r, row) in seg_a.rows.iter().enumerate().rev() {
-            self.tracker.mark(format!("bp.segA.row{r}"));
-            let slab = x.slice_h(row.in_iv[0], row.in_iv[1])?;
-            let dz = dz_ck.slice_h(row.out_iv[0], row.out_iv[1])?;
-            self.tracker
-                .alloc(format!("bp.segA.slab{r}"), slab.size_bytes() + dz.size_bytes());
-            let params: Vec<&Tensor> =
-                self.params.tensors[seg_a.param_lo..seg_a.param_hi].iter().collect();
-            let mut args: Vec<&Tensor> = vec![&slab];
-            args.extend(params);
-            args.push(&dz);
-            let mut out = self.rt.execute(&format!("segA_row{r}_bwd"), &args)?;
+        let seg_a_params = &params.tensors[seg_a.param_lo..seg_a.param_hi];
+        for rp in seg_a.rows.iter().rev() {
+            tracker.mark_id(rp.bp_phase);
+            let slab = x.slice_h(rp.in_iv[0], rp.in_iv[1])?;
+            let dz = dz_ck.slice_h(rp.out_iv[0], rp.out_iv[1])?;
+            tracker.alloc_id(rp.bp_slab_id, slab.size_bytes() + dz.size_bytes());
+            let mut out = {
+                let mut args: Vec<TensorView> = Vec::with_capacity(2 + seg_a_params.len());
+                args.push(slab);
+                args.extend(seg_a_params.iter().map(|t| t.view()));
+                args.push(dz);
+                rt.execute_h(rp.bwd, &args)?
+            };
             out.pop().expect("bwd returns recomputed z last");
             for (i, g) in out.into_iter().enumerate() {
                 grads[seg_a.param_lo + i].axpy(1.0, &g)?;
             }
-            self.tracker.free(&format!("bp.segA.slab{r}"));
+            tracker.free_id(rp.bp_slab_id);
         }
-        self.tracker.free("dzck");
-        self.tracker.free("fp.segA.out"); // checkpoint consumed
+        tracker.free_id(hp.dzck_id);
+        tracker.free_id(seg_a.out_id); // checkpoint consumed
         Ok((loss, grads))
     }
 
     // ---------------- naive (w/o sharing) ----------------
 
-    fn naive_fp(&mut self, x: &Tensor) -> Result<Tensor> {
-        let model = self.rt.manifest.model.clone();
-        let n = self.rt.manifest.plan.naive_rows;
-        let rh = model.h / n;
-        let conv = &self.params.tensors[..model.n_conv_params];
-        let mut rows = Vec::with_capacity(n);
-        for r in 0..n {
-            let slab = x.slice_h(r * rh, (r + 1) * rh)?;
-            let mut args: Vec<&Tensor> = vec![&slab];
-            args.extend(conv.iter());
-            rows.push(
-                self.rt
-                    .execute(&format!("naive_row{r}_fwd"), &args)?
-                    .remove(0),
-            );
+    /// Naive FP does no per-row tracking (seed parity: the ablation only
+    /// accounts at the step level), hence no tracker parameter.
+    fn naive_fp(rt: &Runtime, params: &ParamSet, np: &NaivePlan, x: &Tensor) -> Result<Tensor> {
+        let conv = &params.tensors[..np.n_conv];
+        let mut rows = Vec::with_capacity(np.rows.len());
+        for rp in &np.rows {
+            let slab = x.slice_h(rp.x_iv[0], rp.x_iv[1])?;
+            let mut args: Vec<TensorView> = Vec::with_capacity(1 + conv.len());
+            args.push(slab);
+            args.extend(conv.iter().map(|t| t.view()));
+            rows.push(rt.execute_h(rp.fwd, &args)?.remove(0));
         }
-        Tensor::concat_h(&rows.iter().collect::<Vec<_>>())
+        let views: Vec<TensorView> = rows.iter().map(|t| t.view()).collect();
+        Tensor::concat_h(&views)
     }
 
-    fn step_naive(&mut self, x: &Tensor, y1h: &Tensor) -> Result<(f32, Vec<Tensor>)> {
-        let model = self.rt.manifest.model.clone();
-        self.tracker.mark("naive.fp");
-        let z_l = self.naive_fp(x)?;
-        self.tracker.alloc("naive.zL", z_l.size_bytes());
-        let loss_out = self.rt.execute(
-            "head",
-            &[&z_l, y1h, self.params.fc_w(&model), self.params.fc_b(&model)],
+    fn step_naive(
+        rt: &Runtime,
+        params: &ParamSet,
+        tracker: &mut Tracker,
+        np: &NaivePlan,
+        x: &Tensor,
+        y1h: &Tensor,
+    ) -> Result<(f32, Vec<Tensor>)> {
+        tracker.mark_id(np.fp_phase);
+        let z_l = Self::naive_fp(rt, params, np, x)?;
+        tracker.alloc_id(np.zl_id, z_l.size_bytes());
+        let loss_out = rt.execute_h(
+            np.head,
+            &[
+                z_l.view(),
+                y1h.view(),
+                params.tensors[np.n_conv].view(),
+                params.tensors[np.n_conv + 1].view(),
+            ],
         )?;
         let loss = loss_out[0].data[0];
         let dz_l = &loss_out[1];
-        let mut grads = self.params.grad_zeros();
-        let n_conv = model.n_conv_params;
-        grads[n_conv] = loss_out[2].clone();
-        grads[n_conv + 1] = loss_out[3].clone();
-        let n = self.rt.manifest.plan.naive_rows;
-        let rh = model.h / n;
-        let zh = dz_l.shape[2] / n;
-        self.tracker.mark("naive.bp");
-        for r in (0..n).rev() {
-            let slab = x.slice_h(r * rh, (r + 1) * rh)?;
-            let dz = dz_l.slice_h(r * zh, (r + 1) * zh)?;
-            let conv: Vec<&Tensor> = self.params.conv_slice(&model).iter().collect();
-            let mut args: Vec<&Tensor> = vec![&slab];
-            args.extend(conv);
-            args.push(&dz);
-            let mut out = self.rt.execute(&format!("naive_row{r}_bwd"), &args)?;
+        let mut grads = params.grad_zeros();
+        grads[np.n_conv] = loss_out[2].clone();
+        grads[np.n_conv + 1] = loss_out[3].clone();
+        tracker.mark_id(np.bp_phase);
+        let conv_n = np.n_conv;
+        for rp in np.rows.iter().rev() {
+            let slab = x.slice_h(rp.x_iv[0], rp.x_iv[1])?;
+            let dz = dz_l.slice_h(rp.z_iv[0], rp.z_iv[1])?;
+            let mut out = {
+                let mut args: Vec<TensorView> = Vec::with_capacity(2 + conv_n);
+                args.push(slab);
+                args.extend(params.tensors[..conv_n].iter().map(|t| t.view()));
+                args.push(dz);
+                rt.execute_h(rp.bwd, &args)?
+            };
             out.pop().expect("bwd returns recomputed z last");
             for (i, g) in out.into_iter().enumerate() {
                 grads[i].axpy(1.0, &g)?;
             }
         }
-        self.tracker.free("naive.zL");
+        tracker.free_id(np.zl_id);
         Ok((loss, grads))
     }
 }
@@ -363,7 +722,7 @@ pub fn train_loop(
         if log_every > 0 && s % log_every == 0 {
             println!(
                 "  [{}] step {s:4}  loss {:.4}  peak {:>9}  {:.1} ms  {} execs",
-                trainer.mode.label(),
+                trainer.mode().label(),
                 stats.loss,
                 crate::metrics::fmt_bytes(stats.peak_bytes),
                 stats.step_ms,
@@ -379,4 +738,178 @@ pub fn train_loop(
         losses.push(stats.loss);
     }
     Ok(losses)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn naive_row_extents_equal_split() {
+        let ivs = naive_row_extents(32, 4).unwrap();
+        assert_eq!(ivs.len(), 4);
+        assert_eq!(ivs[0], [0, 8]);
+        assert_eq!(ivs[3], [24, 32]);
+        // cover the full range with no gaps
+        for w in ivs.windows(2) {
+            assert_eq!(w[0][1], w[1][0]);
+        }
+    }
+
+    #[test]
+    fn naive_row_extents_rejects_remainder() {
+        // the seed silently truncated h=33 n=4 to 4×8 rows, dropping row 32
+        let err = naive_row_extents(33, 4).unwrap_err();
+        match err {
+            Error::InfeasiblePlan(msg) => {
+                assert!(msg.contains("remainder"), "{msg}");
+            }
+            other => panic!("expected InfeasiblePlan, got {other:?}"),
+        }
+        assert!(naive_row_extents(8, 0).is_err());
+        assert!(naive_row_extents(0, 2).is_err());
+    }
+
+    /// A miniature manifest with every executable the four modes resolve.
+    fn plan_manifest(h: usize, naive_rows: usize) -> Manifest {
+        let exes = [
+            ("base_step", 2),
+            ("base_fwd", 1),
+            ("head", 4),
+            ("segA_row0_fwd", 1),
+            ("segA_row0_bwd", 3),
+            ("segA_row1_fwd", 1),
+            ("segA_row1_bwd", 3),
+            ("segB_row0_fwd", 1),
+            ("segB_row0_bwd", 4),
+            ("segB_row1_fwd", 1),
+            ("segB_row1_bwd", 4),
+            ("tps_row0_fwd", 3), // z + 2 caches
+            ("tps_row1_fwd", 1), // z only (last row)
+            ("naive_row0_fwd", 1),
+            ("naive_row0_bwd", 3),
+            ("naive_row1_fwd", 1),
+            ("naive_row1_bwd", 3),
+        ];
+        let exe_json: Vec<String> = exes
+            .iter()
+            .map(|(name, outs)| {
+                let outputs: Vec<&str> = (0..*outs).map(|_| "[1]").collect();
+                format!(
+                    r#"{{"name": "{name}", "path": "{name}.hlo", "kind": "k",
+                         "inputs": [], "outputs": [{}]}}"#,
+                    outputs.join(", ")
+                )
+            })
+            .collect();
+        let seg = |name: &str| {
+            format!(
+                r#"{{"name": "{name}", "h_in": {h}, "h_out": {h}, "c_in": 1, "c_out": 1,
+                     "param_lo": 0, "param_hi": 2,
+                     "rows": [
+                       {{"out_iv": [0, 4], "in_iv": [0, 5], "chain": []}},
+                       {{"out_iv": [4, 8], "in_iv": [3, 8], "chain": []}}
+                     ]}}"#
+            )
+        };
+        let text = format!(
+            r#"{{
+              "model": {{
+                "name": "t", "batch": 1, "h": {h}, "w": 8, "n_classes": 2,
+                "layers": [], "heights": [{h}, {h}], "w_out": 8, "fc_in": 4,
+                "param_shapes": [[1, 1, 3, 3], [1], [4, 2], [2]],
+                "n_conv_params": 2
+              }},
+              "plan": {{
+                "ckpt_split": 1, "n_rows": 2, "tps_rows": 2, "naive_rows": {naive_rows},
+                "segments": [{segA}, {segB}],
+                "tps": {{
+                  "cuts": [0, 4, 8],
+                  "rows": [
+                    {{"own_iv": [0, 4], "bounds": [[0, 4]], "cache_in": [null], "cache_out": [[3, 4]]}},
+                    {{"own_iv": [4, 8], "bounds": [[4, 8]], "cache_in": [[3, 4]], "cache_out": [null]}}
+                  ]
+                }}
+              }},
+              "executables": [{exes}]
+            }}"#,
+            segA = seg("segA"),
+            segB = seg("segB"),
+            exes = exe_json.join(",\n")
+        );
+        Manifest::parse(&text).expect("test manifest parses")
+    }
+
+    #[test]
+    fn step_plan_interns_everything_up_front() {
+        let man = plan_manifest(8, 2);
+        for mode in [Mode::Base, Mode::RowHybrid, Mode::Tps, Mode::Naive] {
+            let mut tracker = Tracker::new();
+            let plan = StepPlan::build(&man, mode, &mut tracker).unwrap();
+            match (&plan.kind, mode) {
+                (PlanKind::Base(bp), Mode::Base) => {
+                    assert_eq!(bp.step.index(), man.index_of("base_step").unwrap());
+                    assert_eq!(bp.fwd.index(), man.index_of("base_fwd").unwrap());
+                    assert_eq!(bp.n_conv, 2);
+                }
+                (PlanKind::Hybrid(hp), Mode::RowHybrid) => {
+                    assert!(hp.tps.is_none());
+                    assert_eq!(hp.segs.len(), 2);
+                    assert_eq!(hp.segs[0].rows.len(), 2);
+                    let rp = &hp.segs[1].rows[1];
+                    assert_eq!(rp.fwd.index(), man.index_of("segB_row1_fwd").unwrap());
+                    assert_eq!(rp.bwd.index(), man.index_of("segB_row1_bwd").unwrap());
+                    assert_eq!(rp.in_iv, [3, 8]);
+                    assert_eq!(rp.out_iv, [4, 8]);
+                    // ids resolve to the exact strings the seed allocated,
+                    // so tracker accounting stays byte-identical
+                    assert_eq!(tracker.name(rp.slab_id), "fp.segB.slab1");
+                    assert_eq!(tracker.name(rp.bp_slab_id), "bp.segB.slab1");
+                    assert_eq!(tracker.name(hp.segs[1].out_id), "fp.segB.out");
+                    assert_eq!(tracker.name(hp.dzl_id), "dzL");
+                }
+                (PlanKind::Hybrid(hp), Mode::Tps) => {
+                    let tp = hp.tps.as_ref().expect("2PS plan");
+                    assert_eq!(tp.rows.len(), 2);
+                    // cache count derived from the executable signature
+                    assert_eq!(tp.rows[0].cache_ids.len(), 2);
+                    assert_eq!(tp.rows[1].cache_ids.len(), 0);
+                    assert_eq!(tracker.name(tp.rows[0].cache_ids[1]), "tps.cache0.1");
+                    assert_eq!(tracker.name(tp.zl_id), "tps.zL");
+                }
+                (PlanKind::Naive(np), Mode::Naive) => {
+                    assert_eq!(np.rows.len(), 2);
+                    assert_eq!(np.rows[0].x_iv, [0, 4]);
+                    assert_eq!(np.rows[1].x_iv, [4, 8]);
+                    assert_eq!(np.rows[1].z_iv, [4, 8]);
+                }
+                (kind, mode) => panic!("unexpected plan {kind:?} for {mode:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn step_plan_flags_uneven_naive_split() {
+        // h=8, naive_rows=3: 8 % 3 != 0 — the seed truncated, we flag
+        let man = plan_manifest(8, 3);
+        let mut tracker = Tracker::new();
+        let plan = StepPlan::build(&man, Mode::Naive, &mut tracker).unwrap();
+        match &plan.kind {
+            PlanKind::NaiveInfeasible(msg) => assert!(msg.contains("remainder"), "{msg}"),
+            other => panic!("expected NaiveInfeasible, got {other:?}"),
+        }
+        // the other modes are unaffected by the naive split
+        assert!(StepPlan::build(&man, Mode::RowHybrid, &mut tracker).is_ok());
+    }
+
+    #[test]
+    fn step_plan_errors_on_missing_executable() {
+        let mut man = plan_manifest(8, 2);
+        man.executables.retain(|e| e.name != "segB_row1_bwd");
+        let mut tracker = Tracker::new();
+        match StepPlan::build(&man, Mode::RowHybrid, &mut tracker) {
+            Err(Error::Artifact(msg)) => assert!(msg.contains("segB_row1_bwd"), "{msg}"),
+            other => panic!("expected Artifact error, got {:?}", other.is_ok()),
+        }
+    }
 }

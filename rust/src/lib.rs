@@ -28,10 +28,20 @@
 //! | [`planner`] | 2PS, OverL, checkpointing, hybrids, granularity solver |
 //! | [`baselines`] | Base, Ckp, OffLoad, Tsplit memory/time schedules |
 //! | [`costmodel`] | τ/ι FLOP model, CI/OD counters, relative latency |
-//! | [`runtime`] | PJRT client, manifest, executable cache |
-//! | [`coordinator`] | live row scheduler: FP/BP loops, SGD, training |
+//! | [`runtime`] | PJRT client, manifest, `ExecHandle` executable table, zero-copy `TensorView` plumbing |
+//! | [`coordinator`] | live row scheduler: prebuilt `StepPlan`, FP/BP loops, SGD, training |
 //! | [`data`] | synthetic 10-class corpus |
 //! | [`metrics`] | counters + report tables for the benches |
+//!
+//! ## Hot path
+//!
+//! The live training step is built around three zero-cost currencies
+//! (docs/HOTPATH.md): borrowed strided [`runtime::TensorView`]s instead of
+//! copied H-slices, interned [`memory::BufId`]s instead of `format!`-ed
+//! tracker keys, and a per-mode `StepPlan` of integer
+//! [`runtime::ExecHandle`]s built once at `Trainer` construction.  The
+//! `l3_hotpath` bench emits `BENCH_l3_hotpath.json` tracking this
+//! trajectory.
 
 pub mod baselines;
 pub mod coordinator;

@@ -182,7 +182,7 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<(), String> {
     );
     let m = rt.manifest.model.clone();
     let corpus = SyntheticCorpus::new(m.n_classes, 3, m.h, m.w, 1234);
-    let mut tr = Trainer::new(&rt, mode, lr, 7);
+    let mut tr = Trainer::new(&rt, mode, lr, 7).map_err(|e| e.to_string())?;
     let losses =
         train_loop(&mut tr, &corpus, steps, (steps / 20).max(1)).map_err(|e| e.to_string())?;
     let head = losses.iter().take(10).sum::<f32>() / losses.len().min(10) as f32;

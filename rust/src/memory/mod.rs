@@ -16,4 +16,4 @@ pub mod tracker;
 
 pub use device::DeviceModel;
 pub use sim::{Event, Schedule, SimReport};
-pub use tracker::Tracker;
+pub use tracker::{BufId, Tracker};

@@ -3,48 +3,130 @@
 //! The coordinator registers every activation/cache/gradient buffer it
 //! holds during a real PJRT training step; the tracker maintains
 //! current/peak byte counts with the same arithmetic as the simulator, so
-//! planner predictions can be validated against actual executions
-//! (rust/tests/live_vs_sim.rs).
+//! planner predictions can be validated against actual executions.
+//!
+//! ## Interned buffer IDs
+//!
+//! The hot path never allocates strings: buffer and phase names are
+//! interned **once** (at step-plan build, see `coordinator::trainer`) into
+//! a [`BufId`], and per-row accounting goes through [`Tracker::alloc_id`] /
+//! [`Tracker::free_id`] / [`Tracker::mark_id`] — array indexing only.  The
+//! string-keyed methods remain as thin wrappers (they intern on first use)
+//! for tests and cold paths; both APIs share one ledger, so the byte
+//! arithmetic is identical whichever is used.
 
 use std::collections::HashMap;
 
+/// Interned buffer/phase name: an index into the tracker's name table.
+/// Stable across [`Tracker::reset`], so a step plan interns once and reuses
+/// the IDs every step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BufId(u32);
+
+impl BufId {
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
 /// Byte-accounting tracker for live buffers.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Tracker {
-    live: HashMap<String, u64>,
+    /// id -> name (id 0 is the "" no-phase sentinel)
+    names: Vec<String>,
+    /// name -> id, used only when interning
+    index: HashMap<String, u32>,
+    /// id -> live byte count (None = not currently allocated)
+    live: Vec<Option<u64>>,
     cur: u64,
     peak: u64,
-    peak_at: String,
-    phase: String,
+    peak_at: u32,
+    phase: u32,
 }
 
 impl Tracker {
     pub fn new() -> Self {
-        Tracker::default()
+        let mut t = Tracker {
+            names: Vec::new(),
+            index: HashMap::new(),
+            live: Vec::new(),
+            cur: 0,
+            peak: 0,
+            peak_at: 0,
+            phase: 0,
+        };
+        t.intern(""); // id 0: the empty phase
+        t
     }
 
-    pub fn mark(&mut self, phase: impl Into<String>) {
-        self.phase = phase.into();
+    /// Intern a buffer/phase name; idempotent (same name ⇒ same id).
+    pub fn intern(&mut self, name: impl Into<String>) -> BufId {
+        let name = name.into();
+        if let Some(&id) = self.index.get(&name) {
+            return BufId(id);
+        }
+        let id = self.names.len() as u32;
+        self.names.push(name.clone());
+        self.index.insert(name, id);
+        self.live.push(None);
+        BufId(id)
     }
 
-    pub fn alloc(&mut self, id: impl Into<String>, bytes: u64) {
-        let id = id.into();
-        let prev = self.live.insert(id.clone(), bytes);
-        assert!(prev.is_none(), "double alloc of '{id}'");
+    /// Resolve an interned id back to its name.
+    pub fn name(&self, id: BufId) -> &str {
+        &self.names[id.index()]
+    }
+
+    // ---- hot path (integer ids, zero allocation) ----
+
+    pub fn mark_id(&mut self, phase: BufId) {
+        self.phase = phase.0;
+    }
+
+    pub fn alloc_id(&mut self, id: BufId, bytes: u64) {
+        let slot = &mut self.live[id.index()];
+        assert!(
+            slot.is_none(),
+            "double alloc of '{}'",
+            self.names[id.index()]
+        );
+        *slot = Some(bytes);
         self.cur += bytes;
         if self.cur > self.peak {
             self.peak = self.cur;
-            self.peak_at = self.phase.clone();
+            self.peak_at = self.phase;
         }
     }
 
-    pub fn free(&mut self, id: &str) {
-        let bytes = self
-            .live
-            .remove(id)
-            .unwrap_or_else(|| panic!("free of unknown buffer '{id}'"));
+    pub fn free_id(&mut self, id: BufId) {
+        let slot = &mut self.live[id.index()];
+        let bytes = match slot.take() {
+            Some(b) => b,
+            None => panic!("free of unknown buffer '{}'", self.names[id.index()]),
+        };
         self.cur -= bytes;
     }
+
+    // ---- string-keyed wrappers (cold paths / tests) ----
+
+    pub fn mark(&mut self, phase: impl Into<String>) {
+        let id = self.intern(phase);
+        self.mark_id(id);
+    }
+
+    pub fn alloc(&mut self, id: impl Into<String>, bytes: u64) {
+        let id = self.intern(id);
+        self.alloc_id(id, bytes);
+    }
+
+    pub fn free(&mut self, id: &str) {
+        match self.index.get(id) {
+            Some(&i) => self.free_id(BufId(i)),
+            None => panic!("free of unknown buffer '{id}'"),
+        }
+    }
+
+    // ---- observers ----
 
     pub fn current(&self) -> u64 {
         self.cur
@@ -55,13 +137,35 @@ impl Tracker {
     }
 
     pub fn peak_at(&self) -> &str {
-        &self.peak_at
+        self.names
+            .get(self.peak_at as usize)
+            .map(String::as_str)
+            .unwrap_or("")
     }
 
     /// Reset peak statistics but keep live buffers (per-step reporting).
     pub fn reset_peak(&mut self) {
         self.peak = self.cur;
-        self.peak_at = self.phase.clone();
+        self.peak_at = self.phase;
+    }
+
+    /// Start a fresh per-step ledger: drop all live buffers and peaks but
+    /// KEEP the interned name table — plan [`BufId`]s stay valid across
+    /// steps, which is what makes per-step accounting allocation-free.
+    pub fn reset(&mut self) {
+        for s in &mut self.live {
+            *s = None;
+        }
+        self.cur = 0;
+        self.peak = 0;
+        self.peak_at = 0;
+        self.phase = 0;
+    }
+}
+
+impl Default for Tracker {
+    fn default() -> Self {
+        Tracker::new()
     }
 }
 
@@ -91,5 +195,87 @@ mod tests {
         let mut t = Tracker::new();
         t.alloc("x", 1);
         t.alloc("x", 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "free of unknown buffer")]
+    fn free_of_unknown_name_panics() {
+        let mut t = Tracker::new();
+        t.free("never-allocated");
+    }
+
+    #[test]
+    #[should_panic(expected = "free of unknown buffer")]
+    fn free_of_unknown_id_panics() {
+        let mut t = Tracker::new();
+        let id = t.intern("interned-but-never-allocated");
+        t.free_id(id);
+    }
+
+    #[test]
+    #[should_panic(expected = "free of unknown buffer")]
+    fn double_free_panics() {
+        let mut t = Tracker::new();
+        let id = t.intern("x");
+        t.alloc_id(id, 8);
+        t.free_id(id);
+        t.free_id(id);
+    }
+
+    #[test]
+    fn interning_is_idempotent() {
+        let mut t = Tracker::new();
+        let a = t.intern("fp.segA.slab0");
+        let b = t.intern("fp.segA.slab0");
+        assert_eq!(a, b);
+        assert_eq!(t.name(a), "fp.segA.slab0");
+    }
+
+    #[test]
+    fn id_api_matches_string_api_byte_for_byte() {
+        // the acceptance bar: identical arithmetic whichever API runs
+        let mut s = Tracker::new();
+        s.mark("fp");
+        s.alloc("a", 100);
+        s.alloc("b", 50);
+        s.free("a");
+        s.mark("bp");
+        s.alloc("c", 75);
+        s.free("b");
+
+        let mut t = Tracker::new();
+        let (fp, bp) = (t.intern("fp"), t.intern("bp"));
+        let (a, b, c) = (t.intern("a"), t.intern("b"), t.intern("c"));
+        t.mark_id(fp);
+        t.alloc_id(a, 100);
+        t.alloc_id(b, 50);
+        t.free_id(a);
+        t.mark_id(bp);
+        t.alloc_id(c, 75);
+        t.free_id(b);
+
+        assert_eq!(s.peak(), t.peak());
+        assert_eq!(s.current(), t.current());
+        assert_eq!(s.peak_at(), t.peak_at());
+    }
+
+    #[test]
+    fn reset_keeps_interned_ids_and_clears_ledger() {
+        let mut t = Tracker::new();
+        let phase = t.intern("fp.row0");
+        let id = t.intern("slab0");
+        t.mark_id(phase);
+        t.alloc_id(id, 64);
+        assert_eq!(t.peak(), 64);
+        t.reset();
+        assert_eq!(t.current(), 0);
+        assert_eq!(t.peak(), 0);
+        assert_eq!(t.peak_at(), "");
+        // same ids stay valid for the next step, and re-intern is stable
+        t.mark_id(phase);
+        t.alloc_id(id, 64);
+        assert_eq!(t.peak(), 64);
+        assert_eq!(t.peak_at(), "fp.row0");
+        assert_eq!(t.intern("slab0"), id);
     }
 }

@@ -1,0 +1,166 @@
+//! PJRT backend selection.
+//!
+//! The real XLA/PJRT bindings need the native XLA toolchain, which is not
+//! available in offline build environments.  The crate therefore compiles
+//! against a minimal API façade:
+//!
+//! * default build — the in-tree stub below.  Everything that does not
+//!   touch a live PJRT client (planners, memory simulator, shape calculus,
+//!   tensor plumbing, trackers, the plumbing micro-benches) works; opening
+//!   a [`crate::runtime::Runtime`] returns a typed error instead.
+//! * `--features pjrt` — re-exports the `xla` bindings crate.  Enabling the
+//!   feature requires adding that crate to `[dependencies]` in Cargo.toml
+//!   (it is deliberately not vendored so the default build has zero native
+//!   dependencies).
+//!
+//! The stub mirrors exactly the subset of the `xla` crate surface that
+//! `runtime::mod` consumes; keep the two in sync when touching either.
+
+#[cfg(all(feature = "pjrt", not(has_xla)))]
+compile_error!(
+    "feature `pjrt` needs the real XLA bindings: add an `xla` crate to \
+     [dependencies] in rust/Cargo.toml (it is not vendored — offline builds \
+     use the stub) and build with RUSTFLAGS=\"--cfg has_xla\""
+);
+
+#[cfg(all(feature = "pjrt", has_xla))]
+pub use xla::{
+    ElementType, HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable,
+    XlaComputation,
+};
+
+/// Whether this build can actually open a PJRT client.  Tests and benches
+/// consult this (via `runtime::pjrt_available`) to skip live-execution
+/// sections gracefully instead of panicking on the stub's typed error.
+#[cfg(all(feature = "pjrt", has_xla))]
+pub const PJRT_AVAILABLE: bool = true;
+
+#[cfg(not(feature = "pjrt"))]
+pub const PJRT_AVAILABLE: bool = false;
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::*;
+
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use std::fmt;
+    use std::path::Path;
+
+    /// Error type standing in for the bindings' error; only [`fmt::Display`]
+    /// is consumed by the runtime's `map_err` sites.
+    #[derive(Debug)]
+    pub struct XlaError(pub String);
+
+    impl fmt::Display for XlaError {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            write!(f, "{}", self.0)
+        }
+    }
+
+    impl std::error::Error for XlaError {}
+
+    fn unavailable() -> XlaError {
+        XlaError(
+            "PJRT backend not built — rebuild with `--features pjrt` and an `xla` \
+             dependency in rust/Cargo.toml"
+                .into(),
+        )
+    }
+
+    #[derive(Debug, Clone, Copy)]
+    pub enum ElementType {
+        F32,
+    }
+
+    #[derive(Debug)]
+    pub struct PjRtClient;
+
+    impl PjRtClient {
+        /// Always fails in the stub: the runtime surfaces this as a typed
+        /// [`crate::error::Error::Runtime`] at `Runtime::open` time, before
+        /// any executable is touched.
+        pub fn cpu() -> Result<Self, XlaError> {
+            Err(unavailable())
+        }
+
+        pub fn platform_name(&self) -> String {
+            "stub".into()
+        }
+
+        pub fn compile(&self, _c: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+            Err(unavailable())
+        }
+    }
+
+    #[derive(Debug)]
+    pub struct HloModuleProto;
+
+    impl HloModuleProto {
+        pub fn from_text_file(_path: impl AsRef<Path>) -> Result<Self, XlaError> {
+            Err(unavailable())
+        }
+    }
+
+    #[derive(Debug)]
+    pub struct XlaComputation;
+
+    impl XlaComputation {
+        pub fn from_proto(_proto: &HloModuleProto) -> Self {
+            XlaComputation
+        }
+    }
+
+    #[derive(Debug)]
+    pub struct PjRtLoadedExecutable;
+
+    impl PjRtLoadedExecutable {
+        pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+            Err(unavailable())
+        }
+    }
+
+    #[derive(Debug)]
+    pub struct PjRtBuffer;
+
+    impl PjRtBuffer {
+        pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+            Err(unavailable())
+        }
+    }
+
+    #[derive(Debug)]
+    pub struct Literal;
+
+    impl Literal {
+        pub fn create_from_shape_and_untyped_data(
+            _ty: ElementType,
+            _dims: &[usize],
+            _data: &[u8],
+        ) -> Result<Literal, XlaError> {
+            Err(unavailable())
+        }
+
+        pub fn to_tuple(self) -> Result<Vec<Literal>, XlaError> {
+            Err(unavailable())
+        }
+
+        pub fn array_shape(&self) -> Result<ArrayShape, XlaError> {
+            Err(unavailable())
+        }
+
+        pub fn to_vec<T>(&self) -> Result<Vec<T>, XlaError> {
+            Err(unavailable())
+        }
+    }
+
+    #[derive(Debug)]
+    pub struct ArrayShape {
+        dims: Vec<i64>,
+    }
+
+    impl ArrayShape {
+        pub fn dims(&self) -> &[i64] {
+            &self.dims
+        }
+    }
+}

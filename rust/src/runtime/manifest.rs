@@ -296,9 +296,15 @@ impl Manifest {
     }
 
     pub fn executable(&self, name: &str) -> Result<&ExecutableInfo> {
+        Ok(&self.executables[self.index_of(name)?])
+    }
+
+    /// Position of `name` in `executables` — the integer identity behind
+    /// [`crate::runtime::ExecHandle`].
+    pub fn index_of(&self, name: &str) -> Result<usize> {
         self.executables
             .iter()
-            .find(|e| e.name == name)
+            .position(|e| e.name == name)
             .ok_or_else(|| Error::Artifact(format!("no executable named {name}")))
     }
 

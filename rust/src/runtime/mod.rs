@@ -7,19 +7,39 @@
 //!
 //! All executables are lowered with `return_tuple=True`, so every result is
 //! a tuple literal that we decompose into [`Tensor`]s.
+//!
+//! ## Hot-path design (docs/HOTPATH.md)
+//!
+//! * Callers resolve a manifest name to an [`ExecHandle`] once (at plan
+//!   build) and then execute by integer index — `execute_h` performs zero
+//!   string work on success.
+//! * The compiled-executable cache is a `Vec<OnceCell<_>>` indexed by
+//!   handle: no `RefCell` borrow is held across the PJRT call, so
+//!   re-entrant / callback use cannot panic.
+//! * Inputs are [`TensorView`]s.  Contiguous views (whole tensors, full-H
+//!   slices) convert to literals zero-copy; non-contiguous row slabs are
+//!   gathered into one reusable scratch buffer at the literal boundary.
 
+pub mod backend;
 pub mod manifest;
 pub mod tensor;
 
-use std::cell::RefCell;
-use std::collections::HashMap;
+use std::cell::{OnceCell, RefCell};
 use std::path::PathBuf;
 use std::time::Instant;
 
 pub use manifest::Manifest;
-pub use tensor::Tensor;
+pub use tensor::{Tensor, TensorView};
 
+use self::backend as xla;
 use crate::error::{Error, Result};
+
+/// True when this build links a real PJRT backend (`--features pjrt`);
+/// false for the offline stub, whose client constructor always errors.
+/// Live tests/benches use this to skip instead of failing `Runtime::open`.
+pub fn pjrt_available() -> bool {
+    xla::PJRT_AVAILABLE
+}
 
 /// Execution statistics kept by the runtime (consumed by metrics/benches).
 #[derive(Debug, Default, Clone)]
@@ -32,12 +52,31 @@ pub struct RuntimeStats {
     pub convert_ms: f64,
 }
 
+/// Resolved reference to one executable in the bundle: an index into
+/// `manifest.executables`.  Obtain via [`Runtime::handle`] (resolve only)
+/// or [`Runtime::prepare`] (resolve + compile); execute via
+/// [`Runtime::execute_h`] with no per-call name lookup.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExecHandle(pub(crate) usize);
+
+impl ExecHandle {
+    pub fn index(self) -> usize {
+        self.0
+    }
+}
+
 /// PJRT-backed executor over an artifact bundle.
 pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
     pub manifest: Manifest,
-    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    /// Compiled executables, indexed by [`ExecHandle`].  `OnceCell` gives
+    /// interior mutability without a borrow guard, so nothing is held
+    /// across the PJRT call.
+    compiled: Vec<OnceCell<xla::PjRtLoadedExecutable>>,
+    /// Reusable staging buffer for non-contiguous views at the literal
+    /// boundary (cleared and refilled per input; never shrunk).
+    scratch: RefCell<Vec<f32>>,
     stats: RefCell<RuntimeStats>,
 }
 
@@ -48,11 +87,15 @@ impl Runtime {
         let manifest = Manifest::load(&dir)?;
         let client = xla::PjRtClient::cpu()
             .map_err(|e| Error::Runtime(format!("PjRtClient::cpu: {e}")))?;
+        let compiled = (0..manifest.executables.len())
+            .map(|_| OnceCell::new())
+            .collect();
         Ok(Runtime {
             client,
             dir,
             manifest,
-            cache: RefCell::new(HashMap::new()),
+            compiled,
+            scratch: RefCell::new(Vec::new()),
             stats: RefCell::new(RuntimeStats::default()),
         })
     }
@@ -65,12 +108,38 @@ impl Runtime {
         self.stats.borrow().clone()
     }
 
+    /// Resolve a manifest name to a handle (no compilation).
+    pub fn handle(&self, name: &str) -> Result<ExecHandle> {
+        self.manifest.index_of(name).map(ExecHandle)
+    }
+
+    /// Resolve a manifest name and compile it now (warm start), in one
+    /// call.  `Trainer` construction does the same via
+    /// `StepPlan::handles()` + [`Runtime::ensure_compiled_h`], so no step
+    /// ever pays a first-use compile.
+    pub fn prepare(&self, name: &str) -> Result<ExecHandle> {
+        let h = self.handle(name)?;
+        self.ensure_compiled_h(h)?;
+        Ok(h)
+    }
+
     /// Compile (or fetch from cache) an executable by manifest name.
     pub fn ensure_compiled(&self, name: &str) -> Result<()> {
-        if self.cache.borrow().contains_key(name) {
+        let h = self.handle(name)?;
+        self.ensure_compiled_h(h)
+    }
+
+    /// Compile (or fetch from cache) a resolved handle.
+    pub fn ensure_compiled_h(&self, h: ExecHandle) -> Result<()> {
+        let cell = self
+            .compiled
+            .get(h.0)
+            .ok_or_else(|| Error::Runtime(format!("invalid exec handle {}", h.0)))?;
+        if cell.get().is_some() {
             return Ok(());
         }
-        let path = self.manifest.hlo_path(&self.dir, name)?;
+        let info = &self.manifest.executables[h.0];
+        let path = self.dir.join(&info.path);
         let t0 = Instant::now();
         let proto = xla::HloModuleProto::from_text_file(&path)
             .map_err(|e| Error::Artifact(format!("parse {}: {e}", path.display())))?;
@@ -78,72 +147,99 @@ impl Runtime {
         let exe = self
             .client
             .compile(&comp)
-            .map_err(|e| Error::Runtime(format!("compile {name}: {e}")))?;
+            .map_err(|e| Error::Runtime(format!("compile {}: {e}", info.name)))?;
         let mut stats = self.stats.borrow_mut();
         stats.compiles += 1;
         stats.compile_ms += t0.elapsed().as_secs_f64() * 1e3;
-        self.cache.borrow_mut().insert(name.to_string(), exe);
+        drop(stats);
+        let _ = cell.set(exe);
         Ok(())
     }
 
     /// Pre-compile every executable in the bundle (warm start).
     pub fn compile_all(&self) -> Result<()> {
-        let names: Vec<String> = self
-            .manifest
-            .executables
-            .iter()
-            .map(|e| e.name.clone())
-            .collect();
-        for n in &names {
-            self.ensure_compiled(n)?;
+        for i in 0..self.manifest.executables.len() {
+            self.ensure_compiled_h(ExecHandle(i))?;
         }
         Ok(())
     }
 
     /// Execute `name` on host tensors; returns the decomposed output tuple.
     ///
+    /// Legacy convenience wrapper over [`Runtime::execute_h`]; hot paths
+    /// resolve the handle once instead.
+    pub fn execute(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let h = self.handle(name)?;
+        for (i, t) in inputs.iter().enumerate() {
+            // typed error rather than tripping Tensor::view's rank assert
+            if t.shape.len() > tensor::MAX_VIEW_RANK {
+                return Err(Error::Artifact(format!(
+                    "{name}: input {i} rank {} exceeds supported rank {}",
+                    t.shape.len(),
+                    tensor::MAX_VIEW_RANK
+                )));
+            }
+        }
+        let views: Vec<TensorView> = inputs.iter().map(|t| t.view()).collect();
+        self.execute_h(h, &views)
+    }
+
+    /// Execute a prepared handle on tensor views.
+    ///
     /// Input shapes are validated against the manifest signature before the
     /// call — a mismatch is an [`Error::Artifact`], not a PJRT crash.
-    pub fn execute(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
-        let info = self.manifest.executable(name)?;
+    /// Contiguous views convert to literals zero-copy; strided row slabs
+    /// are staged through the runtime's scratch buffer.
+    pub fn execute_h(&self, h: ExecHandle, inputs: &[TensorView<'_>]) -> Result<Vec<Tensor>> {
+        let info = self
+            .manifest
+            .executables
+            .get(h.0)
+            .ok_or_else(|| Error::Runtime(format!("invalid exec handle {}", h.0)))?;
         if info.inputs.len() != inputs.len() {
             return Err(Error::Artifact(format!(
-                "{name}: expected {} inputs, got {}",
+                "{}: expected {} inputs, got {}",
+                info.name,
                 info.inputs.len(),
                 inputs.len()
             )));
         }
-        for (i, (t, expect)) in inputs.iter().zip(info.inputs.iter()).enumerate() {
-            if &t.shape != expect {
+        for (i, (v, expect)) in inputs.iter().zip(info.inputs.iter()).enumerate() {
+            if v.dims() != expect.as_slice() {
                 return Err(Error::Artifact(format!(
-                    "{name}: input {i} shape {:?} != manifest {:?}",
-                    t.shape, expect
+                    "{}: input {i} shape {:?} != manifest {:?}",
+                    info.name,
+                    v.dims(),
+                    expect
                 )));
             }
         }
-        self.ensure_compiled(name)?;
+        self.ensure_compiled_h(h)?;
 
         let t0 = Instant::now();
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| tensor_to_literal(t))
-            .collect::<Result<_>>()?;
+        let literals: Vec<xla::Literal> = {
+            let mut scratch = self.scratch.borrow_mut();
+            inputs
+                .iter()
+                .map(|v| view_to_literal(v, &mut scratch))
+                .collect::<Result<_>>()?
+        };
         let conv_in_ms = t0.elapsed().as_secs_f64() * 1e3;
 
         let t1 = Instant::now();
-        let cache = self.cache.borrow();
-        let exe = cache.get(name).expect("ensured above");
+        // OnceCell lookup: no borrow guard held across the PJRT call.
+        let exe = self.compiled[h.0].get().expect("ensured above");
         let result = exe
             .execute::<xla::Literal>(&literals)
-            .map_err(|e| Error::Runtime(format!("execute {name}: {e}")))?[0][0]
+            .map_err(|e| Error::Runtime(format!("execute {}: {e}", info.name)))?[0][0]
             .to_literal_sync()
-            .map_err(|e| Error::Runtime(format!("fetch {name}: {e}")))?;
+            .map_err(|e| Error::Runtime(format!("fetch {}: {e}", info.name)))?;
         let exec_ms = t1.elapsed().as_secs_f64() * 1e3;
 
         let t2 = Instant::now();
         let parts = result
             .to_tuple()
-            .map_err(|e| Error::Runtime(format!("untuple {name}: {e}")))?;
+            .map_err(|e| Error::Runtime(format!("untuple {}: {e}", info.name)))?;
         let mut out = Vec::with_capacity(parts.len());
         for lit in parts {
             out.push(literal_to_tensor(&lit)?);
@@ -154,10 +250,12 @@ impl Runtime {
         stats.executions += 1;
         stats.execute_ms += exec_ms;
         stats.convert_ms += conv_in_ms + conv_out_ms;
+        drop(stats);
 
         if out.len() != info.outputs.len() {
             return Err(Error::Artifact(format!(
-                "{name}: manifest promises {} outputs, got {}",
+                "{}: manifest promises {} outputs, got {}",
+                info.name,
                 info.outputs.len(),
                 out.len()
             )));
@@ -166,13 +264,23 @@ impl Runtime {
     }
 }
 
-fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
-    // single-copy path (perf pass: vec1+reshape copied the buffer twice)
-    let bytes = unsafe {
-        std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
+/// Build a PJRT literal from a (possibly strided) view.  Contiguous views
+/// are single-copy straight from the parent storage; strided views gather
+/// into `scratch` first (reused across calls, so the steady state performs
+/// no allocation either way).
+fn view_to_literal(v: &TensorView<'_>, scratch: &mut Vec<f32>) -> Result<xla::Literal> {
+    let floats: &[f32] = match v.contiguous_slice() {
+        Some(s) => s,
+        None => {
+            v.gather_into(scratch);
+            &scratch[..]
+        }
     };
-    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, &t.shape, bytes)
-        .map_err(|e| Error::Runtime(format!("literal {:?}: {e}", t.shape)))
+    let bytes = unsafe {
+        std::slice::from_raw_parts(floats.as_ptr() as *const u8, floats.len() * 4)
+    };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, v.dims(), bytes)
+        .map_err(|e| Error::Runtime(format!("literal {:?}: {e}", v.dims())))
 }
 
 fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {

@@ -5,14 +5,131 @@
 //! executable boundary.  Row-centric plumbing needs exactly two non-trivial
 //! ops: slicing / concatenating along the **H axis** (axis 2 of NCHW), which
 //! is how z^L is assembled from row outputs and δ^L is split back into rows.
+//!
+//! Since the zero-copy refactor (docs/HOTPATH.md) the live path never
+//! materializes an H-slice: [`Tensor::slice_h`] returns a borrowed
+//! [`TensorView`] — a strided window over the parent's storage — and the
+//! runtime gathers rows into a reusable scratch buffer only at the PJRT
+//! literal boundary, and only when the view is non-contiguous.
 
 use crate::error::{Error, Result};
+
+/// Maximum tensor rank a [`TensorView`] can describe without heap
+/// allocation.  NCHW activations are rank 4; parameters are rank ≤ 2.
+pub const MAX_VIEW_RANK: usize = 6;
 
 /// Dense row-major f32 tensor.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {
     pub shape: Vec<usize>,
     pub data: Vec<f32>,
+}
+
+/// Borrowed, possibly strided window over a [`Tensor`]'s storage.
+///
+/// A view is a sequence of `nchunks` equal-length contiguous runs of
+/// `chunk` elements, each `stride` elements apart, starting at `offset`
+/// into the parent storage.  For an NCHW H-slice of rows `[a, b)` the runs
+/// are the per-(n, c) plane slabs: `chunk = (b−a)·w`, `stride = h·w`.
+/// Whole-tensor views of rank-4 tensors keep the same per-plane run
+/// structure (so [`Tensor::concat_h`] can interleave planes uniformly);
+/// other ranks are a single run.
+///
+/// Constructing a view performs **no allocation and no copy** — this is
+/// what makes `slice_h` free on the live training path.
+#[derive(Clone, Copy, Debug)]
+pub struct TensorView<'a> {
+    data: &'a [f32],
+    offset: usize,
+    shape: [usize; MAX_VIEW_RANK],
+    rank: usize,
+    nchunks: usize,
+    chunk: usize,
+    stride: usize,
+}
+
+impl<'a> TensorView<'a> {
+    /// Logical dimensions of the view.
+    pub fn dims(&self) -> &[usize] {
+        &self.shape[..self.rank]
+    }
+
+    /// Total number of elements.
+    pub fn len(&self) -> usize {
+        self.nchunks * self.chunk
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn size_bytes(&self) -> u64 {
+        (self.len() * 4) as u64
+    }
+
+    /// True when the view's elements form one contiguous run in the parent.
+    pub fn is_contiguous(&self) -> bool {
+        self.nchunks <= 1 || self.stride == self.chunk
+    }
+
+    /// The backing slice, available only for contiguous views (this is the
+    /// zero-copy fast path at the literal boundary).
+    pub fn contiguous_slice(&self) -> Option<&'a [f32]> {
+        if self.is_empty() {
+            Some(&[])
+        } else if self.is_contiguous() {
+            Some(&self.data[self.offset..self.offset + self.len()])
+        } else {
+            None
+        }
+    }
+
+    fn chunk_at(&self, i: usize) -> &'a [f32] {
+        let start = self.offset + i * self.stride;
+        &self.data[start..start + self.chunk]
+    }
+
+    /// Iterate the contiguous runs of the view in logical order.
+    pub fn chunks(&self) -> impl Iterator<Item = &'a [f32]> + '_ {
+        (0..self.nchunks).map(move |i| self.chunk_at(i))
+    }
+
+    /// Gather the view's elements into `out` (cleared first).  Used by the
+    /// runtime to stage non-contiguous views into its reusable scratch
+    /// buffer before literal creation.
+    pub fn gather_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.reserve(self.len());
+        for c in self.chunks() {
+            out.extend_from_slice(c);
+        }
+    }
+
+    /// Materialize an owned [`Tensor`] with the view's contents.
+    pub fn to_tensor(&self) -> Tensor {
+        let mut data = Vec::new();
+        self.gather_into(&mut data);
+        Tensor {
+            shape: self.dims().to_vec(),
+            data,
+        }
+    }
+}
+
+impl PartialEq<Tensor> for TensorView<'_> {
+    fn eq(&self, other: &Tensor) -> bool {
+        if self.dims() != other.shape.as_slice() {
+            return false;
+        }
+        let mut off = 0usize;
+        for c in self.chunks() {
+            if c != &other.data[off..off + c.len()] {
+                return false;
+            }
+            off += c.len();
+        }
+        off == other.data.len()
+    }
 }
 
 impl Tensor {
@@ -56,51 +173,78 @@ impl Tensor {
         (self.data.len() * 4) as u64
     }
 
-    /// Slice rows `[a, b)` along the H axis (axis 2) of an NCHW tensor.
-    pub fn slice_h(&self, a: usize, b: usize) -> Result<Tensor> {
+    /// Whole-tensor (contiguous) view.  Rank-4 tensors get per-(n, c) plane
+    /// run structure so they can feed [`Tensor::concat_h`] directly.
+    ///
+    /// Panics if the tensor rank exceeds [`MAX_VIEW_RANK`] (the repo's
+    /// tensors are rank ≤ 4).
+    pub fn view(&self) -> TensorView<'_> {
+        assert!(
+            self.shape.len() <= MAX_VIEW_RANK,
+            "rank {} exceeds MAX_VIEW_RANK",
+            self.shape.len()
+        );
+        let mut shape = [0usize; MAX_VIEW_RANK];
+        shape[..self.shape.len()].copy_from_slice(&self.shape);
+        let (nchunks, chunk) = if self.shape.len() == 4 {
+            (self.shape[0] * self.shape[1], self.shape[2] * self.shape[3])
+        } else {
+            (1, self.data.len())
+        };
+        TensorView {
+            data: &self.data,
+            offset: 0,
+            shape,
+            rank: self.shape.len(),
+            nchunks,
+            chunk,
+            stride: chunk,
+        }
+    }
+
+    /// Zero-copy slice of rows `[a, b)` along the H axis (axis 2) of an
+    /// NCHW tensor.  No allocation: the result borrows `self`'s storage.
+    pub fn slice_h(&self, a: usize, b: usize) -> Result<TensorView<'_>> {
         let [n, c, h, w] = self.dims4()?;
         if a >= b || b > h {
             return Err(Error::Runtime(format!("slice_h [{a},{b}) of H={h}")));
         }
         let rows = b - a;
-        let mut out = Vec::with_capacity(n * c * rows * w);
-        for ni in 0..n {
-            for ci in 0..c {
-                let base = ((ni * c + ci) * h + a) * w;
-                out.extend_from_slice(&self.data[base..base + rows * w]);
-            }
-        }
-        Tensor::new(vec![n, c, rows, w], out)
+        Ok(TensorView {
+            data: &self.data,
+            offset: a * w,
+            shape: [n, c, rows, w, 0, 0],
+            rank: 4,
+            nchunks: n * c,
+            chunk: rows * w,
+            stride: h * w,
+        })
     }
 
-    /// Concatenate NCHW tensors along the H axis (axis 2).
-    pub fn concat_h(parts: &[&Tensor]) -> Result<Tensor> {
+    /// Concatenate NCHW views along the H axis (axis 2).  The output is
+    /// filled strictly sequentially (plane-major), so there is a single
+    /// pass of `copy_from_slice`-equivalent writes and no zero-fill.
+    pub fn concat_h(parts: &[TensorView<'_>]) -> Result<Tensor> {
         if parts.is_empty() {
             return Err(Error::Runtime("concat_h of zero tensors".into()));
         }
-        let [n, c, _, w] = parts[0].dims4()?;
+        let [n, c, _, w] = dims4_of(parts[0].dims())?;
         let mut h_total = 0usize;
         for p in parts {
-            let [pn, pc, ph, pw] = p.dims4()?;
+            let [pn, pc, ph, pw] = dims4_of(p.dims())?;
             if pn != n || pc != c || pw != w {
                 return Err(Error::Runtime(format!(
                     "concat_h mismatch {:?} vs {:?}",
-                    parts[0].shape, p.shape
+                    parts[0].dims(),
+                    p.dims()
                 )));
             }
             h_total += ph;
         }
-        let mut out = vec![0.0f32; n * c * h_total * w];
-        for ni in 0..n {
-            for ci in 0..c {
-                let mut row = 0usize;
-                for p in parts {
-                    let ph = p.shape[2];
-                    let src = ((ni * c + ci) * ph) * w;
-                    let dst = ((ni * c + ci) * h_total + row) * w;
-                    out[dst..dst + ph * w].copy_from_slice(&p.data[src..src + ph * w]);
-                    row += ph;
-                }
+        let mut out = Vec::with_capacity(n * c * h_total * w);
+        for plane in 0..n * c {
+            for p in parts {
+                out.extend_from_slice(p.chunk_at(plane));
             }
         }
         Tensor::new(vec![n, c, h_total, w], out)
@@ -117,13 +261,12 @@ impl Tensor {
                 other.shape, self.shape
             )));
         }
-        for ni in 0..n {
-            for ci in 0..c {
-                let src = ((ni * c + ci) * oh) * w;
-                let dst = ((ni * c + ci) * h + a) * w;
-                for i in 0..oh * w {
-                    self.data[dst + i] += other.data[src + i];
-                }
+        for plane in 0..n * c {
+            let src = &other.data[plane * oh * w..(plane * oh + oh) * w];
+            let dst_base = (plane * h + a) * w;
+            let dst = &mut self.data[dst_base..dst_base + oh * w];
+            for (d, s) in dst.iter_mut().zip(src) {
+                *d += s;
             }
         }
         Ok(())
@@ -144,11 +287,15 @@ impl Tensor {
     }
 
     fn dims4(&self) -> Result<[usize; 4]> {
-        if self.shape.len() != 4 {
-            return Err(Error::Runtime(format!("expected NCHW, got {:?}", self.shape)));
-        }
-        Ok([self.shape[0], self.shape[1], self.shape[2], self.shape[3]])
+        dims4_of(&self.shape)
     }
+}
+
+fn dims4_of(shape: &[usize]) -> Result<[usize; 4]> {
+    if shape.len() != 4 {
+        return Err(Error::Runtime(format!("expected NCHW, got {:?}", shape)));
+    }
+    Ok([shape[0], shape[1], shape[2], shape[3]])
 }
 
 #[cfg(test)]
@@ -160,21 +307,99 @@ mod tests {
         Tensor::new(shape.to_vec(), (0..n).map(|i| i as f32).collect()).unwrap()
     }
 
+    /// Reference implementation: the seed's copying slice.
+    fn slice_h_copy(t: &Tensor, a: usize, b: usize) -> Tensor {
+        let (n, c, h, w) = (t.shape[0], t.shape[1], t.shape[2], t.shape[3]);
+        let rows = b - a;
+        let mut out = Vec::with_capacity(n * c * rows * w);
+        for ni in 0..n {
+            for ci in 0..c {
+                let base = ((ni * c + ci) * h + a) * w;
+                out.extend_from_slice(&t.data[base..base + rows * w]);
+            }
+        }
+        Tensor::new(vec![n, c, rows, w], out).unwrap()
+    }
+
     #[test]
     fn slice_concat_roundtrip() {
         let t = seq(&[2, 3, 8, 5]);
         let a = t.slice_h(0, 3).unwrap();
         let b = t.slice_h(3, 8).unwrap();
-        let back = Tensor::concat_h(&[&a, &b]).unwrap();
+        let back = Tensor::concat_h(&[a, b]).unwrap();
         assert_eq!(t, back);
     }
 
     #[test]
     fn slice_h_values() {
         let t = seq(&[1, 1, 4, 2]);
-        let s = t.slice_h(1, 3).unwrap();
+        let s = t.slice_h(1, 3).unwrap().to_tensor();
         assert_eq!(s.shape, vec![1, 1, 2, 2]);
         assert_eq!(s.data, vec![2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn view_matches_owned_slice() {
+        let t = seq(&[3, 2, 9, 4]);
+        for (a, b) in [(0, 9), (0, 3), (2, 7), (8, 9)] {
+            let view = t.slice_h(a, b).unwrap();
+            let owned = slice_h_copy(&t, a, b);
+            assert!(view == owned, "view [{a},{b}) != copy");
+            assert_eq!(view.to_tensor(), owned);
+            assert_eq!(view.size_bytes(), owned.size_bytes());
+            assert_eq!(view.dims(), owned.shape.as_slice());
+        }
+    }
+
+    #[test]
+    fn view_contiguity() {
+        let t = seq(&[2, 3, 8, 5]);
+        assert!(t.view().is_contiguous());
+        assert!(t.slice_h(0, 8).unwrap().is_contiguous()); // full H range
+        assert!(!t.slice_h(0, 3).unwrap().is_contiguous()); // strided planes
+        let single_plane = seq(&[1, 1, 8, 5]);
+        assert!(single_plane.slice_h(2, 5).unwrap().is_contiguous());
+    }
+
+    #[test]
+    fn gather_into_equals_to_tensor() {
+        // the literal-boundary staging path: gather of a non-contiguous
+        // view must round-trip element-exactly
+        let t = seq(&[2, 4, 6, 3]);
+        let v = t.slice_h(1, 5).unwrap();
+        assert!(!v.is_contiguous());
+        assert!(v.contiguous_slice().is_none());
+        let mut scratch = vec![99.0; 7]; // pre-dirtied, must be cleared
+        v.gather_into(&mut scratch);
+        assert_eq!(scratch, v.to_tensor().data);
+        assert_eq!(scratch.len(), v.len());
+        // contiguous fast path agrees with the gather path
+        let full = t.slice_h(0, 6).unwrap();
+        let mut g = Vec::new();
+        full.gather_into(&mut g);
+        assert_eq!(full.contiguous_slice().unwrap(), &g[..]);
+    }
+
+    #[test]
+    fn concat_h_from_strided_views() {
+        // concat directly from parent-borrowing views (no materialization)
+        let t = seq(&[2, 3, 8, 5]);
+        let back = Tensor::concat_h(&[
+            t.slice_h(0, 2).unwrap(),
+            t.slice_h(2, 5).unwrap(),
+            t.slice_h(5, 8).unwrap(),
+        ])
+        .unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn concat_h_from_owned_tensor_views() {
+        let t = seq(&[2, 3, 8, 5]);
+        let a = t.slice_h(0, 3).unwrap().to_tensor();
+        let b = t.slice_h(3, 8).unwrap().to_tensor();
+        let back = Tensor::concat_h(&[a.view(), b.view()]).unwrap();
+        assert_eq!(t, back);
     }
 
     #[test]
@@ -194,5 +419,21 @@ mod tests {
         let t = seq(&[1, 1, 4, 2]);
         assert!(t.slice_h(3, 3).is_err());
         assert!(t.slice_h(2, 9).is_err());
+        let fc = seq(&[6, 3]); // rank 2: no H axis
+        assert!(fc.slice_h(0, 1).is_err());
+        assert!(Tensor::concat_h(&[fc.view()]).is_err());
+        assert!(Tensor::concat_h(&[]).is_err());
+    }
+
+    #[test]
+    fn non_nchw_view_is_single_chunk() {
+        let fc = seq(&[6, 3]);
+        let v = fc.view();
+        assert!(v.is_contiguous());
+        assert_eq!(v.chunks().count(), 1);
+        assert_eq!(v.contiguous_slice().unwrap(), &fc.data[..]);
+        let s = Tensor::scalar(4.0);
+        assert_eq!(s.view().len(), 1);
+        assert_eq!(s.view().dims(), &[] as &[usize]);
     }
 }

@@ -18,7 +18,9 @@ fn artifacts_dir() -> PathBuf {
 
 fn runtime() -> Option<Runtime> {
     let dir = artifacts_dir();
-    if !dir.join("manifest.json").exists() {
+    // skip without PJRT too: the offline stub build can't open a client
+    // even when the artifact bundle is present
+    if !dir.join("manifest.json").exists() || !lr_cnn::runtime::pjrt_available() {
         return None;
     }
     Some(Runtime::open(dir).expect("bundle present but unreadable"))
@@ -37,7 +39,7 @@ fn all_coordinated_modes_agree_with_base() {
     let (x, y) = batch(&rt, 0);
     let mut losses = Vec::new();
     for mode in [Mode::Base, Mode::RowHybrid, Mode::Tps] {
-        let mut tr = Trainer::new(&rt, mode, 0.05, 42);
+        let mut tr = Trainer::new(&rt, mode, 0.05, 42).unwrap();
         let s = tr.step(&x, &y).unwrap();
         losses.push(s.loss);
     }
@@ -50,8 +52,8 @@ fn all_coordinated_modes_agree_with_base() {
 fn naive_mode_diverges_from_base() {
     let Some(rt) = runtime() else { return };
     let (x, y) = batch(&rt, 0);
-    let base = Trainer::new(&rt, Mode::Base, 0.05, 42).step(&x, &y).unwrap().loss;
-    let naive = Trainer::new(&rt, Mode::Naive, 0.05, 42).step(&x, &y).unwrap().loss;
+    let base = Trainer::new(&rt, Mode::Base, 0.05, 42).unwrap().step(&x, &y).unwrap().loss;
+    let naive = Trainer::new(&rt, Mode::Naive, 0.05, 42).unwrap().step(&x, &y).unwrap().loss;
     // same init, but closed padding perturbs the forward — Fig. 3(b)
     assert!((base - naive).abs() > 1e-3, "base {base} vs naive {naive}");
 }
@@ -60,9 +62,9 @@ fn naive_mode_diverges_from_base() {
 fn row_forward_is_bit_near_column() {
     let Some(rt) = runtime() else { return };
     let (x, _) = batch(&rt, 1);
-    let mut row = Trainer::new(&rt, Mode::RowHybrid, 0.05, 7);
-    let mut tps = Trainer::new(&rt, Mode::Tps, 0.05, 7);
-    let mut col = Trainer::new(&rt, Mode::Base, 0.05, 7);
+    let mut row = Trainer::new(&rt, Mode::RowHybrid, 0.05, 7).unwrap();
+    let mut tps = Trainer::new(&rt, Mode::Tps, 0.05, 7).unwrap();
+    let mut col = Trainer::new(&rt, Mode::Base, 0.05, 7).unwrap();
     let zr = row.forward(&x).unwrap();
     let zt = tps.forward(&x).unwrap();
     let zc = col.forward(&x).unwrap();
@@ -77,7 +79,7 @@ fn training_reduces_loss_row_centric() {
     let Some(rt) = runtime() else { return };
     let m = rt.manifest.model.clone();
     let corpus = SyntheticCorpus::new(m.n_classes, 3, m.h, m.w, 5);
-    let mut tr = Trainer::new(&rt, Mode::RowHybrid, 0.02, 3);
+    let mut tr = Trainer::new(&rt, Mode::RowHybrid, 0.02, 3).unwrap();
     let mut first = 0.0;
     let mut last = 0.0;
     for s in 0..40u64 {
@@ -102,7 +104,7 @@ fn training_reduces_loss_row_centric() {
 fn tracker_shows_row_centric_holding_less_than_omega() {
     let Some(rt) = runtime() else { return };
     let (x, y) = batch(&rt, 2);
-    let mut tr = Trainer::new(&rt, Mode::RowHybrid, 0.05, 11);
+    let mut tr = Trainer::new(&rt, Mode::RowHybrid, 0.05, 11).unwrap();
     let stats = tr.step(&x, &y).unwrap();
     // Ω for minivgg at B=8, 32x32 — what column-centric training holds
     let net = minivgg();
