@@ -7,7 +7,7 @@
 
 RUST_MANIFEST := rust/Cargo.toml
 
-.PHONY: build test artifacts bench-hotpath bench-hotpath-quick
+.PHONY: build test artifacts bench-hotpath bench-hotpath-quick bench-sched bench-sched-quick lint
 
 build:
 	cargo build --release --manifest-path $(RUST_MANIFEST)
@@ -18,11 +18,24 @@ test:
 artifacts:
 	cd python/compile && python3 aot.py --out-dir ../../rust/artifacts
 
-# Full hot-path measurement; writes rust/BENCH_l3_hotpath.json
-# (live-step benches skip gracefully when artifacts are absent).
+# Full hot-path measurement; writes BENCH_l3_hotpath.json at the repo
+# root (live-step benches skip gracefully when artifacts are absent).
 bench-hotpath:
 	cargo bench --bench l3_hotpath --manifest-path $(RUST_MANIFEST)
 
 # CI smoke variant: reduced iteration counts, same JSON schema.
 bench-hotpath-quick:
 	BENCH_QUICK=1 cargo bench --bench l3_hotpath --manifest-path $(RUST_MANIFEST)
+
+# Serial vs pipelined row scheduling at 1/2/4/8 workers; writes
+# BENCH_sched_pipeline.json at the repo root (docs/SCHEDULER.md).
+bench-sched:
+	cargo bench --bench sched_pipeline --manifest-path $(RUST_MANIFEST)
+
+bench-sched-quick:
+	BENCH_QUICK=1 cargo bench --bench sched_pipeline --manifest-path $(RUST_MANIFEST)
+
+# What CI's lint job runs.
+lint:
+	cargo fmt --all --check
+	cargo clippy --all-targets -- -D warnings

@@ -5,11 +5,12 @@
 //! * live step timing (if artifacts are present): Base vs OverL-H vs 2PS,
 //!   splitting PJRT execute time from coordinator overhead.
 //!
-//! Results are printed *and* written to `rust/BENCH_l3_hotpath.json` so
-//! subsequent PRs can track the trajectory machine-readably (schema
-//! documented in docs/HOTPATH.md).  Pass `--quick` (or set `BENCH_QUICK=1`)
-//! for a fast smoke run in CI; live-step benches skip gracefully when
-//! `artifacts/manifest.json` is absent.
+//! Results are printed *and* written to the repo root
+//! (`BENCH_l3_hotpath.json`) so subsequent PRs can track the trajectory
+//! machine-readably (schema documented in docs/HOTPATH.md; PR 1 wrote
+//! under `rust/`, where nothing tracked it).  Pass `--quick` (or set
+//! `BENCH_QUICK=1`) for a fast smoke run in CI; live-step benches skip
+//! gracefully when `artifacts/manifest.json` is absent.
 
 use lr_cnn::baselines::Base;
 use lr_cnn::coordinator::{Mode, Trainer};
@@ -227,7 +228,9 @@ fn write_json(rec: &Recorder) {
         out.push_str(if i + 1 < rec.live.len() { ",\n" } else { "\n" });
     }
     out.push_str("  ]\n}\n");
-    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_l3_hotpath.json");
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_l3_hotpath.json");
     match std::fs::write(&path, out) {
         Ok(()) => println!("wrote {}", path.display()),
         Err(e) => eprintln!("could not write {}: {e}", path.display()),

@@ -1,0 +1,288 @@
+//! Serial vs pipelined row execution (the `sched` tentpole's measurement
+//! rig): the hybrid step's DAG shape — independent FP rows, a head
+//! barrier, independent BP rows, a reduce — driven at 1/2/4/8 workers
+//! under memory admission.
+//!
+//! The synthetic section needs no artifacts and no PJRT: each row runs a
+//! deterministic CPU kernel, so the bench exercises the real executor
+//! (locks, condvar, admission, trace) with real parallel work and checks
+//! the pipelined checksum is **bit-identical** to the serial loop's.  When
+//! an artifact bundle and a PJRT backend are present, live `Trainer` steps
+//! are measured too; otherwise that section skips gracefully.
+//!
+//! Results are printed *and* written to the repo root
+//! (`BENCH_sched_pipeline.json`) so the trajectory is tracked
+//! machine-readably (schema in docs/SCHEDULER.md).  `--quick` /
+//! `BENCH_QUICK=1` reduces iteration counts for CI.
+
+use lr_cnn::coordinator::{Mode, Trainer};
+use lr_cnn::data::SyntheticCorpus;
+use lr_cnn::metrics::bench;
+use lr_cnn::runtime::Runtime;
+use lr_cnn::sched::{self, Dag, NodeKind, Policy, SchedConfig, Slot};
+
+use std::fmt::Write as _;
+
+const ROWS: usize = 8;
+const ROW_BYTES: u64 = 64 << 20; // pretend 64 MiB slab+z per row
+
+/// Deterministic CPU kernel standing in for a row executable.  The loop
+/// carries a serial dependency so the optimizer cannot collapse it.
+fn row_work(seed: u64, flops: usize) -> f32 {
+    let mut x = (seed as f32).mul_add(0.001, 1.0);
+    let mut acc = 0.0f32;
+    for i in 0..flops {
+        x = x.mul_add(1.000_000_1, 0.000_000_1);
+        acc += x * ((i & 7) as f32);
+    }
+    std::hint::black_box(acc)
+}
+
+/// The hybrid step shape: FP rows ∥ → head → BP rows ∥ → reduce.
+fn synth_dag() -> Dag {
+    let mut dag = Dag::new();
+    let fp: Vec<_> = (0..ROWS)
+        .map(|r| dag.push(NodeKind::Row, format!("fp.row{r}"), vec![], ROW_BYTES))
+        .collect();
+    let head = dag.push(NodeKind::Barrier, "head", fp, ROW_BYTES);
+    let bp: Vec<_> = (0..ROWS)
+        .map(|r| dag.push(NodeKind::Row, format!("bp.row{r}"), vec![head], ROW_BYTES))
+        .collect();
+    dag.push(NodeKind::Barrier, "reduce", bp, 0);
+    dag
+}
+
+/// One full "step" over the DAG via the scheduler; returns the checksum.
+fn pipelined_step(dag: &Dag, cfg: &SchedConfig, flops: usize) -> (f32, u64) {
+    let fp_out: Vec<Slot<f32>> = Slot::many(ROWS);
+    let bp_out: Vec<Slot<f32>> = Slot::many(ROWS);
+    let head_out: Slot<f32> = Slot::new();
+    let result: Slot<f32> = Slot::new();
+    let outcome = sched::run(dag, cfg, |id| {
+        let label = dag.node(id).label.as_str();
+        if let Some(r) = label.strip_prefix("fp.row") {
+            let r: usize = r.parse().expect("row index");
+            fp_out[r].put("fp", row_work(r as u64, flops))
+        } else if let Some(r) = label.strip_prefix("bp.row") {
+            let r: usize = r.parse().expect("row index");
+            let h = head_out.cloned("head")?;
+            bp_out[r].put("bp", row_work(r as u64 + 100, flops) + h * 1e-6)
+        } else if label == "head" {
+            // reduction in fixed row order — the determinism contract
+            let mut acc = 0.0f32;
+            for s in &fp_out {
+                acc += s.take("fp")?;
+            }
+            head_out.put("head", acc)
+        } else {
+            let mut acc = head_out.take("head")?;
+            for s in &bp_out {
+                acc += s.take("bp")?;
+            }
+            result.put("result", acc)
+        }
+    })
+    .expect("scheduler run succeeds");
+    (result.take("result").expect("result set"), outcome.peak_bytes)
+}
+
+/// The same arithmetic as a plain serial loop (the reference).
+fn serial_step(flops: usize) -> f32 {
+    let mut head = 0.0f32;
+    let fp: Vec<f32> = (0..ROWS).map(|r| row_work(r as u64, flops)).collect();
+    for v in &fp {
+        head += v;
+    }
+    let bp: Vec<f32> = (0..ROWS)
+        .map(|r| row_work(r as u64 + 100, flops) + head * 1e-6)
+        .collect();
+    let mut acc = head;
+    for v in &bp {
+        acc += v;
+    }
+    acc
+}
+
+struct PipeRec {
+    workers: usize,
+    mean_ms: f64,
+    p50_ms: f64,
+    speedup: f64,
+    peak_bytes: u64,
+}
+
+struct LiveRec {
+    mode: String,
+    workers: usize,
+    mean_ms: f64,
+    speedup: f64,
+    peak_bytes: u64,
+}
+
+fn live_steps(quick: bool, live: &mut Vec<LiveRec>) {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("(artifacts missing — run `make artifacts` for live-step benches)");
+        return;
+    }
+    if !lr_cnn::runtime::pjrt_available() {
+        println!("(offline stub backend — rebuild with --features pjrt for live-step benches)");
+        return;
+    }
+    let (warmup, iters) = if quick { (1, 5) } else { (3, 30) };
+    let rt = Runtime::open(dir).unwrap();
+    let m = rt.manifest.model.clone();
+    let corpus = SyntheticCorpus::new(m.n_classes, 3, m.h, m.w, 1);
+    let (x, y, _) = corpus.batch(0, m.batch);
+    for mode in [Mode::RowHybrid, Mode::Tps] {
+        let mut serial_ms = 0.0;
+        for workers in [0usize, 1, 2, 4, 8] {
+            // workers == 0 encodes the serial baseline row
+            let mut tr = Trainer::new(&rt, mode, 0.0, 9).unwrap();
+            if workers > 0 {
+                tr.set_sched(SchedConfig::pipelined(workers));
+            }
+            for _ in 0..warmup {
+                tr.step(&x, &y).unwrap();
+            }
+            let mut peak = 0u64;
+            let r = bench::time(
+                &format!("live {} w={workers}", mode.label()),
+                0,
+                iters,
+                || {
+                    let s = tr.step(&x, &y).unwrap();
+                    peak = peak.max(s.peak_bytes);
+                    s.loss
+                },
+            );
+            println!("{}", r.report());
+            if workers == 0 {
+                serial_ms = r.mean_ms;
+            }
+            live.push(LiveRec {
+                mode: mode.label().to_string(),
+                workers,
+                mean_ms: r.mean_ms,
+                speedup: if workers == 0 { 1.0 } else { serial_ms / r.mean_ms },
+                peak_bytes: peak,
+            });
+        }
+    }
+}
+
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.4}")
+    } else {
+        "null".into()
+    }
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    // ~1 ms of row work per row in full mode
+    let flops = if quick { 60_000 } else { 400_000 };
+    let (warmup, iters) = if quick { (2, 10) } else { (5, 40) };
+
+    let dag = synth_dag();
+    // budget: half the fan may fly at once — admission must hold this line
+    let budget = ROW_BYTES * (ROWS as u64 / 2);
+
+    let reference = serial_step(flops);
+    let r_serial = bench::time("serial loop (reference)", warmup, iters, || {
+        serial_step(flops)
+    });
+    println!("{}", r_serial.report());
+
+    let mut pipelined: Vec<PipeRec> = Vec::new();
+    for workers in [1usize, 2, 4, 8] {
+        let cfg = SchedConfig {
+            workers,
+            mem_budget: budget,
+            policy: Policy::Pipelined,
+        };
+        // determinism: bit-identical to the serial loop, every time
+        let (sum, peak) = pipelined_step(&dag, &cfg, flops);
+        assert_eq!(
+            sum.to_bits(),
+            reference.to_bits(),
+            "pipelined checksum must be bit-identical to serial"
+        );
+        assert!(
+            peak <= budget,
+            "admission peak {peak} exceeded budget {budget}"
+        );
+        let mut max_peak = 0u64;
+        let r = bench::time(
+            &format!("pipelined {workers} worker(s), budget {} rows", ROWS / 2),
+            warmup,
+            iters,
+            || {
+                let (sum, peak) = pipelined_step(&dag, &cfg, flops);
+                max_peak = max_peak.max(peak);
+                sum
+            },
+        );
+        let speedup = r_serial.mean_ms / r.mean_ms;
+        println!("{}   [speedup ×{speedup:.2}, peak {max_peak} B]", r.report());
+        pipelined.push(PipeRec {
+            workers,
+            mean_ms: r.mean_ms,
+            p50_ms: r.p50_ms,
+            speedup,
+            peak_bytes: max_peak,
+        });
+    }
+
+    let mut live: Vec<LiveRec> = Vec::new();
+    live_steps(quick, &mut live);
+
+    // ---- JSON at the repo root (tracked trajectory) ----
+    let mut out = String::new();
+    out.push_str("{\n  \"bench\": \"sched_pipeline\",\n  \"schema\": 1,\n");
+    let _ = writeln!(out, "  \"quick\": {quick},");
+    let _ = writeln!(
+        out,
+        "  \"rows\": {ROWS},\n  \"row_bytes\": {ROW_BYTES},\n  \"budget\": {budget},"
+    );
+    let _ = writeln!(out, "  \"serial_ms\": {},", json_num(r_serial.mean_ms));
+    out.push_str("  \"pipelined\": [\n");
+    for (i, p) in pipelined.iter().enumerate() {
+        let _ = write!(
+            out,
+            "    {{\"workers\": {}, \"mean_ms\": {}, \"p50_ms\": {}, \"speedup\": {}, \
+             \"peak_bytes\": {}, \"under_budget\": {}}}",
+            p.workers,
+            json_num(p.mean_ms),
+            json_num(p.p50_ms),
+            json_num(p.speedup),
+            p.peak_bytes,
+            p.peak_bytes <= budget,
+        );
+        out.push_str(if i + 1 < pipelined.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ],\n  \"live_steps\": [\n");
+    for (i, l) in live.iter().enumerate() {
+        let _ = write!(
+            out,
+            "    {{\"mode\": \"{}\", \"workers\": {}, \"mean_ms\": {}, \"speedup\": {}, \
+             \"peak_bytes\": {}}}",
+            l.mode,
+            l.workers,
+            json_num(l.mean_ms),
+            json_num(l.speedup),
+            l.peak_bytes,
+        );
+        out.push_str(if i + 1 < live.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ]\n}\n");
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_sched_pipeline.json");
+    match std::fs::write(&path, out) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}

@@ -7,6 +7,11 @@
 //! accumulating parameter gradients across rows.  Python is never invoked —
 //! only the AOT artifacts are.
 //!
+//! Steps run serially by default; `Trainer::set_sched` switches to the
+//! pipelined row scheduler (`crate::sched`), which executes the same plan
+//! as a row dependency DAG on worker threads with bit-identical results
+//! (docs/SCHEDULER.md).
+//!
 //! Four execution modes mirror the paper's Fig. 11 branches plus Base:
 //! * [`Mode::Base`]      — column-centric oracle (1 executable/step)
 //! * [`Mode::RowHybrid`] — OverL-H: halo slabs, checkpoint at pool2
@@ -20,4 +25,4 @@ pub mod trainer;
 
 pub use optim::{Optimizer, OptimizerKind};
 pub use params::ParamSet;
-pub use trainer::{naive_row_extents, Mode, StepPlan, StepStats, Trainer};
+pub use trainer::{naive_row_extents, Mode, PipePlan, StepPlan, StepStats, Trainer};

@@ -19,6 +19,13 @@ pub enum Error {
     Runtime(String),
     /// Configuration error (bad CLI/layer-graph parameters).
     Config(String),
+    /// Live-path memory-accounting violation (double free, unknown buffer).
+    /// Recoverable by design: a scheduler bug must not abort a long
+    /// training run the way the old tracker `panic!` did.
+    Memory(String),
+    /// Row-scheduler invariant violation (mis-built DAG, executor stall,
+    /// slot handoff misuse).
+    Sched(String),
     Io(std::io::Error),
     /// JSON parse/shape error from the in-tree parser (util::json).
     Json2(String),
@@ -41,6 +48,8 @@ impl fmt::Display for Error {
             Error::Artifact(m) => write!(f, "artifact error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Memory(m) => write!(f, "memory accounting error: {m}"),
+            Error::Sched(m) => write!(f, "scheduler error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Json2(e) => write!(f, "json error: {e}"),
         }

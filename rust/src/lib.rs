@@ -29,7 +29,8 @@
 //! | [`baselines`] | Base, Ckp, OffLoad, Tsplit memory/time schedules |
 //! | [`costmodel`] | τ/ι FLOP model, CI/OD counters, relative latency |
 //! | [`runtime`] | PJRT client, manifest, `ExecHandle` executable table, zero-copy `TensorView` plumbing |
-//! | [`coordinator`] | live row scheduler: prebuilt `StepPlan`, FP/BP loops, SGD, training |
+//! | [`sched`] | weak-dependency row scheduler: dependency DAG, memory admission, pipelined worker-pool executor |
+//! | [`coordinator`] | live row coordinator: prebuilt `StepPlan`, serial + pipelined FP/BP, SGD, training |
 //! | [`data`] | synthetic 10-class corpus |
 //! | [`metrics`] | counters + report tables for the benches |
 //!
@@ -54,6 +55,7 @@ pub mod metrics;
 pub mod model;
 pub mod planner;
 pub mod runtime;
+pub mod sched;
 pub mod shapes;
 pub mod util;
 

@@ -15,5 +15,5 @@ pub mod trace;
 pub mod tracker;
 
 pub use device::DeviceModel;
-pub use sim::{Event, Schedule, SimReport};
+pub use sim::{Event, Schedule, SimId, SimReport};
 pub use tracker::{BufId, Tracker};

@@ -5,13 +5,36 @@
 //! replays it and reports the peak resident bytes.  This is the byte-exact
 //! stand-in for the paper's OOM probing: a strategy "fits" a device iff
 //! `peak + ξ < capacity`.
+//!
+//! ## Interned ids (docs/HOTPATH.md)
+//!
+//! Buffer names intern into a per-schedule [`SimId`] (the simulator's
+//! counterpart of the live tracker's `BufId`), and replay of id events is
+//! pure array indexing — no per-event `String` hashing.  The string-keyed
+//! builder methods ([`Schedule::alloc`] / [`Schedule::free`] /
+//! [`Schedule::mark`]) are thin adapters that intern once at build time
+//! and push id events, so every planner/baseline schedule replays
+//! hash-free without touching its call sites.  Raw string [`Event`]s remain
+//! accepted for compatibility and replay through a side map.
 
 use std::collections::HashMap;
 
 use crate::error::{Error, Result};
 
+/// Interned buffer/label name: an index into its [`Schedule`]'s name table.
+/// Only valid for the schedule that interned it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SimId(u32);
+
+impl SimId {
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
 /// One allocation event.  Buffer ids are strategy-chosen strings (useful in
-/// reports: "fmap.l3.row2", "cache.l1", "offload.staging", ...).
+/// reports: "fmap.l3.row2", "cache.l1", "offload.staging", ...) — interned
+/// to [`SimId`]s by the builder methods, hash-free on replay.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Event {
     Alloc { id: String, bytes: u64 },
@@ -19,38 +42,91 @@ pub enum Event {
     /// Annotation marking a phase boundary (FP row start, BP row start...);
     /// carried into the report's peak attribution.
     Mark { label: String },
+    AllocId { id: SimId, bytes: u64 },
+    FreeId { id: SimId },
+    MarkId { id: SimId },
 }
 
 /// An iteration's allocation schedule.
 #[derive(Debug, Clone, Default)]
 pub struct Schedule {
     pub events: Vec<Event>,
+    names: Vec<String>,
+    index: HashMap<String, u32>,
 }
 
 impl Schedule {
     pub fn new() -> Self {
-        Schedule { events: Vec::new() }
+        Schedule::default()
     }
 
+    /// Intern a buffer/label name; idempotent (same name ⇒ same id).
+    pub fn intern(&mut self, name: impl Into<String>) -> SimId {
+        let name = name.into();
+        if let Some(&i) = self.index.get(&name) {
+            return SimId(i);
+        }
+        let i = self.names.len() as u32;
+        self.names.push(name.clone());
+        self.index.insert(name, i);
+        SimId(i)
+    }
+
+    /// Resolve an interned id back to its name.
+    pub fn name(&self, id: SimId) -> &str {
+        &self.names[id.index()]
+    }
+
+    // ---- id-based builders (hash-free replay) ----
+
+    pub fn alloc_id(&mut self, id: SimId, bytes: u64) {
+        self.events.push(Event::AllocId { id, bytes });
+    }
+
+    pub fn free_id(&mut self, id: SimId) {
+        self.events.push(Event::FreeId { id });
+    }
+
+    pub fn mark_id(&mut self, id: SimId) {
+        self.events.push(Event::MarkId { id });
+    }
+
+    // ---- string adapters (intern once at build, delegate to ids) ----
+
     pub fn alloc(&mut self, id: impl Into<String>, bytes: u64) {
-        self.events.push(Event::Alloc {
-            id: id.into(),
-            bytes,
-        });
+        let id = self.intern(id);
+        self.alloc_id(id, bytes);
     }
 
     pub fn free(&mut self, id: impl Into<String>) {
-        self.events.push(Event::Free { id: id.into() });
+        let id = self.intern(id);
+        self.free_id(id);
     }
 
     pub fn mark(&mut self, label: impl Into<String>) {
-        self.events.push(Event::Mark {
-            label: label.into(),
-        });
+        let id = self.intern(label);
+        self.mark_id(id);
     }
 
+    /// Append `other`'s events, re-interning its ids into this schedule's
+    /// name table (ids are schedule-local).
     pub fn extend(&mut self, other: Schedule) {
-        self.events.extend(other.events);
+        let map: Vec<SimId> = other
+            .names
+            .iter()
+            .map(|n| self.intern(n.clone()))
+            .collect();
+        for ev in other.events {
+            self.events.push(match ev {
+                Event::AllocId { id, bytes } => Event::AllocId {
+                    id: map[id.index()],
+                    bytes,
+                },
+                Event::FreeId { id } => Event::FreeId { id: map[id.index()] },
+                Event::MarkId { id } => Event::MarkId { id: map[id.index()] },
+                stringly => stringly,
+            });
+        }
     }
 }
 
@@ -67,29 +143,83 @@ pub struct SimReport {
     pub allocs: u64,
 }
 
+/// Phase label during replay — a copyable reference, resolved to a `String`
+/// only once at the end (no per-peak-update clone).
+#[derive(Clone, Copy)]
+enum Phase<'a> {
+    Start,
+    Str(&'a str),
+    Id(SimId),
+}
+
+impl Phase<'_> {
+    fn resolve(self, s: &Schedule) -> String {
+        match self {
+            Phase::Start => "start".into(),
+            Phase::Str(l) => l.into(),
+            Phase::Id(id) => s.name(id).into(),
+        }
+    }
+}
+
 /// Replay a schedule.  Double-alloc, unknown-free and double-free are hard
 /// errors: a strategy emitting them is buggy, not unlucky.
 pub fn simulate(s: &Schedule) -> Result<SimReport> {
-    let mut live: HashMap<&str, u64> = HashMap::new();
+    // id events replay against a dense ledger (array indexing only);
+    // raw string events replay against a side map.
+    let mut live_id: Vec<Option<u64>> = vec![None; s.names.len()];
+    let mut live_str: HashMap<&str, u64> = HashMap::new();
     let mut cur: u64 = 0;
     let mut peak: u64 = 0;
-    let mut peak_at = String::from("start");
-    let mut phase = String::from("start");
+    let mut peak_at = Phase::Start;
+    let mut phase = Phase::Start;
     let mut allocs = 0u64;
+    fn bump<'a>(cur: u64, peak: &mut u64, peak_at: &mut Phase<'a>, phase: Phase<'a>) {
+        if cur > *peak {
+            *peak = cur;
+            *peak_at = phase;
+        }
+    }
     for ev in &s.events {
         match ev {
+            Event::AllocId { id, bytes } => {
+                let slot = live_id.get_mut(id.index()).ok_or_else(|| {
+                    Error::InfeasiblePlan(format!("foreign SimId {}", id.index()))
+                })?;
+                if slot.replace(*bytes).is_some() {
+                    return Err(Error::InfeasiblePlan(format!(
+                        "double alloc of '{}'",
+                        s.name(*id)
+                    )));
+                }
+                cur += *bytes;
+                allocs += 1;
+                bump(cur, &mut peak, &mut peak_at, phase);
+            }
+            Event::FreeId { id } => {
+                let slot = live_id.get_mut(id.index()).ok_or_else(|| {
+                    Error::InfeasiblePlan(format!("foreign SimId {}", id.index()))
+                })?;
+                match slot.take() {
+                    Some(b) => cur -= b,
+                    None => {
+                        return Err(Error::InfeasiblePlan(format!(
+                            "free of unknown buffer '{}'",
+                            s.name(*id)
+                        )))
+                    }
+                }
+            }
+            Event::MarkId { id } => phase = Phase::Id(*id),
             Event::Alloc { id, bytes } => {
-                if live.insert(id.as_str(), *bytes).is_some() {
+                if live_str.insert(id.as_str(), *bytes).is_some() {
                     return Err(Error::InfeasiblePlan(format!("double alloc of '{id}'")));
                 }
                 cur += *bytes;
                 allocs += 1;
-                if cur > peak {
-                    peak = cur;
-                    peak_at = phase.clone();
-                }
+                bump(cur, &mut peak, &mut peak_at, phase);
             }
-            Event::Free { id } => match live.remove(id.as_str()) {
+            Event::Free { id } => match live_str.remove(id.as_str()) {
                 Some(b) => cur -= b,
                 None => {
                     return Err(Error::InfeasiblePlan(format!(
@@ -97,13 +227,13 @@ pub fn simulate(s: &Schedule) -> Result<SimReport> {
                     )))
                 }
             },
-            Event::Mark { label } => phase = label.clone(),
+            Event::Mark { label } => phase = Phase::Str(label),
         }
     }
     Ok(SimReport {
         peak_bytes: peak,
         final_bytes: cur,
-        peak_at,
+        peak_at: peak_at.resolve(s),
         allocs,
     })
 }
@@ -162,5 +292,91 @@ mod tests {
             check_fits(&s, 1500, 2000, "t"),
             Err(Error::OutOfMemory { .. })
         ));
+    }
+
+    /// The acceptance bar for the interned-event refactor: raw string
+    /// events and the id-adapter builders produce byte-identical reports.
+    #[test]
+    fn id_events_match_string_events_byte_for_byte() {
+        // raw string events (the pre-refactor representation)
+        let mut raw = Schedule::new();
+        raw.events.push(Event::Mark { label: "fp".into() });
+        raw.events.push(Event::Alloc { id: "a".into(), bytes: 100 });
+        raw.events.push(Event::Alloc { id: "b".into(), bytes: 50 });
+        raw.events.push(Event::Free { id: "a".into() });
+        raw.events.push(Event::Mark { label: "bp".into() });
+        raw.events.push(Event::Alloc { id: "c".into(), bytes: 75 });
+        raw.events.push(Event::Free { id: "b".into() });
+
+        // builder methods (now interning adapters)
+        let mut s = Schedule::new();
+        s.mark("fp");
+        s.alloc("a", 100);
+        s.alloc("b", 50);
+        s.free("a");
+        s.mark("bp");
+        s.alloc("c", 75);
+        s.free("b");
+        assert!(
+            s.events.iter().all(|e| matches!(
+                e,
+                Event::AllocId { .. } | Event::FreeId { .. } | Event::MarkId { .. }
+            )),
+            "builders must emit id events"
+        );
+
+        let (a, b) = (simulate(&raw).unwrap(), simulate(&s).unwrap());
+        assert_eq!(a.peak_bytes, b.peak_bytes);
+        assert_eq!(a.final_bytes, b.final_bytes);
+        assert_eq!(a.peak_at, b.peak_at);
+        assert_eq!(a.allocs, b.allocs);
+    }
+
+    #[test]
+    fn interning_is_idempotent_and_resolvable() {
+        let mut s = Schedule::new();
+        let a = s.intern("fmap.l3.row2");
+        let b = s.intern("fmap.l3.row2");
+        assert_eq!(a, b);
+        assert_eq!(s.name(a), "fmap.l3.row2");
+    }
+
+    #[test]
+    fn extend_remaps_ids_across_schedules() {
+        let mut a = Schedule::new();
+        a.alloc("x", 10); // x = id 0 in `a`
+        let mut b = Schedule::new();
+        b.alloc("y", 5); // y = id 0 in `b`
+        b.free("y");
+        a.extend(b);
+        a.free("x");
+        let r = simulate(&a).unwrap();
+        assert_eq!(r.peak_bytes, 15);
+        assert_eq!(r.final_bytes, 0);
+    }
+
+    #[test]
+    fn foreign_sim_id_is_an_error_not_a_panic() {
+        let mut other = Schedule::new();
+        for i in 0..5 {
+            other.intern(format!("buf{i}"));
+        }
+        let foreign = other.intern("buf4");
+        let mut s = Schedule::new();
+        s.alloc_id(foreign, 1); // id 4 does not exist in `s`
+        assert!(simulate(&s).is_err());
+    }
+
+    #[test]
+    fn mixed_raw_and_id_events_share_one_byte_ledger() {
+        let mut s = Schedule::new();
+        let a = s.intern("a");
+        s.alloc_id(a, 100);
+        s.events.push(Event::Alloc { id: "b".into(), bytes: 50 });
+        s.free_id(a);
+        s.events.push(Event::Free { id: "b".into() });
+        let r = simulate(&s).unwrap();
+        assert_eq!(r.peak_bytes, 150);
+        assert_eq!(r.final_bytes, 0);
     }
 }

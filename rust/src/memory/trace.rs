@@ -25,23 +25,37 @@ pub fn to_chrome_trace(s: &Schedule, title: &str) -> Result<String> {
         first = false;
         out.push_str(&json);
     };
+    // id and raw string events resolve to the same (name, bytes) currency
+    enum Act<'a> {
+        Alloc(&'a str, u64),
+        Free(&'a str),
+        Mark(&'a str),
+    }
     for (t, ev) in s.events.iter().enumerate() {
-        match ev {
-            Event::Alloc { id, bytes } => {
-                live.insert(id, *bytes);
+        let act = match ev {
+            Event::Alloc { id, bytes } => Act::Alloc(id.as_str(), *bytes),
+            Event::AllocId { id, bytes } => Act::Alloc(s.name(*id), *bytes),
+            Event::Free { id } => Act::Free(id.as_str()),
+            Event::FreeId { id } => Act::Free(s.name(*id)),
+            Event::Mark { label } => Act::Mark(label.as_str()),
+            Event::MarkId { id } => Act::Mark(s.name(*id)),
+        };
+        match act {
+            Act::Alloc(id, bytes) => {
+                live.insert(id, bytes);
                 cur += bytes;
             }
-            Event::Free { id } => {
-                cur -= live.remove(id.as_str()).unwrap_or(0);
+            Act::Free(id) => {
+                cur -= live.remove(id).unwrap_or(0);
             }
-            Event::Mark { label } => {
+            Act::Mark(label) => {
                 if let Some((prev, start)) = phase_start.take() {
                     emit(&mut out, format!(
                         "{{\"name\":{prev:?},\"ph\":\"X\",\"ts\":{start},\"dur\":{},\"pid\":1,\"tid\":1}}",
                         t - start
                     ));
                 }
-                phase_start = Some((label.clone(), t));
+                phase_start = Some((label.to_string(), t));
             }
         }
         emit(&mut out, format!(

@@ -17,6 +17,8 @@
 
 use std::collections::HashMap;
 
+use crate::error::{Error, Result};
+
 /// Interned buffer/phase name: an index into the tracker's name table.
 /// Stable across [`Tracker::reset`], so a step plan interns once and reuses
 /// the IDs every step.
@@ -98,13 +100,26 @@ impl Tracker {
         }
     }
 
-    pub fn free_id(&mut self, id: BufId) {
-        let slot = &mut self.live[id.index()];
+    /// Release a buffer.  Freeing an id that is not currently allocated is
+    /// an [`Error::Memory`] (not a panic): the live path runs for hours and
+    /// a scheduler accounting bug must surface as a failed step, not an
+    /// abort of the whole training run.
+    pub fn free_id(&mut self, id: BufId) -> Result<()> {
+        let slot = self
+            .live
+            .get_mut(id.index())
+            .ok_or_else(|| Error::Memory(format!("free of foreign BufId {}", id.index())))?;
         let bytes = match slot.take() {
             Some(b) => b,
-            None => panic!("free of unknown buffer '{}'", self.names[id.index()]),
+            None => {
+                return Err(Error::Memory(format!(
+                    "free of unknown buffer '{}'",
+                    self.names[id.index()]
+                )))
+            }
         };
         self.cur -= bytes;
+        Ok(())
     }
 
     // ---- string-keyed wrappers (cold paths / tests) ----
@@ -119,10 +134,10 @@ impl Tracker {
         self.alloc_id(id, bytes);
     }
 
-    pub fn free(&mut self, id: &str) {
+    pub fn free(&mut self, id: &str) -> Result<()> {
         match self.index.get(id) {
             Some(&i) => self.free_id(BufId(i)),
-            None => panic!("free of unknown buffer '{id}'"),
+            None => Err(Error::Memory(format!("free of unknown buffer '{id}'"))),
         }
     }
 
@@ -130,6 +145,18 @@ impl Tracker {
 
     pub fn current(&self) -> u64 {
         self.cur
+    }
+
+    /// Bytes left under `budget` given the currently-live ledger — the
+    /// scheduler's admission-control query (`sched::Admission` derives its
+    /// step budget from this plus a `DeviceModel`).
+    pub fn headroom(&self, budget: u64) -> u64 {
+        budget.saturating_sub(self.cur)
+    }
+
+    /// Would allocating `bytes` more stay within `budget`?
+    pub fn would_fit(&self, bytes: u64, budget: u64) -> bool {
+        self.cur.saturating_add(bytes) <= budget
     }
 
     pub fn peak(&self) -> u64 {
@@ -179,7 +206,7 @@ mod tests {
         t.mark("fp");
         t.alloc("x", 10);
         t.alloc("y", 20);
-        t.free("x");
+        t.free("x").unwrap();
         t.mark("bp");
         t.alloc("z", 5);
         assert_eq!(t.peak(), 30);
@@ -197,29 +224,50 @@ mod tests {
         t.alloc("x", 1);
     }
 
-    #[test]
-    #[should_panic(expected = "free of unknown buffer")]
-    fn free_of_unknown_name_panics() {
-        let mut t = Tracker::new();
-        t.free("never-allocated");
+    fn expect_memory_error(r: crate::error::Result<()>) {
+        match r {
+            Err(Error::Memory(msg)) => assert!(msg.contains("free of unknown buffer"), "{msg}"),
+            other => panic!("expected Error::Memory, got {:?}", other.is_ok()),
+        }
     }
 
     #[test]
-    #[should_panic(expected = "free of unknown buffer")]
-    fn free_of_unknown_id_panics() {
+    fn free_of_unknown_name_is_a_memory_error() {
+        let mut t = Tracker::new();
+        expect_memory_error(t.free("never-allocated"));
+    }
+
+    #[test]
+    fn free_of_unknown_id_is_a_memory_error() {
         let mut t = Tracker::new();
         let id = t.intern("interned-but-never-allocated");
-        t.free_id(id);
+        expect_memory_error(t.free_id(id));
     }
 
     #[test]
-    #[should_panic(expected = "free of unknown buffer")]
-    fn double_free_panics() {
+    fn double_free_is_a_memory_error_and_ledger_survives() {
         let mut t = Tracker::new();
         let id = t.intern("x");
+        let other = t.intern("y");
         t.alloc_id(id, 8);
-        t.free_id(id);
-        t.free_id(id);
+        t.alloc_id(other, 4);
+        t.free_id(id).unwrap();
+        expect_memory_error(t.free_id(id));
+        // the ledger is still usable after the error — nothing aborted
+        assert_eq!(t.current(), 4);
+        t.free_id(other).unwrap();
+        assert_eq!(t.current(), 0);
+    }
+
+    #[test]
+    fn budget_queries() {
+        let mut t = Tracker::new();
+        t.alloc("x", 60);
+        assert_eq!(t.headroom(100), 40);
+        assert_eq!(t.headroom(50), 0);
+        assert!(t.would_fit(40, 100));
+        assert!(!t.would_fit(41, 100));
+        assert!(t.would_fit(u64::MAX, u64::MAX)); // saturating, no overflow
     }
 
     #[test]
@@ -238,10 +286,10 @@ mod tests {
         s.mark("fp");
         s.alloc("a", 100);
         s.alloc("b", 50);
-        s.free("a");
+        s.free("a").unwrap();
         s.mark("bp");
         s.alloc("c", 75);
-        s.free("b");
+        s.free("b").unwrap();
 
         let mut t = Tracker::new();
         let (fp, bp) = (t.intern("fp"), t.intern("bp"));
@@ -249,10 +297,10 @@ mod tests {
         t.mark_id(fp);
         t.alloc_id(a, 100);
         t.alloc_id(b, 50);
-        t.free_id(a);
+        t.free_id(a).unwrap();
         t.mark_id(bp);
         t.alloc_id(c, 75);
-        t.free_id(b);
+        t.free_id(b).unwrap();
 
         assert_eq!(s.peak(), t.peak());
         assert_eq!(s.current(), t.current());

@@ -15,6 +15,12 @@
 //!
 //! The stub mirrors exactly the subset of the `xla` crate surface that
 //! `runtime::mod` consumes; keep the two in sync when touching either.
+//!
+//! Since the pipelined row scheduler (`crate::sched`) executes from worker
+//! threads, `Runtime` is `Sync` — which requires the backend's client /
+//! executable / literal types to be `Send + Sync`.  The stub's unit structs
+//! are trivially so; a real `pjrt` binding whose types are not must be
+//! wrapped before enabling the feature.
 
 #[cfg(all(feature = "pjrt", not(has_xla)))]
 compile_error!(

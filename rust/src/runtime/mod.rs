@@ -8,24 +8,31 @@
 //! All executables are lowered with `return_tuple=True`, so every result is
 //! a tuple literal that we decompose into [`Tensor`]s.
 //!
-//! ## Hot-path design (docs/HOTPATH.md)
+//! ## Hot-path design (docs/HOTPATH.md, docs/SCHEDULER.md)
 //!
 //! * Callers resolve a manifest name to an [`ExecHandle`] once (at plan
 //!   build) and then execute by integer index — `execute_h` performs zero
 //!   string work on success.
-//! * The compiled-executable cache is a `Vec<OnceCell<_>>` indexed by
-//!   handle: no `RefCell` borrow is held across the PJRT call, so
-//!   re-entrant / callback use cannot panic.
+//! * The runtime is **`Sync`**: the pipelined row scheduler
+//!   (`crate::sched`) calls [`Runtime::execute_h`] from multiple worker
+//!   threads.  The compiled-executable cache is a `Vec<OnceLock<_>>`
+//!   indexed by handle (no guard held across the PJRT call), stats sit
+//!   behind a `Mutex`, and the literal-staging scratch buffer is
+//!   thread-local — one reusable buffer per worker thread, contention-free
+//!   and allocation-free within a worker's lifetime.  (The scheduler
+//!   currently spawns its pool per step, so pipelined steps re-grow the
+//!   buffers; a persistent pool is a ROADMAP open item.)
 //! * Inputs are [`TensorView`]s.  Contiguous views (whole tensors, full-H
 //!   slices) convert to literals zero-copy; non-contiguous row slabs are
-//!   gathered into one reusable scratch buffer at the literal boundary.
+//!   gathered into the scratch buffer at the literal boundary.
 
 pub mod backend;
 pub mod manifest;
 pub mod tensor;
 
-use std::cell::{OnceCell, RefCell};
+use std::cell::RefCell;
 use std::path::PathBuf;
+use std::sync::{Mutex, MutexGuard, OnceLock};
 use std::time::Instant;
 
 pub use manifest::Manifest;
@@ -65,19 +72,45 @@ impl ExecHandle {
     }
 }
 
+/// Anything that can execute a resolved handle on tensor views — the
+/// [`Runtime`] in production, deterministic doubles in tests.  `Sync`
+/// because the pipelined row scheduler (`crate::sched`) calls [`exec`]
+/// from worker threads; the serial path uses the same trait so both paths
+/// run byte-identical code against either backend.
+///
+/// [`exec`]: ExecBackend::exec
+pub trait ExecBackend: Sync {
+    fn exec(&self, h: ExecHandle, inputs: &[TensorView<'_>]) -> Result<Vec<Tensor>>;
+}
+
+impl ExecBackend for Runtime {
+    fn exec(&self, h: ExecHandle, inputs: &[TensorView<'_>]) -> Result<Vec<Tensor>> {
+        self.execute_h(h, inputs)
+    }
+}
+
+std::thread_local! {
+    /// Per-thread staging buffer for non-contiguous views at the literal
+    /// boundary (cleared and refilled per input; never shrunk while its
+    /// thread lives).  Thread-local rather than runtime-owned so
+    /// concurrent `execute_h` calls from scheduler workers never contend.
+    static SCRATCH: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
 /// PJRT-backed executor over an artifact bundle.
+///
+/// `Sync` in the default (stub) build; the optional `pjrt` feature
+/// additionally requires the real bindings' client/executable types to be
+/// `Send + Sync` (wrap them if the chosen bindings crate's are not).
 pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
     pub manifest: Manifest,
-    /// Compiled executables, indexed by [`ExecHandle`].  `OnceCell` gives
-    /// interior mutability without a borrow guard, so nothing is held
-    /// across the PJRT call.
-    compiled: Vec<OnceCell<xla::PjRtLoadedExecutable>>,
-    /// Reusable staging buffer for non-contiguous views at the literal
-    /// boundary (cleared and refilled per input; never shrunk).
-    scratch: RefCell<Vec<f32>>,
-    stats: RefCell<RuntimeStats>,
+    /// Compiled executables, indexed by [`ExecHandle`].  `OnceLock` gives
+    /// thread-safe interior mutability without a guard held across the
+    /// PJRT call; a racing double-compile is benign (first `set` wins).
+    compiled: Vec<OnceLock<xla::PjRtLoadedExecutable>>,
+    stats: Mutex<RuntimeStats>,
 }
 
 impl Runtime {
@@ -88,15 +121,14 @@ impl Runtime {
         let client = xla::PjRtClient::cpu()
             .map_err(|e| Error::Runtime(format!("PjRtClient::cpu: {e}")))?;
         let compiled = (0..manifest.executables.len())
-            .map(|_| OnceCell::new())
+            .map(|_| OnceLock::new())
             .collect();
         Ok(Runtime {
             client,
             dir,
             manifest,
             compiled,
-            scratch: RefCell::new(Vec::new()),
-            stats: RefCell::new(RuntimeStats::default()),
+            stats: Mutex::new(RuntimeStats::default()),
         })
     }
 
@@ -104,8 +136,14 @@ impl Runtime {
         self.client.platform_name()
     }
 
+    /// Stats mutex, poisoning-tolerant: a panicked worker must not take
+    /// the whole runtime's observability down with it.
+    fn lock_stats(&self) -> MutexGuard<'_, RuntimeStats> {
+        self.stats.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     pub fn stats(&self) -> RuntimeStats {
-        self.stats.borrow().clone()
+        self.lock_stats().clone()
     }
 
     /// Resolve a manifest name to a handle (no compilation).
@@ -148,7 +186,7 @@ impl Runtime {
             .client
             .compile(&comp)
             .map_err(|e| Error::Runtime(format!("compile {}: {e}", info.name)))?;
-        let mut stats = self.stats.borrow_mut();
+        let mut stats = self.lock_stats();
         stats.compiles += 1;
         stats.compile_ms += t0.elapsed().as_secs_f64() * 1e3;
         drop(stats);
@@ -217,17 +255,17 @@ impl Runtime {
         self.ensure_compiled_h(h)?;
 
         let t0 = Instant::now();
-        let literals: Vec<xla::Literal> = {
-            let mut scratch = self.scratch.borrow_mut();
+        let literals: Vec<xla::Literal> = SCRATCH.with(|scratch| {
+            let mut scratch = scratch.borrow_mut();
             inputs
                 .iter()
                 .map(|v| view_to_literal(v, &mut scratch))
-                .collect::<Result<_>>()?
-        };
+                .collect::<Result<_>>()
+        })?;
         let conv_in_ms = t0.elapsed().as_secs_f64() * 1e3;
 
         let t1 = Instant::now();
-        // OnceCell lookup: no borrow guard held across the PJRT call.
+        // OnceLock lookup: no guard held across the PJRT call.
         let exe = self.compiled[h.0].get().expect("ensured above");
         let result = exe
             .execute::<xla::Literal>(&literals)
@@ -246,7 +284,7 @@ impl Runtime {
         }
         let conv_out_ms = t2.elapsed().as_secs_f64() * 1e3;
 
-        let mut stats = self.stats.borrow_mut();
+        let mut stats = self.lock_stats();
         stats.executions += 1;
         stats.execute_ms += exec_ms;
         stats.convert_ms += conv_in_ms + conv_out_ms;
@@ -292,4 +330,19 @@ fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
         .to_vec::<f32>()
         .map_err(|e| Error::Runtime(format!("to_vec: {e}")))?;
     Tensor::new(dims, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The pipelined scheduler shares `&Runtime` across worker threads via
+    /// scoped spawns — this must stay a compile-time guarantee.
+    #[test]
+    fn runtime_is_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Runtime>();
+        assert_send_sync::<&Runtime>();
+        assert_send_sync::<&dyn ExecBackend>();
+    }
 }

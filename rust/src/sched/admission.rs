@@ -1,0 +1,138 @@
+//! Memory-admission control: pipelining must not re-inflate the peak the
+//! row-centric design exists to shrink.
+//!
+//! Every DAG node carries a projected byte cost (`Node::est_bytes`); a
+//! ready node is *dispatched* only when granting its bytes keeps the
+//! in-flight total under the budget.  The ledger bounds the **working set
+//! of concurrently dispatched nodes**: a grant is returned when its node
+//! finishes.  Outputs parked in handoff slots between a producer's finish
+//! and the consuming barrier's dispatch are accounted in the consuming
+//! barrier's estimate while *it* runs, not during the interim — tracking
+//! that interim residency in the ledger is a ROADMAP open item.  One
+//! escape hatch guarantees
+//! progress: when the pool is idle (nothing granted), the next node is
+//! admitted regardless of size — a single row larger than the budget then
+//! degrades to serial execution instead of deadlocking, and the observed
+//! peak is bounded by `max(budget, max_node_est)`.
+//!
+//! The ledger is plain data mutated under the executor's state lock; it
+//! has no locking of its own.
+
+/// Byte-admission ledger for in-flight DAG nodes.
+#[derive(Debug, Clone)]
+pub struct Admission {
+    budget: u64,
+    in_flight: u64,
+    active: usize,
+    peak: u64,
+    admitted: u64,
+}
+
+impl Admission {
+    /// `budget` is the projected-byte ceiling; `u64::MAX` disables
+    /// admission control (pure dependency scheduling).
+    pub fn new(budget: u64) -> Self {
+        Admission {
+            budget,
+            in_flight: 0,
+            active: 0,
+            peak: 0,
+            admitted: 0,
+        }
+    }
+
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    /// Would a `bytes`-sized node be admitted right now?  True when it
+    /// fits under the budget, or unconditionally when the pool is idle
+    /// (the progress guarantee: some node must always be dispatchable).
+    pub fn can_admit(&self, bytes: u64) -> bool {
+        self.active == 0 || self.in_flight.saturating_add(bytes) <= self.budget
+    }
+
+    /// Grant `bytes`; caller must have checked [`Admission::can_admit`]
+    /// under the same lock.
+    pub fn admit(&mut self, bytes: u64) {
+        self.active += 1;
+        self.admitted += 1;
+        self.in_flight = self.in_flight.saturating_add(bytes);
+        if self.in_flight > self.peak {
+            self.peak = self.in_flight;
+        }
+    }
+
+    /// Return a grant when its node finishes (or fails).
+    pub fn release(&mut self, bytes: u64) {
+        debug_assert!(self.active > 0, "release without admit");
+        self.active = self.active.saturating_sub(1);
+        self.in_flight = self.in_flight.saturating_sub(bytes);
+    }
+
+    /// Nodes currently granted (dispatched, not yet finished).
+    pub fn active(&self) -> usize {
+        self.active
+    }
+
+    pub fn in_flight(&self) -> u64 {
+        self.in_flight
+    }
+
+    /// Highest concurrent projected-byte total observed.
+    pub fn peak(&self) -> u64 {
+        self.peak
+    }
+
+    /// Total grants over the run (== node count on success).
+    pub fn admitted(&self) -> u64 {
+        self.admitted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admits_under_budget_blocks_over() {
+        let mut a = Admission::new(100);
+        assert!(a.can_admit(60));
+        a.admit(60);
+        assert!(a.can_admit(40));
+        assert!(!a.can_admit(41));
+        a.admit(40);
+        assert_eq!(a.in_flight(), 100);
+        assert_eq!(a.peak(), 100);
+        a.release(60);
+        assert_eq!(a.in_flight(), 40);
+        assert!(a.can_admit(41));
+        a.release(40);
+        assert_eq!(a.in_flight(), 0);
+        assert_eq!(a.peak(), 100);
+        assert_eq!(a.admitted(), 2);
+    }
+
+    #[test]
+    fn idle_pool_admits_oversize_node() {
+        let mut a = Admission::new(10);
+        assert!(a.can_admit(1_000), "idle pool must admit (progress)");
+        a.admit(1_000);
+        // pool busy and over budget: nothing else fits, not even zero bytes
+        assert!(!a.can_admit(1));
+        assert!(!a.can_admit(0));
+        a.release(1_000);
+        assert_eq!(a.active(), 0);
+        assert_eq!(a.peak(), 1_000); // peak bounded by max node, not budget
+    }
+
+    #[test]
+    fn zero_budget_serializes() {
+        let mut a = Admission::new(0);
+        assert!(a.can_admit(8)); // idle
+        a.admit(8);
+        assert!(!a.can_admit(8)); // everything else waits
+        a.release(8);
+        assert!(a.can_admit(8));
+    }
+}

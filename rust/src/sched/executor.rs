@@ -1,0 +1,458 @@
+//! Worker-pool DAG executor with memory admission.
+//!
+//! Workers share one `Mutex<State>` + `Condvar`.  A worker repeatedly:
+//!
+//! 1. picks the **lowest-id** ready node whose projected bytes the
+//!    [`Admission`] ledger grants (deterministic pick order);
+//! 2. runs the caller's `runner(node)` **outside** the lock;
+//! 3. releases the grant, marks successors ready, and wakes everyone.
+//!
+//! Determinism: numerical results never depend on scheduling order — the
+//! runner writes per-node outputs into [`Slot`]s and all floating-point
+//! *reductions* happen inside barrier nodes in a fixed, serial order (see
+//! `coordinator::trainer`).  The executor itself only decides *when*
+//! nodes run, never *what* they compute.
+//!
+//! Progress: the DAG is acyclic by construction and the admission ledger
+//! admits unconditionally on an idle pool, so a stall can only mean a bug
+//! — it is detected and surfaced as [`Error::Sched`] rather than hanging
+//! a training run.
+//!
+//! A runner error — or a runner **panic**, caught at the worker frame so
+//! it cannot strand parked siblings — aborts the run: in-flight nodes
+//! finish, pending nodes never start, and the first error is returned.
+
+use std::collections::BTreeSet;
+use std::sync::{Condvar, Mutex};
+
+use crate::error::{Error, Result};
+
+use super::admission::Admission;
+use super::dag::{Dag, NodeId};
+use super::trace::{Trace, TraceEvent, TraceKind};
+use super::SchedConfig;
+
+/// Result of a completed run: the admission peak (projected bytes) and the
+/// per-row event trace.
+#[derive(Debug, Clone)]
+pub struct ExecOutcome {
+    /// Highest concurrent projected-byte total granted by admission.
+    pub peak_bytes: u64,
+    pub trace: Trace,
+}
+
+struct State {
+    indeg: Vec<usize>,
+    ready: BTreeSet<NodeId>,
+    admission: Admission,
+    done: usize,
+    seq: u64,
+    events: Vec<TraceEvent>,
+    error: Option<Error>,
+    aborted: bool,
+}
+
+impl State {
+    fn record(&mut self, node: NodeId, kind: TraceKind, worker: usize) {
+        let ev = TraceEvent {
+            seq: self.seq,
+            node,
+            kind,
+            worker,
+            in_flight_bytes: self.admission.in_flight(),
+        };
+        self.seq += 1;
+        self.events.push(ev);
+    }
+}
+
+/// Execute `dag` on `cfg.workers` threads under `cfg.mem_budget`.
+///
+/// `runner(id)` performs node `id`'s work; it is called exactly once per
+/// node, from an arbitrary worker thread, only after all of the node's
+/// dependencies finished.  On success every node ran; on error the first
+/// failure is returned and the remaining pending nodes were skipped.
+pub fn run<F>(dag: &Dag, cfg: &SchedConfig, runner: F) -> Result<ExecOutcome>
+where
+    F: Fn(NodeId) -> Result<()> + Sync,
+{
+    dag.validate()?;
+    let n = dag.len();
+    if n == 0 {
+        return Ok(ExecOutcome {
+            peak_bytes: 0,
+            trace: Trace::default(),
+        });
+    }
+    let workers = cfg.workers.clamp(1, n);
+
+    let mut indeg = vec![0usize; n];
+    let mut succ: Vec<Vec<NodeId>> = vec![Vec::new(); n];
+    for (id, node) in dag.nodes().iter().enumerate() {
+        indeg[id] = node.deps.len();
+        for &d in &node.deps {
+            succ[d].push(id);
+        }
+    }
+    let ready: BTreeSet<NodeId> = (0..n).filter(|&i| indeg[i] == 0).collect();
+    let state = Mutex::new(State {
+        indeg,
+        ready,
+        admission: Admission::new(cfg.mem_budget),
+        done: 0,
+        seq: 0,
+        events: Vec::with_capacity(2 * n),
+        error: None,
+        aborted: false,
+    });
+    let cv = Condvar::new();
+
+    std::thread::scope(|scope| {
+        for w in 0..workers {
+            let state = &state;
+            let cv = &cv;
+            let succ = &succ;
+            let runner = &runner;
+            scope.spawn(move || worker_loop(w, dag, succ, state, cv, runner));
+        }
+    });
+
+    let st = state
+        .into_inner()
+        .unwrap_or_else(|poisoned| poisoned.into_inner());
+    if let Some(e) = st.error {
+        return Err(e);
+    }
+    if st.done != n {
+        return Err(Error::Sched(format!(
+            "executor stalled: {}/{} nodes completed",
+            st.done, n
+        )));
+    }
+    Ok(ExecOutcome {
+        peak_bytes: st.admission.peak(),
+        trace: Trace { events: st.events },
+    })
+}
+
+fn worker_loop<F>(
+    w: usize,
+    dag: &Dag,
+    succ: &[Vec<NodeId>],
+    state: &Mutex<State>,
+    cv: &Condvar,
+    runner: &F,
+) where
+    F: Fn(NodeId) -> Result<()> + Sync,
+{
+    // A panicking sibling poisons the mutex; bail out rather than cascade.
+    let mut st = match state.lock() {
+        Ok(g) => g,
+        Err(_) => return,
+    };
+    loop {
+        if st.aborted || st.done == dag.len() {
+            return;
+        }
+        // deterministic pick: lowest-id ready node that admission grants
+        let pick = st
+            .ready
+            .iter()
+            .copied()
+            .find(|&id| st.admission.can_admit(dag.node(id).est_bytes));
+        let id = match pick {
+            Some(id) => id,
+            None => {
+                if st.admission.active() == 0 {
+                    // nothing running, nothing admissible: with an acyclic
+                    // DAG and idle-pool admission this is unreachable —
+                    // flag it instead of hanging the run
+                    let pending = dag.len() - st.done;
+                    if st.error.is_none() {
+                        st.error = Some(Error::Sched(format!(
+                            "scheduler stall: {pending} nodes pending, none runnable"
+                        )));
+                    }
+                    st.aborted = true;
+                    cv.notify_all();
+                    return;
+                }
+                st = match cv.wait(st) {
+                    Ok(g) => g,
+                    Err(_) => return,
+                };
+                continue;
+            }
+        };
+        st.ready.remove(&id);
+        let est = dag.node(id).est_bytes;
+        st.admission.admit(est);
+        st.record(id, TraceKind::Dispatched, w);
+        drop(st);
+
+        // A panic must not unwind past this frame: it would skip the grant
+        // release and the notify below, leaving sibling workers parked in
+        // cv.wait forever (thread::scope would then never join).  Convert
+        // it to the same abort path a runner error takes.
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| runner(id)))
+            .unwrap_or_else(|payload| {
+                let msg = payload
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| payload.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "non-string panic payload".into());
+                Err(Error::Sched(format!(
+                    "node '{}' panicked: {msg}",
+                    dag.node(id).label
+                )))
+            });
+
+        st = match state.lock() {
+            Ok(g) => g,
+            Err(_) => return,
+        };
+        st.admission.release(est);
+        match res {
+            Ok(()) => {
+                st.done += 1;
+                st.record(id, TraceKind::Finished, w);
+                for &s in &succ[id] {
+                    st.indeg[s] -= 1;
+                    if st.indeg[s] == 0 {
+                        st.ready.insert(s);
+                    }
+                }
+            }
+            Err(e) => {
+                st.record(id, TraceKind::Failed, w);
+                st.error.get_or_insert(e);
+                st.aborted = true;
+            }
+        }
+        cv.notify_all();
+    }
+}
+
+/// Single-writer, single-reader handoff cell for values flowing along DAG
+/// edges (a row's output tensor, a reduction's accumulator).  Misuse —
+/// double write, read of a never-written slot — indicates a mis-built DAG
+/// and surfaces as [`Error::Sched`] naming the slot.
+#[derive(Debug, Default)]
+pub struct Slot<T>(Mutex<Option<T>>);
+
+impl<T> Slot<T> {
+    pub fn new() -> Self {
+        Slot(Mutex::new(None))
+    }
+
+    /// Build one slot per item (row outputs, per-row gradients).
+    pub fn many(n: usize) -> Vec<Slot<T>> {
+        (0..n).map(|_| Slot::new()).collect()
+    }
+
+    fn lock(&self, label: &str) -> Result<std::sync::MutexGuard<'_, Option<T>>> {
+        self.0
+            .lock()
+            .map_err(|_| Error::Sched(format!("slot '{label}' poisoned")))
+    }
+
+    pub fn put(&self, label: &str, value: T) -> Result<()> {
+        let mut g = self.lock(label)?;
+        if g.is_some() {
+            return Err(Error::Sched(format!("slot '{label}' written twice")));
+        }
+        *g = Some(value);
+        Ok(())
+    }
+
+    pub fn take(&self, label: &str) -> Result<T> {
+        self.lock(label)?
+            .take()
+            .ok_or_else(|| Error::Sched(format!("slot '{label}' read before write")))
+    }
+}
+
+impl<T: Clone> Slot<T> {
+    /// Non-consuming read for multi-reader values (`Arc`-wrapped tensors).
+    pub fn cloned(&self, label: &str) -> Result<T> {
+        self.lock(label)?
+            .clone()
+            .ok_or_else(|| Error::Sched(format!("slot '{label}' read before write")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::dag::NodeKind;
+    use crate::sched::Policy;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn cfg(workers: usize, budget: u64) -> SchedConfig {
+        SchedConfig {
+            workers,
+            mem_budget: budget,
+            policy: Policy::Pipelined,
+        }
+    }
+
+    /// rows -> barrier -> rows -> barrier (the OverL step shape).
+    fn fan_dag(rows: usize, bytes: u64) -> Dag {
+        let mut d = Dag::new();
+        let fp: Vec<NodeId> = (0..rows)
+            .map(|r| d.push(NodeKind::Row, format!("fp{r}"), vec![], bytes))
+            .collect();
+        let head = d.push(NodeKind::Barrier, "head", fp, bytes);
+        let bp: Vec<NodeId> = (0..rows)
+            .map(|r| d.push(NodeKind::Row, format!("bp{r}"), vec![head], bytes))
+            .collect();
+        d.push(NodeKind::Barrier, "reduce", bp, 0);
+        d
+    }
+
+    fn run_and_check(dag: &Dag, workers: usize, budget: u64) -> ExecOutcome {
+        let hits = Slot::<()>::many(dag.len());
+        let out = run(dag, &cfg(workers, budget), |id| hits[id].put("hit", ()))
+            .expect("run succeeds");
+        out.trace.check_complete(dag).expect("complete causal trace");
+        for h in &hits {
+            h.take("hit").expect("every node ran exactly once");
+        }
+        out
+    }
+
+    #[test]
+    fn runs_all_nodes_once_across_worker_counts() {
+        let dag = fan_dag(6, 10);
+        for workers in [1, 2, 4, 8] {
+            let out = run_and_check(&dag, workers, u64::MAX);
+            assert_eq!(out.trace.events.len(), 2 * dag.len());
+        }
+    }
+
+    #[test]
+    fn canonical_trace_is_identical_across_runs_and_workers() {
+        let dag = fan_dag(5, 10);
+        let a = run_and_check(&dag, 1, u64::MAX).trace.canonical();
+        let b = run_and_check(&dag, 4, u64::MAX).trace.canonical();
+        let c = run_and_check(&dag, 4, u64::MAX).trace.canonical();
+        assert_eq!(a, b);
+        assert_eq!(b, c);
+    }
+
+    #[test]
+    fn budget_caps_peak() {
+        let dag = fan_dag(8, 100);
+        // budget of 250 admits at most two 100-byte rows next to the
+        // 100-byte barrier estimate
+        let out = run_and_check(&dag, 8, 250);
+        assert!(out.peak_bytes <= 250, "peak {} > budget", out.peak_bytes);
+        // and an unlimited budget lets the full fan fly
+        let wide = run_and_check(&dag, 8, u64::MAX);
+        assert!(wide.peak_bytes >= out.peak_bytes);
+    }
+
+    #[test]
+    fn one_row_budget_and_single_worker_do_not_deadlock() {
+        let dag = fan_dag(4, 64);
+        // budget == one row: strictly serial admission
+        let out = run_and_check(&dag, 4, 64);
+        assert_eq!(out.peak_bytes, 64);
+        // workers=1 with a generous budget
+        let out = run_and_check(&dag, 1, u64::MAX);
+        assert!(out.peak_bytes >= 64);
+        // zero budget: every node oversize, idle-admission carries it
+        let out = run_and_check(&dag, 4, 0);
+        assert_eq!(out.peak_bytes, 64); // one node at a time
+    }
+
+    #[test]
+    fn oversize_node_degrades_to_serial_not_deadlock() {
+        let mut dag = Dag::new();
+        let a = dag.push(NodeKind::Row, "small", vec![], 10);
+        dag.push(NodeKind::Row, "huge", vec![a], 1_000);
+        let out = run_and_check(&dag, 2, 100);
+        assert_eq!(out.peak_bytes, 1_000); // max(budget, max node est)
+    }
+
+    #[test]
+    fn runner_error_aborts_with_first_error() {
+        let dag = fan_dag(4, 1);
+        let ran = AtomicUsize::new(0);
+        let res = run(&dag, &cfg(2, u64::MAX), |id| {
+            ran.fetch_add(1, Ordering::SeqCst);
+            if dag.node(id).label == "head" {
+                Err(Error::Runtime("boom".into()))
+            } else {
+                Ok(())
+            }
+        });
+        match res {
+            Err(Error::Runtime(msg)) => assert_eq!(msg, "boom"),
+            other => panic!("expected runner error, got {:?}", other.is_ok()),
+        }
+        // BP rows never started: head failed before unblocking them
+        assert!(ran.load(Ordering::SeqCst) <= 5, "pending nodes must not run");
+    }
+
+    /// A panicking runner must abort the run (not strand parked workers):
+    /// the panic is caught at the worker frame, converted to the error
+    /// path, and the grant/notify still happen.
+    #[test]
+    fn runner_panic_aborts_instead_of_deadlocking() {
+        let dag = fan_dag(4, 1);
+        let res = run(&dag, &cfg(2, u64::MAX), |id| {
+            if dag.node(id).label == "head" {
+                panic!("boom-panic");
+            }
+            Ok(())
+        });
+        match res {
+            Err(Error::Sched(msg)) => {
+                assert!(msg.contains("panicked") && msg.contains("boom-panic"), "{msg}")
+            }
+            other => panic!("expected sched error, got {:?}", other.is_ok()),
+        }
+    }
+
+    #[test]
+    fn empty_dag_is_a_noop() {
+        let out = run(&Dag::new(), &cfg(4, 0), |_| Ok(())).unwrap();
+        assert_eq!(out.peak_bytes, 0);
+        assert!(out.trace.events.is_empty());
+    }
+
+    #[test]
+    fn slot_misuse_is_a_sched_error() {
+        let s: Slot<u32> = Slot::new();
+        assert!(s.take("x").is_err());
+        s.put("x", 1).unwrap();
+        assert!(s.put("x", 2).is_err());
+        assert_eq!(s.take("x").unwrap(), 1);
+        assert!(s.take("x").is_err());
+    }
+
+    /// The executor must preserve a chain (2PS) strictly in order even
+    /// with many workers — checked through the causality validator plus a
+    /// shared counter the runner advances.
+    #[test]
+    fn chain_runs_strictly_in_order() {
+        let mut dag = Dag::new();
+        let mut prev: Option<NodeId> = None;
+        for r in 0..6 {
+            let deps = prev.map(|p| vec![p]).unwrap_or_default();
+            prev = Some(dag.push(NodeKind::TpsRow, format!("tps{r}"), deps, 8));
+        }
+        let next = AtomicUsize::new(0);
+        let out = run(&dag, &cfg(4, u64::MAX), |id| {
+            let expect = next.fetch_add(1, Ordering::SeqCst);
+            if expect != id {
+                return Err(Error::Sched(format!("node {id} ran at position {expect}")));
+            }
+            Ok(())
+        })
+        .unwrap();
+        out.trace.check_complete(&dag).unwrap();
+        assert_eq!(out.peak_bytes, 8, "a chain never overlaps");
+    }
+}

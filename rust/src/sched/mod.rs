@@ -1,0 +1,122 @@
+//! `sched` — the weak-dependency row scheduler (docs/SCHEDULER.md).
+//!
+//! The paper exploits row independence for *memory*; this subsystem
+//! exploits it for *time* as well.  A `coordinator::StepPlan` lowers into
+//! an explicit row dependency [`Dag`] — no edges between OverL rows,
+//! boundary-cache handoff edges chaining consecutive 2PS rows, barrier
+//! nodes at checkpoint/segment and FP→BP boundaries — which the
+//! [`executor`] runs on a pool of worker threads under [`Admission`]
+//! control, keeping the concurrent working set under a byte budget so
+//! pipelining does not re-inflate the peak the row-centric design exists
+//! to shrink (see docs/SCHEDULER.md for the bound's exact scope).
+//!
+//! Results are **bit-identical** to the serial path: workers only compute
+//! per-row outputs; every floating-point reduction (gradient
+//! accumulation, δ-accumulation, concatenation) happens inside a barrier
+//! node in the same fixed order the serial loop uses.
+//!
+//! | module | role |
+//! |---|---|
+//! | [`dag`] | acyclic-by-construction row dependency DAG |
+//! | [`admission`] | projected-byte admission ledger + progress rule |
+//! | [`executor`] | Condvar worker pool, deterministic ready-pick, [`Slot`] handoff |
+//! | [`trace`] | per-row event trace with a deterministic canonical view |
+
+pub mod admission;
+pub mod dag;
+pub mod executor;
+pub mod trace;
+
+pub use admission::Admission;
+pub use dag::{Dag, Node, NodeId, NodeKind};
+pub use executor::{run, ExecOutcome, Slot};
+pub use trace::{Trace, TraceEvent, TraceKind};
+
+use crate::memory::DeviceModel;
+
+/// How `Trainer::step` executes its rows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Today's path: one row at a time on the caller's thread, tracker
+    /// byte accounting.  The default.
+    Serial,
+    /// DAG execution on a worker pool under memory admission.
+    Pipelined,
+}
+
+/// Scheduler configuration carried by the trainer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SchedConfig {
+    /// Worker threads for the pipelined executor (clamped to ≥ 1).
+    pub workers: usize,
+    /// Projected-byte admission budget; `u64::MAX` disables admission.
+    pub mem_budget: u64,
+    pub policy: Policy,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        SchedConfig {
+            workers: 1,
+            mem_budget: u64::MAX,
+            policy: Policy::Serial,
+        }
+    }
+}
+
+impl SchedConfig {
+    /// Pipelined execution on `workers` threads, unlimited budget.
+    pub fn pipelined(workers: usize) -> Self {
+        SchedConfig {
+            workers: workers.max(1),
+            mem_budget: u64::MAX,
+            policy: Policy::Pipelined,
+        }
+    }
+
+    /// Cap the admission budget (builder style).
+    pub fn with_budget(mut self, bytes: u64) -> Self {
+        self.mem_budget = bytes;
+        self
+    }
+
+    /// Budget derived from a device model: usable HBM minus the
+    /// always-resident bytes ξ (parameters + optimizer state), the same
+    /// headroom arithmetic as `memory::Tracker::headroom`.
+    pub fn device_budget(dev: &DeviceModel, xi: u64) -> u64 {
+        dev.usable_hbm().saturating_sub(xi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_serial_single_worker() {
+        let c = SchedConfig::default();
+        assert_eq!(c.policy, Policy::Serial);
+        assert_eq!(c.workers, 1);
+        assert_eq!(c.mem_budget, u64::MAX);
+    }
+
+    #[test]
+    fn pipelined_clamps_workers() {
+        assert_eq!(SchedConfig::pipelined(0).workers, 1);
+        let c = SchedConfig::pipelined(4).with_budget(1 << 20);
+        assert_eq!(c.workers, 4);
+        assert_eq!(c.mem_budget, 1 << 20);
+        assert_eq!(c.policy, Policy::Pipelined);
+    }
+
+    #[test]
+    fn device_budget_subtracts_xi() {
+        let dev = DeviceModel::rtx3090();
+        let xi = 1 << 30;
+        assert_eq!(
+            SchedConfig::device_budget(&dev, xi),
+            dev.usable_hbm() - xi
+        );
+        assert_eq!(SchedConfig::device_budget(&dev, u64::MAX), 0);
+    }
+}

@@ -1,0 +1,232 @@
+//! Per-row event trace for scheduler attribution.
+//!
+//! The executor records a [`TraceEvent`] at each dispatch and completion.
+//! Wall-clock interleaving is inherently nondeterministic across runs, so
+//! the trace exposes two views:
+//!
+//! * [`Trace::events`] — raw, in observation order (`seq`), with worker
+//!   ids and the in-flight byte total at each instant; and
+//! * [`Trace::canonical`] — the **deterministic** view: every node runs
+//!   exactly once, so sorting `(node, kind)` pairs erases thread timing
+//!   and yields the same value on every run of the same DAG.  Tests and
+//!   cross-run comparisons use this.
+
+use crate::error::{Error, Result};
+
+use super::dag::{Dag, NodeId};
+
+/// What happened to a node.  `Ord` follows a node's lifecycle so the
+/// canonical sort reads naturally.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum TraceKind {
+    /// Admission granted, runner invoked on a worker.
+    Dispatched,
+    /// Runner returned `Ok`; successors unblocked.
+    Finished,
+    /// Runner returned `Err`; the run aborted.
+    Failed,
+}
+
+/// One observation.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    /// Observation order under the executor lock (gap-free from 0).
+    pub seq: u64,
+    pub node: NodeId,
+    pub kind: TraceKind,
+    /// Worker thread index that observed the event.
+    pub worker: usize,
+    /// Admission in-flight bytes immediately after the event.
+    pub in_flight_bytes: u64,
+}
+
+/// A completed (or aborted) run's event log.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    /// Deterministic view: `(node, kind)` pairs sorted — identical across
+    /// runs of the same DAG regardless of worker count or timing.
+    pub fn canonical(&self) -> Vec<(NodeId, TraceKind)> {
+        let mut v: Vec<(NodeId, TraceKind)> =
+            self.events.iter().map(|e| (e.node, e.kind)).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Highest in-flight byte total observed at any event.
+    pub fn max_in_flight(&self) -> u64 {
+        self.events.iter().map(|e| e.in_flight_bytes).max().unwrap_or(0)
+    }
+
+    /// Check the trace describes a complete, successful run of `dag`:
+    /// every node dispatched exactly once and finished exactly once, and
+    /// no dispatch before all of the node's deps finished.
+    pub fn check_complete(&self, dag: &Dag) -> Result<()> {
+        let n = dag.len();
+        let mut dispatched = vec![0u32; n];
+        let mut finished = vec![0u32; n];
+        for ev in &self.events {
+            if ev.node >= n {
+                return Err(Error::Sched(format!("trace names unknown node {}", ev.node)));
+            }
+            match ev.kind {
+                TraceKind::Dispatched => dispatched[ev.node] += 1,
+                TraceKind::Finished => finished[ev.node] += 1,
+                TraceKind::Failed => {
+                    return Err(Error::Sched(format!(
+                        "node '{}' failed",
+                        dag.node(ev.node).label
+                    )))
+                }
+            }
+        }
+        for id in 0..n {
+            if dispatched[id] != 1 || finished[id] != 1 {
+                return Err(Error::Sched(format!(
+                    "node '{}' dispatched {}×, finished {}× (want 1×/1×)",
+                    dag.node(id).label,
+                    dispatched[id],
+                    finished[id]
+                )));
+            }
+        }
+        // causality: replay in seq order, a dispatch requires all deps done
+        let mut done = vec![false; n];
+        let mut ordered: Vec<&TraceEvent> = self.events.iter().collect();
+        ordered.sort_unstable_by_key(|e| e.seq);
+        for ev in ordered {
+            match ev.kind {
+                TraceKind::Dispatched => {
+                    for &d in &dag.node(ev.node).deps {
+                        if !done[d] {
+                            return Err(Error::Sched(format!(
+                                "node '{}' dispatched before dep '{}' finished",
+                                dag.node(ev.node).label,
+                                dag.node(d).label
+                            )));
+                        }
+                    }
+                }
+                TraceKind::Finished => done[ev.node] = true,
+                TraceKind::Failed => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// Attribution dump: one JSON object per node in id order (label,
+    /// kind, projected bytes, deps) plus run-level counters.  Built from
+    /// the canonical view, so the output is deterministic.
+    pub fn to_json(&self, dag: &Dag) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::from("{\n  \"schema\": 1,\n  \"nodes\": [\n");
+        for (id, node) in dag.nodes().iter().enumerate() {
+            let deps: Vec<String> = node.deps.iter().map(|d| d.to_string()).collect();
+            let _ = write!(
+                out,
+                "    {{\"id\": {id}, \"label\": \"{}\", \"kind\": \"{:?}\", \
+                 \"est_bytes\": {}, \"deps\": [{}]}}",
+                node.label,
+                node.kind,
+                node.est_bytes,
+                deps.join(", ")
+            );
+            out.push_str(if id + 1 < dag.len() { ",\n" } else { "\n" });
+        }
+        let _ = writeln!(
+            out,
+            "  ],\n  \"events\": {},\n  \"max_in_flight_bytes\": {}\n}}",
+            self.events.len(),
+            self.max_in_flight()
+        );
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::dag::NodeKind;
+
+    fn two_node_dag() -> Dag {
+        let mut d = Dag::new();
+        let a = d.push(NodeKind::Row, "a", vec![], 5);
+        d.push(NodeKind::Barrier, "b", vec![a], 0);
+        d
+    }
+
+    fn ev(seq: u64, node: NodeId, kind: TraceKind) -> TraceEvent {
+        TraceEvent {
+            seq,
+            node,
+            kind,
+            worker: 0,
+            in_flight_bytes: 0,
+        }
+    }
+
+    #[test]
+    fn canonical_erases_observation_order() {
+        let a = Trace {
+            events: vec![
+                ev(0, 0, TraceKind::Dispatched),
+                ev(1, 0, TraceKind::Finished),
+                ev(2, 1, TraceKind::Dispatched),
+                ev(3, 1, TraceKind::Finished),
+            ],
+        };
+        let mut shuffled = a.clone();
+        shuffled.events.reverse();
+        assert_eq!(a.canonical(), shuffled.canonical());
+    }
+
+    #[test]
+    fn check_complete_accepts_causal_run_rejects_violations() {
+        let dag = two_node_dag();
+        let good = Trace {
+            events: vec![
+                ev(0, 0, TraceKind::Dispatched),
+                ev(1, 0, TraceKind::Finished),
+                ev(2, 1, TraceKind::Dispatched),
+                ev(3, 1, TraceKind::Finished),
+            ],
+        };
+        assert!(good.check_complete(&dag).is_ok());
+
+        // b dispatched before a finished
+        let racy = Trace {
+            events: vec![
+                ev(0, 0, TraceKind::Dispatched),
+                ev(1, 1, TraceKind::Dispatched),
+                ev(2, 0, TraceKind::Finished),
+                ev(3, 1, TraceKind::Finished),
+            ],
+        };
+        assert!(racy.check_complete(&dag).is_err());
+
+        // node missing entirely
+        let partial = Trace {
+            events: vec![ev(0, 0, TraceKind::Dispatched), ev(1, 0, TraceKind::Finished)],
+        };
+        assert!(partial.check_complete(&dag).is_err());
+    }
+
+    #[test]
+    fn json_dump_is_parseable_and_deterministic() {
+        let dag = two_node_dag();
+        let t = Trace {
+            events: vec![
+                ev(0, 0, TraceKind::Dispatched),
+                ev(1, 0, TraceKind::Finished),
+                ev(2, 1, TraceKind::Dispatched),
+                ev(3, 1, TraceKind::Finished),
+            ],
+        };
+        let json = t.to_json(&dag);
+        assert!(crate::util::json::JsonValue::parse(&json).is_ok(), "{json}");
+        assert_eq!(json, t.to_json(&dag));
+    }
+}

@@ -9,6 +9,7 @@ use lr_cnn::data::SyntheticCorpus;
 use lr_cnn::error::Error;
 use lr_cnn::model::minivgg;
 use lr_cnn::runtime::{Runtime, Tensor};
+use lr_cnn::sched::SchedConfig;
 
 use std::path::{Path, PathBuf};
 
@@ -115,6 +116,39 @@ fn tracker_shows_row_centric_holding_less_than_omega() {
         stats.peak_bytes,
         omega
     );
+}
+
+/// The scheduler acceptance bar on real PJRT executions: pipelined steps
+/// produce bit-identical losses and parameters to serial ones, in every
+/// mode, over several steps (params feed forward, so drift compounds).
+#[test]
+fn pipelined_steps_match_serial_bitwise_on_live_artifacts() {
+    let Some(rt) = runtime() else { return };
+    for mode in [Mode::Base, Mode::RowHybrid, Mode::Tps, Mode::Naive] {
+        let mut serial = Trainer::new(&rt, mode, 0.05, 42).unwrap();
+        let mut piped = Trainer::new(&rt, mode, 0.05, 42).unwrap();
+        piped.set_sched(SchedConfig::pipelined(4));
+        for s in 0..3u64 {
+            let (x, y) = batch(&rt, s);
+            let a = serial.step(&x, &y).unwrap();
+            let b = piped.step(&x, &y).unwrap();
+            assert_eq!(
+                a.loss.to_bits(),
+                b.loss.to_bits(),
+                "{mode:?} step {s}: {} vs {}",
+                a.loss,
+                b.loss
+            );
+        }
+        for (i, (p, q)) in serial.params.tensors.iter().zip(&piped.params.tensors).enumerate() {
+            for (j, (a, b)) in p.data.iter().zip(&q.data).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{mode:?} param {i}[{j}]");
+            }
+        }
+        let trace = piped.last_trace().expect("pipelined step leaves a trace");
+        let dag = piped.pipe_plan().expect("lowered plan").dag();
+        trace.check_complete(dag).expect("complete causal trace");
+    }
 }
 
 #[test]
