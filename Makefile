@@ -7,7 +7,7 @@
 
 RUST_MANIFEST := rust/Cargo.toml
 
-.PHONY: build test artifacts bench-hotpath bench-hotpath-quick bench-sched bench-sched-quick lint
+.PHONY: build test artifacts bench-hotpath bench-hotpath-quick bench-sched bench-sched-quick bench-shard bench-shard-quick lint
 
 build:
 	cargo build --release --manifest-path $(RUST_MANIFEST)
@@ -34,6 +34,15 @@ bench-sched:
 
 bench-sched-quick:
 	BENCH_QUICK=1 cargo bench --bench sched_pipeline --manifest-path $(RUST_MANIFEST)
+
+# Multi-device shard scaling at 1/2/4 simulated devices × both partition
+# policies; writes BENCH_shard_scaling.json at the repo root
+# (docs/SHARDING.md).
+bench-shard:
+	cargo bench --bench shard_scaling --manifest-path $(RUST_MANIFEST)
+
+bench-shard-quick:
+	BENCH_QUICK=1 cargo bench --bench shard_scaling --manifest-path $(RUST_MANIFEST)
 
 # What CI's lint job runs.
 lint:

@@ -140,7 +140,7 @@ fn live_steps(quick: bool, live: &mut Vec<LiveRec>) {
             // workers == 0 encodes the serial baseline row
             let mut tr = Trainer::new(&rt, mode, 0.0, 9).unwrap();
             if workers > 0 {
-                tr.set_sched(SchedConfig::pipelined(workers));
+                tr.set_sched(SchedConfig::pipelined(workers)).unwrap();
             }
             for _ in 0..warmup {
                 tr.step(&x, &y).unwrap();
@@ -202,6 +202,7 @@ fn main() {
             workers,
             mem_budget: budget,
             policy: Policy::Pipelined,
+            shard: None,
         };
         // determinism: bit-identical to the serial loop, every time
         let (sum, peak) = pipelined_step(&dag, &cfg, flops);

@@ -1,0 +1,276 @@
+//! Multi-device shard scaling (the `shard` tentpole's measurement rig):
+//! the hybrid step's DAG shape — independent FP rows, a head barrier,
+//! independent BP rows, a reduce — sharded over 1/2/4 simulated devices
+//! under both partition policies, on one persistent worker pool.
+//!
+//! Needs no artifacts and no PJRT: each row runs a deterministic CPU
+//! kernel, so the bench exercises the real sharded executor (persistent
+//! pool, per-device admission ledgers, transfer nodes) with real parallel
+//! work and checks the sharded checksum is **bit-identical** to the
+//! serial loop's, and that every per-device peak stayed under that
+//! device's replay-derived ledger.
+//!
+//! Results are printed *and* written to the repo root
+//! (`BENCH_shard_scaling.json`, schema in docs/SHARDING.md).  `--quick` /
+//! `BENCH_QUICK=1` reduces iteration counts for CI.
+
+use lr_cnn::memory::DeviceModel;
+use lr_cnn::metrics::bench;
+use lr_cnn::sched::{Dag, NodeId, NodeKind, Slot};
+use lr_cnn::shard::{LinkKind, PartitionPolicy, ShardPlan, ShardedExecutor, Topology};
+
+use std::fmt::Write as _;
+
+const ROWS: usize = 8;
+const ROW_BYTES: u64 = 64 << 20; // pretend 64 MiB slab+z per row
+const OUT_BYTES: u64 = 16 << 20; // pretend 16 MiB parked z per row
+const WORKERS: usize = 4;
+
+/// Deterministic CPU kernel standing in for a row executable.  The loop
+/// carries a serial dependency so the optimizer cannot collapse it.
+fn row_work(seed: u64, flops: usize) -> f32 {
+    let mut x = (seed as f32).mul_add(0.001, 1.0);
+    let mut acc = 0.0f32;
+    for i in 0..flops {
+        x = x.mul_add(1.000_000_1, 0.000_000_1);
+        acc += x * ((i & 7) as f32);
+    }
+    std::hint::black_box(acc)
+}
+
+/// The hybrid step shape: FP rows ∥ → head → BP rows ∥ → reduce, with
+/// parked row outputs (the admission ledger's interim-residency currency).
+fn synth_dag() -> Dag {
+    let mut dag = Dag::new();
+    let fp: Vec<NodeId> = (0..ROWS)
+        .map(|r| {
+            dag.push_out(NodeKind::Row, format!("fp.row{r}"), vec![], ROW_BYTES, OUT_BYTES)
+        })
+        .collect();
+    let head = dag.push_out(NodeKind::Barrier, "head", fp, ROW_BYTES, OUT_BYTES);
+    let bp: Vec<NodeId> = (0..ROWS)
+        .map(|r| {
+            dag.push_out(
+                NodeKind::Row,
+                format!("bp.row{r}"),
+                vec![head],
+                ROW_BYTES,
+                OUT_BYTES,
+            )
+        })
+        .collect();
+    dag.push(NodeKind::Barrier, "reduce", bp, 0);
+    dag
+}
+
+/// One full "step" over the sharded DAG; returns the checksum and the
+/// per-device admission peaks.
+fn sharded_step(
+    dag: &Dag,
+    plan: &ShardPlan,
+    exec: &ShardedExecutor,
+    flops: usize,
+) -> (f32, Vec<u64>) {
+    let fp_out: Vec<Slot<f32>> = Slot::many(ROWS);
+    let bp_out: Vec<Slot<f32>> = Slot::many(ROWS);
+    let head_out: Slot<f32> = Slot::new();
+    let result: Slot<f32> = Slot::new();
+    let outcome = exec
+        .run_step(plan, |id| {
+            let label = dag.node(id).label.as_str();
+            if let Some(r) = label.strip_prefix("fp.row") {
+                let r: usize = r.parse().expect("row index");
+                fp_out[r].put("fp", row_work(r as u64, flops))
+            } else if let Some(r) = label.strip_prefix("bp.row") {
+                let r: usize = r.parse().expect("row index");
+                let h = head_out.cloned("head")?;
+                bp_out[r].put("bp", row_work(r as u64 + 100, flops) + h * 1e-6)
+            } else if label == "head" {
+                // reduction in fixed row order — the determinism contract
+                let mut acc = 0.0f32;
+                for s in &fp_out {
+                    acc += s.take("fp")?;
+                }
+                head_out.put("head", acc)
+            } else {
+                let mut acc = head_out.take("head")?;
+                for s in &bp_out {
+                    acc += s.take("bp")?;
+                }
+                result.put("result", acc)
+            }
+        })
+        .expect("sharded run succeeds");
+    (
+        result.take("result").expect("result set"),
+        outcome.device_peaks,
+    )
+}
+
+/// The same arithmetic as a plain serial loop (the reference).
+fn serial_step(flops: usize) -> f32 {
+    let mut head = 0.0f32;
+    let fp: Vec<f32> = (0..ROWS).map(|r| row_work(r as u64, flops)).collect();
+    for v in &fp {
+        head += v;
+    }
+    let bp: Vec<f32> = (0..ROWS)
+        .map(|r| row_work(r as u64 + 100, flops) + head * 1e-6)
+        .collect();
+    let mut acc = head;
+    for v in &bp {
+        acc += v;
+    }
+    acc
+}
+
+struct Rec {
+    devices: usize,
+    policy: &'static str,
+    mean_ms: f64,
+    p50_ms: f64,
+    speedup: f64,
+    transfers: usize,
+    transfer_bytes: u64,
+    modeled_xfer_us: f64,
+    device_peaks: Vec<u64>,
+    ledgers: Vec<u64>,
+}
+
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.4}")
+    } else {
+        "null".into()
+    }
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let flops = if quick { 60_000 } else { 400_000 };
+    let (warmup, iters) = if quick { (2, 10) } else { (5, 40) };
+
+    let dag = synth_dag();
+    let reference = serial_step(flops);
+    let r_serial = bench::time("serial loop (reference)", warmup, iters, || {
+        serial_step(flops)
+    });
+    println!("{}", r_serial.report());
+
+    let mut recs: Vec<Rec> = Vec::new();
+    for devices in [1usize, 2, 4] {
+        for policy in [PartitionPolicy::Blocked, PartitionPolicy::CostBalanced] {
+            let topo = Topology::uniform(devices, DeviceModel::rtx3090(), LinkKind::NvLink);
+            let mut plan = ShardPlan::build(&dag, &topo, policy, vec![u64::MAX; devices])
+                .expect("plan builds");
+            // tight ledgers: each device's serial-order replay peak
+            let ledgers = plan.replay_peaks().expect("replay");
+            plan.set_budgets(ledgers.clone()).expect("budgets fit");
+            plan.check_budgets().expect("replay fits its own peaks");
+            // the pool is constructed once and reused across all steps
+            let exec = ShardedExecutor::new(WORKERS);
+            let policy_name = match policy {
+                PartitionPolicy::Blocked => "blocked",
+                PartitionPolicy::CostBalanced => "balanced",
+            };
+
+            // determinism + ledger checks before timing
+            let (sum, peaks) = sharded_step(&dag, &plan, &exec, flops);
+            assert_eq!(
+                sum.to_bits(),
+                reference.to_bits(),
+                "sharded checksum must be bit-identical to serial"
+            );
+            for d in 0..devices {
+                assert!(
+                    peaks[d] <= ledgers[d],
+                    "device {d}: peak {} exceeded ledger {}",
+                    peaks[d],
+                    ledgers[d]
+                );
+            }
+
+            let mut max_peaks = vec![0u64; devices];
+            let r = bench::time(
+                &format!("sharded {devices} device(s), {policy_name}"),
+                warmup,
+                iters,
+                || {
+                    let (sum, peaks) = sharded_step(&dag, &plan, &exec, flops);
+                    for (m, p) in max_peaks.iter_mut().zip(&peaks) {
+                        *m = (*m).max(*p);
+                    }
+                    sum
+                },
+            );
+            let speedup = r_serial.mean_ms / r.mean_ms;
+            let transfer_bytes: u64 = plan.transfers().iter().map(|t| t.bytes).sum();
+            println!(
+                "{}   [speedup ×{speedup:.2}, {} transfer(s), modeled link {:.1} us]",
+                r.report(),
+                plan.transfers().len(),
+                plan.modeled_transfer_seconds() * 1e6
+            );
+            recs.push(Rec {
+                devices,
+                policy: policy_name,
+                mean_ms: r.mean_ms,
+                p50_ms: r.p50_ms,
+                speedup,
+                transfers: plan.transfers().len(),
+                transfer_bytes,
+                modeled_xfer_us: plan.modeled_transfer_seconds() * 1e6,
+                device_peaks: max_peaks,
+                ledgers,
+            });
+        }
+    }
+
+    // ---- JSON at the repo root (tracked trajectory) ----
+    let mut out = String::new();
+    out.push_str("{\n  \"bench\": \"shard_scaling\",\n  \"schema\": 1,\n");
+    let _ = writeln!(out, "  \"quick\": {quick},");
+    let _ = writeln!(
+        out,
+        "  \"rows\": {ROWS},\n  \"row_bytes\": {ROW_BYTES},\n  \"out_bytes\": {OUT_BYTES},\n  \"workers\": {WORKERS},"
+    );
+    let _ = writeln!(out, "  \"serial_ms\": {},", json_num(r_serial.mean_ms));
+    out.push_str("  \"sharded\": [\n");
+    for (i, rec) in recs.iter().enumerate() {
+        let peaks: Vec<String> = rec.device_peaks.iter().map(|p| p.to_string()).collect();
+        let ledgers: Vec<String> = rec.ledgers.iter().map(|l| l.to_string()).collect();
+        let under = rec
+            .device_peaks
+            .iter()
+            .zip(&rec.ledgers)
+            .all(|(p, l)| p <= l);
+        let _ = write!(
+            out,
+            "    {{\"devices\": {}, \"policy\": \"{}\", \"mean_ms\": {}, \"p50_ms\": {}, \
+             \"speedup\": {}, \"transfers\": {}, \"transfer_bytes\": {}, \
+             \"modeled_xfer_us\": {}, \"device_peaks\": [{}], \"ledgers\": [{}], \
+             \"under_ledger\": {}}}",
+            rec.devices,
+            rec.policy,
+            json_num(rec.mean_ms),
+            json_num(rec.p50_ms),
+            json_num(rec.speedup),
+            rec.transfers,
+            rec.transfer_bytes,
+            json_num(rec.modeled_xfer_us),
+            peaks.join(", "),
+            ledgers.join(", "),
+            under,
+        );
+        out.push_str(if i + 1 < recs.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ]\n}\n");
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_shard_scaling.json");
+    match std::fs::write(&path, out) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}

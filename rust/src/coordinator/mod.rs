@@ -25,4 +25,4 @@ pub mod trainer;
 
 pub use optim::{Optimizer, OptimizerKind};
 pub use params::ParamSet;
-pub use trainer::{naive_row_extents, Mode, PipePlan, StepPlan, StepStats, Trainer};
+pub use trainer::{naive_row_extents, Mode, PipePlan, ShardState, StepPlan, StepStats, Trainer};

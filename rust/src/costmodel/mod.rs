@@ -13,6 +13,22 @@
 
 use crate::memory::DeviceModel;
 
+/// Conv-workload arithmetic intensity: FLOPs executed per byte of a row
+/// node's projected working set (`sched::Node::est_bytes`).  A k×k conv
+/// over c channels re-reads each activation byte ~k²·c/4 times; 48 is the
+/// MiniVGG-class midpoint.  Only the *ratios* between nodes matter for
+/// the shard partitioner's bin-packing, so absolute calibration is as
+/// uncritical here as everywhere else in this model.
+pub const NODE_FLOPS_PER_BYTE: f64 = 48.0;
+
+/// Modeled seconds for one scheduler DAG node of `est_bytes` projected
+/// working set on `dev` — the per-node currency `shard::Partitioner`'s
+/// `CostBalanced` policy bin-packs.  Row slabs run at the device's
+/// discounted slab throughput (same discount as [`CostCounters`]).
+pub fn node_seconds(est_bytes: u64, dev: &DeviceModel) -> f64 {
+    (est_bytes as f64 * NODE_FLOPS_PER_BYTE) / (dev.flops_per_sec * dev.slab_efficiency)
+}
+
 /// Per-iteration cost counters emitted by a strategy's planner.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct CostCounters {
@@ -111,6 +127,17 @@ mod tests {
         off.pcie_overlap = 0.8;
         let rel = off.relative_to(&base, &dev);
         assert!(rel > 2.0, "{rel}");
+    }
+
+    #[test]
+    fn node_seconds_scales_with_bytes_and_device() {
+        let d90 = DeviceModel::rtx3090();
+        let d80 = DeviceModel::rtx3080();
+        assert_eq!(node_seconds(0, &d90), 0.0);
+        let one = node_seconds(1 << 20, &d90);
+        assert!((node_seconds(2 << 20, &d90) - 2.0 * one).abs() < one * 1e-9);
+        // weaker device + worse slab efficiency ⇒ slower node
+        assert!(node_seconds(1 << 20, &d80) > one);
     }
 
     #[test]

@@ -7,7 +7,11 @@
 //!          [--dim H] [--rows N]
 //!          — memory-plan an iteration and print peak/fit per strategy
 //!   train  --mode base|overl-h|2ps|naive [--steps N] [--lr F] [--artifacts DIR]
-//!          — live training on the PJRT artifacts (MiniVGG, synthetic data)
+//!          [--workers N] [--devices N] [--policy blocked|balanced]
+//!          [--link pcie|nvlink] [--trace-out FILE]
+//!          — live training on the PJRT artifacts (MiniVGG, synthetic data);
+//!          --workers enables the pipelined scheduler, --devices shards the
+//!          row DAG, --trace-out dumps the last step's per-device trace JSON
 //!   info   [--artifacts DIR]
 //!          — print the artifact bundle inventory
 //!   trace  --net vgg16 --strategy overl-h [--batch B] [--rows N] [--out FILE]
@@ -21,6 +25,8 @@ use lr_cnn::metrics::{fmt_bytes, Table};
 use lr_cnn::model::{resnet50, vgg16, Network};
 use lr_cnn::planner::{RowCentric, RowMode, Strategy};
 use lr_cnn::runtime::Runtime;
+use lr_cnn::sched::SchedConfig;
+use lr_cnn::shard::{LinkKind, PartitionPolicy, ShardConfig};
 
 use std::collections::HashMap;
 use std::process::ExitCode;
@@ -173,6 +179,28 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<(), String> {
         .unwrap_or("0.02")
         .parse()
         .map_err(|_| "bad --lr")?;
+    let workers: usize = flags
+        .get("workers")
+        .map(String::as_str)
+        .unwrap_or("0")
+        .parse()
+        .map_err(|_| "bad --workers")?;
+    let devices: usize = flags
+        .get("devices")
+        .map(String::as_str)
+        .unwrap_or("1")
+        .parse()
+        .map_err(|_| "bad --devices")?;
+    let policy = match flags.get("policy").map(String::as_str).unwrap_or("blocked") {
+        "blocked" => PartitionPolicy::Blocked,
+        "balanced" => PartitionPolicy::CostBalanced,
+        other => return Err(format!("unknown --policy {other} (blocked|balanced)")),
+    };
+    let link = match flags.get("link").map(String::as_str).unwrap_or("pcie") {
+        "pcie" => LinkKind::Pcie,
+        "nvlink" => LinkKind::NvLink,
+        other => return Err(format!("unknown --link {other} (pcie|nvlink)")),
+    };
     let rt = Runtime::open(dir).map_err(|e| e.to_string())?;
     println!(
         "platform {} | model {} | mode {}",
@@ -183,8 +211,33 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<(), String> {
     let m = rt.manifest.model.clone();
     let corpus = SyntheticCorpus::new(m.n_classes, 3, m.h, m.w, 1234);
     let mut tr = Trainer::new(&rt, mode, lr, 7).map_err(|e| e.to_string())?;
+    if workers > 0 || devices > 1 {
+        let mut cfg = SchedConfig::pipelined(workers.max(1));
+        if devices > 1 {
+            cfg = cfg.with_shard(ShardConfig::new(devices).with_policy(policy).with_link(link));
+        }
+        tr.set_sched(cfg).map_err(|e| e.to_string())?;
+        if let Some(ss) = tr.shard_state() {
+            println!(
+                "sched: {} worker(s), {} device(s), {} transfer(s)/step, modeled link {:.1} us/step",
+                workers.max(1),
+                devices,
+                ss.plan().transfers().len(),
+                ss.plan().modeled_transfer_seconds() * 1e6
+            );
+        }
+    }
     let losses =
         train_loop(&mut tr, &corpus, steps, (steps / 20).max(1)).map_err(|e| e.to_string())?;
+    if let Some(path) = flags.get("trace-out") {
+        match tr.trace_json() {
+            Some(json) => {
+                std::fs::write(path, json).map_err(|e| e.to_string())?;
+                println!("wrote per-device trace to {path}");
+            }
+            None => eprintln!("--trace-out: no trace recorded (serial mode?)"),
+        }
+    }
     let head = losses.iter().take(10).sum::<f32>() / losses.len().min(10) as f32;
     let tail = losses.iter().rev().take(10).sum::<f32>() / losses.len().min(10) as f32;
     println!(

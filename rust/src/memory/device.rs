@@ -26,6 +26,13 @@ pub struct DeviceModel {
 
 const GIB: u64 = 1 << 30;
 
+/// NVLink-ish peer-link bandwidth preset (bytes/s, per direction) for
+/// multi-device topologies (`shard::Topology`).  Spec-sheet class number
+/// (NVLink 3.0 sustains ~300 GB/s per direction on A100); as with the
+/// PCIe figures above, only ratios against compute affect any reproduced
+/// shape.
+pub const NVLINK_BYTES_PER_SEC: f64 = 300.0e9;
+
 impl DeviceModel {
     /// Dell Precision testbed: RTX 3090, 24 GB, 64 GB host RAM.
     pub fn rtx3090() -> DeviceModel {

@@ -3,17 +3,19 @@
 //!
 //! Every DAG node carries a projected byte cost (`Node::est_bytes`); a
 //! ready node is *dispatched* only when granting its bytes keeps the
-//! in-flight total under the budget.  The ledger bounds the **working set
-//! of concurrently dispatched nodes**: a grant is returned when its node
-//! finishes.  Outputs parked in handoff slots between a producer's finish
-//! and the consuming barrier's dispatch are accounted in the consuming
-//! barrier's estimate while *it* runs, not during the interim — tracking
-//! that interim residency in the ledger is a ROADMAP open item.  One
-//! escape hatch guarantees
-//! progress: when the pool is idle (nothing granted), the next node is
-//! admitted regardless of size — a single row larger than the budget then
-//! degrades to serial execution instead of deadlocking, and the observed
-//! peak is bounded by `max(budget, max_node_est)`.
+//! in-flight total under the budget.  The ledger bounds the working set of
+//! concurrently dispatched nodes **plus interim handoff-slot residency**:
+//! a node's working-set grant is returned when it finishes, but a producer
+//! with a nonzero `Node::out_bytes` immediately re-parks that many bytes
+//! ([`Admission::park`]) until every consumer has finished
+//! ([`Admission::unpark`]) — so outputs sitting in slots between a
+//! producer's finish and the consuming barrier's dispatch count against
+//! the budget too (the pre-fix ledger undercounted exactly those bytes).
+//! One escape hatch guarantees progress: when the pool is idle (nothing
+//! *running*; parked bytes do not pin the pool), the next node is admitted
+//! regardless of size — a single row larger than the budget then degrades
+//! to serial execution instead of deadlocking, and the observed peak is
+//! bounded by `max(budget, parked + max_node_est)`.
 //!
 //! The ledger is plain data mutated under the executor's state lock; it
 //! has no locking of its own.
@@ -23,6 +25,9 @@
 pub struct Admission {
     budget: u64,
     in_flight: u64,
+    /// Subset of `in_flight`: finished producers' outputs parked in
+    /// handoff slots, awaiting their last consumer.
+    parked: u64,
     active: usize,
     peak: u64,
     admitted: u64,
@@ -35,6 +40,7 @@ impl Admission {
         Admission {
             budget,
             in_flight: 0,
+            parked: 0,
             active: 0,
             peak: 0,
             admitted: 0,
@@ -68,6 +74,30 @@ impl Admission {
         debug_assert!(self.active > 0, "release without admit");
         self.active = self.active.saturating_sub(1);
         self.in_flight = self.in_flight.saturating_sub(bytes);
+    }
+
+    /// Retain `bytes` of a finished producer's output while it sits in a
+    /// handoff slot.  Parked bytes count toward `in_flight` (and the peak)
+    /// but not toward `active`, so they never pin the idle-pool escape
+    /// hatch.
+    pub fn park(&mut self, bytes: u64) {
+        self.parked = self.parked.saturating_add(bytes);
+        self.in_flight = self.in_flight.saturating_add(bytes);
+        if self.in_flight > self.peak {
+            self.peak = self.in_flight;
+        }
+    }
+
+    /// Release a parked output grant once its last consumer finished.
+    pub fn unpark(&mut self, bytes: u64) {
+        debug_assert!(self.parked >= bytes, "unpark without park");
+        self.parked = self.parked.saturating_sub(bytes);
+        self.in_flight = self.in_flight.saturating_sub(bytes);
+    }
+
+    /// Bytes currently parked in handoff slots.
+    pub fn parked(&self) -> u64 {
+        self.parked
     }
 
     /// Nodes currently granted (dispatched, not yet finished).
@@ -124,6 +154,29 @@ mod tests {
         a.release(1_000);
         assert_eq!(a.active(), 0);
         assert_eq!(a.peak(), 1_000); // peak bounded by max node, not budget
+    }
+
+    #[test]
+    fn parked_bytes_count_toward_budget_but_not_active() {
+        let mut a = Admission::new(100);
+        a.admit(60);
+        a.release(60);
+        a.park(40); // the 40-byte output waits in a slot for its consumer
+        assert_eq!(a.active(), 0);
+        assert_eq!(a.parked(), 40);
+        assert_eq!(a.in_flight(), 40);
+        // the interim bytes shrink what admission will grant...
+        assert!(a.can_admit(60));
+        a.admit(60);
+        assert!(!a.can_admit(1), "parked 40 + running 60 fill the budget");
+        assert_eq!(a.peak(), 100);
+        a.release(60);
+        a.unpark(40);
+        assert_eq!(a.in_flight(), 0);
+        // ...but an idle pool still admits regardless (progress): parked
+        // bytes never deadlock the run
+        a.park(200);
+        assert!(a.can_admit(50), "idle pool admits despite parked overrun");
     }
 
     #[test]

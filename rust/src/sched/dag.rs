@@ -33,6 +33,12 @@ pub enum NodeKind {
     /// Synchronization / reduction point (segment concat, FC head,
     /// deterministic gradient accumulation).
     Barrier,
+    /// Cross-device copy inserted by `shard::ShardPlan::lower` when an
+    /// edge crosses a device boundary.  Carries the payload bytes as both
+    /// `est_bytes` (charged to the destination ledger while the copy is
+    /// in flight) and `out_bytes` (the received slab parked until every
+    /// consumer finishes).  Never appears in a freshly lowered step DAG.
+    Transfer,
 }
 
 /// One schedulable unit of a step.
@@ -48,6 +54,13 @@ pub struct Node {
     /// currency (staged input slab + produced outputs; always-resident
     /// parameters ξ are excluded).
     pub est_bytes: u64,
+    /// Bytes of the node's *output* that stay parked in handoff slots
+    /// after it finishes, until every consumer has finished (subset of
+    /// `est_bytes`).  The admission ledger retains a grant of this size so
+    /// the byte bound covers interim slot residency, not just
+    /// concurrently-running nodes.  `0` (the [`Dag::push`] default) means
+    /// "nothing parked" — the pre-fix accounting.
+    pub out_bytes: u64,
 }
 
 /// A step's row dependency DAG.
@@ -70,8 +83,22 @@ impl Dag {
         &mut self,
         kind: NodeKind,
         label: impl Into<String>,
+        deps: Vec<NodeId>,
+        est_bytes: u64,
+    ) -> NodeId {
+        self.push_out(kind, label, deps, est_bytes, 0)
+    }
+
+    /// [`Dag::push`] plus an explicit parked-output byte count: the
+    /// producer's output grant is retained by the admission ledger until
+    /// all consumers finish (interim handoff-slot residency).
+    pub fn push_out(
+        &mut self,
+        kind: NodeKind,
+        label: impl Into<String>,
         mut deps: Vec<NodeId>,
         est_bytes: u64,
+        out_bytes: u64,
     ) -> NodeId {
         let id = self.nodes.len();
         deps.sort_unstable();
@@ -85,6 +112,7 @@ impl Dag {
             label,
             deps,
             est_bytes,
+            out_bytes,
         });
         id
     }
@@ -125,6 +153,18 @@ impl Dag {
         self.nodes.iter().map(|n| n.est_bytes).max().unwrap_or(0)
     }
 
+    /// Number of direct dependents per node — how many consumers must
+    /// finish before a parked output grant can be released.
+    pub fn consumer_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.len()];
+        for node in &self.nodes {
+            for &d in &node.deps {
+                counts[d] += 1;
+            }
+        }
+        counts
+    }
+
     /// Re-check the acyclicity invariant (`dep < id`, ids in range) for
     /// DAGs handed across an API boundary.
     pub fn validate(&self) -> Result<()> {
@@ -157,6 +197,19 @@ mod tests {
         assert!(d.validate().is_ok());
         assert_eq!(d.find("b"), Some(1));
         assert_eq!(d.find("zzz"), None);
+        assert_eq!(d.consumer_counts(), vec![1, 1, 0]);
+    }
+
+    #[test]
+    fn push_defaults_to_no_parked_output() {
+        let mut d = Dag::new();
+        let a = d.push(NodeKind::Row, "a", vec![], 10);
+        let b = d.push_out(NodeKind::Row, "b", vec![a], 20, 8);
+        assert_eq!(d.node(a).out_bytes, 0);
+        assert_eq!(d.node(b).out_bytes, 8);
+        let t = d.push_out(NodeKind::Transfer, "xfer.b.d1", vec![b], 8, 8);
+        assert_eq!(d.node(t).kind, NodeKind::Transfer);
+        assert!(d.validate().is_ok());
     }
 
     #[test]

@@ -36,13 +36,20 @@ use super::SchedConfig;
 /// per-row event trace.
 #[derive(Debug, Clone)]
 pub struct ExecOutcome {
-    /// Highest concurrent projected-byte total granted by admission.
+    /// Highest concurrent projected-byte total granted by admission
+    /// (across all ledgers: the worst single-device peak under sharding).
     pub peak_bytes: u64,
+    /// Per-device admission peaks; `vec![peak_bytes]` for the
+    /// single-ledger executor.
+    pub device_peaks: Vec<u64>,
     pub trace: Trace,
 }
 
 struct State {
     indeg: Vec<usize>,
+    /// Unfinished direct dependents per node; a producer's parked output
+    /// grant is released when this reaches 0.
+    succ_left: Vec<usize>,
     ready: BTreeSet<NodeId>,
     admission: Admission,
     done: usize,
@@ -59,6 +66,7 @@ impl State {
             node,
             kind,
             worker,
+            device: 0,
             in_flight_bytes: self.admission.in_flight(),
         };
         self.seq += 1;
@@ -81,6 +89,7 @@ where
     if n == 0 {
         return Ok(ExecOutcome {
             peak_bytes: 0,
+            device_peaks: vec![0],
             trace: Trace::default(),
         });
     }
@@ -94,9 +103,11 @@ where
             succ[d].push(id);
         }
     }
+    let succ_left: Vec<usize> = succ.iter().map(|s| s.len()).collect();
     let ready: BTreeSet<NodeId> = (0..n).filter(|&i| indeg[i] == 0).collect();
     let state = Mutex::new(State {
         indeg,
+        succ_left,
         ready,
         admission: Admission::new(cfg.mem_budget),
         done: 0,
@@ -129,8 +140,10 @@ where
             st.done, n
         )));
     }
+    let peak = st.admission.peak();
     Ok(ExecOutcome {
-        peak_bytes: st.admission.peak(),
+        peak_bytes: peak,
+        device_peaks: vec![peak],
         trace: Trace { events: st.events },
     })
 }
@@ -215,6 +228,24 @@ fn worker_loop<F>(
         match res {
             Ok(()) => {
                 st.done += 1;
+                // interim slot residency: keep the output grant parked
+                // until every consumer finishes (terminal nodes park
+                // nothing — their output is the step result)
+                let out = dag.node(id).out_bytes;
+                if out > 0 && !succ[id].is_empty() {
+                    st.admission.park(out);
+                }
+                // this node was a consumer: release deps whose last
+                // consumer just finished
+                for &d in &dag.node(id).deps {
+                    st.succ_left[d] -= 1;
+                    if st.succ_left[d] == 0 {
+                        let parked = dag.node(d).out_bytes;
+                        if parked > 0 {
+                            st.admission.unpark(parked);
+                        }
+                    }
+                }
                 st.record(id, TraceKind::Finished, w);
                 for &s in &succ[id] {
                     st.indeg[s] -= 1;
@@ -293,6 +324,7 @@ mod tests {
             workers,
             mem_budget: budget,
             policy: Policy::Pipelined,
+            shard: None,
         }
     }
 
@@ -419,7 +451,44 @@ mod tests {
     fn empty_dag_is_a_noop() {
         let out = run(&Dag::new(), &cfg(4, 0), |_| Ok(())).unwrap();
         assert_eq!(out.peak_bytes, 0);
+        assert_eq!(out.device_peaks, vec![0]);
         assert!(out.trace.events.is_empty());
+    }
+
+    /// Regression (ROADMAP parked-residency item): a producer's output
+    /// sitting in a handoff slot between its finish and its consumer's
+    /// finish now counts against the ledger.  The pre-fix accounting
+    /// (concurrently-running working sets only) would have reported a
+    /// peak of 100 here and undercounted the interim 100-byte slab.
+    #[test]
+    fn parked_slot_residency_counts_toward_the_peak() {
+        let mut dag = Dag::new();
+        // a's 100-byte output is consumed only by c, so it sits parked
+        // while b runs
+        let a = dag.push_out(NodeKind::Row, "a", vec![], 100, 100);
+        let b = dag.push(NodeKind::Row, "b", vec![a], 10);
+        dag.push(NodeKind::Barrier, "c", vec![a, b], 5);
+        let out = run_and_check(&dag, 1, u64::MAX);
+        // while b runs: parked(a)=100 + running(b)=10
+        assert_eq!(out.peak_bytes, 110, "interim slot bytes must be covered");
+        assert_eq!(out.trace.max_in_flight(), 110);
+        // and everything drains: the last event leaves nothing in flight
+        let last = out.trace.events.iter().max_by_key(|e| e.seq).unwrap();
+        assert_eq!(last.in_flight_bytes, 0, "all grants and parks released");
+    }
+
+    /// A terminal node's output is the step result, not interim slot
+    /// residency — it must not stay parked.
+    #[test]
+    fn terminal_outputs_are_not_parked() {
+        let mut dag = Dag::new();
+        let a = dag.push_out(NodeKind::Row, "a", vec![], 20, 20);
+        dag.push_out(NodeKind::Barrier, "out", vec![a], 30, 30);
+        let out = run_and_check(&dag, 2, u64::MAX);
+        // a parked (20) while out runs (30) → 50; out itself never parks
+        assert_eq!(out.peak_bytes, 50);
+        let last = out.trace.events.iter().max_by_key(|e| e.seq).unwrap();
+        assert_eq!(last.in_flight_bytes, 0);
     }
 
     #[test]

@@ -50,8 +50,13 @@ pub struct SchedConfig {
     /// Worker threads for the pipelined executor (clamped to ≥ 1).
     pub workers: usize,
     /// Projected-byte admission budget; `u64::MAX` disables admission.
+    /// Under sharding this is the **per-device** ledger budget — sharding
+    /// multiplies aggregate capacity, which is the point.
     pub mem_budget: u64,
     pub policy: Policy,
+    /// Multi-device sharding of the row DAG (`None` = one device).  Only
+    /// meaningful with [`Policy::Pipelined`].
+    pub shard: Option<crate::shard::ShardConfig>,
 }
 
 impl Default for SchedConfig {
@@ -60,6 +65,7 @@ impl Default for SchedConfig {
             workers: 1,
             mem_budget: u64::MAX,
             policy: Policy::Serial,
+            shard: None,
         }
     }
 }
@@ -71,12 +77,19 @@ impl SchedConfig {
             workers: workers.max(1),
             mem_budget: u64::MAX,
             policy: Policy::Pipelined,
+            shard: None,
         }
     }
 
     /// Cap the admission budget (builder style).
     pub fn with_budget(mut self, bytes: u64) -> Self {
         self.mem_budget = bytes;
+        self
+    }
+
+    /// Shard the row DAG across multiple devices (builder style).
+    pub fn with_shard(mut self, shard: crate::shard::ShardConfig) -> Self {
+        self.shard = Some(shard);
         self
     }
 
@@ -107,6 +120,9 @@ mod tests {
         assert_eq!(c.workers, 4);
         assert_eq!(c.mem_budget, 1 << 20);
         assert_eq!(c.policy, Policy::Pipelined);
+        assert!(c.shard.is_none());
+        let s = c.with_shard(crate::shard::ShardConfig::new(4));
+        assert_eq!(s.shard.unwrap().devices, 4);
     }
 
     #[test]

@@ -36,7 +36,12 @@ pub struct TraceEvent {
     pub kind: TraceKind,
     /// Worker thread index that observed the event.
     pub worker: usize,
-    /// Admission in-flight bytes immediately after the event.
+    /// Device the node is assigned to — its trace *lane*.  Always `0` for
+    /// the single-ledger executor; the sharded executor records the
+    /// partitioner's assignment.
+    pub device: usize,
+    /// Admission in-flight bytes immediately after the event — of the
+    /// single global ledger, or of `device`'s ledger under sharding.
     pub in_flight_bytes: u64,
 }
 
@@ -59,6 +64,25 @@ impl Trace {
     /// Highest in-flight byte total observed at any event.
     pub fn max_in_flight(&self) -> u64 {
         self.events.iter().map(|e| e.in_flight_bytes).max().unwrap_or(0)
+    }
+
+    /// Highest in-flight byte total observed on one device's ledger —
+    /// what "every per-device admission ledger was respected" asserts.
+    pub fn max_in_flight_on(&self, device: usize) -> u64 {
+        self.events
+            .iter()
+            .filter(|e| e.device == device)
+            .map(|e| e.in_flight_bytes)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Devices that appear in the trace, ascending.
+    pub fn devices(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.events.iter().map(|e| e.device).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
     }
 
     /// Check the trace describes a complete, successful run of `dag`:
@@ -118,23 +142,68 @@ impl Trace {
     }
 
     /// Attribution dump: one JSON object per node in id order (label,
-    /// kind, projected bytes, deps) plus run-level counters.  Built from
-    /// the canonical view, so the output is deterministic.
+    /// kind, projected/parked bytes, device, deps), per-device *lanes*
+    /// (the flame-style grouping), `Transfer` spans with their payload
+    /// bytes, and run-level counters.  Node devices come from the
+    /// dispatch events; everything is emitted in id/device order, so the
+    /// output is deterministic.
     pub fn to_json(&self, dag: &Dag) -> String {
         use std::fmt::Write as _;
-        let mut out = String::from("{\n  \"schema\": 1,\n  \"nodes\": [\n");
+        // device per node, from its Dispatched event (0 if never seen)
+        let mut dev = vec![0usize; dag.len()];
+        for e in &self.events {
+            if e.kind == TraceKind::Dispatched && e.node < dev.len() {
+                dev[e.node] = e.device;
+            }
+        }
+        let mut out = String::from("{\n  \"schema\": 2,\n  \"nodes\": [\n");
         for (id, node) in dag.nodes().iter().enumerate() {
             let deps: Vec<String> = node.deps.iter().map(|d| d.to_string()).collect();
             let _ = write!(
                 out,
                 "    {{\"id\": {id}, \"label\": \"{}\", \"kind\": \"{:?}\", \
-                 \"est_bytes\": {}, \"deps\": [{}]}}",
+                 \"est_bytes\": {}, \"out_bytes\": {}, \"device\": {}, \"deps\": [{}]}}",
                 node.label,
                 node.kind,
                 node.est_bytes,
+                node.out_bytes,
+                dev[id],
                 deps.join(", ")
             );
             out.push_str(if id + 1 < dag.len() { ",\n" } else { "\n" });
+        }
+        // per-device lanes: node ids grouped by device, ascending
+        let mut lanes: Vec<usize> = dev.clone();
+        lanes.sort_unstable();
+        lanes.dedup();
+        out.push_str("  ],\n  \"lanes\": [\n");
+        for (i, &d) in lanes.iter().enumerate() {
+            let ids: Vec<String> = (0..dag.len())
+                .filter(|&id| dev[id] == d)
+                .map(|id| id.to_string())
+                .collect();
+            let _ = write!(
+                out,
+                "    {{\"device\": {d}, \"max_in_flight_bytes\": {}, \"nodes\": [{}]}}",
+                self.max_in_flight_on(d),
+                ids.join(", ")
+            );
+            out.push_str(if i + 1 < lanes.len() { ",\n" } else { "\n" });
+        }
+        // transfer spans (cross-device copies) for flame attribution
+        let xfers: Vec<usize> = (0..dag.len())
+            .filter(|&id| dag.node(id).kind == super::dag::NodeKind::Transfer)
+            .collect();
+        out.push_str("  ],\n  \"transfers\": [\n");
+        for (i, &id) in xfers.iter().enumerate() {
+            let _ = write!(
+                out,
+                "    {{\"id\": {id}, \"label\": \"{}\", \"bytes\": {}, \"device\": {}}}",
+                dag.node(id).label,
+                dag.node(id).est_bytes,
+                dev[id]
+            );
+            out.push_str(if i + 1 < xfers.len() { ",\n" } else { "\n" });
         }
         let _ = writeln!(
             out,
@@ -164,6 +233,7 @@ mod tests {
             node,
             kind,
             worker: 0,
+            device: 0,
             in_flight_bytes: 0,
         }
     }
@@ -228,5 +298,40 @@ mod tests {
         let json = t.to_json(&dag);
         assert!(crate::util::json::JsonValue::parse(&json).is_ok(), "{json}");
         assert_eq!(json, t.to_json(&dag));
+        assert!(json.contains("\"lanes\""), "{json}");
+        assert!(json.contains("\"transfers\""), "{json}");
+    }
+
+    #[test]
+    fn json_groups_nodes_into_device_lanes_and_lists_transfers() {
+        let mut dag = Dag::new();
+        let a = dag.push(NodeKind::Row, "a", vec![], 5);
+        let t = dag.push_out(NodeKind::Transfer, "xfer.a.d1", vec![a], 8, 8);
+        dag.push(NodeKind::Barrier, "b", vec![t], 0);
+        let mk = |seq, node, kind, device, bytes| TraceEvent {
+            seq,
+            node,
+            kind,
+            worker: 0,
+            device,
+            in_flight_bytes: bytes,
+        };
+        let trace = Trace {
+            events: vec![
+                mk(0, 0, TraceKind::Dispatched, 0, 5),
+                mk(1, 0, TraceKind::Finished, 0, 0),
+                mk(2, 1, TraceKind::Dispatched, 1, 8),
+                mk(3, 1, TraceKind::Finished, 1, 8),
+                mk(4, 2, TraceKind::Dispatched, 1, 8),
+                mk(5, 2, TraceKind::Finished, 1, 0),
+            ],
+        };
+        assert_eq!(trace.devices(), vec![0, 1]);
+        assert_eq!(trace.max_in_flight_on(0), 5);
+        assert_eq!(trace.max_in_flight_on(1), 8);
+        let json = trace.to_json(&dag);
+        assert!(crate::util::json::JsonValue::parse(&json).is_ok(), "{json}");
+        assert!(json.contains("\"device\": 1"), "{json}");
+        assert!(json.contains("\"label\": \"xfer.a.d1\", \"bytes\": 8"), "{json}");
     }
 }

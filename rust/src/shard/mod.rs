@@ -1,0 +1,83 @@
+//! `shard` — multi-device row sharding over the weak-dependency DAG
+//! (docs/SHARDING.md).
+//!
+//! The paper's dependency analysis says rows are independent under OverL
+//! and only chain-dependent under 2PS; PR 2 exploited that across
+//! *threads*, this subsystem exploits it across *devices*.  Cross-device
+//! traffic is confined to the thin 2PS boundary caches and the phase
+//! barriers, so sharding multiplies aggregate HBM while keeping the
+//! no-accuracy-loss guarantee: results stay **bit-identical** to serial
+//! because the partitioner never moves a reduction out of its barrier and
+//! transfers carry data, not arithmetic.
+//!
+//! | module | role |
+//! |---|---|
+//! | [`topology`] | N `DeviceModel`-backed devices + PCIe/NVLink peer links |
+//! | [`partition`] | `Blocked` / `CostBalanced` node→device assignment |
+//! | [`plan`] | cross-device edges → `Transfer` nodes; per-device `memory::sim` replay |
+//! | [`exec`] | persistent worker pool, per-device admission ledgers |
+
+pub mod exec;
+pub mod partition;
+pub mod plan;
+pub mod topology;
+
+pub use exec::ShardedExecutor;
+pub use partition::{PartitionPolicy, Partitioner};
+pub use plan::{ShardPlan, Transfer};
+pub use topology::{DeviceId, LinkKind, Topology};
+
+/// Multi-device sharding knobs, carried inside `sched::SchedConfig`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardConfig {
+    /// Simulated devices to shard the row DAG over (clamped to ≥ 1).
+    pub devices: usize,
+    pub policy: PartitionPolicy,
+    /// Peer-link model for cross-device transfers.
+    pub link: LinkKind,
+}
+
+impl ShardConfig {
+    /// `devices` devices under the default `Blocked` policy over PCIe.
+    pub fn new(devices: usize) -> ShardConfig {
+        ShardConfig {
+            devices: devices.max(1),
+            policy: PartitionPolicy::Blocked,
+            link: LinkKind::Pcie,
+        }
+    }
+
+    pub fn with_policy(mut self, policy: PartitionPolicy) -> ShardConfig {
+        self.policy = policy;
+        self
+    }
+
+    pub fn with_link(mut self, link: LinkKind) -> ShardConfig {
+        self.link = link;
+        self
+    }
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        ShardConfig::new(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_builders() {
+        let c = ShardConfig::new(0);
+        assert_eq!(c.devices, 1, "clamped");
+        let c = ShardConfig::new(4)
+            .with_policy(PartitionPolicy::CostBalanced)
+            .with_link(LinkKind::NvLink);
+        assert_eq!(c.devices, 4);
+        assert_eq!(c.policy, PartitionPolicy::CostBalanced);
+        assert_eq!(c.link, LinkKind::NvLink);
+        assert_eq!(ShardConfig::default().devices, 1);
+    }
+}

@@ -1,0 +1,278 @@
+//! Row-DAG partitioning: assign every node a [`DeviceId`].
+//!
+//! Two policies, both deterministic (pure functions of the DAG and the
+//! topology — assignments never depend on timing or iteration order of a
+//! hash map):
+//!
+//! * [`PartitionPolicy::Blocked`] — each parallel row fan splits into
+//!   contiguous row ranges, one range per device; barriers and every 2PS
+//!   chain stay on device 0, so 2PS boundary-cache handoffs **never**
+//!   cross a device (the chain is the paper's serialization bottleneck —
+//!   putting a PCIe hop inside it would serialize the cluster).  On one
+//!   device the assignment is all-zeros and lowering is the identity.
+//! * [`PartitionPolicy::CostBalanced`] — greedy bin-packing on the
+//!   `costmodel` per-node FLOP/byte estimates: each row goes to the
+//!   device minimizing (load + node seconds + modeled transfer seconds
+//!   for its cross-device inputs), subject to a per-device byte-ledger
+//!   steer.  Minimizes the max per-device load; an exact per-device
+//!   replay check runs after lowering (`ShardPlan::check_budgets`).
+
+use crate::costmodel;
+use crate::error::{Error, Result};
+use crate::sched::{Dag, NodeKind};
+
+use super::topology::{DeviceId, Topology};
+
+/// How the partitioner maps row-DAG nodes onto devices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionPolicy {
+    /// Contiguous row ranges per fan; chains and barriers on device 0.
+    Blocked,
+    /// Greedy FLOP/byte bin-packing minimizing the max per-device load.
+    CostBalanced,
+}
+
+/// Stateless assignment engine for one policy.
+#[derive(Debug, Clone, Copy)]
+pub struct Partitioner {
+    pub policy: PartitionPolicy,
+}
+
+impl Partitioner {
+    pub fn new(policy: PartitionPolicy) -> Partitioner {
+        Partitioner { policy }
+    }
+
+    /// Assign every node of `dag` a device.  `ledgers` is the per-device
+    /// byte budget (`ledgers.len() == topo.len()`); `u64::MAX` entries
+    /// disable the steer.  Every node is assigned exactly once; the
+    /// result is deterministic across calls.
+    pub fn assign(&self, dag: &Dag, topo: &Topology, ledgers: &[u64]) -> Result<Vec<DeviceId>> {
+        if ledgers.len() != topo.len() {
+            return Err(Error::Sched(format!(
+                "partitioner: {} ledgers for {} devices",
+                ledgers.len(),
+                topo.len()
+            )));
+        }
+        if let Some(t) = dag
+            .nodes()
+            .iter()
+            .find(|n| n.kind == NodeKind::Transfer)
+        {
+            return Err(Error::Sched(format!(
+                "partitioner input already lowered: found transfer node '{}'",
+                t.label
+            )));
+        }
+        dag.validate()?;
+        match self.policy {
+            PartitionPolicy::Blocked => Ok(blocked(dag, topo.len())),
+            PartitionPolicy::CostBalanced => cost_balanced(dag, topo, ledgers),
+        }
+    }
+}
+
+/// Contiguous row ranges: a maximal run of `Row` nodes (a parallel fan —
+/// fans are pushed with consecutive ids by `StepPlan::lower`) of length k
+/// maps row j to device ⌊j·D/k⌋.  Everything else pins to device 0.
+fn blocked(dag: &Dag, devices: usize) -> Vec<DeviceId> {
+    let mut dev = vec![0usize; dag.len()];
+    let mut i = 0;
+    while i < dag.len() {
+        if dag.node(i).kind == NodeKind::Row {
+            let start = i;
+            while i < dag.len() && dag.node(i).kind == NodeKind::Row {
+                i += 1;
+            }
+            let k = i - start;
+            for j in 0..k {
+                dev[start + j] = j * devices / k;
+            }
+        } else {
+            // barriers (serial-order reductions) and 2PS chain rows
+            dev[i] = 0;
+            i += 1;
+        }
+    }
+    dev
+}
+
+/// Greedy bin-packing on modeled node seconds.  Nodes are visited in id
+/// (= topological = serial) order; each `Row`/`TpsRow` node goes to the
+/// device minimizing its finish contribution, with a serial-replay parked
+/// + working-set byte steer against the ledgers.  Barriers pin to device
+/// 0: they are the fixed-order f32 reductions, and scattering them buys
+/// no parallelism while costing a transfer per input fan.
+fn cost_balanced(dag: &Dag, topo: &Topology, ledgers: &[u64]) -> Result<Vec<DeviceId>> {
+    let n = dag.len();
+    let d = topo.len();
+    let mut dev = vec![0usize; n];
+    let mut load = vec![0f64; d];
+    // serial-replay parked bytes per device (cheap steer; the exact
+    // lowered-DAG replay runs in ShardPlan::check_budgets)
+    let mut resident = vec![0u64; d];
+    let mut left = dag.consumer_counts();
+
+    for id in 0..n {
+        let node = dag.node(id);
+        let choice = match node.kind {
+            NodeKind::Barrier => 0,
+            _ => {
+                let mut best: Option<(f64, DeviceId)> = None;
+                for c in 0..d {
+                    if resident[c].saturating_add(node.est_bytes) > ledgers[c] {
+                        continue; // ledger steer: this row cannot run here
+                    }
+                    let mut cost = costmodel::node_seconds(node.est_bytes, topo.device(c));
+                    for &dep in &node.deps {
+                        let payload = payload_bytes(dag, dep);
+                        cost += topo.transfer_seconds(payload, dev[dep], c);
+                    }
+                    let finish = load[c] + cost;
+                    // strict < keeps ties on the lowest DeviceId
+                    if best.map(|(f, _)| finish < f).unwrap_or(true) {
+                        best = Some((finish, c));
+                    }
+                }
+                match best {
+                    Some((_, c)) => c,
+                    None => {
+                        return Err(Error::InfeasiblePlan(format!(
+                            "cost-balanced shard: node '{}' ({} B) fits no device ledger",
+                            node.label, node.est_bytes
+                        )))
+                    }
+                }
+            }
+        };
+        dev[id] = choice;
+        load[choice] += costmodel::node_seconds(node.est_bytes, topo.device(choice));
+        // replay accounting: park this node's output, release deps whose
+        // last consumer this was
+        if left[id] > 0 {
+            resident[choice] = resident[choice].saturating_add(node.out_bytes);
+        }
+        for &dep in &node.deps {
+            left[dep] -= 1;
+            if left[dep] == 0 {
+                resident[dev[dep]] =
+                    resident[dev[dep]].saturating_sub(dag.node(dep).out_bytes);
+            }
+        }
+    }
+    Ok(dev)
+}
+
+/// Bytes that cross a device boundary when `id`'s output feeds a consumer
+/// elsewhere: the parked output size, falling back to the full working
+/// set for nodes that declare no `out_bytes`.
+pub(crate) fn payload_bytes(dag: &Dag, id: usize) -> u64 {
+    let node = dag.node(id);
+    if node.out_bytes > 0 {
+        node.out_bytes
+    } else {
+        node.est_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::DeviceModel;
+    use crate::shard::topology::LinkKind;
+
+    /// fan(4 rows) → barrier → chain(3 tps rows) → barrier
+    fn mixed_dag() -> Dag {
+        let mut d = Dag::new();
+        let fan: Vec<_> = (0..4)
+            .map(|r| d.push_out(NodeKind::Row, format!("fp{r}"), vec![], 100, 40))
+            .collect();
+        let ck = d.push_out(NodeKind::Barrier, "ck", fan, 160, 160);
+        let mut prev = ck;
+        for r in 0..3 {
+            prev = d.push_out(NodeKind::TpsRow, format!("tps{r}"), vec![prev], 80, 30);
+        }
+        d.push(NodeKind::Barrier, "zl", vec![prev], 0);
+        d
+    }
+
+    fn topo(n: usize) -> Topology {
+        Topology::uniform(n, DeviceModel::rtx3090(), LinkKind::Pcie)
+    }
+
+    #[test]
+    fn blocked_splits_fans_contiguously_and_pins_chains() {
+        let dag = mixed_dag();
+        let t = topo(2);
+        let dev = Partitioner::new(PartitionPolicy::Blocked)
+            .assign(&dag, &t, &[u64::MAX; 2])
+            .unwrap();
+        assert_eq!(dev.len(), dag.len());
+        // fan of 4 over 2 devices: [0,0,1,1] — contiguous ranges
+        assert_eq!(&dev[0..4], &[0, 0, 1, 1]);
+        // barriers + the whole 2PS chain on device 0: zero cross-device
+        // handoffs inside the chain
+        for id in 4..dag.len() {
+            assert_eq!(dev[id], 0, "node {id} must pin to device 0");
+        }
+    }
+
+    #[test]
+    fn blocked_on_one_device_is_all_zeros() {
+        let dag = mixed_dag();
+        let dev = Partitioner::new(PartitionPolicy::Blocked)
+            .assign(&dag, &topo(1), &[u64::MAX])
+            .unwrap();
+        assert!(dev.iter().all(|&d| d == 0));
+    }
+
+    #[test]
+    fn cost_balanced_spreads_load_and_is_deterministic() {
+        let dag = mixed_dag();
+        let t = topo(2);
+        let p = Partitioner::new(PartitionPolicy::CostBalanced);
+        let a = p.assign(&dag, &t, &[u64::MAX; 2]).unwrap();
+        let b = p.assign(&dag, &t, &[u64::MAX; 2]).unwrap();
+        assert_eq!(a, b, "assignment must be a pure function of its inputs");
+        // the 4-row fan must not all land on one device
+        let on0 = a[0..4].iter().filter(|&&d| d == 0).count();
+        assert!(on0 > 0 && on0 < 4, "fan unbalanced: {a:?}");
+        // barriers stay on device 0
+        assert_eq!(a[4], 0);
+    }
+
+    #[test]
+    fn cost_balanced_respects_the_ledger_steer() {
+        let mut dag = Dag::new();
+        for r in 0..4 {
+            dag.push(NodeKind::Row, format!("r{r}"), vec![], 100);
+        }
+        let t = topo(2);
+        let p = Partitioner::new(PartitionPolicy::CostBalanced);
+        // device 0 too small for any row: everything must go to device 1
+        let dev = p.assign(&dag, &t, &[50, u64::MAX]).unwrap();
+        assert!(dev.iter().all(|&d| d == 1), "{dev:?}");
+        // nothing fits anywhere: a typed error, not a panic
+        match p.assign(&dag, &t, &[50, 50]) {
+            Err(Error::InfeasiblePlan(msg)) => assert!(msg.contains("ledger"), "{msg}"),
+            other => panic!("expected InfeasiblePlan, got {:?}", other.is_ok()),
+        }
+    }
+
+    #[test]
+    fn already_lowered_input_is_rejected() {
+        let mut dag = Dag::new();
+        let a = dag.push(NodeKind::Row, "a", vec![], 10);
+        dag.push_out(NodeKind::Transfer, "xfer.a.d1", vec![a], 10, 10);
+        let res = Partitioner::new(PartitionPolicy::Blocked).assign(&dag, &topo(2), &[0, 0]);
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn ledger_arity_mismatch_is_an_error() {
+        let dag = mixed_dag();
+        let res = Partitioner::new(PartitionPolicy::Blocked).assign(&dag, &topo(2), &[0]);
+        assert!(res.is_err());
+    }
+}

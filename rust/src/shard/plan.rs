@@ -1,0 +1,392 @@
+//! Sharded execution plan: lowering and per-device byte replay.
+//!
+//! [`ShardPlan::build`] takes a lowered step DAG, partitions it
+//! ([`Partitioner`]) and rewrites every cross-device edge `u → v` into an
+//! explicit [`NodeKind::Transfer`] node `u → xfer → v` carrying the
+//! payload bytes (charged to the **destination** ledger while the copy is
+//! in flight, then parked until every consumer on that device finished)
+//! and a modeled link latency from the [`Topology`].  Two consumers of
+//! the same producer on the same destination device share one transfer.
+//! Node ids of the sharded DAG remain a topological order and
+//! `Dag::validate` is re-checked, so acyclicity survives the rewrite; on
+//! one device the lowering is the **identity** (bit-identical DAG).
+//!
+//! [`ShardPlan::per_device_schedules`] replays the sharded DAG in serial
+//! (id) order into one `memory::sim::Schedule` per device — working set
+//! at dispatch, parked output until the last consumer — giving the exact
+//! per-device peak a serial-order execution holds.  That peak is the
+//! budget callers should hand the per-device admission ledgers;
+//! [`ShardPlan::check_budgets`] asserts it fits.
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+use crate::memory::sim::{self, Schedule};
+use crate::sched::{Dag, NodeId, NodeKind};
+
+use super::partition::{payload_bytes, PartitionPolicy, Partitioner};
+use super::topology::{DeviceId, Topology};
+
+/// One cross-device copy in the sharded DAG.
+#[derive(Debug, Clone)]
+pub struct Transfer {
+    /// The transfer's node id in [`ShardPlan::dag`].
+    pub node: NodeId,
+    pub src: DeviceId,
+    pub dst: DeviceId,
+    pub bytes: u64,
+    /// Modeled link latency (setup + bytes / link bandwidth) — used for
+    /// attribution and cost reporting, never slept.
+    pub seconds: f64,
+}
+
+/// A partitioned, transfer-lowered step DAG plus everything the sharded
+/// executor needs per step.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    dag: Dag,
+    device_of: Vec<DeviceId>,
+    /// Sharded node → originating node in the base DAG (`None` for
+    /// transfers).
+    orig: Vec<Option<NodeId>>,
+    transfers: Vec<Transfer>,
+    /// Successor lists, precomputed once (the pool reuses them per step).
+    succ: Vec<Vec<NodeId>>,
+    /// Per-device admission ledger budgets.
+    budgets: Vec<u64>,
+    devices: usize,
+}
+
+impl ShardPlan {
+    /// Partition `base` over `topo` with `policy` and lower cross-device
+    /// edges into transfers.  `budgets[d]` is device `d`'s admission
+    /// ledger (and the `CostBalanced` steer).
+    pub fn build(
+        base: &Dag,
+        topo: &Topology,
+        policy: PartitionPolicy,
+        budgets: Vec<u64>,
+    ) -> Result<ShardPlan> {
+        let assignment = Partitioner::new(policy).assign(base, topo, &budgets)?;
+        ShardPlan::lower(base, topo, &assignment, budgets)
+    }
+
+    /// Lower `base` under an explicit assignment (the partitioner's, or a
+    /// hand-built one in tests).
+    pub fn lower(
+        base: &Dag,
+        topo: &Topology,
+        assignment: &[DeviceId],
+        budgets: Vec<u64>,
+    ) -> Result<ShardPlan> {
+        if assignment.len() != base.len() {
+            return Err(Error::Sched(format!(
+                "shard lowering: {} assignments for {} nodes",
+                assignment.len(),
+                base.len()
+            )));
+        }
+        if budgets.len() != topo.len() {
+            return Err(Error::Sched(format!(
+                "shard lowering: {} budgets for {} devices",
+                budgets.len(),
+                topo.len()
+            )));
+        }
+        if let Some(&bad) = assignment.iter().find(|&&d| d >= topo.len()) {
+            return Err(Error::Sched(format!(
+                "shard lowering: device {bad} outside topology of {}",
+                topo.len()
+            )));
+        }
+        base.validate()?;
+
+        let mut dag = Dag::new();
+        let mut device_of: Vec<DeviceId> = Vec::with_capacity(base.len());
+        let mut orig: Vec<Option<NodeId>> = Vec::with_capacity(base.len());
+        let mut transfers: Vec<Transfer> = Vec::new();
+        let mut remap = vec![0usize; base.len()];
+        // (base producer, destination device) → shared transfer node
+        let mut xfer: HashMap<(NodeId, DeviceId), NodeId> = HashMap::new();
+
+        for (id, node) in base.nodes().iter().enumerate() {
+            let dst = assignment[id];
+            let mut deps = Vec::with_capacity(node.deps.len());
+            for &d in &node.deps {
+                let src = assignment[d];
+                if src == dst {
+                    deps.push(remap[d]);
+                    continue;
+                }
+                let t = match xfer.get(&(d, dst)) {
+                    Some(&t) => t,
+                    None => {
+                        let bytes = payload_bytes(base, d);
+                        let t = dag.push_out(
+                            NodeKind::Transfer,
+                            format!("xfer.{}.d{dst}", base.node(d).label),
+                            vec![remap[d]],
+                            bytes,
+                            bytes,
+                        );
+                        device_of.push(dst);
+                        orig.push(None);
+                        transfers.push(Transfer {
+                            node: t,
+                            src,
+                            dst,
+                            bytes,
+                            seconds: topo.transfer_seconds(bytes, src, dst),
+                        });
+                        xfer.insert((d, dst), t);
+                        t
+                    }
+                };
+                deps.push(t);
+            }
+            remap[id] = dag.push_out(
+                node.kind,
+                node.label.clone(),
+                deps,
+                node.est_bytes,
+                node.out_bytes,
+            );
+            device_of.push(dst);
+            orig.push(Some(id));
+        }
+        dag.validate()?;
+        let succ = successors(&dag);
+        Ok(ShardPlan {
+            dag,
+            device_of,
+            orig,
+            transfers,
+            succ,
+            budgets,
+            devices: topo.len(),
+        })
+    }
+
+    pub fn dag(&self) -> &Dag {
+        &self.dag
+    }
+
+    pub fn devices(&self) -> usize {
+        self.devices
+    }
+
+    pub fn device_of(&self) -> &[DeviceId] {
+        &self.device_of
+    }
+
+    /// Base-DAG node behind a sharded node (`None` for transfers).
+    pub fn orig(&self) -> &[Option<NodeId>] {
+        &self.orig
+    }
+
+    pub fn transfers(&self) -> &[Transfer] {
+        &self.transfers
+    }
+
+    pub(crate) fn succ(&self) -> &[Vec<NodeId>] {
+        &self.succ
+    }
+
+    pub fn budgets(&self) -> &[u64] {
+        &self.budgets
+    }
+
+    /// Replace the per-device ledger budgets (e.g. with the replay peaks).
+    pub fn set_budgets(&mut self, budgets: Vec<u64>) -> Result<()> {
+        if budgets.len() != self.devices {
+            return Err(Error::Sched(format!(
+                "{} budgets for {} devices",
+                budgets.len(),
+                self.devices
+            )));
+        }
+        self.budgets = budgets;
+        Ok(())
+    }
+
+    /// Total modeled cross-device link time per step.
+    pub fn modeled_transfer_seconds(&self) -> f64 {
+        self.transfers.iter().map(|t| t.seconds).sum()
+    }
+
+    /// Serial-order replay of the sharded DAG as one allocation schedule
+    /// per device: each node allocs its working set, frees it at finish,
+    /// then parks its output bytes until its last consumer finishes.
+    /// `memory::sim::simulate` on each schedule yields the exact
+    /// per-device peak of a serial-order execution — the tight admission
+    /// budget.
+    pub fn per_device_schedules(&self) -> Vec<Schedule> {
+        let n = self.dag.len();
+        let mut scheds: Vec<Schedule> = (0..self.devices).map(|_| Schedule::new()).collect();
+        let mut left = self.dag.consumer_counts();
+        for id in 0..n {
+            let node = self.dag.node(id);
+            let d = self.device_of[id];
+            let s = &mut scheds[d];
+            s.mark(node.label.clone());
+            let run = s.intern(format!("run.{}", node.label));
+            s.alloc_id(run, node.est_bytes);
+            s.free_id(run);
+            if left[id] > 0 && node.out_bytes > 0 {
+                s.alloc(format!("park.{}", node.label), node.out_bytes);
+            }
+            for &dep in &self.dag.node(id).deps {
+                left[dep] -= 1;
+                if left[dep] == 0 && self.dag.node(dep).out_bytes > 0 {
+                    let dd = self.device_of[dep];
+                    let name = format!("park.{}", self.dag.node(dep).label);
+                    scheds[dd].free(name);
+                }
+            }
+        }
+        scheds
+    }
+
+    /// Per-device serial-order peaks (see [`ShardPlan::per_device_schedules`]).
+    pub fn replay_peaks(&self) -> Result<Vec<u64>> {
+        self.per_device_schedules()
+            .iter()
+            .map(|s| {
+                let rep = sim::simulate(s)?;
+                debug_assert_eq!(rep.final_bytes, 0, "sharded replay must drain");
+                Ok(rep.peak_bytes)
+            })
+            .collect()
+    }
+
+    /// Error if any device's serial-order replay peak exceeds its ledger.
+    pub fn check_budgets(&self) -> Result<()> {
+        for (d, peak) in self.replay_peaks()?.into_iter().enumerate() {
+            if peak > self.budgets[d] {
+                return Err(Error::InfeasiblePlan(format!(
+                    "device {d}: serial-order replay peak {peak} B exceeds its {} B ledger",
+                    self.budgets[d]
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+fn successors(dag: &Dag) -> Vec<Vec<NodeId>> {
+    let mut succ: Vec<Vec<NodeId>> = vec![Vec::new(); dag.len()];
+    for (id, node) in dag.nodes().iter().enumerate() {
+        for &d in &node.deps {
+            succ[d].push(id);
+        }
+    }
+    succ
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::DeviceModel;
+    use crate::shard::topology::LinkKind;
+
+    fn topo(n: usize) -> Topology {
+        Topology::uniform(n, DeviceModel::rtx3090(), LinkKind::Pcie)
+    }
+
+    /// 2 producers → barrier (the minimal fan).
+    fn fan() -> Dag {
+        let mut d = Dag::new();
+        let a = d.push_out(NodeKind::Row, "a", vec![], 100, 40);
+        let b = d.push_out(NodeKind::Row, "b", vec![], 100, 40);
+        d.push(NodeKind::Barrier, "red", vec![a, b], 80);
+        d
+    }
+
+    #[test]
+    fn one_device_lowering_is_the_identity() {
+        let base = fan();
+        let plan = ShardPlan::build(&base, &topo(1), PartitionPolicy::Blocked, vec![u64::MAX])
+            .unwrap();
+        assert_eq!(plan.dag().len(), base.len());
+        assert!(plan.transfers().is_empty());
+        for (id, node) in base.nodes().iter().enumerate() {
+            let got = plan.dag().node(id);
+            assert_eq!(got.kind, node.kind);
+            assert_eq!(got.label, node.label);
+            assert_eq!(got.deps, node.deps);
+            assert_eq!(got.est_bytes, node.est_bytes);
+            assert_eq!(got.out_bytes, node.out_bytes);
+            assert_eq!(plan.orig()[id], Some(id));
+        }
+    }
+
+    #[test]
+    fn cross_device_edges_become_transfers_exactly() {
+        let base = fan();
+        // hand assignment: a on 0, b on 1, barrier on 0 ⇒ exactly one
+        // transfer (b → device 0); a's edge stays local
+        let plan =
+            ShardPlan::lower(&base, &topo(2), &[0, 1, 0], vec![u64::MAX; 2]).unwrap();
+        assert_eq!(plan.transfers().len(), 1);
+        let t = &plan.transfers()[0];
+        assert_eq!((t.src, t.dst), (1, 0));
+        assert_eq!(t.bytes, 40, "payload = producer out_bytes");
+        assert!(t.seconds > 0.0);
+        let tn = plan.dag().node(t.node);
+        assert_eq!(tn.kind, NodeKind::Transfer);
+        assert_eq!(tn.est_bytes, 40);
+        assert_eq!(tn.out_bytes, 40);
+        // the barrier now depends on [a, xfer], never directly on b
+        let red = plan.dag().find("red").unwrap();
+        assert!(plan.dag().node(red).deps.contains(&t.node));
+        assert!(plan.dag().validate().is_ok());
+        assert_eq!(plan.device_of()[t.node], 0, "transfer lives on dst");
+    }
+
+    #[test]
+    fn two_consumers_on_one_device_share_a_transfer() {
+        let mut base = Dag::new();
+        let a = base.push_out(NodeKind::Row, "a", vec![], 10, 10);
+        let c1 = base.push(NodeKind::Row, "c1", vec![a], 5);
+        base.push(NodeKind::Barrier, "c2", vec![a, c1], 5);
+        // a on device 1; both consumers on device 0
+        let plan =
+            ShardPlan::lower(&base, &topo(2), &[1, 0, 0], vec![u64::MAX; 2]).unwrap();
+        assert_eq!(plan.transfers().len(), 1, "one copy serves both consumers");
+        assert_eq!(plan.dag().len(), base.len() + 1);
+    }
+
+    #[test]
+    fn replay_reports_per_device_peaks_and_drains() {
+        let base = fan();
+        let plan =
+            ShardPlan::lower(&base, &topo(2), &[0, 1, 0], vec![u64::MAX; 2]).unwrap();
+        let scheds = plan.per_device_schedules();
+        assert_eq!(scheds.len(), 2);
+        let peaks = plan.replay_peaks().unwrap();
+        // device 0 serially: a runs (100), parks 40; xfer runs (40+40
+        // parked... xfer est 40 on top of a's 40) ; red runs 80 with a+xfer
+        // parked (40+40) → peak 160.  device 1: b runs (100), parks 40
+        // until the transfer completes → peak 100.
+        assert_eq!(peaks, vec![160, 100]);
+        for s in &scheds {
+            assert_eq!(sim::simulate(s).unwrap().final_bytes, 0);
+        }
+        // budgets below the replay peak are rejected, at or above pass
+        let mut plan = plan;
+        plan.set_budgets(vec![160, 100]).unwrap();
+        assert!(plan.check_budgets().is_ok());
+        plan.set_budgets(vec![159, 100]).unwrap();
+        assert!(plan.check_budgets().is_err());
+    }
+
+    #[test]
+    fn lowering_validates_its_inputs() {
+        let base = fan();
+        assert!(ShardPlan::lower(&base, &topo(2), &[0, 1], vec![u64::MAX; 2]).is_err());
+        assert!(
+            ShardPlan::lower(&base, &topo(2), &[0, 9, 0], vec![u64::MAX; 2]).is_err()
+        );
+        assert!(ShardPlan::lower(&base, &topo(2), &[0, 1, 0], vec![u64::MAX]).is_err());
+    }
+}

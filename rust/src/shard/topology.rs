@@ -1,0 +1,146 @@
+//! Device topology for multi-device row sharding.
+//!
+//! A [`Topology`] is N [`DeviceModel`]-backed devices plus a peer-link
+//! model.  The link bandwidths reuse the spec-sheet numbers the memory
+//! planners already calibrate against (`memory::device`): PCIe peer
+//! traffic runs at the slower endpoint's `pcie_bytes_per_sec`, and the
+//! NVLink-ish preset models a direct high-bandwidth mesh.  Transfers are
+//! *modeled*, never slept: the simulated multi-device backend uses the
+//! latency for attribution and cost reporting, not wall-clock.
+
+use crate::memory::device::NVLINK_BYTES_PER_SEC;
+use crate::memory::DeviceModel;
+
+/// Index of a device in a [`Topology`] — the shard partitioner's
+/// assignment currency and the trace's lane id.
+pub type DeviceId = usize;
+
+/// Fixed per-transfer setup cost (launch + sync on both endpoints).
+pub const TRANSFER_SETUP_SEC: f64 = 10e-6;
+
+/// How peer devices are wired.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkKind {
+    /// Peer traffic bounces over PCIe at the endpoints' spec bandwidth.
+    Pcie,
+    /// Direct NVLink-ish mesh between all peers.
+    NvLink,
+}
+
+/// N devices plus the peer-link model connecting them.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    devices: Vec<DeviceModel>,
+    link: LinkKind,
+}
+
+impl Topology {
+    /// `n` identical devices (clamped to ≥ 1) joined by `link`.
+    pub fn uniform(n: usize, dev: DeviceModel, link: LinkKind) -> Topology {
+        let n = n.max(1);
+        Topology {
+            devices: vec![dev; n],
+            link,
+        }
+    }
+
+    /// Heterogeneous topology from an explicit device list.
+    pub fn new(devices: Vec<DeviceModel>, link: LinkKind) -> Topology {
+        assert!(!devices.is_empty(), "topology needs at least one device");
+        Topology { devices, link }
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // construction guarantees ≥ 1 device
+    }
+
+    pub fn device(&self, d: DeviceId) -> &DeviceModel {
+        &self.devices[d]
+    }
+
+    pub fn link(&self) -> LinkKind {
+        self.link
+    }
+
+    /// Peer-link bandwidth between `a` and `b` in bytes/s.  Same-device
+    /// "links" are infinite — such edges never lower to transfers.
+    pub fn link_bytes_per_sec(&self, a: DeviceId, b: DeviceId) -> f64 {
+        if a == b {
+            return f64::INFINITY;
+        }
+        match self.link {
+            LinkKind::Pcie => self.devices[a]
+                .pcie_bytes_per_sec
+                .min(self.devices[b].pcie_bytes_per_sec),
+            LinkKind::NvLink => NVLINK_BYTES_PER_SEC,
+        }
+    }
+
+    /// Modeled seconds to move `bytes` from `a` to `b` (0 when `a == b`).
+    pub fn transfer_seconds(&self, bytes: u64, a: DeviceId, b: DeviceId) -> f64 {
+        if a == b {
+            return 0.0;
+        }
+        TRANSFER_SETUP_SEC + bytes as f64 / self.link_bytes_per_sec(a, b)
+    }
+
+    /// Per-device admission budgets: usable HBM minus the always-resident
+    /// bytes ξ, the same headroom arithmetic as `SchedConfig::device_budget`.
+    pub fn budgets(&self, xi: u64) -> Vec<u64> {
+        self.devices
+            .iter()
+            .map(|d| d.usable_hbm().saturating_sub(xi))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_clamps_and_links() {
+        let t = Topology::uniform(0, DeviceModel::rtx3090(), LinkKind::Pcie);
+        assert_eq!(t.len(), 1);
+        let t = Topology::uniform(4, DeviceModel::rtx3090(), LinkKind::Pcie);
+        assert_eq!(t.len(), 4);
+        assert_eq!(
+            t.link_bytes_per_sec(0, 1),
+            DeviceModel::rtx3090().pcie_bytes_per_sec
+        );
+        assert!(t.link_bytes_per_sec(2, 2).is_infinite());
+        assert_eq!(t.transfer_seconds(1 << 20, 1, 1), 0.0);
+    }
+
+    #[test]
+    fn nvlink_is_faster_than_pcie() {
+        let dev = DeviceModel::rtx3090();
+        let pcie = Topology::uniform(2, dev.clone(), LinkKind::Pcie);
+        let nv = Topology::uniform(2, dev, LinkKind::NvLink);
+        let bytes = 256 << 20;
+        assert!(nv.transfer_seconds(bytes, 0, 1) < pcie.transfer_seconds(bytes, 0, 1));
+        // both still pay the fixed setup cost
+        assert!(nv.transfer_seconds(0, 0, 1) >= TRANSFER_SETUP_SEC);
+    }
+
+    #[test]
+    fn pcie_link_uses_the_slower_endpoint() {
+        let mut slow = DeviceModel::rtx3080();
+        slow.pcie_bytes_per_sec = 6.0e9;
+        let t = Topology::new(vec![DeviceModel::rtx3090(), slow], LinkKind::Pcie);
+        assert_eq!(t.link_bytes_per_sec(0, 1), 6.0e9);
+    }
+
+    #[test]
+    fn budgets_subtract_xi_per_device() {
+        let t = Topology::uniform(2, DeviceModel::rtx3090(), LinkKind::Pcie);
+        let xi = 1 << 30;
+        let b = t.budgets(xi);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b[0], DeviceModel::rtx3090().usable_hbm() - xi);
+    }
+}

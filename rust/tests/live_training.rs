@@ -127,7 +127,7 @@ fn pipelined_steps_match_serial_bitwise_on_live_artifacts() {
     for mode in [Mode::Base, Mode::RowHybrid, Mode::Tps, Mode::Naive] {
         let mut serial = Trainer::new(&rt, mode, 0.05, 42).unwrap();
         let mut piped = Trainer::new(&rt, mode, 0.05, 42).unwrap();
-        piped.set_sched(SchedConfig::pipelined(4));
+        piped.set_sched(SchedConfig::pipelined(4)).unwrap();
         for s in 0..3u64 {
             let (x, y) = batch(&rt, s);
             let a = serial.step(&x, &y).unwrap();

@@ -149,11 +149,26 @@ fn executor_completes_under_one_row_budget_and_single_worker() {
     let pipe = lowered(Mode::RowHybrid);
     let dag = pipe.dag();
     let one_row = dag.node(dag.find("fp.segA.row0").unwrap()).est_bytes;
+    // the executor's worst case is the serial-order replay peak (working
+    // sets + parked handoff bytes) — the shard replay computes it exactly
+    let splan = lr_cnn::shard::ShardPlan::build(
+        dag,
+        &lr_cnn::shard::Topology::uniform(
+            1,
+            lr_cnn::memory::DeviceModel::rtx3090(),
+            lr_cnn::shard::LinkKind::Pcie,
+        ),
+        lr_cnn::shard::PartitionPolicy::Blocked,
+        vec![u64::MAX],
+    )
+    .expect("1-device shard plan");
+    let replay_peak = splan.replay_peaks().expect("replay")[0];
     for (workers, budget) in [(1, u64::MAX), (1, one_row), (4, one_row), (4, 0)] {
         let cfg = SchedConfig {
             workers,
             mem_budget: budget,
             policy: Policy::Pipelined,
+            shard: None,
         };
         let hits = Slot::<()>::many(dag.len());
         let out = sched::run(dag, &cfg, |id| hits[id].put("hit", ()))
@@ -162,13 +177,11 @@ fn executor_completes_under_one_row_budget_and_single_worker() {
         for h in &hits {
             h.take("hit").expect("each node ran once");
         }
-        if budget >= one_row {
-            assert!(
-                out.peak_bytes <= budget.max(dag.max_est_bytes()),
-                "peak {} over bound",
-                out.peak_bytes
-            );
-        }
+        assert!(
+            out.peak_bytes <= replay_peak,
+            "w={workers} b={budget}: peak {} over serial replay peak {replay_peak}",
+            out.peak_bytes
+        );
     }
 }
 

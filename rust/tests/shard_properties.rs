@@ -1,0 +1,290 @@
+//! Integration: the shard subsystem through the public API only —
+//! `StepPlan::build` → `StepPlan::lower` → `Partitioner::assign` →
+//! `ShardPlan::lower` → `ShardedExecutor::run_step` — the way an external
+//! embedder would drive it.  No PJRT required: the executor is exercised
+//! with synthetic runners, the lowering with a parsed manifest.
+
+use lr_cnn::coordinator::{Mode, StepPlan};
+use lr_cnn::memory::{sim, DeviceModel, Tracker};
+use lr_cnn::runtime::Manifest;
+use lr_cnn::sched::{Dag, NodeKind, Slot};
+use lr_cnn::shard::{
+    LinkKind, PartitionPolicy, Partitioner, ShardPlan, ShardedExecutor, Topology,
+};
+
+/// Minimal shape-accurate manifest for the two row-centric modes (same as
+/// tests/sched_properties.rs).
+fn manifest() -> Manifest {
+    let exes: &[(&str, &str, &str)] = &[
+        (
+            "head",
+            "[[1,1,8,4],[1,2],[32,2],[2]]",
+            "[[1],[1,1,8,4],[32,2],[2]]",
+        ),
+        ("segA_row0_fwd", "[[1,1,5,4],[1,1,3,3],[1]]", "[[1,1,4,4]]"),
+        (
+            "segA_row0_bwd",
+            "[[1,1,5,4],[1,1,3,3],[1],[1,1,4,4]]",
+            "[[1,1,3,3],[1],[1,1,4,4]]",
+        ),
+        ("segA_row1_fwd", "[[1,1,5,4],[1,1,3,3],[1]]", "[[1,1,4,4]]"),
+        (
+            "segA_row1_bwd",
+            "[[1,1,5,4],[1,1,3,3],[1],[1,1,4,4]]",
+            "[[1,1,3,3],[1],[1,1,4,4]]",
+        ),
+        ("segB_row0_fwd", "[[1,1,5,4],[1,1,3,3],[1]]", "[[1,1,4,4]]"),
+        (
+            "segB_row0_bwd",
+            "[[1,1,5,4],[1,1,3,3],[1],[1,1,4,4]]",
+            "[[1,1,3,3],[1],[1,1,5,4],[1,1,4,4]]",
+        ),
+        ("segB_row1_fwd", "[[1,1,5,4],[1,1,3,3],[1]]", "[[1,1,4,4]]"),
+        (
+            "segB_row1_bwd",
+            "[[1,1,5,4],[1,1,3,3],[1],[1,1,4,4]]",
+            "[[1,1,3,3],[1],[1,1,5,4],[1,1,4,4]]",
+        ),
+        (
+            "tps_row0_fwd",
+            "[[1,1,4,4],[1,1,3,3],[1]]",
+            "[[1,1,4,4],[1,1,1,4],[1,1,1,4]]",
+        ),
+        (
+            "tps_row1_fwd",
+            "[[1,1,4,4],[1,1,1,4],[1,1,1,4],[1,1,3,3],[1]]",
+            "[[1,1,4,4]]",
+        ),
+    ];
+    let exe_json: Vec<String> = exes
+        .iter()
+        .map(|(name, inputs, outputs)| {
+            format!(
+                r#"{{"name": "{name}", "path": "{name}.hlo", "kind": "k",
+                     "inputs": {inputs}, "outputs": {outputs}}}"#
+            )
+        })
+        .collect();
+    let seg = |name: &str| {
+        format!(
+            r#"{{"name": "{name}", "h_in": 8, "h_out": 8, "c_in": 1, "c_out": 1,
+                 "param_lo": 0, "param_hi": 2,
+                 "rows": [
+                   {{"out_iv": [0, 4], "in_iv": [0, 5], "chain": []}},
+                   {{"out_iv": [4, 8], "in_iv": [3, 8], "chain": []}}
+                 ]}}"#
+        )
+    };
+    let text = format!(
+        r#"{{
+          "model": {{
+            "name": "t", "batch": 1, "h": 8, "w": 4, "n_classes": 2,
+            "layers": [], "heights": [8, 8], "w_out": 4, "fc_in": 32,
+            "param_shapes": [[1, 1, 3, 3], [1], [32, 2], [2]],
+            "n_conv_params": 2
+          }},
+          "plan": {{
+            "ckpt_split": 1, "n_rows": 2, "tps_rows": 2, "naive_rows": 2,
+            "segments": [{segA}, {segB}],
+            "tps": {{
+              "cuts": [0, 4, 8],
+              "rows": [
+                {{"own_iv": [0, 4], "bounds": [[0, 4]], "cache_in": [null], "cache_out": [[3, 4]]}},
+                {{"own_iv": [4, 8], "bounds": [[4, 8]], "cache_in": [[3, 4]], "cache_out": [null]}}
+              ]
+            }}
+          }},
+          "executables": [{exes}]
+        }}"#,
+        segA = seg("segA"),
+        segB = seg("segB"),
+        exes = exe_json.join(",\n")
+    );
+    Manifest::parse(&text).expect("manifest parses")
+}
+
+fn base_dag(mode: Mode) -> Dag {
+    let man = manifest();
+    let mut tracker = Tracker::new();
+    let plan = StepPlan::build(&man, mode, &mut tracker).expect("plan builds");
+    plan.lower(&man).expect("plan lowers").dag().clone()
+}
+
+fn topo(n: usize) -> Topology {
+    Topology::uniform(n, DeviceModel::rtx3090(), LinkKind::Pcie)
+}
+
+#[test]
+fn every_node_is_assigned_exactly_once_and_in_range() {
+    for mode in [Mode::RowHybrid, Mode::Tps] {
+        let dag = base_dag(mode);
+        for devices in [1usize, 2, 4] {
+            for policy in [PartitionPolicy::Blocked, PartitionPolicy::CostBalanced] {
+                let t = topo(devices);
+                let assignment = Partitioner::new(policy)
+                    .assign(&dag, &t, &vec![u64::MAX; devices])
+                    .unwrap();
+                assert_eq!(assignment.len(), dag.len(), "{mode:?} {policy:?}");
+                assert!(assignment.iter().all(|&d| d < devices));
+            }
+        }
+    }
+}
+
+#[test]
+fn transfers_appear_iff_an_edge_crosses_devices() {
+    for mode in [Mode::RowHybrid, Mode::Tps] {
+        let dag = base_dag(mode);
+        for devices in [1usize, 2, 4] {
+            for policy in [PartitionPolicy::Blocked, PartitionPolicy::CostBalanced] {
+                let t = topo(devices);
+                let assignment = Partitioner::new(policy)
+                    .assign(&dag, &t, &vec![u64::MAX; devices])
+                    .unwrap();
+                let plan =
+                    ShardPlan::lower(&dag, &t, &assignment, vec![u64::MAX; devices])
+                        .unwrap();
+                plan.dag().validate().expect("sharded DAG stays acyclic");
+                // distinct (producer, consumer-device) crossing pairs
+                let mut crossing: Vec<(usize, usize)> = Vec::new();
+                for (id, node) in dag.nodes().iter().enumerate() {
+                    for &d in &node.deps {
+                        if assignment[d] != assignment[id] {
+                            crossing.push((d, assignment[id]));
+                        }
+                    }
+                }
+                crossing.sort_unstable();
+                crossing.dedup();
+                assert_eq!(
+                    plan.transfers().len(),
+                    crossing.len(),
+                    "{mode:?} {policy:?} devices={devices}: one transfer per \
+                     crossing (producer, dst) pair"
+                );
+                if devices == 1 {
+                    assert!(plan.transfers().is_empty());
+                }
+                // each transfer's endpoints match a real crossing edge
+                for tr in plan.transfers() {
+                    let producer = plan.dag().node(tr.node).deps[0];
+                    let base = plan.orig()[producer].expect("producer is a base node");
+                    assert_eq!(assignment[base], tr.src, "transfer src device");
+                    assert!(crossing.contains(&(base, tr.dst)));
+                    assert!(tr.bytes > 0);
+                    assert!(tr.seconds > 0.0);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn blocked_on_one_device_is_bit_identical_to_the_unsharded_dag() {
+    for mode in [Mode::RowHybrid, Mode::Tps] {
+        let dag = base_dag(mode);
+        let plan = ShardPlan::build(&dag, &topo(1), PartitionPolicy::Blocked, vec![u64::MAX])
+            .unwrap();
+        assert_eq!(plan.dag().len(), dag.len(), "{mode:?}");
+        for (id, want) in dag.nodes().iter().enumerate() {
+            let got = plan.dag().node(id);
+            assert_eq!(got.kind, want.kind, "{mode:?} node {id}");
+            assert_eq!(got.label, want.label);
+            assert_eq!(got.deps, want.deps);
+            assert_eq!(got.est_bytes, want.est_bytes);
+            assert_eq!(got.out_bytes, want.out_bytes);
+        }
+    }
+}
+
+#[test]
+fn blocked_keeps_the_2ps_chain_on_one_device() {
+    let dag = base_dag(Mode::Tps);
+    for devices in [2usize, 4] {
+        let t = topo(devices);
+        let assignment = Partitioner::new(PartitionPolicy::Blocked)
+            .assign(&dag, &t, &vec![u64::MAX; devices])
+            .unwrap();
+        for (id, node) in dag.nodes().iter().enumerate() {
+            if node.kind == NodeKind::TpsRow {
+                assert_eq!(assignment[id], 0, "2PS rows pin to device 0");
+                for &d in &node.deps {
+                    if dag.node(d).kind == NodeKind::TpsRow {
+                        assert_eq!(
+                            assignment[d], assignment[id],
+                            "zero cross-device 2PS handoffs"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn per_device_replay_peaks_fit_their_ledgers() {
+    for mode in [Mode::RowHybrid, Mode::Tps] {
+        let dag = base_dag(mode);
+        for devices in [1usize, 2, 4] {
+            for policy in [PartitionPolicy::Blocked, PartitionPolicy::CostBalanced] {
+                let mut plan =
+                    ShardPlan::build(&dag, &topo(devices), policy, vec![u64::MAX; devices])
+                        .unwrap();
+                let scheds = plan.per_device_schedules();
+                assert_eq!(scheds.len(), devices);
+                // the replay drains: no leaked buffer on any device
+                for s in &scheds {
+                    assert_eq!(sim::simulate(s).unwrap().final_bytes, 0);
+                }
+                let peaks = plan.replay_peaks().unwrap();
+                plan.set_budgets(peaks.clone()).unwrap();
+                plan.check_budgets()
+                    .expect("peak-sized ledgers must be accepted");
+                // one byte less on a loaded device must be rejected
+                if let Some(d) = peaks.iter().position(|&p| p > 0) {
+                    let mut tight = peaks.clone();
+                    tight[d] -= 1;
+                    plan.set_budgets(tight).unwrap();
+                    assert!(plan.check_budgets().is_err(), "{mode:?} {policy:?}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_executor_runs_lowered_step_dags_to_completion() {
+    for mode in [Mode::RowHybrid, Mode::Tps] {
+        let dag = base_dag(mode);
+        for devices in [1usize, 2, 4] {
+            let budgets = vec![u64::MAX; devices];
+            let mut plan =
+                ShardPlan::build(&dag, &topo(devices), PartitionPolicy::Blocked, budgets)
+                    .unwrap();
+            let peaks = plan.replay_peaks().unwrap();
+            plan.set_budgets(peaks.clone()).unwrap();
+            let exec = ShardedExecutor::new(4);
+            // two steps on one pool: reuse, no respawn
+            for _ in 0..2 {
+                let hits = Slot::<()>::many(dag.len());
+                let out = exec
+                    .run_step(&plan, |base| hits[base].put("hit", ()))
+                    .expect("step succeeds");
+                out.trace
+                    .check_complete(plan.dag())
+                    .expect("causal, complete trace");
+                for h in &hits {
+                    h.take("hit").expect("every base node ran exactly once");
+                }
+                for d in 0..devices {
+                    assert!(
+                        out.device_peaks[d] <= peaks[d],
+                        "{mode:?} d{d}: {} > {}",
+                        out.device_peaks[d],
+                        peaks[d]
+                    );
+                }
+            }
+        }
+    }
+}
