@@ -35,9 +35,10 @@ bench-sched:
 bench-sched-quick:
 	BENCH_QUICK=1 cargo bench --bench sched_pipeline --manifest-path $(RUST_MANIFEST)
 
-# Multi-device shard scaling at 1/2/4 simulated devices × both partition
-# policies; writes BENCH_shard_scaling.json at the repo root
-# (docs/SHARDING.md).
+# Multi-device shard scaling: uniform 1/2/4-device + heterogeneous
+# 2×RTX3090+2×A100 topologies × all three partition policies (incl.
+# DpBoundary, with its makespan ≤ greedy bar asserted); writes
+# BENCH_shard_scaling.json at the repo root (docs/SHARDING.md).
 bench-shard:
 	cargo bench --bench shard_scaling --manifest-path $(RUST_MANIFEST)
 

@@ -1,23 +1,29 @@
 //! Multi-device shard scaling (the `shard` tentpole's measurement rig):
 //! the hybrid step's DAG shape — independent FP rows, a head barrier,
-//! independent BP rows, a reduce — sharded over 1/2/4 simulated devices
-//! under both partition policies, on one persistent worker pool.
+//! independent BP rows, a reduce — sharded over uniform 1/2/4-device
+//! *and* a heterogeneous 2×RTX3090+2×A100 topology under all three
+//! partition policies, on one persistent worker pool.
 //!
 //! Needs no artifacts and no PJRT: each row runs a deterministic CPU
 //! kernel, so the bench exercises the real sharded executor (persistent
 //! pool, per-device admission ledgers, transfer nodes) with real parallel
 //! work and checks the sharded checksum is **bit-identical** to the
-//! serial loop's, and that every per-device peak stayed under that
-//! device's replay-derived ledger.
+//! serial loop's, that every per-device peak stayed under that device's
+//! replay-derived ledger (clamped to the device's memory), and — the DP
+//! planner's acceptance bar — that `DpBoundary`'s modeled makespan never
+//! exceeds greedy `CostBalanced`'s on any benched config.
 //!
 //! Results are printed *and* written to the repo root
-//! (`BENCH_shard_scaling.json`, schema in docs/SHARDING.md).  `--quick` /
-//! `BENCH_QUICK=1` reduces iteration counts for CI.
+//! (`BENCH_shard_scaling.json`, schema 2 in docs/SHARDING.md).
+//! `--quick` / `BENCH_QUICK=1` reduces iteration counts for CI.
 
 use lr_cnn::memory::DeviceModel;
 use lr_cnn::metrics::bench;
 use lr_cnn::sched::{Dag, NodeId, NodeKind, Slot};
-use lr_cnn::shard::{LinkKind, PartitionPolicy, ShardPlan, ShardedExecutor, Topology};
+use lr_cnn::shard::{
+    modeled_makespan, LinkKind, PartitionPolicy, Partitioner, ShardPlan, ShardedExecutor,
+    Topology,
+};
 
 use std::fmt::Write as _;
 
@@ -125,6 +131,7 @@ fn serial_step(flops: usize) -> f32 {
 }
 
 struct Rec {
+    topology: &'static str,
     devices: usize,
     policy: &'static str,
     mean_ms: f64,
@@ -133,6 +140,8 @@ struct Rec {
     transfers: usize,
     transfer_bytes: u64,
     modeled_xfer_us: f64,
+    /// Modeled makespan of the partition (s) — the DP-vs-greedy metric.
+    makespan_s: f64,
     device_peaks: Vec<u64>,
     ledgers: Vec<u64>,
 }
@@ -158,14 +167,38 @@ fn main() {
     });
     println!("{}", r_serial.report());
 
+    let d90 = DeviceModel::rtx3090();
+    let a100 = DeviceModel::a100_80g();
+    let topologies: Vec<(&'static str, Topology)> = vec![
+        ("rtx3090x1", Topology::uniform(1, d90.clone(), LinkKind::NvLink)),
+        ("rtx3090x2", Topology::uniform(2, d90.clone(), LinkKind::NvLink)),
+        ("rtx3090x4", Topology::uniform(4, d90.clone(), LinkKind::NvLink)),
+        (
+            "rtx3090x2+a100x2",
+            Topology::new(vec![d90.clone(), d90, a100.clone(), a100], LinkKind::NvLink),
+        ),
+    ];
+
     let mut recs: Vec<Rec> = Vec::new();
-    for devices in [1usize, 2, 4] {
-        for policy in [PartitionPolicy::Blocked, PartitionPolicy::CostBalanced] {
-            let topo = Topology::uniform(devices, DeviceModel::rtx3090(), LinkKind::NvLink);
-            let mut plan = ShardPlan::build(&dag, &topo, policy, vec![u64::MAX; devices])
+    for (topo_name, topo) in &topologies {
+        let topo_name: &'static str = topo_name;
+        let devices = topo.len();
+        // modeled makespans per policy on this topology, for the DP bar
+        let mut makespans: Vec<(&'static str, f64)> = Vec::new();
+        for policy in [
+            PartitionPolicy::Blocked,
+            PartitionPolicy::CostBalanced,
+            PartitionPolicy::DpBoundary,
+        ] {
+            let assignment = Partitioner::new(policy)
+                .assign(&dag, topo, &vec![u64::MAX; devices])
+                .expect("assignment");
+            let makespan_s = modeled_makespan(&dag, topo, &assignment);
+            let mut plan = ShardPlan::lower(&dag, topo, &assignment, vec![u64::MAX; devices])
                 .expect("plan builds");
-            // tight ledgers: each device's serial-order replay peak
-            let ledgers = plan.replay_peaks().expect("replay");
+            // tight ledgers: each device's serial-order replay peak,
+            // clamped to that device's memory
+            let ledgers = plan.replay_ledgers(topo, 0).expect("replay");
             plan.set_budgets(ledgers.clone()).expect("budgets fit");
             plan.check_budgets().expect("replay fits its own peaks");
             // the pool is constructed once and reused across all steps
@@ -173,7 +206,9 @@ fn main() {
             let policy_name = match policy {
                 PartitionPolicy::Blocked => "blocked",
                 PartitionPolicy::CostBalanced => "balanced",
+                PartitionPolicy::DpBoundary => "dp",
             };
+            makespans.push((policy_name, makespan_s));
 
             // determinism + ledger checks before timing
             let (sum, peaks) = sharded_step(&dag, &plan, &exec, flops);
@@ -193,7 +228,7 @@ fn main() {
 
             let mut max_peaks = vec![0u64; devices];
             let r = bench::time(
-                &format!("sharded {devices} device(s), {policy_name}"),
+                &format!("sharded {topo_name} ({devices} device(s)), {policy_name}"),
                 warmup,
                 iters,
                 || {
@@ -207,12 +242,14 @@ fn main() {
             let speedup = r_serial.mean_ms / r.mean_ms;
             let transfer_bytes: u64 = plan.transfers().iter().map(|t| t.bytes).sum();
             println!(
-                "{}   [speedup ×{speedup:.2}, {} transfer(s), modeled link {:.1} us]",
+                "{}   [speedup ×{speedup:.2}, {} transfer(s), modeled link {:.1} us, makespan {:.3} ms]",
                 r.report(),
                 plan.transfers().len(),
-                plan.modeled_transfer_seconds() * 1e6
+                plan.modeled_transfer_seconds() * 1e6,
+                makespan_s * 1e3
             );
             recs.push(Rec {
+                topology: topo_name,
                 devices,
                 policy: policy_name,
                 mean_ms: r.mean_ms,
@@ -221,15 +258,31 @@ fn main() {
                 transfers: plan.transfers().len(),
                 transfer_bytes,
                 modeled_xfer_us: plan.modeled_transfer_seconds() * 1e6,
+                makespan_s,
                 device_peaks: max_peaks,
                 ledgers,
             });
         }
+        // the DP planner's acceptance bar, checked on every benched
+        // topology: DpBoundary's modeled makespan ≤ greedy CostBalanced's
+        let of = |name: &str| {
+            makespans
+                .iter()
+                .find(|(n, _)| *n == name)
+                .map(|&(_, s)| s)
+                .expect("policy benched")
+        };
+        assert!(
+            of("dp") <= of("balanced"),
+            "{topo_name}: DpBoundary makespan {} > CostBalanced {}",
+            of("dp"),
+            of("balanced")
+        );
     }
 
     // ---- JSON at the repo root (tracked trajectory) ----
     let mut out = String::new();
-    out.push_str("{\n  \"bench\": \"shard_scaling\",\n  \"schema\": 1,\n");
+    out.push_str("{\n  \"bench\": \"shard_scaling\",\n  \"schema\": 2,\n");
     let _ = writeln!(out, "  \"quick\": {quick},");
     let _ = writeln!(
         out,
@@ -247,10 +300,13 @@ fn main() {
             .all(|(p, l)| p <= l);
         let _ = write!(
             out,
-            "    {{\"devices\": {}, \"policy\": \"{}\", \"mean_ms\": {}, \"p50_ms\": {}, \
+            "    {{\"topology\": \"{}\", \"devices\": {}, \"policy\": \"{}\", \
+             \"mean_ms\": {}, \"p50_ms\": {}, \
              \"speedup\": {}, \"transfers\": {}, \"transfer_bytes\": {}, \
-             \"modeled_xfer_us\": {}, \"device_peaks\": [{}], \"ledgers\": [{}], \
+             \"modeled_xfer_us\": {}, \"makespan_s\": {}, \
+             \"device_peaks\": [{}], \"ledgers\": [{}], \
              \"under_ledger\": {}}}",
+            rec.topology,
             rec.devices,
             rec.policy,
             json_num(rec.mean_ms),
@@ -259,6 +315,7 @@ fn main() {
             rec.transfers,
             rec.transfer_bytes,
             json_num(rec.modeled_xfer_us),
+            format!("{:.6}", rec.makespan_s),
             peaks.join(", "),
             ledgers.join(", "),
             under,

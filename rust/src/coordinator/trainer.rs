@@ -28,11 +28,11 @@ use std::time::Instant;
 
 use crate::data::SyntheticCorpus;
 use crate::error::{Error, Result};
-use crate::memory::{BufId, DeviceModel, Tracker};
+use crate::memory::{BufId, Tracker};
 use crate::runtime::manifest::Manifest;
 use crate::runtime::{ExecBackend, ExecHandle, Runtime, Tensor, TensorView};
 use crate::sched::{self, Dag, ExecOutcome, NodeId, NodeKind, Policy, SchedConfig, Slot, Trace};
-use crate::shard::{self, ShardPlan, ShardedExecutor, Topology};
+use crate::shard::{self, ShardPlan, ShardedExecutor};
 
 use super::{Optimizer, ParamSet};
 
@@ -754,8 +754,79 @@ pub struct ShardState {
 }
 
 impl ShardState {
+    /// Build the sharded execution state for one lowered plan: the
+    /// (possibly heterogeneous) `shard::Topology` from the config's
+    /// device specs, per-device admission budgets clamped to what each device
+    /// can actually hold (`min(cfg.mem_budget, usable HBM − ξ)` where ξ
+    /// is the always-resident parameter + optimizer bytes), the
+    /// partition + transfer lowering, and the persistent worker pool.
+    ///
+    /// Errors — leaving nothing half-built — when the partition is
+    /// infeasible under the clamped ledgers **or** any device's
+    /// serial-order replay peak exceeds its clamped budget: a plan that
+    /// passes admission but overflows a small device's memory would OOM
+    /// on real hardware, so it is rejected here, at configuration time.
+    pub fn build(pipe: &PipePlan, cfg: &SchedConfig, xi: u64) -> Result<ShardState> {
+        let sc = cfg.shard.clone().unwrap_or_else(|| shard::ShardConfig::new(1));
+        let topo = sc.topology();
+        let budgets: Vec<u64> = topo
+            .budgets(xi)
+            .into_iter()
+            .map(|cap| cap.min(cfg.mem_budget))
+            .collect();
+        let plan = ShardPlan::build(pipe.dag(), &topo, sc.policy, budgets)?;
+        plan.check_budgets()?;
+        Ok(ShardState {
+            plan,
+            exec: ShardedExecutor::new(cfg.workers),
+        })
+    }
+
     pub fn plan(&self) -> &ShardPlan {
         &self.plan
+    }
+}
+
+/// Scheduler state carried by the trainer: the active [`SchedConfig`]
+/// plus the sharded execution state built for it.  Reconfiguration is
+/// **transactional**: [`SchedState::set`] performs every fallible step
+/// before touching a field, so a failed reconfiguration leaves the
+/// previous (working) configuration fully in place — the trainer never
+/// reports pipelined while stepping serially.
+struct SchedState {
+    cfg: SchedConfig,
+    shard: Option<ShardState>,
+}
+
+impl SchedState {
+    fn new() -> SchedState {
+        SchedState {
+            cfg: SchedConfig::default(),
+            shard: None,
+        }
+    }
+
+    /// Swap in `cfg`, building the sharded state for a pipelined policy.
+    /// `pipe` is the trainer's lowered DAG (`None` when the plan was
+    /// never lowered — a naive-infeasible manifest), `xi` the
+    /// always-resident bytes.  On `Err` no field has changed.
+    fn set(&mut self, pipe: Option<&PipePlan>, cfg: SchedConfig, xi: u64) -> Result<()> {
+        let shard = match cfg.policy {
+            Policy::Serial => None,
+            Policy::Pipelined => {
+                let pipe = pipe.ok_or_else(|| {
+                    Error::Sched(
+                        "cannot switch to pipelined execution: the step plan was never \
+                         lowered (naive split infeasible for this manifest)"
+                            .into(),
+                    )
+                })?;
+                Some(ShardState::build(pipe, &cfg, xi)?)
+            }
+        };
+        self.cfg = cfg;
+        self.shard = shard;
+        Ok(())
     }
 }
 
@@ -769,13 +840,14 @@ pub struct Trainer<'r> {
     mode: Mode,
     pub tracker: Tracker,
     plan: StepPlan,
-    /// Row scheduler configuration ([`Policy::Serial`] by default).
-    sched: SchedConfig,
+    /// Row scheduler configuration + sharded execution state
+    /// ([`Policy::Serial`], no shard, by default).  The shard half is
+    /// `Some` exactly when the policy is pipelined (one stock device
+    /// unless `SchedConfig::shard` says otherwise) — [`SchedState::set`]
+    /// keeps the pair consistent transactionally.
+    sched: SchedState,
     /// The plan's lowered DAG (`None` only for a naive-infeasible plan).
     pipe: Option<PipePlan>,
-    /// Sharded plan + persistent pool; `Some` whenever the policy is
-    /// pipelined (one device unless `SchedConfig::shard` says otherwise).
-    shard: Option<ShardState>,
     /// Event trace of the most recent pipelined step (per-device lanes
     /// via `TraceEvent::device`).
     last_trace: Option<Trace>,
@@ -817,9 +889,8 @@ impl<'r> Trainer<'r> {
             mode,
             tracker,
             plan,
-            sched: SchedConfig::default(),
+            sched: SchedState::new(),
             pipe,
-            shard: None,
             last_trace: None,
         })
     }
@@ -832,27 +903,21 @@ impl<'r> Trainer<'r> {
     /// Switch between serial and pipelined/sharded row execution.
     ///
     /// For [`Policy::Pipelined`] this builds the sharded execution state
-    /// once — the `Blocked`/`CostBalanced` partition, the transfer
-    /// lowering (identity on one device) and the **persistent** worker
-    /// pool every subsequent step reuses.  `cfg.mem_budget` becomes each
-    /// device's admission-ledger budget.
+    /// once — the real `shard::Topology` from `cfg.shard`'s device specs
+    /// (mixed RTX 3090 / A100 / capacity-scaled topologies are first
+    /// class), the partition, the transfer lowering (identity on one
+    /// device) and the **persistent** worker pool every subsequent step
+    /// reuses.  Each device's admission-ledger budget is
+    /// `min(cfg.mem_budget, usable HBM − ξ)` for *that* device
+    /// (`Topology::budgets`), and the plan is rejected up front when
+    /// any device's serial-order replay peak exceeds its clamped budget.
+    ///
+    /// Fallible and **transactional**: on error — including asking for a
+    /// pipelined policy when the step plan could never be lowered — the
+    /// trainer keeps its previous (working) configuration in full.
     pub fn set_sched(&mut self, cfg: SchedConfig) -> Result<()> {
-        // build everything fallible first: on error the trainer keeps its
-        // previous (working) configuration instead of ending up half-set
-        let mut shard = None;
-        if cfg.policy == Policy::Pipelined {
-            if let Some(pipe) = &self.pipe {
-                let sc = cfg.shard.unwrap_or_default();
-                let topo =
-                    Topology::uniform(sc.devices, DeviceModel::rtx3090(), sc.link);
-                let budgets = vec![cfg.mem_budget; topo.len()];
-                let plan = ShardPlan::build(pipe.dag(), &topo, sc.policy, budgets)?;
-                let exec = ShardedExecutor::new(cfg.workers);
-                shard = Some(ShardState { plan, exec });
-            }
-        }
-        self.sched = cfg;
-        self.shard = shard;
+        let xi = self.params.size_bytes() + self.optimizer.state_bytes(&self.params);
+        self.sched.set(self.pipe.as_ref(), cfg, xi)?;
         // a prior step's trace belongs to the previous plan's DAG; keeping
         // it would let trace_json pair it with the new one
         self.last_trace = None;
@@ -860,7 +925,7 @@ impl<'r> Trainer<'r> {
     }
 
     pub fn sched(&self) -> &SchedConfig {
-        &self.sched
+        &self.sched.cfg
     }
 
     /// The lowered row dependency DAG (for inspection/attribution).
@@ -871,7 +936,7 @@ impl<'r> Trainer<'r> {
     /// The sharded plan (partition, transfers, per-device budgets) when
     /// the policy is pipelined.
     pub fn shard_state(&self) -> Option<&ShardState> {
-        self.shard.as_ref()
+        self.sched.shard.as_ref()
     }
 
     /// Per-row event trace of the most recent pipelined step, with
@@ -884,7 +949,7 @@ impl<'r> Trainer<'r> {
     /// lanes + `Transfer` spans) — what `--trace-out` writes.
     pub fn trace_json(&self) -> Option<String> {
         let trace = self.last_trace.as_ref()?;
-        let dag = match &self.shard {
+        let dag = match &self.sched.shard {
             Some(ss) => ss.plan.dag(),
             None => self.pipe.as_ref()?.dag(),
         };
@@ -898,8 +963,8 @@ impl<'r> Trainer<'r> {
         // activation buffers are strictly per-step; start a fresh ledger
         // (the interner survives — plan BufIds stay valid)
         self.tracker.reset();
-        let (loss, grads, peak_bytes, device_peaks) = if self.sched.policy == Policy::Pipelined
-        {
+        let pipelined = self.sched.cfg.policy == Policy::Pipelined;
+        let (loss, grads, peak_bytes, device_peaks) = if pipelined {
             let pipe = match (&self.plan.kind, &self.pipe) {
                 (PlanKind::NaiveInfeasible(msg), _) => {
                     return Err(Error::InfeasiblePlan(msg.clone()))
@@ -912,8 +977,8 @@ impl<'r> Trainer<'r> {
                 &self.plan,
                 pipe,
                 &self.params,
-                &self.sched,
-                self.shard.as_ref(),
+                &self.sched.cfg,
+                self.sched.shard.as_ref(),
                 x,
                 y1h,
             )?;
@@ -1759,6 +1824,8 @@ pub fn train_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::memory::DeviceModel;
+    use crate::shard::{DevicePreset, DeviceSpec, LinkKind, ShardConfig, Topology};
 
     #[test]
     fn naive_row_extents_equal_split() {
@@ -2117,25 +2184,28 @@ mod tests {
         (losses, params, peaks, last)
     }
 
-    /// Run `steps` sharded-pipelined steps over `devices` simulated
-    /// devices; ledgers are set to the per-device serial-order replay
-    /// peaks and asserted from every step's trace.  Returns losses, final
-    /// params and the last trace + plan for shape checks.
+    /// Run `steps` sharded-pipelined steps over an arbitrary (possibly
+    /// heterogeneous) topology; ledgers are set to the per-device
+    /// serial-order replay peaks clamped to each device's memory and
+    /// asserted from every step's trace.  Returns losses, final params
+    /// and the last trace + plan for shape checks.
     fn run_sharded(
         man: &Manifest,
         mode: Mode,
         steps: usize,
         workers: usize,
-        devices: usize,
+        topo: &Topology,
         policy: shard::PartitionPolicy,
     ) -> (Vec<f32>, ParamSet, Trace, ShardPlan) {
+        let devices = topo.len();
         let mut tracker = Tracker::new();
         let plan = StepPlan::build(man, mode, &mut tracker).unwrap();
         let pipe = plan.lower(man).unwrap();
-        let topo = Topology::uniform(devices, DeviceModel::rtx3090(), shard::LinkKind::NvLink);
         let mut splan =
-            ShardPlan::build(pipe.dag(), &topo, policy, vec![u64::MAX; devices]).unwrap();
-        let ledgers = splan.replay_peaks().unwrap();
+            ShardPlan::build(pipe.dag(), topo, policy, topo.budgets(0)).unwrap();
+        // tight per-device ledgers: the serial-order replay peak, clamped
+        // to the device's own memory (the trainer-path budget shape)
+        let ledgers = splan.replay_ledgers(topo, 0).unwrap();
         splan.set_budgets(ledgers.clone()).unwrap();
         assert!(splan.check_budgets().is_ok());
         // the pool is constructed once and reused by every step below
@@ -2253,31 +2323,57 @@ mod tests {
         }
     }
 
+    /// The topologies the bit-identity matrix re-proves determinism
+    /// over: uniform 1/2/4 RTX 3090s plus two genuinely heterogeneous
+    /// mixes (rtx3090+a100 over PCIe, 2×rtx3090+2×a100 over NVLink).
+    fn proof_topologies() -> Vec<(&'static str, Topology)> {
+        let d90 = DeviceModel::rtx3090();
+        let a100 = DeviceModel::a100_80g();
+        vec![
+            ("rtx3090x1", Topology::uniform(1, d90.clone(), LinkKind::NvLink)),
+            ("rtx3090x2", Topology::uniform(2, d90.clone(), LinkKind::NvLink)),
+            ("rtx3090x4", Topology::uniform(4, d90.clone(), LinkKind::NvLink)),
+            (
+                "rtx3090+a100",
+                Topology::new(vec![d90.clone(), a100.clone()], LinkKind::Pcie),
+            ),
+            (
+                "rtx3090x2+a100x2",
+                Topology::new(vec![d90.clone(), d90, a100.clone(), a100], LinkKind::NvLink),
+            ),
+        ]
+    }
+
+    const ALL_POLICIES: [shard::PartitionPolicy; 3] = [
+        shard::PartitionPolicy::Blocked,
+        shard::PartitionPolicy::CostBalanced,
+        shard::PartitionPolicy::DpBoundary,
+    ];
+
     /// The shard acceptance bar: sharded execution is bit-identical to
     /// serial over ≥3 steps (params feed forward, drift would compound)
-    /// across all 4 modes × {1, 2, 4} devices × both partition policies,
-    /// with every per-device admission ledger respected (asserted inside
-    /// `run_sharded` from the trace) and transfers appearing exactly when
-    /// the partition splits an edge.
+    /// across all 4 modes × uniform {1, 2, 4}-device *and* heterogeneous
+    /// rtx3090+a100 topologies × all three partition policies, with
+    /// every per-device admission ledger (clamped to that device's
+    /// memory) respected — asserted inside `run_sharded` from the trace
+    /// — and transfers appearing exactly when the partition splits an
+    /// edge.
     #[test]
-    fn sharded_matches_serial_bitwise_across_devices_and_policies() {
+    fn sharded_matches_serial_bitwise_across_topologies_and_policies() {
         let man = plan_manifest(8, 2);
         for mode in [Mode::Base, Mode::RowHybrid, Mode::Tps, Mode::Naive] {
             let (sl, sp, _) = run_serial(&man, mode, 3);
-            for devices in [1usize, 2, 4] {
-                for policy in [
-                    shard::PartitionPolicy::Blocked,
-                    shard::PartitionPolicy::CostBalanced,
-                ] {
+            for (name, topo) in proof_topologies() {
+                for policy in ALL_POLICIES {
                     let (pl, pp, _, splan) =
-                        run_sharded(&man, mode, 3, 4, devices, policy);
-                    let ctx = format!("{mode:?} devices={devices} {policy:?}");
+                        run_sharded(&man, mode, 3, 4, &topo, policy);
+                    let ctx = format!("{mode:?} topo={name} {policy:?}");
                     assert_eq!(sl.len(), pl.len());
                     for (a, b) in sl.iter().zip(&pl) {
                         assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: loss {a} vs {b}");
                     }
                     assert_bits_equal(&sp, &pp, &ctx);
-                    if devices == 1 {
+                    if topo.len() == 1 {
                         assert!(
                             splan.transfers().is_empty(),
                             "{ctx}: one device must not transfer"
@@ -2290,18 +2386,103 @@ mod tests {
 
     /// Sharded traces are reproducible: same plan, same pool ⇒ same
     /// canonical view (the ready-pick is a pure function of
-    /// `(NodeId, DeviceId)` and ledger state, never thread timing).
+    /// `(NodeId, DeviceId)` and ledger state, never thread timing) —
+    /// on heterogeneous topologies too.
     #[test]
     fn sharded_trace_is_canonical_deterministic() {
         let man = plan_manifest(8, 2);
-        for policy in [
-            shard::PartitionPolicy::Blocked,
-            shard::PartitionPolicy::CostBalanced,
-        ] {
-            let (_, _, t1, _) = run_sharded(&man, Mode::RowHybrid, 1, 4, 2, policy);
-            let (_, _, t2, _) = run_sharded(&man, Mode::RowHybrid, 1, 4, 2, policy);
+        let topo = Topology::new(
+            vec![DeviceModel::rtx3090(), DeviceModel::a100_80g()],
+            LinkKind::NvLink,
+        );
+        for policy in ALL_POLICIES {
+            let (_, _, t1, _) = run_sharded(&man, Mode::RowHybrid, 1, 4, &topo, policy);
+            let (_, _, t2, _) = run_sharded(&man, Mode::RowHybrid, 1, 4, &topo, policy);
             assert_eq!(t1.canonical(), t2.canonical(), "{policy:?}");
         }
+    }
+
+    /// Regression (PR 4 satellite): `set_sched(Pipelined)` used to
+    /// install the new config even when the step plan was never lowered,
+    /// leaving `shard == None` — the trainer reported pipelined while
+    /// stepping serially.  Reconfiguration is now transactional: a typed
+    /// error and the previous (working) configuration fully preserved.
+    #[test]
+    fn sched_reconfiguration_is_transactional() {
+        let man = plan_manifest(8, 2);
+        let mut tracker = Tracker::new();
+        let plan = StepPlan::build(&man, Mode::RowHybrid, &mut tracker).unwrap();
+        let pipe = plan.lower(&man).unwrap();
+
+        let mut st = SchedState::new();
+        let good = SchedConfig::pipelined(2);
+        st.set(Some(&pipe), good.clone(), 0).unwrap();
+        assert!(st.shard.is_some(), "pipelined builds the sharded state");
+
+        // (a) pipelined with no lowered plan: Error::Sched, nothing moves
+        match st.set(None, SchedConfig::pipelined(4), 0) {
+            Err(Error::Sched(msg)) => assert!(msg.contains("never"), "{msg}"),
+            other => panic!("expected Error::Sched, got ok={:?}", other.is_ok()),
+        }
+        assert_eq!(st.cfg, good, "failed set must preserve the config");
+        assert!(st.shard.is_some(), "…and the working sharded state");
+        assert_eq!(st.shard.as_ref().unwrap().plan().devices(), 1);
+
+        // (b) a deliberately tiny device: its clamped budget is below the
+        // serial replay peak — would OOM on real hardware, so the
+        // reconfiguration is rejected and the old config survives
+        let tiny = SchedConfig::pipelined(2).with_shard(ShardConfig::heterogeneous(vec![
+            DeviceSpec::new(DevicePreset::Rtx3090).with_hbm(64),
+        ]));
+        match st.set(Some(&pipe), tiny, 0) {
+            Err(Error::InfeasiblePlan(msg)) => {
+                assert!(msg.contains("exceeds"), "{msg}")
+            }
+            other => panic!("expected InfeasiblePlan, got ok={:?}", other.is_ok()),
+        }
+        assert_eq!(st.cfg, good);
+        assert!(st.shard.is_some());
+
+        // (c) falling back to serial always succeeds and drops the pool
+        st.set(None, SchedConfig::default(), 0).unwrap();
+        assert!(st.shard.is_none());
+    }
+
+    /// Regression (PR 4 satellite): per-device admission budgets used to
+    /// be `vec![cfg.mem_budget; devices]`, ignoring each device's actual
+    /// memory.  They now derive from `Topology::budgets(ξ)` clamped by
+    /// the configured budget — a small device's ledger can never exceed
+    /// its usable HBM minus the always-resident bytes.
+    #[test]
+    fn per_device_budgets_clamp_to_device_memory() {
+        let man = plan_manifest(8, 2);
+        let mut tracker = Tracker::new();
+        let plan = StepPlan::build(&man, Mode::RowHybrid, &mut tracker).unwrap();
+        let pipe = plan.lower(&man).unwrap();
+
+        // mixed topology: stock rtx3090 + a 1 MiB-scaled a100
+        let small = 1u64 << 20;
+        let cfg = SchedConfig::pipelined(2).with_shard(ShardConfig::heterogeneous(vec![
+            DeviceSpec::new(DevicePreset::Rtx3090),
+            DeviceSpec::new(DevicePreset::A100).with_hbm(small),
+        ]));
+        let xi = 1u64 << 10;
+        let ss = ShardState::build(&pipe, &cfg, xi).unwrap();
+        let budgets = ss.plan().budgets();
+        assert_eq!(
+            budgets[0],
+            DeviceModel::rtx3090().usable_hbm() - xi,
+            "an unbounded mem_budget clamps to the device"
+        );
+        assert_eq!(budgets[1], (small - small / 16) - xi);
+
+        // an explicit budget below both devices wins everywhere
+        let cfg = SchedConfig {
+            mem_budget: 4096,
+            ..cfg
+        };
+        let ss = ShardState::build(&pipe, &cfg, xi).unwrap();
+        assert!(ss.plan().budgets().iter().all(|&b| b == 4096));
     }
 
     /// Deterministic trace: same DAG, same config ⇒ same canonical view,

@@ -29,6 +29,44 @@ pub fn node_seconds(est_bytes: u64, dev: &DeviceModel) -> f64 {
     (est_bytes as f64 * NODE_FLOPS_PER_BYTE) / (dev.flops_per_sec * dev.slab_efficiency)
 }
 
+/// List-schedule makespan of a topologically-ordered node sequence — the
+/// modeled objective the `shard::PartitionPolicy::DpBoundary` planner
+/// minimizes and the metric the shard bench reports per assignment.
+///
+/// Nodes dispatch in id order (matching the executor's deterministic
+/// lowest-id ready-pick); each device serializes its own nodes.
+/// `node_secs[i]` is node i's modeled compute seconds on its assigned
+/// device `device_of[i]`; `deps(i)` its direct dependencies (all `< i`);
+/// `edge_secs(dep, i)` the modeled link seconds to stage `dep`'s output
+/// onto node i's device (0 when co-located).  A node starts at
+/// `max(ready, device_free)` where `ready` is the max over dependencies
+/// of `finish(dep) + edge_secs(dep, i)`; the makespan is the latest
+/// finish.  Pure and deterministic — safe to compare across partition
+/// policies.
+pub fn list_makespan<'d>(
+    device_of: &[usize],
+    node_secs: &[f64],
+    n_devices: usize,
+    deps: impl Fn(usize) -> &'d [usize],
+    edge_secs: impl Fn(usize, usize) -> f64,
+) -> f64 {
+    assert_eq!(device_of.len(), node_secs.len());
+    let mut finish = vec![0f64; device_of.len()];
+    let mut free = vec![0f64; n_devices];
+    let mut span = 0f64;
+    for (i, (&c, &secs)) in device_of.iter().zip(node_secs).enumerate() {
+        let mut ready = 0f64;
+        for &dep in deps(i) {
+            ready = ready.max(finish[dep] + edge_secs(dep, i));
+        }
+        let start = ready.max(free[c]);
+        finish[i] = start + secs;
+        free[c] = finish[i];
+        span = span.max(finish[i]);
+    }
+    span
+}
+
 /// Per-iteration cost counters emitted by a strategy's planner.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct CostCounters {
@@ -138,6 +176,27 @@ mod tests {
         assert!((node_seconds(2 << 20, &d90) - 2.0 * one).abs() < one * 1e-9);
         // weaker device + worse slab efficiency ⇒ slower node
         assert!(node_seconds(1 << 20, &d80) > one);
+    }
+
+    #[test]
+    fn list_makespan_models_parallelism_and_transfers() {
+        // two independent unit nodes + a zero-cost join
+        let deps: Vec<Vec<usize>> = vec![vec![], vec![], vec![0, 1]];
+        let dep_of = |i: usize| deps[i].as_slice();
+        // same device: serialized → 2.0; two devices: parallel → 1.0
+        let serial = list_makespan(&[0, 0, 0], &[1.0, 1.0, 0.0], 1, dep_of, |_, _| 0.0);
+        assert_eq!(serial, 2.0);
+        let par = list_makespan(&[0, 1, 0], &[1.0, 1.0, 0.0], 2, dep_of, |_, _| 0.0);
+        assert_eq!(par, 1.0);
+        // a crossing edge delays the join by the link time
+        let xfer = list_makespan(&[0, 1, 0], &[1.0, 1.0, 0.0], 2, dep_of, |d, i| {
+            if d == 1 && i == 2 {
+                0.5
+            } else {
+                0.0
+            }
+        });
+        assert_eq!(xfer, 1.5);
     }
 
     #[test]

@@ -30,7 +30,7 @@
 //! | [`costmodel`] | τ/ι FLOP model, CI/OD counters, relative latency |
 //! | [`runtime`] | PJRT client, manifest, `ExecHandle` executable table, zero-copy `TensorView` plumbing |
 //! | [`sched`] | weak-dependency row scheduler: dependency DAG, memory admission, pipelined worker-pool executor |
-//! | [`shard`] | multi-device row sharding: topology, `Blocked`/`CostBalanced` partitioners, transfer lowering, persistent per-device-ledger executor |
+//! | [`shard`] | multi-device row sharding: heterogeneous topologies (`DeviceSpec`), `Blocked`/`CostBalanced`/`DpBoundary` partitioners, transfer lowering, persistent per-device-ledger executor |
 //! | [`coordinator`] | live row coordinator: prebuilt `StepPlan`, serial + pipelined/sharded FP/BP, SGD, training |
 //! | [`data`] | synthetic 10-class corpus |
 //! | [`metrics`] | counters + report tables for the benches |

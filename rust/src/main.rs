@@ -7,11 +7,15 @@
 //!          [--dim H] [--rows N]
 //!          — memory-plan an iteration and print peak/fit per strategy
 //!   train  --mode base|overl-h|2ps|naive [--steps N] [--lr F] [--artifacts DIR]
-//!          [--workers N] [--devices N] [--policy blocked|balanced]
-//!          [--link pcie|nvlink] [--trace-out FILE]
+//!          [--workers N] [--devices N] [--device-spec SPEC]
+//!          [--policy blocked|balanced|dp] [--link pcie|nvlink]
+//!          [--trace-out FILE]
 //!          — live training on the PJRT artifacts (MiniVGG, synthetic data);
 //!          --workers enables the pipelined scheduler, --devices shards the
-//!          row DAG, --trace-out dumps the last step's per-device trace JSON
+//!          row DAG over N identical RTX 3090s, --device-spec over an
+//!          explicit (mixed) topology like `rtx3090:2,a100:2` (entries are
+//!          name[@hbm-percent][:count]), --trace-out dumps the last step's
+//!          per-device trace JSON
 //!   info   [--artifacts DIR]
 //!          — print the artifact bundle inventory
 //!   trace  --net vgg16 --strategy overl-h [--batch B] [--rows N] [--out FILE]
@@ -26,7 +30,7 @@ use lr_cnn::model::{resnet50, vgg16, Network};
 use lr_cnn::planner::{RowCentric, RowMode, Strategy};
 use lr_cnn::runtime::Runtime;
 use lr_cnn::sched::SchedConfig;
-use lr_cnn::shard::{LinkKind, PartitionPolicy, ShardConfig};
+use lr_cnn::shard::{DeviceSpec, LinkKind, PartitionPolicy, ShardConfig};
 
 use std::collections::HashMap;
 use std::process::ExitCode;
@@ -185,22 +189,57 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<(), String> {
         .unwrap_or("0")
         .parse()
         .map_err(|_| "bad --workers")?;
-    let devices: usize = flags
+    let devices_flag: usize = flags
         .get("devices")
         .map(String::as_str)
         .unwrap_or("1")
         .parse()
         .map_err(|_| "bad --devices")?;
+    let specs: Option<Vec<DeviceSpec>> = flags
+        .get("device-spec")
+        .map(|s| DeviceSpec::parse_list(s))
+        .transpose()
+        .map_err(|e| e.to_string())?;
+    let devices = specs.as_ref().map(Vec::len).unwrap_or(devices_flag);
+    if let Some(s) = &specs {
+        if flags.contains_key("devices") && devices_flag != s.len() {
+            eprintln!(
+                "warning: --devices {devices_flag} overridden by --device-spec \
+                 ({} devices)",
+                s.len()
+            );
+        }
+    }
     let policy = match flags.get("policy").map(String::as_str).unwrap_or("blocked") {
         "blocked" => PartitionPolicy::Blocked,
         "balanced" => PartitionPolicy::CostBalanced,
-        other => return Err(format!("unknown --policy {other} (blocked|balanced)")),
+        "dp" | "dp-boundary" => PartitionPolicy::DpBoundary,
+        other => return Err(format!("unknown --policy {other} (blocked|balanced|dp)")),
     };
     let link = match flags.get("link").map(String::as_str).unwrap_or("pcie") {
         "pcie" => LinkKind::Pcie,
         "nvlink" => LinkKind::NvLink,
         other => return Err(format!("unknown --link {other} (pcie|nvlink)")),
     };
+    if devices <= 1 {
+        // partition/link flags only matter with 2+ devices; a benchmark
+        // invocation passing them with one device would silently
+        // misreport its configuration
+        for flag in ["policy", "link"] {
+            if flags.contains_key(flag) {
+                eprintln!(
+                    "warning: --{flag} is ignored with {devices} device(s) — pass \
+                     --devices N > 1 or a multi-device --device-spec"
+                );
+            }
+        }
+        if specs.is_some() && workers == 0 {
+            eprintln!(
+                "warning: --device-spec is ignored in serial mode — pass --workers N \
+                 to enable the pipelined scheduler"
+            );
+        }
+    }
     let rt = Runtime::open(dir).map_err(|e| e.to_string())?;
     println!(
         "platform {} | model {} | mode {}",
@@ -212,16 +251,23 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<(), String> {
     let corpus = SyntheticCorpus::new(m.n_classes, 3, m.h, m.w, 1234);
     let mut tr = Trainer::new(&rt, mode, lr, 7).map_err(|e| e.to_string())?;
     if workers > 0 || devices > 1 {
-        let mut cfg = SchedConfig::pipelined(workers.max(1));
-        if devices > 1 {
-            cfg = cfg.with_shard(ShardConfig::new(devices).with_policy(policy).with_link(link));
+        // a single-device --device-spec is honored too: its admission
+        // budget clamps to *that* device's memory, not a default rtx3090
+        let shard = match &specs {
+            Some(s) => ShardConfig::heterogeneous(s.clone()),
+            None => ShardConfig::new(devices),
         }
+        .with_policy(policy)
+        .with_link(link);
+        let names: Vec<String> = shard.devices.iter().map(|d| d.model().name).collect();
+        let cfg = SchedConfig::pipelined(workers.max(1)).with_shard(shard);
         tr.set_sched(cfg).map_err(|e| e.to_string())?;
         if let Some(ss) = tr.shard_state() {
             println!(
-                "sched: {} worker(s), {} device(s), {} transfer(s)/step, modeled link {:.1} us/step",
+                "sched: {} worker(s), {} device(s) [{}], {} transfer(s)/step, modeled link {:.1} us/step",
                 workers.max(1),
-                devices,
+                names.len(),
+                names.join(","),
                 ss.plan().transfers().len(),
                 ss.plan().modeled_transfer_seconds() * 1e6
             );

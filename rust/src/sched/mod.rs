@@ -44,18 +44,23 @@ pub enum Policy {
     Pipelined,
 }
 
-/// Scheduler configuration carried by the trainer.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Scheduler configuration carried by the trainer.  No longer `Copy`:
+/// the shard spec carries an explicit (possibly heterogeneous) device
+/// list.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct SchedConfig {
     /// Worker threads for the pipelined executor (clamped to ≥ 1).
     pub workers: usize,
     /// Projected-byte admission budget; `u64::MAX` disables admission.
-    /// Under sharding this is the **per-device** ledger budget — sharding
-    /// multiplies aggregate capacity, which is the point.
+    /// On the sharded trainer path each device's ledger is this budget
+    /// **clamped to that device's memory** (usable HBM − ξ, see
+    /// `shard::Topology::budgets`) — sharding multiplies aggregate
+    /// capacity without letting any one device promise bytes it does not
+    /// have.
     pub mem_budget: u64,
     pub policy: Policy,
-    /// Multi-device sharding of the row DAG (`None` = one device).  Only
-    /// meaningful with [`Policy::Pipelined`].
+    /// Multi-device sharding of the row DAG (`None` = one stock device).
+    /// Only meaningful with [`Policy::Pipelined`].
     pub shard: Option<crate::shard::ShardConfig>,
 }
 
@@ -122,7 +127,7 @@ mod tests {
         assert_eq!(c.policy, Policy::Pipelined);
         assert!(c.shard.is_none());
         let s = c.with_shard(crate::shard::ShardConfig::new(4));
-        assert_eq!(s.shard.unwrap().devices, 4);
+        assert_eq!(s.shard.unwrap().device_count(), 4);
     }
 
     #[test]

@@ -12,8 +12,8 @@
 //!
 //! | module | role |
 //! |---|---|
-//! | [`topology`] | N `DeviceModel`-backed devices + PCIe/NVLink peer links |
-//! | [`partition`] | `Blocked` / `CostBalanced` node→device assignment |
+//! | [`topology`] | heterogeneous `DeviceModel` topologies (`DeviceSpec` presets + capacity scaling) + PCIe/NVLink peer links |
+//! | [`partition`] | `Blocked` / `CostBalanced` / `DpBoundary` node→device assignment + `modeled_makespan` |
 //! | [`plan`] | cross-device edges → `Transfer` nodes; per-device `memory::sim` replay |
 //! | [`exec`] | persistent worker pool, per-device admission ledgers |
 
@@ -23,28 +23,63 @@ pub mod plan;
 pub mod topology;
 
 pub use exec::ShardedExecutor;
-pub use partition::{PartitionPolicy, Partitioner};
+pub use partition::{modeled_makespan, PartitionPolicy, Partitioner};
 pub use plan::{ShardPlan, Transfer};
-pub use topology::{DeviceId, LinkKind, Topology};
+pub use topology::{DeviceId, DevicePreset, DeviceSpec, LinkKind, Topology};
 
 /// Multi-device sharding knobs, carried inside `sched::SchedConfig`.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+///
+/// `devices` is an explicit per-device spec list, so mixed-capacity
+/// topologies (`rtx3090:2,a100:2`, capacity-scaled variants) are first
+/// class; [`ShardConfig::new`] keeps the old "N identical RTX 3090s"
+/// shorthand.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ShardConfig {
-    /// Simulated devices to shard the row DAG over (clamped to ≥ 1).
-    pub devices: usize,
+    /// Devices to shard the row DAG over, in [`DeviceId`] order.  An
+    /// empty list behaves as one stock RTX 3090 (see
+    /// [`ShardConfig::topology`]).
+    pub devices: Vec<DeviceSpec>,
     pub policy: PartitionPolicy,
     /// Peer-link model for cross-device transfers.
     pub link: LinkKind,
 }
 
 impl ShardConfig {
-    /// `devices` devices under the default `Blocked` policy over PCIe.
+    /// `devices` identical stock RTX 3090s (clamped to ≥ 1) under the
+    /// default `Blocked` policy over PCIe.
     pub fn new(devices: usize) -> ShardConfig {
+        ShardConfig::heterogeneous(vec![
+            DeviceSpec::new(DevicePreset::Rtx3090);
+            devices.max(1)
+        ])
+    }
+
+    /// Explicit (possibly mixed-capacity) device list; empty falls back
+    /// to one stock RTX 3090.
+    pub fn heterogeneous(devices: Vec<DeviceSpec>) -> ShardConfig {
+        let devices = if devices.is_empty() {
+            vec![DeviceSpec::new(DevicePreset::Rtx3090)]
+        } else {
+            devices
+        };
         ShardConfig {
-            devices: devices.max(1),
+            devices,
             policy: PartitionPolicy::Blocked,
             link: LinkKind::Pcie,
         }
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.devices.len().max(1)
+    }
+
+    /// Resolve the spec list into a concrete [`Topology`] (an empty list
+    /// resolves to one stock RTX 3090, mirroring the old default).
+    pub fn topology(&self) -> Topology {
+        if self.devices.is_empty() {
+            return Topology::uniform(1, DevicePreset::Rtx3090.model(), self.link);
+        }
+        Topology::new(self.devices.iter().map(|s| s.model()).collect(), self.link)
     }
 
     pub fn with_policy(mut self, policy: PartitionPolicy) -> ShardConfig {
@@ -71,13 +106,33 @@ mod tests {
     #[test]
     fn config_builders() {
         let c = ShardConfig::new(0);
-        assert_eq!(c.devices, 1, "clamped");
+        assert_eq!(c.device_count(), 1, "clamped");
         let c = ShardConfig::new(4)
             .with_policy(PartitionPolicy::CostBalanced)
             .with_link(LinkKind::NvLink);
-        assert_eq!(c.devices, 4);
+        assert_eq!(c.device_count(), 4);
+        assert!(c
+            .devices
+            .iter()
+            .all(|s| s.preset == DevicePreset::Rtx3090 && s.hbm_bytes.is_none()));
         assert_eq!(c.policy, PartitionPolicy::CostBalanced);
         assert_eq!(c.link, LinkKind::NvLink);
-        assert_eq!(ShardConfig::default().devices, 1);
+        assert_eq!(ShardConfig::default().device_count(), 1);
+    }
+
+    #[test]
+    fn heterogeneous_config_resolves_a_mixed_topology() {
+        let c = ShardConfig::heterogeneous(vec![
+            DeviceSpec::new(DevicePreset::Rtx3090),
+            DeviceSpec::new(DevicePreset::A100),
+        ])
+        .with_link(LinkKind::NvLink);
+        let t = c.topology();
+        assert_eq!(t.len(), 2);
+        assert!(t.device(0).hbm_bytes < t.device(1).hbm_bytes);
+        assert_eq!(t.link(), LinkKind::NvLink);
+        // empty list degrades to one stock device, never panics
+        let t = ShardConfig::heterogeneous(Vec::new()).topology();
+        assert_eq!(t.len(), 1);
     }
 }

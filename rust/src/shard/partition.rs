@@ -1,6 +1,6 @@
 //! Row-DAG partitioning: assign every node a [`DeviceId`].
 //!
-//! Two policies, both deterministic (pure functions of the DAG and the
+//! Three policies, all deterministic (pure functions of the DAG and the
 //! topology — assignments never depend on timing or iteration order of a
 //! hash map):
 //!
@@ -16,10 +16,18 @@
 //!   for its cross-device inputs), subject to a per-device byte-ledger
 //!   steer.  Minimizes the max per-device load; an exact per-device
 //!   replay check runs after lowering (`ShardPlan::check_budgets`).
+//! * [`PartitionPolicy::DpBoundary`] — dynamic programming over row-fan
+//!   boundaries: for each maximal `Row` fan, the optimal *contiguous*
+//!   split across the device list under the per-device [`costmodel`]
+//!   rates and modeled transfer costs, subject to the same byte-ledger
+//!   steer (docs/SHARDING.md has the full formulation).  Falls back to
+//!   the greedy packer for a fan no contiguous split can fit; among
+//!   steer-feasible layouts it never returns one modeled slower
+//!   ([`modeled_makespan`]) than `CostBalanced`'s.
 
 use crate::costmodel;
 use crate::error::{Error, Result};
-use crate::sched::{Dag, NodeKind};
+use crate::sched::{Dag, NodeId, NodeKind};
 
 use super::topology::{DeviceId, Topology};
 
@@ -30,6 +38,9 @@ pub enum PartitionPolicy {
     Blocked,
     /// Greedy FLOP/byte bin-packing minimizing the max per-device load.
     CostBalanced,
+    /// Optimal contiguous per-fan split by DP over fan boundaries,
+    /// heterogeneity-aware; never modeled slower than `CostBalanced`.
+    DpBoundary,
 }
 
 /// Stateless assignment engine for one policy.
@@ -69,6 +80,7 @@ impl Partitioner {
         match self.policy {
             PartitionPolicy::Blocked => Ok(blocked(dag, topo.len())),
             PartitionPolicy::CostBalanced => cost_balanced(dag, topo, ledgers),
+            PartitionPolicy::DpBoundary => dp_boundary(dag, topo, ledgers),
         }
     }
 }
@@ -98,6 +110,93 @@ fn blocked(dag: &Dag, devices: usize) -> Vec<DeviceId> {
     dev
 }
 
+/// Mutable placement state both packers thread through their id-order
+/// walk: the partial assignment, per-device modeled load, serial-replay
+/// resident (parked) bytes and outstanding consumer counts.
+struct Placement<'a> {
+    dag: &'a Dag,
+    topo: &'a Topology,
+    ledgers: &'a [u64],
+    dev: Vec<DeviceId>,
+    load: Vec<f64>,
+    /// Serial-replay parked bytes per device (cheap steer; the exact
+    /// lowered-DAG replay runs in `ShardPlan::check_budgets`).
+    resident: Vec<u64>,
+    /// Unfinished consumers per node — when it hits 0, the node's parked
+    /// output leaves its device's resident set.
+    left: Vec<usize>,
+}
+
+impl<'a> Placement<'a> {
+    fn new(dag: &'a Dag, topo: &'a Topology, ledgers: &'a [u64]) -> Placement<'a> {
+        Placement {
+            dag,
+            topo,
+            ledgers,
+            dev: vec![0usize; dag.len()],
+            load: vec![0f64; topo.len()],
+            resident: vec![0u64; topo.len()],
+            left: dag.consumer_counts(),
+        }
+    }
+
+    /// Modeled seconds node `id` adds on candidate device `c`: its
+    /// compute at that device's rates plus the link time of staging its
+    /// cross-device inputs.
+    fn placed_seconds(&self, id: NodeId, c: DeviceId) -> f64 {
+        let node = self.dag.node(id);
+        let mut cost = costmodel::node_seconds(node.est_bytes, self.topo.device(c));
+        for &dep in &node.deps {
+            let payload = payload_bytes(self.dag, dep);
+            cost += self.topo.transfer_seconds(payload, self.dev[dep], c);
+        }
+        cost
+    }
+
+    /// Greedy cost-balanced choice for one node: the device minimizing
+    /// its finish contribution, subject to the ledger steer.
+    fn greedy_choice(&self, id: NodeId) -> Result<DeviceId> {
+        let node = self.dag.node(id);
+        let mut best: Option<(f64, DeviceId)> = None;
+        for c in 0..self.topo.len() {
+            if self.resident[c].saturating_add(node.est_bytes) > self.ledgers[c] {
+                continue; // ledger steer: this row cannot run here
+            }
+            let finish = self.load[c] + self.placed_seconds(id, c);
+            // strict < keeps ties on the lowest DeviceId
+            if best.map(|(f, _)| finish < f).unwrap_or(true) {
+                best = Some((finish, c));
+            }
+        }
+        match best {
+            Some((_, c)) => Ok(c),
+            None => Err(Error::InfeasiblePlan(format!(
+                "cost-balanced shard: node '{}' ({} B) fits no device ledger",
+                node.label, node.est_bytes
+            ))),
+        }
+    }
+
+    /// Commit node `id` to device `choice`: record the assignment, grow
+    /// the device's load, park this node's output and release deps whose
+    /// last consumer this was (the serial-replay accounting).
+    fn commit(&mut self, id: NodeId, choice: DeviceId) {
+        let node = self.dag.node(id);
+        self.dev[id] = choice;
+        self.load[choice] += costmodel::node_seconds(node.est_bytes, self.topo.device(choice));
+        if self.left[id] > 0 {
+            self.resident[choice] = self.resident[choice].saturating_add(node.out_bytes);
+        }
+        for &dep in &node.deps {
+            self.left[dep] -= 1;
+            if self.left[dep] == 0 {
+                self.resident[self.dev[dep]] =
+                    self.resident[self.dev[dep]].saturating_sub(self.dag.node(dep).out_bytes);
+            }
+        }
+    }
+}
+
 /// Greedy bin-packing on modeled node seconds.  Nodes are visited in id
 /// (= topological = serial) order; each `Row`/`TpsRow` node goes to the
 /// device minimizing its finish contribution, with a serial-replay parked
@@ -105,63 +204,285 @@ fn blocked(dag: &Dag, devices: usize) -> Vec<DeviceId> {
 /// 0: they are the fixed-order f32 reductions, and scattering them buys
 /// no parallelism while costing a transfer per input fan.
 fn cost_balanced(dag: &Dag, topo: &Topology, ledgers: &[u64]) -> Result<Vec<DeviceId>> {
-    let n = dag.len();
-    let d = topo.len();
-    let mut dev = vec![0usize; n];
-    let mut load = vec![0f64; d];
-    // serial-replay parked bytes per device (cheap steer; the exact
-    // lowered-DAG replay runs in ShardPlan::check_budgets)
-    let mut resident = vec![0u64; d];
-    let mut left = dag.consumer_counts();
-
-    for id in 0..n {
-        let node = dag.node(id);
-        let choice = match node.kind {
+    let mut p = Placement::new(dag, topo, ledgers);
+    for id in 0..dag.len() {
+        let choice = match dag.node(id).kind {
             NodeKind::Barrier => 0,
-            _ => {
-                let mut best: Option<(f64, DeviceId)> = None;
-                for c in 0..d {
-                    if resident[c].saturating_add(node.est_bytes) > ledgers[c] {
-                        continue; // ledger steer: this row cannot run here
-                    }
-                    let mut cost = costmodel::node_seconds(node.est_bytes, topo.device(c));
-                    for &dep in &node.deps {
-                        let payload = payload_bytes(dag, dep);
-                        cost += topo.transfer_seconds(payload, dev[dep], c);
-                    }
-                    let finish = load[c] + cost;
-                    // strict < keeps ties on the lowest DeviceId
-                    if best.map(|(f, _)| finish < f).unwrap_or(true) {
-                        best = Some((finish, c));
-                    }
-                }
-                match best {
-                    Some((_, c)) => c,
-                    None => {
-                        return Err(Error::InfeasiblePlan(format!(
-                            "cost-balanced shard: node '{}' ({} B) fits no device ledger",
-                            node.label, node.est_bytes
-                        )))
-                    }
-                }
-            }
+            _ => p.greedy_choice(id)?,
         };
-        dev[id] = choice;
-        load[choice] += costmodel::node_seconds(node.est_bytes, topo.device(choice));
-        // replay accounting: park this node's output, release deps whose
-        // last consumer this was
+        p.commit(id, choice);
+    }
+    Ok(p.dev)
+}
+
+/// DP over row-fan boundaries (the heterogeneity-aware planner).
+///
+/// Walks the DAG in id order.  Each maximal run of `Row` nodes (a
+/// parallel fan — fans are pushed with consecutive ids by
+/// `StepPlan::lower`) is split into contiguous, possibly empty, ranges —
+/// range `c` on device `c` — by the DP in [`dp_split_fan`], minimizing
+/// the fan's modeled makespan under each device's own FLOP/byte rates,
+/// the link costs of the rows' cross-device inputs and the byte-ledger
+/// steer.  Barriers (the serial-order f32 reductions) pin to device 0;
+/// 2PS chain rows prefer device 0 — a link hop inside the chain would
+/// serialize the cluster — but fall back to the greedy choice when they
+/// do not fit its ledger.  A fan with no feasible contiguous split falls
+/// back to the greedy packer row by row; finally, the result is compared
+/// against `CostBalanced`'s full layout (steer feasibility first, then
+/// [`modeled_makespan`]) and the better of the two is returned — DP is
+/// never modeled slower than greedy among steer-feasible layouts, and
+/// its layout passes the steer whenever greedy's does.
+fn dp_boundary(dag: &Dag, topo: &Topology, ledgers: &[u64]) -> Result<Vec<DeviceId>> {
+    let dp = dp_walk(dag, topo, ledgers);
+    let greedy = cost_balanced(dag, topo, ledgers);
+    match (dp, greedy) {
+        // Guard: a contiguous split is a restriction, and per-fan
+        // optimality is not global optimality — among the steer-feasible
+        // candidates, return the one modeling faster (deterministic;
+        // strict < keeps DP on ties).  DpBoundary is therefore never
+        // modeled slower than CostBalanced, and its layout satisfies the
+        // ledger steer whenever CostBalanced's does.
+        (Ok(dp), Ok(greedy)) => {
+            let ok = (
+                steer_feasible(dag, &dp, ledgers),
+                steer_feasible(dag, &greedy, ledgers),
+            );
+            Ok(match ok {
+                (true, false) => dp,
+                (false, true) => greedy,
+                // both feasible — or neither (the exact replay check in
+                // ShardPlan::check_budgets is the final arbiter anyway):
+                // pick the faster model
+                _ => {
+                    if modeled_makespan(dag, topo, &greedy)
+                        < modeled_makespan(dag, topo, &dp)
+                    {
+                        greedy
+                    } else {
+                        dp
+                    }
+                }
+            })
+        }
+        (Ok(dp), Err(_)) => Ok(dp),
+        (Err(_), Ok(greedy)) => Ok(greedy),
+        (Err(e), Err(_)) => Err(e),
+    }
+}
+
+/// Does `assignment` respect the per-device byte-ledger steer?  Replays
+/// the same resident accounting [`Placement::commit`] maintains: every
+/// node's working set must fit its device's ledger on top of the bytes
+/// parked there at that point of the serial (id-order) walk.
+fn steer_feasible(dag: &Dag, assignment: &[DeviceId], ledgers: &[u64]) -> bool {
+    let mut resident = vec![0u64; ledgers.len()];
+    let mut left = dag.consumer_counts();
+    for (id, node) in dag.nodes().iter().enumerate() {
+        let c = assignment[id];
+        if resident[c].saturating_add(node.est_bytes) > ledgers[c] {
+            return false;
+        }
         if left[id] > 0 {
-            resident[choice] = resident[choice].saturating_add(node.out_bytes);
+            resident[c] = resident[c].saturating_add(node.out_bytes);
         }
         for &dep in &node.deps {
             left[dep] -= 1;
             if left[dep] == 0 {
-                resident[dev[dep]] =
-                    resident[dev[dep]].saturating_sub(dag.node(dep).out_bytes);
+                resident[assignment[dep]] =
+                    resident[assignment[dep]].saturating_sub(dag.node(dep).out_bytes);
             }
         }
     }
-    Ok(dev)
+    true
+}
+
+/// The DP walk itself; `Err` when some fan fits no device even row by
+/// row under the ledger steer.
+fn dp_walk(dag: &Dag, topo: &Topology, ledgers: &[u64]) -> Result<Vec<DeviceId>> {
+    let mut p = Placement::new(dag, topo, ledgers);
+    let n = dag.len();
+    let mut id = 0;
+    while id < n {
+        if dag.node(id).kind == NodeKind::Row {
+            let start = id;
+            // a fan is a maximal Row run with no internal dependencies —
+            // a row depending on an earlier fan row starts a new fan, so
+            // the DP only ever prices deps whose device is already final
+            while id < n
+                && dag.node(id).kind == NodeKind::Row
+                && dag.node(id).deps.iter().all(|&dep| dep < start)
+            {
+                id += 1;
+            }
+            match dp_split_fan(&p, start, id) {
+                Some(assign) => {
+                    for (r, &c) in assign.iter().enumerate() {
+                        p.commit(start + r, c);
+                    }
+                }
+                None => {
+                    // no contiguous split fits the ledgers: degrade to the
+                    // greedy packer for this fan (errors if nothing fits)
+                    for row in start..id {
+                        let c = p.greedy_choice(row)?;
+                        p.commit(row, c);
+                    }
+                }
+            }
+        } else {
+            // barriers (serial-order reductions) pin to device 0, same as
+            // CostBalanced; 2PS chain rows *prefer* device 0 (a link hop
+            // inside the chain serializes the cluster) but take the
+            // greedy choice when device 0's ledger cannot hold them —
+            // never emit a layout the steer would reject where greedy
+            // would not
+            let node = p.dag.node(id);
+            let choice = if node.kind == NodeKind::Barrier
+                || p.resident[0].saturating_add(node.est_bytes) <= p.ledgers[0]
+            {
+                0
+            } else {
+                p.greedy_choice(id)?
+            };
+            p.commit(id, choice);
+            id += 1;
+        }
+    }
+    Ok(p.dev)
+}
+
+/// Optimal contiguous split of the fan `[start, end)` over the device
+/// list, or `None` when no contiguous split fits the byte ledgers.
+///
+/// * **State** — `best[c][j]`: minimal fan makespan with the first `j`
+///   rows placed on devices `0..=c`, device `c` holding a (possibly
+///   empty) suffix range.  Makespan counts each device's pre-fan load,
+///   per-row compute at that device's rates and the link time of the
+///   rows' cross-device inputs.
+/// * **Transition** — `best[c][j] = min over i ≤ j of
+///   max(best[c-1][i], load[c] + sec[c](i..j))`, ranges admitted only
+///   when the range's serial-replay peak (running working set + parked
+///   outputs of earlier rows in the range) fits the device's ledger.
+/// * **Complexity** — O(D·k²) time, O(D·k) space for a k-row fan over D
+///   devices, via per-device prefix sums of row seconds and a running
+///   range-max of parked-prefix + working-set bytes.
+fn dp_split_fan(p: &Placement<'_>, start: usize, end: usize) -> Option<Vec<DeviceId>> {
+    let k = end - start;
+    let d = p.topo.len();
+    // per-row bytes: working set, and what stays parked after the row
+    // (only rows with pending consumers park anything)
+    let est: Vec<u64> = (start..end).map(|r| p.dag.node(r).est_bytes).collect();
+    let parked: Vec<u64> = (start..end)
+        .map(|r| {
+            if p.left[r] > 0 {
+                p.dag.node(r).out_bytes
+            } else {
+                0
+            }
+        })
+        .collect();
+    // pout[j] = parked bytes of fan rows [0..j); m[r] = peak while row r
+    // runs (earlier parked + its working set).  Range [i..j) peaks at
+    // max(m[i..j]) − pout[i].
+    let mut pout = vec![0u64; k + 1];
+    for r in 0..k {
+        pout[r + 1] = pout[r].saturating_add(parked[r]);
+    }
+    let m: Vec<u64> = (0..k).map(|r| pout[r].saturating_add(est[r])).collect();
+    // psec[c][j] = modeled seconds of fan rows [0..j) on device c
+    let mut psec = vec![vec![0f64; k + 1]; d];
+    for (c, ps) in psec.iter_mut().enumerate() {
+        for r in 0..k {
+            ps[r + 1] = ps[r] + p.placed_seconds(start + r, c);
+        }
+    }
+
+    const INF: f64 = f64::INFINITY;
+    let mut best = vec![vec![INF; k + 1]; d];
+    let mut cut = vec![vec![0usize; k + 1]; d];
+    // base: device 0 takes [0..j)
+    best[0][0] = p.load[0];
+    let mut run = 0u64;
+    for j in 1..=k {
+        run = run.max(m[j - 1]);
+        if p.resident[0].saturating_add(run) <= p.ledgers[0] {
+            best[0][j] = p.load[0] + psec[0][j];
+        }
+    }
+    for c in 1..d {
+        for j in 0..=k {
+            let mut bestv = INF;
+            let mut besti = j;
+            let mut run = 0u64;
+            let mut i = j + 1;
+            while i > 0 {
+                i -= 1;
+                let feasible = if i == j {
+                    true // empty range on device c
+                } else {
+                    run = run.max(m[i]);
+                    p.resident[c].saturating_add(run - pout[i]) <= p.ledgers[c]
+                };
+                if feasible && best[c - 1][i] < INF {
+                    let range_secs = if i == j { 0.0 } else { psec[c][j] - psec[c][i] };
+                    let v = best[c - 1][i].max(p.load[c] + range_secs);
+                    // strict < keeps the first (largest-i) minimizer —
+                    // deterministic, favors filling earlier devices
+                    if v < bestv {
+                        bestv = v;
+                        besti = i;
+                    }
+                }
+            }
+            best[c][j] = bestv;
+            cut[c][j] = besti;
+        }
+    }
+    if !best[d - 1][k].is_finite() {
+        return None;
+    }
+    // reconstruct the split points device by device
+    let mut assign = vec![0usize; k];
+    let mut j = k;
+    let mut c = d - 1;
+    loop {
+        let i = if c == 0 { 0 } else { cut[c][j] };
+        for a in assign.iter_mut().take(j).skip(i) {
+            *a = c;
+        }
+        if c == 0 {
+            break;
+        }
+        j = i;
+        c -= 1;
+    }
+    Some(assign)
+}
+
+/// Modeled makespan of `assignment` over `dag` on `topo`: a list
+/// schedule in id order (the executor's deterministic ready-pick) with
+/// per-device `costmodel::node_seconds` compute and
+/// `Topology::transfer_seconds` on every crossing edge.  The objective
+/// `DpBoundary` minimizes and the shard bench's comparison metric.
+pub fn modeled_makespan(dag: &Dag, topo: &Topology, assignment: &[DeviceId]) -> f64 {
+    assert_eq!(
+        assignment.len(),
+        dag.len(),
+        "makespan needs one device per node"
+    );
+    let secs: Vec<f64> = dag
+        .nodes()
+        .iter()
+        .zip(assignment)
+        .map(|(n, &c)| costmodel::node_seconds(n.est_bytes, topo.device(c)))
+        .collect();
+    costmodel::list_makespan(
+        assignment,
+        &secs,
+        topo.len(),
+        |i| dag.node(i).deps.as_slice(),
+        |dep, i| topo.transfer_seconds(payload_bytes(dag, dep), assignment[dep], assignment[i]),
+    )
 }
 
 /// Bytes that cross a device boundary when `id`'s output feeds a consumer
@@ -258,6 +579,162 @@ mod tests {
             Err(Error::InfeasiblePlan(msg)) => assert!(msg.contains("ledger"), "{msg}"),
             other => panic!("expected InfeasiblePlan, got {:?}", other.is_ok()),
         }
+    }
+
+    fn hetero_topo() -> Topology {
+        Topology::new(
+            vec![DeviceModel::rtx3090(), DeviceModel::a100_80g()],
+            LinkKind::NvLink,
+        )
+    }
+
+    #[test]
+    fn dp_boundary_is_deterministic_and_pins_chains_and_barriers() {
+        let dag = mixed_dag();
+        let t = topo(2);
+        let p = Partitioner::new(PartitionPolicy::DpBoundary);
+        let a = p.assign(&dag, &t, &[u64::MAX; 2]).unwrap();
+        let b = p.assign(&dag, &t, &[u64::MAX; 2]).unwrap();
+        assert_eq!(a, b, "assignment must be a pure function of its inputs");
+        assert_eq!(a.len(), dag.len());
+        // barriers + the whole 2PS chain stay on device 0
+        for id in 4..dag.len() {
+            assert_eq!(a[id], 0, "node {id} must pin to device 0");
+        }
+        // the fan is a contiguous split: device ids are non-decreasing
+        assert!(a[0..4].windows(2).all(|w| w[0] <= w[1]), "{a:?}");
+        // one device: the identity assignment
+        let one = p.assign(&dag, &topo(1), &[u64::MAX]).unwrap();
+        assert!(one.iter().all(|&d| d == 0));
+    }
+
+    #[test]
+    fn dp_boundary_shifts_rows_toward_the_faster_device() {
+        // 8 equal compute-heavy rows (1 GiB working set, thin 1 MiB
+        // handoffs) on rtx3090 + a100: the optimal contiguous split gives
+        // the A100 the bigger share; Blocked would split 4/4
+        let mut dag = Dag::new();
+        let rows: Vec<_> = (0..8)
+            .map(|r| dag.push_out(NodeKind::Row, format!("r{r}"), vec![], 1 << 30, 1 << 20))
+            .collect();
+        dag.push(NodeKind::Barrier, "red", rows, 0);
+        let t = hetero_topo();
+        let a = Partitioner::new(PartitionPolicy::DpBoundary)
+            .assign(&dag, &t, &[u64::MAX; 2])
+            .unwrap();
+        let on_a100 = a[0..8].iter().filter(|&&d| d == 1).count();
+        assert!(
+            on_a100 > 4,
+            "a100 must take the bigger share of an equal fan: {a:?}"
+        );
+        // and the modeled makespan beats the even Blocked split
+        let blocked = Partitioner::new(PartitionPolicy::Blocked)
+            .assign(&dag, &t, &[u64::MAX; 2])
+            .unwrap();
+        assert!(
+            modeled_makespan(&dag, &t, &a) < modeled_makespan(&dag, &t, &blocked),
+            "DP must beat the even split on a heterogeneous fan"
+        );
+    }
+
+    #[test]
+    fn dp_boundary_never_models_slower_than_greedy() {
+        for t in [topo(2), topo(4), hetero_topo()] {
+            let dag = mixed_dag();
+            let ledgers = vec![u64::MAX; t.len()];
+            let dp = Partitioner::new(PartitionPolicy::DpBoundary)
+                .assign(&dag, &t, &ledgers)
+                .unwrap();
+            let greedy = Partitioner::new(PartitionPolicy::CostBalanced)
+                .assign(&dag, &t, &ledgers)
+                .unwrap();
+            assert!(
+                modeled_makespan(&dag, &t, &dp) <= modeled_makespan(&dag, &t, &greedy),
+                "DP modeled slower than greedy on {} devices",
+                t.len()
+            );
+        }
+    }
+
+    #[test]
+    fn dp_boundary_respects_the_ledger_steer() {
+        let mut dag = Dag::new();
+        for r in 0..4 {
+            dag.push(NodeKind::Row, format!("r{r}"), vec![], 100);
+        }
+        let t = topo(2);
+        let p = Partitioner::new(PartitionPolicy::DpBoundary);
+        // device 0 too small for any row: the whole fan must go right
+        let dev = p.assign(&dag, &t, &[50, u64::MAX]).unwrap();
+        assert!(dev.iter().all(|&d| d == 1), "{dev:?}");
+        // nothing fits anywhere: a typed error (via the greedy fallback)
+        match p.assign(&dag, &t, &[50, 50]) {
+            Err(Error::InfeasiblePlan(msg)) => assert!(msg.contains("ledger"), "{msg}"),
+            other => panic!("expected InfeasiblePlan, got {:?}", other.is_ok()),
+        }
+    }
+
+    /// Regression (review finding): chain rows used to pin to device 0
+    /// unconditionally — on a topology whose device 0 holds the barriers
+    /// but not the 2PS rows, DpBoundary returned a ledger-violating
+    /// layout where CostBalanced's fit.  Chain rows now fall back to the
+    /// greedy choice when device 0's ledger cannot hold them.
+    #[test]
+    fn dp_boundary_chain_rows_leave_a_too_small_device0() {
+        let mut dag = Dag::new();
+        let fan: Vec<_> = (0..2)
+            .map(|r| dag.push(NodeKind::Row, format!("r{r}"), vec![], 10))
+            .collect();
+        let ck = dag.push(NodeKind::Barrier, "ck", fan, 10);
+        let mut prev = ck;
+        for r in 0..3 {
+            prev = dag.push(NodeKind::TpsRow, format!("t{r}"), vec![prev], 100);
+        }
+        dag.push(NodeKind::Barrier, "zl", vec![prev], 0);
+        let t = topo(2);
+        // device 0 holds the 10 B rows/barriers but not a 100 B chain row
+        let dev = Partitioner::new(PartitionPolicy::DpBoundary)
+            .assign(&dag, &t, &[50, u64::MAX])
+            .unwrap();
+        for (id, node) in dag.nodes().iter().enumerate() {
+            if node.kind == NodeKind::TpsRow {
+                assert_eq!(dev[id], 1, "chain row {id} cannot fit device 0: {dev:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn dp_splits_fans_at_internal_dependencies() {
+        // row1 depends on row0: they must not be priced as one fan; the
+        // assignment still covers every node and stays valid
+        let mut dag = Dag::new();
+        let a = dag.push_out(NodeKind::Row, "a", vec![], 100, 40);
+        let b = dag.push_out(NodeKind::Row, "b", vec![a], 100, 40);
+        dag.push(NodeKind::Barrier, "red", vec![a, b], 0);
+        let t = topo(2);
+        let dev = Partitioner::new(PartitionPolicy::DpBoundary)
+            .assign(&dag, &t, &[u64::MAX; 2])
+            .unwrap();
+        assert_eq!(dev.len(), 3);
+        assert_eq!(dev[2], 0, "barrier pins to device 0");
+    }
+
+    #[test]
+    fn modeled_makespan_prefers_parallel_layouts() {
+        // compute-heavy rows with thin handoffs, so the split's saved
+        // compute dwarfs the two crossing-edge link times
+        let mut dag = Dag::new();
+        let rows: Vec<_> = (0..4)
+            .map(|r| dag.push_out(NodeKind::Row, format!("r{r}"), vec![], 1 << 30, 1 << 10))
+            .collect();
+        dag.push(NodeKind::Barrier, "red", rows, 0);
+        let t = Topology::uniform(2, DeviceModel::rtx3090(), LinkKind::NvLink);
+        let all_one = vec![0, 0, 0, 0, 0];
+        let split = vec![0, 0, 1, 1, 0];
+        assert!(
+            modeled_makespan(&dag, &t, &split) < modeled_makespan(&dag, &t, &all_one),
+            "a balanced split must model faster than one device"
+        );
     }
 
     #[test]

@@ -247,6 +247,19 @@ impl ShardPlan {
         scheds
     }
 
+    /// Tight per-device admission ledgers: each device's serial-order
+    /// replay peak ([`ShardPlan::replay_peaks`]) clamped to that
+    /// device's own memory (`topo.budgets(xi)`) — the budget shape the
+    /// trainer path installs and the benches/tests assert against.
+    pub fn replay_ledgers(&self, topo: &Topology, xi: u64) -> Result<Vec<u64>> {
+        Ok(self
+            .replay_peaks()?
+            .into_iter()
+            .zip(topo.budgets(xi))
+            .map(|(peak, cap)| peak.min(cap))
+            .collect())
+    }
+
     /// Per-device serial-order peaks (see [`ShardPlan::per_device_schedules`]).
     pub fn replay_peaks(&self) -> Result<Vec<u64>> {
         self.per_device_schedules()

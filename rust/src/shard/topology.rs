@@ -8,12 +8,141 @@
 //! *modeled*, never slept: the simulated multi-device backend uses the
 //! latency for attribution and cost reporting, not wall-clock.
 
+use crate::error::{Error, Result};
 use crate::memory::device::NVLINK_BYTES_PER_SEC;
 use crate::memory::DeviceModel;
 
 /// Index of a device in a [`Topology`] — the shard partitioner's
 /// assignment currency and the trace's lane id.
 pub type DeviceId = usize;
+
+/// Named accelerator presets a topology spec can reference — the same
+/// spec-sheet models the memory planners calibrate against.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DevicePreset {
+    Rtx3090,
+    Rtx3080,
+    A100,
+}
+
+impl DevicePreset {
+    /// Parse a preset name as it appears in a `--device-spec` entry.
+    pub fn parse(name: &str) -> Option<DevicePreset> {
+        match name {
+            "rtx3090" => Some(DevicePreset::Rtx3090),
+            "rtx3080" => Some(DevicePreset::Rtx3080),
+            "a100" => Some(DevicePreset::A100),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DevicePreset::Rtx3090 => "rtx3090",
+            DevicePreset::Rtx3080 => "rtx3080",
+            DevicePreset::A100 => "a100",
+        }
+    }
+
+    /// The preset's spec-sheet [`DeviceModel`].
+    pub fn model(&self) -> DeviceModel {
+        match self {
+            DevicePreset::Rtx3090 => DeviceModel::rtx3090(),
+            DevicePreset::Rtx3080 => DeviceModel::rtx3080(),
+            DevicePreset::A100 => DeviceModel::a100_80g(),
+        }
+    }
+}
+
+/// One device entry in a heterogeneous topology spec: a preset plus an
+/// optional HBM-capacity override (the "capacity-scaled variant" — same
+/// compute and link rates, different memory, which is exactly the knob
+/// the paper's skew argument needs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeviceSpec {
+    pub preset: DevicePreset,
+    /// HBM capacity override in bytes (`None` = the preset's stock size).
+    pub hbm_bytes: Option<u64>,
+}
+
+impl DeviceSpec {
+    pub fn new(preset: DevicePreset) -> DeviceSpec {
+        DeviceSpec {
+            preset,
+            hbm_bytes: None,
+        }
+    }
+
+    /// Capacity-scaled variant with an explicit HBM size in bytes.
+    pub fn with_hbm(mut self, bytes: u64) -> DeviceSpec {
+        self.hbm_bytes = Some(bytes);
+        self
+    }
+
+    /// Capacity-scaled variant at `percent` % of the preset's stock HBM.
+    pub fn mem_percent(self, percent: u32) -> DeviceSpec {
+        let stock = self.preset.model().hbm_bytes;
+        self.with_hbm((stock as u128 * percent as u128 / 100) as u64)
+    }
+
+    /// Resolve the spec to a concrete [`DeviceModel`].
+    pub fn model(&self) -> DeviceModel {
+        let mut m = self.preset.model();
+        if let Some(b) = self.hbm_bytes {
+            m.name = format!("{}@{}B", m.name, b);
+            m.hbm_bytes = b;
+        }
+        m
+    }
+
+    /// Parse a comma-separated device spec, e.g. `rtx3090:2,a100:2` or
+    /// `rtx3090@50:1,a100` — each entry is `name[@percent][:count]` with
+    /// `@percent` scaling the preset's HBM capacity and `:count`
+    /// replicating the entry (both default to stock/1).
+    pub fn parse_list(spec: &str) -> Result<Vec<DeviceSpec>> {
+        let bad = |msg: String| Error::Config(format!("--device-spec '{spec}': {msg}"));
+        let mut out = Vec::new();
+        for entry in spec.split(',') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                return Err(bad("empty entry".into()));
+            }
+            let (head, count) = match entry.split_once(':') {
+                Some((h, c)) => {
+                    let count: usize = c
+                        .parse()
+                        .ok()
+                        .filter(|&n| n >= 1)
+                        .ok_or_else(|| bad(format!("bad count '{c}' (want an integer ≥ 1)")))?;
+                    (h, count)
+                }
+                None => (entry, 1),
+            };
+            let (name, percent) = match head.split_once('@') {
+                Some((n, p)) => {
+                    let percent: u32 = p
+                        .parse()
+                        .ok()
+                        .filter(|&v| v >= 1)
+                        .ok_or_else(|| bad(format!("bad percent '{p}' (want an integer ≥ 1)")))?;
+                    (n, Some(percent))
+                }
+                None => (head, None),
+            };
+            let preset = DevicePreset::parse(name)
+                .ok_or_else(|| bad(format!("unknown device '{name}' (rtx3090|rtx3080|a100)")))?;
+            let mut s = DeviceSpec::new(preset);
+            if let Some(p) = percent {
+                s = s.mem_percent(p);
+            }
+            out.extend((0..count).map(|_| s));
+        }
+        if out.is_empty() {
+            return Err(bad("no devices".into()));
+        }
+        Ok(out)
+    }
+}
 
 /// Fixed per-transfer setup cost (launch + sync on both endpoints).
 pub const TRANSFER_SETUP_SEC: f64 = 10e-6;
@@ -133,6 +262,37 @@ mod tests {
         slow.pcie_bytes_per_sec = 6.0e9;
         let t = Topology::new(vec![DeviceModel::rtx3090(), slow], LinkKind::Pcie);
         assert_eq!(t.link_bytes_per_sec(0, 1), 6.0e9);
+    }
+
+    #[test]
+    fn device_spec_parses_presets_scales_and_counts() {
+        let specs = DeviceSpec::parse_list("rtx3090:2,a100:2").unwrap();
+        assert_eq!(specs.len(), 4);
+        assert_eq!(specs[0].preset, DevicePreset::Rtx3090);
+        assert_eq!(specs[2].preset, DevicePreset::A100);
+        assert!(specs.iter().all(|s| s.hbm_bytes.is_none()));
+
+        let specs = DeviceSpec::parse_list("rtx3090@50:1, rtx3080").unwrap();
+        assert_eq!(specs.len(), 2);
+        let m = specs[0].model();
+        assert_eq!(m.hbm_bytes, DeviceModel::rtx3090().hbm_bytes / 2);
+        assert!(m.name.contains('@'), "scaled variants are labeled: {}", m.name);
+        // compute rates are the preset's — only capacity scales
+        assert_eq!(m.flops_per_sec, DeviceModel::rtx3090().flops_per_sec);
+        assert_eq!(specs[1].model().hbm_bytes, DeviceModel::rtx3080().hbm_bytes);
+
+        for bad in ["", "gtx970", "rtx3090:0", "rtx3090@0", "rtx3090:x", ","] {
+            assert!(DeviceSpec::parse_list(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn device_spec_hbm_override_feeds_budgets() {
+        let tiny = DeviceSpec::new(DevicePreset::Rtx3090).with_hbm(64);
+        let t = Topology::new(vec![tiny.model(), DeviceModel::a100_80g()], LinkKind::Pcie);
+        let b = t.budgets(0);
+        assert_eq!(b[0], 64 - 64 / 16, "usable HBM of the scaled device");
+        assert_eq!(b[1], DeviceModel::a100_80g().usable_hbm());
     }
 
     #[test]

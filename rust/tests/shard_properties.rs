@@ -7,10 +7,18 @@
 use lr_cnn::coordinator::{Mode, StepPlan};
 use lr_cnn::memory::{sim, DeviceModel, Tracker};
 use lr_cnn::runtime::Manifest;
-use lr_cnn::sched::{Dag, NodeKind, Slot};
+use lr_cnn::sched::{Dag, NodeId, NodeKind, Slot};
 use lr_cnn::shard::{
-    LinkKind, PartitionPolicy, Partitioner, ShardPlan, ShardedExecutor, Topology,
+    modeled_makespan, LinkKind, PartitionPolicy, Partitioner, ShardPlan, ShardedExecutor,
+    Topology,
 };
+use lr_cnn::util::rng::XorShift;
+
+const ALL_POLICIES: [PartitionPolicy; 3] = [
+    PartitionPolicy::Blocked,
+    PartitionPolicy::CostBalanced,
+    PartitionPolicy::DpBoundary,
+];
 
 /// Minimal shape-accurate manifest for the two row-centric modes (same as
 /// tests/sched_properties.rs).
@@ -119,7 +127,7 @@ fn every_node_is_assigned_exactly_once_and_in_range() {
     for mode in [Mode::RowHybrid, Mode::Tps] {
         let dag = base_dag(mode);
         for devices in [1usize, 2, 4] {
-            for policy in [PartitionPolicy::Blocked, PartitionPolicy::CostBalanced] {
+            for policy in ALL_POLICIES {
                 let t = topo(devices);
                 let assignment = Partitioner::new(policy)
                     .assign(&dag, &t, &vec![u64::MAX; devices])
@@ -136,7 +144,7 @@ fn transfers_appear_iff_an_edge_crosses_devices() {
     for mode in [Mode::RowHybrid, Mode::Tps] {
         let dag = base_dag(mode);
         for devices in [1usize, 2, 4] {
-            for policy in [PartitionPolicy::Blocked, PartitionPolicy::CostBalanced] {
+            for policy in ALL_POLICIES {
                 let t = topo(devices);
                 let assignment = Partitioner::new(policy)
                     .assign(&dag, &t, &vec![u64::MAX; devices])
@@ -226,7 +234,7 @@ fn per_device_replay_peaks_fit_their_ledgers() {
     for mode in [Mode::RowHybrid, Mode::Tps] {
         let dag = base_dag(mode);
         for devices in [1usize, 2, 4] {
-            for policy in [PartitionPolicy::Blocked, PartitionPolicy::CostBalanced] {
+            for policy in ALL_POLICIES {
                 let mut plan =
                     ShardPlan::build(&dag, &topo(devices), policy, vec![u64::MAX; devices])
                         .unwrap();
@@ -250,6 +258,176 @@ fn per_device_replay_peaks_fit_their_ledgers() {
             }
         }
     }
+}
+
+/// Heterogeneous topologies the property tests sweep: mixed presets,
+/// mixed link kinds and a capacity-scaled small device.
+fn hetero_topologies() -> Vec<Topology> {
+    let d90 = DeviceModel::rtx3090();
+    let d80 = DeviceModel::rtx3080();
+    let a100 = DeviceModel::a100_80g();
+    let mut half_a100 = a100.clone();
+    half_a100.hbm_bytes /= 2;
+    vec![
+        Topology::uniform(2, d90.clone(), LinkKind::Pcie),
+        Topology::uniform(4, d90.clone(), LinkKind::NvLink),
+        Topology::new(vec![d90.clone(), a100.clone()], LinkKind::Pcie),
+        Topology::new(vec![d90.clone(), d90.clone(), a100.clone(), a100], LinkKind::NvLink),
+        Topology::new(vec![d80, half_a100, d90], LinkKind::Pcie),
+    ]
+}
+
+/// Deterministic random fan DAG: `fans` maximal Row fans of random width
+/// and random byte weights, each reduced by a Barrier that chains on the
+/// previous one (the lowered step-DAG shape, randomized).
+fn random_fan_dag(rng: &mut XorShift, fans: usize) -> Dag {
+    let mut dag = Dag::new();
+    let mut prev_barrier: Option<NodeId> = None;
+    for f in 0..fans {
+        let width = 1 + rng.below(9);
+        let mut rows = Vec::with_capacity(width);
+        for r in 0..width {
+            let est = 1 + rng.below(1 << 20) as u64;
+            let out = rng.below(1 + est as usize / 2) as u64;
+            let deps = prev_barrier.map(|b| vec![b]).unwrap_or_default();
+            rows.push(dag.push_out(NodeKind::Row, format!("f{f}r{r}"), deps, est, out));
+        }
+        let est = 1 + rng.below(1 << 18) as u64;
+        prev_barrier = Some(dag.push_out(
+            NodeKind::Barrier,
+            format!("bar{f}"),
+            rows,
+            est,
+            est / 2,
+        ));
+    }
+    dag
+}
+
+/// The DP planner's bar: on randomized fan DAGs over uniform *and*
+/// heterogeneous topologies, `DpBoundary`'s modeled makespan never
+/// exceeds greedy `CostBalanced`'s.
+#[test]
+fn dp_boundary_makespan_never_exceeds_cost_balanced() {
+    let mut rng = XorShift::new(0xD9B0);
+    for seed_round in 0..12 {
+        for (ti, t) in hetero_topologies().into_iter().enumerate() {
+            let dag = random_fan_dag(&mut rng, 1 + seed_round % 4);
+            let ledgers = vec![u64::MAX; t.len()];
+            let dp = Partitioner::new(PartitionPolicy::DpBoundary)
+                .assign(&dag, &t, &ledgers)
+                .unwrap();
+            let greedy = Partitioner::new(PartitionPolicy::CostBalanced)
+                .assign(&dag, &t, &ledgers)
+                .unwrap();
+            let (ms_dp, ms_greedy) = (
+                modeled_makespan(&dag, &t, &dp),
+                modeled_makespan(&dag, &t, &greedy),
+            );
+            assert!(
+                ms_dp <= ms_greedy,
+                "round {seed_round} topo {ti}: DP {ms_dp} > greedy {ms_greedy}"
+            );
+        }
+    }
+}
+
+/// Same bar under *tight* byte ledgers (each device's usable HBM): the DP
+/// must stay feasible whenever greedy is, and still never model slower.
+#[test]
+fn dp_boundary_holds_under_ledger_pressure() {
+    let mut rng = XorShift::new(0xF00D);
+    for round in 0..8 {
+        for t in hetero_topologies() {
+            let dag = random_fan_dag(&mut rng, 1 + round % 3);
+            let ledgers = t.budgets(0);
+            let greedy = Partitioner::new(PartitionPolicy::CostBalanced).assign(&dag, &t, &ledgers);
+            let dp = Partitioner::new(PartitionPolicy::DpBoundary).assign(&dag, &t, &ledgers);
+            match (greedy, dp) {
+                (Ok(g), Ok(d)) => {
+                    assert!(
+                        modeled_makespan(&dag, &t, &d) <= modeled_makespan(&dag, &t, &g),
+                        "round {round}"
+                    );
+                }
+                (Ok(_), Err(e)) => panic!(
+                    "round {round}: DP infeasible where greedy fits (it falls back): {e}"
+                ),
+                // greedy infeasible: nothing to compare against
+                (Err(_), _) => {}
+            }
+        }
+    }
+}
+
+/// Mixed rtx3090+a100 execution through the public executor API: the
+/// sharded checksum is bit-identical to the serial loop for all three
+/// policies on both row-centric step DAGs, with every per-device ledger
+/// (serial replay peak clamped to device memory) respected.
+#[test]
+fn heterogeneous_execution_is_bit_identical_for_all_policies() {
+    let topo = Topology::new(
+        vec![
+            DeviceModel::rtx3090(),
+            DeviceModel::rtx3090(),
+            DeviceModel::a100_80g(),
+            DeviceModel::a100_80g(),
+        ],
+        LinkKind::NvLink,
+    );
+    for mode in [Mode::RowHybrid, Mode::Tps] {
+        let dag = base_dag(mode);
+        // the serial reference: node id -> a pure value, reduced in id order
+        let node_val = |id: usize| ((id as f32) * 0.7311).sin();
+        let serial: f32 = (0..dag.len()).map(node_val).sum();
+        for policy in ALL_POLICIES {
+            let mut plan =
+                ShardPlan::build(&dag, &topo, policy, topo.budgets(0)).unwrap();
+            let ledgers = plan.replay_ledgers(&topo, 0).unwrap();
+            plan.set_budgets(ledgers.clone()).unwrap();
+            plan.check_budgets().expect("replay fits the clamped ledgers");
+            let exec = ShardedExecutor::new(4);
+            let acc: Vec<Slot<f32>> = Slot::many(dag.len());
+            let out = exec
+                .run_step(&plan, |base| acc[base].put("v", node_val(base)))
+                .unwrap();
+            out.trace.check_complete(plan.dag()).unwrap();
+            // deterministic reduction in base-id order, like a barrier does
+            let sharded: f32 = (0..dag.len())
+                .map(|i| acc[i].take("v").expect("every node ran once"))
+                .sum();
+            assert_eq!(
+                sharded.to_bits(),
+                serial.to_bits(),
+                "{mode:?} {policy:?}: sharded checksum must be bit-identical"
+            );
+            for d in 0..topo.len() {
+                assert!(
+                    out.device_peaks[d] <= ledgers[d],
+                    "{mode:?} {policy:?} d{d}: {} > {}",
+                    out.device_peaks[d],
+                    ledgers[d]
+                );
+            }
+        }
+    }
+}
+
+/// A deliberately tiny device makes the plan un-runnable on real
+/// hardware: the replay check rejects it instead of letting admission
+/// pass a budget the device cannot hold.
+#[test]
+fn tiny_device_ledgers_are_rejected_by_the_replay_check() {
+    let dag = base_dag(Mode::RowHybrid);
+    let mut tiny = DeviceModel::rtx3090();
+    tiny.hbm_bytes = 64; // 60 usable bytes — nothing real fits
+    let topo = Topology::new(vec![tiny], LinkKind::Pcie);
+    let plan = ShardPlan::build(&dag, &topo, PartitionPolicy::Blocked, topo.budgets(0)).unwrap();
+    let err = plan.check_budgets().unwrap_err();
+    assert!(
+        err.to_string().contains("exceeds"),
+        "want a replay-vs-ledger error, got: {err}"
+    );
 }
 
 #[test]
