@@ -7,7 +7,7 @@
 
 RUST_MANIFEST := rust/Cargo.toml
 
-.PHONY: build test artifacts bench-hotpath bench-hotpath-quick bench-sched bench-sched-quick bench-shard bench-shard-quick lint
+.PHONY: build test artifacts ir-dump bench-hotpath bench-hotpath-quick bench-sched bench-sched-quick bench-shard bench-shard-quick lint
 
 build:
 	cargo build --release --manifest-path $(RUST_MANIFEST)
@@ -17,6 +17,17 @@ test:
 
 artifacts:
 	cd python/compile && python3 aot.py --out-dir ../../rust/artifacts
+
+# Lower + validate() the row-program IR for all 4 modes and print it as
+# JSON (docs/ROWIR.md).  Uses rust/artifacts when present, else the
+# built-in demo bundle — so it runs in CI with no Python toolchain and
+# fails fast on any lowering regression.
+ir-dump:
+	@if [ -f rust/artifacts/manifest.json ]; then \
+		cargo run --release --manifest-path $(RUST_MANIFEST) -- plan --dump-ir --artifacts rust/artifacts; \
+	else \
+		cargo run --release --manifest-path $(RUST_MANIFEST) -- plan --dump-ir; \
+	fi
 
 # Full hot-path measurement; writes BENCH_l3_hotpath.json at the repo
 # root (live-step benches skip gracefully when artifacts are absent).

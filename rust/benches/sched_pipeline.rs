@@ -19,7 +19,7 @@ use lr_cnn::coordinator::{Mode, Trainer};
 use lr_cnn::data::SyntheticCorpus;
 use lr_cnn::metrics::bench;
 use lr_cnn::runtime::Runtime;
-use lr_cnn::sched::{self, Dag, NodeKind, Policy, SchedConfig, Slot};
+use lr_cnn::sched::{self, Graph, NodeKind, Policy, SchedConfig, Slot};
 
 use std::fmt::Write as _;
 
@@ -39,8 +39,8 @@ fn row_work(seed: u64, flops: usize) -> f32 {
 }
 
 /// The hybrid step shape: FP rows ∥ → head → BP rows ∥ → reduce.
-fn synth_dag() -> Dag {
-    let mut dag = Dag::new();
+fn synth_dag() -> Graph {
+    let mut dag = Graph::new();
     let fp: Vec<_> = (0..ROWS)
         .map(|r| dag.push(NodeKind::Row, format!("fp.row{r}"), vec![], ROW_BYTES))
         .collect();
@@ -53,7 +53,7 @@ fn synth_dag() -> Dag {
 }
 
 /// One full "step" over the DAG via the scheduler; returns the checksum.
-fn pipelined_step(dag: &Dag, cfg: &SchedConfig, flops: usize) -> (f32, u64) {
+fn pipelined_step(dag: &Graph, cfg: &SchedConfig, flops: usize) -> (f32, u64) {
     let fp_out: Vec<Slot<f32>> = Slot::many(ROWS);
     let bp_out: Vec<Slot<f32>> = Slot::many(ROWS);
     let head_out: Slot<f32> = Slot::new();

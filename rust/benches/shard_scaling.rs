@@ -19,7 +19,8 @@
 
 use lr_cnn::memory::DeviceModel;
 use lr_cnn::metrics::bench;
-use lr_cnn::sched::{Dag, NodeId, NodeKind, Slot};
+use lr_cnn::rowir::{Graph, NodeId, NodeKind};
+use lr_cnn::sched::Slot;
 use lr_cnn::shard::{
     modeled_makespan, LinkKind, PartitionPolicy, Partitioner, ShardPlan, ShardedExecutor,
     Topology,
@@ -46,8 +47,8 @@ fn row_work(seed: u64, flops: usize) -> f32 {
 
 /// The hybrid step shape: FP rows ∥ → head → BP rows ∥ → reduce, with
 /// parked row outputs (the admission ledger's interim-residency currency).
-fn synth_dag() -> Dag {
-    let mut dag = Dag::new();
+fn synth_dag() -> Graph {
+    let mut dag = Graph::new();
     let fp: Vec<NodeId> = (0..ROWS)
         .map(|r| {
             dag.push_out(NodeKind::Row, format!("fp.row{r}"), vec![], ROW_BYTES, OUT_BYTES)
@@ -69,21 +70,18 @@ fn synth_dag() -> Dag {
     dag
 }
 
-/// One full "step" over the sharded DAG; returns the checksum and the
-/// per-device admission peaks.
-fn sharded_step(
-    dag: &Dag,
-    plan: &ShardPlan,
-    exec: &ShardedExecutor,
-    flops: usize,
-) -> (f32, Vec<u64>) {
+/// One full "step" over the sharded graph; returns the checksum and the
+/// per-device admission peaks.  The runner receives sharded node ids, so
+/// per-node context comes off `plan.graph()` (base labels survive the
+/// transfer rewrite; transfers never reach the runner).
+fn sharded_step(plan: &ShardPlan, exec: &ShardedExecutor, flops: usize) -> (f32, Vec<u64>) {
     let fp_out: Vec<Slot<f32>> = Slot::many(ROWS);
     let bp_out: Vec<Slot<f32>> = Slot::many(ROWS);
     let head_out: Slot<f32> = Slot::new();
     let result: Slot<f32> = Slot::new();
     let outcome = exec
         .run_step(plan, |id| {
-            let label = dag.node(id).label.as_str();
+            let label = plan.graph().node(id).label.as_str();
             if let Some(r) = label.strip_prefix("fp.row") {
                 let r: usize = r.parse().expect("row index");
                 fp_out[r].put("fp", row_work(r as u64, flops))
@@ -211,7 +209,7 @@ fn main() {
             makespans.push((policy_name, makespan_s));
 
             // determinism + ledger checks before timing
-            let (sum, peaks) = sharded_step(&dag, &plan, &exec, flops);
+            let (sum, peaks) = sharded_step(&plan, &exec, flops);
             assert_eq!(
                 sum.to_bits(),
                 reference.to_bits(),
@@ -232,7 +230,7 @@ fn main() {
                 warmup,
                 iters,
                 || {
-                    let (sum, peaks) = sharded_step(&dag, &plan, &exec, flops);
+                    let (sum, peaks) = sharded_step(&plan, &exec, flops);
                     for (m, p) in max_peaks.iter_mut().zip(&peaks) {
                         *m = (*m).max(*p);
                     }

@@ -7,10 +7,12 @@
 //! accumulating parameter gradients across rows.  Python is never invoked —
 //! only the AOT artifacts are.
 //!
-//! Steps run serially by default; `Trainer::set_sched` switches to the
-//! pipelined row scheduler (`crate::sched`), which executes the same plan
-//! as a row dependency DAG on worker threads with bit-identical results
-//! (docs/SCHEDULER.md).
+//! The step's dataflow is one `rowir::RowProgram` (docs/ROWIR.md); the
+//! trainer drives it.  Serial (the default) interprets the program in
+//! node-id order (`rowir::interp`); `Trainer::set_sched` switches to the
+//! pipelined row scheduler (`crate::sched`) or the multi-device sharded
+//! executor (`crate::shard`), which execute the *same* program on worker
+//! threads with bit-identical results (docs/SCHEDULER.md).
 //!
 //! Four execution modes mirror the paper's Fig. 11 branches plus Base:
 //! * [`Mode::Base`]      — column-centric oracle (1 executable/step)
@@ -25,4 +27,6 @@ pub mod trainer;
 
 pub use optim::{Optimizer, OptimizerKind};
 pub use params::ParamSet;
-pub use trainer::{naive_row_extents, Mode, PipePlan, ShardState, StepPlan, StepStats, Trainer};
+pub use trainer::{
+    naive_row_extents, train_loop, Mode, ShardState, StepPlan, StepStats, Trainer,
+};

@@ -2,72 +2,59 @@
 //!
 //! ## Step-plan architecture (docs/HOTPATH.md)
 //!
-//! All per-row bookkeeping that used to be re-derived every step — manifest
-//! name formatting, `Segment`/`TpsPlan` clones, tracker-key strings — is
-//! now computed **once** in [`StepPlan::build`] when the [`Trainer`] is
-//! constructed: executable names resolve to integer [`ExecHandle`]s, row
-//! intervals are copied out of the manifest, and every tracker buffer/phase
-//! name is interned to a [`BufId`].  `Trainer::step` then walks the
-//! prebuilt table performing **zero `format!`/`String` allocations** and,
-//! thanks to [`TensorView`], zero input-slab copies.
+//! All per-row bookkeeping that used to be re-derived every step —
+//! manifest name formatting, `Segment`/`TpsPlan` clones — is computed
+//! **once** in [`StepPlan::build`] when the [`Trainer`] is constructed:
+//! executable names resolve to integer [`ExecHandle`]s and row intervals
+//! are copied out of the manifest.  Every step then walks prebuilt tables
+//! performing **zero `format!`/`String` allocations** and, thanks to
+//! [`TensorView`], zero input-slab copies.
 //!
-//! ## Serial vs pipelined execution (docs/SCHEDULER.md)
+//! ## One program, three drivers (docs/ROWIR.md)
 //!
-//! Both paths run against an [`ExecBackend`] (the [`Runtime`] in
-//! production).  [`sched::Policy::Serial`] walks the plan row-by-row on
-//! the caller's thread with tracker byte accounting — today's default.
-//! [`sched::Policy::Pipelined`] lowers the plan once into a row dependency
-//! [`Dag`] ([`StepPlan::lower`]) and executes it on a worker pool under
-//! memory admission.  Results are **bit-identical**: workers only produce
-//! per-row outputs into [`Slot`]s; every floating-point reduction
-//! (gradient accumulation, δ-accumulation, H-concat) happens inside a
-//! barrier node in exactly the serial loop's order.
+//! The step's dataflow is encoded exactly once: `rowir::lower` compiles
+//! the manifest + [`Mode`] into a [`RowProgram`] whose nodes carry their
+//! [`Task`]s.  The trainer is a set of *drivers* over that program:
+//!
+//! * [`sched::Policy::Serial`] — [`StepPlan::step_serial`] runs the
+//!   `rowir::interp` interpreter: nodes execute in ascending `NodeId`
+//!   order on the caller's thread.  This **is** the serial schedule;
+//!   there is no hand-written serial step path anymore.
+//! * [`sched::Policy::Pipelined`] — [`StepPlan::step_pipelined`] runs the
+//!   same program on a worker pool under memory admission (`sched::run`),
+//!   or on the persistent multi-device pool when a [`ShardState`] is
+//!   configured.
+//!
+//! Results are **bit-identical** across drivers by construction: every
+//! driver dispatches the same tasks to the same handlers; per-row
+//! handlers write [`Slot`]s, and every floating-point reduction (gradient
+//! accumulation, δ-accumulation, H-concat) happens inside a barrier task
+//! that folds rows in the interpreter's (= id = serial) order.
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::data::SyntheticCorpus;
 use crate::error::{Error, Result};
-use crate::memory::{BufId, Tracker};
+use crate::rowir::{self, interp, InterpOutcome, RowProgram, Task};
 use crate::runtime::manifest::Manifest;
 use crate::runtime::{ExecBackend, ExecHandle, Runtime, Tensor, TensorView};
-use crate::sched::{self, Dag, ExecOutcome, NodeId, NodeKind, Policy, SchedConfig, Slot, Trace};
+use crate::sched::{self, ExecOutcome, Policy, SchedConfig, Slot, Trace};
 use crate::shard::{self, ShardPlan, ShardedExecutor};
 
+pub use crate::rowir::{naive_row_extents, Mode};
+
 use super::{Optimizer, ParamSet};
-
-/// Execution strategy for the live path.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Mode {
-    /// column-centric single-executable step (the paper's Base)
-    Base,
-    /// OverL-H: segmented halo slabs, checkpoint after pool2
-    RowHybrid,
-    /// 2PS forward (boundary caches handed between rows) + row-slab BP
-    Tps,
-    /// broken w/o-sharing ablation (Fig. 11's diverging branch)
-    Naive,
-}
-
-impl Mode {
-    pub fn label(&self) -> &'static str {
-        match self {
-            Mode::Base => "Base",
-            Mode::RowHybrid => "OverL-H",
-            Mode::Tps => "2PS",
-            Mode::Naive => "naive(w/o sharing)",
-        }
-    }
-}
 
 /// Per-step observability.
 #[derive(Debug, Clone)]
 pub struct StepStats {
     pub loss: f32,
-    /// coordinator-held activation bytes at the step's peak.  Serial: the
-    /// tracker's measured ledger.  Pipelined: the admission ledger's peak
-    /// of projected per-node + parked handoff bytes (what admission
-    /// actually bounds); under sharding, the worst single-device peak.
+    /// Projected activation bytes at the step's peak, in the admission
+    /// currency (working sets + parked handoff slots).  Serial: the
+    /// interpreter's replay-ledger peak — exactly the single-device
+    /// `memory::sim` replay of the program.  Pipelined: the admission
+    /// ledger's peak; under sharding, the worst single-device peak.
     pub peak_bytes: u64,
     /// Per-device admission peaks (`vec![peak_bytes]` off the sharded
     /// path).
@@ -77,29 +64,6 @@ pub struct StepStats {
     pub executions: u64,
 }
 
-/// Row extents for the naive equal-split ablation.
-///
-/// The AOT artifacts are compiled for *equal* slabs (`aot.py` asserts
-/// `h % n_rows == 0`), so an uneven split is a planning error — the seed
-/// code silently truncated the remainder rows instead, which both
-/// under-trained and disagreed with the compiled shapes.
-pub fn naive_row_extents(h: usize, n: usize) -> Result<Vec<[usize; 2]>> {
-    if n == 0 || h == 0 {
-        return Err(Error::InfeasiblePlan(format!(
-            "naive split of H={h} into n={n} rows"
-        )));
-    }
-    if h % n != 0 {
-        return Err(Error::InfeasiblePlan(format!(
-            "naive(w/o sharing) requires n | H: H={h}, n={n} leaves remainder {} — \
-             the AOT artifacts are compiled for equal slabs",
-            h % n
-        )));
-    }
-    let rh = h / n;
-    Ok((0..n).map(|r| [r * rh, (r + 1) * rh]).collect())
-}
-
 /// One row of a segment in the prebuilt execution table.
 #[derive(Debug, Clone)]
 struct RowPlan {
@@ -107,11 +71,6 @@ struct RowPlan {
     bwd: ExecHandle,
     in_iv: [usize; 2],
     out_iv: [usize; 2],
-    fp_phase: BufId,   // "fp.{seg}.row{r}"
-    bp_phase: BufId,   // "bp.{seg}.row{r}"
-    slab_id: BufId,    // "fp.{seg}.slab{r}"
-    z_id: BufId,       // "fp.{seg}.z{r}"
-    bp_slab_id: BufId, // "bp.{seg}.slab{r}"
 }
 
 #[derive(Debug, Clone)]
@@ -119,30 +78,23 @@ struct SegPlan {
     param_lo: usize,
     param_hi: usize,
     rows: Vec<RowPlan>,
-    out_id: BufId, // "fp.{seg}.out"
 }
 
 #[derive(Debug, Clone)]
 struct TpsRowPlan {
     fwd: ExecHandle,
     own_iv: [usize; 2],
-    phase: BufId,          // "fp.tps.row{r}"
-    own_id: BufId,         // "tps.own{r}"
-    z_id: BufId,           // "tps.z{r}"
-    cache_ids: Vec<BufId>, // "tps.cache{r}.{i}"
 }
 
 #[derive(Debug, Clone)]
 struct TpsPlan {
     rows: Vec<TpsRowPlan>,
-    zl_id: BufId, // "tps.zL"
 }
 
 #[derive(Debug, Clone)]
 struct BasePlan {
     step: ExecHandle,
     fwd: ExecHandle,
-    phase: BufId, // "base.step"
     n_conv: usize,
 }
 
@@ -150,9 +102,6 @@ struct BasePlan {
 struct HybridPlan {
     segs: Vec<SegPlan>, // [segA (below checkpoint), segB (above)]
     head: ExecHandle,
-    head_phase: BufId, // "head"
-    dzl_id: BufId,     // "dzL"
-    dzck_id: BufId,    // "dzck"
     n_conv: usize,
     /// `Some` for [`Mode::Tps`]: forward runs 2PS over the full depth
     tps: Option<TpsPlan>,
@@ -170,9 +119,6 @@ struct NaiveRowPlan {
 struct NaivePlan {
     rows: Vec<NaiveRowPlan>,
     head: ExecHandle,
-    fp_phase: BufId, // "naive.fp"
-    bp_phase: BufId, // "naive.bp"
-    zl_id: BufId,    // "naive.zL"
     n_conv: usize,
 }
 
@@ -187,24 +133,27 @@ enum PlanKind {
     NaiveInfeasible(String),
 }
 
-/// Prebuilt execution table for one [`Mode`]: everything `step` needs,
-/// resolved once.
+/// Prebuilt execution table for one [`Mode`]: everything the task
+/// handlers need (executables, row geometry, parameter ranges), resolved
+/// once.  The *dataflow* is not here — that is the [`RowProgram`] the
+/// `rowir` lowering emits; this table is what the program's tasks index
+/// into.
 #[derive(Debug, Clone)]
 pub struct StepPlan {
     kind: PlanKind,
+    mode: Mode,
 }
 
 impl StepPlan {
-    /// Resolve executables, row geometry and tracker IDs for `mode`.
-    /// String formatting and name lookup happen here — never in `step`.
-    pub fn build(man: &Manifest, mode: Mode, tracker: &mut Tracker) -> Result<StepPlan> {
+    /// Resolve executables and row geometry for `mode`.  String
+    /// formatting and name lookup happen here — never on the step path.
+    pub fn build(man: &Manifest, mode: Mode) -> Result<StepPlan> {
         let h = |name: &str| -> Result<ExecHandle> { man.index_of(name).map(ExecHandle) };
         let n_conv = man.model.n_conv_params;
         let kind = match mode {
             Mode::Base => PlanKind::Base(BasePlan {
                 step: h("base_step")?,
                 fwd: h("base_fwd")?,
-                phase: tracker.intern("base.step"),
                 n_conv,
             }),
             Mode::RowHybrid | Mode::Tps => {
@@ -223,52 +172,29 @@ impl StepPlan {
                             bwd: h(&format!("{}_row{r}_bwd", seg.name))?,
                             in_iv: row.in_iv,
                             out_iv: row.out_iv,
-                            fp_phase: tracker.intern(format!("fp.{}.row{r}", seg.name)),
-                            bp_phase: tracker.intern(format!("bp.{}.row{r}", seg.name)),
-                            slab_id: tracker.intern(format!("fp.{}.slab{r}", seg.name)),
-                            z_id: tracker.intern(format!("fp.{}.z{r}", seg.name)),
-                            bp_slab_id: tracker.intern(format!("bp.{}.slab{r}", seg.name)),
                         });
                     }
                     segs.push(SegPlan {
                         param_lo: seg.param_lo,
                         param_hi: seg.param_hi,
                         rows,
-                        out_id: tracker.intern(format!("fp.{}.out", seg.name)),
                     });
                 }
                 let tps = if mode == Mode::Tps {
                     let mut rows = Vec::with_capacity(man.plan.tps.rows.len());
                     for (r, row) in man.plan.tps.rows.iter().enumerate() {
-                        let fwd = h(&format!("tps_row{r}_fwd"))?;
-                        // outputs are [z, caches...]: cache count from the
-                        // executable signature, ids interned up front
-                        let n_caches =
-                            man.executables[fwd.index()].outputs.len().saturating_sub(1);
                         rows.push(TpsRowPlan {
-                            fwd,
+                            fwd: h(&format!("tps_row{r}_fwd"))?,
                             own_iv: row.own_iv,
-                            phase: tracker.intern(format!("fp.tps.row{r}")),
-                            own_id: tracker.intern(format!("tps.own{r}")),
-                            z_id: tracker.intern(format!("tps.z{r}")),
-                            cache_ids: (0..n_caches)
-                                .map(|i| tracker.intern(format!("tps.cache{r}.{i}")))
-                                .collect(),
                         });
                     }
-                    Some(TpsPlan {
-                        rows,
-                        zl_id: tracker.intern("tps.zL"),
-                    })
+                    Some(TpsPlan { rows })
                 } else {
                     None
                 };
                 PlanKind::Hybrid(HybridPlan {
                     segs,
                     head: h("head")?,
-                    head_phase: tracker.intern("head"),
-                    dzl_id: tracker.intern("dzL"),
-                    dzck_id: tracker.intern("dzck"),
                     n_conv,
                     tps,
                 })
@@ -293,9 +219,6 @@ impl StepPlan {
                         PlanKind::Naive(NaivePlan {
                             rows,
                             head: h("head")?,
-                            fp_phase: tracker.intern("naive.fp"),
-                            bp_phase: tracker.intern("naive.bp"),
-                            zl_id: tracker.intern("naive.zL"),
                             n_conv,
                         })
                     }
@@ -303,7 +226,12 @@ impl StepPlan {
                 }
             }
         };
-        Ok(StepPlan { kind })
+        Ok(StepPlan { kind, mode })
+    }
+
+    /// The mode this table (and its program) was built for.
+    pub fn mode(&self) -> Mode {
+        self.mode
     }
 
     /// Every executable the plan will run — what the trainer warm-compiles
@@ -338,411 +266,128 @@ impl StepPlan {
         out
     }
 
-    /// Lower the plan into its row dependency DAG (the `sched` tentpole):
-    /// no edges between OverL/naive rows, chain edges between consecutive
-    /// 2PS rows, barrier nodes at the checkpoint/segment boundaries, the
-    /// FP→BP boundary (FC head) and the deterministic reductions.
-    ///
-    /// Per-node byte estimates come from the manifest executable
-    /// signatures (staged input slab + produced outputs; always-resident
-    /// parameters ξ excluded) — the admission-control currency.
+    /// Lower the plan's mode into its row program — a thin delegation to
+    /// [`rowir::lower`], the single dataflow encoding.
     ///
     /// Errors with [`Error::InfeasiblePlan`] for a naive-infeasible plan.
-    pub fn lower(&self, man: &Manifest) -> Result<PipePlan> {
-        let mut dag = Dag::new();
-        let mut tasks: Vec<Task> = Vec::new();
-        match &self.kind {
-            PlanKind::Base(bp) => {
-                add(
-                    &mut dag,
-                    &mut tasks,
-                    NodeKind::Row,
-                    "base.step".to_string(),
-                    vec![],
-                    est_fwd(man, bp.step),
-                    0, // terminal: its output is the step result, not interim
-                    Task::BaseStep,
-                );
+    pub fn lower(&self, man: &Manifest) -> Result<RowProgram> {
+        if let PlanKind::NaiveInfeasible(msg) = &self.kind {
+            return Err(Error::InfeasiblePlan(msg.clone()));
+        }
+        rowir::lower(man, self.mode)
+    }
+
+    /// Handoff cells for one step of this plan.
+    fn make_cells(&self) -> Result<Cells> {
+        Ok(match &self.kind {
+            PlanKind::Base(_) => Cells::Base(Slot::new()),
+            PlanKind::Hybrid(hp) => Cells::Hybrid(HybridCells::new(hp)),
+            PlanKind::Naive(np) => Cells::Naive(NaiveCells::new(np)),
+            PlanKind::NaiveInfeasible(msg) => {
+                return Err(Error::InfeasiblePlan(msg.clone()))
             }
-            PlanKind::Hybrid(hp) => {
-                let name_of = |i: usize| -> String {
-                    man.plan
-                        .segments
-                        .get(i)
-                        .map(|s| s.name.clone())
-                        .unwrap_or_else(|| format!("seg{i}"))
-                };
-                let (seg0, seg1) = (name_of(0), name_of(1));
-                // ---- FP segment A (OverL rows: edge-free) ----
-                let fp_a: Vec<NodeId> = hp.segs[0]
-                    .rows
-                    .iter()
-                    .enumerate()
-                    .map(|(r, rp)| {
-                        add(
-                            &mut dag,
-                            &mut tasks,
-                            NodeKind::Row,
-                            format!("fp.{seg0}.row{r}"),
-                            vec![],
-                            est_fwd(man, rp.fwd),
-                            est_out0(man, rp.fwd), // z parked until the ck concat
-                            Task::FpRow { seg: 0, row: r },
-                        )
-                    })
-                    .collect();
-                let zck_bytes: u64 =
-                    hp.segs[0].rows.iter().map(|rp| est_out0(man, rp.fwd)).sum();
-                // checkpoint barrier: concat of segment A's rows
-                let ck = add(
-                    &mut dag,
-                    &mut tasks,
-                    NodeKind::Barrier,
-                    "barrier.ck".to_string(),
-                    fp_a,
-                    zck_bytes,
-                    zck_bytes, // the checkpoint lives until its last reader (segB reduce)
-                    Task::CkBarrier,
-                );
-                // ---- FP upper half: 2PS chain or segment B rows ----
-                let (zl_deps, zl_bytes) = match &hp.tps {
-                    Some(tp) => {
-                        let mut rows: Vec<NodeId> = Vec::with_capacity(tp.rows.len());
-                        for (r, rp) in tp.rows.iter().enumerate() {
-                            // the weak dependency: row r waits only on row
-                            // r−1's boundary-cache handoff
-                            let deps = rows.last().map(|&p| vec![p]).unwrap_or_default();
-                            let caches_in = if r > 0 {
-                                tp.rows[r - 1].cache_ids.len()
-                            } else {
-                                0
-                            };
-                            rows.push(add(
-                                &mut dag,
-                                &mut tasks,
-                                NodeKind::TpsRow,
-                                format!("fp.tps.row{r}"),
-                                deps,
-                                est_tps(man, rp.fwd, caches_in),
-                                // z + boundary caches parked until consumed
-                                est_outs(man, rp.fwd),
-                                Task::TpsRow { row: r },
-                            ));
-                        }
-                        let bytes: u64 =
-                            tp.rows.iter().map(|rp| est_out0(man, rp.fwd)).sum();
-                        // zL depends on *every* row (the concat consumes
-                        // every z slab), not just the chain tail — the
-                        // extra edges are transitively implied, but they
-                        // make the DAG's consumer structure match the data
-                        // flow so parked z grants release at the concat
-                        (rows, bytes)
-                    }
-                    None => {
-                        let ids: Vec<NodeId> = hp.segs[1]
-                            .rows
-                            .iter()
-                            .enumerate()
-                            .map(|(r, rp)| {
-                                add(
-                                    &mut dag,
-                                    &mut tasks,
-                                    NodeKind::Row,
-                                    format!("fp.{seg1}.row{r}"),
-                                    vec![ck],
-                                    est_fwd(man, rp.fwd),
-                                    est_out0(man, rp.fwd), // z parked until zL
-                                    Task::FpRow { seg: 1, row: r },
-                                )
-                            })
-                            .collect();
-                        let bytes: u64 =
-                            hp.segs[1].rows.iter().map(|rp| est_out0(man, rp.fwd)).sum();
-                        (ids, bytes)
-                    }
-                };
-                let zl = add(
-                    &mut dag,
-                    &mut tasks,
-                    NodeKind::Barrier,
-                    "barrier.zL".to_string(),
-                    zl_deps,
-                    zl_bytes,
-                    zl_bytes, // z^L parked until the head consumes it
-                    Task::ZlBarrier,
-                );
-                // FP→BP boundary: the FC head
-                let head = add(
-                    &mut dag,
-                    &mut tasks,
-                    NodeKind::Barrier,
-                    "head".to_string(),
-                    vec![zl],
-                    est_fwd(man, hp.head),
-                    // loss + dzL + head grads parked until the segB reduce
-                    est_outs(man, hp.head),
-                    Task::Head,
-                );
-                // ---- BP segment B rows (independent given head + ck) ----
-                let bp_b: Vec<NodeId> = hp.segs[1]
-                    .rows
-                    .iter()
-                    .enumerate()
-                    .map(|(r, rp)| {
-                        add(
-                            &mut dag,
-                            &mut tasks,
-                            NodeKind::Row,
-                            format!("bp.{seg1}.row{r}"),
-                            vec![head, ck],
-                            est_bwd(man, rp.bwd),
-                            est_outs(man, rp.bwd), // row grads + dx parked until reduce
-                            Task::BpRowB { row: r },
-                        )
-                    })
-                    .collect();
-                let mut red_b_deps = bp_b;
-                red_b_deps.extend([head, ck]);
-                let red_b = add(
-                    &mut dag,
-                    &mut tasks,
-                    NodeKind::Barrier,
-                    format!("barrier.bp.{seg1}"),
-                    red_b_deps,
-                    zck_bytes, // dz_ck accumulator
-                    zck_bytes, // dz_ck parked until the segA rows consume it
-                    Task::ReduceB,
-                );
-                // ---- BP segment A rows ----
-                let bp_a: Vec<NodeId> = hp.segs[0]
-                    .rows
-                    .iter()
-                    .enumerate()
-                    .map(|(r, rp)| {
-                        add(
-                            &mut dag,
-                            &mut tasks,
-                            NodeKind::Row,
-                            format!("bp.{seg0}.row{r}"),
-                            vec![red_b],
-                            est_bwd(man, rp.bwd),
-                            est_outs(man, rp.bwd), // row grads parked until reduce
-                            Task::BpRowA { row: r },
-                        )
-                    })
-                    .collect();
-                let mut red_a_deps = bp_a;
-                red_a_deps.push(red_b);
-                add(
-                    &mut dag,
-                    &mut tasks,
-                    NodeKind::Barrier,
-                    format!("barrier.bp.{seg0}"),
-                    red_a_deps,
-                    0,
-                    0, // terminal
-                    Task::ReduceA,
-                );
+        })
+    }
+
+    /// The serial driver: one training step by interpreting `program` in
+    /// ascending `NodeId` order on the caller's thread (`rowir::interp`).
+    /// This is the reference schedule the other drivers are bit-identical
+    /// to.  Returns the loss, the gradients and the interpreter outcome
+    /// (whose `peak_bytes` is the program's serial replay-ledger peak).
+    pub fn step_serial(
+        &self,
+        ex: &dyn ExecBackend,
+        program: &RowProgram,
+        params: &ParamSet,
+        x: &Tensor,
+        y1h: &Tensor,
+    ) -> Result<(f32, Vec<Tensor>, InterpOutcome)> {
+        let cells = self.make_cells()?;
+        let outcome = interp::run(program, |_, task| {
+            run_task(ex, &self.kind, params, x, y1h, &cells, task)
+        })?;
+        let (loss, grads) = take_result(&cells)?;
+        Ok((loss, grads, outcome))
+    }
+
+    /// The pipelined/sharded driver: the same program on a worker pool
+    /// under memory admission — the per-step `sched::run` scope without
+    /// sharding, or the persistent [`ShardedExecutor`] (per-device
+    /// ledgers, transfer nodes) when a [`ShardState`] is supplied.
+    /// Bit-exact with [`StepPlan::step_serial`] either way: every
+    /// reduction happens in a barrier task in id order; workers only
+    /// produce per-row outputs, and transfers carry data, not arithmetic.
+    pub fn step_pipelined(
+        &self,
+        ex: &dyn ExecBackend,
+        program: &RowProgram,
+        params: &ParamSet,
+        cfg: &SchedConfig,
+        shard: Option<&ShardState>,
+        x: &Tensor,
+        y1h: &Tensor,
+    ) -> Result<(f32, Vec<Tensor>, ExecOutcome)> {
+        let cells = self.make_cells()?;
+        let outcome = match shard {
+            Some(ss) => {
+                let graph = ss.plan.graph();
+                ss.exec.run_step(&ss.plan, |id| {
+                    run_task(ex, &self.kind, params, x, y1h, &cells, graph.node(id).task)
+                })
             }
-            PlanKind::Naive(np) => {
-                let fp: Vec<NodeId> = np
-                    .rows
-                    .iter()
-                    .enumerate()
-                    .map(|(r, rp)| {
-                        add(
-                            &mut dag,
-                            &mut tasks,
-                            NodeKind::Row,
-                            format!("naive.fp.row{r}"),
-                            vec![],
-                            est_fwd(man, rp.fwd),
-                            est_out0(man, rp.fwd), // z parked until the zL concat
-                            Task::NaiveFp { row: r },
-                        )
-                    })
-                    .collect();
-                let zl_bytes: u64 = np.rows.iter().map(|rp| est_out0(man, rp.fwd)).sum();
-                let zl = add(
-                    &mut dag,
-                    &mut tasks,
-                    NodeKind::Barrier,
-                    "barrier.naive.zL".to_string(),
-                    fp,
-                    zl_bytes,
-                    zl_bytes, // z^L parked until the head consumes it
-                    Task::NaiveZl,
-                );
-                let head = add(
-                    &mut dag,
-                    &mut tasks,
-                    NodeKind::Barrier,
-                    "naive.head".to_string(),
-                    vec![zl],
-                    est_fwd(man, np.head),
-                    est_outs(man, np.head), // loss + dzL + head grads until reduce
-                    Task::NaiveHead,
-                );
-                let bp: Vec<NodeId> = np
-                    .rows
-                    .iter()
-                    .enumerate()
-                    .map(|(r, rp)| {
-                        add(
-                            &mut dag,
-                            &mut tasks,
-                            NodeKind::Row,
-                            format!("naive.bp.row{r}"),
-                            vec![head],
-                            est_bwd(man, rp.bwd),
-                            est_outs(man, rp.bwd), // row grads parked until reduce
-                            Task::NaiveBp { row: r },
-                        )
-                    })
-                    .collect();
-                let mut deps = bp;
-                deps.push(head);
-                add(
-                    &mut dag,
-                    &mut tasks,
-                    NodeKind::Barrier,
-                    "barrier.naive.reduce".to_string(),
-                    deps,
-                    0,
-                    0, // terminal
-                    Task::NaiveReduce,
-                );
+            None => {
+                let graph = program.graph();
+                sched::run(graph, cfg, |id| {
+                    run_task(ex, &self.kind, params, x, y1h, &cells, graph.node(id).task)
+                })
+            }
+        }?;
+        let (loss, grads) = take_result(&cells)?;
+        Ok((loss, grads, outcome))
+    }
+
+    /// Forward-only pass producing z^L: interpret the z^L barrier's
+    /// dependency closure — for 2PS that is the chain alone (the
+    /// checkpoint half is skipped, exactly as the old hand-written
+    /// forward path did) — and take the barrier's output.  The same
+    /// handlers as a full step run, so the forward dataflow is not
+    /// encoded a second time.  Base plans use the fused forward
+    /// executable instead (no z^L barrier in their single-node program).
+    pub fn forward_zl(
+        &self,
+        ex: &dyn ExecBackend,
+        program: &RowProgram,
+        params: &ParamSet,
+        x: &Tensor,
+    ) -> Result<Tensor> {
+        let zl_task = match &self.kind {
+            PlanKind::Hybrid(_) => Task::ZlBarrier,
+            PlanKind::Naive(_) => Task::NaiveZl,
+            PlanKind::Base(_) => {
+                return Err(Error::Sched(
+                    "forward_zl: base plans use the fused forward executable".into(),
+                ))
             }
             PlanKind::NaiveInfeasible(msg) => {
-                return Err(Error::InfeasiblePlan(msg.clone()));
+                return Err(Error::InfeasiblePlan(msg.clone()))
             }
+        };
+        let zl = program
+            .find_task(zl_task)
+            .ok_or_else(|| Error::Sched("program has no z^L barrier".into()))?;
+        let cells = self.make_cells()?;
+        // FP tasks never read the labels; the head (their only consumer)
+        // is outside the z^L closure
+        let y_dummy = Tensor::zeros(&[1]);
+        interp::run_closure(program, zl, |_, task| {
+            run_task(ex, &self.kind, params, x, &y_dummy, &cells, task)
+        })?;
+        match &cells {
+            Cells::Hybrid(c) => c.zl.take("zl"),
+            Cells::Naive(c) => c.zl.take("naive.zl"),
+            Cells::Base(_) => unreachable!("rejected above"),
         }
-        debug_assert_eq!(dag.len(), tasks.len());
-        Ok(PipePlan { dag, tasks })
     }
-}
-
-/// What a DAG node does — the executor's `NodeId` indexes both
-/// `PipePlan::dag` and `PipePlan::tasks`.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum Task {
-    BaseStep,
-    FpRow { seg: usize, row: usize },
-    CkBarrier,
-    TpsRow { row: usize },
-    ZlBarrier,
-    Head,
-    BpRowB { row: usize },
-    ReduceB,
-    BpRowA { row: usize },
-    ReduceA,
-    NaiveFp { row: usize },
-    NaiveZl,
-    NaiveHead,
-    NaiveBp { row: usize },
-    NaiveReduce,
-}
-
-/// A [`StepPlan`] lowered to its row dependency DAG plus the node→work
-/// mapping the pipelined step executes.
-#[derive(Debug, Clone)]
-pub struct PipePlan {
-    dag: Dag,
-    tasks: Vec<Task>,
-}
-
-impl PipePlan {
-    pub fn dag(&self) -> &Dag {
-        &self.dag
-    }
-}
-
-fn add(
-    dag: &mut Dag,
-    tasks: &mut Vec<Task>,
-    kind: NodeKind,
-    label: String,
-    deps: Vec<NodeId>,
-    est_bytes: u64,
-    out_bytes: u64,
-    task: Task,
-) -> NodeId {
-    tasks.push(task);
-    dag.push_out(kind, label, deps, est_bytes, out_bytes)
-}
-
-fn shape_bytes(shape: &[usize]) -> u64 {
-    (shape.iter().product::<usize>() * 4) as u64
-}
-
-/// Projected bytes of a forward-style node: staged input slab + outputs.
-fn est_fwd(man: &Manifest, h: ExecHandle) -> u64 {
-    man.executables
-        .get(h.index())
-        .map(|e| {
-            let slab = e.inputs.first().map(|s| shape_bytes(s)).unwrap_or(0);
-            let outs: u64 = e.outputs.iter().map(|s| shape_bytes(s)).sum();
-            slab + outs
-        })
-        .unwrap_or(0)
-}
-
-/// Projected bytes of a 2PS row: own slab + the boundary caches staged
-/// from the predecessor row + outputs (z + this row's caches).  The cache
-/// inputs sit between the slab and the parameters in the signature, so
-/// counting only `in0` (as [`est_fwd`] does) would hide exactly the bytes
-/// the 2PS chain exists to manage from admission control.
-fn est_tps(man: &Manifest, h: ExecHandle, caches_in: usize) -> u64 {
-    man.executables
-        .get(h.index())
-        .map(|e| {
-            let staged: u64 = e
-                .inputs
-                .iter()
-                .take(1 + caches_in)
-                .map(|s| shape_bytes(s))
-                .sum();
-            let outs: u64 = e.outputs.iter().map(|s| shape_bytes(s)).sum();
-            staged + outs
-        })
-        .unwrap_or(0)
-}
-
-/// Projected bytes of a backward-style node: slab + δ slice + outputs.
-fn est_bwd(man: &Manifest, h: ExecHandle) -> u64 {
-    man.executables
-        .get(h.index())
-        .map(|e| {
-            let slab = e.inputs.first().map(|s| shape_bytes(s)).unwrap_or(0);
-            let dz = if e.inputs.len() >= 2 {
-                e.inputs.last().map(|s| shape_bytes(s)).unwrap_or(0)
-            } else {
-                0
-            };
-            let outs: u64 = e.outputs.iter().map(|s| shape_bytes(s)).sum();
-            slab + dz + outs
-        })
-        .unwrap_or(0)
-}
-
-/// Bytes of an executable's first output (a row's z slab — what survives
-/// into the concat barrier).
-fn est_out0(man: &Manifest, h: ExecHandle) -> u64 {
-    man.executables
-        .get(h.index())
-        .and_then(|e| e.outputs.first())
-        .map(|s| shape_bytes(s))
-        .unwrap_or(0)
-}
-
-/// Total output bytes of an executable — what sits parked in handoff
-/// slots between the node's finish and its last consumer's finish (the
-/// `Node::out_bytes` currency the admission ledger retains).
-fn est_outs(man: &Manifest, h: ExecHandle) -> u64 {
-    man.executables
-        .get(h.index())
-        .map(|e| e.outputs.iter().map(|s| shape_bytes(s)).sum())
-        .unwrap_or(0)
 }
 
 /// Sharded execution state: the transfer-lowered plan plus the
@@ -754,7 +399,7 @@ pub struct ShardState {
 }
 
 impl ShardState {
-    /// Build the sharded execution state for one lowered plan: the
+    /// Build the sharded execution state for one lowered program: the
     /// (possibly heterogeneous) `shard::Topology` from the config's
     /// device specs, per-device admission budgets clamped to what each device
     /// can actually hold (`min(cfg.mem_budget, usable HBM − ξ)` where ξ
@@ -766,7 +411,7 @@ impl ShardState {
     /// serial-order replay peak exceeds its clamped budget: a plan that
     /// passes admission but overflows a small device's memory would OOM
     /// on real hardware, so it is rejected here, at configuration time.
-    pub fn build(pipe: &PipePlan, cfg: &SchedConfig, xi: u64) -> Result<ShardState> {
+    pub fn build(program: &RowProgram, cfg: &SchedConfig, xi: u64) -> Result<ShardState> {
         let sc = cfg.shard.clone().unwrap_or_else(|| shard::ShardConfig::new(1));
         let topo = sc.topology();
         let budgets: Vec<u64> = topo
@@ -774,12 +419,23 @@ impl ShardState {
             .into_iter()
             .map(|cap| cap.min(cfg.mem_budget))
             .collect();
-        let plan = ShardPlan::build(pipe.dag(), &topo, sc.policy, budgets)?;
+        let plan = ShardPlan::build(program.graph(), &topo, sc.policy, budgets)?;
         plan.check_budgets()?;
         Ok(ShardState {
             plan,
             exec: ShardedExecutor::new(cfg.workers),
         })
+    }
+
+    /// Wrap an externally-built shard plan (custom partition, custom —
+    /// e.g. tight replay-ledger — budgets) with a fresh persistent pool.
+    /// The proof suites drive exact-budget plans through this; the
+    /// trainer path goes through [`ShardState::build`].
+    pub fn with_plan(plan: ShardPlan, workers: usize) -> ShardState {
+        ShardState {
+            plan,
+            exec: ShardedExecutor::new(workers.max(1)),
+        }
     }
 
     pub fn plan(&self) -> &ShardPlan {
@@ -807,21 +463,21 @@ impl SchedState {
     }
 
     /// Swap in `cfg`, building the sharded state for a pipelined policy.
-    /// `pipe` is the trainer's lowered DAG (`None` when the plan was
-    /// never lowered — a naive-infeasible manifest), `xi` the
+    /// `program` is the trainer's lowered program (`None` when the plan
+    /// was never lowered — a naive-infeasible manifest), `xi` the
     /// always-resident bytes.  On `Err` no field has changed.
-    fn set(&mut self, pipe: Option<&PipePlan>, cfg: SchedConfig, xi: u64) -> Result<()> {
+    fn set(&mut self, program: Option<&RowProgram>, cfg: SchedConfig, xi: u64) -> Result<()> {
         let shard = match cfg.policy {
             Policy::Serial => None,
             Policy::Pipelined => {
-                let pipe = pipe.ok_or_else(|| {
+                let program = program.ok_or_else(|| {
                     Error::Sched(
                         "cannot switch to pipelined execution: the step plan was never \
                          lowered (naive split infeasible for this manifest)"
                             .into(),
                     )
                 })?;
-                Some(ShardState::build(pipe, &cfg, xi)?)
+                Some(ShardState::build(program, &cfg, xi)?)
             }
         };
         self.cfg = cfg;
@@ -835,10 +491,8 @@ pub struct Trainer<'r> {
     pub rt: &'r Runtime,
     pub params: ParamSet,
     pub optimizer: Optimizer,
-    /// Fixed at construction: the [`StepPlan`] is built for this mode, so
-    /// the field is read-only (swapping modes means a new `Trainer`).
-    mode: Mode,
-    pub tracker: Tracker,
+    /// Prebuilt execution table, fixed at construction (swapping modes
+    /// means a new `Trainer`).
     plan: StepPlan,
     /// Row scheduler configuration + sharded execution state
     /// ([`Policy::Serial`], no shard, by default).  The shard half is
@@ -846,8 +500,8 @@ pub struct Trainer<'r> {
     /// unless `SchedConfig::shard` says otherwise) — [`SchedState::set`]
     /// keeps the pair consistent transactionally.
     sched: SchedState,
-    /// The plan's lowered DAG (`None` only for a naive-infeasible plan).
-    pipe: Option<PipePlan>,
+    /// The lowered row program (`None` only for a naive-infeasible plan).
+    program: Option<RowProgram>,
     /// Event trace of the most recent pipelined step (per-device lanes
     /// via `TraceEvent::device`).
     last_trace: Option<Trace>,
@@ -861,9 +515,9 @@ impl<'r> Trainer<'r> {
     /// Use a stateful optimizer (momentum/Adam); its state bytes belong to
     /// ξ in the planners' accounting (`Optimizer::state_bytes`).
     ///
-    /// Builds the mode's [`StepPlan`] here — executable resolution, row
-    /// geometry, tracker-ID interning and the DAG lowering all happen
-    /// once, not per step.
+    /// Builds the mode's [`StepPlan`] and lowers its [`RowProgram`] here —
+    /// executable resolution, row geometry and the dataflow lowering all
+    /// happen once, not per step.
     pub fn with_optimizer(
         rt: &'r Runtime,
         mode: Mode,
@@ -871,9 +525,8 @@ impl<'r> Trainer<'r> {
         seed: u64,
     ) -> Result<Trainer<'r>> {
         let params = ParamSet::init(&rt.manifest.model, seed);
-        let mut tracker = Tracker::new();
-        let plan = StepPlan::build(&rt.manifest, mode, &mut tracker)?;
-        let pipe = match &plan.kind {
+        let plan = StepPlan::build(&rt.manifest, mode)?;
+        let program = match &plan.kind {
             PlanKind::NaiveInfeasible(_) => None,
             _ => Some(plan.lower(&rt.manifest)?),
         };
@@ -886,18 +539,16 @@ impl<'r> Trainer<'r> {
             rt,
             params,
             optimizer,
-            mode,
-            tracker,
             plan,
             sched: SchedState::new(),
-            pipe,
+            program,
             last_trace: None,
         })
     }
 
     /// The execution mode the step plan was built for.
     pub fn mode(&self) -> Mode {
-        self.mode
+        self.plan.mode
     }
 
     /// Switch between serial and pipelined/sharded row execution.
@@ -917,9 +568,9 @@ impl<'r> Trainer<'r> {
     /// trainer keeps its previous (working) configuration in full.
     pub fn set_sched(&mut self, cfg: SchedConfig) -> Result<()> {
         let xi = self.params.size_bytes() + self.optimizer.state_bytes(&self.params);
-        self.sched.set(self.pipe.as_ref(), cfg, xi)?;
-        // a prior step's trace belongs to the previous plan's DAG; keeping
-        // it would let trace_json pair it with the new one
+        self.sched.set(self.program.as_ref(), cfg, xi)?;
+        // a prior step's trace belongs to the previous plan's graph;
+        // keeping it would let trace_json pair it with the new one
         self.last_trace = None;
         Ok(())
     }
@@ -928,9 +579,9 @@ impl<'r> Trainer<'r> {
         &self.sched.cfg
     }
 
-    /// The lowered row dependency DAG (for inspection/attribution).
-    pub fn pipe_plan(&self) -> Option<&PipePlan> {
-        self.pipe.as_ref()
+    /// The lowered row program (for inspection/attribution).
+    pub fn row_program(&self) -> Option<&RowProgram> {
+        self.program.as_ref()
     }
 
     /// The sharded plan (partition, transfers, per-device budgets) when
@@ -949,33 +600,29 @@ impl<'r> Trainer<'r> {
     /// lanes + `Transfer` spans) — what `--trace-out` writes.
     pub fn trace_json(&self) -> Option<String> {
         let trace = self.last_trace.as_ref()?;
-        let dag = match &self.sched.shard {
-            Some(ss) => ss.plan.dag(),
-            None => self.pipe.as_ref()?.dag(),
+        let graph = match &self.sched.shard {
+            Some(ss) => ss.plan.graph(),
+            None => self.program.as_ref()?.graph(),
         };
-        Some(trace.to_json(dag))
+        Some(trace.to_json(graph))
     }
 
     /// One training step on (x, y); returns the loss.
     pub fn step(&mut self, x: &Tensor, y1h: &Tensor) -> Result<StepStats> {
         let t0 = Instant::now();
         let exec0 = self.rt.stats().executions;
-        // activation buffers are strictly per-step; start a fresh ledger
-        // (the interner survives — plan BufIds stay valid)
-        self.tracker.reset();
+        let program = match (&self.plan.kind, &self.program) {
+            (PlanKind::NaiveInfeasible(msg), _) => {
+                return Err(Error::InfeasiblePlan(msg.clone()))
+            }
+            (_, Some(p)) => p,
+            (_, None) => return Err(Error::Sched("step plan was never lowered".into())),
+        };
         let pipelined = self.sched.cfg.policy == Policy::Pipelined;
         let (loss, grads, peak_bytes, device_peaks) = if pipelined {
-            let pipe = match (&self.plan.kind, &self.pipe) {
-                (PlanKind::NaiveInfeasible(msg), _) => {
-                    return Err(Error::InfeasiblePlan(msg.clone()))
-                }
-                (_, Some(p)) => p,
-                (_, None) => return Err(Error::Sched("step plan was never lowered".into())),
-            };
-            let (loss, grads, outcome) = Self::step_pipelined(
+            let (loss, grads, outcome) = self.plan.step_pipelined(
                 self.rt,
-                &self.plan,
-                pipe,
+                program,
                 &self.params,
                 &self.sched.cfg,
                 self.sched.shard.as_ref(),
@@ -987,21 +634,9 @@ impl<'r> Trainer<'r> {
             self.last_trace = Some(outcome.trace);
             (loss, grads, peak, device_peaks)
         } else {
-            let (loss, grads) = match &self.plan.kind {
-                PlanKind::Base(bp) => {
-                    Self::step_base(self.rt, &self.params, &mut self.tracker, bp, x, y1h)?
-                }
-                PlanKind::Hybrid(hp) => {
-                    Self::step_hybrid(self.rt, &self.params, &mut self.tracker, hp, x, y1h)?
-                }
-                PlanKind::Naive(np) => {
-                    Self::step_naive(self.rt, &self.params, &mut self.tracker, np, x, y1h)?
-                }
-                PlanKind::NaiveInfeasible(msg) => {
-                    return Err(Error::InfeasiblePlan(msg.clone()))
-                }
-            };
-            let peak = self.tracker.peak();
+            let (loss, grads, outcome) =
+                self.plan.step_serial(self.rt, program, &self.params, x, y1h)?;
+            let peak = outcome.peak_bytes;
             (loss, grads, peak, vec![peak])
         };
         self.optimizer.step(&mut self.params, &grads)?;
@@ -1015,8 +650,9 @@ impl<'r> Trainer<'r> {
     }
 
     /// Forward-only pass producing z^L (used by tests + quickstart).
+    /// Row-centric modes interpret the program's FP prefix
+    /// ([`StepPlan::forward_zl`]); Base runs its fused forward executable.
     pub fn forward(&mut self, x: &Tensor) -> Result<Tensor> {
-        self.tracker.reset();
         match &self.plan.kind {
             PlanKind::Base(bp) => {
                 let mut args: Vec<TensorView> = Vec::with_capacity(1 + bp.n_conv);
@@ -1024,372 +660,69 @@ impl<'r> Trainer<'r> {
                 args.extend(self.params.tensors[..bp.n_conv].iter().map(|t| t.view()));
                 Ok(self.rt.execute_h(bp.fwd, &args)?.remove(0))
             }
-            PlanKind::Hybrid(hp) => match &hp.tps {
-                Some(tp) => {
-                    Self::tps_fp(self.rt, &self.params, &mut self.tracker, tp, hp.n_conv, x)
-                }
-                None => {
-                    let zck = Self::segment_fp(
-                        self.rt,
-                        &self.params,
-                        &mut self.tracker,
-                        &hp.segs[0],
-                        x,
-                    )?;
-                    Self::segment_fp(self.rt, &self.params, &mut self.tracker, &hp.segs[1], &zck)
-                }
-            },
-            PlanKind::Naive(np) => Self::naive_fp(self.rt, &self.params, np, x),
             PlanKind::NaiveInfeasible(msg) => Err(Error::InfeasiblePlan(msg.clone())),
-        }
-    }
-
-    // ---------------- Base ----------------
-
-    fn step_base(
-        ex: &dyn ExecBackend,
-        params: &ParamSet,
-        tracker: &mut Tracker,
-        bp: &BasePlan,
-        x: &Tensor,
-        y1h: &Tensor,
-    ) -> Result<(f32, Vec<Tensor>)> {
-        tracker.mark_id(bp.phase);
-        let mut args: Vec<TensorView> = Vec::with_capacity(2 + params.tensors.len());
-        args.push(x.view());
-        args.push(y1h.view());
-        args.extend(params.tensors.iter().map(|t| t.view()));
-        let mut out = ex.exec(bp.step, &args)?;
-        let grads = out.split_off(1);
-        let loss = out[0].data[0];
-        Ok((loss, grads))
-    }
-
-    // ---------------- OverL-H (and 2PS-fwd variant) ----------------
-
-    /// FP of one segment, row by row; returns the concatenated output.
-    fn segment_fp(
-        ex: &dyn ExecBackend,
-        params: &ParamSet,
-        tracker: &mut Tracker,
-        seg: &SegPlan,
-        input: &Tensor,
-    ) -> Result<Tensor> {
-        let seg_params = &params.tensors[seg.param_lo..seg.param_hi];
-        let mut rows: Vec<Tensor> = Vec::with_capacity(seg.rows.len());
-        for rp in &seg.rows {
-            tracker.mark_id(rp.fp_phase);
-            // zero-copy: a strided view, gathered only at the literal boundary
-            let slab = input.slice_h(rp.in_iv[0], rp.in_iv[1])?;
-            tracker.alloc_id(rp.slab_id, slab.size_bytes());
-            let z = {
-                let mut args: Vec<TensorView> = Vec::with_capacity(1 + seg_params.len());
-                args.push(slab);
-                args.extend(seg_params.iter().map(|t| t.view()));
-                ex.exec(rp.fwd, &args)?.remove(0)
-            };
-            tracker.alloc_id(rp.z_id, z.size_bytes());
-            // the input slab is released as soon as the row is done —
-            // the row-centric memory reuse (Algorithm 1 line 9)
-            tracker.free_id(rp.slab_id)?;
-            rows.push(z);
-        }
-        let out = {
-            let views: Vec<TensorView> = rows.iter().map(|t| t.view()).collect();
-            Tensor::concat_h(&views)?
-        };
-        tracker.alloc_id(seg.out_id, out.size_bytes());
-        for rp in &seg.rows {
-            tracker.free_id(rp.z_id)?;
-        }
-        Ok(out)
-    }
-
-    /// 2PS forward over the full depth (N = tps_rows), caches handed
-    /// row-to-row exactly as §IV-A describes.
-    fn tps_fp(
-        ex: &dyn ExecBackend,
-        params: &ParamSet,
-        tracker: &mut Tracker,
-        tp: &TpsPlan,
-        n_conv: usize,
-        x: &Tensor,
-    ) -> Result<Tensor> {
-        let conv = &params.tensors[..n_conv];
-        let mut rows: Vec<Tensor> = Vec::with_capacity(tp.rows.len());
-        let mut caches: Vec<Tensor> = Vec::new();
-        for (r, rp) in tp.rows.iter().enumerate() {
-            tracker.mark_id(rp.phase);
-            let own = x.slice_h(rp.own_iv[0], rp.own_iv[1])?;
-            tracker.alloc_id(rp.own_id, own.size_bytes());
-            let mut out = {
-                let mut args: Vec<TensorView> =
-                    Vec::with_capacity(1 + caches.len() + conv.len());
-                args.push(own);
-                args.extend(caches.iter().map(|t| t.view())); // from row r−1
-                args.extend(conv.iter().map(|t| t.view()));
-                ex.exec(rp.fwd, &args)?
-            };
-            let z = out.remove(0);
-            // free consumed caches, keep newly produced ones
-            if r > 0 {
-                for id in &tp.rows[r - 1].cache_ids {
-                    tracker.free_id(*id)?;
-                }
+            _ => {
+                let program = self
+                    .program
+                    .as_ref()
+                    .ok_or_else(|| Error::Sched("step plan was never lowered".into()))?;
+                self.plan.forward_zl(self.rt, program, &self.params, x)
             }
-            caches = out;
-            debug_assert_eq!(caches.len(), rp.cache_ids.len());
-            for (id, c) in rp.cache_ids.iter().zip(&caches) {
-                tracker.alloc_id(*id, c.size_bytes());
-            }
-            tracker.alloc_id(rp.z_id, z.size_bytes());
-            tracker.free_id(rp.own_id)?;
-            rows.push(z);
-        }
-        if let Some(last) = tp.rows.last() {
-            for id in &last.cache_ids {
-                tracker.free_id(*id)?;
-            }
-        }
-        let z_l = {
-            let views: Vec<TensorView> = rows.iter().map(|t| t.view()).collect();
-            Tensor::concat_h(&views)?
-        };
-        tracker.alloc_id(tp.zl_id, z_l.size_bytes());
-        for rp in &tp.rows {
-            tracker.free_id(rp.z_id)?;
-        }
-        Ok(z_l)
-    }
-
-    /// Shared head + row-wise BP for the hybrid and 2PS modes.
-    fn step_hybrid(
-        ex: &dyn ExecBackend,
-        params: &ParamSet,
-        tracker: &mut Tracker,
-        hp: &HybridPlan,
-        x: &Tensor,
-        y1h: &Tensor,
-    ) -> Result<(f32, Vec<Tensor>)> {
-        let seg_a = &hp.segs[0];
-        let seg_b = &hp.segs[1];
-        // ---- FP ----
-        let zck = Self::segment_fp(ex, params, tracker, seg_a, x)?; // checkpoint
-        let (z_l, zl_id) = match &hp.tps {
-            // 2PS forward recomputes from the input; the checkpoint is
-            // still produced for BP (2PS-H keeps checkpoints too)
-            Some(tp) => (Self::tps_fp(ex, params, tracker, tp, hp.n_conv, x)?, tp.zl_id),
-            None => (
-                Self::segment_fp(ex, params, tracker, seg_b, &zck)?,
-                seg_b.out_id,
-            ),
-        };
-        // ---- head ----
-        tracker.mark_id(hp.head_phase);
-        let loss_out = ex.exec(
-            hp.head,
-            &[
-                z_l.view(),
-                y1h.view(),
-                params.tensors[hp.n_conv].view(),
-                params.tensors[hp.n_conv + 1].view(),
-            ],
-        )?;
-        let loss = loss_out[0].data[0];
-        let dz_l = &loss_out[1];
-        tracker.alloc_id(hp.dzl_id, dz_l.size_bytes());
-        // z^L consumed by the head
-        tracker.free_id(zl_id)?;
-
-        let mut grads = params.grad_zeros();
-        let n_conv = hp.n_conv;
-        grads[n_conv] = loss_out[2].clone(); // dWfc
-        grads[n_conv + 1] = loss_out[3].clone(); // dbfc
-
-        // ---- BP segment B (rows reversed; recompute inside row_bwd) ----
-        let seg_b_params = &params.tensors[seg_b.param_lo..seg_b.param_hi];
-        let mut dz_ck = Tensor::zeros(&zck.shape);
-        tracker.alloc_id(hp.dzck_id, dz_ck.size_bytes());
-        for rp in seg_b.rows.iter().rev() {
-            tracker.mark_id(rp.bp_phase);
-            let slab = zck.slice_h(rp.in_iv[0], rp.in_iv[1])?;
-            let dz = dz_l.slice_h(rp.out_iv[0], rp.out_iv[1])?;
-            tracker.alloc_id(rp.bp_slab_id, slab.size_bytes() + dz.size_bytes());
-            let mut out = {
-                let mut args: Vec<TensorView> = Vec::with_capacity(2 + seg_b_params.len());
-                args.push(slab);
-                args.extend(seg_b_params.iter().map(|t| t.view()));
-                args.push(dz);
-                ex.exec(rp.bwd, &args)?
-            };
-            let _z = out.pop().expect("bwd returns recomputed z last");
-            let dx = out.pop().expect("segB bwd returns dx before z");
-            for (i, g) in out.into_iter().enumerate() {
-                grads[seg_b.param_lo + i].axpy(1.0, &g)?;
-            }
-            // overlapping slab input-gradients accumulate by linearity
-            dz_ck.add_h(rp.in_iv[0], &dx)?;
-            tracker.free_id(rp.bp_slab_id)?;
-        }
-        tracker.free_id(hp.dzl_id)?;
-
-        // ---- BP segment A ----
-        let seg_a_params = &params.tensors[seg_a.param_lo..seg_a.param_hi];
-        for rp in seg_a.rows.iter().rev() {
-            tracker.mark_id(rp.bp_phase);
-            let slab = x.slice_h(rp.in_iv[0], rp.in_iv[1])?;
-            let dz = dz_ck.slice_h(rp.out_iv[0], rp.out_iv[1])?;
-            tracker.alloc_id(rp.bp_slab_id, slab.size_bytes() + dz.size_bytes());
-            let mut out = {
-                let mut args: Vec<TensorView> = Vec::with_capacity(2 + seg_a_params.len());
-                args.push(slab);
-                args.extend(seg_a_params.iter().map(|t| t.view()));
-                args.push(dz);
-                ex.exec(rp.bwd, &args)?
-            };
-            out.pop().expect("bwd returns recomputed z last");
-            for (i, g) in out.into_iter().enumerate() {
-                grads[seg_a.param_lo + i].axpy(1.0, &g)?;
-            }
-            tracker.free_id(rp.bp_slab_id)?;
-        }
-        tracker.free_id(hp.dzck_id)?;
-        tracker.free_id(seg_a.out_id)?; // checkpoint consumed
-        Ok((loss, grads))
-    }
-
-    // ---------------- naive (w/o sharing) ----------------
-
-    /// Naive FP does no per-row tracking (seed parity: the ablation only
-    /// accounts at the step level), hence no tracker parameter.
-    fn naive_fp(
-        ex: &dyn ExecBackend,
-        params: &ParamSet,
-        np: &NaivePlan,
-        x: &Tensor,
-    ) -> Result<Tensor> {
-        let conv = &params.tensors[..np.n_conv];
-        let mut rows = Vec::with_capacity(np.rows.len());
-        for rp in &np.rows {
-            let slab = x.slice_h(rp.x_iv[0], rp.x_iv[1])?;
-            let mut args: Vec<TensorView> = Vec::with_capacity(1 + conv.len());
-            args.push(slab);
-            args.extend(conv.iter().map(|t| t.view()));
-            rows.push(ex.exec(rp.fwd, &args)?.remove(0));
-        }
-        let views: Vec<TensorView> = rows.iter().map(|t| t.view()).collect();
-        Tensor::concat_h(&views)
-    }
-
-    fn step_naive(
-        ex: &dyn ExecBackend,
-        params: &ParamSet,
-        tracker: &mut Tracker,
-        np: &NaivePlan,
-        x: &Tensor,
-        y1h: &Tensor,
-    ) -> Result<(f32, Vec<Tensor>)> {
-        tracker.mark_id(np.fp_phase);
-        let z_l = Self::naive_fp(ex, params, np, x)?;
-        tracker.alloc_id(np.zl_id, z_l.size_bytes());
-        let loss_out = ex.exec(
-            np.head,
-            &[
-                z_l.view(),
-                y1h.view(),
-                params.tensors[np.n_conv].view(),
-                params.tensors[np.n_conv + 1].view(),
-            ],
-        )?;
-        let loss = loss_out[0].data[0];
-        let dz_l = &loss_out[1];
-        let mut grads = params.grad_zeros();
-        grads[np.n_conv] = loss_out[2].clone();
-        grads[np.n_conv + 1] = loss_out[3].clone();
-        tracker.mark_id(np.bp_phase);
-        let conv_n = np.n_conv;
-        for rp in np.rows.iter().rev() {
-            let slab = x.slice_h(rp.x_iv[0], rp.x_iv[1])?;
-            let dz = dz_l.slice_h(rp.z_iv[0], rp.z_iv[1])?;
-            let mut out = {
-                let mut args: Vec<TensorView> = Vec::with_capacity(2 + conv_n);
-                args.push(slab);
-                args.extend(params.tensors[..conv_n].iter().map(|t| t.view()));
-                args.push(dz);
-                ex.exec(rp.bwd, &args)?
-            };
-            out.pop().expect("bwd returns recomputed z last");
-            for (i, g) in out.into_iter().enumerate() {
-                grads[i].axpy(1.0, &g)?;
-            }
-        }
-        tracker.free_id(np.zl_id)?;
-        Ok((loss, grads))
-    }
-
-    // ---------------- pipelined path (docs/SCHEDULER.md) ----------------
-
-    /// Execute one step over the lowered DAG on a worker pool — the
-    /// per-step `sched::run` scope without sharding, or the persistent
-    /// [`ShardedExecutor`] (per-device ledgers, transfer nodes) when a
-    /// [`ShardState`] is supplied.  Bit-exact with the serial path either
-    /// way: every reduction happens in a barrier node in the serial
-    /// loop's order; workers only produce per-row outputs, and transfers
-    /// carry data, not arithmetic.
-    fn step_pipelined(
-        ex: &dyn ExecBackend,
-        plan: &StepPlan,
-        pipe: &PipePlan,
-        params: &ParamSet,
-        cfg: &SchedConfig,
-        shard: Option<&ShardState>,
-        x: &Tensor,
-        y1h: &Tensor,
-    ) -> Result<(f32, Vec<Tensor>, ExecOutcome)> {
-        // run a node-task closure on whichever executor is configured;
-        // both call it with *base* DAG node ids
-        let drive = |runner: &(dyn Fn(NodeId) -> Result<()> + Sync)| match shard {
-            Some(ss) => ss.exec.run_step(&ss.plan, runner),
-            None => sched::run(&pipe.dag, cfg, runner),
-        };
-        match &plan.kind {
-            PlanKind::Base(bp) => {
-                let out: Slot<(f32, Vec<Tensor>)> = Slot::new();
-                let outcome = drive(&|n| match pipe.tasks[n] {
-                    Task::BaseStep => pipe_base(ex, params, bp, x, y1h, &out),
-                    t => Err(Error::Sched(format!("task {t:?} in base step"))),
-                })?;
-                let (loss, grads) = out.take("base.out")?;
-                Ok((loss, grads, outcome))
-            }
-            PlanKind::Hybrid(hp) => {
-                let cells = HybridCells::new(hp);
-                let outcome = drive(&|n| {
-                    run_hybrid_task(ex, params, hp, x, y1h, &cells, pipe.tasks[n])
-                })?;
-                let (loss, grads) = cells.out.take("out")?;
-                Ok((loss, grads, outcome))
-            }
-            PlanKind::Naive(np) => {
-                let cells = NaiveCells::new(np);
-                let outcome = drive(&|n| {
-                    run_naive_task(ex, params, np, x, y1h, &cells, pipe.tasks[n])
-                })?;
-                let (loss, grads) = cells.out.take("out")?;
-                Ok((loss, grads, outcome))
-            }
-            PlanKind::NaiveInfeasible(msg) => Err(Error::InfeasiblePlan(msg.clone())),
         }
     }
 }
 
-// ---------------- pipelined node handlers ----------------
+// ---------------- task handlers ----------------
 //
-// Free functions rather than methods: they run on scheduler worker
-// threads and share nothing but `&` references (ExecBackend is `Sync`,
-// slots are mutex cells).  Determinism contract: per-row handlers write
-// slot `r` only; all float reductions live in the barrier handlers and
-// iterate rows in the serial loop's (reversed) order.
+// One set of handlers serves every driver: the serial interpreter calls
+// them from the caller's thread in id order; the worker pools call them
+// from scheduler threads.  Free functions sharing nothing but `&`
+// references (ExecBackend is `Sync`, slots are mutex cells).  Determinism
+// contract: per-row handlers write slot `r` only; all float reductions
+// live in the barrier handlers and iterate rows in the interpreter's
+// (reversed) order.
+
+/// Handoff cells for one step, matching the plan kind.
+enum Cells {
+    Base(Slot<(f32, Vec<Tensor>)>),
+    Hybrid(HybridCells),
+    Naive(NaiveCells),
+}
+
+/// Take the finished step's (loss, gradients) out of the terminal slot.
+fn take_result(cells: &Cells) -> Result<(f32, Vec<Tensor>)> {
+    match cells {
+        Cells::Base(out) => out.take("base.out"),
+        Cells::Hybrid(c) => c.out.take("out"),
+        Cells::Naive(c) => c.out.take("out"),
+    }
+}
+
+/// Dispatch one node's task against the prebuilt plan table — the single
+/// node-execution entry point every driver funnels through.
+fn run_task(
+    ex: &dyn ExecBackend,
+    kind: &PlanKind,
+    params: &ParamSet,
+    x: &Tensor,
+    y1h: &Tensor,
+    cells: &Cells,
+    task: Task,
+) -> Result<()> {
+    match (kind, cells) {
+        (PlanKind::Base(bp), Cells::Base(out)) => match task {
+            Task::BaseStep => pipe_base(ex, params, bp, x, y1h, out),
+            t => Err(Error::Sched(format!("task {t:?} in base step"))),
+        },
+        (PlanKind::Hybrid(hp), Cells::Hybrid(c)) => {
+            run_hybrid_task(ex, params, hp, x, y1h, c, task)
+        }
+        (PlanKind::Naive(np), Cells::Naive(c)) => {
+            run_naive_task(ex, params, np, x, y1h, c, task)
+        }
+        _ => Err(Error::Sched("step cells do not match the plan kind".into())),
+    }
+}
 
 /// Handoff cells for one hybrid/2PS step.
 struct HybridCells {
@@ -1512,6 +845,7 @@ fn pipe_seg_fp_row(
 ) -> Result<()> {
     let rp = &seg.rows[row];
     let seg_params = &params.tensors[seg.param_lo..seg.param_hi];
+    // zero-copy: a strided view, gathered only at the literal boundary
     let slab = input.slice_h(rp.in_iv[0], rp.in_iv[1])?;
     let mut args: Vec<TensorView> = Vec::with_capacity(1 + seg_params.len());
     args.push(slab);
@@ -1520,7 +854,8 @@ fn pipe_seg_fp_row(
     out.put("fp.z", z)
 }
 
-/// One 2PS row: consume row r−1's boundary caches, produce z + own caches.
+/// One 2PS row: consume row r−1's boundary caches, produce z + own caches
+/// (the cache handoff of §IV-A, realized as a slot chain).
 fn pipe_tps_row(
     ex: &dyn ExecBackend,
     params: &ParamSet,
@@ -1632,8 +967,8 @@ fn pipe_bp_row_b(
 }
 
 /// Reduce barrier after BP-B: fold row gradients and δ-accumulate dz_ck in
-/// the serial loop's reversed row order — this is what keeps the pipelined
-/// loss/params bit-identical.
+/// the interpreter's reversed row order — this fixed f32 fold order is
+/// what keeps every driver's loss/params bit-identical.
 fn pipe_reduce_b(params: &ParamSet, hp: &HybridPlan, cells: &HybridCells) -> Result<()> {
     let seg_b = &hp.segs[1];
     let mut grads = params.grad_zeros();
@@ -1647,6 +982,7 @@ fn pipe_reduce_b(params: &ParamSet, hp: &HybridPlan, cells: &HybridCells) -> Res
         for (i, g) in row_grads.into_iter().enumerate() {
             grads[seg_b.param_lo + i].axpy(1.0, &g)?;
         }
+        // overlapping slab input-gradients accumulate by linearity
         dz_ck.add_h(rp.in_iv[0], &dx)?;
     }
     cells.grads_mid.put("grads_mid", grads)?;
@@ -1825,155 +1161,14 @@ pub fn train_loop(
 mod tests {
     use super::*;
     use crate::memory::DeviceModel;
-    use crate::shard::{DevicePreset, DeviceSpec, LinkKind, ShardConfig, Topology};
+    use crate::shard::{DevicePreset, DeviceSpec, ShardConfig};
 
     #[test]
-    fn naive_row_extents_equal_split() {
-        let ivs = naive_row_extents(32, 4).unwrap();
-        assert_eq!(ivs.len(), 4);
-        assert_eq!(ivs[0], [0, 8]);
-        assert_eq!(ivs[3], [24, 32]);
-        // cover the full range with no gaps
-        for w in ivs.windows(2) {
-            assert_eq!(w[0][1], w[1][0]);
-        }
-    }
-
-    #[test]
-    fn naive_row_extents_rejects_remainder() {
-        // the seed silently truncated h=33 n=4 to 4×8 rows, dropping row 32
-        let err = naive_row_extents(33, 4).unwrap_err();
-        match err {
-            Error::InfeasiblePlan(msg) => {
-                assert!(msg.contains("remainder"), "{msg}");
-            }
-            other => panic!("expected InfeasiblePlan, got {other:?}"),
-        }
-        assert!(naive_row_extents(8, 0).is_err());
-        assert!(naive_row_extents(0, 2).is_err());
-    }
-
-    /// A miniature manifest with every executable the four modes resolve,
-    /// carrying **shape-accurate** I/O signatures (batch 1, c 1, H 8, W 4;
-    /// two rows per phase) so [`FakeExec`] can validate argument shapes
-    /// and the DAG lowering derives real byte estimates:
-    ///
-    /// * x [1,1,8,4]; seg rows: in [0,5]/[3,8] (halo slabs), out [0,4]/[4,8]
-    /// * params: W1 [1,1,3,3], b1 [1], Wfc [32,2], bfc [2]
-    /// * head: (zL, y1h, Wfc, bfc) → (loss, dzL, dWfc, dbfc)
-    fn plan_manifest(h: usize, naive_rows: usize) -> Manifest {
-        let exes: &[(&str, &str, &str)] = &[
-            (
-                "base_step",
-                "[[1,1,8,4],[1,2],[1,1,3,3],[1],[32,2],[2]]",
-                "[[1],[1,1,3,3],[1],[32,2],[2]]",
-            ),
-            ("base_fwd", "[[1,1,8,4],[1,1,3,3],[1]]", "[[1,1,8,4]]"),
-            (
-                "head",
-                "[[1,1,8,4],[1,2],[32,2],[2]]",
-                "[[1],[1,1,8,4],[32,2],[2]]",
-            ),
-            ("segA_row0_fwd", "[[1,1,5,4],[1,1,3,3],[1]]", "[[1,1,4,4]]"),
-            (
-                "segA_row0_bwd",
-                "[[1,1,5,4],[1,1,3,3],[1],[1,1,4,4]]",
-                "[[1,1,3,3],[1],[1,1,4,4]]",
-            ),
-            ("segA_row1_fwd", "[[1,1,5,4],[1,1,3,3],[1]]", "[[1,1,4,4]]"),
-            (
-                "segA_row1_bwd",
-                "[[1,1,5,4],[1,1,3,3],[1],[1,1,4,4]]",
-                "[[1,1,3,3],[1],[1,1,4,4]]",
-            ),
-            ("segB_row0_fwd", "[[1,1,5,4],[1,1,3,3],[1]]", "[[1,1,4,4]]"),
-            (
-                "segB_row0_bwd",
-                "[[1,1,5,4],[1,1,3,3],[1],[1,1,4,4]]",
-                "[[1,1,3,3],[1],[1,1,5,4],[1,1,4,4]]",
-            ),
-            ("segB_row1_fwd", "[[1,1,5,4],[1,1,3,3],[1]]", "[[1,1,4,4]]"),
-            (
-                "segB_row1_bwd",
-                "[[1,1,5,4],[1,1,3,3],[1],[1,1,4,4]]",
-                "[[1,1,3,3],[1],[1,1,5,4],[1,1,4,4]]",
-            ),
-            (
-                "tps_row0_fwd",
-                "[[1,1,4,4],[1,1,3,3],[1]]",
-                "[[1,1,4,4],[1,1,1,4],[1,1,1,4]]", // z + 2 caches
-            ),
-            (
-                "tps_row1_fwd",
-                "[[1,1,4,4],[1,1,1,4],[1,1,1,4],[1,1,3,3],[1]]",
-                "[[1,1,4,4]]", // z only (last row)
-            ),
-            ("naive_row0_fwd", "[[1,1,4,4],[1,1,3,3],[1]]", "[[1,1,4,4]]"),
-            (
-                "naive_row0_bwd",
-                "[[1,1,4,4],[1,1,3,3],[1],[1,1,4,4]]",
-                "[[1,1,3,3],[1],[1,1,4,4]]",
-            ),
-            ("naive_row1_fwd", "[[1,1,4,4],[1,1,3,3],[1]]", "[[1,1,4,4]]"),
-            (
-                "naive_row1_bwd",
-                "[[1,1,4,4],[1,1,3,3],[1],[1,1,4,4]]",
-                "[[1,1,3,3],[1],[1,1,4,4]]",
-            ),
-        ];
-        let exe_json: Vec<String> = exes
-            .iter()
-            .map(|(name, inputs, outputs)| {
-                format!(
-                    r#"{{"name": "{name}", "path": "{name}.hlo", "kind": "k",
-                         "inputs": {inputs}, "outputs": {outputs}}}"#
-                )
-            })
-            .collect();
-        let seg = |name: &str| {
-            format!(
-                r#"{{"name": "{name}", "h_in": {h}, "h_out": {h}, "c_in": 1, "c_out": 1,
-                     "param_lo": 0, "param_hi": 2,
-                     "rows": [
-                       {{"out_iv": [0, 4], "in_iv": [0, 5], "chain": []}},
-                       {{"out_iv": [4, 8], "in_iv": [3, 8], "chain": []}}
-                     ]}}"#
-            )
-        };
-        let text = format!(
-            r#"{{
-              "model": {{
-                "name": "t", "batch": 1, "h": {h}, "w": 4, "n_classes": 2,
-                "layers": [], "heights": [{h}, {h}], "w_out": 4, "fc_in": 32,
-                "param_shapes": [[1, 1, 3, 3], [1], [32, 2], [2]],
-                "n_conv_params": 2
-              }},
-              "plan": {{
-                "ckpt_split": 1, "n_rows": 2, "tps_rows": 2, "naive_rows": {naive_rows},
-                "segments": [{segA}, {segB}],
-                "tps": {{
-                  "cuts": [0, 4, 8],
-                  "rows": [
-                    {{"own_iv": [0, 4], "bounds": [[0, 4]], "cache_in": [null], "cache_out": [[3, 4]]}},
-                    {{"own_iv": [4, 8], "bounds": [[4, 8]], "cache_in": [[3, 4]], "cache_out": [null]}}
-                  ]
-                }}
-              }},
-              "executables": [{exes}]
-            }}"#,
-            segA = seg("segA"),
-            segB = seg("segB"),
-            exes = exe_json.join(",\n")
-        );
-        Manifest::parse(&text).expect("test manifest parses")
-    }
-
-    #[test]
-    fn step_plan_interns_everything_up_front() {
-        let man = plan_manifest(8, 2);
-        for mode in [Mode::Base, Mode::RowHybrid, Mode::Tps, Mode::Naive] {
-            let mut tracker = Tracker::new();
-            let plan = StepPlan::build(&man, mode, &mut tracker).unwrap();
+    fn step_plan_resolves_everything_up_front() {
+        let man = Manifest::demo(2);
+        for mode in Mode::ALL {
+            let plan = StepPlan::build(&man, mode).unwrap();
+            assert_eq!(plan.mode(), mode);
             match (&plan.kind, mode) {
                 (PlanKind::Base(bp), Mode::Base) => {
                     assert_eq!(bp.step.index(), man.index_of("base_step").unwrap());
@@ -1989,21 +1184,11 @@ mod tests {
                     assert_eq!(rp.bwd.index(), man.index_of("segB_row1_bwd").unwrap());
                     assert_eq!(rp.in_iv, [3, 8]);
                     assert_eq!(rp.out_iv, [4, 8]);
-                    // ids resolve to the exact strings the seed allocated,
-                    // so tracker accounting stays byte-identical
-                    assert_eq!(tracker.name(rp.slab_id), "fp.segB.slab1");
-                    assert_eq!(tracker.name(rp.bp_slab_id), "bp.segB.slab1");
-                    assert_eq!(tracker.name(hp.segs[1].out_id), "fp.segB.out");
-                    assert_eq!(tracker.name(hp.dzl_id), "dzL");
                 }
                 (PlanKind::Hybrid(hp), Mode::Tps) => {
                     let tp = hp.tps.as_ref().expect("2PS plan");
                     assert_eq!(tp.rows.len(), 2);
-                    // cache count derived from the executable signature
-                    assert_eq!(tp.rows[0].cache_ids.len(), 2);
-                    assert_eq!(tp.rows[1].cache_ids.len(), 0);
-                    assert_eq!(tracker.name(tp.rows[0].cache_ids[1]), "tps.cache0.1");
-                    assert_eq!(tracker.name(tp.zl_id), "tps.zL");
+                    assert_eq!(tp.rows[1].own_iv, [4, 8]);
                 }
                 (PlanKind::Naive(np), Mode::Naive) => {
                     assert_eq!(np.rows.len(), 2);
@@ -2019,9 +1204,8 @@ mod tests {
     #[test]
     fn step_plan_flags_uneven_naive_split() {
         // h=8, naive_rows=3: 8 % 3 != 0 — the seed truncated, we flag
-        let man = plan_manifest(8, 3);
-        let mut tracker = Tracker::new();
-        let plan = StepPlan::build(&man, Mode::Naive, &mut tracker).unwrap();
+        let man = Manifest::demo(3);
+        let plan = StepPlan::build(&man, Mode::Naive).unwrap();
         match &plan.kind {
             PlanKind::NaiveInfeasible(msg) => assert!(msg.contains("remainder"), "{msg}"),
             other => panic!("expected NaiveInfeasible, got {other:?}"),
@@ -2032,373 +1216,16 @@ mod tests {
             other => panic!("expected InfeasiblePlan, got {:?}", other.is_ok()),
         }
         // the other modes are unaffected by the naive split
-        assert!(StepPlan::build(&man, Mode::RowHybrid, &mut tracker).is_ok());
+        assert!(StepPlan::build(&man, Mode::RowHybrid).is_ok());
     }
 
     #[test]
     fn step_plan_errors_on_missing_executable() {
-        let mut man = plan_manifest(8, 2);
+        let mut man = Manifest::demo(2);
         man.executables.retain(|e| e.name != "segB_row1_bwd");
-        let mut tracker = Tracker::new();
-        match StepPlan::build(&man, Mode::RowHybrid, &mut tracker) {
+        match StepPlan::build(&man, Mode::RowHybrid) {
             Err(Error::Artifact(msg)) => assert!(msg.contains("segB_row1_bwd"), "{msg}"),
             other => panic!("expected Artifact error, got {:?}", other.is_ok()),
-        }
-    }
-
-    // ---------------- scheduler: lowering + pipelined execution ----------------
-
-    /// Deterministic stand-in backend: outputs are a pure function of the
-    /// executable identity and every input element (shape-checked against
-    /// the manifest signature), so any arg-reorder / wrong-cache /
-    /// wrong-slice bug in the pipelined path changes the bits.
-    struct FakeExec {
-        man: Manifest,
-    }
-
-    impl ExecBackend for FakeExec {
-        fn exec(&self, h: ExecHandle, args: &[TensorView<'_>]) -> Result<Vec<Tensor>> {
-            let info = self
-                .man
-                .executables
-                .get(h.index())
-                .ok_or_else(|| Error::Artifact(format!("fake: bad handle {}", h.index())))?;
-            if args.len() != info.inputs.len() {
-                return Err(Error::Artifact(format!(
-                    "fake {}: {} args, signature wants {}",
-                    info.name,
-                    args.len(),
-                    info.inputs.len()
-                )));
-            }
-            for (i, (v, expect)) in args.iter().zip(&info.inputs).enumerate() {
-                if v.dims() != expect.as_slice() {
-                    return Err(Error::Artifact(format!(
-                        "fake {}: input {i} shape {:?} != {:?}",
-                        info.name,
-                        v.dims(),
-                        expect
-                    )));
-                }
-            }
-            // position-weighted checksum over all inputs, in arg order
-            let mut acc = 0.0f32;
-            for (i, v) in args.iter().enumerate() {
-                let mut s = 0.0f32;
-                let mut e = 0usize;
-                for chunk in v.chunks() {
-                    for val in chunk {
-                        s += val * ((e % 7 + 1) as f32);
-                        e += 1;
-                    }
-                }
-                acc += s * ((i + 1) as f32) * 0.01;
-            }
-            info.outputs
-                .iter()
-                .enumerate()
-                .map(|(k, shape)| {
-                    let n: usize = shape.iter().product();
-                    let base = (h.index() * 31 + k * 7) as f32 * 0.001;
-                    let data = (0..n)
-                        .map(|j| ((j % 13) as f32) * 0.01 + (base + acc * 0.25).sin() * 0.1)
-                        .collect();
-                    Tensor::new(shape.clone(), data)
-                })
-                .collect()
-        }
-    }
-
-    fn test_batch() -> (Tensor, Tensor) {
-        let x = Tensor::new(
-            vec![1, 1, 8, 4],
-            (0..32).map(|i| (i as f32 * 0.37).sin()).collect(),
-        )
-        .unwrap();
-        let y = Tensor::new(vec![1, 2], vec![1.0, 0.0]).unwrap();
-        (x, y)
-    }
-
-    /// Run `steps` serial steps with the fake backend; returns per-step
-    /// losses, final params and the per-step tracker peaks.
-    fn run_serial(man: &Manifest, mode: Mode, steps: usize) -> (Vec<f32>, ParamSet, Vec<u64>) {
-        let mut tracker = Tracker::new();
-        let plan = StepPlan::build(man, mode, &mut tracker).unwrap();
-        let ex = FakeExec { man: man.clone() };
-        let mut params = ParamSet::init(&man.model, 42);
-        let mut opt = Optimizer::sgd(0.05);
-        let (x, y) = test_batch();
-        let mut losses = Vec::new();
-        let mut peaks = Vec::new();
-        for _ in 0..steps {
-            tracker.reset();
-            let (loss, grads) = match &plan.kind {
-                PlanKind::Base(bp) => {
-                    Trainer::step_base(&ex, &params, &mut tracker, bp, &x, &y).unwrap()
-                }
-                PlanKind::Hybrid(hp) => {
-                    Trainer::step_hybrid(&ex, &params, &mut tracker, hp, &x, &y).unwrap()
-                }
-                PlanKind::Naive(np) => {
-                    Trainer::step_naive(&ex, &params, &mut tracker, np, &x, &y).unwrap()
-                }
-                PlanKind::NaiveInfeasible(m) => panic!("infeasible: {m}"),
-            };
-            opt.step(&mut params, &grads).unwrap();
-            losses.push(loss);
-            peaks.push(tracker.peak());
-        }
-        (losses, params, peaks)
-    }
-
-    /// Run `steps` pipelined steps; returns losses, final params, per-step
-    /// admission peaks and the last trace.
-    fn run_pipelined(
-        man: &Manifest,
-        mode: Mode,
-        steps: usize,
-        workers: usize,
-        budget: u64,
-    ) -> (Vec<f32>, ParamSet, Vec<u64>, Trace) {
-        let mut tracker = Tracker::new();
-        let plan = StepPlan::build(man, mode, &mut tracker).unwrap();
-        let pipe = plan.lower(man).unwrap();
-        let ex = FakeExec { man: man.clone() };
-        let cfg = SchedConfig::pipelined(workers).with_budget(budget);
-        let mut params = ParamSet::init(&man.model, 42);
-        let mut opt = Optimizer::sgd(0.05);
-        let (x, y) = test_batch();
-        let mut losses = Vec::new();
-        let mut peaks = Vec::new();
-        let mut last = Trace::default();
-        for _ in 0..steps {
-            let (loss, grads, outcome) =
-                Trainer::step_pipelined(&ex, &plan, &pipe, &params, &cfg, None, &x, &y)
-                    .unwrap();
-            outcome.trace.check_complete(&pipe.dag).unwrap();
-            opt.step(&mut params, &grads).unwrap();
-            losses.push(loss);
-            peaks.push(outcome.peak_bytes);
-            last = outcome.trace;
-        }
-        (losses, params, peaks, last)
-    }
-
-    /// Run `steps` sharded-pipelined steps over an arbitrary (possibly
-    /// heterogeneous) topology; ledgers are set to the per-device
-    /// serial-order replay peaks clamped to each device's memory and
-    /// asserted from every step's trace.  Returns losses, final params
-    /// and the last trace + plan for shape checks.
-    fn run_sharded(
-        man: &Manifest,
-        mode: Mode,
-        steps: usize,
-        workers: usize,
-        topo: &Topology,
-        policy: shard::PartitionPolicy,
-    ) -> (Vec<f32>, ParamSet, Trace, ShardPlan) {
-        let devices = topo.len();
-        let mut tracker = Tracker::new();
-        let plan = StepPlan::build(man, mode, &mut tracker).unwrap();
-        let pipe = plan.lower(man).unwrap();
-        let mut splan =
-            ShardPlan::build(pipe.dag(), topo, policy, topo.budgets(0)).unwrap();
-        // tight per-device ledgers: the serial-order replay peak, clamped
-        // to the device's own memory (the trainer-path budget shape)
-        let ledgers = splan.replay_ledgers(topo, 0).unwrap();
-        splan.set_budgets(ledgers.clone()).unwrap();
-        assert!(splan.check_budgets().is_ok());
-        // the pool is constructed once and reused by every step below
-        let state = ShardState {
-            plan: splan,
-            exec: ShardedExecutor::new(workers),
-        };
-        let ex = FakeExec { man: man.clone() };
-        let cfg = SchedConfig::pipelined(workers);
-        let mut params = ParamSet::init(&man.model, 42);
-        let mut opt = Optimizer::sgd(0.05);
-        let (x, y) = test_batch();
-        let mut losses = Vec::new();
-        let mut last = Trace::default();
-        for _ in 0..steps {
-            let (loss, grads, outcome) = Trainer::step_pipelined(
-                &ex,
-                &plan,
-                &pipe,
-                &params,
-                &cfg,
-                Some(&state),
-                &x,
-                &y,
-            )
-            .unwrap();
-            outcome.trace.check_complete(state.plan.dag()).unwrap();
-            // every per-device admission ledger respected, from the trace
-            for d in 0..devices {
-                assert!(
-                    outcome.device_peaks[d] <= ledgers[d],
-                    "{mode:?} {policy:?} d{d}: peak {} > ledger {}",
-                    outcome.device_peaks[d],
-                    ledgers[d]
-                );
-                assert!(outcome.trace.max_in_flight_on(d) <= ledgers[d]);
-            }
-            opt.step(&mut params, &grads).unwrap();
-            losses.push(loss);
-            last = outcome.trace;
-        }
-        (losses, params, last, state.plan)
-    }
-
-    fn assert_bits_equal(a: &ParamSet, b: &ParamSet, ctx: &str) {
-        assert_eq!(a.tensors.len(), b.tensors.len(), "{ctx}: param count");
-        for (i, (ta, tb)) in a.tensors.iter().zip(&b.tensors).enumerate() {
-            assert_eq!(ta.shape, tb.shape, "{ctx}: param {i} shape");
-            for (j, (va, vb)) in ta.data.iter().zip(&tb.data).enumerate() {
-                assert_eq!(
-                    va.to_bits(),
-                    vb.to_bits(),
-                    "{ctx}: param {i}[{j}] {va} vs {vb}"
-                );
-            }
-        }
-    }
-
-    /// The acceptance bar: pipelined == serial, bit for bit, over ≥3 steps
-    /// (params feed back into step n+1, so drift would compound) in all
-    /// four modes, across worker counts and with a tight budget.
-    #[test]
-    fn pipelined_matches_serial_bitwise_in_all_modes() {
-        let man = plan_manifest(8, 2);
-        for mode in [Mode::Base, Mode::RowHybrid, Mode::Tps, Mode::Naive] {
-            let (sl, sp, _) = run_serial(&man, mode, 3);
-            for (workers, budget) in [(1, u64::MAX), (2, u64::MAX), (4, u64::MAX), (4, 600)] {
-                let (pl, pp, _, _) = run_pipelined(&man, mode, 3, workers, budget);
-                let ctx = format!("{mode:?} w={workers} b={budget}");
-                assert_eq!(sl.len(), pl.len());
-                for (a, b) in sl.iter().zip(&pl) {
-                    assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: loss {a} vs {b}");
-                }
-                assert_bits_equal(&sp, &pp, &ctx);
-            }
-        }
-    }
-
-    /// Admission control: with the budget set to the serial-order replay
-    /// peak (working sets + parked handoff bytes — the exact residency a
-    /// serial execution of the DAG holds, from the shard replay on one
-    /// device), the pipelined peak never exceeds it.  The ledger now
-    /// covers interim slot bytes too, so the tracker peak (which frees z
-    /// rows at the concat) is no longer the right bound — the replay peak
-    /// is.
-    #[test]
-    fn admission_peak_stays_under_serial_replay_peak() {
-        let man = plan_manifest(8, 2);
-        for mode in [Mode::RowHybrid, Mode::Tps] {
-            let (sl, _, _) = run_serial(&man, mode, 1);
-            let mut tracker = Tracker::new();
-            let plan = StepPlan::build(&man, mode, &mut tracker).unwrap();
-            let pipe = plan.lower(&man).unwrap();
-            let topo = Topology::uniform(1, DeviceModel::rtx3090(), shard::LinkKind::Pcie);
-            let splan = ShardPlan::build(
-                pipe.dag(),
-                &topo,
-                shard::PartitionPolicy::Blocked,
-                vec![u64::MAX],
-            )
-            .unwrap();
-            let replay_peak = splan.replay_peaks().unwrap()[0];
-            assert!(
-                pipe.dag().max_est_bytes() <= replay_peak,
-                "{mode:?}: replay peak must dominate every single node"
-            );
-            let (pl, _, ppeaks, _) = run_pipelined(&man, mode, 1, 4, replay_peak);
-            assert!(
-                ppeaks[0] <= replay_peak,
-                "{mode:?}: pipelined peak {} > serial replay peak {replay_peak}",
-                ppeaks[0]
-            );
-            // and the budget cap costs no accuracy
-            assert_eq!(sl[0].to_bits(), pl[0].to_bits(), "{mode:?}");
-        }
-    }
-
-    /// The topologies the bit-identity matrix re-proves determinism
-    /// over: uniform 1/2/4 RTX 3090s plus two genuinely heterogeneous
-    /// mixes (rtx3090+a100 over PCIe, 2×rtx3090+2×a100 over NVLink).
-    fn proof_topologies() -> Vec<(&'static str, Topology)> {
-        let d90 = DeviceModel::rtx3090();
-        let a100 = DeviceModel::a100_80g();
-        vec![
-            ("rtx3090x1", Topology::uniform(1, d90.clone(), LinkKind::NvLink)),
-            ("rtx3090x2", Topology::uniform(2, d90.clone(), LinkKind::NvLink)),
-            ("rtx3090x4", Topology::uniform(4, d90.clone(), LinkKind::NvLink)),
-            (
-                "rtx3090+a100",
-                Topology::new(vec![d90.clone(), a100.clone()], LinkKind::Pcie),
-            ),
-            (
-                "rtx3090x2+a100x2",
-                Topology::new(vec![d90.clone(), d90, a100.clone(), a100], LinkKind::NvLink),
-            ),
-        ]
-    }
-
-    const ALL_POLICIES: [shard::PartitionPolicy; 3] = [
-        shard::PartitionPolicy::Blocked,
-        shard::PartitionPolicy::CostBalanced,
-        shard::PartitionPolicy::DpBoundary,
-    ];
-
-    /// The shard acceptance bar: sharded execution is bit-identical to
-    /// serial over ≥3 steps (params feed forward, drift would compound)
-    /// across all 4 modes × uniform {1, 2, 4}-device *and* heterogeneous
-    /// rtx3090+a100 topologies × all three partition policies, with
-    /// every per-device admission ledger (clamped to that device's
-    /// memory) respected — asserted inside `run_sharded` from the trace
-    /// — and transfers appearing exactly when the partition splits an
-    /// edge.
-    #[test]
-    fn sharded_matches_serial_bitwise_across_topologies_and_policies() {
-        let man = plan_manifest(8, 2);
-        for mode in [Mode::Base, Mode::RowHybrid, Mode::Tps, Mode::Naive] {
-            let (sl, sp, _) = run_serial(&man, mode, 3);
-            for (name, topo) in proof_topologies() {
-                for policy in ALL_POLICIES {
-                    let (pl, pp, _, splan) =
-                        run_sharded(&man, mode, 3, 4, &topo, policy);
-                    let ctx = format!("{mode:?} topo={name} {policy:?}");
-                    assert_eq!(sl.len(), pl.len());
-                    for (a, b) in sl.iter().zip(&pl) {
-                        assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: loss {a} vs {b}");
-                    }
-                    assert_bits_equal(&sp, &pp, &ctx);
-                    if topo.len() == 1 {
-                        assert!(
-                            splan.transfers().is_empty(),
-                            "{ctx}: one device must not transfer"
-                        );
-                    }
-                }
-            }
-        }
-    }
-
-    /// Sharded traces are reproducible: same plan, same pool ⇒ same
-    /// canonical view (the ready-pick is a pure function of
-    /// `(NodeId, DeviceId)` and ledger state, never thread timing) —
-    /// on heterogeneous topologies too.
-    #[test]
-    fn sharded_trace_is_canonical_deterministic() {
-        let man = plan_manifest(8, 2);
-        let topo = Topology::new(
-            vec![DeviceModel::rtx3090(), DeviceModel::a100_80g()],
-            LinkKind::NvLink,
-        );
-        for policy in ALL_POLICIES {
-            let (_, _, t1, _) = run_sharded(&man, Mode::RowHybrid, 1, 4, &topo, policy);
-            let (_, _, t2, _) = run_sharded(&man, Mode::RowHybrid, 1, 4, &topo, policy);
-            assert_eq!(t1.canonical(), t2.canonical(), "{policy:?}");
         }
     }
 
@@ -2409,17 +1236,16 @@ mod tests {
     /// error and the previous (working) configuration fully preserved.
     #[test]
     fn sched_reconfiguration_is_transactional() {
-        let man = plan_manifest(8, 2);
-        let mut tracker = Tracker::new();
-        let plan = StepPlan::build(&man, Mode::RowHybrid, &mut tracker).unwrap();
-        let pipe = plan.lower(&man).unwrap();
+        let man = Manifest::demo(2);
+        let plan = StepPlan::build(&man, Mode::RowHybrid).unwrap();
+        let program = plan.lower(&man).unwrap();
 
         let mut st = SchedState::new();
         let good = SchedConfig::pipelined(2);
-        st.set(Some(&pipe), good.clone(), 0).unwrap();
+        st.set(Some(&program), good.clone(), 0).unwrap();
         assert!(st.shard.is_some(), "pipelined builds the sharded state");
 
-        // (a) pipelined with no lowered plan: Error::Sched, nothing moves
+        // (a) pipelined with no lowered program: Error::Sched, nothing moves
         match st.set(None, SchedConfig::pipelined(4), 0) {
             Err(Error::Sched(msg)) => assert!(msg.contains("never"), "{msg}"),
             other => panic!("expected Error::Sched, got ok={:?}", other.is_ok()),
@@ -2434,7 +1260,7 @@ mod tests {
         let tiny = SchedConfig::pipelined(2).with_shard(ShardConfig::heterogeneous(vec![
             DeviceSpec::new(DevicePreset::Rtx3090).with_hbm(64),
         ]));
-        match st.set(Some(&pipe), tiny, 0) {
+        match st.set(Some(&program), tiny, 0) {
             Err(Error::InfeasiblePlan(msg)) => {
                 assert!(msg.contains("exceeds"), "{msg}")
             }
@@ -2455,10 +1281,9 @@ mod tests {
     /// its usable HBM minus the always-resident bytes.
     #[test]
     fn per_device_budgets_clamp_to_device_memory() {
-        let man = plan_manifest(8, 2);
-        let mut tracker = Tracker::new();
-        let plan = StepPlan::build(&man, Mode::RowHybrid, &mut tracker).unwrap();
-        let pipe = plan.lower(&man).unwrap();
+        let man = Manifest::demo(2);
+        let plan = StepPlan::build(&man, Mode::RowHybrid).unwrap();
+        let program = plan.lower(&man).unwrap();
 
         // mixed topology: stock rtx3090 + a 1 MiB-scaled a100
         let small = 1u64 << 20;
@@ -2467,7 +1292,7 @@ mod tests {
             DeviceSpec::new(DevicePreset::A100).with_hbm(small),
         ]));
         let xi = 1u64 << 10;
-        let ss = ShardState::build(&pipe, &cfg, xi).unwrap();
+        let ss = ShardState::build(&program, &cfg, xi).unwrap();
         let budgets = ss.plan().budgets();
         assert_eq!(
             budgets[0],
@@ -2481,95 +1306,7 @@ mod tests {
             mem_budget: 4096,
             ..cfg
         };
-        let ss = ShardState::build(&pipe, &cfg, xi).unwrap();
+        let ss = ShardState::build(&program, &cfg, xi).unwrap();
         assert!(ss.plan().budgets().iter().all(|&b| b == 4096));
-    }
-
-    /// Deterministic trace: same DAG, same config ⇒ same canonical view,
-    /// and every node dispatched/finished exactly once.
-    #[test]
-    fn pipelined_trace_is_canonical_deterministic() {
-        let man = plan_manifest(8, 2);
-        for mode in [Mode::RowHybrid, Mode::Tps, Mode::Naive] {
-            let (_, _, _, t1) = run_pipelined(&man, mode, 1, 4, u64::MAX);
-            let (_, _, _, t2) = run_pipelined(&man, mode, 1, 4, u64::MAX);
-            assert_eq!(t1.canonical(), t2.canonical(), "{mode:?}");
-        }
-    }
-
-    /// DAG shape properties (the paper's dependency structure, verbatim):
-    /// OverL rows edge-free, 2PS rows exactly chain-shaped, barriers at
-    /// the checkpoint / z^L / FP→BP boundaries.
-    #[test]
-    fn lowered_dag_shapes_match_the_papers_dependency_structure() {
-        let man = plan_manifest(8, 2);
-        let mut tracker = Tracker::new();
-
-        // OverL-H
-        let plan = StepPlan::build(&man, Mode::RowHybrid, &mut tracker).unwrap();
-        let pipe = plan.lower(&man).unwrap();
-        let dag = pipe.dag();
-        assert!(dag.validate().is_ok());
-        let ck = dag.find("barrier.ck").expect("checkpoint barrier");
-        let zl = dag.find("barrier.zL").expect("zL barrier");
-        let head = dag.find("head").expect("FP→BP barrier");
-        for r in 0..2 {
-            let fp_a = dag.find(&format!("fp.segA.row{r}")).unwrap();
-            assert_eq!(dag.node(fp_a).kind, NodeKind::Row);
-            assert!(dag.node(fp_a).deps.is_empty(), "OverL rows are edge-free");
-            let fp_b = dag.find(&format!("fp.segB.row{r}")).unwrap();
-            assert_eq!(dag.node(fp_b).deps, vec![ck], "segB row waits on ck only");
-            let bp_b = dag.find(&format!("bp.segB.row{r}")).unwrap();
-            assert!(dag.node(bp_b).deps.contains(&head), "BP waits for FP→BP");
-        }
-        assert_eq!(dag.node(head).deps, vec![zl]);
-        assert_eq!(dag.node(head).kind, NodeKind::Barrier);
-        let red_b = dag.find("barrier.bp.segB").unwrap();
-        let bp_a0 = dag.find("bp.segA.row0").unwrap();
-        assert_eq!(dag.node(bp_a0).deps, vec![red_b]);
-        assert!(dag.find("barrier.bp.segA").is_some());
-        // est_bytes come from the executable signatures
-        let fp_a0 = dag.find("fp.segA.row0").unwrap();
-        assert_eq!(dag.node(fp_a0).est_bytes, (5 * 4 + 4 * 4) * 4); // slab+z
-        assert_eq!(dag.node(ck).est_bytes, 2 * 4 * 4 * 4); // zck
-
-        // 2PS: rows exactly chain-shaped
-        let plan = StepPlan::build(&man, Mode::Tps, &mut tracker).unwrap();
-        let pipe = plan.lower(&man).unwrap();
-        let dag = pipe.dag();
-        assert!(dag.validate().is_ok());
-        let r0 = dag.find("fp.tps.row0").unwrap();
-        let r1 = dag.find("fp.tps.row1").unwrap();
-        assert_eq!(dag.node(r0).kind, NodeKind::TpsRow);
-        assert!(dag.node(r0).deps.is_empty());
-        assert_eq!(dag.node(r1).deps, vec![r0], "2PS edges are a chain");
-        let zl = dag.find("barrier.zL").unwrap();
-        // the concat consumes every row's z, so zL depends on all rows
-        // (the r0 edge is transitively implied by the chain; stating it
-        // makes parked z grants release exactly at the concat)
-        assert_eq!(dag.node(zl).deps, vec![r0, r1], "zL consumes every row");
-        // 2PS row estimates include the staged boundary caches:
-        // row0 = own 64 + outs (z 64 + 2×16) = 160;
-        // row1 = own 64 + 2 caches in (2×16) + z 64 = 160
-        assert_eq!(dag.node(r0).est_bytes, 160);
-        assert_eq!(dag.node(r1).est_bytes, 160);
-
-        // naive: rows edge-free, reduce gated on head
-        let plan = StepPlan::build(&man, Mode::Naive, &mut tracker).unwrap();
-        let pipe = plan.lower(&man).unwrap();
-        let dag = pipe.dag();
-        for r in 0..2 {
-            let fp = dag.find(&format!("naive.fp.row{r}")).unwrap();
-            assert!(dag.node(fp).deps.is_empty());
-        }
-        let head = dag.find("naive.head").unwrap();
-        let red = dag.find("barrier.naive.reduce").unwrap();
-        assert!(dag.node(red).deps.contains(&head));
-
-        // Base: a single step node
-        let plan = StepPlan::build(&man, Mode::Base, &mut tracker).unwrap();
-        let pipe = plan.lower(&man).unwrap();
-        assert_eq!(pipe.dag().len(), 1);
-        assert_eq!(pipe.dag().find("base.step"), Some(0));
     }
 }

@@ -29,6 +29,14 @@ pub fn node_seconds(est_bytes: u64, dev: &DeviceModel) -> f64 {
     (est_bytes as f64 * NODE_FLOPS_PER_BYTE) / (dev.flops_per_sec * dev.slab_efficiency)
 }
 
+/// [`node_seconds`] over a row-program IR node — the cost-model inputs
+/// ride on the node itself (`rowir::Node::est_bytes`), so every consumer
+/// of a lowered `RowProgram` prices work from the same record the
+/// admission ledger and the memory replay read.
+pub fn node_seconds_for(node: &crate::rowir::Node, dev: &DeviceModel) -> f64 {
+    node_seconds(node.est_bytes, dev)
+}
+
 /// List-schedule makespan of a topologically-ordered node sequence — the
 /// modeled objective the `shard::PartitionPolicy::DpBoundary` planner
 /// minimizes and the metric the shard bench reports per assignment.
@@ -176,6 +184,17 @@ mod tests {
         assert!((node_seconds(2 << 20, &d90) - 2.0 * one).abs() < one * 1e-9);
         // weaker device + worse slab efficiency ⇒ slower node
         assert!(node_seconds(1 << 20, &d80) > one);
+    }
+
+    #[test]
+    fn node_seconds_for_reads_the_ir_node() {
+        let mut g = crate::rowir::Graph::new();
+        let id = g.push(crate::rowir::NodeKind::Row, "r", vec![], 1 << 20);
+        let dev = DeviceModel::rtx3090();
+        assert_eq!(
+            node_seconds_for(g.node(id), &dev),
+            node_seconds(1 << 20, &dev)
+        );
     }
 
     #[test]

@@ -29,9 +29,10 @@
 //! | [`baselines`] | Base, Ckp, OffLoad, Tsplit memory/time schedules |
 //! | [`costmodel`] | τ/ι FLOP model, CI/OD counters, relative latency |
 //! | [`runtime`] | PJRT client, manifest, `ExecHandle` executable table, zero-copy `TensorView` plumbing |
-//! | [`sched`] | weak-dependency row scheduler: dependency DAG, memory admission, pipelined worker-pool executor |
-//! | [`shard`] | multi-device row sharding: heterogeneous topologies (`DeviceSpec`), `Blocked`/`CostBalanced`/`DpBoundary` partitioners, transfer lowering, persistent per-device-ledger executor |
-//! | [`coordinator`] | live row coordinator: prebuilt `StepPlan`, serial + pipelined/sharded FP/BP, SGD, training |
+//! | [`rowir`] | the row-program IR (docs/ROWIR.md): task-carrying dependency graph, per-mode lowering, serial interpreter + IR-walk memory replay — the one program every driver runs |
+//! | [`sched`] | weak-dependency row scheduler: memory admission, pipelined worker-pool executor over a `rowir` graph |
+//! | [`shard`] | multi-device row sharding: heterogeneous topologies (`DeviceSpec`), `Blocked`/`CostBalanced`/`DpBoundary` partitioners, transfer lowering (transfers are ordinary IR nodes), persistent per-device-ledger executor |
+//! | [`coordinator`] | live row coordinator: prebuilt `StepPlan` exec table + the serial/pipelined/sharded drivers of one `RowProgram`, SGD, training |
 //! | [`data`] | synthetic 10-class corpus |
 //! | [`metrics`] | counters + report tables for the benches |
 //!
@@ -39,9 +40,10 @@
 //!
 //! The live training step is built around three zero-cost currencies
 //! (docs/HOTPATH.md): borrowed strided [`runtime::TensorView`]s instead of
-//! copied H-slices, interned [`memory::BufId`]s instead of `format!`-ed
-//! tracker keys, and a per-mode `StepPlan` of integer
-//! [`runtime::ExecHandle`]s built once at `Trainer` construction.  The
+//! copied H-slices, a per-mode `StepPlan` of integer
+//! [`runtime::ExecHandle`]s built once at `Trainer` construction, and one
+//! lowered [`rowir::RowProgram`] whose integer replay ledger is the serial
+//! peak accounting (no tracker strings on the step path).  The
 //! `l3_hotpath` bench emits `BENCH_l3_hotpath.json` tracking this
 //! trajectory.
 
@@ -55,6 +57,7 @@ pub mod memory;
 pub mod metrics;
 pub mod model;
 pub mod planner;
+pub mod rowir;
 pub mod runtime;
 pub mod sched;
 pub mod shapes;

@@ -6,6 +6,11 @@
 //!   plan   --net vgg16|resnet50 --device rtx3090|rtx3080 --batch B \
 //!          [--dim H] [--rows N]
 //!          — memory-plan an iteration and print peak/fit per strategy
+//!   plan   --dump-ir [--artifacts DIR] [--out FILE]
+//!          — lower the row-program IR for all 4 modes (artifact bundle's
+//!          manifest when given, the built-in demo bundle otherwise),
+//!          validate() each program and emit the node/task/deps/bytes
+//!          JSON (docs/ROWIR.md); nonzero exit on any lowering regression
 //!   train  --mode base|overl-h|2ps|naive [--steps N] [--lr F] [--artifacts DIR]
 //!          [--workers N] [--devices N] [--device-spec SPEC]
 //!          [--policy blocked|balanced|dp] [--link pcie|nvlink]
@@ -40,9 +45,18 @@ fn parse_flags(args: &[String]) -> HashMap<String, String> {
     let mut i = 0;
     while i < args.len() {
         if let Some(key) = args[i].strip_prefix("--") {
-            let val = args.get(i + 1).cloned().unwrap_or_default();
-            map.insert(key.to_string(), val);
-            i += 2;
+            // a flag followed by another flag (or nothing) is boolean —
+            // present with an empty value (e.g. `--dump-ir --artifacts D`)
+            match args.get(i + 1) {
+                Some(v) if !v.starts_with("--") => {
+                    map.insert(key.to_string(), v.clone());
+                    i += 2;
+                }
+                _ => {
+                    map.insert(key.to_string(), String::new());
+                    i += 1;
+                }
+            }
         } else {
             i += 1;
         }
@@ -88,7 +102,63 @@ fn strategies(net: &Network, dev: &DeviceModel, n_rows: usize) -> Vec<Box<dyn St
     ]
 }
 
+/// `plan --dump-ir`: lower + validate the row program for every mode and
+/// emit the IR as JSON — the CI smoke that catches lowering regressions
+/// without needing artifacts (the built-in demo bundle stands in).
+fn cmd_dump_ir(flags: &HashMap<String, String>) -> Result<(), String> {
+    use lr_cnn::rowir::{self, Mode};
+    use lr_cnn::runtime::Manifest;
+    let man = match flags.get("artifacts").filter(|d| !d.is_empty()) {
+        Some(dir) => Manifest::load(std::path::Path::new(dir)).map_err(|e| e.to_string())?,
+        None => {
+            eprintln!("plan --dump-ir: no --artifacts given, lowering the built-in demo bundle");
+            Manifest::demo(2)
+        }
+    };
+    let mut out = String::from("[\n");
+    for (i, mode) in Mode::ALL.iter().enumerate() {
+        match rowir::lower(&man, *mode) {
+            Ok(program) => {
+                // `lower` validated already; re-check the boundary anyway —
+                // this is the regression tripwire CI runs
+                program
+                    .validate()
+                    .map_err(|e| format!("{} IR invalid: {e}", mode.label()))?;
+                out.push_str(&format!(
+                    "{{\"mode\": \"{}\", \"len\": {}, \"program\": {}}}",
+                    mode.label(),
+                    program.len(),
+                    program.to_json()
+                ));
+            }
+            // an uneven naive split is a *plan* property of this bundle,
+            // not a lowering bug — record it instead of failing the dump
+            Err(lr_cnn::Error::InfeasiblePlan(msg)) => {
+                out.push_str(&format!(
+                    "{{\"mode\": \"{}\", \"infeasible\": \"{}\"}}",
+                    mode.label(),
+                    msg.replace('"', "'")
+                ));
+            }
+            Err(e) => return Err(format!("{}: {e}", mode.label())),
+        }
+        out.push_str(if i + 1 < Mode::ALL.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("]\n");
+    match flags.get("out").filter(|p| !p.is_empty()) {
+        Some(path) => {
+            std::fs::write(path, &out).map_err(|e| e.to_string())?;
+            eprintln!("wrote row-program IR for {} modes to {path}", Mode::ALL.len());
+        }
+        None => print!("{out}"),
+    }
+    Ok(())
+}
+
 fn cmd_plan(flags: &HashMap<String, String>) -> Result<(), String> {
+    if flags.contains_key("dump-ir") {
+        return cmd_dump_ir(flags);
+    }
     let net = net_by_name(flags.get("net").map(String::as_str).unwrap_or("vgg16"))
         .ok_or("unknown --net (vgg16|resnet50|minivgg)")?;
     let dev = device_by_name(flags.get("device").map(String::as_str).unwrap_or("rtx3090"))

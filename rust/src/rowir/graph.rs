@@ -1,0 +1,345 @@
+//! The row dependency graph — structure half of the IR.
+//!
+//! The paper's dependency structure maps directly onto edges:
+//!
+//! * **OverL / naive rows** are fully independent — no edges between them
+//!   (§III-B: halo slabs replicate the overlap instead of sharing it);
+//! * **2PS rows** are weakly dependent — row *r* waits only on row *r−1*'s
+//!   boundary-cache handoff, so the 2PS forward is exactly a chain;
+//! * **barriers** synchronize at the checkpoint/segment boundaries, the
+//!   FP→BP boundary (the FC head), and the deterministic gradient
+//!   reductions.
+//!
+//! The graph is **acyclic by construction**: [`Graph::push`] only accepts
+//! dependencies on already-pushed nodes (`dep < id`), so node ids are a
+//! topological order — the order the serial interpreter executes and the
+//! order every reduction barrier folds its inputs in.  [`Graph::validate`]
+//! re-checks the full invariant set (acyclicity, deps sorted and
+//! deduplicated, labels unique) for graphs that cross an API boundary.
+
+use std::collections::HashSet;
+
+use crate::error::{Error, Result};
+
+use super::task::Task;
+
+/// Index into [`Graph::nodes`]; ids are assigned in push order and form a
+/// topological order of the graph.
+pub type NodeId = usize;
+
+/// What a node represents *structurally* — drives trace attribution, the
+/// shard partitioner's fan detection, and lets property tests state shape
+/// invariants ("2PS rows form a chain") without reading tasks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum NodeKind {
+    /// Independent row work (OverL/naive FP or BP row): no edges between
+    /// rows of the same phase.
+    Row,
+    /// 2PS row: depends only on its predecessor's boundary caches.
+    TpsRow,
+    /// Synchronization / reduction point (segment concat, FC head,
+    /// deterministic gradient accumulation).
+    Barrier,
+    /// Cross-device copy inserted by `shard::ShardPlan::lower` when an
+    /// edge crosses a device boundary.  Carries the payload bytes as both
+    /// `est_bytes` (charged to the destination ledger while the copy is
+    /// in flight) and `out_bytes` (the received slab parked until every
+    /// consumer finishes).  Never appears in a freshly lowered program.
+    Transfer,
+}
+
+/// One schedulable unit of a step: structure (kind, deps), execution
+/// ([`Task`]), and the cost-model inputs (byte estimates) — everything a
+/// driver, the admission ledger, the memory replay and the partitioner
+/// need, on one record.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub kind: NodeKind,
+    /// Attribution label ("fp.segA.row0", "barrier.ck", ...) — built once
+    /// at lowering, never on the step path.  Unique per graph
+    /// ([`Graph::validate`] enforces it: `find(label)` must never
+    /// silently return the first of several matches).
+    pub label: String,
+    /// Direct dependencies (sorted ascending, deduplicated, each `<` this
+    /// node's id).
+    pub deps: Vec<NodeId>,
+    /// What the node does when a driver dispatches it.
+    pub task: Task,
+    /// Projected live bytes while the node runs — the admission-control
+    /// currency (staged input slab + produced outputs; always-resident
+    /// parameters ξ are excluded).  Also the cost model's per-node input
+    /// (`costmodel::node_seconds_for`).
+    pub est_bytes: u64,
+    /// Bytes of the node's *output* that stay parked in handoff slots
+    /// after it finishes, until every consumer has finished (subset of
+    /// `est_bytes`).  The admission ledger retains a grant of this size so
+    /// the byte bound covers interim slot residency, not just
+    /// concurrently-running nodes.  `0` (the [`Graph::push`] default) means
+    /// "nothing parked".
+    pub out_bytes: u64,
+}
+
+/// A step's row dependency graph (the row-program IR).
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    nodes: Vec<Node>,
+}
+
+impl Graph {
+    pub fn new() -> Self {
+        Graph::default()
+    }
+
+    /// Append an [`Task::Opaque`] node with nothing parked.  `deps` may
+    /// contain duplicates (they are removed); every dep must refer to an
+    /// already-pushed node.
+    ///
+    /// Panics on a forward/self dependency — that is a lowering bug, not a
+    /// runtime condition (drivers never mutate a graph).
+    pub fn push(
+        &mut self,
+        kind: NodeKind,
+        label: impl Into<String>,
+        deps: Vec<NodeId>,
+        est_bytes: u64,
+    ) -> NodeId {
+        self.push_task(kind, label, deps, est_bytes, 0, Task::Opaque)
+    }
+
+    /// [`Graph::push`] plus an explicit parked-output byte count: the
+    /// producer's output grant is retained by the admission ledger until
+    /// all consumers finish (interim handoff-slot residency).
+    pub fn push_out(
+        &mut self,
+        kind: NodeKind,
+        label: impl Into<String>,
+        deps: Vec<NodeId>,
+        est_bytes: u64,
+        out_bytes: u64,
+    ) -> NodeId {
+        self.push_task(kind, label, deps, est_bytes, out_bytes, Task::Opaque)
+    }
+
+    /// The full constructor: structure + bytes + the node's [`Task`].
+    /// The lowering (`rowir::lower`) and the shard transfer rewrite use
+    /// this; hand-built graphs usually want [`Graph::push`]/[`Graph::push_out`].
+    pub fn push_task(
+        &mut self,
+        kind: NodeKind,
+        label: impl Into<String>,
+        mut deps: Vec<NodeId>,
+        est_bytes: u64,
+        out_bytes: u64,
+        task: Task,
+    ) -> NodeId {
+        let id = self.nodes.len();
+        deps.sort_unstable();
+        deps.dedup();
+        let label = label.into();
+        if let Some(&bad) = deps.iter().find(|&&d| d >= id) {
+            panic!("node '{label}' (id {id}) depends on not-yet-pushed node {bad}");
+        }
+        self.nodes.push(Node {
+            kind,
+            label,
+            deps,
+            task,
+            est_bytes,
+            out_bytes,
+        });
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    /// Nodes with no dependencies (immediately runnable).
+    pub fn roots(&self) -> Vec<NodeId> {
+        (0..self.len())
+            .filter(|&i| self.nodes[i].deps.is_empty())
+            .collect()
+    }
+
+    /// Find a node by its label (test/attribution convenience; O(n)).
+    /// [`Graph::validate`] guarantees labels are unique, so the match is
+    /// the *only* match, not merely the first.
+    pub fn find(&self, label: &str) -> Option<NodeId> {
+        self.nodes.iter().position(|n| n.label == label)
+    }
+
+    /// Largest single admission request — a budget at least this big keeps
+    /// the executor's peak under the budget (below it, oversize nodes are
+    /// admitted only on an idle pool and the peak is bounded by
+    /// `max(budget, max_node_est)`).
+    pub fn max_est_bytes(&self) -> u64 {
+        self.nodes.iter().map(|n| n.est_bytes).max().unwrap_or(0)
+    }
+
+    /// Number of direct dependents per node — how many consumers must
+    /// finish before a parked output grant can be released.
+    pub fn consumer_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.len()];
+        for node in &self.nodes {
+            for &d in &node.deps {
+                counts[d] += 1;
+            }
+        }
+        counts
+    }
+
+    /// Re-check every documented invariant for graphs handed across an
+    /// API boundary:
+    ///
+    /// 1. **acyclicity** — every dep `<` its node's id (ids topological);
+    /// 2. **deps sorted + deduplicated** — strictly ascending, so barrier
+    ///    reductions that fold `deps` in order fold them in serial order
+    ///    exactly once;
+    /// 3. **labels unique** — `find(label)` resolves to one node (shard
+    ///    lowering hands graphs across an API boundary; a duplicate label
+    ///    would make label-based lookups silently pick the first match).
+    pub fn validate(&self) -> Result<()> {
+        let mut labels: HashSet<&str> = HashSet::with_capacity(self.len());
+        for (id, n) in self.nodes.iter().enumerate() {
+            if let Some(&bad) = n.deps.iter().find(|&&d| d >= id) {
+                return Err(Error::Sched(format!(
+                    "node '{}' (id {id}) has forward/self dep {bad} — not a DAG",
+                    n.label
+                )));
+            }
+            if let Some(w) = n.deps.windows(2).find(|w| w[0] >= w[1]) {
+                return Err(Error::Sched(format!(
+                    "node '{}' (id {id}) deps not sorted+deduplicated: {} then {}",
+                    n.label, w[0], w[1]
+                )));
+            }
+            if !labels.insert(n.label.as_str()) {
+                return Err(Error::Sched(format!(
+                    "duplicate node label '{}' (second at id {id}) — find() would \
+                     silently return the first match",
+                    n.label
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_assigns_topological_ids() {
+        let mut g = Graph::new();
+        let a = g.push(NodeKind::Row, "a", vec![], 10);
+        let b = g.push(NodeKind::Row, "b", vec![], 20);
+        let c = g.push(NodeKind::Barrier, "c", vec![a, b, b, a], 0); // dups ok
+        assert_eq!((a, b, c), (0, 1, 2));
+        assert_eq!(g.node(c).deps, vec![0, 1]); // sorted + deduped
+        assert_eq!(g.roots(), vec![0, 1]);
+        assert_eq!(g.max_est_bytes(), 20);
+        assert!(g.validate().is_ok());
+        assert_eq!(g.find("b"), Some(1));
+        assert_eq!(g.find("zzz"), None);
+        assert_eq!(g.consumer_counts(), vec![1, 1, 0]);
+        assert_eq!(g.node(a).task, Task::Opaque, "push defaults to Opaque");
+    }
+
+    #[test]
+    fn push_defaults_to_no_parked_output() {
+        let mut g = Graph::new();
+        let a = g.push(NodeKind::Row, "a", vec![], 10);
+        let b = g.push_out(NodeKind::Row, "b", vec![a], 20, 8);
+        assert_eq!(g.node(a).out_bytes, 0);
+        assert_eq!(g.node(b).out_bytes, 8);
+        let t = g.push_task(NodeKind::Transfer, "xfer.b.d1", vec![b], 8, 8, Task::Transfer);
+        assert_eq!(g.node(t).kind, NodeKind::Transfer);
+        assert_eq!(g.node(t).task, Task::Transfer);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn push_task_carries_the_task() {
+        let mut g = Graph::new();
+        let r = g.push_task(
+            NodeKind::Row,
+            "fp.segA.row1",
+            vec![],
+            64,
+            16,
+            Task::FpRow { seg: 0, row: 1 },
+        );
+        assert_eq!(g.node(r).task, Task::FpRow { seg: 0, row: 1 });
+    }
+
+    #[test]
+    #[should_panic(expected = "not-yet-pushed")]
+    fn forward_dep_panics_at_build() {
+        let mut g = Graph::new();
+        g.push(NodeKind::Row, "a", vec![3], 0);
+    }
+
+    #[test]
+    fn validate_catches_hand_broken_acyclicity() {
+        let mut g = Graph::new();
+        g.push(NodeKind::Row, "a", vec![], 0);
+        // corrupt it through the clone-edit path a fuzzer could hit
+        let mut broken = g.clone();
+        broken.nodes_mut_for_test()[0].deps.push(0); // self-dep
+        let err = broken.validate().unwrap_err();
+        assert!(err.to_string().contains("not a DAG"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_unsorted_deps() {
+        let mut g = Graph::new();
+        let a = g.push(NodeKind::Row, "a", vec![], 0);
+        let b = g.push(NodeKind::Row, "b", vec![], 0);
+        g.push(NodeKind::Barrier, "red", vec![a, b], 0);
+        let mut broken = g.clone();
+        broken.nodes_mut_for_test()[2].deps = vec![b, a]; // out of order
+        let err = broken.validate().unwrap_err();
+        assert!(err.to_string().contains("sorted"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_duplicate_deps() {
+        let mut g = Graph::new();
+        let a = g.push(NodeKind::Row, "a", vec![], 0);
+        g.push(NodeKind::Barrier, "red", vec![a], 0);
+        let mut broken = g.clone();
+        broken.nodes_mut_for_test()[1].deps = vec![a, a]; // duplicate
+        let err = broken.validate().unwrap_err();
+        assert!(err.to_string().contains("sorted"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_duplicate_labels() {
+        let mut g = Graph::new();
+        g.push(NodeKind::Row, "row", vec![], 0);
+        g.push(NodeKind::Row, "row", vec![], 0); // same label, different node
+        let err = g.validate().unwrap_err();
+        assert!(err.to_string().contains("duplicate node label"), "{err}");
+        // find() on the broken graph demonstrates why: only id 0 reachable
+        assert_eq!(g.find("row"), Some(0));
+    }
+
+    impl Graph {
+        fn nodes_mut_for_test(&mut self) -> &mut Vec<Node> {
+            &mut self.nodes
+        }
+    }
+}

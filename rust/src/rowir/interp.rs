@@ -1,0 +1,340 @@
+//! The serial interpreter — the reference driver of a [`RowProgram`].
+//!
+//! [`run`] executes every node in strictly ascending [`NodeId`] order on
+//! the caller's thread.  Node ids are a topological order by construction
+//! ([`super::Graph::push_task`]), so this *is* the serial schedule — the
+//! one the pipelined and sharded executors are proven bit-identical to.
+//! There is no separate hand-written serial step path anymore: "serial"
+//! means "interpret the program in id order", which makes bit-identity to
+//! serial a structural property of the other drivers rather than an
+//! empirical one.
+//!
+//! ## Determinism contract (docs/ROWIR.md)
+//!
+//! * the runner is invoked exactly once per node, in ascending id order;
+//! * a node runs only after all of its dependencies (all `< id`) ran;
+//! * [`Task::Transfer`] nodes are executed by the interpreter itself (a
+//!   no-op on one ledger) — the runner never sees them, matching the
+//!   sharded executor's contract.
+//!
+//! ## Byte accounting
+//!
+//! The interpreter replays the same projected-byte ledger the admission
+//! system bounds and `ShardPlan::replay_ledgers` predicts: while a node
+//! runs, its `est_bytes` working set is held; after it finishes, its
+//! `out_bytes` stay parked until its last consumer finishes.  The reported
+//! [`InterpOutcome::peak_bytes`] therefore equals the single-device
+//! `memory::sim` replay peak of the same graph **exactly** (property-
+//! tested), and is the serial step's peak statistic.
+//!
+//! [`schedules`] is the allocation-schedule form of the same walk: it
+//! derives per-device `memory::sim::Schedule`s from an IR walk, replacing
+//! the bespoke replay code the shard planner used to carry.
+
+use crate::error::Result;
+use crate::memory::sim::Schedule;
+
+use super::graph::{Graph, NodeId};
+use super::task::Task;
+use super::RowProgram;
+
+/// Result of an interpreted run.
+#[derive(Debug, Clone)]
+pub struct InterpOutcome {
+    /// Peak of the projected-byte ledger over the walk: running working
+    /// sets + parked handoff bytes — the same currency the pipelined
+    /// executors' admission ledgers bound, and exactly the single-device
+    /// `memory::sim` replay peak of the graph.
+    pub peak_bytes: u64,
+    /// Ledger bytes still held after the walk — `0` for any well-formed
+    /// run: every parked output is released by its last executed
+    /// consumer, and a closure target (like a terminal node) parks
+    /// nothing because its output is the walk's *result*, not interim
+    /// residency.  Non-zero means a mis-built graph.
+    pub final_bytes: u64,
+    /// Nodes executed (transfers included; the whole program for
+    /// [`run`], the dependency closure for [`run_closure`]).
+    pub visited: usize,
+}
+
+/// Interpret the whole program: `runner(id, task)` for every node, in
+/// strictly ascending id order, transfers executed by the interpreter.
+pub fn run<F>(program: &RowProgram, runner: F) -> Result<InterpOutcome>
+where
+    F: FnMut(NodeId, Task) -> Result<()>,
+{
+    let include = vec![true; program.len()];
+    run_subset(program, &include, runner)
+}
+
+/// Interpret only `target`'s dependency closure (its transitive deps plus
+/// itself), in ascending id order — the forward-only entry point: for
+/// 2PS the z^L barrier depends only on the chain, so the checkpoint half
+/// of the program is skipped exactly as the hand-written forward path
+/// used to.  The closure is dependency-closed by construction, so the
+/// determinism contract holds unchanged on the subset.
+pub fn run_closure<F>(program: &RowProgram, target: NodeId, runner: F) -> Result<InterpOutcome>
+where
+    F: FnMut(NodeId, Task) -> Result<()>,
+{
+    let graph = program.graph();
+    let mut include = vec![false; graph.len()];
+    if target < graph.len() {
+        // deps are all `< id`, so one descending sweep marks the closure
+        include[target] = true;
+        for id in (0..=target).rev() {
+            if include[id] {
+                for &d in &graph.node(id).deps {
+                    include[d] = true;
+                }
+            }
+        }
+    }
+    run_subset(program, &include, runner)
+}
+
+/// The walk both entry points share: execute the `include`-marked nodes
+/// (a dependency-closed set) in ascending id order, replaying the
+/// projected-byte ledger.  Consumer counts are restricted to the subset,
+/// so parked outputs release when their last *executed* consumer
+/// finishes and a node with no in-subset consumers (a terminal, or the
+/// closure target whose output is the walk's result) parks nothing —
+/// every well-formed walk drains to `final_bytes == 0`.
+fn run_subset<F>(program: &RowProgram, include: &[bool], mut runner: F) -> Result<InterpOutcome>
+where
+    F: FnMut(NodeId, Task) -> Result<()>,
+{
+    let graph = program.graph();
+    // consumers within the subset only
+    let mut left = vec![0usize; graph.len()];
+    for (id, node) in graph.nodes().iter().enumerate() {
+        if include[id] {
+            for &d in &node.deps {
+                left[d] += 1;
+            }
+        }
+    }
+    let mut cur = 0u64;
+    let mut peak = 0u64;
+    let mut visited = 0usize;
+    for id in 0..graph.len() {
+        if !include[id] {
+            continue;
+        }
+        let node = graph.node(id);
+        // working set held while the node runs
+        cur += node.est_bytes;
+        peak = peak.max(cur);
+        if !node.task.is_transfer() {
+            runner(id, node.task)?;
+        }
+        cur -= node.est_bytes;
+        visited += 1;
+        // outputs stay parked until the last in-subset consumer finishes
+        if left[id] > 0 && node.out_bytes > 0 {
+            cur += node.out_bytes;
+            peak = peak.max(cur);
+        }
+        // this node was a consumer: release deps it was the last reader of
+        for &d in &node.deps {
+            left[d] -= 1;
+            if left[d] == 0 && graph.node(d).out_bytes > 0 {
+                cur -= graph.node(d).out_bytes;
+            }
+        }
+    }
+    Ok(InterpOutcome {
+        peak_bytes: peak,
+        final_bytes: cur,
+        visited,
+    })
+}
+
+/// Serial-order replay of a (possibly device-assigned) graph as one
+/// allocation schedule per device: each node allocs its working set,
+/// frees it at finish, then parks its output bytes until its last
+/// consumer finishes.  `memory::sim::simulate` on each schedule yields
+/// the exact per-device peak of a serial-order execution — the tight
+/// admission budget (`ShardPlan::replay_ledgers` clamps it to device
+/// memory).
+///
+/// `device_of[id]` assigns node `id` to a device lane `< devices`; pass
+/// `&vec![0; graph.len()]` with `devices == 1` for the unsharded replay
+/// (whose peak [`run`] reproduces without building schedules).
+pub fn schedules(graph: &Graph, device_of: &[usize], devices: usize) -> Vec<Schedule> {
+    debug_assert_eq!(device_of.len(), graph.len());
+    let mut scheds: Vec<Schedule> = (0..devices).map(|_| Schedule::new()).collect();
+    let mut left = graph.consumer_counts();
+    for id in 0..graph.len() {
+        let node = graph.node(id);
+        let s = &mut scheds[device_of[id]];
+        s.mark(node.label.clone());
+        let run = s.intern(format!("run.{}", node.label));
+        s.alloc_id(run, node.est_bytes);
+        s.free_id(run);
+        if left[id] > 0 && node.out_bytes > 0 {
+            s.alloc(format!("park.{}", node.label), node.out_bytes);
+        }
+        for &dep in &node.deps {
+            left[dep] -= 1;
+            if left[dep] == 0 && graph.node(dep).out_bytes > 0 {
+                let name = format!("park.{}", graph.node(dep).label);
+                scheds[device_of[dep]].free(name);
+            }
+        }
+    }
+    scheds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::sim;
+    use crate::rowir::graph::NodeKind;
+
+    /// rows → barrier → rows → barrier with parked outputs (the lowered
+    /// step-graph shape).
+    fn fan_program(rows: usize) -> RowProgram {
+        let mut g = Graph::new();
+        let fp: Vec<NodeId> = (0..rows)
+            .map(|r| g.push_out(NodeKind::Row, format!("fp{r}"), vec![], 100, 40))
+            .collect();
+        let head = g.push_out(NodeKind::Barrier, "head", fp, 100, 40);
+        let bp: Vec<NodeId> = (0..rows)
+            .map(|r| g.push_out(NodeKind::Row, format!("bp{r}"), vec![head], 100, 40))
+            .collect();
+        g.push(NodeKind::Barrier, "reduce", bp, 0);
+        RowProgram::new(g).unwrap()
+    }
+
+    #[test]
+    fn visits_every_node_in_ascending_id_order() {
+        let prog = fan_program(4);
+        let mut seen: Vec<NodeId> = Vec::new();
+        let out = run(&prog, |id, _| {
+            seen.push(id);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(seen, (0..prog.len()).collect::<Vec<_>>());
+        assert_eq!(out.visited, prog.len());
+        assert_eq!(out.final_bytes, 0, "a complete run drains the ledger");
+    }
+
+    #[test]
+    fn peak_matches_the_sim_replay_exactly() {
+        let prog = fan_program(3);
+        let out = run(&prog, |_, _| Ok(())).unwrap();
+        let sched = &schedules(prog.graph(), &vec![0; prog.len()], 1)[0];
+        let rep = sim::simulate(sched).unwrap();
+        assert_eq!(out.peak_bytes, rep.peak_bytes);
+        assert_eq!(out.final_bytes, rep.final_bytes);
+    }
+
+    #[test]
+    fn parked_outputs_count_until_the_last_consumer() {
+        let mut g = Graph::new();
+        // a's 100-byte output is consumed only by c, so it sits parked
+        // while b runs
+        let a = g.push_out(NodeKind::Row, "a", vec![], 100, 100);
+        let b = g.push(NodeKind::Row, "b", vec![a], 10);
+        g.push(NodeKind::Barrier, "c", vec![a, b], 5);
+        let prog = RowProgram::new(g).unwrap();
+        let out = run(&prog, |_, _| Ok(())).unwrap();
+        // while b runs: parked(a)=100 + running(b)=10
+        assert_eq!(out.peak_bytes, 110);
+        assert_eq!(out.final_bytes, 0);
+    }
+
+    #[test]
+    fn closure_run_stops_at_the_target_and_drains() {
+        let prog = fan_program(2);
+        // head's closure = {fp0, fp1, head}; the BP rows never run
+        let head = prog.graph().find("head").unwrap();
+        let mut seen = Vec::new();
+        let out = run_closure(&prog, head, |id, _| {
+            seen.push(id);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(seen, vec![0, 1, 2]);
+        assert_eq!(out.visited, 3);
+        // the target's output is the result, not interim residency — it
+        // parks nothing (consumer counts are closure-restricted), and
+        // the fp parks were released when head (their last in-closure
+        // consumer) finished
+        assert_eq!(out.final_bytes, 0);
+    }
+
+    /// The closure skips nodes the target does not depend on — the 2PS
+    /// forward shape: a side fan (the checkpoint half) must not execute
+    /// when the target chain never reads it.
+    #[test]
+    fn closure_skips_independent_side_nodes() {
+        let mut g = Graph::new();
+        let side = g.push_out(NodeKind::Row, "side", vec![], 50, 20);
+        let _side_bar = g.push(NodeKind::Barrier, "side.bar", vec![side], 10);
+        let a = g.push(NodeKind::Row, "chain0", vec![], 8);
+        let b = g.push(NodeKind::Row, "chain1", vec![a], 8);
+        let zl = g.push(NodeKind::Barrier, "zl", vec![a, b], 4);
+        let prog = RowProgram::new(g).unwrap();
+        let mut seen = Vec::new();
+        let out = run_closure(&prog, zl, |id, _| {
+            seen.push(id);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(seen, vec![a, b, zl], "side fan skipped entirely");
+        assert_eq!(out.visited, 3);
+        assert_eq!(out.final_bytes, 0);
+    }
+
+    #[test]
+    fn transfers_are_executed_by_the_interpreter_not_the_runner() {
+        let mut g = Graph::new();
+        let a = g.push_out(NodeKind::Row, "a", vec![], 10, 10);
+        let t = g.push_task(NodeKind::Transfer, "xfer.a.d1", vec![a], 10, 10, Task::Transfer);
+        g.push(NodeKind::Barrier, "red", vec![t], 5);
+        let prog = RowProgram::new(g).unwrap();
+        let mut seen = Vec::new();
+        run(&prog, |id, task| {
+            assert!(!task.is_transfer());
+            seen.push(id);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(seen, vec![0, 2], "the transfer never reaches the runner");
+    }
+
+    #[test]
+    fn runner_error_stops_the_walk() {
+        let prog = fan_program(2);
+        let mut ran = 0usize;
+        let res = run(&prog, |id, _| {
+            ran += 1;
+            if id == 1 {
+                Err(crate::error::Error::Runtime("boom".into()))
+            } else {
+                Ok(())
+            }
+        });
+        assert!(res.is_err());
+        assert_eq!(ran, 2, "nodes after the failure never run");
+    }
+
+    #[test]
+    fn per_device_schedules_split_by_assignment() {
+        let prog = fan_program(2);
+        // fp0 on 0, fp1 on 1, rest on 0
+        let mut dev = vec![0usize; prog.len()];
+        dev[1] = 1;
+        let scheds = schedules(prog.graph(), &dev, 2);
+        assert_eq!(scheds.len(), 2);
+        for s in &scheds {
+            assert_eq!(sim::simulate(s).unwrap().final_bytes, 0, "drains");
+        }
+        // device 1 holds only fp1: run 100 (its park is freed on device 1
+        // when the head — device 0 — consumes it)
+        assert_eq!(sim::simulate(&scheds[1]).unwrap().peak_bytes, 100);
+    }
+}

@@ -1,0 +1,179 @@
+//! `rowir` — the row-program IR, from lowering to execution
+//! (docs/ROWIR.md).
+//!
+//! The paper's core move is breaking the layer-by-layer column dataflow
+//! into a row dataflow.  This module makes that dataflow a first-class,
+//! **single** artifact: [`lower::lower`] compiles a manifest + [`Mode`]
+//! into one [`RowProgram`] — a [`Graph`] whose every [`Node`] carries its
+//! structure (kind, deps), its execution ([`Task`]) and its cost-model
+//! inputs (byte estimates) — and every downstream layer consumes that one
+//! program:
+//!
+//! * the serial [`interp`] (execute nodes in id order — *the* reference
+//!   schedule; there is no hand-written serial step path anymore),
+//! * the pipelined `sched` executor (worker pool under memory admission),
+//! * the sharded `shard` partitioner/plan (transfers become ordinary IR
+//!   nodes carrying [`Task::Transfer`]),
+//! * the per-device `memory::sim` replay ([`interp::schedules`] derives
+//!   the allocation schedules from an IR walk),
+//! * the `costmodel` (per-node seconds from `Node::est_bytes`).
+//!
+//! Serial, pipelined and sharded are therefore three **drivers of one
+//! program**, and bit-identity to serial holds by construction: every
+//! driver runs the same tasks, and every floating-point reduction lives
+//! inside a barrier task that folds its inputs in id (= serial) order.
+//!
+//! | module | role |
+//! |---|---|
+//! | [`graph`] | acyclic-by-construction row dependency graph (task-carrying nodes) |
+//! | [`task`] | the node work items, [`Task::Transfer`] included |
+//! | [`lower`] | manifest + mode → [`RowProgram`] (the only dataflow encoding) |
+//! | [`interp`] | serial driver + IR-walk memory replay |
+
+pub mod graph;
+pub mod interp;
+pub mod lower;
+pub mod task;
+
+pub use graph::{Graph, Node, NodeId, NodeKind};
+pub use interp::InterpOutcome;
+pub use lower::{lower, naive_row_extents};
+pub use task::Task;
+
+use crate::error::Result;
+
+/// Execution strategy a program is lowered for — the paper's Fig. 11
+/// branches plus Base.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// column-centric single-executable step (the paper's Base)
+    Base,
+    /// OverL-H: segmented halo slabs, checkpoint after pool2
+    RowHybrid,
+    /// 2PS forward (boundary caches handed between rows) + row-slab BP
+    Tps,
+    /// broken w/o-sharing ablation (Fig. 11's diverging branch)
+    Naive,
+}
+
+impl Mode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Mode::Base => "Base",
+            Mode::RowHybrid => "OverL-H",
+            Mode::Tps => "2PS",
+            Mode::Naive => "naive(w/o sharing)",
+        }
+    }
+
+    /// All four modes, in the order the proofs and the IR dump sweep them.
+    pub const ALL: [Mode; 4] = [Mode::Base, Mode::RowHybrid, Mode::Tps, Mode::Naive];
+}
+
+/// A validated, lowered row program: the one artifact every driver runs.
+///
+/// A `RowProgram` is a [`Graph`] that passed [`Graph::validate`] —
+/// acyclic, deps sorted + deduplicated, labels unique.  Construction goes
+/// through [`RowProgram::new`], so holding one is proof of validity.
+#[derive(Debug, Clone)]
+pub struct RowProgram {
+    graph: Graph,
+}
+
+impl RowProgram {
+    /// Wrap a graph, re-checking every invariant ([`Graph::validate`]).
+    pub fn new(graph: Graph) -> Result<RowProgram> {
+        graph.validate()?;
+        Ok(RowProgram { graph })
+    }
+
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    pub fn len(&self) -> usize {
+        self.graph.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.graph.is_empty()
+    }
+
+    /// Node `id`'s work item.
+    pub fn task(&self, id: NodeId) -> Task {
+        self.graph.node(id).task
+    }
+
+    /// First node carrying `task` (the forward-prefix boundary lookup).
+    pub fn find_task(&self, task: Task) -> Option<NodeId> {
+        self.graph.nodes().iter().position(|n| n.task == task)
+    }
+
+    /// Re-run the validity check (paranoia hook for callers receiving a
+    /// program across an API boundary; `new` already validated).
+    pub fn validate(&self) -> Result<()> {
+        self.graph.validate()
+    }
+
+    /// Deterministic JSON dump of the lowered program — one object per
+    /// node in id order with label, kind, task, deps and byte estimates.
+    /// What `lr_cnn plan --dump-ir` emits and the CI smoke step validates.
+    pub fn to_json(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::from("{\n  \"schema\": 1,\n  \"nodes\": [\n");
+        for (id, node) in self.graph.nodes().iter().enumerate() {
+            let deps: Vec<String> = node.deps.iter().map(|d| d.to_string()).collect();
+            let _ = write!(
+                out,
+                "    {{\"id\": {id}, \"label\": \"{}\", \"kind\": \"{:?}\", \
+                 \"task\": \"{:?}\", \"deps\": [{}], \"est_bytes\": {}, \
+                 \"out_bytes\": {}}}",
+                node.label,
+                node.kind,
+                node.task,
+                deps.join(", "),
+                node.est_bytes,
+                node.out_bytes
+            );
+            out.push_str(if id + 1 < self.graph.len() { ",\n" } else { "\n" });
+        }
+        let _ = writeln!(out, "  ],\n  \"len\": {}\n}}", self.graph.len());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_rejects_invalid_graphs() {
+        let mut g = Graph::new();
+        g.push(NodeKind::Row, "dup", vec![], 1);
+        g.push(NodeKind::Row, "dup", vec![], 1);
+        assert!(RowProgram::new(g).is_err(), "duplicate labels rejected");
+    }
+
+    #[test]
+    fn task_lookup_and_json_dump() {
+        let mut g = Graph::new();
+        let a = g.push_task(NodeKind::Row, "a", vec![], 10, 4, Task::FpRow { seg: 0, row: 0 });
+        g.push_task(NodeKind::Barrier, "red", vec![a], 0, 0, Task::ReduceA);
+        let p = RowProgram::new(g).unwrap();
+        assert_eq!(p.task(a), Task::FpRow { seg: 0, row: 0 });
+        assert_eq!(p.find_task(Task::ReduceA), Some(1));
+        assert_eq!(p.find_task(Task::Head), None);
+        let json = p.to_json();
+        assert!(crate::util::json::JsonValue::parse(&json).is_ok(), "{json}");
+        assert_eq!(json, p.to_json(), "dump is deterministic");
+        assert!(json.contains("\"task\": \"FpRow { seg: 0, row: 0 }\""), "{json}");
+        assert!(json.contains("\"est_bytes\": 10"), "{json}");
+    }
+
+    #[test]
+    fn mode_labels_and_sweep_order() {
+        assert_eq!(Mode::ALL.len(), 4);
+        assert_eq!(Mode::Base.label(), "Base");
+        assert_eq!(Mode::Tps.label(), "2PS");
+    }
+}

@@ -1,0 +1,78 @@
+//! What a row-program node *does* — the execution half of the IR.
+//!
+//! Every [`crate::rowir::Node`] carries exactly one `Task`.  A driver
+//! (the serial [`crate::rowir::interp`], the pipelined `sched` executor,
+//! the sharded `shard` executor) walks the graph and dispatches each
+//! node's task to the mode's handler; there is no side-table mapping node
+//! ids to work, so a lowered program cannot drift out of sync with the
+//! schedule that runs it.
+//!
+//! Row/barrier tasks reference plan geometry by *index* (segment, row);
+//! the handlers resolve those indices against the trainer's prebuilt
+//! `StepPlan` table.  [`Task::Transfer`] marks a cross-device copy
+//! inserted by the shard lowering — executed by the pool itself, never
+//! handed to a runner.  [`Task::Opaque`] is the default for hand-built
+//! graphs (tests, benches, synthetic workloads) whose work is identified
+//! by node id alone.
+
+/// One node's work item.  `Copy` so drivers can hand it across the
+/// dispatch boundary without touching the graph's lifetime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Task {
+    /// The column-centric single-executable step (`Mode::Base`).
+    BaseStep,
+    /// OverL forward row `row` of segment `seg` (0 = below checkpoint).
+    FpRow { seg: usize, row: usize },
+    /// Checkpoint barrier: concat of segment A's row outputs.
+    CkBarrier,
+    /// 2PS forward row: consumes row `row−1`'s boundary caches.
+    TpsRow { row: usize },
+    /// z^L concat barrier (upper-half rows or the 2PS chain).
+    ZlBarrier,
+    /// FP→BP boundary: the FC head (loss, dzL, head grads).
+    Head,
+    /// Backward row of segment B (slab from the checkpoint, δ from dzL).
+    BpRowB { row: usize },
+    /// Reduce barrier after BP-B: row grads + dz_ck in serial order.
+    ReduceB,
+    /// Backward row of segment A (slab from x, δ from dz_ck).
+    BpRowA { row: usize },
+    /// Final reduce: segment A's row grads, emits the step result.
+    ReduceA,
+    /// Naive (w/o sharing) forward row.
+    NaiveFp { row: usize },
+    /// Naive z^L concat barrier.
+    NaiveZl,
+    /// Naive FC head.
+    NaiveHead,
+    /// Naive backward row.
+    NaiveBp { row: usize },
+    /// Naive final reduce.
+    NaiveReduce,
+    /// Cross-device copy (shard lowering).  Drivers execute it themselves
+    /// (ledger + trace bookkeeping, modeled latency); runners never see it.
+    Transfer,
+    /// No intrinsic meaning: the node id is the work item (hand-built
+    /// graphs in tests/benches).  The default for [`crate::rowir::Graph::push`].
+    Opaque,
+}
+
+impl Task {
+    /// `true` for the copies the shard lowering inserts — the one task a
+    /// driver must execute itself instead of dispatching to a runner.
+    pub fn is_transfer(&self) -> bool {
+        matches!(self, Task::Transfer)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_predicate() {
+        assert!(Task::Transfer.is_transfer());
+        assert!(!Task::Opaque.is_transfer());
+        assert!(!Task::FpRow { seg: 0, row: 1 }.is_transfer());
+    }
+}

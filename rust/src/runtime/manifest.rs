@@ -311,4 +311,129 @@ impl Manifest {
     pub fn hlo_path(&self, dir: &Path, name: &str) -> Result<PathBuf> {
         Ok(dir.join(&self.executable(name)?.path))
     }
+
+    /// A miniature in-memory bundle with every executable the four modes
+    /// resolve, carrying **shape-accurate** I/O signatures (batch 1, c 1,
+    /// H 8, W 4; two rows per phase) so the `rowir` lowering derives real
+    /// byte estimates and a deterministic fake backend can validate
+    /// argument shapes:
+    ///
+    /// * x `[1,1,8,4]`; seg rows: in `[0,5]`/`[3,8]` (halo slabs), out
+    ///   `[0,4]`/`[4,8]`
+    /// * params: W1 `[1,1,3,3]`, b1 `[1]`, Wfc `[32,2]`, bfc `[2]`
+    /// * head: `(zL, y1h, Wfc, bfc) → (loss, dzL, dWfc, dbfc)`
+    ///
+    /// `naive_rows` sets the naive equal split (2 is feasible for H=8;
+    /// 3 exercises the infeasible-remainder path).  This is what
+    /// `lr_cnn plan --dump-ir` lowers when no artifact bundle is present
+    /// (the CI smoke path) and what the offline proof suites drive their
+    /// fake backends against — HLO files are *not* materialized, so it
+    /// parses but cannot be executed by a real PJRT runtime.
+    pub fn demo(naive_rows: usize) -> Manifest {
+        let h = 8;
+        let exes: &[(&str, &str, &str)] = &[
+            (
+                "base_step",
+                "[[1,1,8,4],[1,2],[1,1,3,3],[1],[32,2],[2]]",
+                "[[1],[1,1,3,3],[1],[32,2],[2]]",
+            ),
+            ("base_fwd", "[[1,1,8,4],[1,1,3,3],[1]]", "[[1,1,8,4]]"),
+            (
+                "head",
+                "[[1,1,8,4],[1,2],[32,2],[2]]",
+                "[[1],[1,1,8,4],[32,2],[2]]",
+            ),
+            ("segA_row0_fwd", "[[1,1,5,4],[1,1,3,3],[1]]", "[[1,1,4,4]]"),
+            (
+                "segA_row0_bwd",
+                "[[1,1,5,4],[1,1,3,3],[1],[1,1,4,4]]",
+                "[[1,1,3,3],[1],[1,1,4,4]]",
+            ),
+            ("segA_row1_fwd", "[[1,1,5,4],[1,1,3,3],[1]]", "[[1,1,4,4]]"),
+            (
+                "segA_row1_bwd",
+                "[[1,1,5,4],[1,1,3,3],[1],[1,1,4,4]]",
+                "[[1,1,3,3],[1],[1,1,4,4]]",
+            ),
+            ("segB_row0_fwd", "[[1,1,5,4],[1,1,3,3],[1]]", "[[1,1,4,4]]"),
+            (
+                "segB_row0_bwd",
+                "[[1,1,5,4],[1,1,3,3],[1],[1,1,4,4]]",
+                "[[1,1,3,3],[1],[1,1,5,4],[1,1,4,4]]",
+            ),
+            ("segB_row1_fwd", "[[1,1,5,4],[1,1,3,3],[1]]", "[[1,1,4,4]]"),
+            (
+                "segB_row1_bwd",
+                "[[1,1,5,4],[1,1,3,3],[1],[1,1,4,4]]",
+                "[[1,1,3,3],[1],[1,1,5,4],[1,1,4,4]]",
+            ),
+            (
+                "tps_row0_fwd",
+                "[[1,1,4,4],[1,1,3,3],[1]]",
+                "[[1,1,4,4],[1,1,1,4],[1,1,1,4]]", // z + 2 caches
+            ),
+            (
+                "tps_row1_fwd",
+                "[[1,1,4,4],[1,1,1,4],[1,1,1,4],[1,1,3,3],[1]]",
+                "[[1,1,4,4]]", // z only (last row)
+            ),
+            ("naive_row0_fwd", "[[1,1,4,4],[1,1,3,3],[1]]", "[[1,1,4,4]]"),
+            (
+                "naive_row0_bwd",
+                "[[1,1,4,4],[1,1,3,3],[1],[1,1,4,4]]",
+                "[[1,1,3,3],[1],[1,1,4,4]]",
+            ),
+            ("naive_row1_fwd", "[[1,1,4,4],[1,1,3,3],[1]]", "[[1,1,4,4]]"),
+            (
+                "naive_row1_bwd",
+                "[[1,1,4,4],[1,1,3,3],[1],[1,1,4,4]]",
+                "[[1,1,3,3],[1],[1,1,4,4]]",
+            ),
+        ];
+        let exe_json: Vec<String> = exes
+            .iter()
+            .map(|(name, inputs, outputs)| {
+                format!(
+                    r#"{{"name": "{name}", "path": "{name}.hlo", "kind": "k",
+                         "inputs": {inputs}, "outputs": {outputs}}}"#
+                )
+            })
+            .collect();
+        let seg = |name: &str| {
+            format!(
+                r#"{{"name": "{name}", "h_in": {h}, "h_out": {h}, "c_in": 1, "c_out": 1,
+                     "param_lo": 0, "param_hi": 2,
+                     "rows": [
+                       {{"out_iv": [0, 4], "in_iv": [0, 5], "chain": []}},
+                       {{"out_iv": [4, 8], "in_iv": [3, 8], "chain": []}}
+                     ]}}"#
+            )
+        };
+        let text = format!(
+            r#"{{
+              "model": {{
+                "name": "demo", "batch": 1, "h": {h}, "w": 4, "n_classes": 2,
+                "layers": [], "heights": [{h}, {h}], "w_out": 4, "fc_in": 32,
+                "param_shapes": [[1, 1, 3, 3], [1], [32, 2], [2]],
+                "n_conv_params": 2
+              }},
+              "plan": {{
+                "ckpt_split": 1, "n_rows": 2, "tps_rows": 2, "naive_rows": {naive_rows},
+                "segments": [{seg_a}, {seg_b}],
+                "tps": {{
+                  "cuts": [0, 4, 8],
+                  "rows": [
+                    {{"own_iv": [0, 4], "bounds": [[0, 4]], "cache_in": [null], "cache_out": [[3, 4]]}},
+                    {{"own_iv": [4, 8], "bounds": [[4, 8]], "cache_in": [[3, 4]], "cache_out": [null]}}
+                  ]
+                }}
+              }},
+              "executables": [{exes}]
+            }}"#,
+            seg_a = seg("segA"),
+            seg_b = seg("segB"),
+            exes = exe_json.join(",\n")
+        );
+        Manifest::parse(&text).expect("demo manifest parses")
+    }
 }

@@ -26,9 +26,9 @@ use std::collections::BTreeSet;
 use std::sync::{Condvar, Mutex};
 
 use crate::error::{Error, Result};
+use crate::rowir::{Graph, NodeId};
 
 use super::admission::Admission;
-use super::dag::{Dag, NodeId};
 use super::trace::{Trace, TraceEvent, TraceKind};
 use super::SchedConfig;
 
@@ -74,18 +74,21 @@ impl State {
     }
 }
 
-/// Execute `dag` on `cfg.workers` threads under `cfg.mem_budget`.
+/// Execute `graph` on `cfg.workers` threads under `cfg.mem_budget`.
 ///
 /// `runner(id)` performs node `id`'s work; it is called exactly once per
-/// node, from an arbitrary worker thread, only after all of the node's
-/// dependencies finished.  On success every node ran; on error the first
-/// failure is returned and the remaining pending nodes were skipped.
-pub fn run<F>(dag: &Dag, cfg: &SchedConfig, runner: F) -> Result<ExecOutcome>
+/// non-transfer node, from an arbitrary worker thread, only after all of
+/// the node's dependencies finished.  `Task::Transfer` nodes are executed
+/// by the executor itself (ledger + trace only — the shared cross-driver
+/// contract; see `rowir::interp` and `shard::ShardedExecutor`).  On
+/// success every node ran; on error the first failure is returned and the
+/// remaining pending nodes were skipped.
+pub fn run<F>(graph: &Graph, cfg: &SchedConfig, runner: F) -> Result<ExecOutcome>
 where
     F: Fn(NodeId) -> Result<()> + Sync,
 {
-    dag.validate()?;
-    let n = dag.len();
+    graph.validate()?;
+    let n = graph.len();
     if n == 0 {
         return Ok(ExecOutcome {
             peak_bytes: 0,
@@ -97,7 +100,7 @@ where
 
     let mut indeg = vec![0usize; n];
     let mut succ: Vec<Vec<NodeId>> = vec![Vec::new(); n];
-    for (id, node) in dag.nodes().iter().enumerate() {
+    for (id, node) in graph.nodes().iter().enumerate() {
         indeg[id] = node.deps.len();
         for &d in &node.deps {
             succ[d].push(id);
@@ -124,7 +127,7 @@ where
             let cv = &cv;
             let succ = &succ;
             let runner = &runner;
-            scope.spawn(move || worker_loop(w, dag, succ, state, cv, runner));
+            scope.spawn(move || worker_loop(w, graph, succ, state, cv, runner));
         }
     });
 
@@ -150,7 +153,7 @@ where
 
 fn worker_loop<F>(
     w: usize,
-    dag: &Dag,
+    graph: &Graph,
     succ: &[Vec<NodeId>],
     state: &Mutex<State>,
     cv: &Condvar,
@@ -164,7 +167,7 @@ fn worker_loop<F>(
         Err(_) => return,
     };
     loop {
-        if st.aborted || st.done == dag.len() {
+        if st.aborted || st.done == graph.len() {
             return;
         }
         // deterministic pick: lowest-id ready node that admission grants
@@ -172,7 +175,7 @@ fn worker_loop<F>(
             .ready
             .iter()
             .copied()
-            .find(|&id| st.admission.can_admit(dag.node(id).est_bytes));
+            .find(|&id| st.admission.can_admit(graph.node(id).est_bytes));
         let id = match pick {
             Some(id) => id,
             None => {
@@ -180,7 +183,7 @@ fn worker_loop<F>(
                     // nothing running, nothing admissible: with an acyclic
                     // DAG and idle-pool admission this is unreachable —
                     // flag it instead of hanging the run
-                    let pending = dag.len() - st.done;
+                    let pending = graph.len() - st.done;
                     if st.error.is_none() {
                         st.error = Some(Error::Sched(format!(
                             "scheduler stall: {pending} nodes pending, none runnable"
@@ -198,7 +201,8 @@ fn worker_loop<F>(
             }
         };
         st.ready.remove(&id);
-        let est = dag.node(id).est_bytes;
+        let est = graph.node(id).est_bytes;
+        let is_transfer = graph.node(id).task.is_transfer();
         st.admission.admit(est);
         st.record(id, TraceKind::Dispatched, w);
         drop(st);
@@ -207,18 +211,27 @@ fn worker_loop<F>(
         // release and the notify below, leaving sibling workers parked in
         // cv.wait forever (thread::scope would then never join).  Convert
         // it to the same abort path a runner error takes.
-        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| runner(id)))
-            .unwrap_or_else(|payload| {
-                let msg = payload
-                    .downcast_ref::<&str>()
-                    .map(|s| s.to_string())
-                    .or_else(|| payload.downcast_ref::<String>().cloned())
-                    .unwrap_or_else(|| "non-string panic payload".into());
-                Err(Error::Sched(format!(
-                    "node '{}' panicked: {msg}",
-                    dag.node(id).label
-                )))
-            });
+        //
+        // Transfer nodes are executed by the executor itself — every
+        // driver shares this contract (rowir::interp, ShardedExecutor),
+        // so a transfer-lowered sharded graph replays here as the
+        // single-ledger reference without handing copies to the runner.
+        let res = if is_transfer {
+            Ok(())
+        } else {
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| runner(id)))
+                .unwrap_or_else(|payload| {
+                    let msg = payload
+                        .downcast_ref::<&str>()
+                        .map(|s| s.to_string())
+                        .or_else(|| payload.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "non-string panic payload".into());
+                    Err(Error::Sched(format!(
+                        "node '{}' panicked: {msg}",
+                        graph.node(id).label
+                    )))
+                })
+        };
 
         st = match state.lock() {
             Ok(g) => g,
@@ -231,16 +244,16 @@ fn worker_loop<F>(
                 // interim slot residency: keep the output grant parked
                 // until every consumer finishes (terminal nodes park
                 // nothing — their output is the step result)
-                let out = dag.node(id).out_bytes;
+                let out = graph.node(id).out_bytes;
                 if out > 0 && !succ[id].is_empty() {
                     st.admission.park(out);
                 }
                 // this node was a consumer: release deps whose last
                 // consumer just finished
-                for &d in &dag.node(id).deps {
+                for &d in &graph.node(id).deps {
                     st.succ_left[d] -= 1;
                     if st.succ_left[d] == 0 {
-                        let parked = dag.node(d).out_bytes;
+                        let parked = graph.node(d).out_bytes;
                         if parked > 0 {
                             st.admission.unpark(parked);
                         }
@@ -315,7 +328,7 @@ impl<T: Clone> Slot<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sched::dag::NodeKind;
+    use crate::rowir::NodeKind;
     use crate::sched::Policy;
     use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -329,8 +342,8 @@ mod tests {
     }
 
     /// rows -> barrier -> rows -> barrier (the OverL step shape).
-    fn fan_dag(rows: usize, bytes: u64) -> Dag {
-        let mut d = Dag::new();
+    fn fan_dag(rows: usize, bytes: u64) -> Graph {
+        let mut d = Graph::new();
         let fp: Vec<NodeId> = (0..rows)
             .map(|r| d.push(NodeKind::Row, format!("fp{r}"), vec![], bytes))
             .collect();
@@ -342,11 +355,11 @@ mod tests {
         d
     }
 
-    fn run_and_check(dag: &Dag, workers: usize, budget: u64) -> ExecOutcome {
-        let hits = Slot::<()>::many(dag.len());
-        let out = run(dag, &cfg(workers, budget), |id| hits[id].put("hit", ()))
+    fn run_and_check(graph: &Graph, workers: usize, budget: u64) -> ExecOutcome {
+        let hits = Slot::<()>::many(graph.len());
+        let out = run(graph, &cfg(workers, budget), |id| hits[id].put("hit", ()))
             .expect("run succeeds");
-        out.trace.check_complete(dag).expect("complete causal trace");
+        out.trace.check_complete(graph).expect("complete causal trace");
         for h in &hits {
             h.take("hit").expect("every node ran exactly once");
         }
@@ -400,7 +413,7 @@ mod tests {
 
     #[test]
     fn oversize_node_degrades_to_serial_not_deadlock() {
-        let mut dag = Dag::new();
+        let mut dag = Graph::new();
         let a = dag.push(NodeKind::Row, "small", vec![], 10);
         dag.push(NodeKind::Row, "huge", vec![a], 1_000);
         let out = run_and_check(&dag, 2, 100);
@@ -447,9 +460,32 @@ mod tests {
         }
     }
 
+    /// The cross-driver transfer contract on the single-ledger executor:
+    /// a transfer-lowered graph replays here without the runner ever
+    /// seeing the copy nodes (same as `rowir::interp` and the sharded
+    /// pool), while their bytes still count against admission.
+    #[test]
+    fn transfer_nodes_never_reach_the_runner() {
+        use crate::rowir::Task;
+        let mut dag = Graph::new();
+        let a = dag.push_out(NodeKind::Row, "a", vec![], 10, 10);
+        let t = dag.push_task(NodeKind::Transfer, "xfer.a.d1", vec![a], 10, 10, Task::Transfer);
+        dag.push(NodeKind::Barrier, "red", vec![t], 5);
+        let seen = Slot::<()>::many(dag.len());
+        let out = run(&dag, &cfg(2, u64::MAX), |id| {
+            assert!(!dag.node(id).task.is_transfer(), "runner saw a transfer");
+            seen[id].put("seen", ())
+        })
+        .unwrap();
+        out.trace.check_complete(&dag).unwrap();
+        seen[a].take("seen").unwrap();
+        assert!(seen[t].take("seen").is_err(), "transfer skipped the runner");
+        seen[2].take("seen").unwrap();
+    }
+
     #[test]
     fn empty_dag_is_a_noop() {
-        let out = run(&Dag::new(), &cfg(4, 0), |_| Ok(())).unwrap();
+        let out = run(&Graph::new(), &cfg(4, 0), |_| Ok(())).unwrap();
         assert_eq!(out.peak_bytes, 0);
         assert_eq!(out.device_peaks, vec![0]);
         assert!(out.trace.events.is_empty());
@@ -462,7 +498,7 @@ mod tests {
     /// peak of 100 here and undercounted the interim 100-byte slab.
     #[test]
     fn parked_slot_residency_counts_toward_the_peak() {
-        let mut dag = Dag::new();
+        let mut dag = Graph::new();
         // a's 100-byte output is consumed only by c, so it sits parked
         // while b runs
         let a = dag.push_out(NodeKind::Row, "a", vec![], 100, 100);
@@ -481,7 +517,7 @@ mod tests {
     /// residency — it must not stay parked.
     #[test]
     fn terminal_outputs_are_not_parked() {
-        let mut dag = Dag::new();
+        let mut dag = Graph::new();
         let a = dag.push_out(NodeKind::Row, "a", vec![], 20, 20);
         dag.push_out(NodeKind::Barrier, "out", vec![a], 30, 30);
         let out = run_and_check(&dag, 2, u64::MAX);
@@ -506,7 +542,7 @@ mod tests {
     /// shared counter the runner advances.
     #[test]
     fn chain_runs_strictly_in_order() {
-        let mut dag = Dag::new();
+        let mut dag = Graph::new();
         let mut prev: Option<NodeId> = None;
         for r in 0..6 {
             let deps = prev.map(|p| vec![p]).unwrap_or_default();

@@ -1,34 +1,37 @@
 //! `sched` — the weak-dependency row scheduler (docs/SCHEDULER.md).
 //!
 //! The paper exploits row independence for *memory*; this subsystem
-//! exploits it for *time* as well.  A `coordinator::StepPlan` lowers into
-//! an explicit row dependency [`Dag`] — no edges between OverL rows,
-//! boundary-cache handoff edges chaining consecutive 2PS rows, barrier
-//! nodes at checkpoint/segment and FP→BP boundaries — which the
-//! [`executor`] runs on a pool of worker threads under [`Admission`]
-//! control, keeping the concurrent working set under a byte budget so
-//! pipelining does not re-inflate the peak the row-centric design exists
-//! to shrink (see docs/SCHEDULER.md for the bound's exact scope).
+//! exploits it for *time* as well.  `rowir::lower` compiles each mode
+//! into one row program over an explicit dependency [`Graph`]
+//! (`rust/src/rowir/`) — no edges between OverL rows, boundary-cache
+//! handoff edges chaining consecutive 2PS rows, barrier nodes at
+//! checkpoint/segment and FP→BP boundaries — which the [`executor`] runs
+//! on a pool of worker threads under [`Admission`] control, keeping the
+//! concurrent working set under a byte budget so pipelining does not
+//! re-inflate the peak the row-centric design exists to shrink (see
+//! docs/SCHEDULER.md for the bound's exact scope).
 //!
-//! Results are **bit-identical** to the serial path: workers only compute
-//! per-row outputs; every floating-point reduction (gradient
-//! accumulation, δ-accumulation, concatenation) happens inside a barrier
-//! node in the same fixed order the serial loop uses.
+//! Results are **bit-identical** to the serial `rowir::interp` driver by
+//! construction: both run the same program, workers only compute per-row
+//! outputs, and every floating-point reduction (gradient accumulation,
+//! δ-accumulation, concatenation) happens inside a barrier task that
+//! folds its inputs in id (= serial) order.
 //!
 //! | module | role |
 //! |---|---|
-//! | [`dag`] | acyclic-by-construction row dependency DAG |
 //! | [`admission`] | projected-byte admission ledger + progress rule |
 //! | [`executor`] | Condvar worker pool, deterministic ready-pick, [`Slot`] handoff |
 //! | [`trace`] | per-row event trace with a deterministic canonical view |
+//!
+//! (The graph type itself lives in [`crate::rowir`]; the re-exports below
+//! keep the scheduler's public surface self-contained.)
 
 pub mod admission;
-pub mod dag;
 pub mod executor;
 pub mod trace;
 
+pub use crate::rowir::{Graph, Node, NodeId, NodeKind, Task};
 pub use admission::Admission;
-pub use dag::{Dag, Node, NodeId, NodeKind};
 pub use executor::{run, ExecOutcome, Slot};
 pub use trace::{Trace, TraceEvent, TraceKind};
 
@@ -37,10 +40,10 @@ use crate::memory::DeviceModel;
 /// How `Trainer::step` executes its rows.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Policy {
-    /// Today's path: one row at a time on the caller's thread, tracker
-    /// byte accounting.  The default.
+    /// The reference driver: `rowir::interp` runs the program's nodes in
+    /// id order on the caller's thread.  The default.
     Serial,
-    /// DAG execution on a worker pool under memory admission.
+    /// Graph execution on a worker pool under memory admission.
     Pipelined,
 }
 

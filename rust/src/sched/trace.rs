@@ -13,7 +13,7 @@
 
 use crate::error::{Error, Result};
 
-use super::dag::{Dag, NodeId};
+use crate::rowir::{Graph, NodeId};
 
 /// What happened to a node.  `Ord` follows a node's lifecycle so the
 /// canonical sort reads naturally.
@@ -85,11 +85,11 @@ impl Trace {
         v
     }
 
-    /// Check the trace describes a complete, successful run of `dag`:
+    /// Check the trace describes a complete, successful run of `graph`:
     /// every node dispatched exactly once and finished exactly once, and
     /// no dispatch before all of the node's deps finished.
-    pub fn check_complete(&self, dag: &Dag) -> Result<()> {
-        let n = dag.len();
+    pub fn check_complete(&self, graph: &Graph) -> Result<()> {
+        let n = graph.len();
         let mut dispatched = vec![0u32; n];
         let mut finished = vec![0u32; n];
         for ev in &self.events {
@@ -102,7 +102,7 @@ impl Trace {
                 TraceKind::Failed => {
                     return Err(Error::Sched(format!(
                         "node '{}' failed",
-                        dag.node(ev.node).label
+                        graph.node(ev.node).label
                     )))
                 }
             }
@@ -111,7 +111,7 @@ impl Trace {
             if dispatched[id] != 1 || finished[id] != 1 {
                 return Err(Error::Sched(format!(
                     "node '{}' dispatched {}×, finished {}× (want 1×/1×)",
-                    dag.node(id).label,
+                    graph.node(id).label,
                     dispatched[id],
                     finished[id]
                 )));
@@ -124,12 +124,12 @@ impl Trace {
         for ev in ordered {
             match ev.kind {
                 TraceKind::Dispatched => {
-                    for &d in &dag.node(ev.node).deps {
+                    for &d in &graph.node(ev.node).deps {
                         if !done[d] {
                             return Err(Error::Sched(format!(
                                 "node '{}' dispatched before dep '{}' finished",
-                                dag.node(ev.node).label,
-                                dag.node(d).label
+                                graph.node(ev.node).label,
+                                graph.node(d).label
                             )));
                         }
                     }
@@ -147,17 +147,17 @@ impl Trace {
     /// bytes, and run-level counters.  Node devices come from the
     /// dispatch events; everything is emitted in id/device order, so the
     /// output is deterministic.
-    pub fn to_json(&self, dag: &Dag) -> String {
+    pub fn to_json(&self, graph: &Graph) -> String {
         use std::fmt::Write as _;
         // device per node, from its Dispatched event (0 if never seen)
-        let mut dev = vec![0usize; dag.len()];
+        let mut dev = vec![0usize; graph.len()];
         for e in &self.events {
             if e.kind == TraceKind::Dispatched && e.node < dev.len() {
                 dev[e.node] = e.device;
             }
         }
         let mut out = String::from("{\n  \"schema\": 2,\n  \"nodes\": [\n");
-        for (id, node) in dag.nodes().iter().enumerate() {
+        for (id, node) in graph.nodes().iter().enumerate() {
             let deps: Vec<String> = node.deps.iter().map(|d| d.to_string()).collect();
             let _ = write!(
                 out,
@@ -170,7 +170,7 @@ impl Trace {
                 dev[id],
                 deps.join(", ")
             );
-            out.push_str(if id + 1 < dag.len() { ",\n" } else { "\n" });
+            out.push_str(if id + 1 < graph.len() { ",\n" } else { "\n" });
         }
         // per-device lanes: node ids grouped by device, ascending
         let mut lanes: Vec<usize> = dev.clone();
@@ -178,7 +178,7 @@ impl Trace {
         lanes.dedup();
         out.push_str("  ],\n  \"lanes\": [\n");
         for (i, &d) in lanes.iter().enumerate() {
-            let ids: Vec<String> = (0..dag.len())
+            let ids: Vec<String> = (0..graph.len())
                 .filter(|&id| dev[id] == d)
                 .map(|id| id.to_string())
                 .collect();
@@ -191,16 +191,16 @@ impl Trace {
             out.push_str(if i + 1 < lanes.len() { ",\n" } else { "\n" });
         }
         // transfer spans (cross-device copies) for flame attribution
-        let xfers: Vec<usize> = (0..dag.len())
-            .filter(|&id| dag.node(id).kind == super::dag::NodeKind::Transfer)
+        let xfers: Vec<usize> = (0..graph.len())
+            .filter(|&id| graph.node(id).kind == crate::rowir::NodeKind::Transfer)
             .collect();
         out.push_str("  ],\n  \"transfers\": [\n");
         for (i, &id) in xfers.iter().enumerate() {
             let _ = write!(
                 out,
                 "    {{\"id\": {id}, \"label\": \"{}\", \"bytes\": {}, \"device\": {}}}",
-                dag.node(id).label,
-                dag.node(id).est_bytes,
+                graph.node(id).label,
+                graph.node(id).est_bytes,
                 dev[id]
             );
             out.push_str(if i + 1 < xfers.len() { ",\n" } else { "\n" });
@@ -218,10 +218,10 @@ impl Trace {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sched::dag::NodeKind;
+    use crate::rowir::NodeKind;
 
-    fn two_node_dag() -> Dag {
-        let mut d = Dag::new();
+    fn two_node_dag() -> Graph {
+        let mut d = Graph::new();
         let a = d.push(NodeKind::Row, "a", vec![], 5);
         d.push(NodeKind::Barrier, "b", vec![a], 0);
         d
@@ -304,7 +304,7 @@ mod tests {
 
     #[test]
     fn json_groups_nodes_into_device_lanes_and_lists_transfers() {
-        let mut dag = Dag::new();
+        let mut dag = Graph::new();
         let a = dag.push(NodeKind::Row, "a", vec![], 5);
         let t = dag.push_out(NodeKind::Transfer, "xfer.a.d1", vec![a], 8, 8);
         dag.push(NodeKind::Barrier, "b", vec![t], 0);

@@ -13,11 +13,15 @@
 //! set + parked handoff bytes, which is exactly how sharding multiplies
 //! aggregate capacity without re-inflating any one device's peak.
 //!
-//! [`NodeKind::Transfer`] nodes are executed by the pool itself (the
-//! runner is never invoked for them): in this simulated backend the data
-//! already lives in shared host memory, so a transfer is a ledger +
-//! trace event with modeled latency, not a copy — which is also why the
-//! sharded result is bit-identical to serial *by construction*.
+//! Transfer nodes — ordinary IR nodes carrying `rowir::Task::Transfer`,
+//! recognized from the node record itself rather than a side-table — are
+//! executed by the pool (the runner is never invoked for them): in this
+//! simulated backend the data already lives in shared host memory, so a
+//! transfer is a ledger + trace event with modeled latency, not a copy —
+//! which is also why the sharded result is bit-identical to serial *by
+//! construction*.  The runner is invoked with **sharded-graph node ids**;
+//! callers read per-node context (its task, its label) straight off
+//! `plan.graph()`.
 //!
 //! ## Safety
 //!
@@ -40,14 +44,15 @@ use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 
 use crate::error::{Error, Result};
+use crate::rowir::NodeId;
 use crate::sched::admission::Admission;
 use crate::sched::trace::{Trace, TraceEvent, TraceKind};
-use crate::sched::{ExecOutcome, NodeId};
+use crate::sched::ExecOutcome;
 
 use super::plan::ShardPlan;
 
-/// The type-erased per-node work function (invoked with **base-DAG** node
-/// ids; transfers never reach it).
+/// The type-erased per-node work function (invoked with **sharded-graph**
+/// node ids; transfers never reach it).
 type DynRunner = dyn Fn(NodeId) -> Result<()> + Sync;
 
 /// One in-flight step: erased borrows + mutable scheduling state.
@@ -147,16 +152,17 @@ impl ShardedExecutor {
         self.workers.len()
     }
 
-    /// Execute one step of `plan` on the pool.  `runner(base_id)` is
-    /// called exactly once per non-transfer node, only after all of the
-    /// node's (sharded) dependencies finished; transfers are handled by
-    /// the pool.  Returns the per-device admission peaks and the trace.
+    /// Execute one step of `plan` on the pool.  `runner(id)` is called
+    /// with the sharded-graph node id, exactly once per non-transfer
+    /// node, only after all of the node's dependencies finished;
+    /// transfers ([`crate::rowir::Task::Transfer`]) are handled by the
+    /// pool.  Returns the per-device admission peaks and the trace.
     pub fn run_step<F>(&self, plan: &ShardPlan, runner: F) -> Result<ExecOutcome>
     where
         F: Fn(NodeId) -> Result<()> + Sync,
     {
-        let dag = plan.dag();
-        let n = dag.len();
+        let graph = plan.graph();
+        let n = graph.len();
         if n == 0 {
             return Ok(ExecOutcome {
                 peak_bytes: 0,
@@ -165,7 +171,7 @@ impl ShardedExecutor {
             });
         }
         let mut indeg = vec![0usize; n];
-        for (id, node) in dag.nodes().iter().enumerate() {
+        for (id, node) in graph.nodes().iter().enumerate() {
             indeg[id] = node.deps.len();
         }
         let ready: BTreeSet<NodeId> = (0..n).filter(|&i| indeg[i] == 0).collect();
@@ -175,7 +181,7 @@ impl ShardedExecutor {
             runner: dyn_runner as *const DynRunner,
             n,
             indeg,
-            succ_left: dag.consumer_counts(),
+            succ_left: graph.consumer_counts(),
             ready,
             ledgers: plan.budgets().iter().map(|&b| Admission::new(b)).collect(),
             running: 0,
@@ -265,11 +271,11 @@ fn worker_loop(w: usize, shared: &Shared) {
         // SAFETY: run_step keeps the plan/runner alive until this worker
         // re-locks and decrements `running` (module docs).
         let plan = unsafe { &*job.plan };
-        let dag = plan.dag();
+        let graph = plan.graph();
         // deterministic ready-pick: the lowest NodeId whose device ledger
         // admits — a pure function of (NodeId, DeviceId) and ledger state
         let pick = job.ready.iter().copied().find(|&id| {
-            job.ledgers[plan.device_of()[id]].can_admit(dag.node(id).est_bytes)
+            job.ledgers[plan.device_of()[id]].can_admit(graph.node(id).est_bytes)
         });
         let Some(id) = pick else {
             if job.ledgers.iter().all(|l| l.active() == 0) {
@@ -292,8 +298,8 @@ fn worker_loop(w: usize, shared: &Shared) {
         };
         job.ready.remove(&id);
         let device = plan.device_of()[id];
-        let est = dag.node(id).est_bytes;
-        let base = plan.orig()[id];
+        let est = graph.node(id).est_bytes;
+        let is_transfer = graph.node(id).task.is_transfer();
         let runner = job.runner;
         job.ledgers[device].admit(est);
         job.running += 1;
@@ -303,24 +309,23 @@ fn worker_loop(w: usize, shared: &Shared) {
         // run outside the lock; a panic must not skip the bookkeeping
         // below (it would strand parked siblings), so convert it to the
         // error path exactly like sched::run does
-        let res = match base {
+        let res = if is_transfer {
             // transfer: modeled latency only — the payload already lives
             // in shared host memory in this simulated backend
-            None => Ok(()),
-            Some(b) => {
-                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    // SAFETY: see dispatch above — `running` pins the step
-                    unsafe { (&*runner)(b) }
-                }))
-                .unwrap_or_else(|payload| {
-                    let msg = payload
-                        .downcast_ref::<&str>()
-                        .map(|s| s.to_string())
-                        .or_else(|| payload.downcast_ref::<String>().cloned())
-                        .unwrap_or_else(|| "non-string panic payload".into());
-                    Err(Error::Sched(format!("node {b} panicked: {msg}")))
-                })
-            }
+            Ok(())
+        } else {
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                // SAFETY: see dispatch above — `running` pins the step
+                unsafe { (&*runner)(id) }
+            }))
+            .unwrap_or_else(|payload| {
+                let msg = payload
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| payload.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "non-string panic payload".into());
+                Err(Error::Sched(format!("node {id} panicked: {msg}")))
+            })
         };
 
         st = lock(shared);
@@ -334,14 +339,14 @@ fn worker_loop(w: usize, shared: &Shared) {
         match res {
             Ok(()) => {
                 job.done += 1;
-                let out = dag.node(id).out_bytes;
+                let out = graph.node(id).out_bytes;
                 if out > 0 && !plan.succ()[id].is_empty() {
                     job.ledgers[device].park(out);
                 }
-                for &d in &dag.node(id).deps {
+                for &d in &graph.node(id).deps {
                     job.succ_left[d] -= 1;
                     if job.succ_left[d] == 0 {
-                        let parked = dag.node(d).out_bytes;
+                        let parked = graph.node(d).out_bytes;
                         if parked > 0 {
                             job.ledgers[plan.device_of()[d]].unpark(parked);
                         }
@@ -373,7 +378,8 @@ fn worker_loop(w: usize, shared: &Shared) {
 mod tests {
     use super::*;
     use crate::memory::DeviceModel;
-    use crate::sched::{Dag, NodeKind, Slot};
+    use crate::rowir::{Graph, NodeKind};
+    use crate::sched::Slot;
     use crate::shard::partition::PartitionPolicy;
     use crate::shard::topology::{LinkKind, Topology};
     use std::sync::atomic::{AtomicUsize, Ordering};
@@ -383,8 +389,8 @@ mod tests {
     }
 
     /// rows → barrier → rows → barrier, with parked outputs.
-    fn fan_dag(rows: usize) -> Dag {
-        let mut d = Dag::new();
+    fn fan_dag(rows: usize) -> Graph {
+        let mut d = Graph::new();
         let fp: Vec<NodeId> = (0..rows)
             .map(|r| d.push_out(NodeKind::Row, format!("fp{r}"), vec![], 100, 40))
             .collect();
@@ -402,13 +408,17 @@ mod tests {
     }
 
     fn run_all(exec: &ShardedExecutor, plan: &ShardPlan) -> ExecOutcome {
-        // one slot per *base* node: proves each ran exactly once
+        // one slot per *base* node: proves each ran exactly once (the
+        // runner receives sharded ids; `orig` maps them back)
         let base_len = plan.orig().iter().flatten().count();
         let hits = Slot::<()>::many(base_len);
         let out = exec
-            .run_step(plan, |b| hits[b].put("hit", ()))
+            .run_step(plan, |id| {
+                let b = plan.orig()[id].expect("runner never sees transfers");
+                hits[b].put("hit", ())
+            })
             .expect("step succeeds");
-        out.trace.check_complete(plan.dag()).expect("causal trace");
+        out.trace.check_complete(plan.graph()).expect("causal trace");
         for h in &hits {
             h.take("hit").expect("every base node ran exactly once");
         }
@@ -462,7 +472,11 @@ mod tests {
         let called = AtomicUsize::new(0);
         let exec = ShardedExecutor::new(2);
         let out = exec
-            .run_step(&p, |_| {
+            .run_step(&p, |id| {
+                assert!(
+                    !p.graph().node(id).task.is_transfer(),
+                    "runner must never see a transfer"
+                );
                 called.fetch_add(1, Ordering::SeqCst);
                 Ok(())
             })
@@ -470,16 +484,16 @@ mod tests {
         let base_nodes = p.orig().iter().flatten().count();
         assert_eq!(called.load(Ordering::SeqCst), base_nodes);
         // every node (transfers included) appears in the trace
-        assert_eq!(out.trace.events.len(), 2 * p.dag().len());
+        assert_eq!(out.trace.events.len(), 2 * p.graph().len());
     }
 
     #[test]
     fn runner_error_aborts_and_pool_survives_for_the_next_step() {
         let p = plan(4, 2, PartitionPolicy::Blocked);
+        let head = p.graph().find("head").expect("head barrier");
         let exec = ShardedExecutor::new(2);
-        let res = exec.run_step(&p, |b| {
-            if b == 4 {
-                // the head barrier in base ids
+        let res = exec.run_step(&p, |id| {
+            if id == head {
                 Err(Error::Runtime("boom".into()))
             } else {
                 Ok(())
@@ -494,8 +508,8 @@ mod tests {
     fn runner_panic_is_converted_and_pool_survives() {
         let p = plan(4, 1, PartitionPolicy::Blocked);
         let exec = ShardedExecutor::new(2);
-        let res = exec.run_step(&p, |b| {
-            if b == 0 {
+        let res = exec.run_step(&p, |id| {
+            if id == 0 {
                 panic!("boom-panic");
             }
             Ok(())
@@ -510,7 +524,7 @@ mod tests {
     #[test]
     fn empty_plan_is_a_noop() {
         let p = ShardPlan::build(
-            &Dag::new(),
+            &Graph::new(),
             &topo(2),
             PartitionPolicy::Blocked,
             vec![u64::MAX; 2],
@@ -554,7 +568,7 @@ mod tests {
     /// park/unpark semantics and must not drift apart.
     #[test]
     fn parked_slot_residency_counts_on_the_sharded_path_too() {
-        let mut base = Dag::new();
+        let mut base = Graph::new();
         let a = base.push_out(NodeKind::Row, "a", vec![], 100, 100);
         let b = base.push(NodeKind::Row, "b", vec![a], 10);
         base.push(NodeKind::Barrier, "c", vec![a, b], 5);

@@ -14,7 +14,7 @@
 //! |---|---|
 //! | [`topology`] | heterogeneous `DeviceModel` topologies (`DeviceSpec` presets + capacity scaling) + PCIe/NVLink peer links |
 //! | [`partition`] | `Blocked` / `CostBalanced` / `DpBoundary` node→device assignment + `modeled_makespan` |
-//! | [`plan`] | cross-device edges → `Transfer` nodes; per-device `memory::sim` replay |
+//! | [`plan`] | cross-device edges → ordinary `rowir` transfer nodes; per-device `memory::sim` replay via the IR walk |
 //! | [`exec`] | persistent worker pool, per-device admission ledgers |
 
 pub mod exec;

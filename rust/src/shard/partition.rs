@@ -27,7 +27,7 @@
 
 use crate::costmodel;
 use crate::error::{Error, Result};
-use crate::sched::{Dag, NodeId, NodeKind};
+use crate::rowir::{Graph, NodeId, NodeKind};
 
 use super::topology::{DeviceId, Topology};
 
@@ -58,7 +58,7 @@ impl Partitioner {
     /// byte budget (`ledgers.len() == topo.len()`); `u64::MAX` entries
     /// disable the steer.  Every node is assigned exactly once; the
     /// result is deterministic across calls.
-    pub fn assign(&self, dag: &Dag, topo: &Topology, ledgers: &[u64]) -> Result<Vec<DeviceId>> {
+    pub fn assign(&self, dag: &Graph, topo: &Topology, ledgers: &[u64]) -> Result<Vec<DeviceId>> {
         if ledgers.len() != topo.len() {
             return Err(Error::Sched(format!(
                 "partitioner: {} ledgers for {} devices",
@@ -88,7 +88,7 @@ impl Partitioner {
 /// Contiguous row ranges: a maximal run of `Row` nodes (a parallel fan —
 /// fans are pushed with consecutive ids by `StepPlan::lower`) of length k
 /// maps row j to device ⌊j·D/k⌋.  Everything else pins to device 0.
-fn blocked(dag: &Dag, devices: usize) -> Vec<DeviceId> {
+fn blocked(dag: &Graph, devices: usize) -> Vec<DeviceId> {
     let mut dev = vec![0usize; dag.len()];
     let mut i = 0;
     while i < dag.len() {
@@ -114,7 +114,7 @@ fn blocked(dag: &Dag, devices: usize) -> Vec<DeviceId> {
 /// walk: the partial assignment, per-device modeled load, serial-replay
 /// resident (parked) bytes and outstanding consumer counts.
 struct Placement<'a> {
-    dag: &'a Dag,
+    dag: &'a Graph,
     topo: &'a Topology,
     ledgers: &'a [u64],
     dev: Vec<DeviceId>,
@@ -128,7 +128,7 @@ struct Placement<'a> {
 }
 
 impl<'a> Placement<'a> {
-    fn new(dag: &'a Dag, topo: &'a Topology, ledgers: &'a [u64]) -> Placement<'a> {
+    fn new(dag: &'a Graph, topo: &'a Topology, ledgers: &'a [u64]) -> Placement<'a> {
         Placement {
             dag,
             topo,
@@ -145,7 +145,7 @@ impl<'a> Placement<'a> {
     /// cross-device inputs.
     fn placed_seconds(&self, id: NodeId, c: DeviceId) -> f64 {
         let node = self.dag.node(id);
-        let mut cost = costmodel::node_seconds(node.est_bytes, self.topo.device(c));
+        let mut cost = costmodel::node_seconds_for(node, self.topo.device(c));
         for &dep in &node.deps {
             let payload = payload_bytes(self.dag, dep);
             cost += self.topo.transfer_seconds(payload, self.dev[dep], c);
@@ -183,7 +183,7 @@ impl<'a> Placement<'a> {
     fn commit(&mut self, id: NodeId, choice: DeviceId) {
         let node = self.dag.node(id);
         self.dev[id] = choice;
-        self.load[choice] += costmodel::node_seconds(node.est_bytes, self.topo.device(choice));
+        self.load[choice] += costmodel::node_seconds_for(node, self.topo.device(choice));
         if self.left[id] > 0 {
             self.resident[choice] = self.resident[choice].saturating_add(node.out_bytes);
         }
@@ -203,7 +203,7 @@ impl<'a> Placement<'a> {
 /// + working-set byte steer against the ledgers.  Barriers pin to device
 /// 0: they are the fixed-order f32 reductions, and scattering them buys
 /// no parallelism while costing a transfer per input fan.
-fn cost_balanced(dag: &Dag, topo: &Topology, ledgers: &[u64]) -> Result<Vec<DeviceId>> {
+fn cost_balanced(dag: &Graph, topo: &Topology, ledgers: &[u64]) -> Result<Vec<DeviceId>> {
     let mut p = Placement::new(dag, topo, ledgers);
     for id in 0..dag.len() {
         let choice = match dag.node(id).kind {
@@ -232,7 +232,7 @@ fn cost_balanced(dag: &Dag, topo: &Topology, ledgers: &[u64]) -> Result<Vec<Devi
 /// [`modeled_makespan`]) and the better of the two is returned — DP is
 /// never modeled slower than greedy among steer-feasible layouts, and
 /// its layout passes the steer whenever greedy's does.
-fn dp_boundary(dag: &Dag, topo: &Topology, ledgers: &[u64]) -> Result<Vec<DeviceId>> {
+fn dp_boundary(dag: &Graph, topo: &Topology, ledgers: &[u64]) -> Result<Vec<DeviceId>> {
     let dp = dp_walk(dag, topo, ledgers);
     let greedy = cost_balanced(dag, topo, ledgers);
     match (dp, greedy) {
@@ -274,7 +274,7 @@ fn dp_boundary(dag: &Dag, topo: &Topology, ledgers: &[u64]) -> Result<Vec<Device
 /// the same resident accounting [`Placement::commit`] maintains: every
 /// node's working set must fit its device's ledger on top of the bytes
 /// parked there at that point of the serial (id-order) walk.
-fn steer_feasible(dag: &Dag, assignment: &[DeviceId], ledgers: &[u64]) -> bool {
+fn steer_feasible(dag: &Graph, assignment: &[DeviceId], ledgers: &[u64]) -> bool {
     let mut resident = vec![0u64; ledgers.len()];
     let mut left = dag.consumer_counts();
     for (id, node) in dag.nodes().iter().enumerate() {
@@ -298,7 +298,7 @@ fn steer_feasible(dag: &Dag, assignment: &[DeviceId], ledgers: &[u64]) -> bool {
 
 /// The DP walk itself; `Err` when some fan fits no device even row by
 /// row under the ledger steer.
-fn dp_walk(dag: &Dag, topo: &Topology, ledgers: &[u64]) -> Result<Vec<DeviceId>> {
+fn dp_walk(dag: &Graph, topo: &Topology, ledgers: &[u64]) -> Result<Vec<DeviceId>> {
     let mut p = Placement::new(dag, topo, ledgers);
     let n = dag.len();
     let mut id = 0;
@@ -464,7 +464,7 @@ fn dp_split_fan(p: &Placement<'_>, start: usize, end: usize) -> Option<Vec<Devic
 /// per-device `costmodel::node_seconds` compute and
 /// `Topology::transfer_seconds` on every crossing edge.  The objective
 /// `DpBoundary` minimizes and the shard bench's comparison metric.
-pub fn modeled_makespan(dag: &Dag, topo: &Topology, assignment: &[DeviceId]) -> f64 {
+pub fn modeled_makespan(dag: &Graph, topo: &Topology, assignment: &[DeviceId]) -> f64 {
     assert_eq!(
         assignment.len(),
         dag.len(),
@@ -474,7 +474,7 @@ pub fn modeled_makespan(dag: &Dag, topo: &Topology, assignment: &[DeviceId]) -> 
         .nodes()
         .iter()
         .zip(assignment)
-        .map(|(n, &c)| costmodel::node_seconds(n.est_bytes, topo.device(c)))
+        .map(|(n, &c)| costmodel::node_seconds_for(n, topo.device(c)))
         .collect();
     costmodel::list_makespan(
         assignment,
@@ -488,7 +488,7 @@ pub fn modeled_makespan(dag: &Dag, topo: &Topology, assignment: &[DeviceId]) -> 
 /// Bytes that cross a device boundary when `id`'s output feeds a consumer
 /// elsewhere: the parked output size, falling back to the full working
 /// set for nodes that declare no `out_bytes`.
-pub(crate) fn payload_bytes(dag: &Dag, id: usize) -> u64 {
+pub(crate) fn payload_bytes(dag: &Graph, id: usize) -> u64 {
     let node = dag.node(id);
     if node.out_bytes > 0 {
         node.out_bytes
@@ -504,8 +504,8 @@ mod tests {
     use crate::shard::topology::LinkKind;
 
     /// fan(4 rows) → barrier → chain(3 tps rows) → barrier
-    fn mixed_dag() -> Dag {
-        let mut d = Dag::new();
+    fn mixed_dag() -> Graph {
+        let mut d = Graph::new();
         let fan: Vec<_> = (0..4)
             .map(|r| d.push_out(NodeKind::Row, format!("fp{r}"), vec![], 100, 40))
             .collect();
@@ -565,7 +565,7 @@ mod tests {
 
     #[test]
     fn cost_balanced_respects_the_ledger_steer() {
-        let mut dag = Dag::new();
+        let mut dag = Graph::new();
         for r in 0..4 {
             dag.push(NodeKind::Row, format!("r{r}"), vec![], 100);
         }
@@ -613,7 +613,7 @@ mod tests {
         // 8 equal compute-heavy rows (1 GiB working set, thin 1 MiB
         // handoffs) on rtx3090 + a100: the optimal contiguous split gives
         // the A100 the bigger share; Blocked would split 4/4
-        let mut dag = Dag::new();
+        let mut dag = Graph::new();
         let rows: Vec<_> = (0..8)
             .map(|r| dag.push_out(NodeKind::Row, format!("r{r}"), vec![], 1 << 30, 1 << 20))
             .collect();
@@ -658,7 +658,7 @@ mod tests {
 
     #[test]
     fn dp_boundary_respects_the_ledger_steer() {
-        let mut dag = Dag::new();
+        let mut dag = Graph::new();
         for r in 0..4 {
             dag.push(NodeKind::Row, format!("r{r}"), vec![], 100);
         }
@@ -681,7 +681,7 @@ mod tests {
     /// greedy choice when device 0's ledger cannot hold them.
     #[test]
     fn dp_boundary_chain_rows_leave_a_too_small_device0() {
-        let mut dag = Dag::new();
+        let mut dag = Graph::new();
         let fan: Vec<_> = (0..2)
             .map(|r| dag.push(NodeKind::Row, format!("r{r}"), vec![], 10))
             .collect();
@@ -707,7 +707,7 @@ mod tests {
     fn dp_splits_fans_at_internal_dependencies() {
         // row1 depends on row0: they must not be priced as one fan; the
         // assignment still covers every node and stays valid
-        let mut dag = Dag::new();
+        let mut dag = Graph::new();
         let a = dag.push_out(NodeKind::Row, "a", vec![], 100, 40);
         let b = dag.push_out(NodeKind::Row, "b", vec![a], 100, 40);
         dag.push(NodeKind::Barrier, "red", vec![a, b], 0);
@@ -723,7 +723,7 @@ mod tests {
     fn modeled_makespan_prefers_parallel_layouts() {
         // compute-heavy rows with thin handoffs, so the split's saved
         // compute dwarfs the two crossing-edge link times
-        let mut dag = Dag::new();
+        let mut dag = Graph::new();
         let rows: Vec<_> = (0..4)
             .map(|r| dag.push_out(NodeKind::Row, format!("r{r}"), vec![], 1 << 30, 1 << 10))
             .collect();
@@ -739,7 +739,7 @@ mod tests {
 
     #[test]
     fn already_lowered_input_is_rejected() {
-        let mut dag = Dag::new();
+        let mut dag = Graph::new();
         let a = dag.push(NodeKind::Row, "a", vec![], 10);
         dag.push_out(NodeKind::Transfer, "xfer.a.d1", vec![a], 10, 10);
         let res = Partitioner::new(PartitionPolicy::Blocked).assign(&dag, &topo(2), &[0, 0]);

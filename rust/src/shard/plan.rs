@@ -7,13 +7,18 @@
 //! in flight, then parked until every consumer on that device finished)
 //! and a modeled link latency from the [`Topology`].  Two consumers of
 //! the same producer on the same destination device share one transfer.
-//! Node ids of the sharded DAG remain a topological order and
-//! `Dag::validate` is re-checked, so acyclicity survives the rewrite; on
-//! one device the lowering is the **identity** (bit-identical DAG).
+//! Node ids of the sharded graph remain a topological order and
+//! `rowir::Graph::validate` is re-checked, so acyclicity survives the
+//! rewrite; on one device the lowering is the **identity** (bit-identical
+//! graph).  A transfer is an ordinary IR node carrying
+//! [`rowir::Task::Transfer`](crate::rowir::Task) — executors recognize it
+//! by its node record, not by a side-table.
 //!
-//! [`ShardPlan::per_device_schedules`] replays the sharded DAG in serial
-//! (id) order into one `memory::sim::Schedule` per device — working set
-//! at dispatch, parked output until the last consumer — giving the exact
+//! [`ShardPlan::per_device_schedules`] replays the sharded graph in
+//! serial (id) order into one `memory::sim::Schedule` per device — the
+//! walk itself lives in `rowir::interp::schedules` (working set at
+//! dispatch, parked output until the last consumer), so the replay is
+//! derived from the IR rather than bespoke code here — giving the exact
 //! per-device peak a serial-order execution holds.  That peak is the
 //! budget callers should hand the per-device admission ledgers;
 //! [`ShardPlan::check_budgets`] asserts it fits.
@@ -22,7 +27,7 @@ use std::collections::HashMap;
 
 use crate::error::{Error, Result};
 use crate::memory::sim::{self, Schedule};
-use crate::sched::{Dag, NodeId, NodeKind};
+use crate::rowir::{interp, Graph, NodeId, NodeKind, Task};
 
 use super::partition::{payload_bytes, PartitionPolicy, Partitioner};
 use super::topology::{DeviceId, Topology};
@@ -30,7 +35,7 @@ use super::topology::{DeviceId, Topology};
 /// One cross-device copy in the sharded DAG.
 #[derive(Debug, Clone)]
 pub struct Transfer {
-    /// The transfer's node id in [`ShardPlan::dag`].
+    /// The transfer's node id in [`ShardPlan::graph`].
     pub node: NodeId,
     pub src: DeviceId,
     pub dst: DeviceId,
@@ -40,14 +45,16 @@ pub struct Transfer {
     pub seconds: f64,
 }
 
-/// A partitioned, transfer-lowered step DAG plus everything the sharded
-/// executor needs per step.
+/// A partitioned, transfer-lowered row program plus everything the
+/// sharded executor needs per step.
 #[derive(Debug, Clone)]
 pub struct ShardPlan {
-    dag: Dag,
+    graph: Graph,
     device_of: Vec<DeviceId>,
-    /// Sharded node → originating node in the base DAG (`None` for
-    /// transfers).
+    /// Sharded node → originating node in the base graph (`None` for
+    /// transfers) — attribution/testing metadata; dispatch no longer
+    /// needs it (transfers are ordinary IR nodes carrying
+    /// [`Task::Transfer`]).
     orig: Vec<Option<NodeId>>,
     transfers: Vec<Transfer>,
     /// Successor lists, precomputed once (the pool reuses them per step).
@@ -62,7 +69,7 @@ impl ShardPlan {
     /// edges into transfers.  `budgets[d]` is device `d`'s admission
     /// ledger (and the `CostBalanced` steer).
     pub fn build(
-        base: &Dag,
+        base: &Graph,
         topo: &Topology,
         policy: PartitionPolicy,
         budgets: Vec<u64>,
@@ -74,7 +81,7 @@ impl ShardPlan {
     /// Lower `base` under an explicit assignment (the partitioner's, or a
     /// hand-built one in tests).
     pub fn lower(
-        base: &Dag,
+        base: &Graph,
         topo: &Topology,
         assignment: &[DeviceId],
         budgets: Vec<u64>,
@@ -101,7 +108,7 @@ impl ShardPlan {
         }
         base.validate()?;
 
-        let mut dag = Dag::new();
+        let mut graph = Graph::new();
         let mut device_of: Vec<DeviceId> = Vec::with_capacity(base.len());
         let mut orig: Vec<Option<NodeId>> = Vec::with_capacity(base.len());
         let mut transfers: Vec<Transfer> = Vec::new();
@@ -122,12 +129,13 @@ impl ShardPlan {
                     Some(&t) => t,
                     None => {
                         let bytes = payload_bytes(base, d);
-                        let t = dag.push_out(
+                        let t = graph.push_task(
                             NodeKind::Transfer,
                             format!("xfer.{}.d{dst}", base.node(d).label),
                             vec![remap[d]],
                             bytes,
                             bytes,
+                            Task::Transfer,
                         );
                         device_of.push(dst);
                         orig.push(None);
@@ -144,20 +152,21 @@ impl ShardPlan {
                 };
                 deps.push(t);
             }
-            remap[id] = dag.push_out(
+            remap[id] = graph.push_task(
                 node.kind,
                 node.label.clone(),
                 deps,
                 node.est_bytes,
                 node.out_bytes,
+                node.task,
             );
             device_of.push(dst);
             orig.push(Some(id));
         }
-        dag.validate()?;
-        let succ = successors(&dag);
+        graph.validate()?;
+        let succ = successors(&graph);
         Ok(ShardPlan {
-            dag,
+            graph,
             device_of,
             orig,
             transfers,
@@ -167,8 +176,8 @@ impl ShardPlan {
         })
     }
 
-    pub fn dag(&self) -> &Dag {
-        &self.dag
+    pub fn graph(&self) -> &Graph {
+        &self.graph
     }
 
     pub fn devices(&self) -> usize {
@@ -179,7 +188,7 @@ impl ShardPlan {
         &self.device_of
     }
 
-    /// Base-DAG node behind a sharded node (`None` for transfers).
+    /// Base-graph node behind a sharded node (`None` for transfers).
     pub fn orig(&self) -> &[Option<NodeId>] {
         &self.orig
     }
@@ -214,37 +223,15 @@ impl ShardPlan {
         self.transfers.iter().map(|t| t.seconds).sum()
     }
 
-    /// Serial-order replay of the sharded DAG as one allocation schedule
-    /// per device: each node allocs its working set, frees it at finish,
-    /// then parks its output bytes until its last consumer finishes.
+    /// Serial-order replay of the sharded graph as one allocation
+    /// schedule per device — an IR walk (`rowir::interp::schedules`):
+    /// each node allocs its working set, frees it at finish, then parks
+    /// its output bytes until its last consumer finishes.
     /// `memory::sim::simulate` on each schedule yields the exact
     /// per-device peak of a serial-order execution — the tight admission
     /// budget.
     pub fn per_device_schedules(&self) -> Vec<Schedule> {
-        let n = self.dag.len();
-        let mut scheds: Vec<Schedule> = (0..self.devices).map(|_| Schedule::new()).collect();
-        let mut left = self.dag.consumer_counts();
-        for id in 0..n {
-            let node = self.dag.node(id);
-            let d = self.device_of[id];
-            let s = &mut scheds[d];
-            s.mark(node.label.clone());
-            let run = s.intern(format!("run.{}", node.label));
-            s.alloc_id(run, node.est_bytes);
-            s.free_id(run);
-            if left[id] > 0 && node.out_bytes > 0 {
-                s.alloc(format!("park.{}", node.label), node.out_bytes);
-            }
-            for &dep in &self.dag.node(id).deps {
-                left[dep] -= 1;
-                if left[dep] == 0 && self.dag.node(dep).out_bytes > 0 {
-                    let dd = self.device_of[dep];
-                    let name = format!("park.{}", self.dag.node(dep).label);
-                    scheds[dd].free(name);
-                }
-            }
-        }
-        scheds
+        interp::schedules(&self.graph, &self.device_of, self.devices)
     }
 
     /// Tight per-device admission ledgers: each device's serial-order
@@ -286,9 +273,9 @@ impl ShardPlan {
     }
 }
 
-fn successors(dag: &Dag) -> Vec<Vec<NodeId>> {
-    let mut succ: Vec<Vec<NodeId>> = vec![Vec::new(); dag.len()];
-    for (id, node) in dag.nodes().iter().enumerate() {
+fn successors(graph: &Graph) -> Vec<Vec<NodeId>> {
+    let mut succ: Vec<Vec<NodeId>> = vec![Vec::new(); graph.len()];
+    for (id, node) in graph.nodes().iter().enumerate() {
         for &d in &node.deps {
             succ[d].push(id);
         }
@@ -307,8 +294,8 @@ mod tests {
     }
 
     /// 2 producers → barrier (the minimal fan).
-    fn fan() -> Dag {
-        let mut d = Dag::new();
+    fn fan() -> Graph {
+        let mut d = Graph::new();
         let a = d.push_out(NodeKind::Row, "a", vec![], 100, 40);
         let b = d.push_out(NodeKind::Row, "b", vec![], 100, 40);
         d.push(NodeKind::Barrier, "red", vec![a, b], 80);
@@ -320,15 +307,16 @@ mod tests {
         let base = fan();
         let plan = ShardPlan::build(&base, &topo(1), PartitionPolicy::Blocked, vec![u64::MAX])
             .unwrap();
-        assert_eq!(plan.dag().len(), base.len());
+        assert_eq!(plan.graph().len(), base.len());
         assert!(plan.transfers().is_empty());
         for (id, node) in base.nodes().iter().enumerate() {
-            let got = plan.dag().node(id);
+            let got = plan.graph().node(id);
             assert_eq!(got.kind, node.kind);
             assert_eq!(got.label, node.label);
             assert_eq!(got.deps, node.deps);
             assert_eq!(got.est_bytes, node.est_bytes);
             assert_eq!(got.out_bytes, node.out_bytes);
+            assert_eq!(got.task, node.task, "tasks survive the rewrite");
             assert_eq!(plan.orig()[id], Some(id));
         }
     }
@@ -345,20 +333,21 @@ mod tests {
         assert_eq!((t.src, t.dst), (1, 0));
         assert_eq!(t.bytes, 40, "payload = producer out_bytes");
         assert!(t.seconds > 0.0);
-        let tn = plan.dag().node(t.node);
+        let tn = plan.graph().node(t.node);
         assert_eq!(tn.kind, NodeKind::Transfer);
         assert_eq!(tn.est_bytes, 40);
         assert_eq!(tn.out_bytes, 40);
+        assert_eq!(tn.task, Task::Transfer, "transfers are ordinary IR nodes");
         // the barrier now depends on [a, xfer], never directly on b
-        let red = plan.dag().find("red").unwrap();
-        assert!(plan.dag().node(red).deps.contains(&t.node));
-        assert!(plan.dag().validate().is_ok());
+        let red = plan.graph().find("red").unwrap();
+        assert!(plan.graph().node(red).deps.contains(&t.node));
+        assert!(plan.graph().validate().is_ok());
         assert_eq!(plan.device_of()[t.node], 0, "transfer lives on dst");
     }
 
     #[test]
     fn two_consumers_on_one_device_share_a_transfer() {
-        let mut base = Dag::new();
+        let mut base = Graph::new();
         let a = base.push_out(NodeKind::Row, "a", vec![], 10, 10);
         let c1 = base.push(NodeKind::Row, "c1", vec![a], 5);
         base.push(NodeKind::Barrier, "c2", vec![a, c1], 5);
@@ -366,7 +355,7 @@ mod tests {
         let plan =
             ShardPlan::lower(&base, &topo(2), &[1, 0, 0], vec![u64::MAX; 2]).unwrap();
         assert_eq!(plan.transfers().len(), 1, "one copy serves both consumers");
-        assert_eq!(plan.dag().len(), base.len() + 1);
+        assert_eq!(plan.graph().len(), base.len() + 1);
     }
 
     #[test]

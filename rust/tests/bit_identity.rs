@@ -1,0 +1,184 @@
+//! The bit-identity matrix — the repo's acceptance bar, in one place.
+//!
+//! Serial is the `rowir` interpreter (`StepPlan::step_serial`); the
+//! pipelined worker pool and the sharded multi-device executor run the
+//! *same* lowered `RowProgram`.  These proofs assert `to_bits()` equality
+//! of losses and parameters over multi-step runs (params feed forward, so
+//! drift would compound) across:
+//!
+//!   4 modes × {serial, pipelined (1/2/4 workers, tight budget),
+//!              sharded (uniform 1/2/4 devices + 2 heterogeneous mixes)}
+//!           × all 3 partition policies
+//!
+//! with every per-device admission ledger (serial replay peak clamped to
+//! device memory) respected — asserted inside `common::run_sharded` from
+//! the trace.
+
+mod common;
+
+use common::{
+    assert_bits_equal, demo_manifest, run_pipelined, run_serial, run_sharded, ALL_MODES,
+    ALL_POLICIES,
+};
+
+use lr_cnn::coordinator::{Mode, StepPlan};
+use lr_cnn::memory::DeviceModel;
+use lr_cnn::shard::{LinkKind, PartitionPolicy, ShardPlan, Topology};
+
+/// Pipelined == serial-interpreter, bit for bit, over ≥3 steps in all
+/// four modes, across worker counts and with a tight budget.
+#[test]
+fn pipelined_matches_the_interpreter_bitwise_in_all_modes() {
+    let man = demo_manifest();
+    for mode in ALL_MODES {
+        let (sl, sp, _) = run_serial(&man, mode, 3);
+        for (workers, budget) in [(1, u64::MAX), (2, u64::MAX), (4, u64::MAX), (4, 600)] {
+            let (pl, pp, _, _) = run_pipelined(&man, mode, 3, workers, budget);
+            let ctx = format!("{mode:?} w={workers} b={budget}");
+            assert_eq!(sl.len(), pl.len());
+            for (a, b) in sl.iter().zip(&pl) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: loss {a} vs {b}");
+            }
+            assert_bits_equal(&sp, &pp, &ctx);
+        }
+    }
+}
+
+/// The sharded half of the matrix: bit-identical to the interpreter over
+/// ≥3 steps across all 4 modes × uniform {1, 2, 4}-device *and*
+/// heterogeneous rtx3090+a100 topologies × all three partition policies,
+/// with transfers appearing exactly when the partition splits an edge.
+#[test]
+fn sharded_matches_the_interpreter_bitwise_across_topologies_and_policies() {
+    let man = demo_manifest();
+    for mode in ALL_MODES {
+        let (sl, sp, _) = run_serial(&man, mode, 3);
+        for (name, topo) in common::proof_topologies() {
+            for policy in ALL_POLICIES {
+                let (pl, pp, _, state) = run_sharded(&man, mode, 3, 4, &topo, policy);
+                let ctx = format!("{mode:?} topo={name} {policy:?}");
+                assert_eq!(sl.len(), pl.len());
+                for (a, b) in sl.iter().zip(&pl) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: loss {a} vs {b}");
+                }
+                assert_bits_equal(&sp, &pp, &ctx);
+                if topo.len() == 1 {
+                    assert!(
+                        state.plan().transfers().is_empty(),
+                        "{ctx}: one device must not transfer"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Admission control: with the budget set to the serial-order replay
+/// peak (working sets + parked handoff bytes — exactly what the
+/// interpreter reports as its `peak_bytes`), the pipelined peak never
+/// exceeds it, and the cap costs no accuracy.
+#[test]
+fn admission_peak_stays_under_the_interpreter_replay_peak() {
+    let man = demo_manifest();
+    for mode in [Mode::RowHybrid, Mode::Tps] {
+        let (sl, _, speaks) = run_serial(&man, mode, 1);
+        let replay_peak = speaks[0];
+        let plan = StepPlan::build(&man, mode).unwrap();
+        let program = plan.lower(&man).unwrap();
+        assert!(
+            program.graph().max_est_bytes() <= replay_peak,
+            "{mode:?}: replay peak must dominate every single node"
+        );
+        // cross-check against the shard replay on one device — the same
+        // IR walk, through the other consumer
+        let topo = Topology::uniform(1, DeviceModel::rtx3090(), LinkKind::Pcie);
+        let splan = ShardPlan::build(
+            program.graph(),
+            &topo,
+            PartitionPolicy::Blocked,
+            vec![u64::MAX],
+        )
+        .unwrap();
+        assert_eq!(
+            splan.replay_peaks().unwrap()[0],
+            replay_peak,
+            "{mode:?}: interpreter peak == shard replay peak on one device"
+        );
+        let (pl, _, ppeaks, _) = run_pipelined(&man, mode, 1, 4, replay_peak);
+        assert!(
+            ppeaks[0] <= replay_peak,
+            "{mode:?}: pipelined peak {} > interpreter replay peak {replay_peak}",
+            ppeaks[0]
+        );
+        assert_eq!(sl[0].to_bits(), pl[0].to_bits(), "{mode:?}");
+    }
+}
+
+/// Deterministic trace: same program, same config ⇒ same canonical view.
+#[test]
+fn pipelined_trace_is_canonical_deterministic() {
+    let man = demo_manifest();
+    for mode in [Mode::RowHybrid, Mode::Tps, Mode::Naive] {
+        let (_, _, _, t1) = run_pipelined(&man, mode, 1, 4, u64::MAX);
+        let (_, _, _, t2) = run_pipelined(&man, mode, 1, 4, u64::MAX);
+        assert_eq!(t1.canonical(), t2.canonical(), "{mode:?}");
+    }
+}
+
+/// Sharded traces are reproducible on heterogeneous topologies too: the
+/// ready-pick is a pure function of `(NodeId, DeviceId)` and ledger
+/// state, never thread timing.
+#[test]
+fn sharded_trace_is_canonical_deterministic() {
+    let man = demo_manifest();
+    let topo = Topology::new(
+        vec![DeviceModel::rtx3090(), DeviceModel::a100_80g()],
+        LinkKind::NvLink,
+    );
+    for policy in ALL_POLICIES {
+        let (_, _, t1, _) = run_sharded(&man, Mode::RowHybrid, 1, 4, &topo, policy);
+        let (_, _, t2, _) = run_sharded(&man, Mode::RowHybrid, 1, 4, &topo, policy);
+        assert_eq!(t1.canonical(), t2.canonical(), "{policy:?}");
+    }
+}
+
+/// The forward-only entry point interprets the z^L barrier's dependency
+/// closure; it must be deterministic, and for 2PS it must not execute
+/// the checkpoint half (the closure is the chain alone — the same work
+/// the deleted hand-written forward path did).
+#[test]
+fn forward_closure_is_deterministic_and_minimal() {
+    let man = demo_manifest();
+    let ex = common::FakeExec::demo();
+    let (x, _) = common::test_batch();
+    for mode in [Mode::RowHybrid, Mode::Tps, Mode::Naive] {
+        let plan = StepPlan::build(&man, mode).unwrap();
+        let program = plan.lower(&man).unwrap();
+        let params = lr_cnn::coordinator::ParamSet::init(&man.model, 42);
+        let z1 = plan.forward_zl(&ex, &program, &params, &x).unwrap();
+        let z2 = plan.forward_zl(&ex, &program, &params, &x).unwrap();
+        assert_eq!(z1.shape, z2.shape, "{mode:?}");
+        for (a, b) in z1.data.iter().zip(&z2.data) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{mode:?}: forward deterministic");
+        }
+        if mode == Mode::Tps {
+            // minimality: the 2PS forward closure is the chain + zL only
+            let zl = program
+                .find_task(lr_cnn::rowir::Task::ZlBarrier)
+                .expect("zL barrier");
+            let mut visited = Vec::new();
+            lr_cnn::rowir::interp::run_closure(&program, zl, |id, _| {
+                visited.push(id);
+                Ok(())
+            })
+            .unwrap();
+            for &id in &visited {
+                let label = &program.graph().node(id).label;
+                assert!(
+                    label.starts_with("fp.tps.") || label == "barrier.zL",
+                    "2PS forward must not execute {label}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,294 @@
+//! Shared test support for the integration proof suites.
+//!
+//! One copy of what used to be duplicated across `coordinator::trainer`'s
+//! unit tests, `tests/sched_properties.rs` and `tests/shard_properties.rs`:
+//! the shape-accurate demo manifest (now `Manifest::demo` in the library —
+//! the same bundle `plan --dump-ir` lowers in CI), the deterministic fake
+//! backend, the mode × workers × devices × policy matrix axes, and the
+//! three step drivers with the **serial interpreter as the reference
+//! side**.
+//!
+//! Each integration binary compiles its own copy of this module, so not
+//! every binary uses every item.
+#![allow(dead_code)]
+
+use lr_cnn::coordinator::{Mode, Optimizer, ParamSet, ShardState, StepPlan};
+use lr_cnn::error::{Error, Result};
+use lr_cnn::memory::DeviceModel;
+use lr_cnn::rowir::{Graph, NodeId, NodeKind, RowProgram};
+use lr_cnn::runtime::{ExecBackend, ExecHandle, Manifest, Tensor, TensorView};
+use lr_cnn::sched::{SchedConfig, Trace};
+use lr_cnn::shard::{LinkKind, PartitionPolicy, ShardPlan, Topology};
+use lr_cnn::util::rng::XorShift;
+
+/// The full mode axis of the bit-identity matrix.
+pub const ALL_MODES: [Mode; 4] = Mode::ALL;
+
+/// The full partition-policy axis.
+pub const ALL_POLICIES: [PartitionPolicy; 3] = [
+    PartitionPolicy::Blocked,
+    PartitionPolicy::CostBalanced,
+    PartitionPolicy::DpBoundary,
+];
+
+/// The shape-accurate offline manifest (see `Manifest::demo`).
+pub fn demo_manifest() -> Manifest {
+    Manifest::demo(2)
+}
+
+/// Build + lower one mode of the demo manifest.
+pub fn demo_program(mode: Mode) -> (StepPlan, RowProgram) {
+    let man = demo_manifest();
+    let plan = StepPlan::build(&man, mode).expect("plan builds");
+    let program = plan.lower(&man).expect("plan lowers");
+    (plan, program)
+}
+
+/// Deterministic stand-in backend: outputs are a pure function of the
+/// executable identity and every input element (shape-checked against
+/// the manifest signature), so any arg-reorder / wrong-cache /
+/// wrong-slice bug in any driver changes the bits.
+pub struct FakeExec {
+    pub man: Manifest,
+}
+
+impl FakeExec {
+    pub fn demo() -> FakeExec {
+        FakeExec {
+            man: demo_manifest(),
+        }
+    }
+}
+
+impl ExecBackend for FakeExec {
+    fn exec(&self, h: ExecHandle, args: &[TensorView<'_>]) -> Result<Vec<Tensor>> {
+        let info = self
+            .man
+            .executables
+            .get(h.index())
+            .ok_or_else(|| Error::Artifact(format!("fake: bad handle {}", h.index())))?;
+        if args.len() != info.inputs.len() {
+            return Err(Error::Artifact(format!(
+                "fake {}: {} args, signature wants {}",
+                info.name,
+                args.len(),
+                info.inputs.len()
+            )));
+        }
+        for (i, (v, expect)) in args.iter().zip(&info.inputs).enumerate() {
+            if v.dims() != expect.as_slice() {
+                return Err(Error::Artifact(format!(
+                    "fake {}: input {i} shape {:?} != {:?}",
+                    info.name,
+                    v.dims(),
+                    expect
+                )));
+            }
+        }
+        // position-weighted checksum over all inputs, in arg order
+        let mut acc = 0.0f32;
+        for (i, v) in args.iter().enumerate() {
+            let mut s = 0.0f32;
+            let mut e = 0usize;
+            for chunk in v.chunks() {
+                for val in chunk {
+                    s += val * ((e % 7 + 1) as f32);
+                    e += 1;
+                }
+            }
+            acc += s * ((i + 1) as f32) * 0.01;
+        }
+        info.outputs
+            .iter()
+            .enumerate()
+            .map(|(k, shape)| {
+                let n: usize = shape.iter().product();
+                let base = (h.index() * 31 + k * 7) as f32 * 0.001;
+                let data = (0..n)
+                    .map(|j| ((j % 13) as f32) * 0.01 + (base + acc * 0.25).sin() * 0.1)
+                    .collect();
+                Tensor::new(shape.clone(), data)
+            })
+            .collect()
+    }
+}
+
+/// The (x, y1h) batch every proof run steps on.
+pub fn test_batch() -> (Tensor, Tensor) {
+    let x = Tensor::new(
+        vec![1, 1, 8, 4],
+        (0..32).map(|i| (i as f32 * 0.37).sin()).collect(),
+    )
+    .unwrap();
+    let y = Tensor::new(vec![1, 2], vec![1.0, 0.0]).unwrap();
+    (x, y)
+}
+
+/// The reference side of every bit-identity proof: `steps` steps through
+/// the **serial interpreter** (`StepPlan::step_serial` → `rowir::interp`)
+/// with the fake backend; returns per-step losses, final params and the
+/// per-step interpreter replay peaks.
+pub fn run_serial(man: &Manifest, mode: Mode, steps: usize) -> (Vec<f32>, ParamSet, Vec<u64>) {
+    let plan = StepPlan::build(man, mode).unwrap();
+    let program = plan.lower(man).unwrap();
+    let ex = FakeExec { man: man.clone() };
+    let mut params = ParamSet::init(&man.model, 42);
+    let mut opt = Optimizer::sgd(0.05);
+    let (x, y) = test_batch();
+    let mut losses = Vec::new();
+    let mut peaks = Vec::new();
+    for _ in 0..steps {
+        let (loss, grads, outcome) = plan.step_serial(&ex, &program, &params, &x, &y).unwrap();
+        opt.step(&mut params, &grads).unwrap();
+        losses.push(loss);
+        peaks.push(outcome.peak_bytes);
+    }
+    (losses, params, peaks)
+}
+
+/// `steps` pipelined steps (single-ledger worker pool); returns losses,
+/// final params, per-step admission peaks and the last trace.
+pub fn run_pipelined(
+    man: &Manifest,
+    mode: Mode,
+    steps: usize,
+    workers: usize,
+    budget: u64,
+) -> (Vec<f32>, ParamSet, Vec<u64>, Trace) {
+    let plan = StepPlan::build(man, mode).unwrap();
+    let program = plan.lower(man).unwrap();
+    let ex = FakeExec { man: man.clone() };
+    let cfg = SchedConfig::pipelined(workers).with_budget(budget);
+    let mut params = ParamSet::init(&man.model, 42);
+    let mut opt = Optimizer::sgd(0.05);
+    let (x, y) = test_batch();
+    let mut losses = Vec::new();
+    let mut peaks = Vec::new();
+    let mut last = Trace::default();
+    for _ in 0..steps {
+        let (loss, grads, outcome) = plan
+            .step_pipelined(&ex, &program, &params, &cfg, None, &x, &y)
+            .unwrap();
+        outcome.trace.check_complete(program.graph()).unwrap();
+        opt.step(&mut params, &grads).unwrap();
+        losses.push(loss);
+        peaks.push(outcome.peak_bytes);
+        last = outcome.trace;
+    }
+    (losses, params, peaks, last)
+}
+
+/// `steps` sharded-pipelined steps over an arbitrary (possibly
+/// heterogeneous) topology; ledgers are set to the per-device
+/// serial-order replay peaks clamped to each device's memory and
+/// asserted from every step's trace.  Returns losses, final params
+/// and the last trace + the shard state for shape checks.
+pub fn run_sharded(
+    man: &Manifest,
+    mode: Mode,
+    steps: usize,
+    workers: usize,
+    topo: &Topology,
+    policy: PartitionPolicy,
+) -> (Vec<f32>, ParamSet, Trace, ShardState) {
+    let devices = topo.len();
+    let plan = StepPlan::build(man, mode).unwrap();
+    let program = plan.lower(man).unwrap();
+    let mut splan = ShardPlan::build(program.graph(), topo, policy, topo.budgets(0)).unwrap();
+    // tight per-device ledgers: the serial-order replay peak, clamped
+    // to the device's own memory (the trainer-path budget shape)
+    let ledgers = splan.replay_ledgers(topo, 0).unwrap();
+    splan.set_budgets(ledgers.clone()).unwrap();
+    assert!(splan.check_budgets().is_ok());
+    // the pool is constructed once and reused by every step below
+    let state = ShardState::with_plan(splan, workers);
+    let ex = FakeExec { man: man.clone() };
+    let cfg = SchedConfig::pipelined(workers);
+    let mut params = ParamSet::init(&man.model, 42);
+    let mut opt = Optimizer::sgd(0.05);
+    let (x, y) = test_batch();
+    let mut losses = Vec::new();
+    let mut last = Trace::default();
+    for _ in 0..steps {
+        let (loss, grads, outcome) = plan
+            .step_pipelined(&ex, &program, &params, &cfg, Some(&state), &x, &y)
+            .unwrap();
+        outcome.trace.check_complete(state.plan().graph()).unwrap();
+        // every per-device admission ledger respected, from the trace
+        for d in 0..devices {
+            assert!(
+                outcome.device_peaks[d] <= ledgers[d],
+                "{mode:?} {policy:?} d{d}: peak {} > ledger {}",
+                outcome.device_peaks[d],
+                ledgers[d]
+            );
+            assert!(outcome.trace.max_in_flight_on(d) <= ledgers[d]);
+        }
+        opt.step(&mut params, &grads).unwrap();
+        losses.push(loss);
+        last = outcome.trace;
+    }
+    (losses, params, last, state)
+}
+
+pub fn assert_bits_equal(a: &ParamSet, b: &ParamSet, ctx: &str) {
+    assert_eq!(a.tensors.len(), b.tensors.len(), "{ctx}: param count");
+    for (i, (ta, tb)) in a.tensors.iter().zip(&b.tensors).enumerate() {
+        assert_eq!(ta.shape, tb.shape, "{ctx}: param {i} shape");
+        for (j, (va, vb)) in ta.data.iter().zip(&tb.data).enumerate() {
+            assert_eq!(
+                va.to_bits(),
+                vb.to_bits(),
+                "{ctx}: param {i}[{j}] {va} vs {vb}"
+            );
+        }
+    }
+}
+
+/// The topologies the bit-identity matrix re-proves determinism over:
+/// uniform 1/2/4 RTX 3090s plus two genuinely heterogeneous mixes
+/// (rtx3090+a100 over PCIe, 2×rtx3090+2×a100 over NVLink).
+pub fn proof_topologies() -> Vec<(&'static str, Topology)> {
+    let d90 = DeviceModel::rtx3090();
+    let a100 = DeviceModel::a100_80g();
+    vec![
+        ("rtx3090x1", Topology::uniform(1, d90.clone(), LinkKind::NvLink)),
+        ("rtx3090x2", Topology::uniform(2, d90.clone(), LinkKind::NvLink)),
+        ("rtx3090x4", Topology::uniform(4, d90.clone(), LinkKind::NvLink)),
+        (
+            "rtx3090+a100",
+            Topology::new(vec![d90.clone(), a100.clone()], LinkKind::Pcie),
+        ),
+        (
+            "rtx3090x2+a100x2",
+            Topology::new(vec![d90.clone(), d90, a100.clone(), a100], LinkKind::NvLink),
+        ),
+    ]
+}
+
+/// Deterministic random fan graph: `fans` maximal Row fans of random
+/// width and random byte weights, each reduced by a Barrier that chains
+/// on the previous one (the lowered step-graph shape, randomized).
+pub fn random_fan_graph(rng: &mut XorShift, fans: usize) -> Graph {
+    let mut g = Graph::new();
+    let mut prev_barrier: Option<NodeId> = None;
+    for f in 0..fans {
+        let width = 1 + rng.below(9);
+        let mut rows = Vec::with_capacity(width);
+        for r in 0..width {
+            let est = 1 + rng.below(1 << 20) as u64;
+            let out = rng.below(1 + est as usize / 2) as u64;
+            let deps = prev_barrier.map(|b| vec![b]).unwrap_or_default();
+            rows.push(g.push_out(NodeKind::Row, format!("f{f}r{r}"), deps, est, out));
+        }
+        let est = 1 + rng.below(1 << 18) as u64;
+        prev_barrier = Some(g.push_out(
+            NodeKind::Barrier,
+            format!("bar{f}"),
+            rows,
+            est,
+            est / 2,
+        ));
+    }
+    g
+}

@@ -1,0 +1,123 @@
+//! Property tests for the `rowir` interpreter contract (docs/ROWIR.md):
+//!
+//! * `interp::run` visits nodes in strictly ascending `NodeId` order,
+//!   exactly once each;
+//! * its reported peak is **exactly** the `memory::sim` replay peak of
+//!   the same graph — both through `rowir::interp::schedules` and through
+//!   `ShardPlan::replay_ledgers` on one device (the budget the trainer
+//!   path installs);
+//! * it matches the pipelined executor bit-for-bit on randomized fan
+//!   graphs (same per-node values, same id-order reduction).
+
+mod common;
+
+use common::random_fan_graph;
+
+use lr_cnn::memory::{sim, DeviceModel};
+use lr_cnn::rowir::{interp, NodeId, RowProgram};
+use lr_cnn::sched::{self, SchedConfig, Slot};
+use lr_cnn::shard::{LinkKind, PartitionPolicy, ShardPlan, Topology};
+use lr_cnn::util::rng::XorShift;
+
+#[test]
+fn interpreter_visits_ascending_exactly_once() {
+    let mut rng = XorShift::new(0xA5C3);
+    for round in 0..16 {
+        let g = random_fan_graph(&mut rng, 1 + round % 5);
+        let program = RowProgram::new(g).unwrap();
+        let mut seen: Vec<NodeId> = Vec::new();
+        let out = interp::run(&program, |id, _| {
+            seen.push(id);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(
+            seen,
+            (0..program.len()).collect::<Vec<_>>(),
+            "round {round}: strictly ascending id order, each node once"
+        );
+        assert_eq!(out.visited, program.len());
+        assert_eq!(out.final_bytes, 0, "round {round}: ledger drains");
+    }
+}
+
+#[test]
+fn interpreter_peak_is_exactly_the_sim_replay_peak() {
+    let mut rng = XorShift::new(0xBEEF);
+    let topo = Topology::uniform(1, DeviceModel::a100_80g(), LinkKind::Pcie);
+    for round in 0..16 {
+        let g = random_fan_graph(&mut rng, 1 + round % 4);
+        let program = RowProgram::new(g).unwrap();
+        let out = interp::run(&program, |_, _| Ok(())).unwrap();
+
+        // (a) the IR-walk schedule replayed through memory::sim
+        let sched = &interp::schedules(program.graph(), &vec![0; program.len()], 1)[0];
+        let rep = sim::simulate(sched).unwrap();
+        assert_eq!(out.peak_bytes, rep.peak_bytes, "round {round}: sim replay");
+        assert_eq!(rep.final_bytes, 0);
+
+        // (b) the budget ShardPlan::replay_ledgers predicts on one device
+        let splan = ShardPlan::build(
+            program.graph(),
+            &topo,
+            PartitionPolicy::Blocked,
+            vec![u64::MAX],
+        )
+        .unwrap();
+        let ledgers = splan.replay_ledgers(&topo, 0).unwrap();
+        assert_eq!(
+            out.peak_bytes, ledgers[0],
+            "round {round}: interpreter peak == the trainer-path ledger"
+        );
+    }
+}
+
+/// Interpreter vs pipelined executor on the same program: identical
+/// per-node values, identical id-order f32 reduction — bit for bit —
+/// and the executor under a replay-peak budget stays at or under the
+/// interpreter's peak.
+#[test]
+fn interpreter_matches_the_pipelined_executor_bitwise() {
+    let mut rng = XorShift::new(0xD00D);
+    let node_val = |id: usize| ((id as f32) * 0.7311).sin();
+    for round in 0..12 {
+        let g = random_fan_graph(&mut rng, 1 + round % 4);
+        let program = RowProgram::new(g).unwrap();
+
+        // serial: reduce in visit (= id) order
+        let mut serial_sum = 0.0f32;
+        let serial_out = interp::run(&program, |id, _| {
+            serial_sum += node_val(id);
+            Ok(())
+        })
+        .unwrap();
+
+        // pipelined: per-node slots, reduced in id order afterwards (the
+        // barrier discipline), under the interpreter's replay-peak budget
+        for workers in [1usize, 4] {
+            let cfg = SchedConfig::pipelined(workers).with_budget(serial_out.peak_bytes);
+            let acc: Vec<Slot<f32>> = Slot::many(program.len());
+            let out = sched::run(program.graph(), &cfg, |id| {
+                acc[id].put("v", node_val(id))
+            })
+            .unwrap();
+            out.trace.check_complete(program.graph()).unwrap();
+            let mut piped_sum = 0.0f32;
+            for s in &acc {
+                piped_sum += s.take("v").unwrap();
+            }
+            assert_eq!(
+                serial_sum.to_bits(),
+                piped_sum.to_bits(),
+                "round {round} w={workers}: reduction must be bit-identical"
+            );
+            assert!(
+                out.peak_bytes <= serial_out.peak_bytes,
+                "round {round} w={workers}: admission peak {} over the \
+                 interpreter's replay peak {}",
+                out.peak_bytes,
+                serial_out.peak_bytes
+            );
+        }
+    }
+}

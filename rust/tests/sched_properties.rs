@@ -1,119 +1,26 @@
 //! Integration: the row scheduler through the public API only —
-//! `StepPlan::build` → `StepPlan::lower` → `sched::run` — the way an
-//! external embedder would drive it.  No PJRT required: the executor is
-//! exercised with synthetic runners, the lowering with a parsed manifest.
+//! `StepPlan::build` → `StepPlan::lower` (= `rowir::lower`) →
+//! `sched::run` — the way an external embedder would drive it.  No PJRT
+//! required: the executor is exercised with synthetic runners, the
+//! lowering with the shared demo manifest (`Manifest::demo`).
 
-use lr_cnn::coordinator::{Mode, StepPlan};
-use lr_cnn::memory::Tracker;
-use lr_cnn::runtime::Manifest;
-use lr_cnn::sched::{self, Dag, NodeKind, Policy, SchedConfig, Slot};
+mod common;
 
-/// Minimal shape-accurate manifest for the two row-centric modes.
-fn manifest() -> Manifest {
-    let exes: &[(&str, &str, &str)] = &[
-        (
-            "head",
-            "[[1,1,8,4],[1,2],[32,2],[2]]",
-            "[[1],[1,1,8,4],[32,2],[2]]",
-        ),
-        ("segA_row0_fwd", "[[1,1,5,4],[1,1,3,3],[1]]", "[[1,1,4,4]]"),
-        (
-            "segA_row0_bwd",
-            "[[1,1,5,4],[1,1,3,3],[1],[1,1,4,4]]",
-            "[[1,1,3,3],[1],[1,1,4,4]]",
-        ),
-        ("segA_row1_fwd", "[[1,1,5,4],[1,1,3,3],[1]]", "[[1,1,4,4]]"),
-        (
-            "segA_row1_bwd",
-            "[[1,1,5,4],[1,1,3,3],[1],[1,1,4,4]]",
-            "[[1,1,3,3],[1],[1,1,4,4]]",
-        ),
-        ("segB_row0_fwd", "[[1,1,5,4],[1,1,3,3],[1]]", "[[1,1,4,4]]"),
-        (
-            "segB_row0_bwd",
-            "[[1,1,5,4],[1,1,3,3],[1],[1,1,4,4]]",
-            "[[1,1,3,3],[1],[1,1,5,4],[1,1,4,4]]",
-        ),
-        ("segB_row1_fwd", "[[1,1,5,4],[1,1,3,3],[1]]", "[[1,1,4,4]]"),
-        (
-            "segB_row1_bwd",
-            "[[1,1,5,4],[1,1,3,3],[1],[1,1,4,4]]",
-            "[[1,1,3,3],[1],[1,1,5,4],[1,1,4,4]]",
-        ),
-        (
-            "tps_row0_fwd",
-            "[[1,1,4,4],[1,1,3,3],[1]]",
-            "[[1,1,4,4],[1,1,1,4],[1,1,1,4]]",
-        ),
-        (
-            "tps_row1_fwd",
-            "[[1,1,4,4],[1,1,1,4],[1,1,1,4],[1,1,3,3],[1]]",
-            "[[1,1,4,4]]",
-        ),
-    ];
-    let exe_json: Vec<String> = exes
-        .iter()
-        .map(|(name, inputs, outputs)| {
-            format!(
-                r#"{{"name": "{name}", "path": "{name}.hlo", "kind": "k",
-                     "inputs": {inputs}, "outputs": {outputs}}}"#
-            )
-        })
-        .collect();
-    let seg = |name: &str| {
-        format!(
-            r#"{{"name": "{name}", "h_in": 8, "h_out": 8, "c_in": 1, "c_out": 1,
-                 "param_lo": 0, "param_hi": 2,
-                 "rows": [
-                   {{"out_iv": [0, 4], "in_iv": [0, 5], "chain": []}},
-                   {{"out_iv": [4, 8], "in_iv": [3, 8], "chain": []}}
-                 ]}}"#
-        )
-    };
-    let text = format!(
-        r#"{{
-          "model": {{
-            "name": "t", "batch": 1, "h": 8, "w": 4, "n_classes": 2,
-            "layers": [], "heights": [8, 8], "w_out": 4, "fc_in": 32,
-            "param_shapes": [[1, 1, 3, 3], [1], [32, 2], [2]],
-            "n_conv_params": 2
-          }},
-          "plan": {{
-            "ckpt_split": 1, "n_rows": 2, "tps_rows": 2, "naive_rows": 2,
-            "segments": [{segA}, {segB}],
-            "tps": {{
-              "cuts": [0, 4, 8],
-              "rows": [
-                {{"own_iv": [0, 4], "bounds": [[0, 4]], "cache_in": [null], "cache_out": [[3, 4]]}},
-                {{"own_iv": [4, 8], "bounds": [[4, 8]], "cache_in": [[3, 4]], "cache_out": [null]}}
-              ]
-            }}
-          }},
-          "executables": [{exes}]
-        }}"#,
-        segA = seg("segA"),
-        segB = seg("segB"),
-        exes = exe_json.join(",\n")
-    );
-    Manifest::parse(&text).expect("manifest parses")
-}
+use common::demo_program;
 
-fn lowered(mode: Mode) -> lr_cnn::coordinator::PipePlan {
-    let man = manifest();
-    let mut tracker = Tracker::new();
-    let plan = StepPlan::build(&man, mode, &mut tracker).expect("plan builds");
-    plan.lower(&man).expect("plan lowers")
-}
+use lr_cnn::coordinator::Mode;
+use lr_cnn::rowir::{Graph, NodeKind};
+use lr_cnn::sched::{self, Policy, SchedConfig, Slot};
 
 #[test]
-fn lowered_dags_are_acyclic_and_well_shaped() {
+fn lowered_programs_are_acyclic_and_well_shaped() {
     for mode in [Mode::RowHybrid, Mode::Tps] {
-        let pipe = lowered(mode);
-        let dag = pipe.dag();
-        assert!(dag.validate().is_ok(), "{mode:?}: acyclic + in-range deps");
-        assert!(dag.len() >= 8, "{mode:?}: rows + barriers present");
+        let (_, program) = demo_program(mode);
+        let graph = program.graph();
+        assert!(graph.validate().is_ok(), "{mode:?}: full invariant set");
+        assert!(graph.len() >= 8, "{mode:?}: rows + barriers present");
         // ids are a topological order: every dep strictly precedes its node
-        for (id, node) in dag.nodes().iter().enumerate() {
+        for (id, node) in graph.nodes().iter().enumerate() {
             for &d in &node.deps {
                 assert!(d < id, "{mode:?}: edge {d}→{id} violates topo ids");
             }
@@ -123,46 +30,37 @@ fn lowered_dags_are_acyclic_and_well_shaped() {
 
 #[test]
 fn tps_rows_form_exactly_a_chain_overl_rows_are_edge_free() {
-    let pipe = lowered(Mode::Tps);
-    let dag = pipe.dag();
-    let tps: Vec<_> = (0..dag.len())
-        .filter(|&i| dag.node(i).kind == NodeKind::TpsRow)
+    let (_, program) = demo_program(Mode::Tps);
+    let graph = program.graph();
+    let tps: Vec<_> = (0..graph.len())
+        .filter(|&i| graph.node(i).kind == NodeKind::TpsRow)
         .collect();
     assert_eq!(tps.len(), 2);
-    assert!(dag.node(tps[0]).deps.is_empty());
-    assert_eq!(dag.node(tps[1]).deps, vec![tps[0]]);
+    assert!(graph.node(tps[0]).deps.is_empty());
+    assert_eq!(graph.node(tps[1]).deps, vec![tps[0]]);
 
-    let pipe = lowered(Mode::RowHybrid);
-    let dag = pipe.dag();
-    let ck = dag.find("barrier.ck").expect("checkpoint barrier exists");
+    let (_, program) = demo_program(Mode::RowHybrid);
+    let graph = program.graph();
+    let ck = graph.find("barrier.ck").expect("checkpoint barrier exists");
     for r in 0..2 {
-        let fp_a = dag.find(&format!("fp.segA.row{r}")).unwrap();
-        assert!(dag.node(fp_a).deps.is_empty(), "OverL rows are independent");
-        let fp_b = dag.find(&format!("fp.segB.row{r}")).unwrap();
-        assert_eq!(dag.node(fp_b).deps, vec![ck]);
+        let fp_a = graph.find(&format!("fp.segA.row{r}")).unwrap();
+        assert!(graph.node(fp_a).deps.is_empty(), "OverL rows are independent");
+        let fp_b = graph.find(&format!("fp.segB.row{r}")).unwrap();
+        assert_eq!(graph.node(fp_b).deps, vec![ck]);
     }
 }
 
 #[test]
 fn executor_completes_under_one_row_budget_and_single_worker() {
-    // a DAG shaped like the hybrid step, driven with synthetic runners
-    let pipe = lowered(Mode::RowHybrid);
-    let dag = pipe.dag();
-    let one_row = dag.node(dag.find("fp.segA.row0").unwrap()).est_bytes;
+    // a graph shaped like the hybrid step, driven with synthetic runners
+    let (_, program) = demo_program(Mode::RowHybrid);
+    let graph = program.graph();
+    let one_row = graph.node(graph.find("fp.segA.row0").unwrap()).est_bytes;
     // the executor's worst case is the serial-order replay peak (working
-    // sets + parked handoff bytes) — the shard replay computes it exactly
-    let splan = lr_cnn::shard::ShardPlan::build(
-        dag,
-        &lr_cnn::shard::Topology::uniform(
-            1,
-            lr_cnn::memory::DeviceModel::rtx3090(),
-            lr_cnn::shard::LinkKind::Pcie,
-        ),
-        lr_cnn::shard::PartitionPolicy::Blocked,
-        vec![u64::MAX],
-    )
-    .expect("1-device shard plan");
-    let replay_peak = splan.replay_peaks().expect("replay")[0];
+    // sets + parked handoff bytes) — exactly what the interpreter reports
+    let replay_peak = lr_cnn::rowir::interp::run(&program, |_, _| Ok(()))
+        .expect("interpret")
+        .peak_bytes;
     for (workers, budget) in [(1, u64::MAX), (1, one_row), (4, one_row), (4, 0)] {
         let cfg = SchedConfig {
             workers,
@@ -170,10 +68,10 @@ fn executor_completes_under_one_row_budget_and_single_worker() {
             policy: Policy::Pipelined,
             shard: None,
         };
-        let hits = Slot::<()>::many(dag.len());
-        let out = sched::run(dag, &cfg, |id| hits[id].put("hit", ()))
+        let hits = Slot::<()>::many(graph.len());
+        let out = sched::run(graph, &cfg, |id| hits[id].put("hit", ()))
             .unwrap_or_else(|e| panic!("w={workers} b={budget}: {e}"));
-        out.trace.check_complete(dag).expect("causal, complete trace");
+        out.trace.check_complete(graph).expect("causal, complete trace");
         for h in &hits {
             h.take("hit").expect("each node ran once");
         }
@@ -186,15 +84,15 @@ fn executor_completes_under_one_row_budget_and_single_worker() {
 }
 
 #[test]
-fn hand_built_dag_runs_with_public_api() {
-    let mut dag = Dag::new();
+fn hand_built_graph_runs_with_public_api() {
+    let mut graph = Graph::new();
     let rows: Vec<_> = (0..4)
-        .map(|r| dag.push(NodeKind::Row, format!("row{r}"), vec![], 100))
+        .map(|r| graph.push(NodeKind::Row, format!("row{r}"), vec![], 100))
         .collect();
-    let reduce = dag.push(NodeKind::Barrier, "reduce", rows, 0);
+    let reduce = graph.push(NodeKind::Barrier, "reduce", rows, 0);
     let sum = std::sync::Mutex::new(0u64);
     let cfg = SchedConfig::pipelined(2).with_budget(250);
-    let out = sched::run(&dag, &cfg, |id| {
+    let out = sched::run(&graph, &cfg, |id| {
         if id != reduce {
             *sum.lock().unwrap() += id as u64 + 1;
         }

@@ -1,121 +1,27 @@
 //! Integration: the shard subsystem through the public API only —
-//! `StepPlan::build` → `StepPlan::lower` → `Partitioner::assign` →
-//! `ShardPlan::lower` → `ShardedExecutor::run_step` — the way an external
-//! embedder would drive it.  No PJRT required: the executor is exercised
-//! with synthetic runners, the lowering with a parsed manifest.
+//! `StepPlan::build` → `StepPlan::lower` (= `rowir::lower`) →
+//! `Partitioner::assign` → `ShardPlan::lower` →
+//! `ShardedExecutor::run_step` — the way an external embedder would drive
+//! it.  No PJRT required: the executor is exercised with synthetic
+//! runners, the lowering with the shared demo manifest (`Manifest::demo`
+//! via `common`).
 
-use lr_cnn::coordinator::{Mode, StepPlan};
-use lr_cnn::memory::{sim, DeviceModel, Tracker};
-use lr_cnn::runtime::Manifest;
-use lr_cnn::sched::{Dag, NodeId, NodeKind, Slot};
+mod common;
+
+use common::{demo_program, random_fan_graph, ALL_POLICIES};
+
+use lr_cnn::coordinator::Mode;
+use lr_cnn::memory::{sim, DeviceModel};
+use lr_cnn::rowir::{Graph, NodeKind};
+use lr_cnn::sched::Slot;
 use lr_cnn::shard::{
     modeled_makespan, LinkKind, PartitionPolicy, Partitioner, ShardPlan, ShardedExecutor,
     Topology,
 };
 use lr_cnn::util::rng::XorShift;
 
-const ALL_POLICIES: [PartitionPolicy; 3] = [
-    PartitionPolicy::Blocked,
-    PartitionPolicy::CostBalanced,
-    PartitionPolicy::DpBoundary,
-];
-
-/// Minimal shape-accurate manifest for the two row-centric modes (same as
-/// tests/sched_properties.rs).
-fn manifest() -> Manifest {
-    let exes: &[(&str, &str, &str)] = &[
-        (
-            "head",
-            "[[1,1,8,4],[1,2],[32,2],[2]]",
-            "[[1],[1,1,8,4],[32,2],[2]]",
-        ),
-        ("segA_row0_fwd", "[[1,1,5,4],[1,1,3,3],[1]]", "[[1,1,4,4]]"),
-        (
-            "segA_row0_bwd",
-            "[[1,1,5,4],[1,1,3,3],[1],[1,1,4,4]]",
-            "[[1,1,3,3],[1],[1,1,4,4]]",
-        ),
-        ("segA_row1_fwd", "[[1,1,5,4],[1,1,3,3],[1]]", "[[1,1,4,4]]"),
-        (
-            "segA_row1_bwd",
-            "[[1,1,5,4],[1,1,3,3],[1],[1,1,4,4]]",
-            "[[1,1,3,3],[1],[1,1,4,4]]",
-        ),
-        ("segB_row0_fwd", "[[1,1,5,4],[1,1,3,3],[1]]", "[[1,1,4,4]]"),
-        (
-            "segB_row0_bwd",
-            "[[1,1,5,4],[1,1,3,3],[1],[1,1,4,4]]",
-            "[[1,1,3,3],[1],[1,1,5,4],[1,1,4,4]]",
-        ),
-        ("segB_row1_fwd", "[[1,1,5,4],[1,1,3,3],[1]]", "[[1,1,4,4]]"),
-        (
-            "segB_row1_bwd",
-            "[[1,1,5,4],[1,1,3,3],[1],[1,1,4,4]]",
-            "[[1,1,3,3],[1],[1,1,5,4],[1,1,4,4]]",
-        ),
-        (
-            "tps_row0_fwd",
-            "[[1,1,4,4],[1,1,3,3],[1]]",
-            "[[1,1,4,4],[1,1,1,4],[1,1,1,4]]",
-        ),
-        (
-            "tps_row1_fwd",
-            "[[1,1,4,4],[1,1,1,4],[1,1,1,4],[1,1,3,3],[1]]",
-            "[[1,1,4,4]]",
-        ),
-    ];
-    let exe_json: Vec<String> = exes
-        .iter()
-        .map(|(name, inputs, outputs)| {
-            format!(
-                r#"{{"name": "{name}", "path": "{name}.hlo", "kind": "k",
-                     "inputs": {inputs}, "outputs": {outputs}}}"#
-            )
-        })
-        .collect();
-    let seg = |name: &str| {
-        format!(
-            r#"{{"name": "{name}", "h_in": 8, "h_out": 8, "c_in": 1, "c_out": 1,
-                 "param_lo": 0, "param_hi": 2,
-                 "rows": [
-                   {{"out_iv": [0, 4], "in_iv": [0, 5], "chain": []}},
-                   {{"out_iv": [4, 8], "in_iv": [3, 8], "chain": []}}
-                 ]}}"#
-        )
-    };
-    let text = format!(
-        r#"{{
-          "model": {{
-            "name": "t", "batch": 1, "h": 8, "w": 4, "n_classes": 2,
-            "layers": [], "heights": [8, 8], "w_out": 4, "fc_in": 32,
-            "param_shapes": [[1, 1, 3, 3], [1], [32, 2], [2]],
-            "n_conv_params": 2
-          }},
-          "plan": {{
-            "ckpt_split": 1, "n_rows": 2, "tps_rows": 2, "naive_rows": 2,
-            "segments": [{segA}, {segB}],
-            "tps": {{
-              "cuts": [0, 4, 8],
-              "rows": [
-                {{"own_iv": [0, 4], "bounds": [[0, 4]], "cache_in": [null], "cache_out": [[3, 4]]}},
-                {{"own_iv": [4, 8], "bounds": [[4, 8]], "cache_in": [[3, 4]], "cache_out": [null]}}
-              ]
-            }}
-          }},
-          "executables": [{exes}]
-        }}"#,
-        segA = seg("segA"),
-        segB = seg("segB"),
-        exes = exe_json.join(",\n")
-    );
-    Manifest::parse(&text).expect("manifest parses")
-}
-
-fn base_dag(mode: Mode) -> Dag {
-    let man = manifest();
-    let mut tracker = Tracker::new();
-    let plan = StepPlan::build(&man, mode, &mut tracker).expect("plan builds");
-    plan.lower(&man).expect("plan lowers").dag().clone()
+fn base_graph(mode: Mode) -> Graph {
+    demo_program(mode).1.graph().clone()
 }
 
 fn topo(n: usize) -> Topology {
@@ -125,14 +31,14 @@ fn topo(n: usize) -> Topology {
 #[test]
 fn every_node_is_assigned_exactly_once_and_in_range() {
     for mode in [Mode::RowHybrid, Mode::Tps] {
-        let dag = base_dag(mode);
+        let graph = base_graph(mode);
         for devices in [1usize, 2, 4] {
             for policy in ALL_POLICIES {
                 let t = topo(devices);
                 let assignment = Partitioner::new(policy)
-                    .assign(&dag, &t, &vec![u64::MAX; devices])
+                    .assign(&graph, &t, &vec![u64::MAX; devices])
                     .unwrap();
-                assert_eq!(assignment.len(), dag.len(), "{mode:?} {policy:?}");
+                assert_eq!(assignment.len(), graph.len(), "{mode:?} {policy:?}");
                 assert!(assignment.iter().all(|&d| d < devices));
             }
         }
@@ -142,20 +48,22 @@ fn every_node_is_assigned_exactly_once_and_in_range() {
 #[test]
 fn transfers_appear_iff_an_edge_crosses_devices() {
     for mode in [Mode::RowHybrid, Mode::Tps] {
-        let dag = base_dag(mode);
+        let graph = base_graph(mode);
         for devices in [1usize, 2, 4] {
             for policy in ALL_POLICIES {
                 let t = topo(devices);
                 let assignment = Partitioner::new(policy)
-                    .assign(&dag, &t, &vec![u64::MAX; devices])
+                    .assign(&graph, &t, &vec![u64::MAX; devices])
                     .unwrap();
                 let plan =
-                    ShardPlan::lower(&dag, &t, &assignment, vec![u64::MAX; devices])
+                    ShardPlan::lower(&graph, &t, &assignment, vec![u64::MAX; devices])
                         .unwrap();
-                plan.dag().validate().expect("sharded DAG stays acyclic");
+                plan.graph()
+                    .validate()
+                    .expect("sharded graph keeps every IR invariant");
                 // distinct (producer, consumer-device) crossing pairs
                 let mut crossing: Vec<(usize, usize)> = Vec::new();
-                for (id, node) in dag.nodes().iter().enumerate() {
+                for (id, node) in graph.nodes().iter().enumerate() {
                     for &d in &node.deps {
                         if assignment[d] != assignment[id] {
                             crossing.push((d, assignment[id]));
@@ -173,9 +81,12 @@ fn transfers_appear_iff_an_edge_crosses_devices() {
                 if devices == 1 {
                     assert!(plan.transfers().is_empty());
                 }
-                // each transfer's endpoints match a real crossing edge
+                // each transfer's endpoints match a real crossing edge,
+                // and the node record itself says it is a transfer
                 for tr in plan.transfers() {
-                    let producer = plan.dag().node(tr.node).deps[0];
+                    let tn = plan.graph().node(tr.node);
+                    assert!(tn.task.is_transfer(), "transfer task on the node");
+                    let producer = tn.deps[0];
                     let base = plan.orig()[producer].expect("producer is a base node");
                     assert_eq!(assignment[base], tr.src, "transfer src device");
                     assert!(crossing.contains(&(base, tr.dst)));
@@ -188,17 +99,19 @@ fn transfers_appear_iff_an_edge_crosses_devices() {
 }
 
 #[test]
-fn blocked_on_one_device_is_bit_identical_to_the_unsharded_dag() {
+fn blocked_on_one_device_is_bit_identical_to_the_unsharded_graph() {
     for mode in [Mode::RowHybrid, Mode::Tps] {
-        let dag = base_dag(mode);
-        let plan = ShardPlan::build(&dag, &topo(1), PartitionPolicy::Blocked, vec![u64::MAX])
-            .unwrap();
-        assert_eq!(plan.dag().len(), dag.len(), "{mode:?}");
-        for (id, want) in dag.nodes().iter().enumerate() {
-            let got = plan.dag().node(id);
+        let graph = base_graph(mode);
+        let plan =
+            ShardPlan::build(&graph, &topo(1), PartitionPolicy::Blocked, vec![u64::MAX])
+                .unwrap();
+        assert_eq!(plan.graph().len(), graph.len(), "{mode:?}");
+        for (id, want) in graph.nodes().iter().enumerate() {
+            let got = plan.graph().node(id);
             assert_eq!(got.kind, want.kind, "{mode:?} node {id}");
             assert_eq!(got.label, want.label);
             assert_eq!(got.deps, want.deps);
+            assert_eq!(got.task, want.task, "tasks survive the identity lowering");
             assert_eq!(got.est_bytes, want.est_bytes);
             assert_eq!(got.out_bytes, want.out_bytes);
         }
@@ -207,17 +120,17 @@ fn blocked_on_one_device_is_bit_identical_to_the_unsharded_dag() {
 
 #[test]
 fn blocked_keeps_the_2ps_chain_on_one_device() {
-    let dag = base_dag(Mode::Tps);
+    let graph = base_graph(Mode::Tps);
     for devices in [2usize, 4] {
         let t = topo(devices);
         let assignment = Partitioner::new(PartitionPolicy::Blocked)
-            .assign(&dag, &t, &vec![u64::MAX; devices])
+            .assign(&graph, &t, &vec![u64::MAX; devices])
             .unwrap();
-        for (id, node) in dag.nodes().iter().enumerate() {
+        for (id, node) in graph.nodes().iter().enumerate() {
             if node.kind == NodeKind::TpsRow {
                 assert_eq!(assignment[id], 0, "2PS rows pin to device 0");
                 for &d in &node.deps {
-                    if dag.node(d).kind == NodeKind::TpsRow {
+                    if graph.node(d).kind == NodeKind::TpsRow {
                         assert_eq!(
                             assignment[d], assignment[id],
                             "zero cross-device 2PS handoffs"
@@ -232,11 +145,11 @@ fn blocked_keeps_the_2ps_chain_on_one_device() {
 #[test]
 fn per_device_replay_peaks_fit_their_ledgers() {
     for mode in [Mode::RowHybrid, Mode::Tps] {
-        let dag = base_dag(mode);
+        let graph = base_graph(mode);
         for devices in [1usize, 2, 4] {
             for policy in ALL_POLICIES {
                 let mut plan =
-                    ShardPlan::build(&dag, &topo(devices), policy, vec![u64::MAX; devices])
+                    ShardPlan::build(&graph, &topo(devices), policy, vec![u64::MAX; devices])
                         .unwrap();
                 let scheds = plan.per_device_schedules();
                 assert_eq!(scheds.len(), devices);
@@ -277,34 +190,7 @@ fn hetero_topologies() -> Vec<Topology> {
     ]
 }
 
-/// Deterministic random fan DAG: `fans` maximal Row fans of random width
-/// and random byte weights, each reduced by a Barrier that chains on the
-/// previous one (the lowered step-DAG shape, randomized).
-fn random_fan_dag(rng: &mut XorShift, fans: usize) -> Dag {
-    let mut dag = Dag::new();
-    let mut prev_barrier: Option<NodeId> = None;
-    for f in 0..fans {
-        let width = 1 + rng.below(9);
-        let mut rows = Vec::with_capacity(width);
-        for r in 0..width {
-            let est = 1 + rng.below(1 << 20) as u64;
-            let out = rng.below(1 + est as usize / 2) as u64;
-            let deps = prev_barrier.map(|b| vec![b]).unwrap_or_default();
-            rows.push(dag.push_out(NodeKind::Row, format!("f{f}r{r}"), deps, est, out));
-        }
-        let est = 1 + rng.below(1 << 18) as u64;
-        prev_barrier = Some(dag.push_out(
-            NodeKind::Barrier,
-            format!("bar{f}"),
-            rows,
-            est,
-            est / 2,
-        ));
-    }
-    dag
-}
-
-/// The DP planner's bar: on randomized fan DAGs over uniform *and*
+/// The DP planner's bar: on randomized fan graphs over uniform *and*
 /// heterogeneous topologies, `DpBoundary`'s modeled makespan never
 /// exceeds greedy `CostBalanced`'s.
 #[test]
@@ -312,17 +198,17 @@ fn dp_boundary_makespan_never_exceeds_cost_balanced() {
     let mut rng = XorShift::new(0xD9B0);
     for seed_round in 0..12 {
         for (ti, t) in hetero_topologies().into_iter().enumerate() {
-            let dag = random_fan_dag(&mut rng, 1 + seed_round % 4);
+            let graph = random_fan_graph(&mut rng, 1 + seed_round % 4);
             let ledgers = vec![u64::MAX; t.len()];
             let dp = Partitioner::new(PartitionPolicy::DpBoundary)
-                .assign(&dag, &t, &ledgers)
+                .assign(&graph, &t, &ledgers)
                 .unwrap();
             let greedy = Partitioner::new(PartitionPolicy::CostBalanced)
-                .assign(&dag, &t, &ledgers)
+                .assign(&graph, &t, &ledgers)
                 .unwrap();
             let (ms_dp, ms_greedy) = (
-                modeled_makespan(&dag, &t, &dp),
-                modeled_makespan(&dag, &t, &greedy),
+                modeled_makespan(&graph, &t, &dp),
+                modeled_makespan(&graph, &t, &greedy),
             );
             assert!(
                 ms_dp <= ms_greedy,
@@ -339,14 +225,15 @@ fn dp_boundary_holds_under_ledger_pressure() {
     let mut rng = XorShift::new(0xF00D);
     for round in 0..8 {
         for t in hetero_topologies() {
-            let dag = random_fan_dag(&mut rng, 1 + round % 3);
+            let graph = random_fan_graph(&mut rng, 1 + round % 3);
             let ledgers = t.budgets(0);
-            let greedy = Partitioner::new(PartitionPolicy::CostBalanced).assign(&dag, &t, &ledgers);
-            let dp = Partitioner::new(PartitionPolicy::DpBoundary).assign(&dag, &t, &ledgers);
+            let greedy =
+                Partitioner::new(PartitionPolicy::CostBalanced).assign(&graph, &t, &ledgers);
+            let dp = Partitioner::new(PartitionPolicy::DpBoundary).assign(&graph, &t, &ledgers);
             match (greedy, dp) {
                 (Ok(g), Ok(d)) => {
                     assert!(
-                        modeled_makespan(&dag, &t, &d) <= modeled_makespan(&dag, &t, &g),
+                        modeled_makespan(&graph, &t, &d) <= modeled_makespan(&graph, &t, &g),
                         "round {round}"
                     );
                 }
@@ -361,9 +248,10 @@ fn dp_boundary_holds_under_ledger_pressure() {
 }
 
 /// Mixed rtx3090+a100 execution through the public executor API: the
-/// sharded checksum is bit-identical to the serial loop for all three
-/// policies on both row-centric step DAGs, with every per-device ledger
-/// (serial replay peak clamped to device memory) respected.
+/// sharded checksum is bit-identical to the serial (id-order) reduction
+/// for all three policies on both row-centric step programs, with every
+/// per-device ledger (serial replay peak clamped to device memory)
+/// respected.
 #[test]
 fn heterogeneous_execution_is_bit_identical_for_all_policies() {
     let topo = Topology::new(
@@ -376,24 +264,26 @@ fn heterogeneous_execution_is_bit_identical_for_all_policies() {
         LinkKind::NvLink,
     );
     for mode in [Mode::RowHybrid, Mode::Tps] {
-        let dag = base_dag(mode);
+        let graph = base_graph(mode);
         // the serial reference: node id -> a pure value, reduced in id order
         let node_val = |id: usize| ((id as f32) * 0.7311).sin();
-        let serial: f32 = (0..dag.len()).map(node_val).sum();
+        let serial: f32 = (0..graph.len()).map(node_val).sum();
         for policy in ALL_POLICIES {
-            let mut plan =
-                ShardPlan::build(&dag, &topo, policy, topo.budgets(0)).unwrap();
+            let mut plan = ShardPlan::build(&graph, &topo, policy, topo.budgets(0)).unwrap();
             let ledgers = plan.replay_ledgers(&topo, 0).unwrap();
             plan.set_budgets(ledgers.clone()).unwrap();
             plan.check_budgets().expect("replay fits the clamped ledgers");
             let exec = ShardedExecutor::new(4);
-            let acc: Vec<Slot<f32>> = Slot::many(dag.len());
+            let acc: Vec<Slot<f32>> = Slot::many(graph.len());
             let out = exec
-                .run_step(&plan, |base| acc[base].put("v", node_val(base)))
+                .run_step(&plan, |id| {
+                    let base = plan.orig()[id].expect("runner never sees transfers");
+                    acc[base].put("v", node_val(base))
+                })
                 .unwrap();
-            out.trace.check_complete(plan.dag()).unwrap();
+            out.trace.check_complete(plan.graph()).unwrap();
             // deterministic reduction in base-id order, like a barrier does
-            let sharded: f32 = (0..dag.len())
+            let sharded: f32 = (0..graph.len())
                 .map(|i| acc[i].take("v").expect("every node ran once"))
                 .sum();
             assert_eq!(
@@ -418,11 +308,12 @@ fn heterogeneous_execution_is_bit_identical_for_all_policies() {
 /// pass a budget the device cannot hold.
 #[test]
 fn tiny_device_ledgers_are_rejected_by_the_replay_check() {
-    let dag = base_dag(Mode::RowHybrid);
+    let graph = base_graph(Mode::RowHybrid);
     let mut tiny = DeviceModel::rtx3090();
     tiny.hbm_bytes = 64; // 60 usable bytes — nothing real fits
     let topo = Topology::new(vec![tiny], LinkKind::Pcie);
-    let plan = ShardPlan::build(&dag, &topo, PartitionPolicy::Blocked, topo.budgets(0)).unwrap();
+    let plan =
+        ShardPlan::build(&graph, &topo, PartitionPolicy::Blocked, topo.budgets(0)).unwrap();
     let err = plan.check_budgets().unwrap_err();
     assert!(
         err.to_string().contains("exceeds"),
@@ -431,25 +322,28 @@ fn tiny_device_ledgers_are_rejected_by_the_replay_check() {
 }
 
 #[test]
-fn sharded_executor_runs_lowered_step_dags_to_completion() {
+fn sharded_executor_runs_lowered_step_programs_to_completion() {
     for mode in [Mode::RowHybrid, Mode::Tps] {
-        let dag = base_dag(mode);
+        let graph = base_graph(mode);
         for devices in [1usize, 2, 4] {
             let budgets = vec![u64::MAX; devices];
             let mut plan =
-                ShardPlan::build(&dag, &topo(devices), PartitionPolicy::Blocked, budgets)
+                ShardPlan::build(&graph, &topo(devices), PartitionPolicy::Blocked, budgets)
                     .unwrap();
             let peaks = plan.replay_peaks().unwrap();
             plan.set_budgets(peaks.clone()).unwrap();
             let exec = ShardedExecutor::new(4);
             // two steps on one pool: reuse, no respawn
             for _ in 0..2 {
-                let hits = Slot::<()>::many(dag.len());
+                let hits = Slot::<()>::many(graph.len());
                 let out = exec
-                    .run_step(&plan, |base| hits[base].put("hit", ()))
+                    .run_step(&plan, |id| {
+                        let base = plan.orig()[id].expect("no transfers in the runner");
+                        hits[base].put("hit", ())
+                    })
                     .expect("step succeeds");
                 out.trace
-                    .check_complete(plan.dag())
+                    .check_complete(plan.graph())
                     .expect("causal, complete trace");
                 for h in &hits {
                     h.take("hit").expect("every base node ran exactly once");
