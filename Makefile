@@ -7,7 +7,7 @@
 
 RUST_MANIFEST := rust/Cargo.toml
 
-.PHONY: build test artifacts ir-dump bench-hotpath bench-hotpath-quick bench-sched bench-sched-quick bench-shard bench-shard-quick lint
+.PHONY: build test artifacts ir-dump bench-hotpath bench-hotpath-quick bench-sched bench-sched-quick bench-shard bench-shard-quick bench-fault bench-fault-quick fault-matrix lint
 
 build:
 	cargo build --release --manifest-path $(RUST_MANIFEST)
@@ -55,6 +55,22 @@ bench-shard:
 
 bench-shard-quick:
 	BENCH_QUICK=1 cargo bench --bench shard_scaling --manifest-path $(RUST_MANIFEST)
+
+# Fault-recovery overhead: fault-free vs transient-retry vs device-lost
+# recovery on 2/4-device topologies, checksums bit-identical to serial
+# under every scenario; writes BENCH_fault_recovery.json at the repo
+# root (docs/RESILIENCE.md).
+bench-fault:
+	cargo bench --bench fault_recovery --manifest-path $(RUST_MANIFEST)
+
+bench-fault-quick:
+	BENCH_QUICK=1 cargo bench --bench fault_recovery --manifest-path $(RUST_MANIFEST)
+
+# The fault-injection matrix on its own: the seeded random-schedule ×
+# mode × devices × policy bit-identity sweep plus the typed-error and
+# degraded-survivor cases (rust/tests/fault_properties.rs).
+fault-matrix:
+	cargo test -q --test fault_properties --manifest-path $(RUST_MANIFEST)
 
 # What CI's lint job runs.
 lint:

@@ -1,0 +1,358 @@
+//! Fault-recovery overhead (the resilience tentpole's measurement rig):
+//! the hybrid step's DAG shape — independent FP rows, a head barrier,
+//! independent BP rows, a reduce — driven through the *fault-aware*
+//! sharded executor on 2- and 4-device topologies under three scenarios:
+//!
+//! * `fault_free`   — the no-fault baseline (the price of the fault
+//!   plumbing itself relative to `shard_scaling` is ~zero: one branch on
+//!   an empty fault map per dispatch);
+//! * `transient_x2` — two injected transient faults absorbed by bounded
+//!   retry (`max_attempts = 3`) with modeled (never slept) backoff;
+//! * `device_lost`  — device 0 dies mid-step: quiesce, re-partition over
+//!   the survivors, recompute only the unfinished closure.
+//!
+//! Every scenario's checksum is asserted **bit-identical** to the plain
+//! serial loop's — the paper's determinism contract survives injected
+//! faults — and the `device_lost` timing covers the *whole* recovery
+//! (re-plan + closure rerun), so the JSON tracks end-to-end loss cost.
+//!
+//! Results are printed *and* written to the repo root
+//! (`BENCH_fault_recovery.json`, schema 1 in docs/RESILIENCE.md).
+//! `--quick` / `BENCH_QUICK=1` reduces iteration counts for CI.
+
+use lr_cnn::faults::{FaultInjector, FaultPlan};
+use lr_cnn::memory::DeviceModel;
+use lr_cnn::metrics::bench;
+use lr_cnn::rowir::{interp, Graph, NodeId, NodeKind};
+use lr_cnn::sched::{RetryPolicy, Slot};
+use lr_cnn::shard::{
+    FaultArgs, LinkKind, PartitionPolicy, ShardPlan, ShardedExecutor, StepRun, Topology,
+};
+
+use std::fmt::Write as _;
+
+const ROWS: usize = 8;
+const ROW_BYTES: u64 = 64 << 20;
+const OUT_BYTES: u64 = 16 << 20;
+const WORKERS: usize = 4;
+const POLICY: PartitionPolicy = PartitionPolicy::CostBalanced;
+
+/// Deterministic CPU kernel standing in for a row executable.
+fn row_work(seed: u64, flops: usize) -> f32 {
+    let mut x = (seed as f32).mul_add(0.001, 1.0);
+    let mut acc = 0.0f32;
+    for i in 0..flops {
+        x = x.mul_add(1.000_000_1, 0.000_000_1);
+        acc += x * ((i & 7) as f32);
+    }
+    std::hint::black_box(acc)
+}
+
+/// The hybrid step shape: FP rows ∥ → head → BP rows ∥ → reduce.
+fn synth_dag() -> Graph {
+    let mut dag = Graph::new();
+    let fp: Vec<NodeId> = (0..ROWS)
+        .map(|r| dag.push_out(NodeKind::Row, format!("fp.row{r}"), vec![], ROW_BYTES, OUT_BYTES))
+        .collect();
+    let head = dag.push_out(NodeKind::Barrier, "head", fp, ROW_BYTES, OUT_BYTES);
+    let bp: Vec<NodeId> = (0..ROWS)
+        .map(|r| {
+            dag.push_out(NodeKind::Row, format!("bp.row{r}"), vec![head], ROW_BYTES, OUT_BYTES)
+        })
+        .collect();
+    dag.push(NodeKind::Barrier, "reduce", bp, 0);
+    dag
+}
+
+/// The same arithmetic as a plain serial loop (the reference).
+fn serial_step(flops: usize) -> f32 {
+    let mut head = 0.0f32;
+    let fp: Vec<f32> = (0..ROWS).map(|r| row_work(r as u64, flops)).collect();
+    for v in &fp {
+        head += v;
+    }
+    let bp: Vec<f32> = (0..ROWS)
+        .map(|r| row_work(r as u64 + 100, flops) + head * 1e-6)
+        .collect();
+    let mut acc = head;
+    for v in &bp {
+        acc += v;
+    }
+    acc
+}
+
+/// Map a recompute closure over the *base* graph onto a (re-partitioned)
+/// sharded plan: a real node is included iff its originating base node is
+/// in the closure; a transfer is included iff any consumer is (descending
+/// walk — consumers always have higher ids).  The trainer's recovery path
+/// does the same mapping; the bench re-derives it from public accessors.
+fn closure_on_plan(plan: &ShardPlan, closure: &[bool]) -> Vec<bool> {
+    let graph = plan.graph();
+    let n = graph.len();
+    let mut rev: Vec<Vec<NodeId>> = vec![Vec::new(); n];
+    for id in 0..n {
+        for &d in &graph.node(id).deps {
+            rev[d].push(id);
+        }
+    }
+    let mut include = vec![false; n];
+    for id in 0..n {
+        if let Some(o) = plan.orig()[id] {
+            include[id] = closure[o];
+        }
+    }
+    for id in (0..n).rev() {
+        if plan.orig()[id].is_none() {
+            include[id] = rev[id].iter().any(|&s| include[s]);
+        }
+    }
+    include
+}
+
+#[derive(Default)]
+struct RunStats {
+    retries: u64,
+    backoff_s: f64,
+    recomputed: u64,
+    phases: usize,
+    survivors: usize,
+}
+
+/// One full step under an injected fault schedule, recovery included:
+/// on `StepRun::Lost` the driver marks the device failed, re-partitions
+/// the base DAG over the survivors and reruns only the unfinished
+/// closure — the exact sequence `ShardState::run_step` performs on the
+/// trainer path, driven here over the synthetic Slot graph.
+fn faulty_step(
+    base: &Graph,
+    topo0: &Topology,
+    exec: &ShardedExecutor,
+    faults: Option<&FaultPlan>,
+    retry: RetryPolicy,
+    flops: usize,
+) -> (f32, RunStats) {
+    let mut topo = topo0.clone();
+    let mut plan =
+        ShardPlan::build(base, &topo, POLICY, topo.budgets(0)).expect("initial plan builds");
+    let injector = faults.map(|p| FaultInjector::new(p.clone()));
+    let mut include = vec![true; plan.graph().len()];
+    let mut finished_base = vec![false; base.len()];
+    let mut stats = RunStats::default();
+
+    let fp_out: Vec<Slot<f32>> = Slot::many(ROWS);
+    let bp_out: Vec<Slot<f32>> = Slot::many(ROWS);
+    let head_out: Slot<f32> = Slot::new();
+    let result: Slot<f32> = Slot::new();
+
+    loop {
+        stats.phases += 1;
+        let args = FaultArgs {
+            injector: injector.as_ref(),
+            retry,
+            step: 0,
+        };
+        let graph = plan.graph();
+        let run = exec
+            .run_step_faulty(&plan, &include, args, |id| {
+                let label = graph.node(id).label.as_str();
+                if let Some(r) = label.strip_prefix("fp.row") {
+                    let r: usize = r.parse().expect("row index");
+                    fp_out[r].put("fp", row_work(r as u64, flops))
+                } else if let Some(r) = label.strip_prefix("bp.row") {
+                    let r: usize = r.parse().expect("row index");
+                    let h = head_out.cloned("head")?;
+                    bp_out[r].put("bp", row_work(r as u64 + 100, flops) + h * 1e-6)
+                } else if label == "head" {
+                    let mut acc = 0.0f32;
+                    for s in &fp_out {
+                        acc += s.take("fp")?;
+                    }
+                    head_out.put("head", acc)
+                } else {
+                    let mut acc = head_out.take("head")?;
+                    for s in &bp_out {
+                        acc += s.take("bp")?;
+                    }
+                    result.put("result", acc)
+                }
+            })
+            .expect("faulty run neither exhausts retries nor fails");
+        match run {
+            StepRun::Done(o) => {
+                stats.retries += o.retries;
+                stats.backoff_s += o.modeled_backoff_s;
+                stats.survivors = topo.alive_count();
+                return (result.take("result").expect("result set"), stats);
+            }
+            StepRun::Lost {
+                device,
+                finished,
+                partial,
+                ..
+            } => {
+                stats.retries += partial.retries;
+                stats.backoff_s += partial.modeled_backoff_s;
+                for (id, done) in finished.iter().enumerate() {
+                    if *done {
+                        if let Some(o) = plan.orig()[id] {
+                            finished_base[o] = true;
+                        }
+                    }
+                }
+                topo.mark_failed(device);
+                plan = ShardPlan::build(base, &topo, POLICY, topo.budgets(0))
+                    .expect("survivors can hold the step");
+                let closure =
+                    interp::recompute_closure(base, &vec![true; base.len()], &finished_base);
+                include = closure_on_plan(&plan, &closure);
+                stats.recomputed += include.iter().filter(|&&b| b).count() as u64;
+            }
+        }
+    }
+}
+
+struct Rec {
+    topology: &'static str,
+    devices: usize,
+    scenario: &'static str,
+    mean_ms: f64,
+    p50_ms: f64,
+    overhead: f64,
+    retries: u64,
+    recomputed: u64,
+    phases: usize,
+    survivors: usize,
+}
+
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.4}")
+    } else {
+        "null".into()
+    }
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let flops = if quick { 60_000 } else { 400_000 };
+    let (warmup, iters) = if quick { (2, 10) } else { (5, 40) };
+
+    let dag = synth_dag();
+    let reference = serial_step(flops);
+    let d90 = DeviceModel::rtx3090();
+    let topologies: Vec<(&'static str, Topology)> = vec![
+        ("rtx3090x2", Topology::uniform(2, d90.clone(), LinkKind::NvLink)),
+        ("rtx3090x4", Topology::uniform(4, d90.clone(), LinkKind::NvLink)),
+    ];
+
+    let retry3 = RetryPolicy::new(3);
+    let transient = FaultPlan::parse("s0.d0=transient*2").expect("plan parses");
+    let lost = FaultPlan::parse("s0.d0=lost").expect("plan parses");
+    let scenarios: Vec<(&'static str, Option<&FaultPlan>, RetryPolicy)> = vec![
+        ("fault_free", None, RetryPolicy::default()),
+        ("transient_x2", Some(&transient), retry3),
+        ("device_lost", Some(&lost), RetryPolicy::default()),
+    ];
+
+    let mut recs: Vec<Rec> = Vec::new();
+    for (topo_name, topo) in &topologies {
+        let topo_name: &'static str = topo_name;
+        let exec = ShardedExecutor::new(WORKERS);
+        let mut baseline_ms = f64::NAN;
+        for &(scenario, faults, retry) in &scenarios {
+            // determinism check before timing: the recovered checksum is
+            // bit-identical to serial under every scenario
+            let (sum, stats) = faulty_step(&dag, topo, &exec, faults, retry, flops);
+            assert_eq!(
+                sum.to_bits(),
+                reference.to_bits(),
+                "{topo_name}/{scenario}: checksum must be bit-identical to serial"
+            );
+            match scenario {
+                "transient_x2" => {
+                    assert_eq!(stats.retries, 2, "both faults were retried");
+                    assert!(stats.backoff_s > 0.0, "modeled backoff was charged");
+                }
+                "device_lost" => {
+                    assert_eq!(stats.survivors, topo.len() - 1, "one device stays failed");
+                    assert!(stats.recomputed > 0, "the lost closure reran");
+                    assert_eq!(stats.phases, 2, "one loss, one recovery phase");
+                }
+                _ => assert_eq!(stats.phases, 1),
+            }
+
+            let (mut retries, mut recomputed, mut phases, mut survivors) = (0u64, 0u64, 0, 0);
+            let r = bench::time(
+                &format!("{topo_name} ({} device(s)), {scenario}", topo.len()),
+                warmup,
+                iters,
+                || {
+                    let (sum, s) = faulty_step(&dag, topo, &exec, faults, retry, flops);
+                    retries = s.retries;
+                    recomputed = s.recomputed;
+                    phases = s.phases;
+                    survivors = s.survivors;
+                    sum
+                },
+            );
+            if scenario == "fault_free" {
+                baseline_ms = r.mean_ms;
+            }
+            let overhead = r.mean_ms / baseline_ms;
+            println!(
+                "{}   [×{overhead:.2} vs fault-free, {retries} retrie(s), {recomputed} recomputed, {phases} phase(s)]",
+                r.report()
+            );
+            recs.push(Rec {
+                topology: topo_name,
+                devices: topo.len(),
+                scenario,
+                mean_ms: r.mean_ms,
+                p50_ms: r.p50_ms,
+                overhead,
+                retries,
+                recomputed,
+                phases,
+                survivors,
+            });
+        }
+    }
+
+    // ---- JSON at the repo root (tracked trajectory) ----
+    let mut out = String::new();
+    out.push_str("{\n  \"bench\": \"fault_recovery\",\n  \"schema\": 1,\n");
+    let _ = writeln!(out, "  \"quick\": {quick},");
+    let _ = writeln!(
+        out,
+        "  \"rows\": {ROWS},\n  \"row_bytes\": {ROW_BYTES},\n  \"out_bytes\": {OUT_BYTES},\n  \"workers\": {WORKERS},"
+    );
+    out.push_str("  \"runs\": [\n");
+    for (i, rec) in recs.iter().enumerate() {
+        let _ = write!(
+            out,
+            "    {{\"topology\": \"{}\", \"devices\": {}, \"scenario\": \"{}\", \
+             \"mean_ms\": {}, \"p50_ms\": {}, \"overhead_vs_fault_free\": {}, \
+             \"retries\": {}, \"recomputed_nodes\": {}, \"phases\": {}, \"survivors\": {}}}",
+            rec.topology,
+            rec.devices,
+            rec.scenario,
+            json_num(rec.mean_ms),
+            json_num(rec.p50_ms),
+            json_num(rec.overhead),
+            rec.retries,
+            rec.recomputed,
+            rec.phases,
+            rec.survivors,
+        );
+        out.push_str(if i + 1 < recs.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ]\n}\n");
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_fault_recovery.json");
+    match std::fs::write(&path, out) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}

@@ -36,11 +36,14 @@ use std::time::Instant;
 
 use crate::data::SyntheticCorpus;
 use crate::error::{Error, Result};
-use crate::rowir::{self, interp, InterpOutcome, RowProgram, Task};
+use crate::faults::{DeviceLostPolicy, FaultConfig, FaultInjector};
+use crate::rowir::{self, interp, Graph, InterpOutcome, RowProgram, Task};
 use crate::runtime::manifest::Manifest;
 use crate::runtime::{ExecBackend, ExecHandle, Runtime, Tensor, TensorView};
-use crate::sched::{self, ExecOutcome, Policy, SchedConfig, Slot, Trace};
-use crate::shard::{self, ShardPlan, ShardedExecutor};
+use crate::sched::{self, ExecOutcome, Policy, RetryPolicy, SchedConfig, Slot, Trace};
+use crate::shard::{
+    self, DeviceId, FaultArgs, PartitionPolicy, ShardPlan, ShardedExecutor, StepRun, Topology,
+};
 
 pub use crate::rowir::{naive_row_extents, Mode};
 
@@ -62,6 +65,15 @@ pub struct StepStats {
     pub step_ms: f64,
     /// PJRT executions issued
     pub executions: u64,
+    /// Transient-fault retries absorbed this step (0 off the faulty path).
+    pub retries: u64,
+    /// Modeled backoff seconds those retries charged — attribution like
+    /// `Topology::transfer_seconds`, never slept.
+    pub modeled_backoff_s: f64,
+    /// Devices lost (and degraded around) during this step.
+    pub lost_devices: Vec<usize>,
+    /// Sharded nodes re-executed by recovery phases after device losses.
+    pub recomputed_nodes: u64,
 }
 
 /// One row of a segment in the prebuilt execution table.
@@ -317,24 +329,27 @@ impl StepPlan {
     /// Bit-exact with [`StepPlan::step_serial`] either way: every
     /// reduction happens in a barrier task in id order; workers only
     /// produce per-row outputs, and transfers carry data, not arithmetic.
+    ///
+    /// The shard state is `&mut` because its [`ShardState::run_step`]
+    /// owns the fault-recovery loop: a device loss re-partitions the
+    /// plan in place before the step resumes.  Step results stay
+    /// bit-identical to serial across recovery — every base node still
+    /// runs exactly once, and its output lands in the same host slot.
     pub fn step_pipelined(
         &self,
         ex: &dyn ExecBackend,
         program: &RowProgram,
         params: &ParamSet,
         cfg: &SchedConfig,
-        shard: Option<&ShardState>,
+        shard: Option<&mut ShardState>,
         x: &Tensor,
         y1h: &Tensor,
     ) -> Result<(f32, Vec<Tensor>, ExecOutcome)> {
         let cells = self.make_cells()?;
         let outcome = match shard {
-            Some(ss) => {
-                let graph = ss.plan.graph();
-                ss.exec.run_step(&ss.plan, |id| {
-                    run_task(ex, &self.kind, params, x, y1h, &cells, graph.node(id).task)
-                })
-            }
+            Some(ss) => ss.run_step(|task| {
+                run_task(ex, &self.kind, params, x, y1h, &cells, task)
+            }),
             None => {
                 let graph = program.graph();
                 sched::run(graph, cfg, |id| {
@@ -390,12 +405,72 @@ impl StepPlan {
     }
 }
 
+/// Everything a device-loss recovery needs to re-plan from scratch:
+/// the unlowered step graph plus the (surviving) topology and the
+/// budget-shaping inputs `ShardState::build` used the first time.
+struct RecoveryCtx {
+    /// The base (pre-transfer-lowering) step graph.
+    base: Graph,
+    /// Live topology; `mark_failed` masks devices as they die, so device
+    /// ids — and with them ledger/trace lanes — stay stable.
+    topo: Topology,
+    policy: PartitionPolicy,
+    mem_budget: u64,
+    xi: u64,
+}
+
+/// Fault-injection knobs installed on a shard state
+/// ([`ShardState::set_faults`]); default is fault-free with no retry.
+#[derive(Default)]
+struct FaultState {
+    injector: Option<FaultInjector>,
+    retry: RetryPolicy,
+    on_lost: DeviceLostPolicy,
+}
+
 /// Sharded execution state: the transfer-lowered plan plus the
 /// persistent worker pool (constructed once in [`Trainer::set_sched`],
 /// reused by every step — no spawn-per-step).
+///
+/// With a [`FaultConfig`] installed, [`ShardState::run_step`] also owns
+/// the device-loss recovery loop: quiesce → mark the device failed →
+/// re-partition over the survivors → re-run only the unfinished
+/// dependency closure (docs/RESILIENCE.md).
 pub struct ShardState {
     plan: ShardPlan,
     exec: ShardedExecutor,
+    /// `None` for externally-built plans ([`ShardState::with_plan`]):
+    /// without the base graph + topology a device loss cannot degrade
+    /// and surfaces [`Error::DeviceLost`] directly.
+    recovery: Option<RecoveryCtx>,
+    faults: FaultState,
+    /// Training-step counter the fault plan's schedule resolves against.
+    step_no: u64,
+    /// Devices lost during the most recent step.
+    last_lost: Vec<DeviceId>,
+    /// Sharded nodes re-executed by the most recent step's recovery
+    /// phases.
+    last_recomputed: u64,
+}
+
+/// Map a base-graph recompute closure onto a sharded plan: a real node
+/// runs iff its originating base node is in the closure; a transfer runs
+/// iff any of its consumers does (walked in descending id order —
+/// consumers of a transfer are always real nodes with higher ids).
+fn closure_on_plan(plan: &ShardPlan, closure: &[bool]) -> Vec<bool> {
+    let n = plan.graph().len();
+    let mut include = vec![false; n];
+    for id in 0..n {
+        if let Some(o) = plan.orig()[id] {
+            include[id] = closure[o];
+        }
+    }
+    for id in (0..n).rev() {
+        if plan.orig()[id].is_none() {
+            include[id] = plan.succ()[id].iter().any(|&s| include[s]);
+        }
+    }
+    include
 }
 
 impl ShardState {
@@ -424,22 +499,191 @@ impl ShardState {
         Ok(ShardState {
             plan,
             exec: ShardedExecutor::new(cfg.workers),
+            recovery: Some(RecoveryCtx {
+                base: program.graph().clone(),
+                topo,
+                policy: sc.policy,
+                mem_budget: cfg.mem_budget,
+                xi,
+            }),
+            faults: FaultState::default(),
+            step_no: 0,
+            last_lost: Vec::new(),
+            last_recomputed: 0,
         })
     }
 
     /// Wrap an externally-built shard plan (custom partition, custom —
     /// e.g. tight replay-ledger — budgets) with a fresh persistent pool.
     /// The proof suites drive exact-budget plans through this; the
-    /// trainer path goes through [`ShardState::build`].
+    /// trainer path goes through [`ShardState::build`].  No recovery
+    /// context: a device loss surfaces [`Error::DeviceLost`] directly.
     pub fn with_plan(plan: ShardPlan, workers: usize) -> ShardState {
         ShardState {
             plan,
             exec: ShardedExecutor::new(workers.max(1)),
+            recovery: None,
+            faults: FaultState::default(),
+            step_no: 0,
+            last_lost: Vec::new(),
+            last_recomputed: 0,
         }
     }
 
     pub fn plan(&self) -> &ShardPlan {
         &self.plan
+    }
+
+    /// Install fault-injection knobs (a fresh [`FaultInjector`] with its
+    /// per-spec firing budgets reset).
+    pub fn set_faults(&mut self, cfg: &FaultConfig) {
+        self.faults = FaultState {
+            injector: cfg.plan.clone().map(FaultInjector::new),
+            retry: cfg.retry,
+            on_lost: cfg.on_device_lost,
+        };
+    }
+
+    /// The surviving topology (`None` for [`ShardState::with_plan`]).
+    pub fn topology(&self) -> Option<&Topology> {
+        self.recovery.as_ref().map(|c| &c.topo)
+    }
+
+    /// Devices lost during the most recent [`ShardState::run_step`].
+    pub fn last_lost(&self) -> &[DeviceId] {
+        &self.last_lost
+    }
+
+    /// Sharded nodes re-executed by the most recent step's recovery
+    /// phases.
+    pub fn last_recomputed(&self) -> u64 {
+        self.last_recomputed
+    }
+
+    /// One step under the installed fault knobs, including the
+    /// device-loss recovery loop:
+    ///
+    /// 1. run the current include subset ([`ShardedExecutor::run_step_faulty`]);
+    /// 2. on [`StepRun::Lost`]: fold the finished frontier back onto the
+    ///    base graph (outputs live in host slots and survive), mark the
+    ///    device failed, re-partition over the survivors
+    ///    ([`ShardPlan::build`] — failed devices have zero budget and
+    ///    take no nodes), and restrict the next phase to the
+    ///    [`interp::recompute_closure`] of the unfinished base nodes,
+    ///    gated by [`ShardPlan::check_budgets_subset`];
+    /// 3. repeat until [`StepRun::Done`]; peaks merge elementwise (device
+    ///    ids are stable across phases), retry/backoff accounting sums,
+    ///    and the returned trace is the final phase's.
+    ///
+    /// Every base node still executes exactly once across all phases, so
+    /// results remain bit-identical to serial.  [`Error::DeviceLost`]
+    /// surfaces when the policy is [`DeviceLostPolicy::Fail`], there is
+    /// no recovery context, no device survives, or no survivor layout is
+    /// ledger-feasible.
+    pub fn run_step<F>(&mut self, run: F) -> Result<ExecOutcome>
+    where
+        F: Fn(Task) -> Result<()> + Sync,
+    {
+        self.last_lost.clear();
+        self.last_recomputed = 0;
+        let step_no = self.step_no;
+        self.step_no += 1;
+
+        let mut include = vec![true; self.plan.graph().len()];
+        // finished mask over the *base* graph, accumulated across phases
+        let mut finished_base =
+            vec![false; self.recovery.as_ref().map_or(0, |c| c.base.len())];
+        let mut device_peaks = vec![0u64; self.plan.devices()];
+        let mut retries = 0u64;
+        let mut backoff_s = 0f64;
+
+        loop {
+            let faults = FaultArgs {
+                injector: self.faults.injector.as_ref(),
+                retry: self.faults.retry,
+                step: step_no,
+            };
+            let graph = self.plan.graph();
+            let ran = self.exec.run_step_faulty(&self.plan, &include, faults, |id| {
+                run(graph.node(id).task)
+            })?;
+            match ran {
+                StepRun::Done(out) => {
+                    for (acc, p) in device_peaks.iter_mut().zip(&out.device_peaks) {
+                        *acc = (*acc).max(*p);
+                    }
+                    retries += out.retries;
+                    backoff_s += out.modeled_backoff_s;
+                    return Ok(ExecOutcome {
+                        peak_bytes: device_peaks.iter().copied().max().unwrap_or(0),
+                        device_peaks,
+                        trace: out.trace,
+                        retries,
+                        modeled_backoff_s: backoff_s,
+                    });
+                }
+                StepRun::Lost {
+                    device,
+                    node,
+                    finished,
+                    partial,
+                } => {
+                    for (acc, p) in device_peaks.iter_mut().zip(&partial.device_peaks) {
+                        *acc = (*acc).max(*p);
+                    }
+                    retries += partial.retries;
+                    backoff_s += partial.modeled_backoff_s;
+                    self.last_lost.push(device);
+                    let label = self.plan.graph().node(node).label.clone();
+                    let lost = |label: &str| Error::DeviceLost {
+                        device,
+                        node: label.to_string(),
+                    };
+                    if self.faults.on_lost == DeviceLostPolicy::Fail {
+                        return Err(lost(&label));
+                    }
+                    let Some(ctx) = self.recovery.as_mut() else {
+                        return Err(lost(&label));
+                    };
+                    // fold this phase's finished frontier onto the base
+                    // graph (transfer nodes have no base counterpart)
+                    for (id, &done) in finished.iter().enumerate() {
+                        if done {
+                            if let Some(o) = self.plan.orig()[id] {
+                                finished_base[o] = true;
+                            }
+                        }
+                    }
+                    ctx.topo.mark_failed(device);
+                    if ctx.topo.alive_count() == 0 {
+                        return Err(lost(&label));
+                    }
+                    // survivors' budgets, shaped exactly like build time
+                    let budgets: Vec<u64> = ctx
+                        .topo
+                        .budgets(ctx.xi)
+                        .into_iter()
+                        .map(|cap| cap.min(ctx.mem_budget))
+                        .collect();
+                    let Ok(plan) =
+                        ShardPlan::build(&ctx.base, &ctx.topo, ctx.policy, budgets)
+                    else {
+                        return Err(lost(&label));
+                    };
+                    let needed = vec![true; ctx.base.len()];
+                    let closure =
+                        interp::recompute_closure(&ctx.base, &needed, &finished_base);
+                    let next = closure_on_plan(&plan, &closure);
+                    if plan.check_budgets_subset(&next).is_err() {
+                        return Err(lost(&label));
+                    }
+                    self.last_recomputed +=
+                        next.iter().filter(|&&b| b).count() as u64;
+                    include = next;
+                    self.plan = plan;
+                }
+            }
+        }
     }
 }
 
@@ -500,6 +744,9 @@ pub struct Trainer<'r> {
     /// unless `SchedConfig::shard` says otherwise) — [`SchedState::set`]
     /// keeps the pair consistent transactionally.
     sched: SchedState,
+    /// Fault-injection knobs ([`Trainer::set_faults`]); re-applied to the
+    /// fresh shard state on every reconfiguration.
+    faults: FaultConfig,
     /// The lowered row program (`None` only for a naive-infeasible plan).
     program: Option<RowProgram>,
     /// Event trace of the most recent pipelined step (per-device lanes
@@ -541,6 +788,7 @@ impl<'r> Trainer<'r> {
             optimizer,
             plan,
             sched: SchedState::new(),
+            faults: FaultConfig::default(),
             program,
             last_trace: None,
         })
@@ -569,10 +817,27 @@ impl<'r> Trainer<'r> {
     pub fn set_sched(&mut self, cfg: SchedConfig) -> Result<()> {
         let xi = self.params.size_bytes() + self.optimizer.state_bytes(&self.params);
         self.sched.set(self.program.as_ref(), cfg, xi)?;
+        if let Some(ss) = self.sched.shard.as_mut() {
+            ss.set_faults(&self.faults);
+        }
         // a prior step's trace belongs to the previous plan's graph;
         // keeping it would let trace_json pair it with the new one
         self.last_trace = None;
         Ok(())
+    }
+
+    /// Install fault-injection knobs (`--fault-plan`, `--retry`,
+    /// `--on-device-lost`).  Off the sharded path they are inert — the
+    /// serial and plain-pipelined drivers run fault-free.
+    pub fn set_faults(&mut self, cfg: FaultConfig) {
+        if let Some(ss) = self.sched.shard.as_mut() {
+            ss.set_faults(&cfg);
+        }
+        self.faults = cfg;
+    }
+
+    pub fn faults(&self) -> &FaultConfig {
+        &self.faults
     }
 
     pub fn sched(&self) -> &SchedConfig {
@@ -619,25 +884,30 @@ impl<'r> Trainer<'r> {
             (_, None) => return Err(Error::Sched("step plan was never lowered".into())),
         };
         let pipelined = self.sched.cfg.policy == Policy::Pipelined;
-        let (loss, grads, peak_bytes, device_peaks) = if pipelined {
+        let (loss, grads, peak_bytes, device_peaks, retries, backoff_s) = if pipelined {
             let (loss, grads, outcome) = self.plan.step_pipelined(
                 self.rt,
                 program,
                 &self.params,
                 &self.sched.cfg,
-                self.sched.shard.as_ref(),
+                self.sched.shard.as_mut(),
                 x,
                 y1h,
             )?;
             let peak = outcome.peak_bytes;
             let device_peaks = outcome.device_peaks.clone();
+            let (retries, backoff_s) = (outcome.retries, outcome.modeled_backoff_s);
             self.last_trace = Some(outcome.trace);
-            (loss, grads, peak, device_peaks)
+            (loss, grads, peak, device_peaks, retries, backoff_s)
         } else {
             let (loss, grads, outcome) =
                 self.plan.step_serial(self.rt, program, &self.params, x, y1h)?;
             let peak = outcome.peak_bytes;
-            (loss, grads, peak, vec![peak])
+            (loss, grads, peak, vec![peak], 0, 0.0)
+        };
+        let (lost_devices, recomputed_nodes) = match &self.sched.shard {
+            Some(ss) if pipelined => (ss.last_lost().to_vec(), ss.last_recomputed()),
+            _ => (Vec::new(), 0),
         };
         self.optimizer.step(&mut self.params, &grads)?;
         Ok(StepStats {
@@ -646,6 +916,10 @@ impl<'r> Trainer<'r> {
             device_peaks,
             step_ms: t0.elapsed().as_secs_f64() * 1e3,
             executions: self.rt.stats().executions - exec0,
+            retries,
+            modeled_backoff_s: backoff_s,
+            lost_devices,
+            recomputed_nodes,
         })
     }
 
@@ -1308,5 +1582,88 @@ mod tests {
         };
         let ss = ShardState::build(&program, &cfg, xi).unwrap();
         assert!(ss.plan().budgets().iter().all(|&b| b == 4096));
+    }
+
+    fn fan_plan() -> (Graph, ShardPlan) {
+        use crate::memory::DeviceModel;
+        use crate::rowir::NodeKind;
+        use crate::shard::LinkKind;
+        let mut base = Graph::new();
+        let a = base.push_out(NodeKind::Row, "a", vec![], 100, 40);
+        let b = base.push_out(NodeKind::Row, "b", vec![], 100, 40);
+        base.push(NodeKind::Barrier, "red", vec![a, b], 80);
+        let topo = Topology::uniform(2, DeviceModel::rtx3090(), LinkKind::Pcie);
+        let plan =
+            ShardPlan::lower(&base, &topo, &[0, 1, 0], vec![u64::MAX; 2]).unwrap();
+        (base, plan)
+    }
+
+    /// Recovery's include-mask mapping: a real node reruns iff its base
+    /// node is in the recompute closure; a transfer reruns iff any of
+    /// its consumers does.
+    #[test]
+    fn closure_maps_onto_the_sharded_plan_with_its_transfers() {
+        let (base, plan) = fan_plan();
+        let g = plan.graph();
+        let xfer = plan.transfers()[0].node;
+        let needed = vec![true; base.len()];
+
+        // b finished before the loss: a, red and b's transfer rerun
+        let mut finished = vec![false; base.len()];
+        finished[base.find("b").unwrap()] = true;
+        let closure = interp::recompute_closure(&base, &needed, &finished);
+        let inc = closure_on_plan(&plan, &closure);
+        assert!(inc[g.find("a").unwrap()]);
+        assert!(!inc[g.find("b").unwrap()]);
+        assert!(inc[g.find("red").unwrap()]);
+        assert!(inc[xfer], "transfer reruns for its included consumer");
+
+        // both producers finished: only red (and the re-copy) remain
+        finished[base.find("a").unwrap()] = true;
+        let closure = interp::recompute_closure(&base, &needed, &finished);
+        let inc = closure_on_plan(&plan, &closure);
+        assert_eq!(
+            inc.iter().filter(|&&x| x).count(),
+            2,
+            "red + its transfer: {inc:?}"
+        );
+        assert!(inc[g.find("red").unwrap()] && inc[xfer]);
+    }
+
+    /// `ShardState::run_step` plumbing that needs no backend: transient
+    /// retry accounting on the success path, and a device loss without a
+    /// recovery context surfacing a structured [`Error::DeviceLost`]
+    /// even under the `Degrade` policy.
+    #[test]
+    fn shard_state_retries_and_surfaces_unrecoverable_loss() {
+        use crate::faults::FaultPlan;
+
+        let (_, plan) = fan_plan();
+        let mut ss = ShardState::with_plan(plan.clone(), 1);
+        ss.set_faults(&FaultConfig {
+            plan: Some(FaultPlan::parse("s0.nred=transient").unwrap()),
+            retry: RetryPolicy::new(3),
+            on_device_lost: DeviceLostPolicy::Degrade,
+        });
+        let out = ss.run_step(|_| Ok(())).unwrap();
+        assert_eq!(out.retries, 1, "one transient absorbed");
+        assert!(out.modeled_backoff_s > 0.0);
+        assert!(ss.last_lost().is_empty());
+        assert_eq!(ss.last_recomputed(), 0);
+
+        let mut ss = ShardState::with_plan(plan, 1);
+        ss.set_faults(&FaultConfig {
+            plan: Some(FaultPlan::parse("s0.d1=lost").unwrap()),
+            retry: RetryPolicy::default(),
+            on_device_lost: DeviceLostPolicy::Degrade,
+        });
+        match ss.run_step(|_| Ok(())) {
+            Err(Error::DeviceLost { device, node }) => {
+                assert_eq!(device, 1);
+                assert_eq!(node, "b", "the node whose dispatch the loss hit");
+            }
+            other => panic!("expected DeviceLost, got ok={:?}", other.is_ok()),
+        }
+        assert_eq!(ss.last_lost(), &[1]);
     }
 }

@@ -29,6 +29,25 @@ pub enum Error {
     Io(std::io::Error),
     /// JSON parse/shape error from the in-tree parser (util::json).
     Json2(String),
+    /// A device died mid-step and no survivor layout could finish it
+    /// (either every device is gone, the re-partition is infeasible, or
+    /// the policy said fail-fast).  `node` is the label of the node whose
+    /// dispatch observed the loss — the recovery anchor, not a culprit.
+    DeviceLost { device: usize, node: String },
+    /// A transient fault survived every allowed retry.  `attempts` is the
+    /// total number of dispatches (initial + retries); `source` is the
+    /// last attempt's failure.
+    Retryable { attempts: u32, source: Box<Error> },
+}
+
+impl Error {
+    /// `true` for fault classes a bounded retry may clear (injected
+    /// transient faults surface as `Runtime`, injected OOMs as `Memory`).
+    /// Plan/config/scheduler-invariant errors are deterministic — retrying
+    /// them re-runs the same failure, so they are final on first sight.
+    pub fn is_transient(&self) -> bool {
+        matches!(self, Error::Runtime(_) | Error::Memory(_))
+    }
 }
 
 impl fmt::Display for Error {
@@ -52,6 +71,14 @@ impl fmt::Display for Error {
             Error::Sched(m) => write!(f, "scheduler error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Json2(e) => write!(f, "json error: {e}"),
+            Error::DeviceLost { device, node } => write!(
+                f,
+                "device {device} lost at node '{node}' and no survivor layout \
+                 can finish the step"
+            ),
+            Error::Retryable { attempts, source } => {
+                write!(f, "failed after {attempts} attempts: {source}")
+            }
         }
     }
 }
@@ -65,3 +92,45 @@ impl From<std::io::Error> for Error {
 }
 
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transient_classifier() {
+        assert!(Error::Runtime("injected".into()).is_transient());
+        assert!(Error::Memory("injected oom".into()).is_transient());
+        for e in [
+            Error::InfeasiblePlan("x".into()),
+            Error::Config("x".into()),
+            Error::Sched("x".into()),
+            Error::DeviceLost {
+                device: 1,
+                node: "fp.segA.row0".into(),
+            },
+            Error::Retryable {
+                attempts: 3,
+                source: Box::new(Error::Runtime("x".into())),
+            },
+        ] {
+            assert!(!e.is_transient(), "{e}");
+        }
+    }
+
+    #[test]
+    fn fault_variants_display_context() {
+        let e = Error::DeviceLost {
+            device: 2,
+            node: "bp.segB.row1".into(),
+        };
+        let s = e.to_string();
+        assert!(s.contains("device 2") && s.contains("bp.segB.row1"), "{s}");
+        let e = Error::Retryable {
+            attempts: 3,
+            source: Box::new(Error::Runtime("flaky link".into())),
+        };
+        let s = e.to_string();
+        assert!(s.contains("3 attempts") && s.contains("flaky link"), "{s}");
+    }
+}

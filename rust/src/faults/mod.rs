@@ -1,0 +1,535 @@
+//! `faults` — deterministic fault injection for the sharded executor
+//! (docs/RESILIENCE.md).
+//!
+//! A [`FaultPlan`] is a seeded, reproducible schedule of injected
+//! failures: *(step, target) → kind*.  Nothing here touches wall-clock
+//! or real randomness — plans are either written out explicitly
+//! ([`FaultPlan::parse`]) or expanded from a seed through the crate's
+//! deterministic RNG ([`FaultPlan::random`]), so every fault scenario is
+//! a pure function of its spec and replays exactly.
+//!
+//! Injection happens at two layers:
+//!
+//! * **dispatch-level** — a [`FaultInjector`] resolves the current
+//!   step's specs against the sharded graph and makes the executor
+//!   *synthesize* the failure at dispatch time, before the runner is
+//!   invoked.  The failing attempt therefore has no side effects, which
+//!   is what makes bounded retry sound for every task kind (see
+//!   docs/RESILIENCE.md on retry safety).
+//! * **backend-level** — [`FaultyBackend`] wraps any
+//!   [`ExecBackend`] and fails the first *k* executions of selected
+//!   executables.  This exercises the real error path through a runner;
+//!   it is only retry-safe for tasks that don't consume take-once slots
+//!   before calling the backend (row FP/BP tasks do not; `Head` does).
+//!
+//! | piece | role |
+//! |---|---|
+//! | [`FaultKind`] / [`FaultTarget`] / [`FaultSpec`] | the schedule vocabulary |
+//! | [`FaultPlan`] | parse / seeded-random construction |
+//! | [`FaultInjector`] | per-run resolution + consume-on-dispatch firing |
+//! | [`FaultyBackend`] | `ExecBackend` wrapper with injected exec failures |
+//! | [`FaultConfig`] / [`DeviceLostPolicy`] | trainer-facing knobs |
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+use crate::rowir::{Graph, NodeId};
+use crate::runtime::{ExecBackend, ExecHandle, Tensor, TensorView};
+use crate::sched::RetryPolicy;
+use crate::util::rng::XorShift;
+use crate::util::sync::lock_unpoisoned;
+
+/// What an injected fault does to the dispatch it hits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Generic transient failure (flaky kernel launch) — retryable.
+    Transient,
+    /// The device executing the node dies; everything unfinished on it is
+    /// lost and the step must recover on the survivors.
+    DeviceLost,
+    /// A cross-device copy fails in flight — retryable.
+    TransferError,
+    /// Allocation failure on the device — retryable (the retry re-admits
+    /// under the same ledger; in the simulated backend the second attempt
+    /// models the allocator succeeding after compaction).
+    Oom,
+}
+
+impl FaultKind {
+    /// The typed error a non-`DeviceLost` injection surfaces as.  The
+    /// classes map onto [`Error::is_transient`]: all three are transient.
+    pub fn injected_error(&self, label: &str) -> Error {
+        match self {
+            FaultKind::Transient => {
+                Error::Runtime(format!("injected transient fault at '{label}'"))
+            }
+            FaultKind::TransferError => {
+                Error::Runtime(format!("injected transfer fault at '{label}'"))
+            }
+            FaultKind::Oom => Error::Memory(format!("injected allocation failure at '{label}'")),
+            FaultKind::DeviceLost => {
+                Error::Runtime(format!("device lost at '{label}' (not an attempt error)"))
+            }
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<FaultKind> {
+        match s {
+            "transient" => Some(FaultKind::Transient),
+            "lost" => Some(FaultKind::DeviceLost),
+            "xfer" => Some(FaultKind::TransferError),
+            "oom" => Some(FaultKind::Oom),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::Transient => "transient",
+            FaultKind::DeviceLost => "lost",
+            FaultKind::TransferError => "xfer",
+            FaultKind::Oom => "oom",
+        }
+    }
+}
+
+/// Where a spec lands.  Targets are resolved fresh against each
+/// (re-)partitioned graph, so a spec keeps meaning across recovery.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FaultTarget {
+    /// Lowest still-unfinished node assigned to this device.
+    Device(usize),
+    /// The node with this label (inert if the label is absent/finished).
+    Node(String),
+    /// Lowest still-unfinished transfer node *into* this device.
+    Transfer { dst: usize },
+}
+
+/// One scheduled fault: at `step`, the first `times` dispatches of the
+/// resolved target fail with `kind`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultSpec {
+    pub step: u64,
+    pub target: FaultTarget,
+    pub kind: FaultKind,
+    pub times: u32,
+}
+
+/// A reproducible schedule of injected faults.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub specs: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    /// Parse an explicit plan: comma-separated entries of the form
+    /// `s<step>.<target>=<kind>[*times]` where `<target>` is `d<device>`
+    /// (lowest unfinished node on the device), `n<label>` (node by
+    /// label), or `x<device>` (lowest unfinished transfer into the
+    /// device), and `<kind>` is `transient|lost|xfer|oom`.  Example:
+    /// `s0.d1=lost,s2.n fp.segA.row0=transient*2` (without the space).
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let bad = |msg: String| Error::Config(format!("--fault-plan '{spec}': {msg}"));
+        let mut specs = Vec::new();
+        for entry in spec.split(',') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                return Err(bad("empty entry".into()));
+            }
+            let (head, rhs) = entry
+                .split_once('=')
+                .ok_or_else(|| bad(format!("'{entry}': missing '='")))?;
+            let (kind_s, times) = match rhs.split_once('*') {
+                Some((k, t)) => {
+                    let times: u32 = t
+                        .parse()
+                        .ok()
+                        .filter(|&n| n >= 1)
+                        .ok_or_else(|| bad(format!("bad repeat '{t}' (want an integer ≥ 1)")))?;
+                    (k, times)
+                }
+                None => (rhs, 1),
+            };
+            let kind = FaultKind::parse(kind_s)
+                .ok_or_else(|| bad(format!("unknown kind '{kind_s}' (transient|lost|xfer|oom)")))?;
+            let head = head
+                .strip_prefix('s')
+                .ok_or_else(|| bad(format!("'{head}': want s<step>.<target>")))?;
+            let (step_s, target_s) = head
+                .split_once('.')
+                .ok_or_else(|| bad(format!("'s{head}': want s<step>.<target>")))?;
+            let step: u64 = step_s
+                .parse()
+                .map_err(|_| bad(format!("bad step '{step_s}'")))?;
+            let target = match target_s.split_at(1) {
+                ("d", idx) => FaultTarget::Device(
+                    idx.parse()
+                        .map_err(|_| bad(format!("bad device '{idx}'")))?,
+                ),
+                ("x", idx) => FaultTarget::Transfer {
+                    dst: idx
+                        .parse()
+                        .map_err(|_| bad(format!("bad device '{idx}'")))?,
+                },
+                ("n", label) if !label.is_empty() => FaultTarget::Node(label.to_string()),
+                _ => return Err(bad(format!("bad target '{target_s}' (d<i>|n<label>|x<i>)"))),
+            };
+            specs.push(FaultSpec {
+                step,
+                target,
+                kind,
+                times,
+            });
+        }
+        if specs.is_empty() {
+            return Err(bad("no faults".into()));
+        }
+        Ok(FaultPlan { specs })
+    }
+
+    /// `count` seeded-random faults over `steps` steps and `devices`
+    /// devices.  Pure function of the arguments (xorshift), with two
+    /// guardrails so generated plans stay *recoverable*: no `DeviceLost`
+    /// on a 1-device topology, and at most `devices − 1` `DeviceLost`
+    /// specs in total — at least one survivor always remains.
+    pub fn random(seed: u64, steps: u64, devices: usize, count: usize) -> FaultPlan {
+        let mut rng = XorShift::new(seed);
+        let steps = steps.max(1) as usize;
+        let devices = devices.max(1);
+        let mut lost_left = devices - 1;
+        let mut specs = Vec::with_capacity(count);
+        for _ in 0..count {
+            let step = rng.below(steps) as u64;
+            let dev = rng.below(devices);
+            let (target, kind, times) = match rng.below(6) {
+                0 | 1 => (
+                    FaultTarget::Device(dev),
+                    FaultKind::Transient,
+                    1 + rng.below(2) as u32,
+                ),
+                2 => (FaultTarget::Device(dev), FaultKind::Oom, 1),
+                3 | 4 => (
+                    FaultTarget::Transfer { dst: dev },
+                    FaultKind::TransferError,
+                    1 + rng.below(2) as u32,
+                ),
+                _ if lost_left > 0 => {
+                    lost_left -= 1;
+                    (FaultTarget::Device(dev), FaultKind::DeviceLost, 1)
+                }
+                _ => (FaultTarget::Device(dev), FaultKind::Transient, 1),
+            };
+            specs.push(FaultSpec {
+                step,
+                target,
+                kind,
+                times,
+            });
+        }
+        FaultPlan { specs }
+    }
+
+    /// Number of `DeviceLost` specs — tests use this to bound survivor
+    /// counts.
+    pub fn device_lost_count(&self) -> usize {
+        self.specs
+            .iter()
+            .filter(|s| s.kind == FaultKind::DeviceLost)
+            .count()
+    }
+}
+
+/// Per-run firing state over a [`FaultPlan`].
+///
+/// `resolve` maps the current step's specs onto concrete node ids of the
+/// *current* sharded graph (targets re-resolve after each recovery
+/// re-partition); `fire` consumes one firing at dispatch time.  Fired
+/// counts persist across recovery phases inside one training run, so a
+/// `times`-bounded spec fails exactly `times` dispatches in total, never
+/// per phase.
+#[derive(Debug)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    fired: Mutex<Vec<u32>>,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> FaultInjector {
+        let n = plan.specs.len();
+        FaultInjector {
+            plan,
+            fired: Mutex::new(vec![0; n]),
+        }
+    }
+
+    /// Resolve this step's live specs against a sharded graph: for every
+    /// spec scheduled at `step` with firings left, pick the target node
+    /// among the nodes marked in `include` (the not-yet-finished subset a
+    /// recovery phase actually runs).  Device/Transfer targets resolve to
+    /// the *lowest* eligible id — deterministic, independent of thread
+    /// timing.  First spec wins when two resolve to one node.
+    pub fn resolve(
+        &self,
+        step: u64,
+        graph: &Graph,
+        device_of: &[usize],
+        orig: &[Option<NodeId>],
+        include: &[bool],
+    ) -> BTreeMap<NodeId, usize> {
+        let fired = lock_unpoisoned(&self.fired);
+        let mut out = BTreeMap::new();
+        for (i, spec) in self.plan.specs.iter().enumerate() {
+            if spec.step != step || fired[i] >= spec.times {
+                continue;
+            }
+            let found = match &spec.target {
+                FaultTarget::Node(label) => graph.find(label).filter(|&id| include[id]),
+                FaultTarget::Device(d) => (0..graph.len())
+                    .find(|&id| include[id] && device_of[id] == *d),
+                FaultTarget::Transfer { dst } => (0..graph.len())
+                    .find(|&id| include[id] && orig[id].is_none() && device_of[id] == *dst),
+            };
+            if let Some(id) = found {
+                out.entry(id).or_insert(i);
+            }
+        }
+        out
+    }
+
+    /// Consume one firing of spec `i`; `None` once its budget is spent.
+    pub fn fire(&self, i: usize) -> Option<FaultKind> {
+        let mut fired = lock_unpoisoned(&self.fired);
+        let spec = &self.plan.specs[i];
+        if fired[i] >= spec.times {
+            return None;
+        }
+        fired[i] += 1;
+        Some(spec.kind)
+    }
+
+    /// How many times spec `i` has fired.
+    pub fn fired(&self, i: usize) -> u32 {
+        lock_unpoisoned(&self.fired)[i]
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+}
+
+/// [`ExecBackend`] wrapper that fails the first `times` executions of
+/// selected executables with a transient [`Error::Runtime`].
+///
+/// Retry safety: the failure happens *inside* the runner, after the task
+/// may have consumed take-once slot inputs.  Row FP/BP tasks slice or
+/// clone their inputs before calling the backend and are safe to retry;
+/// tasks that `take` a slot before executing (`Head`, `TpsRow`) are not
+/// — a retried attempt surfaces a slot error instead of corrupting
+/// state.  Point this wrapper at row-task executables (the tests do).
+pub struct FaultyBackend<'a> {
+    inner: &'a dyn ExecBackend,
+    fail: Mutex<BTreeMap<usize, u32>>,
+}
+
+impl<'a> FaultyBackend<'a> {
+    pub fn new(inner: &'a dyn ExecBackend) -> FaultyBackend<'a> {
+        FaultyBackend {
+            inner,
+            fail: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Fail the next `times` executions of executable `handle_index`.
+    pub fn fail_handle(self, handle_index: usize, times: u32) -> FaultyBackend<'a> {
+        lock_unpoisoned(&self.fail).insert(handle_index, times);
+        self
+    }
+
+    /// Injected failures still pending (0 once every scheduled failure
+    /// has been delivered).
+    pub fn pending(&self) -> u32 {
+        lock_unpoisoned(&self.fail).values().sum()
+    }
+}
+
+impl ExecBackend for FaultyBackend<'_> {
+    fn exec(&self, h: ExecHandle, inputs: &[TensorView<'_>]) -> Result<Vec<Tensor>> {
+        {
+            let mut fail = lock_unpoisoned(&self.fail);
+            if let Some(left) = fail.get_mut(&h.index()) {
+                if *left > 0 {
+                    *left -= 1;
+                    return Err(Error::Runtime(format!(
+                        "injected backend fault on executable {}",
+                        h.index()
+                    )));
+                }
+            }
+        }
+        self.inner.exec(h, inputs)
+    }
+}
+
+/// What a `DeviceLost` does to the step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DeviceLostPolicy {
+    /// Fail the step with [`Error::DeviceLost`] immediately.
+    Fail,
+    /// Re-partition over the survivors and recompute the lost closure
+    /// (fails with [`Error::DeviceLost`] only when no survivor layout is
+    /// ledger-feasible).
+    #[default]
+    Degrade,
+}
+
+impl DeviceLostPolicy {
+    pub fn parse(s: &str) -> Option<DeviceLostPolicy> {
+        match s {
+            "fail" => Some(DeviceLostPolicy::Fail),
+            "degrade" => Some(DeviceLostPolicy::Degrade),
+            _ => None,
+        }
+    }
+}
+
+/// Trainer-facing fault knobs (CLI: `--fault-plan`, `--retry`,
+/// `--on-device-lost`).
+#[derive(Debug, Clone, Default)]
+pub struct FaultConfig {
+    /// Faults to inject; `None` trains fault-free.
+    pub plan: Option<FaultPlan>,
+    /// Bounded-retry policy for transient faults.
+    pub retry: RetryPolicy,
+    pub on_device_lost: DeviceLostPolicy,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rowir::{Graph, NodeKind, Task};
+
+    fn toy() -> (Graph, Vec<usize>, Vec<Option<NodeId>>) {
+        // two rows on d0/d1, a transfer into d0, a barrier on d0
+        let mut g = Graph::new();
+        let a = g.push(NodeKind::Row, "row0", vec![], 10);
+        let b = g.push(NodeKind::Row, "row1", vec![], 10);
+        let t = g.push_task(NodeKind::Transfer, "xfer.row1.d0", vec![b], 4, 4, Task::Transfer);
+        g.push(NodeKind::Barrier, "red", vec![a, t], 0);
+        let device_of = vec![0, 1, 0, 0];
+        let orig = vec![Some(0), Some(1), None, Some(2)];
+        (g, device_of, orig)
+    }
+
+    #[test]
+    fn parse_explicit_plan() {
+        let p = FaultPlan::parse("s0.d1=lost,s1.nrow0=transient*2,s2.x0=xfer").unwrap();
+        assert_eq!(p.specs.len(), 3);
+        assert_eq!(
+            p.specs[0],
+            FaultSpec {
+                step: 0,
+                target: FaultTarget::Device(1),
+                kind: FaultKind::DeviceLost,
+                times: 1
+            }
+        );
+        assert_eq!(p.specs[1].target, FaultTarget::Node("row0".into()));
+        assert_eq!(p.specs[1].times, 2);
+        assert_eq!(p.specs[2].target, FaultTarget::Transfer { dst: 0 });
+        assert_eq!(p.device_lost_count(), 1);
+
+        for bad in [
+            "",
+            "s0.d1",
+            "s0.d1=explode",
+            "x.d1=lost",
+            "s0.q1=lost",
+            "s0.n=lost",
+            "s0.d1=transient*0",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn random_plans_are_deterministic_and_recoverable() {
+        let a = FaultPlan::random(7, 3, 4, 12);
+        let b = FaultPlan::random(7, 3, 4, 12);
+        assert_eq!(a, b, "same seed, same plan");
+        assert_ne!(a, FaultPlan::random(8, 3, 4, 12), "seed matters");
+        assert!(a.device_lost_count() <= 3, "at least one survivor");
+        // 1-device plans never kill the only device
+        for seed in 0..32 {
+            let p = FaultPlan::random(seed, 3, 1, 12);
+            assert_eq!(p.device_lost_count(), 0, "seed {seed}");
+            for s in &p.specs {
+                assert!(s.step < 3);
+            }
+        }
+    }
+
+    #[test]
+    fn injector_resolves_and_consumes() {
+        let (g, device_of, orig) = toy();
+        let plan =
+            FaultPlan::parse("s0.d1=transient*2,s0.x0=xfer,s1.nrow0=oom,s0.nmissing=oom").unwrap();
+        let inj = FaultInjector::new(plan);
+        let include = vec![true; g.len()];
+        let r = inj.resolve(0, &g, &device_of, &orig, &include);
+        // d1 → node 1, x0 → node 2 (the transfer); step-1 and missing-label
+        // specs don't resolve at step 0
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.get(&1), Some(&0));
+        assert_eq!(r.get(&2), Some(&1));
+        // firing consumes: 2 firings for spec 0, then dry
+        assert_eq!(inj.fire(0), Some(FaultKind::Transient));
+        assert_eq!(inj.fire(0), Some(FaultKind::Transient));
+        assert_eq!(inj.fire(0), None);
+        assert_eq!(inj.fired(0), 2);
+        // spent specs stop resolving
+        let r = inj.resolve(0, &g, &device_of, &orig, &include);
+        assert_eq!(r.len(), 1, "only the transfer spec is still live");
+        // include mask excludes finished nodes: node 1 finished → d1 has
+        // nothing left, transfer excluded too
+        let include = vec![true, false, false, true];
+        let inj = FaultInjector::new(FaultPlan::parse("s0.d1=transient,s0.x0=xfer").unwrap());
+        assert!(inj.resolve(0, &g, &device_of, &orig, &include).is_empty());
+    }
+
+    #[test]
+    fn first_spec_wins_on_a_shared_node() {
+        let (g, device_of, orig) = toy();
+        let plan = FaultPlan::parse("s0.nrow1=oom,s0.d1=transient").unwrap();
+        let inj = FaultInjector::new(plan);
+        let r = inj.resolve(0, &g, &device_of, &orig, &vec![true; g.len()]);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.get(&1), Some(&0), "label spec listed first wins");
+    }
+
+    #[test]
+    fn injected_errors_classify_transient() {
+        for k in [FaultKind::Transient, FaultKind::TransferError, FaultKind::Oom] {
+            assert!(k.injected_error("n").is_transient(), "{k:?}");
+        }
+    }
+
+    #[test]
+    fn faulty_backend_fails_then_recovers() {
+        struct Ok0;
+        impl ExecBackend for Ok0 {
+            fn exec(&self, _h: ExecHandle, _inputs: &[TensorView<'_>]) -> Result<Vec<Tensor>> {
+                Ok(Vec::new())
+            }
+        }
+        let inner = Ok0;
+        let ex = FaultyBackend::new(&inner).fail_handle(3, 2);
+        assert_eq!(ex.pending(), 2);
+        let h = ExecHandle(3);
+        assert!(ex.exec(h, &[]).unwrap_err().is_transient());
+        assert!(ex.exec(h, &[]).is_err());
+        assert!(ex.exec(h, &[]).is_ok(), "budget spent, passes through");
+        assert!(ex.exec(ExecHandle(0), &[]).is_ok(), "other handles clean");
+        assert_eq!(ex.pending(), 0);
+    }
+}

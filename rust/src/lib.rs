@@ -31,7 +31,8 @@
 //! | [`runtime`] | PJRT client, manifest, `ExecHandle` executable table, zero-copy `TensorView` plumbing |
 //! | [`rowir`] | the row-program IR (docs/ROWIR.md): task-carrying dependency graph, per-mode lowering, serial interpreter + IR-walk memory replay — the one program every driver runs |
 //! | [`sched`] | weak-dependency row scheduler: memory admission, pipelined worker-pool executor over a `rowir` graph |
-//! | [`shard`] | multi-device row sharding: heterogeneous topologies (`DeviceSpec`), `Blocked`/`CostBalanced`/`DpBoundary` partitioners, transfer lowering (transfers are ordinary IR nodes), persistent per-device-ledger executor |
+//! | [`shard`] | multi-device row sharding: heterogeneous topologies (`DeviceSpec`), `Blocked`/`CostBalanced`/`DpBoundary` partitioners, transfer lowering (transfers are ordinary IR nodes), persistent per-device-ledger executor with bounded retry + device-loss recovery |
+//! | [`faults`] | deterministic fault injection (docs/RESILIENCE.md): seeded `FaultPlan` schedules, dispatch-level `FaultInjector`, backend-level `FaultyBackend` |
 //! | [`coordinator`] | live row coordinator: prebuilt `StepPlan` exec table + the serial/pipelined/sharded drivers of one `RowProgram`, SGD, training |
 //! | [`data`] | synthetic 10-class corpus |
 //! | [`metrics`] | counters + report tables for the benches |
@@ -52,6 +53,7 @@ pub mod coordinator;
 pub mod costmodel;
 pub mod data;
 pub mod error;
+pub mod faults;
 pub mod figures;
 pub mod memory;
 pub mod metrics;

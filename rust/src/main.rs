@@ -14,31 +14,80 @@
 //!   train  --mode base|overl-h|2ps|naive [--steps N] [--lr F] [--artifacts DIR]
 //!          [--workers N] [--devices N] [--device-spec SPEC]
 //!          [--policy blocked|balanced|dp] [--link pcie|nvlink]
-//!          [--trace-out FILE]
+//!          [--fault-plan SPEC] [--retry N[:BACKOFF_US]]
+//!          [--on-device-lost fail|degrade] [--trace-out FILE]
 //!          — live training on the PJRT artifacts (MiniVGG, synthetic data);
 //!          --workers enables the pipelined scheduler, --devices shards the
 //!          row DAG over N identical RTX 3090s, --device-spec over an
 //!          explicit (mixed) topology like `rtx3090:2,a100:2` (entries are
 //!          name[@hbm-percent][:count]), --trace-out dumps the last step's
-//!          per-device trace JSON
+//!          per-device trace JSON.  --fault-plan injects deterministic
+//!          faults on the sharded path (`s<step>.<target>=<kind>[*times]`
+//!          grammar or `random:SEED[:COUNT]` — docs/RESILIENCE.md),
+//!          --retry bounds transient-fault redispatches, --on-device-lost
+//!          picks between failing the step and degrading onto survivors
 //!   info   [--artifacts DIR]
 //!          — print the artifact bundle inventory
 //!   trace  --net vgg16 --strategy overl-h [--batch B] [--rows N] [--out FILE]
 //!          — export a plan's memory profile as Chrome trace JSON
+//!
+//! Exit codes: 0 success; 2 usage/config; 3 infeasible plan or
+//! out-of-memory; 4 device lost (unrecoverable); 5 transient-retry
+//! exhaustion; 1 anything else.
 
 use lr_cnn::baselines::{Base, Ckp, OffLoad, Tsplit};
 use lr_cnn::coordinator::{trainer::train_loop, Mode, Trainer};
 use lr_cnn::data::SyntheticCorpus;
+use lr_cnn::error::Error;
+use lr_cnn::faults::{DeviceLostPolicy, FaultConfig, FaultPlan};
 use lr_cnn::memory::{sim, DeviceModel};
 use lr_cnn::metrics::{fmt_bytes, Table};
 use lr_cnn::model::{resnet50, vgg16, Network};
 use lr_cnn::planner::{RowCentric, RowMode, Strategy};
 use lr_cnn::runtime::Runtime;
-use lr_cnn::sched::SchedConfig;
+use lr_cnn::sched::{RetryPolicy, SchedConfig};
 use lr_cnn::shard::{DeviceSpec, LinkKind, PartitionPolicy, ShardConfig};
 
 use std::collections::HashMap;
 use std::process::ExitCode;
+
+/// CLI failure classes, mapped to distinct exit codes in [`main`] so
+/// scripts (and the CI fault matrix) can tell a bad flag from an
+/// infeasible plan from a lost device without scraping stderr.
+enum CliError {
+    /// Bad flags or configuration — exit 2.
+    Usage(String),
+    /// A typed library error — exit code by class ([`error_code`]).
+    Run(Error),
+    /// Anything else (IO, …) — exit 1.
+    Other(String),
+}
+
+impl From<String> for CliError {
+    fn from(msg: String) -> CliError {
+        CliError::Usage(msg)
+    }
+}
+
+impl From<&str> for CliError {
+    fn from(msg: &str) -> CliError {
+        CliError::Usage(msg.to_string())
+    }
+}
+
+/// Exit code for a typed library error: 3 = the plan/step cannot fit
+/// (infeasible partition or memory), 4 = a device was lost and the run
+/// could not (or was told not to) degrade, 5 = a transient fault
+/// outlived its retry budget, 2 = configuration, 1 = everything else.
+fn error_code(e: &Error) -> u8 {
+    match e {
+        Error::InfeasiblePlan(_) | Error::OutOfMemory { .. } | Error::Memory(_) => 3,
+        Error::DeviceLost { .. } => 4,
+        Error::Retryable { .. } => 5,
+        Error::Config(_) => 2,
+        _ => 1,
+    }
+}
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
     let mut map = HashMap::new();
@@ -229,7 +278,7 @@ fn cmd_plan(flags: &HashMap<String, String>) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_train(flags: &HashMap<String, String>) -> Result<(), String> {
+fn cmd_train(flags: &HashMap<String, String>) -> Result<(), CliError> {
     let dir = flags
         .get("artifacts")
         .cloned()
@@ -239,7 +288,7 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<(), String> {
         "overl-h" => Mode::RowHybrid,
         "2ps" => Mode::Tps,
         "naive" => Mode::Naive,
-        other => return Err(format!("unknown --mode {other}")),
+        other => return Err(format!("unknown --mode {other}").into()),
     };
     let steps: u64 = flags
         .get("steps")
@@ -284,13 +333,65 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<(), String> {
         "blocked" => PartitionPolicy::Blocked,
         "balanced" => PartitionPolicy::CostBalanced,
         "dp" | "dp-boundary" => PartitionPolicy::DpBoundary,
-        other => return Err(format!("unknown --policy {other} (blocked|balanced|dp)")),
+        other => {
+            return Err(format!("unknown --policy {other} (blocked|balanced|dp)").into())
+        }
     };
     let link = match flags.get("link").map(String::as_str).unwrap_or("pcie") {
         "pcie" => LinkKind::Pcie,
         "nvlink" => LinkKind::NvLink,
-        other => return Err(format!("unknown --link {other} (pcie|nvlink)")),
+        other => return Err(format!("unknown --link {other} (pcie|nvlink)").into()),
     };
+    // fault-injection knobs (docs/RESILIENCE.md); `random:SEED[:COUNT]`
+    // draws a deterministic schedule over this run's steps and devices
+    let fault_plan = match flags.get("fault-plan").filter(|s| !s.is_empty()) {
+        None => None,
+        Some(spec) => Some(match spec.strip_prefix("random:") {
+            Some(rest) => {
+                let mut it = rest.split(':');
+                let seed: u64 = it
+                    .next()
+                    .unwrap_or("")
+                    .parse()
+                    .map_err(|_| "bad --fault-plan random seed (random:SEED[:COUNT])")?;
+                let count: usize = match it.next() {
+                    Some(c) => c
+                        .parse()
+                        .map_err(|_| "bad --fault-plan random count (random:SEED[:COUNT])")?,
+                    None => 4,
+                };
+                FaultPlan::random(seed, steps, devices, count)
+            }
+            None => FaultPlan::parse(spec).map_err(CliError::Run)?,
+        }),
+    };
+    let retry = match flags.get("retry").filter(|s| !s.is_empty()) {
+        None => RetryPolicy::default(),
+        Some(s) => {
+            let mut it = s.split(':');
+            let max: u32 = it
+                .next()
+                .unwrap_or("")
+                .parse()
+                .map_err(|_| "bad --retry (N[:BACKOFF_US])")?;
+            match it.next() {
+                Some(us) => {
+                    let us: f64 =
+                        us.parse().map_err(|_| "bad --retry backoff (N[:BACKOFF_US])")?;
+                    RetryPolicy::new(max).with_backoff(us * 1e-6)
+                }
+                None => RetryPolicy::new(max),
+            }
+        }
+    };
+    let on_device_lost = match flags.get("on-device-lost").map(String::as_str) {
+        None => DeviceLostPolicy::default(),
+        Some(s) => DeviceLostPolicy::parse(s)
+            .ok_or_else(|| format!("unknown --on-device-lost {s} (fail|degrade)"))?,
+    };
+    let faulty = fault_plan.is_some()
+        || flags.contains_key("retry")
+        || flags.contains_key("on-device-lost");
     if devices <= 1 {
         // partition/link flags only matter with 2+ devices; a benchmark
         // invocation passing them with one device would silently
@@ -310,7 +411,7 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<(), String> {
             );
         }
     }
-    let rt = Runtime::open(dir).map_err(|e| e.to_string())?;
+    let rt = Runtime::open(dir).map_err(CliError::Run)?;
     println!(
         "platform {} | model {} | mode {}",
         rt.platform(),
@@ -319,7 +420,13 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<(), String> {
     );
     let m = rt.manifest.model.clone();
     let corpus = SyntheticCorpus::new(m.n_classes, 3, m.h, m.w, 1234);
-    let mut tr = Trainer::new(&rt, mode, lr, 7).map_err(|e| e.to_string())?;
+    let mut tr = Trainer::new(&rt, mode, lr, 7).map_err(CliError::Run)?;
+    if faulty && workers == 0 && devices <= 1 {
+        eprintln!(
+            "warning: --fault-plan/--retry/--on-device-lost are inert in serial mode — \
+             pass --workers N (and --devices M) to exercise the sharded executor"
+        );
+    }
     if workers > 0 || devices > 1 {
         // a single-device --device-spec is honored too: its admission
         // budget clamps to *that* device's memory, not a default rtx3090
@@ -331,7 +438,21 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<(), String> {
         .with_link(link);
         let names: Vec<String> = shard.devices.iter().map(|d| d.model().name).collect();
         let cfg = SchedConfig::pipelined(workers.max(1)).with_shard(shard);
-        tr.set_sched(cfg).map_err(|e| e.to_string())?;
+        tr.set_sched(cfg).map_err(CliError::Run)?;
+        tr.set_faults(FaultConfig {
+            plan: fault_plan.clone(),
+            retry,
+            on_device_lost,
+        });
+        if let Some(p) = &fault_plan {
+            println!(
+                "faults: {} spec(s) [{} device-loss], retry x{}, on-device-lost {:?}",
+                p.specs.len(),
+                p.device_lost_count(),
+                retry.max_attempts,
+                on_device_lost
+            );
+        }
         if let Some(ss) = tr.shard_state() {
             println!(
                 "sched: {} worker(s), {} device(s) [{}], {} transfer(s)/step, modeled link {:.1} us/step",
@@ -344,11 +465,12 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<(), String> {
         }
     }
     let losses =
-        train_loop(&mut tr, &corpus, steps, (steps / 20).max(1)).map_err(|e| e.to_string())?;
+        train_loop(&mut tr, &corpus, steps, (steps / 20).max(1)).map_err(CliError::Run)?;
     if let Some(path) = flags.get("trace-out") {
         match tr.trace_json() {
             Some(json) => {
-                std::fs::write(path, json).map_err(|e| e.to_string())?;
+                std::fs::write(path, json)
+                    .map_err(|e| CliError::Other(format!("--trace-out {path}: {e}")))?;
                 println!("wrote per-device trace to {path}");
             }
             None => eprintln!("--trace-out: no trace recorded (serial mode?)"),
@@ -454,18 +576,37 @@ fn main() -> ExitCode {
         }
     };
     let flags = parse_flags(&rest);
-    let res = match cmd {
-        "plan" => cmd_plan(&flags),
+    let res: Result<(), CliError> = match cmd {
+        "plan" => cmd_plan(&flags).map_err(CliError::Other),
         "train" => cmd_train(&flags),
-        "info" => cmd_info(&flags),
-        "trace" => cmd_trace(&flags),
-        other => Err(format!("unknown command {other}")),
+        "info" => cmd_info(&flags).map_err(CliError::Other),
+        "trace" => cmd_trace(&flags).map_err(CliError::Other),
+        other => Err(CliError::Usage(format!("unknown command {other}"))),
     };
     match res {
         Ok(()) => ExitCode::SUCCESS,
-        Err(e) => {
-            eprintln!("error: {e}");
+        Err(CliError::Usage(msg)) => {
+            eprintln!("error: {msg}");
+            ExitCode::from(2)
+        }
+        Err(CliError::Other(msg)) => {
+            eprintln!("error: {msg}");
             ExitCode::FAILURE
+        }
+        Err(CliError::Run(e)) => {
+            eprintln!("error: {e}");
+            match &e {
+                Error::DeviceLost { .. } => eprintln!(
+                    "hint: --on-device-lost degrade re-partitions over the surviving \
+                     devices when their ledgers can still hold the step"
+                ),
+                Error::Retryable { attempts, .. } => eprintln!(
+                    "hint: raise --retry beyond {attempts} to absorb longer \
+                     transient-fault bursts"
+                ),
+                _ => {}
+            }
+            ExitCode::from(error_code(&e))
         }
     }
 }

@@ -93,6 +93,37 @@ where
     run_subset(program, &include, runner)
 }
 
+/// The recompute set after a partial execution (docs/RESILIENCE.md):
+/// which nodes must (re)run to produce `needed` outputs, given that
+/// `materialized` nodes already finished and their outputs survive in
+/// host slots.
+///
+/// A node is included when it is needed but not materialized; one
+/// descending sweep (deps are all `< id`) then pulls in every
+/// non-materialized dependency of an included node.  Materialized deps
+/// stay excluded — they act as pre-satisfied inputs, which is exactly how
+/// the executors treat excluded nodes of an include mask.  The result is
+/// consumer-closed over any `materialized` mask produced by a real run
+/// (a node cannot finish before its dependencies), so it is a valid
+/// executor include mask.
+pub fn recompute_closure(graph: &Graph, needed: &[bool], materialized: &[bool]) -> Vec<bool> {
+    debug_assert_eq!(needed.len(), graph.len());
+    debug_assert_eq!(materialized.len(), graph.len());
+    let mut include: Vec<bool> = (0..graph.len())
+        .map(|id| needed[id] && !materialized[id])
+        .collect();
+    for id in (0..graph.len()).rev() {
+        if include[id] {
+            for &d in &graph.node(id).deps {
+                if !materialized[d] {
+                    include[d] = true;
+                }
+            }
+        }
+    }
+    include
+}
+
 /// The walk both entry points share: execute the `include`-marked nodes
 /// (a dependency-closed set) in ascending id order, replaying the
 /// projected-byte ledger.  Consumer counts are restricted to the subset,
@@ -162,10 +193,39 @@ where
 /// `&vec![0; graph.len()]` with `devices == 1` for the unsharded replay
 /// (whose peak [`run`] reproduces without building schedules).
 pub fn schedules(graph: &Graph, device_of: &[usize], devices: usize) -> Vec<Schedule> {
+    let include = vec![true; graph.len()];
+    schedules_subset(graph, device_of, devices, &include)
+}
+
+/// [`schedules`] restricted to an `include` mask — the recovery-phase
+/// replay: only included nodes run (and park), and consumer counts are
+/// subset-restricted exactly like the executors' bookkeeping, so the
+/// schedules predict the peaks of a phase that runs just the unfinished
+/// closure.  Excluded (materialized) nodes contribute nothing: their
+/// outputs live in host slots, which the device-byte model never
+/// charged for in the first place.
+pub fn schedules_subset(
+    graph: &Graph,
+    device_of: &[usize],
+    devices: usize,
+    include: &[bool],
+) -> Vec<Schedule> {
     debug_assert_eq!(device_of.len(), graph.len());
+    debug_assert_eq!(include.len(), graph.len());
     let mut scheds: Vec<Schedule> = (0..devices).map(|_| Schedule::new()).collect();
-    let mut left = graph.consumer_counts();
+    // consumers within the subset only
+    let mut left = vec![0usize; graph.len()];
+    for (id, node) in graph.nodes().iter().enumerate() {
+        if include[id] {
+            for &d in &node.deps {
+                left[d] += 1;
+            }
+        }
+    }
     for id in 0..graph.len() {
+        if !include[id] {
+            continue;
+        }
         let node = graph.node(id);
         let s = &mut scheds[device_of[id]];
         s.mark(node.label.clone());
@@ -176,6 +236,9 @@ pub fn schedules(graph: &Graph, device_of: &[usize], devices: usize) -> Vec<Sche
             s.alloc(format!("park.{}", node.label), node.out_bytes);
         }
         for &dep in &node.deps {
+            if !include[dep] {
+                continue; // materialized dep: never parked on a device
+            }
             left[dep] -= 1;
             if left[dep] == 0 && graph.node(dep).out_bytes > 0 {
                 let name = format!("park.{}", graph.node(dep).label);
@@ -336,5 +399,65 @@ mod tests {
         // device 1 holds only fp1: run 100 (its park is freed on device 1
         // when the head — device 0 — consumes it)
         assert_eq!(sim::simulate(&scheds[1]).unwrap().peak_bytes, 100);
+    }
+
+    #[test]
+    fn recompute_closure_skips_materialized_work() {
+        let prog = fan_program(2);
+        let g = prog.graph();
+        // the fps finished before the loss; everything is still needed
+        let mut materialized = vec![false; g.len()];
+        materialized[g.find("fp0").unwrap()] = true;
+        materialized[g.find("fp1").unwrap()] = true;
+        let needed = vec![true; g.len()];
+        let inc = recompute_closure(g, &needed, &materialized);
+        assert!(!inc[g.find("fp0").unwrap()], "materialized rows are kept");
+        assert!(!inc[g.find("fp1").unwrap()]);
+        assert!(inc[g.find("head").unwrap()], "unfinished consumers rerun");
+        assert!(inc[g.find("reduce").unwrap()]);
+        // nothing materialized: the closure is the whole program
+        let all = recompute_closure(g, &needed, &vec![false; g.len()]);
+        assert!(all.iter().all(|&b| b));
+        // everything materialized: nothing to do
+        let none = recompute_closure(g, &needed, &vec![true; g.len()]);
+        assert!(none.iter().all(|&b| !b));
+    }
+
+    /// A needed node whose dependency was *not* materialized must pull
+    /// that dependency (transitively) back in.
+    #[test]
+    fn recompute_closure_pulls_unmaterialized_deps_transitively() {
+        let mut g = Graph::new();
+        let a = g.push_out(NodeKind::Row, "a", vec![], 10, 10);
+        let b = g.push_out(NodeKind::Row, "b", vec![a], 10, 10);
+        let c = g.push(NodeKind::Barrier, "c", vec![b], 5);
+        let mut needed = vec![false; g.len()];
+        needed[c] = true;
+        let inc = recompute_closure(&g, &needed, &vec![false; g.len()]);
+        assert!(inc[a] && inc[b] && inc[c], "transitive deps pulled in");
+    }
+
+    #[test]
+    fn subset_schedules_match_the_executed_subset() {
+        let prog = fan_program(2);
+        let g = prog.graph();
+        // recovery shape: fps materialized, the rest reruns on one device
+        let mut include = vec![true; g.len()];
+        include[g.find("fp0").unwrap()] = false;
+        include[g.find("fp1").unwrap()] = false;
+        let scheds = schedules_subset(g, &vec![0; g.len()], 1, &include);
+        let rep = sim::simulate(&scheds[0]).unwrap();
+        assert_eq!(rep.final_bytes, 0, "the subset replay drains");
+        // head runs with no fp parks charged (they live in host slots):
+        // peak is bp1 running (100) over head's + bp0's parks (40 + 40)
+        assert_eq!(rep.peak_bytes, 180);
+        // the all-true mask reproduces the unrestricted replay exactly
+        let full = schedules(g, &vec![0; g.len()], 1);
+        let full_subset =
+            schedules_subset(g, &vec![0; g.len()], 1, &vec![true; g.len()]);
+        assert_eq!(
+            sim::simulate(&full[0]).unwrap().peak_bytes,
+            sim::simulate(&full_subset[0]).unwrap().peak_bytes
+        );
     }
 }

@@ -120,6 +120,57 @@ impl Admission {
     }
 }
 
+/// Bounded-retry policy for transient faults (docs/RESILIENCE.md).
+///
+/// `max_attempts` counts every dispatch of a node — the initial attempt
+/// plus retries — so `1` means "no retry" (the seed behavior).  Backoff
+/// is *modeled*, never slept: a retried attempt `k` (1-based, so the
+/// first retry is attempt 2) charges `backoff_s · 2^(k−2)` modeled
+/// seconds to the step's recovery accounting, the same
+/// attribution-not-wall-clock treatment `Topology::transfer_seconds`
+/// gets.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Total dispatches allowed per node (≥ 1; 1 disables retry).
+    pub max_attempts: u32,
+    /// Modeled base backoff in seconds, doubled per further retry.
+    pub backoff_s: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 1,
+            backoff_s: 100e-6,
+        }
+    }
+}
+
+impl RetryPolicy {
+    pub fn new(max_attempts: u32) -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: max_attempts.max(1),
+            ..RetryPolicy::default()
+        }
+    }
+
+    pub fn with_backoff(mut self, backoff_s: f64) -> RetryPolicy {
+        self.backoff_s = backoff_s;
+        self
+    }
+
+    /// Modeled backoff charged before attempt `attempt` (1-based).  The
+    /// initial attempt waits nothing; each retry doubles the base, with
+    /// the exponent clamped so a pathological attempt count cannot
+    /// overflow the shift.
+    pub fn backoff_before(&self, attempt: u32) -> f64 {
+        if attempt <= 1 {
+            return 0.0;
+        }
+        self.backoff_s * (1u64 << (attempt - 2).min(20)) as f64
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -187,5 +238,20 @@ mod tests {
         assert!(!a.can_admit(8)); // everything else waits
         a.release(8);
         assert!(a.can_admit(8));
+    }
+
+    #[test]
+    fn retry_policy_defaults_and_backoff() {
+        let p = RetryPolicy::default();
+        assert_eq!(p.max_attempts, 1, "seed behavior: no retry");
+        assert_eq!(p.backoff_before(1), 0.0, "first attempt never waits");
+        let p = RetryPolicy::new(0);
+        assert_eq!(p.max_attempts, 1, "clamped to ≥ 1");
+        let p = RetryPolicy::new(4).with_backoff(1e-3);
+        assert_eq!(p.backoff_before(2), 1e-3);
+        assert_eq!(p.backoff_before(3), 2e-3);
+        assert_eq!(p.backoff_before(4), 4e-3);
+        // the shift clamps instead of overflowing
+        assert!(p.backoff_before(u32::MAX).is_finite());
     }
 }

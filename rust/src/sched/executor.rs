@@ -43,6 +43,12 @@ pub struct ExecOutcome {
     /// single-ledger executor.
     pub device_peaks: Vec<u64>,
     pub trace: Trace,
+    /// Transient-fault retries absorbed during the run (0 without fault
+    /// injection; aggregated across recovery phases under sharding).
+    pub retries: u64,
+    /// Modeled backoff seconds charged by those retries — attribution
+    /// like `Topology::transfer_seconds`, never slept.
+    pub modeled_backoff_s: f64,
 }
 
 struct State {
@@ -68,6 +74,7 @@ impl State {
             worker,
             device: 0,
             in_flight_bytes: self.admission.in_flight(),
+            attempt: 1,
         };
         self.seq += 1;
         self.events.push(ev);
@@ -94,6 +101,8 @@ where
             peak_bytes: 0,
             device_peaks: vec![0],
             trace: Trace::default(),
+            retries: 0,
+            modeled_backoff_s: 0.0,
         });
     }
     let workers = cfg.workers.clamp(1, n);
@@ -148,6 +157,8 @@ where
         peak_bytes: peak,
         device_peaks: vec![peak],
         trace: Trace { events: st.events },
+        retries: 0,
+        modeled_backoff_s: 0.0,
     })
 }
 

@@ -31,7 +31,7 @@ pub mod executor;
 pub mod trace;
 
 pub use crate::rowir::{Graph, Node, NodeId, NodeKind, Task};
-pub use admission::Admission;
+pub use admission::{Admission, RetryPolicy};
 pub use executor::{run, ExecOutcome, Slot};
 pub use trace::{Trace, TraceEvent, TraceKind};
 

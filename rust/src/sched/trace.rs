@@ -21,10 +21,17 @@ use crate::rowir::{Graph, NodeId};
 pub enum TraceKind {
     /// Admission granted, runner invoked on a worker.
     Dispatched,
+    /// An attempt failed with a transient fault and the node went back to
+    /// the ready set — a retry span (the re-dispatch records its own
+    /// `Dispatched` with a bumped `attempt`).
+    Retried,
     /// Runner returned `Ok`; successors unblocked.
     Finished,
     /// Runner returned `Err`; the run aborted.
     Failed,
+    /// The node's device was lost mid-step; recovery (or a structured
+    /// failure) follows.  Recorded at most once per executor phase.
+    Lost,
 }
 
 /// One observation.
@@ -43,6 +50,9 @@ pub struct TraceEvent {
     /// Admission in-flight bytes immediately after the event — of the
     /// single global ledger, or of `device`'s ledger under sharding.
     pub in_flight_bytes: u64,
+    /// Which dispatch of the node this event belongs to (1-based; > 1
+    /// only after retries of injected transient faults).
+    pub attempt: u32,
 }
 
 /// A completed (or aborted) run's event log.
@@ -105,6 +115,19 @@ impl Trace {
                         graph.node(ev.node).label
                     )))
                 }
+                TraceKind::Retried => {
+                    return Err(Error::Sched(format!(
+                        "node '{}' was retried — not a clean run",
+                        graph.node(ev.node).label
+                    )))
+                }
+                TraceKind::Lost => {
+                    return Err(Error::Sched(format!(
+                        "device {} was lost at node '{}' — not a clean run",
+                        ev.device,
+                        graph.node(ev.node).label
+                    )))
+                }
             }
         }
         for id in 0..n {
@@ -135,10 +158,19 @@ impl Trace {
                     }
                 }
                 TraceKind::Finished => done[ev.node] = true,
-                TraceKind::Failed => {}
+                TraceKind::Failed | TraceKind::Retried | TraceKind::Lost => {}
             }
         }
         Ok(())
+    }
+
+    /// Number of retry spans in the trace — recovery-cost observability
+    /// (`StepStats::retries` aggregates this across recovery phases).
+    pub fn retries(&self) -> u64 {
+        self.events
+            .iter()
+            .filter(|e| e.kind == TraceKind::Retried)
+            .count() as u64
     }
 
     /// Attribution dump: one JSON object per node in id order (label,
@@ -207,8 +239,9 @@ impl Trace {
         }
         let _ = writeln!(
             out,
-            "  ],\n  \"events\": {},\n  \"max_in_flight_bytes\": {}\n}}",
+            "  ],\n  \"events\": {},\n  \"retries\": {},\n  \"max_in_flight_bytes\": {}\n}}",
             self.events.len(),
+            self.retries(),
             self.max_in_flight()
         );
         out
@@ -235,6 +268,7 @@ mod tests {
             worker: 0,
             device: 0,
             in_flight_bytes: 0,
+            attempt: 1,
         }
     }
 
@@ -285,6 +319,32 @@ mod tests {
     }
 
     #[test]
+    fn check_complete_rejects_retry_and_loss_spans() {
+        let dag = two_node_dag();
+        let retried = Trace {
+            events: vec![
+                ev(0, 0, TraceKind::Dispatched),
+                ev(1, 0, TraceKind::Retried),
+                ev(2, 0, TraceKind::Dispatched),
+                ev(3, 0, TraceKind::Finished),
+                ev(4, 1, TraceKind::Dispatched),
+                ev(5, 1, TraceKind::Finished),
+            ],
+        };
+        let err = retried.check_complete(&dag).unwrap_err();
+        assert!(err.to_string().contains("not a clean run"), "{err}");
+        assert_eq!(retried.retries(), 1);
+        let lost = Trace {
+            events: vec![
+                ev(0, 0, TraceKind::Dispatched),
+                ev(1, 0, TraceKind::Lost),
+            ],
+        };
+        assert!(lost.check_complete(&dag).is_err());
+        assert_eq!(lost.retries(), 0);
+    }
+
+    #[test]
     fn json_dump_is_parseable_and_deterministic() {
         let dag = two_node_dag();
         let t = Trace {
@@ -300,6 +360,7 @@ mod tests {
         assert_eq!(json, t.to_json(&dag));
         assert!(json.contains("\"lanes\""), "{json}");
         assert!(json.contains("\"transfers\""), "{json}");
+        assert!(json.contains("\"retries\": 0"), "{json}");
     }
 
     #[test]
@@ -315,6 +376,7 @@ mod tests {
             worker: 0,
             device,
             in_flight_bytes: bytes,
+            attempt: 1,
         };
         let trace = Trace {
             events: vec![

@@ -15,14 +15,14 @@
 //! | [`topology`] | heterogeneous `DeviceModel` topologies (`DeviceSpec` presets + capacity scaling) + PCIe/NVLink peer links |
 //! | [`partition`] | `Blocked` / `CostBalanced` / `DpBoundary` node→device assignment + `modeled_makespan` |
 //! | [`plan`] | cross-device edges → ordinary `rowir` transfer nodes; per-device `memory::sim` replay via the IR walk |
-//! | [`exec`] | persistent worker pool, per-device admission ledgers |
+//! | [`exec`] | persistent worker pool, per-device admission ledgers, bounded retry + device-loss quiesce |
 
 pub mod exec;
 pub mod partition;
 pub mod plan;
 pub mod topology;
 
-pub use exec::ShardedExecutor;
+pub use exec::{FaultArgs, ShardedExecutor, StepRun};
 pub use partition::{modeled_makespan, PartitionPolicy, Partitioner};
 pub use plan::{ShardPlan, Transfer};
 pub use topology::{DeviceId, DevicePreset, DeviceSpec, LinkKind, Topology};

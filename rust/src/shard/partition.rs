@@ -58,6 +58,12 @@ impl Partitioner {
     /// byte budget (`ledgers.len() == topo.len()`); `u64::MAX` entries
     /// disable the steer.  Every node is assigned exactly once; the
     /// result is deterministic across calls.
+    ///
+    /// Devices the topology marks failed (`Topology::mark_failed`) are
+    /// never placement targets: pins move to the lowest *surviving*
+    /// device, `Blocked` splits fans over the survivor list, and the
+    /// packers skip dead devices — this is how fault recovery re-plans
+    /// onto the survivors without renumbering lanes.
     pub fn assign(&self, dag: &Graph, topo: &Topology, ledgers: &[u64]) -> Result<Vec<DeviceId>> {
         if ledgers.len() != topo.len() {
             return Err(Error::Sched(format!(
@@ -65,6 +71,11 @@ impl Partitioner {
                 ledgers.len(),
                 topo.len()
             )));
+        }
+        if topo.alive_count() == 0 {
+            return Err(Error::InfeasiblePlan(
+                "partitioner: no surviving devices to place onto".into(),
+            ));
         }
         if let Some(t) = dag
             .nodes()
@@ -78,7 +89,7 @@ impl Partitioner {
         }
         dag.validate()?;
         match self.policy {
-            PartitionPolicy::Blocked => Ok(blocked(dag, topo.len())),
+            PartitionPolicy::Blocked => Ok(blocked(dag, topo)),
             PartitionPolicy::CostBalanced => cost_balanced(dag, topo, ledgers),
             PartitionPolicy::DpBoundary => dp_boundary(dag, topo, ledgers),
         }
@@ -87,9 +98,12 @@ impl Partitioner {
 
 /// Contiguous row ranges: a maximal run of `Row` nodes (a parallel fan —
 /// fans are pushed with consecutive ids by `StepPlan::lower`) of length k
-/// maps row j to device ⌊j·D/k⌋.  Everything else pins to device 0.
-fn blocked(dag: &Graph, devices: usize) -> Vec<DeviceId> {
-    let mut dev = vec![0usize; dag.len()];
+/// maps row j to the ⌊j·A/k⌋-th of the A *surviving* devices.  Everything
+/// else pins to the lowest surviving device.
+fn blocked(dag: &Graph, topo: &Topology) -> Vec<DeviceId> {
+    let alive = topo.alive();
+    let a = alive.len();
+    let mut dev = vec![alive[0]; dag.len()];
     let mut i = 0;
     while i < dag.len() {
         if dag.node(i).kind == NodeKind::Row {
@@ -99,11 +113,11 @@ fn blocked(dag: &Graph, devices: usize) -> Vec<DeviceId> {
             }
             let k = i - start;
             for j in 0..k {
-                dev[start + j] = j * devices / k;
+                dev[start + j] = alive[j * a / k];
             }
         } else {
             // barriers (serial-order reductions) and 2PS chain rows
-            dev[i] = 0;
+            dev[i] = alive[0];
             i += 1;
         }
     }
@@ -117,6 +131,8 @@ struct Placement<'a> {
     dag: &'a Graph,
     topo: &'a Topology,
     ledgers: &'a [u64],
+    /// Surviving device ids, ascending — the only placement targets.
+    alive: Vec<DeviceId>,
     dev: Vec<DeviceId>,
     load: Vec<f64>,
     /// Serial-replay parked bytes per device (cheap steer; the exact
@@ -129,15 +145,22 @@ struct Placement<'a> {
 
 impl<'a> Placement<'a> {
     fn new(dag: &'a Graph, topo: &'a Topology, ledgers: &'a [u64]) -> Placement<'a> {
+        let alive = topo.alive();
         Placement {
             dag,
             topo,
             ledgers,
-            dev: vec![0usize; dag.len()],
+            dev: vec![alive[0]; dag.len()],
+            alive,
             load: vec![0f64; topo.len()],
             resident: vec![0u64; topo.len()],
             left: dag.consumer_counts(),
         }
+    }
+
+    /// Lowest surviving device: the pin target for barriers and chains.
+    fn pin(&self) -> DeviceId {
+        self.alive[0]
     }
 
     /// Modeled seconds node `id` adds on candidate device `c`: its
@@ -158,7 +181,7 @@ impl<'a> Placement<'a> {
     fn greedy_choice(&self, id: NodeId) -> Result<DeviceId> {
         let node = self.dag.node(id);
         let mut best: Option<(f64, DeviceId)> = None;
-        for c in 0..self.topo.len() {
+        for &c in &self.alive {
             if self.resident[c].saturating_add(node.est_bytes) > self.ledgers[c] {
                 continue; // ledger steer: this row cannot run here
             }
@@ -171,7 +194,7 @@ impl<'a> Placement<'a> {
         match best {
             Some((_, c)) => Ok(c),
             None => Err(Error::InfeasiblePlan(format!(
-                "cost-balanced shard: node '{}' ({} B) fits no device ledger",
+                "cost-balanced shard: node '{}' ({} B) fits no surviving device ledger",
                 node.label, node.est_bytes
             ))),
         }
@@ -207,7 +230,7 @@ fn cost_balanced(dag: &Graph, topo: &Topology, ledgers: &[u64]) -> Result<Vec<De
     let mut p = Placement::new(dag, topo, ledgers);
     for id in 0..dag.len() {
         let choice = match dag.node(id).kind {
-            NodeKind::Barrier => 0,
+            NodeKind::Barrier => p.pin(),
             _ => p.greedy_choice(id)?,
         };
         p.commit(id, choice);
@@ -330,17 +353,18 @@ fn dp_walk(dag: &Graph, topo: &Topology, ledgers: &[u64]) -> Result<Vec<DeviceId
                 }
             }
         } else {
-            // barriers (serial-order reductions) pin to device 0, same as
-            // CostBalanced; 2PS chain rows *prefer* device 0 (a link hop
-            // inside the chain serializes the cluster) but take the
-            // greedy choice when device 0's ledger cannot hold them —
-            // never emit a layout the steer would reject where greedy
-            // would not
+            // barriers (serial-order reductions) pin to the lowest
+            // surviving device, same as CostBalanced; 2PS chain rows
+            // *prefer* that device (a link hop inside the chain
+            // serializes the cluster) but take the greedy choice when its
+            // ledger cannot hold them — never emit a layout the steer
+            // would reject where greedy would not
             let node = p.dag.node(id);
+            let pin = p.pin();
             let choice = if node.kind == NodeKind::Barrier
-                || p.resident[0].saturating_add(node.est_bytes) <= p.ledgers[0]
+                || p.resident[pin].saturating_add(node.est_bytes) <= p.ledgers[pin]
             {
-                0
+                pin
             } else {
                 p.greedy_choice(id)?
             };
@@ -368,7 +392,10 @@ fn dp_walk(dag: &Graph, topo: &Topology, ledgers: &[u64]) -> Result<Vec<DeviceId
 ///   range-max of parked-prefix + working-set bytes.
 fn dp_split_fan(p: &Placement<'_>, start: usize, end: usize) -> Option<Vec<DeviceId>> {
     let k = end - start;
-    let d = p.topo.len();
+    // the DP runs over the *surviving* device list: index c below is a
+    // position in `alive`, mapped back to a real DeviceId at the end
+    let alive = &p.alive;
+    let d = alive.len();
     // per-row bytes: working set, and what stays parked after the row
     // (only rows with pending consumers park anything)
     let est: Vec<u64> = (start..end).map(|r| p.dag.node(r).est_bytes).collect();
@@ -389,24 +416,24 @@ fn dp_split_fan(p: &Placement<'_>, start: usize, end: usize) -> Option<Vec<Devic
         pout[r + 1] = pout[r].saturating_add(parked[r]);
     }
     let m: Vec<u64> = (0..k).map(|r| pout[r].saturating_add(est[r])).collect();
-    // psec[c][j] = modeled seconds of fan rows [0..j) on device c
+    // psec[c][j] = modeled seconds of fan rows [0..j) on alive device c
     let mut psec = vec![vec![0f64; k + 1]; d];
     for (c, ps) in psec.iter_mut().enumerate() {
         for r in 0..k {
-            ps[r + 1] = ps[r] + p.placed_seconds(start + r, c);
+            ps[r + 1] = ps[r] + p.placed_seconds(start + r, alive[c]);
         }
     }
 
     const INF: f64 = f64::INFINITY;
     let mut best = vec![vec![INF; k + 1]; d];
     let mut cut = vec![vec![0usize; k + 1]; d];
-    // base: device 0 takes [0..j)
-    best[0][0] = p.load[0];
+    // base: the first surviving device takes [0..j)
+    best[0][0] = p.load[alive[0]];
     let mut run = 0u64;
     for j in 1..=k {
         run = run.max(m[j - 1]);
-        if p.resident[0].saturating_add(run) <= p.ledgers[0] {
-            best[0][j] = p.load[0] + psec[0][j];
+        if p.resident[alive[0]].saturating_add(run) <= p.ledgers[alive[0]] {
+            best[0][j] = p.load[alive[0]] + psec[0][j];
         }
     }
     for c in 1..d {
@@ -421,11 +448,11 @@ fn dp_split_fan(p: &Placement<'_>, start: usize, end: usize) -> Option<Vec<Devic
                     true // empty range on device c
                 } else {
                     run = run.max(m[i]);
-                    p.resident[c].saturating_add(run - pout[i]) <= p.ledgers[c]
+                    p.resident[alive[c]].saturating_add(run - pout[i]) <= p.ledgers[alive[c]]
                 };
                 if feasible && best[c - 1][i] < INF {
                     let range_secs = if i == j { 0.0 } else { psec[c][j] - psec[c][i] };
-                    let v = best[c - 1][i].max(p.load[c] + range_secs);
+                    let v = best[c - 1][i].max(p.load[alive[c]] + range_secs);
                     // strict < keeps the first (largest-i) minimizer —
                     // deterministic, favors filling earlier devices
                     if v < bestv {
@@ -442,13 +469,13 @@ fn dp_split_fan(p: &Placement<'_>, start: usize, end: usize) -> Option<Vec<Devic
         return None;
     }
     // reconstruct the split points device by device
-    let mut assign = vec![0usize; k];
+    let mut assign = vec![alive[0]; k];
     let mut j = k;
     let mut c = d - 1;
     loop {
         let i = if c == 0 { 0 } else { cut[c][j] };
         for a in assign.iter_mut().take(j).skip(i) {
-            *a = c;
+            *a = alive[c];
         }
         if c == 0 {
             break;
@@ -751,5 +778,54 @@ mod tests {
         let dag = mixed_dag();
         let res = Partitioner::new(PartitionPolicy::Blocked).assign(&dag, &topo(2), &[0]);
         assert!(res.is_err());
+    }
+
+    /// Recovery re-planning: every policy must route around devices the
+    /// topology marks failed, moving its pins to the lowest survivor.
+    #[test]
+    fn all_policies_avoid_failed_devices() {
+        let dag = mixed_dag();
+        let mut t = topo(3);
+        t.mark_failed(0);
+        for policy in [
+            PartitionPolicy::Blocked,
+            PartitionPolicy::CostBalanced,
+            PartitionPolicy::DpBoundary,
+        ] {
+            let dev = Partitioner::new(policy)
+                .assign(&dag, &t, &[u64::MAX; 3])
+                .unwrap();
+            assert!(
+                dev.iter().all(|&d| d != 0),
+                "{policy:?} placed work on the lost device: {dev:?}"
+            );
+            // barriers pin to the lowest *survivor*, not literal device 0
+            assert_eq!(dev[4], 1, "{policy:?}: ck barrier must pin to device 1");
+        }
+        // Blocked splits the fan over exactly the survivor list
+        let dev = Partitioner::new(PartitionPolicy::Blocked)
+            .assign(&dag, &t, &[u64::MAX; 3])
+            .unwrap();
+        assert_eq!(&dev[0..4], &[1, 1, 2, 2]);
+    }
+
+    #[test]
+    fn no_survivors_is_a_typed_error() {
+        let dag = mixed_dag();
+        let mut dead = topo(2);
+        dead.mark_failed(0);
+        dead.mark_failed(1);
+        for policy in [
+            PartitionPolicy::Blocked,
+            PartitionPolicy::CostBalanced,
+            PartitionPolicy::DpBoundary,
+        ] {
+            match Partitioner::new(policy).assign(&dag, &dead, &[u64::MAX; 2]) {
+                Err(Error::InfeasiblePlan(msg)) => {
+                    assert!(msg.contains("surviving"), "{msg}")
+                }
+                other => panic!("expected InfeasiblePlan, got ok={}", other.is_ok()),
+            }
+        }
     }
 }

@@ -249,7 +249,23 @@ impl ShardPlan {
 
     /// Per-device serial-order peaks (see [`ShardPlan::per_device_schedules`]).
     pub fn replay_peaks(&self) -> Result<Vec<u64>> {
-        self.per_device_schedules()
+        let include = vec![true; self.graph.len()];
+        self.replay_peaks_subset(&include)
+    }
+
+    /// Per-device serial-order peaks of the `include` subset — what a
+    /// recovery phase that runs only the unfinished closure will hold
+    /// (docs/RESILIENCE.md).  Excluded nodes are materialized in host
+    /// slots and charge nothing.
+    pub fn replay_peaks_subset(&self, include: &[bool]) -> Result<Vec<u64>> {
+        if include.len() != self.graph.len() {
+            return Err(Error::Sched(format!(
+                "replay subset: {} mask entries for {} nodes",
+                include.len(),
+                self.graph.len()
+            )));
+        }
+        interp::schedules_subset(&self.graph, &self.device_of, self.devices, include)
             .iter()
             .map(|s| {
                 let rep = sim::simulate(s)?;
@@ -261,7 +277,15 @@ impl ShardPlan {
 
     /// Error if any device's serial-order replay peak exceeds its ledger.
     pub fn check_budgets(&self) -> Result<()> {
-        for (d, peak) in self.replay_peaks()?.into_iter().enumerate() {
+        let include = vec![true; self.graph.len()];
+        self.check_budgets_subset(&include)
+    }
+
+    /// [`ShardPlan::check_budgets`] restricted to an `include` mask —
+    /// the recovery feasibility gate: can the survivors run this phase's
+    /// subset inside their ledgers?
+    pub fn check_budgets_subset(&self, include: &[bool]) -> Result<()> {
+        for (d, peak) in self.replay_peaks_subset(include)?.into_iter().enumerate() {
             if peak > self.budgets[d] {
                 return Err(Error::InfeasiblePlan(format!(
                     "device {d}: serial-order replay peak {peak} B exceeds its {} B ledger",
@@ -380,6 +404,32 @@ mod tests {
         assert!(plan.check_budgets().is_ok());
         plan.set_budgets(vec![159, 100]).unwrap();
         assert!(plan.check_budgets().is_err());
+    }
+
+    #[test]
+    fn subset_replay_drops_materialized_charges() {
+        let base = fan();
+        let plan =
+            ShardPlan::lower(&base, &topo(2), &[0, 1, 0], vec![u64::MAX; 2]).unwrap();
+        // recovery shape: a and b finished before the loss; the transfer
+        // and the barrier rerun
+        let g = plan.graph();
+        let mut include = vec![true; g.len()];
+        include[g.find("a").unwrap()] = false;
+        include[g.find("b").unwrap()] = false;
+        let peaks = plan.replay_peaks_subset(&include).unwrap();
+        // device 0: xfer runs (40), parks 40; red runs 80 on top → 120
+        // (a's park is gone — its output is host-materialized).
+        // device 1 does nothing at all.
+        assert_eq!(peaks, vec![120, 0]);
+        let mut plan = plan;
+        plan.set_budgets(vec![120, 0]).unwrap();
+        assert!(plan.check_budgets_subset(&include).is_ok());
+        assert!(plan.check_budgets().is_err(), "the full step no longer fits");
+        plan.set_budgets(vec![119, 0]).unwrap();
+        assert!(plan.check_budgets_subset(&include).is_err());
+        // arity is checked
+        assert!(plan.replay_peaks_subset(&[true]).is_err());
     }
 
     #[test]

@@ -157,10 +157,18 @@ pub enum LinkKind {
 }
 
 /// N devices plus the peer-link model connecting them.
+///
+/// Devices keep **stable ids for life**: a lost device is masked failed
+/// ([`Topology::mark_failed`]) rather than removed, so ledgers, trace
+/// lanes and `device_peaks` keep dimension [`Topology::len`] across
+/// recovery and per-phase peaks merge elementwise (docs/RESILIENCE.md).
 #[derive(Debug, Clone)]
 pub struct Topology {
     devices: Vec<DeviceModel>,
     link: LinkKind,
+    /// Devices marked lost by fault recovery (same index space as
+    /// `devices`; never shrinks).
+    failed: Vec<bool>,
 }
 
 impl Topology {
@@ -170,13 +178,41 @@ impl Topology {
         Topology {
             devices: vec![dev; n],
             link,
+            failed: vec![false; n],
         }
     }
 
     /// Heterogeneous topology from an explicit device list.
     pub fn new(devices: Vec<DeviceModel>, link: LinkKind) -> Topology {
         assert!(!devices.is_empty(), "topology needs at least one device");
-        Topology { devices, link }
+        let failed = vec![false; devices.len()];
+        Topology {
+            devices,
+            link,
+            failed,
+        }
+    }
+
+    /// Mark `d` lost.  Its id stays valid (stable lanes) but it stops
+    /// being a placement target: [`Topology::budgets`] reports 0 for it
+    /// and the partitioner skips it.
+    pub fn mark_failed(&mut self, d: DeviceId) {
+        if d < self.failed.len() {
+            self.failed[d] = true;
+        }
+    }
+
+    pub fn is_alive(&self, d: DeviceId) -> bool {
+        d < self.failed.len() && !self.failed[d]
+    }
+
+    /// Ids of surviving devices, ascending.
+    pub fn alive(&self) -> Vec<DeviceId> {
+        (0..self.devices.len()).filter(|&d| self.is_alive(d)).collect()
+    }
+
+    pub fn alive_count(&self) -> usize {
+        self.failed.iter().filter(|&&f| !f).count()
     }
 
     pub fn len(&self) -> usize {
@@ -219,10 +255,18 @@ impl Topology {
 
     /// Per-device admission budgets: usable HBM minus the always-resident
     /// bytes ξ, the same headroom arithmetic as `SchedConfig::device_budget`.
+    /// Failed devices budget 0 — they can neither run nor park anything.
     pub fn budgets(&self, xi: u64) -> Vec<u64> {
         self.devices
             .iter()
-            .map(|d| d.usable_hbm().saturating_sub(xi))
+            .enumerate()
+            .map(|(d, dev)| {
+                if self.failed[d] {
+                    0
+                } else {
+                    dev.usable_hbm().saturating_sub(xi)
+                }
+            })
             .collect()
     }
 }
@@ -302,5 +346,24 @@ mod tests {
         let b = t.budgets(xi);
         assert_eq!(b.len(), 2);
         assert_eq!(b[0], DeviceModel::rtx3090().usable_hbm() - xi);
+    }
+
+    #[test]
+    fn failed_devices_keep_their_lane_but_lose_their_budget() {
+        let mut t = Topology::uniform(3, DeviceModel::rtx3090(), LinkKind::Pcie);
+        assert_eq!(t.alive(), vec![0, 1, 2]);
+        t.mark_failed(1);
+        assert_eq!(t.len(), 3, "stable ids: the lane is masked, not removed");
+        assert!(!t.is_alive(1));
+        assert_eq!(t.alive(), vec![0, 2]);
+        assert_eq!(t.alive_count(), 2);
+        let b = t.budgets(0);
+        assert_eq!(b.len(), 3);
+        assert_eq!(b[1], 0, "a lost device can neither run nor park");
+        assert!(b[0] > 0 && b[2] > 0);
+        // out-of-range marks are ignored, not a panic
+        t.mark_failed(99);
+        assert_eq!(t.alive_count(), 2);
+        assert!(!t.is_alive(99));
     }
 }

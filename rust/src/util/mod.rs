@@ -1,7 +1,9 @@
 //! Offline substrates for common crates.io dependencies (the build
 //! environment vendors only the `xla` crate closure — see DESIGN.md §2):
-//! a JSON parser (`json`), a deterministic RNG (`rng`), and a tiny
-//! benchmark harness lives in [`crate::metrics::bench`].
+//! a JSON parser (`json`), a deterministic RNG (`rng`), poison-tolerant
+//! lock helpers (`sync`), and a tiny benchmark harness lives in
+//! [`crate::metrics::bench`].
 
 pub mod json;
 pub mod rng;
+pub mod sync;

@@ -1,0 +1,44 @@
+//! Poison-tolerant `Mutex`/`Condvar` helpers.
+//!
+//! A poisoned mutex only records that some thread panicked while holding
+//! the guard — the protected data is still there.  Every executor in this
+//! crate converts worker panics into the error path *before* the guard
+//! drops (`catch_unwind` around the runner), so the protected scheduler
+//! state is consistent even when the poison flag is set; recovering the
+//! guard is therefore always sound here.  The helpers exist so that
+//! policy lives in one documented place instead of five inline
+//! `unwrap_or_else(|poisoned| poisoned.into_inner())` copies.
+
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+/// Lock `m`, recovering the guard if a previous holder panicked.
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// `Condvar::wait`, recovering the guard if a holder panicked while we
+/// were parked.
+pub fn wait_unpoisoned<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard)
+        .unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn lock_recovers_after_a_panicked_holder() {
+        let m = Arc::new(Mutex::new(41));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex is poisoned");
+        *lock_unpoisoned(&m) += 1;
+        assert_eq!(*lock_unpoisoned(&m), 42, "state survives the poison flag");
+    }
+}

@@ -201,7 +201,7 @@ pub fn run_sharded(
     splan.set_budgets(ledgers.clone()).unwrap();
     assert!(splan.check_budgets().is_ok());
     // the pool is constructed once and reused by every step below
-    let state = ShardState::with_plan(splan, workers);
+    let mut state = ShardState::with_plan(splan, workers);
     let ex = FakeExec { man: man.clone() };
     let cfg = SchedConfig::pipelined(workers);
     let mut params = ParamSet::init(&man.model, 42);
@@ -211,7 +211,7 @@ pub fn run_sharded(
     let mut last = Trace::default();
     for _ in 0..steps {
         let (loss, grads, outcome) = plan
-            .step_pipelined(&ex, &program, &params, &cfg, Some(&state), &x, &y)
+            .step_pipelined(&ex, &program, &params, &cfg, Some(&mut state), &x, &y)
             .unwrap();
         outcome.trace.check_complete(state.plan().graph()).unwrap();
         // every per-device admission ledger respected, from the trace

@@ -1,0 +1,241 @@
+//! Integration: fault injection + recovery through the public API —
+//! `FaultPlan` → `Trainer`-shaped `ShardState` (`ShardState::build`, so
+//! every run carries a recovery context) → `StepPlan::step_pipelined`.
+//!
+//! The headline property (docs/RESILIENCE.md): under *every* injected
+//! fault schedule — transient faults, OOMs, transfer errors, device
+//! losses — a recovered run's per-step losses and final parameters are
+//! `to_bits()`-identical to the serial interpreter's, because every base
+//! node still executes exactly once and all reductions stay in id-order
+//! barriers.
+
+mod common;
+
+use common::{
+    assert_bits_equal, demo_manifest, run_serial, test_batch, FakeExec, ALL_MODES,
+    ALL_POLICIES,
+};
+
+use lr_cnn::coordinator::{Mode, Optimizer, ParamSet, ShardState, StepPlan};
+use lr_cnn::error::{Error, Result};
+use lr_cnn::faults::{DeviceLostPolicy, FaultConfig, FaultPlan};
+use lr_cnn::sched::{RetryPolicy, SchedConfig};
+use lr_cnn::shard::{DevicePreset, DeviceSpec, PartitionPolicy, ShardConfig};
+
+/// Per-step fault/recovery observability captured by the faulty driver.
+struct StepInfo {
+    retries: u64,
+    backoff_s: f64,
+    lost: Vec<usize>,
+    recomputed: u64,
+    device_peaks: Vec<u64>,
+}
+
+/// The faulty twin of `common::run_sharded`: the trainer-path shard
+/// state (`ShardState::build` — recovery context included) with fault
+/// knobs installed, stepped `steps` times.  Hyperparameters match
+/// `run_serial` so the two sides are bit-comparable.
+fn run_sharded_faulty(
+    mode: Mode,
+    steps: usize,
+    workers: usize,
+    shard: ShardConfig,
+    faults: &FaultConfig,
+) -> Result<(Vec<f32>, ParamSet, Vec<StepInfo>, ShardState)> {
+    let man = demo_manifest();
+    let plan = StepPlan::build(&man, mode)?;
+    let program = plan.lower(&man)?;
+    let ex = FakeExec { man: man.clone() };
+    let cfg = SchedConfig::pipelined(workers).with_shard(shard);
+    let mut state = ShardState::build(&program, &cfg, 0)?;
+    state.set_faults(faults);
+    let mut params = ParamSet::init(&man.model, 42);
+    let mut opt = Optimizer::sgd(0.05);
+    let (x, y) = test_batch();
+    let mut losses = Vec::new();
+    let mut infos = Vec::new();
+    for _ in 0..steps {
+        let (loss, grads, outcome) =
+            plan.step_pipelined(&ex, &program, &params, &cfg, Some(&mut state), &x, &y)?;
+        opt.step(&mut params, &grads)?;
+        losses.push(loss);
+        infos.push(StepInfo {
+            retries: outcome.retries,
+            backoff_s: outcome.modeled_backoff_s,
+            lost: state.last_lost().to_vec(),
+            recomputed: state.last_recomputed(),
+            device_peaks: outcome.device_peaks.clone(),
+        });
+    }
+    Ok((losses, params, infos, state))
+}
+
+/// The matrix: seeded-random fault schedules × all 4 modes × 1/2/4
+/// devices × all partition policies.  Every run must (a) finish, (b)
+/// stay bit-identical to serial, (c) absorb no more retries than the
+/// schedule's total failure budget, (d) respect every device's memory
+/// and (e) keep at least `devices − device_lost_count()` survivors.
+#[test]
+fn random_fault_schedules_never_change_the_bits() {
+    let steps = 3usize;
+    for &seed in &[11u64, 23, 47, 101] {
+        for mode in ALL_MODES {
+            for devices in [1usize, 2, 4] {
+                for policy in ALL_POLICIES {
+                    let ctx = format!("seed {seed} {mode:?} d{devices} {policy:?}");
+                    let fp = FaultPlan::random(seed, steps as u64, devices, 4);
+                    let budget: u64 = fp.specs.iter().map(|s| s.times as u64).sum();
+                    let lost_specs = fp.device_lost_count();
+                    let faults = FaultConfig {
+                        plan: Some(fp),
+                        retry: RetryPolicy::new(3),
+                        on_device_lost: DeviceLostPolicy::Degrade,
+                    };
+                    let shard = ShardConfig::new(devices).with_policy(policy);
+                    let caps = shard.topology().budgets(0);
+                    let (losses, params, infos, state) =
+                        run_sharded_faulty(mode, steps, 2, shard, &faults)
+                            .unwrap_or_else(|e| panic!("{ctx}: {e}"));
+
+                    let man = demo_manifest();
+                    let (serial_losses, serial_params, _) = run_serial(&man, mode, steps);
+                    for (s, (a, b)) in losses.iter().zip(&serial_losses).enumerate() {
+                        assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: loss step {s}");
+                    }
+                    assert_bits_equal(&params, &serial_params, &ctx);
+
+                    let total_retries: u64 = infos.iter().map(|i| i.retries).sum();
+                    assert!(
+                        total_retries <= budget,
+                        "{ctx}: {total_retries} retries > {budget} injected failures"
+                    );
+                    for info in &infos {
+                        assert_eq!(
+                            info.retries > 0,
+                            info.backoff_s > 0.0,
+                            "{ctx}: backoff is charged iff retries happened"
+                        );
+                        for (d, &p) in info.device_peaks.iter().enumerate() {
+                            assert!(p <= caps[d], "{ctx}: d{d} peak {p} > {}", caps[d]);
+                        }
+                    }
+                    let alive = state.topology().expect("trainer path").alive_count();
+                    assert!(
+                        alive >= devices - lost_specs,
+                        "{ctx}: {alive} survivors, {lost_specs} loss spec(s)"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Losing one of two devices mid-run degrades onto the survivor and the
+/// run still matches serial bit-for-bit; the loss and the recomputed
+/// closure are reported on exactly the step that absorbed them.
+#[test]
+fn degrading_to_a_single_survivor_stays_bit_identical() {
+    for mode in [Mode::RowHybrid, Mode::Tps, Mode::Naive] {
+        let ctx = format!("{mode:?}");
+        let faults = FaultConfig {
+            plan: Some(FaultPlan::parse("s1.d1=lost").unwrap()),
+            retry: RetryPolicy::default(),
+            on_device_lost: DeviceLostPolicy::Degrade,
+        };
+        let (losses, params, infos, state) =
+            run_sharded_faulty(mode, 3, 2, ShardConfig::new(2), &faults)
+                .unwrap_or_else(|e| panic!("{ctx}: {e}"));
+        let man = demo_manifest();
+        let (serial_losses, serial_params, _) = run_serial(&man, mode, 3);
+        for (s, (a, b)) in losses.iter().zip(&serial_losses).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: loss step {s}");
+        }
+        assert_bits_equal(&params, &serial_params, &ctx);
+
+        assert!(infos[0].lost.is_empty(), "{ctx}: step 0 is clean");
+        assert_eq!(infos[1].lost, vec![1], "{ctx}: step 1 loses d1");
+        assert!(infos[1].recomputed > 0, "{ctx}: the lost node reruns");
+        assert!(infos[2].lost.is_empty(), "{ctx}: step 2 runs on the survivor");
+        let topo = state.topology().unwrap();
+        assert_eq!(topo.alive(), vec![0], "{ctx}: d1 stays failed");
+        // the re-partitioned plan places nothing on the dead device
+        assert!(state.plan().device_of().iter().all(|&d| d == 0), "{ctx}");
+    }
+}
+
+/// `--on-device-lost fail`: the step surfaces a structured
+/// `Error::DeviceLost` instead of degrading.
+#[test]
+fn fail_policy_surfaces_the_loss_as_a_typed_error() {
+    let faults = FaultConfig {
+        plan: Some(FaultPlan::parse("s0.d1=lost").unwrap()),
+        retry: RetryPolicy::default(),
+        on_device_lost: DeviceLostPolicy::Fail,
+    };
+    match run_sharded_faulty(Mode::RowHybrid, 1, 2, ShardConfig::new(2), &faults) {
+        Err(Error::DeviceLost { device, node }) => {
+            assert_eq!(device, 1);
+            assert!(!node.is_empty(), "the failing node is named");
+        }
+        other => panic!("expected DeviceLost, got ok={:?}", other.is_ok()),
+    }
+}
+
+/// When the only survivor cannot hold the step inside its ledger, the
+/// recovery loop fails with `Error::DeviceLost` (it neither hangs nor
+/// panics).  The tiny second device is valid at build time — the
+/// ledger-aware greedy partitioner simply places nothing on it — but
+/// infeasible as a survivor.
+#[test]
+fn infeasible_survivor_set_fails_with_device_lost() {
+    let shard = ShardConfig::heterogeneous(vec![
+        DeviceSpec::new(DevicePreset::Rtx3090),
+        DeviceSpec::new(DevicePreset::Rtx3090).with_hbm(16),
+    ])
+    .with_policy(PartitionPolicy::CostBalanced);
+    let faults = FaultConfig {
+        plan: Some(FaultPlan::parse("s0.d0=lost").unwrap()),
+        retry: RetryPolicy::default(),
+        on_device_lost: DeviceLostPolicy::Degrade,
+    };
+    match run_sharded_faulty(Mode::RowHybrid, 1, 2, shard, &faults) {
+        Err(Error::DeviceLost { device, .. }) => assert_eq!(device, 0),
+        other => panic!("expected DeviceLost, got ok={:?}", other.is_ok()),
+    }
+}
+
+/// A transient burst longer than the retry budget surfaces
+/// `Error::Retryable` carrying the attempt count.
+#[test]
+fn retry_exhaustion_is_a_typed_error_with_attempt_count() {
+    let faults = FaultConfig {
+        plan: Some(FaultPlan::parse("s0.d0=transient*5").unwrap()),
+        retry: RetryPolicy::new(2),
+        on_device_lost: DeviceLostPolicy::Degrade,
+    };
+    match run_sharded_faulty(Mode::RowHybrid, 1, 2, ShardConfig::new(2), &faults) {
+        Err(Error::Retryable { attempts, source }) => {
+            assert_eq!(attempts, 2, "max_attempts dispatches were spent");
+            assert!(source.is_transient(), "the wrapped error keeps its class");
+        }
+        other => panic!("expected Retryable, got ok={:?}", other.is_ok()),
+    }
+}
+
+/// Bounded retry under the default (no-retry) policy: the very first
+/// transient fault is fatal — the seed behavior is preserved when no
+/// `--retry` is configured.
+#[test]
+fn no_retry_policy_preserves_fail_fast() {
+    let faults = FaultConfig {
+        plan: Some(FaultPlan::parse("s0.d0=transient").unwrap()),
+        retry: RetryPolicy::default(),
+        on_device_lost: DeviceLostPolicy::Degrade,
+    };
+    match run_sharded_faulty(Mode::RowHybrid, 1, 2, ShardConfig::new(2), &faults) {
+        Err(Error::Runtime(msg)) => {
+            assert!(msg.contains("injected"), "bare error, not Retryable: {msg}")
+        }
+        other => panic!("expected Runtime, got ok={:?}", other.is_ok()),
+    }
+}
