@@ -7,7 +7,7 @@
 
 RUST_MANIFEST := rust/Cargo.toml
 
-.PHONY: build test artifacts ir-dump bench-hotpath bench-hotpath-quick bench-sched bench-sched-quick bench-shard bench-shard-quick bench-fault bench-fault-quick fault-matrix lint
+.PHONY: build test artifacts ir-dump bench-hotpath bench-hotpath-quick bench-sched bench-sched-quick bench-shard bench-shard-quick bench-fault bench-fault-quick bench-obs bench-obs-quick bench-diff fault-matrix lint
 
 build:
 	cargo build --release --manifest-path $(RUST_MANIFEST)
@@ -65,6 +65,23 @@ bench-fault:
 
 bench-fault-quick:
 	BENCH_QUICK=1 cargo bench --bench fault_recovery --manifest-path $(RUST_MANIFEST)
+
+# Observability overhead: pipelined execution with recording off vs on
+# (must stay within a 5% band) plus the cost-model calibration quality
+# gate (strict error reduction); writes BENCH_obs_overhead.json,
+# RUN_REPORT_obs.json and PERFETTO_obs.json at the repo root
+# (docs/OBSERVABILITY.md).
+bench-obs:
+	cargo bench --bench obs_overhead --manifest-path $(RUST_MANIFEST)
+
+bench-obs-quick:
+	BENCH_QUICK=1 cargo bench --bench obs_overhead --manifest-path $(RUST_MANIFEST)
+
+# Regression gate over the repo-root BENCH_*.json trajectories against
+# bench/baselines/ (>20% mean_ms regression fails; seed baselines are
+# advisory; BENCH_DIFF_SKIP=1 skips).
+bench-diff:
+	python3 scripts/bench_diff.py
 
 # The fault-injection matrix on its own: the seeded random-schedule ×
 # mode × devices × policy bit-identity sweep plus the typed-error and

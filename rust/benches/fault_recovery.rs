@@ -150,6 +150,7 @@ fn faulty_step(
             injector: injector.as_ref(),
             retry,
             step: 0,
+            recorder: None,
         };
         let graph = plan.graph();
         let run = exec

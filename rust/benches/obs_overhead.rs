@@ -1,0 +1,224 @@
+//! Observability overhead + calibration quality (the obs tentpole's
+//! measurement rig, docs/OBSERVABILITY.md):
+//!
+//! * `recording_off` — the pipelined executor without a recorder (the
+//!   seed path, `sched::run`);
+//! * `recording_on`  — the same graph and runner with a live
+//!   [`Recorder`] (`sched::run_recorded`): one span per dispatch,
+//!   per-worker lanes, one drain per step.
+//!
+//! The run asserts the recording overhead stays inside a 5% band (plus a
+//! small absolute cushion for sub-millisecond steps), and that
+//! [`costmodel::calibrate`] **strictly reduces** the mean relative
+//! per-span prediction error — the analytic model prices GPU seconds,
+//! the rig measures CPU stand-in wall-clock, so an honest fit must close
+//! most of that gap.
+//!
+//! Besides `BENCH_obs_overhead.json` (schema 1), the bench writes the
+//! run-report and Perfetto artifacts CI uploads alongside the bench
+//! JSONs: `RUN_REPORT_obs.json` (round-trip-checked through
+//! `RunReport::from_json`) and `PERFETTO_obs.json`.
+
+use lr_cnn::costmodel::{self, CostModel};
+use lr_cnn::memory::DeviceModel;
+use lr_cnn::metrics::bench;
+use lr_cnn::obs::{self, Recorder, RunReport, StepInput};
+use lr_cnn::rowir::{Graph, NodeId, NodeKind};
+use lr_cnn::sched::{self, SchedConfig};
+
+use std::fmt::Write as _;
+
+const ROWS: usize = 8;
+const ROW_BYTES: u64 = 64 << 20;
+const OUT_BYTES: u64 = 16 << 20;
+const WORKERS: usize = 4;
+
+/// Deterministic CPU kernel standing in for a row executable.
+fn row_work(seed: u64, flops: usize) -> f32 {
+    let mut x = (seed as f32).mul_add(0.001, 1.0);
+    let mut acc = 0.0f32;
+    for i in 0..flops {
+        x = x.mul_add(1.000_000_1, 0.000_000_1);
+        acc += x * ((i & 7) as f32);
+    }
+    std::hint::black_box(acc)
+}
+
+/// The hybrid step shape: FP rows ∥ → head → BP rows ∥ → reduce.
+fn synth_dag() -> Graph {
+    let mut dag = Graph::new();
+    let fp: Vec<NodeId> = (0..ROWS)
+        .map(|r| dag.push_out(NodeKind::Row, format!("fp.row{r}"), vec![], ROW_BYTES, OUT_BYTES))
+        .collect();
+    let head = dag.push_out(NodeKind::Barrier, "head", fp, ROW_BYTES, OUT_BYTES);
+    let bp: Vec<NodeId> = (0..ROWS)
+        .map(|r| {
+            dag.push_out(NodeKind::Row, format!("bp.row{r}"), vec![head], ROW_BYTES, OUT_BYTES)
+        })
+        .collect();
+    dag.push(NodeKind::Barrier, "reduce", bp, 0);
+    dag
+}
+
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.6}")
+    } else {
+        "null".into()
+    }
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let flops = if quick { 60_000 } else { 400_000 };
+    let (warmup, iters) = if quick { (2, 10) } else { (5, 40) };
+    let report_steps = if quick { 3u32 } else { 6 };
+
+    let dag = synth_dag();
+    let cfg = SchedConfig::pipelined(WORKERS);
+    let runner = |id: usize| {
+        row_work(id as u64, flops);
+        Ok(())
+    };
+
+    // ---- overhead: recording off vs on ---------------------------------
+    let off = bench::time("pipelined, recording off", warmup, iters, || {
+        sched::run(&dag, &cfg, runner).expect("clean run")
+    });
+    println!("{}", off.report());
+
+    let rec = Recorder::new(WORKERS);
+    let on = bench::time("pipelined, recording on", warmup, iters, || {
+        let out = sched::run_recorded(&dag, &cfg, runner, Some(&rec)).expect("clean run");
+        let spans = rec.drain();
+        assert_eq!(spans.len(), dag.len(), "one span per dispatch");
+        out
+    });
+    let ratio = on.mean_ms / off.mean_ms;
+    println!("{}   [×{ratio:.3} vs off]", on.report());
+    // the bound: 5% relative, plus an absolute cushion so sub-millisecond
+    // steps (quick mode on busy CI runners) cannot flake the gate
+    assert!(
+        on.mean_ms <= off.mean_ms * 1.05 + 0.25,
+        "recording overhead out of band: on {:.3} ms vs off {:.3} ms (×{ratio:.3})",
+        on.mean_ms,
+        off.mean_ms
+    );
+
+    // ---- recorded run -> report + calibration --------------------------
+    rec.clear();
+    let model = CostModel::analytic(
+        &[DeviceModel::rtx3090()],
+        DeviceModel::rtx3090().pcie_bytes_per_sec,
+    );
+    let mut report = RunReport::new("obs_overhead synth run", "OverL-H(synth)", WORKERS, 1);
+    let mut all_spans = Vec::new();
+    let device_of = vec![0usize; dag.len()];
+    let predicted_s = model.makespan(&dag, &device_of, 1);
+    for step in 0..report_steps {
+        rec.begin_step(step);
+        let t0 = std::time::Instant::now();
+        let out = sched::run_recorded(&dag, &cfg, runner, Some(&rec)).expect("clean run");
+        let step_ms = t0.elapsed().as_secs_f64() * 1e3;
+        rec.end_step();
+        let spans = rec.drain();
+        report.push_step(
+            &StepInput {
+                step,
+                loss: 0.0,
+                peak_bytes: out.peak_bytes,
+                device_peaks: out.device_peaks.clone(),
+                step_ms,
+                executions: dag.len() as u64,
+                retries: out.retries,
+                modeled_backoff_s: out.modeled_backoff_s,
+                lost_devices: 0,
+                recomputed_nodes: 0,
+            },
+            &spans,
+            &model,
+            predicted_s,
+        );
+        all_spans.extend(spans);
+    }
+
+    let (fitted, cal) = costmodel::calibrate(&all_spans, &model);
+    assert!(cal.samples > 0, "compute spans were recorded");
+    // the acceptance gate: calibration strictly reduces the mean relative
+    // prediction error (GPU-analytic vs CPU-measured leaves a huge gap)
+    assert!(
+        cal.after_mre < cal.before_mre,
+        "calibration must strictly reduce the error: {} -> {}",
+        cal.before_mre,
+        cal.after_mre
+    );
+    println!(
+        "calibration: {} span(s), mean rel err {:.4} -> {:.4} (secs/byte {:.3e} -> {:.3e})",
+        cal.samples,
+        cal.before_mre,
+        cal.after_mre,
+        model.secs_per_byte[0],
+        fitted.secs_per_byte[0],
+    );
+    report.set_calibration(cal.clone());
+
+    // ---- artifacts: run report + Perfetto trace ------------------------
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
+    let report_json = report.to_json();
+    let back = RunReport::from_json(&report_json).expect("report round-trips");
+    assert_eq!(back.to_json(), report_json, "byte-exact re-emission");
+    match std::fs::write(root.join("RUN_REPORT_obs.json"), &report_json) {
+        Ok(()) => println!("wrote {}", root.join("RUN_REPORT_obs.json").display()),
+        Err(e) => eprintln!("could not write RUN_REPORT_obs.json: {e}"),
+    }
+    let perfetto = obs::perfetto::chrome_trace(
+        "obs_overhead synth run",
+        &all_spans,
+        &rec.step_windows(),
+        None,
+        None,
+    );
+    match std::fs::write(root.join("PERFETTO_obs.json"), &perfetto) {
+        Ok(()) => println!("wrote {}", root.join("PERFETTO_obs.json").display()),
+        Err(e) => eprintln!("could not write PERFETTO_obs.json: {e}"),
+    }
+
+    // ---- JSON at the repo root (tracked trajectory) ----
+    let mut out = String::new();
+    out.push_str("{\n  \"bench\": \"obs_overhead\",\n  \"schema\": 1,\n");
+    let _ = writeln!(out, "  \"quick\": {quick},");
+    let _ = writeln!(
+        out,
+        "  \"rows\": {ROWS},\n  \"row_bytes\": {ROW_BYTES},\n  \"out_bytes\": {OUT_BYTES},\n  \"workers\": {WORKERS},"
+    );
+    out.push_str("  \"runs\": [\n");
+    let _ = writeln!(
+        out,
+        "    {{\"scenario\": \"recording_off\", \"mean_ms\": {}, \"p50_ms\": {}}},",
+        json_num(off.mean_ms),
+        json_num(off.p50_ms)
+    );
+    let _ = writeln!(
+        out,
+        "    {{\"scenario\": \"recording_on\", \"mean_ms\": {}, \"p50_ms\": {}, \"overhead_vs_off\": {}}}",
+        json_num(on.mean_ms),
+        json_num(on.p50_ms),
+        json_num(ratio)
+    );
+    out.push_str("  ],\n");
+    let _ = writeln!(
+        out,
+        "  \"calibration\": {{\"samples\": {}, \"transfer_samples\": {}, \"before_mre\": {}, \"after_mre\": {}}}",
+        cal.samples,
+        cal.transfer_samples,
+        json_num(cal.before_mre),
+        json_num(cal.after_mre)
+    );
+    out.push_str("}\n");
+    let path = root.join("BENCH_obs_overhead.json");
+    match std::fs::write(&path, out) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}

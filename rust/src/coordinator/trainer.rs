@@ -34,9 +34,12 @@
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::costmodel::{self, CostModel};
 use crate::data::SyntheticCorpus;
 use crate::error::{Error, Result};
 use crate::faults::{DeviceLostPolicy, FaultConfig, FaultInjector};
+use crate::memory::DeviceModel;
+use crate::obs::{self, Recorder};
 use crate::rowir::{self, interp, Graph, InterpOutcome, RowProgram, Task};
 use crate::runtime::manifest::Manifest;
 use crate::runtime::{ExecBackend, ExecHandle, Runtime, Tensor, TensorView};
@@ -314,9 +317,48 @@ impl StepPlan {
         x: &Tensor,
         y1h: &Tensor,
     ) -> Result<(f32, Vec<Tensor>, InterpOutcome)> {
+        self.step_serial_recorded(ex, program, params, x, y1h, None)
+    }
+
+    /// [`StepPlan::step_serial`] with span recording: every interpreted
+    /// node lands in `rec` as a worker-0/device-0 span (the serial driver
+    /// has no admission ledger, so `in_flight_bytes` is 0).  Recording
+    /// is strictly observational — node order and results are untouched.
+    pub fn step_serial_recorded(
+        &self,
+        ex: &dyn ExecBackend,
+        program: &RowProgram,
+        params: &ParamSet,
+        x: &Tensor,
+        y1h: &Tensor,
+        rec: Option<&Recorder>,
+    ) -> Result<(f32, Vec<Tensor>, InterpOutcome)> {
         let cells = self.make_cells()?;
-        let outcome = interp::run(program, |_, task| {
-            run_task(ex, &self.kind, params, x, y1h, &cells, task)
+        let graph = program.graph();
+        let outcome = interp::run(program, |id, task| {
+            let t0 = rec.map(|r| r.now_ns());
+            let out = run_task(ex, &self.kind, params, x, y1h, &cells, task);
+            if let (Some(r), Some(start)) = (rec, t0) {
+                let node = graph.node(id);
+                r.push(
+                    0,
+                    obs::Span {
+                        node: id,
+                        kind: node.kind,
+                        label: node.label.clone(),
+                        device: 0,
+                        worker: 0,
+                        attempt: 1,
+                        phase: r.phase(),
+                        step: r.step(),
+                        bytes: node.est_bytes,
+                        in_flight_bytes: 0,
+                        start_ns: start,
+                        dur_ns: r.now_ns().saturating_sub(start),
+                    },
+                );
+            }
+            out
         })?;
         let (loss, grads) = take_result(&cells)?;
         Ok((loss, grads, outcome))
@@ -345,16 +387,39 @@ impl StepPlan {
         x: &Tensor,
         y1h: &Tensor,
     ) -> Result<(f32, Vec<Tensor>, ExecOutcome)> {
+        self.step_pipelined_recorded(ex, program, params, cfg, shard, x, y1h, None)
+    }
+
+    /// [`StepPlan::step_pipelined`] with span recording, threading `rec`
+    /// into whichever pool runs the step (`sched::run_recorded` or
+    /// [`ShardState::run_step_recorded`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn step_pipelined_recorded(
+        &self,
+        ex: &dyn ExecBackend,
+        program: &RowProgram,
+        params: &ParamSet,
+        cfg: &SchedConfig,
+        shard: Option<&mut ShardState>,
+        x: &Tensor,
+        y1h: &Tensor,
+        rec: Option<&Recorder>,
+    ) -> Result<(f32, Vec<Tensor>, ExecOutcome)> {
         let cells = self.make_cells()?;
         let outcome = match shard {
-            Some(ss) => ss.run_step(|task| {
+            Some(ss) => ss.run_step_recorded(rec, |task| {
                 run_task(ex, &self.kind, params, x, y1h, &cells, task)
             }),
             None => {
                 let graph = program.graph();
-                sched::run(graph, cfg, |id| {
-                    run_task(ex, &self.kind, params, x, y1h, &cells, graph.node(id).task)
-                })
+                sched::run_recorded(
+                    graph,
+                    cfg,
+                    |id| {
+                        run_task(ex, &self.kind, params, x, y1h, &cells, graph.node(id).task)
+                    },
+                    rec,
+                )
             }
         }?;
         let (loss, grads) = take_result(&cells)?;
@@ -584,10 +649,27 @@ impl ShardState {
     where
         F: Fn(Task) -> Result<()> + Sync,
     {
+        self.run_step_recorded(None, run)
+    }
+
+    /// [`ShardState::run_step`] with span recording: every dispatch of
+    /// every phase lands in `rec` (tagged with the recorder's current
+    /// step), and the phase tag is bumped on each recovery re-partition
+    /// so spans remain attributable after node ids change meaning.
+    /// Recording is strictly observational — `None` takes the identical
+    /// code path.
+    pub fn run_step_recorded<F>(&mut self, rec: Option<&Recorder>, run: F) -> Result<ExecOutcome>
+    where
+        F: Fn(Task) -> Result<()> + Sync,
+    {
         self.last_lost.clear();
         self.last_recomputed = 0;
         let step_no = self.step_no;
         self.step_no += 1;
+        let mut phase = 0u32;
+        if let Some(r) = rec {
+            r.set_phase(phase);
+        }
 
         let mut include = vec![true; self.plan.graph().len()];
         // finished mask over the *base* graph, accumulated across phases
@@ -602,6 +684,7 @@ impl ShardState {
                 injector: self.faults.injector.as_ref(),
                 retry: self.faults.retry,
                 step: step_no,
+                recorder: rec,
             };
             let graph = self.plan.graph();
             let ran = self.exec.run_step_faulty(&self.plan, &include, faults, |id| {
@@ -681,6 +764,10 @@ impl ShardState {
                         next.iter().filter(|&&b| b).count() as u64;
                     include = next;
                     self.plan = plan;
+                    phase += 1;
+                    if let Some(r) = rec {
+                        r.set_phase(phase);
+                    }
                 }
             }
         }
@@ -730,6 +817,20 @@ impl SchedState {
     }
 }
 
+/// Telemetry carried by a recording trainer ([`Trainer::set_recording`]):
+/// the span [`Recorder`] every driver writes into, the [`obs::RunReport`]
+/// accumulated step by step, the [`CostModel`] used for makespan
+/// predictions (replaced in place by [`Trainer::calibrate`]), and every
+/// drained span — kept because calibration and the Perfetto export both
+/// need the whole run.
+struct ObsState {
+    recorder: Recorder,
+    report: obs::RunReport,
+    model: CostModel,
+    spans: Vec<obs::Span>,
+    step_no: u32,
+}
+
 /// Row-centric trainer over an artifact bundle.
 pub struct Trainer<'r> {
     pub rt: &'r Runtime,
@@ -749,9 +850,12 @@ pub struct Trainer<'r> {
     faults: FaultConfig,
     /// The lowered row program (`None` only for a naive-infeasible plan).
     program: Option<RowProgram>,
-    /// Event trace of the most recent pipelined step (per-device lanes
-    /// via `TraceEvent::device`).
+    /// Event trace of the most recent step (per-device lanes via
+    /// `TraceEvent::device`; the serial driver synthesizes its
+    /// single-worker ledger-replay trace).
     last_trace: Option<Trace>,
+    /// Telemetry (`None` until [`Trainer::set_recording`]).
+    obs: Option<ObsState>,
 }
 
 impl<'r> Trainer<'r> {
@@ -791,6 +895,7 @@ impl<'r> Trainer<'r> {
             faults: FaultConfig::default(),
             program,
             last_trace: None,
+            obs: None,
         })
     }
 
@@ -823,6 +928,11 @@ impl<'r> Trainer<'r> {
         // a prior step's trace belongs to the previous plan's graph;
         // keeping it would let trace_json pair it with the new one
         self.last_trace = None;
+        // likewise the recorder's lane count and the report's
+        // devices/cost-model context — re-arm recording from scratch
+        if self.obs.is_some() {
+            self.set_recording(true);
+        }
         Ok(())
     }
 
@@ -872,6 +982,107 @@ impl<'r> Trainer<'r> {
         Some(trace.to_json(graph))
     }
 
+    /// Turn span recording + run-report accumulation on (fresh state) or
+    /// off.  The recorder gets one lane per configured worker; the report
+    /// and its prediction [`CostModel`] are sized from the active sched
+    /// configuration, so call this *after* [`Trainer::set_sched`]
+    /// (reconfiguring re-arms recording automatically, discarding the
+    /// previous report).  Recording is strictly observational — results
+    /// stay bit-identical to a non-recording run.
+    pub fn set_recording(&mut self, on: bool) {
+        if !on {
+            self.obs = None;
+            return;
+        }
+        let workers = self.sched.cfg.workers.max(1);
+        let (devices, model) = match self.sched.shard.as_ref() {
+            Some(ss) => {
+                let model = match ss.topology() {
+                    Some(topo) => CostModel::from_topology(topo),
+                    None => CostModel::analytic(
+                        &vec![DeviceModel::rtx3090(); ss.plan.devices()],
+                        DeviceModel::rtx3090().pcie_bytes_per_sec,
+                    ),
+                };
+                (ss.plan.devices(), model)
+            }
+            None => (
+                1,
+                CostModel::analytic(
+                    &[DeviceModel::rtx3090()],
+                    DeviceModel::rtx3090().pcie_bytes_per_sec,
+                ),
+            ),
+        };
+        let mode = self.plan.mode.label();
+        self.obs = Some(ObsState {
+            recorder: Recorder::new(workers),
+            report: obs::RunReport::new(
+                format!("train {mode} ({:?})", self.sched.cfg.policy),
+                mode,
+                workers,
+                devices,
+            ),
+            model,
+            spans: Vec::new(),
+            step_no: 0,
+        });
+    }
+
+    /// Whether span recording is armed.
+    pub fn recording(&self) -> bool {
+        self.obs.is_some()
+    }
+
+    /// The run report accumulated since recording was armed.
+    pub fn run_report(&self) -> Option<&obs::RunReport> {
+        self.obs.as_ref().map(|o| &o.report)
+    }
+
+    /// The run report as versioned JSON (what `--report-out` writes).
+    pub fn report_json(&self) -> Option<String> {
+        self.obs.as_ref().map(|o| o.report.to_json())
+    }
+
+    /// Every span recorded since recording was armed (drained per step,
+    /// in [`Recorder::drain`] order).
+    pub fn spans(&self) -> &[obs::Span] {
+        self.obs.as_ref().map_or(&[], |o| o.spans.as_slice())
+    }
+
+    /// The prediction cost model currently in use (analytic until
+    /// [`Trainer::calibrate`] replaces it with the fitted one).
+    pub fn cost_model(&self) -> Option<&CostModel> {
+        self.obs.as_ref().map(|o| &o.model)
+    }
+
+    /// Least-squares fit of the cost model over every recorded span
+    /// ([`costmodel::calibrate`]).  Installs the fitted model — later
+    /// steps are predicted with it — and stores the report in the run
+    /// report's `calibration` section.
+    pub fn calibrate(&mut self) -> Option<costmodel::CalibrationReport> {
+        let o = self.obs.as_mut()?;
+        let (fitted, rep) = costmodel::calibrate(&o.spans, &o.model);
+        o.model = fitted;
+        o.report.set_calibration(rep.clone());
+        Some(rep)
+    }
+
+    /// The unified Perfetto/Chrome trace of the recorded run (what
+    /// `--perfetto-out` writes): execution lanes + per-device in-flight
+    /// counters from the spans, retry/loss markers from the most recent
+    /// step's event trace.
+    pub fn perfetto_json(&self) -> Option<String> {
+        let o = self.obs.as_ref()?;
+        Some(obs::perfetto::chrome_trace(
+            &o.report.title,
+            &o.spans,
+            &o.recorder.step_windows(),
+            self.last_trace.as_ref(),
+            None,
+        ))
+    }
+
     /// One training step on (x, y); returns the loss.
     pub fn step(&mut self, x: &Tensor, y1h: &Tensor) -> Result<StepStats> {
         let t0 = Instant::now();
@@ -884,8 +1095,25 @@ impl<'r> Trainer<'r> {
             (_, None) => return Err(Error::Sched("step plan was never lowered".into())),
         };
         let pipelined = self.sched.cfg.policy == Policy::Pipelined;
+        // makespan prediction under the step's (pre-fault) plan; the
+        // single-device list schedule is the serial sum, the honest
+        // reference for the serial and plain-pipelined drivers
+        let predicted_s = self.obs.as_ref().map(|o| match self.sched.shard.as_ref() {
+            Some(ss) if pipelined => {
+                o.model
+                    .makespan(ss.plan.graph(), ss.plan.device_of(), ss.plan.devices())
+            }
+            _ => {
+                let g = program.graph();
+                o.model.makespan(g, &vec![0; g.len()], 1)
+            }
+        });
+        if let Some(o) = self.obs.as_ref() {
+            o.recorder.begin_step(o.step_no);
+        }
+        let rec = self.obs.as_ref().map(|o| &o.recorder);
         let (loss, grads, peak_bytes, device_peaks, retries, backoff_s) = if pipelined {
-            let (loss, grads, outcome) = self.plan.step_pipelined(
+            let (loss, grads, outcome) = self.plan.step_pipelined_recorded(
                 self.rt,
                 program,
                 &self.params,
@@ -893,6 +1121,7 @@ impl<'r> Trainer<'r> {
                 self.sched.shard.as_mut(),
                 x,
                 y1h,
+                rec,
             )?;
             let peak = outcome.peak_bytes;
             let device_peaks = outcome.device_peaks.clone();
@@ -901,8 +1130,14 @@ impl<'r> Trainer<'r> {
             (loss, grads, peak, device_peaks, retries, backoff_s)
         } else {
             let (loss, grads, outcome) =
-                self.plan.step_serial(self.rt, program, &self.params, x, y1h)?;
+                self.plan
+                    .step_serial_recorded(self.rt, program, &self.params, x, y1h, rec)?;
             let peak = outcome.peak_bytes;
+            // the serial driver emits no pool events; synthesize the
+            // single-worker trace replaying the interpreter's ledger so
+            // `--trace-out` works (and `check_complete` holds) in serial
+            // mode too
+            self.last_trace = Some(Trace::serial(program.graph()));
             (loss, grads, peak, vec![peak], 0, 0.0)
         };
         let (lost_devices, recomputed_nodes) = match &self.sched.shard {
@@ -910,7 +1145,7 @@ impl<'r> Trainer<'r> {
             _ => (Vec::new(), 0),
         };
         self.optimizer.step(&mut self.params, &grads)?;
-        Ok(StepStats {
+        let stats = StepStats {
             loss,
             peak_bytes,
             device_peaks,
@@ -920,7 +1155,28 @@ impl<'r> Trainer<'r> {
             modeled_backoff_s: backoff_s,
             lost_devices,
             recomputed_nodes,
-        })
+        };
+        if let Some(o) = self.obs.as_mut() {
+            o.recorder.end_step();
+            let spans = o.recorder.drain();
+            let input = obs::StepInput {
+                step: o.step_no,
+                loss: stats.loss as f64,
+                peak_bytes: stats.peak_bytes,
+                device_peaks: stats.device_peaks.clone(),
+                step_ms: stats.step_ms,
+                executions: stats.executions,
+                retries: stats.retries,
+                modeled_backoff_s: stats.modeled_backoff_s,
+                lost_devices: stats.lost_devices.len() as u64,
+                recomputed_nodes: stats.recomputed_nodes,
+            };
+            o.report
+                .push_step(&input, &spans, &o.model, predicted_s.unwrap_or(0.0));
+            o.spans.extend(spans);
+            o.step_no += 1;
+        }
+        Ok(stats)
     }
 
     /// Forward-only pass producing z^L (used by tests + quickstart).

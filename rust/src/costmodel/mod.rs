@@ -75,6 +75,245 @@ pub fn list_makespan<'d>(
     span
 }
 
+/// A pluggable cost-model handle: per-device effective seconds-per-byte
+/// plus a latency+bandwidth transfer model.  [`CostModel::analytic`]
+/// reproduces [`node_seconds`] / `Topology::transfer_seconds` exactly;
+/// [`calibrate`] replaces the coefficients with a least-squares fit over
+/// recorded [`crate::obs::Span`]s, so predicted makespans can be checked
+/// — and tightened — against measured wall-clock (docs/OBSERVABILITY.md).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostModel {
+    /// Effective seconds per projected byte, per device lane (analytic
+    /// value: `NODE_FLOPS_PER_BYTE / (flops_per_sec · slab_efficiency)`).
+    pub secs_per_byte: Vec<f64>,
+    /// Fixed per-transfer setup seconds.
+    pub transfer_latency_s: f64,
+    /// Transfer bandwidth, bytes/s (`INFINITY` on 1-device topologies,
+    /// which lower no transfers).
+    pub transfer_bytes_per_sec: f64,
+}
+
+impl CostModel {
+    /// The uncalibrated model over an explicit device list.
+    pub fn analytic(devices: &[DeviceModel], link_bytes_per_sec: f64) -> CostModel {
+        assert!(!devices.is_empty(), "cost model needs at least one device");
+        CostModel {
+            secs_per_byte: devices
+                .iter()
+                .map(|d| NODE_FLOPS_PER_BYTE / (d.flops_per_sec * d.slab_efficiency))
+                .collect(),
+            transfer_latency_s: crate::shard::topology::TRANSFER_SETUP_SEC,
+            transfer_bytes_per_sec: link_bytes_per_sec,
+        }
+    }
+
+    /// The uncalibrated model for a shard topology: per-device rates from
+    /// its `DeviceModel`s, transfer bandwidth the slowest alive peer link.
+    pub fn from_topology(topo: &crate::shard::Topology) -> CostModel {
+        let devices: Vec<DeviceModel> = (0..topo.len()).map(|d| topo.device(d).clone()).collect();
+        let mut bw = f64::INFINITY;
+        for a in 0..topo.len() {
+            for b in (a + 1)..topo.len() {
+                if topo.is_alive(a) && topo.is_alive(b) {
+                    bw = bw.min(topo.link_bytes_per_sec(a, b));
+                }
+            }
+        }
+        CostModel::analytic(&devices, bw)
+    }
+
+    /// Modeled seconds for a compute node of `bytes` projected working
+    /// set on device lane `device` (clamped into the device list).
+    pub fn node_seconds(&self, device: usize, bytes: u64) -> f64 {
+        let k = self
+            .secs_per_byte
+            .get(device)
+            .or_else(|| self.secs_per_byte.last())
+            .copied()
+            .unwrap_or(0.0);
+        bytes as f64 * k
+    }
+
+    /// Modeled seconds to move `bytes` across the peer link.
+    pub fn transfer_seconds(&self, bytes: u64) -> f64 {
+        let wire = bytes as f64 / self.transfer_bytes_per_sec;
+        self.transfer_latency_s + if wire.is_finite() { wire } else { 0.0 }
+    }
+
+    /// Predicted seconds for one recorded span — the per-span currency
+    /// the run report's predicted-vs-measured breakdown compares.
+    pub fn span_seconds(&self, span: &crate::obs::Span) -> f64 {
+        if span.kind == crate::rowir::NodeKind::Transfer {
+            self.transfer_seconds(span.bytes)
+        } else {
+            self.node_seconds(span.device, span.bytes)
+        }
+    }
+
+    /// [`list_makespan`] of a (possibly sharded) graph under this model:
+    /// compute nodes priced per device, `Transfer` nodes priced by the
+    /// link model (they are explicit nodes in a sharded graph, so edge
+    /// costs are zero).  With one device and no transfers this is the
+    /// serial sum — the right reference for the serial driver.
+    pub fn makespan(&self, graph: &crate::rowir::Graph, device_of: &[usize], devices: usize) -> f64 {
+        let node_secs: Vec<f64> = graph
+            .nodes()
+            .iter()
+            .enumerate()
+            .map(|(id, n)| {
+                if n.kind == crate::rowir::NodeKind::Transfer {
+                    self.transfer_seconds(n.est_bytes)
+                } else {
+                    self.node_seconds(device_of[id], n.est_bytes)
+                }
+            })
+            .collect();
+        list_makespan(
+            device_of,
+            &node_secs,
+            devices,
+            |i| graph.node(i).deps.as_slice(),
+            |_, _| 0.0,
+        )
+    }
+}
+
+/// Per-device compute-coefficient fit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceFit {
+    pub device: usize,
+    pub samples: usize,
+    /// Fitted effective seconds per byte.
+    pub secs_per_byte: f64,
+    /// Mean relative per-span error on this device before/after the fit.
+    pub before_mre: f64,
+    pub after_mre: f64,
+}
+
+/// What [`calibrate`] measured and changed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CalibrationReport {
+    /// Spans used (positive duration and bytes; zero-duration synthetic
+    /// fault dispatches are excluded).
+    pub samples: usize,
+    pub transfer_samples: usize,
+    /// Mean relative per-span prediction error over all used spans,
+    /// before and after the fit.
+    pub before_mre: f64,
+    pub after_mre: f64,
+    pub devices: Vec<DeviceFit>,
+}
+
+fn mean_rel_err(model: &CostModel, spans: &[&crate::obs::Span]) -> f64 {
+    if spans.is_empty() {
+        return 0.0;
+    }
+    let sum: f64 = spans
+        .iter()
+        .map(|s| {
+            let meas = s.dur_ns as f64 * 1e-9;
+            (model.span_seconds(s) - meas).abs() / meas
+        })
+        .sum();
+    sum / spans.len() as f64
+}
+
+/// Least-squares fit of the model coefficients over recorded spans.
+///
+/// Compute nodes: per device, minimize the squared *relative* error of
+/// `secs = k · bytes` — with `r_i = bytes_i / secs_i` the closed form is
+/// `k = Σr_i / Σr_i²` (docs/OBSERVABILITY.md derives it).  Transfers:
+/// ordinary least squares of `secs = latency + bytes / bandwidth`, kept
+/// at the base values when the fit is degenerate (< 2 samples, zero
+/// byte variance, or a non-positive slope).  Devices with no samples
+/// keep their analytic coefficient.  Spans with zero duration or zero
+/// bytes are excluded (synthetic fault dispatches never reached a
+/// runner; they carry no timing signal).
+pub fn calibrate(spans: &[crate::obs::Span], base: &CostModel) -> (CostModel, CalibrationReport) {
+    let usable: Vec<&crate::obs::Span> = spans
+        .iter()
+        .filter(|s| s.dur_ns > 0 && s.bytes > 0)
+        .collect();
+    let is_transfer = |s: &crate::obs::Span| s.kind == crate::rowir::NodeKind::Transfer;
+    let n_devices = base
+        .secs_per_byte
+        .len()
+        .max(usable.iter().map(|s| s.device + 1).max().unwrap_or(0));
+
+    let mut fitted = base.clone();
+    fitted.secs_per_byte.resize(n_devices, *base.secs_per_byte.last().unwrap_or(&0.0));
+    let mut devices = Vec::new();
+    for d in 0..n_devices {
+        let on_d: Vec<&crate::obs::Span> = usable
+            .iter()
+            .filter(|s| s.device == d && !is_transfer(s))
+            .copied()
+            .collect();
+        if on_d.is_empty() {
+            continue;
+        }
+        let (mut sum_r, mut sum_r2) = (0.0f64, 0.0f64);
+        for s in &on_d {
+            let r = s.bytes as f64 / (s.dur_ns as f64 * 1e-9);
+            sum_r += r;
+            sum_r2 += r * r;
+        }
+        let k = if sum_r2 > 0.0 { sum_r / sum_r2 } else { fitted.secs_per_byte[d] };
+        let before = mean_rel_err(base, &on_d);
+        fitted.secs_per_byte[d] = k;
+        let after = mean_rel_err(&fitted, &on_d);
+        devices.push(DeviceFit {
+            device: d,
+            samples: on_d.len(),
+            secs_per_byte: k,
+            before_mre: before,
+            after_mre: after,
+        });
+    }
+
+    let transfers: Vec<&crate::obs::Span> =
+        usable.iter().filter(|s| is_transfer(s)).copied().collect();
+    if transfers.len() >= 2 {
+        let n = transfers.len() as f64;
+        let mean_x = transfers.iter().map(|s| s.bytes as f64).sum::<f64>() / n;
+        let mean_y = transfers.iter().map(|s| s.dur_ns as f64 * 1e-9).sum::<f64>() / n;
+        let (mut cov, mut var) = (0.0f64, 0.0f64);
+        for s in &transfers {
+            let dx = s.bytes as f64 - mean_x;
+            let dy = s.dur_ns as f64 * 1e-9 - mean_y;
+            cov += dx * dy;
+            var += dx * dx;
+        }
+        if var > 0.0 && cov > 0.0 {
+            let slope = cov / var;
+            fitted.transfer_bytes_per_sec = 1.0 / slope;
+            fitted.transfer_latency_s = (mean_y - slope * mean_x).max(0.0);
+        } else {
+            // no usable byte/seconds relation: keep the base bandwidth,
+            // refit only the fixed latency
+            let lat = transfers
+                .iter()
+                .map(|s| {
+                    let meas = s.dur_ns as f64 * 1e-9;
+                    let wire = s.bytes as f64 / base.transfer_bytes_per_sec;
+                    meas - wire.min(meas)
+                })
+                .sum::<f64>()
+                / n;
+            fitted.transfer_latency_s = lat.max(0.0);
+        }
+    }
+
+    let report = CalibrationReport {
+        samples: usable.len(),
+        transfer_samples: transfers.len(),
+        before_mre: mean_rel_err(base, &usable),
+        after_mre: mean_rel_err(&fitted, &usable),
+        devices,
+    };
+    (fitted, report)
+}
+
 /// Per-iteration cost counters emitted by a strategy's planner.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct CostCounters {
@@ -216,6 +455,130 @@ mod tests {
             }
         });
         assert_eq!(xfer, 1.5);
+    }
+
+    fn span(kind: crate::rowir::NodeKind, device: usize, bytes: u64, dur_ns: u64) -> crate::obs::Span {
+        crate::obs::Span {
+            node: 0,
+            kind,
+            label: "s".into(),
+            device,
+            worker: 0,
+            attempt: 1,
+            phase: 0,
+            step: 0,
+            bytes,
+            in_flight_bytes: bytes,
+            start_ns: 0,
+            dur_ns,
+        }
+    }
+
+    #[test]
+    fn analytic_model_matches_node_seconds() {
+        let d90 = DeviceModel::rtx3090();
+        let m = CostModel::analytic(&[d90.clone()], 12.0e9);
+        let bytes = 64 << 20;
+        assert!((m.node_seconds(0, bytes) - node_seconds(bytes, &d90)).abs() < 1e-12);
+        // out-of-range device clamps to the last entry instead of panicking
+        assert_eq!(m.node_seconds(7, bytes), m.node_seconds(0, bytes));
+        assert!(m.transfer_seconds(0) >= crate::shard::topology::TRANSFER_SETUP_SEC);
+    }
+
+    #[test]
+    fn from_topology_uses_the_slowest_alive_link() {
+        let t = crate::shard::Topology::uniform(
+            2,
+            DeviceModel::rtx3090(),
+            crate::shard::LinkKind::Pcie,
+        );
+        let m = CostModel::from_topology(&t);
+        assert_eq!(m.secs_per_byte.len(), 2);
+        assert_eq!(m.transfer_bytes_per_sec, DeviceModel::rtx3090().pcie_bytes_per_sec);
+        // a single device lowers no transfers: infinite bandwidth, finite latency
+        let one = CostModel::from_topology(&crate::shard::Topology::uniform(
+            1,
+            DeviceModel::rtx3090(),
+            crate::shard::LinkKind::Pcie,
+        ));
+        assert!(one.transfer_bytes_per_sec.is_infinite());
+        assert!(one.transfer_seconds(1 << 30).is_finite());
+    }
+
+    #[test]
+    fn calibrate_recovers_a_synthetic_compute_rate() {
+        let base = CostModel::analytic(&[DeviceModel::rtx3090()], 12.0e9);
+        // ground truth: 2 ns per byte — orders of magnitude off the
+        // analytic GPU rate, like a CPU stand-in kernel
+        let k_true = 2e-9;
+        let spans: Vec<crate::obs::Span> = [1u64 << 20, 3 << 20, 7 << 20, 11 << 20]
+            .iter()
+            .map(|&b| {
+                span(
+                    crate::rowir::NodeKind::Row,
+                    0,
+                    b,
+                    (b as f64 * k_true * 1e9) as u64,
+                )
+            })
+            .collect();
+        let (fitted, rep) = calibrate(&spans, &base);
+        assert_eq!(rep.samples, 4);
+        assert!((fitted.secs_per_byte[0] - k_true).abs() / k_true < 1e-3);
+        assert!(rep.after_mre < rep.before_mre, "{rep:?}");
+        assert!(rep.after_mre < 1e-3, "{rep:?}");
+        assert_eq!(rep.devices.len(), 1);
+        assert_eq!(rep.devices[0].samples, 4);
+    }
+
+    #[test]
+    fn calibrate_fits_transfer_latency_and_bandwidth() {
+        let base = CostModel::analytic(&[DeviceModel::rtx3090()], 12.0e9);
+        let (lat_true, bw_true) = (50e-6, 1.0e9);
+        let spans: Vec<crate::obs::Span> = [1u64 << 20, 2 << 20, 8 << 20]
+            .iter()
+            .map(|&b| {
+                let secs = lat_true + b as f64 / bw_true;
+                span(crate::rowir::NodeKind::Transfer, 0, b, (secs * 1e9) as u64)
+            })
+            .collect();
+        let (fitted, rep) = calibrate(&spans, &base);
+        assert_eq!(rep.transfer_samples, 3);
+        assert!((fitted.transfer_bytes_per_sec - bw_true).abs() / bw_true < 1e-3);
+        assert!((fitted.transfer_latency_s - lat_true).abs() / lat_true < 1e-2);
+    }
+
+    #[test]
+    fn calibrate_skips_zero_duration_and_unsampled_devices() {
+        let base = CostModel::analytic(
+            &[DeviceModel::rtx3090(), DeviceModel::a100_80g()],
+            12.0e9,
+        );
+        let spans = vec![
+            span(crate::rowir::NodeKind::Row, 0, 1 << 20, 0), // injected-fault dispatch
+            span(crate::rowir::NodeKind::Row, 0, 1 << 20, 2_000_000),
+        ];
+        let (fitted, rep) = calibrate(&spans, &base);
+        assert_eq!(rep.samples, 1);
+        assert_eq!(
+            fitted.secs_per_byte[1], base.secs_per_byte[1],
+            "device 1 had no samples and keeps its analytic rate"
+        );
+        assert_ne!(fitted.secs_per_byte[0], base.secs_per_byte[0]);
+    }
+
+    #[test]
+    fn model_makespan_prices_transfers_as_nodes() {
+        let mut g = crate::rowir::Graph::new();
+        let a = g.push_out(crate::rowir::NodeKind::Row, "a", vec![], 1 << 20, 1 << 10);
+        let t = g.push(crate::rowir::NodeKind::Transfer, "t", vec![a], 1 << 10);
+        g.push(crate::rowir::NodeKind::Row, "b", vec![t], 1 << 20);
+        let m = CostModel::analytic(&[DeviceModel::rtx3090(), DeviceModel::rtx3090()], 12.0e9);
+        let span = m.makespan(&g, &[0, 1, 1], 2);
+        let expect = m.node_seconds(0, 1 << 20)
+            + m.transfer_seconds(1 << 10)
+            + m.node_seconds(1, 1 << 20);
+        assert!((span - expect).abs() < 1e-12, "{span} vs {expect}");
     }
 
     #[test]

@@ -36,6 +36,7 @@
 //! | [`coordinator`] | live row coordinator: prebuilt `StepPlan` exec table + the serial/pipelined/sharded drivers of one `RowProgram`, SGD, training |
 //! | [`data`] | synthetic 10-class corpus |
 //! | [`metrics`] | counters + report tables for the benches |
+//! | [`obs`] | unified run telemetry (docs/OBSERVABILITY.md): timed spans from every driver, versioned `RunReport` JSON, one Perfetto export, cost-model calibration inputs |
 //!
 //! ## Hot path
 //!
@@ -58,6 +59,7 @@ pub mod figures;
 pub mod memory;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod planner;
 pub mod rowir;
 pub mod runtime;

@@ -12,10 +12,11 @@
 //!          validate() each program and emit the node/task/deps/bytes
 //!          JSON (docs/ROWIR.md); nonzero exit on any lowering regression
 //!   train  --mode base|overl-h|2ps|naive [--steps N] [--lr F] [--artifacts DIR]
-//!          [--workers N] [--devices N] [--device-spec SPEC]
+//!          [--demo] [--workers N] [--devices N] [--device-spec SPEC]
 //!          [--policy blocked|balanced|dp] [--link pcie|nvlink]
 //!          [--fault-plan SPEC] [--retry N[:BACKOFF_US]]
 //!          [--on-device-lost fail|degrade] [--trace-out FILE]
+//!          [--report-out FILE] [--perfetto-out FILE]
 //!          — live training on the PJRT artifacts (MiniVGG, synthetic data);
 //!          --workers enables the pipelined scheduler, --devices shards the
 //!          row DAG over N identical RTX 3090s, --device-spec over an
@@ -25,11 +26,18 @@
 //!          faults on the sharded path (`s<step>.<target>=<kind>[*times]`
 //!          grammar or `random:SEED[:COUNT]` — docs/RESILIENCE.md),
 //!          --retry bounds transient-fault redispatches, --on-device-lost
-//!          picks between failing the step and degrading onto survivors
+//!          picks between failing the step and degrading onto survivors.
+//!          --demo runs the offline deterministic backend (no artifact
+//!          bundle needed); --report-out records timed spans and writes the
+//!          versioned RunReport JSON (cost model calibrated over the run —
+//!          docs/OBSERVABILITY.md); --perfetto-out writes the unified
+//!          Perfetto/Chrome trace (execution lanes + counters + markers)
 //!   info   [--artifacts DIR]
 //!          — print the artifact bundle inventory
 //!   trace  --net vgg16 --strategy overl-h [--batch B] [--rows N] [--out FILE]
 //!          — export a plan's memory profile as Chrome trace JSON
+//!   report --in FILE
+//!          — render a `train --report-out` JSON as tables
 //!
 //! Exit codes: 0 success; 2 usage/config; 3 infeasible plan or
 //! out-of-memory; 4 device lost (unrecoverable); 5 transient-retry
@@ -411,7 +419,14 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<(), CliError> {
             );
         }
     }
-    let rt = Runtime::open(dir).map_err(CliError::Run)?;
+    let rt = if flags.contains_key("demo") {
+        if flags.contains_key("artifacts") {
+            eprintln!("warning: --artifacts is ignored with --demo (offline backend)");
+        }
+        Runtime::demo()
+    } else {
+        Runtime::open(dir).map_err(CliError::Run)?
+    };
     println!(
         "platform {} | model {} | mode {}",
         rt.platform(),
@@ -464,8 +479,46 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<(), CliError> {
             );
         }
     }
+    let report_out = flags.get("report-out").filter(|p| !p.is_empty());
+    let perfetto_out = flags.get("perfetto-out").filter(|p| !p.is_empty());
+    if report_out.is_some() || perfetto_out.is_some() {
+        // after set_sched, so the recorder sizes to the final worker pool
+        tr.set_recording(true);
+    }
     let losses =
         train_loop(&mut tr, &corpus, steps, (steps / 20).max(1)).map_err(CliError::Run)?;
+    if report_out.is_some() || perfetto_out.is_some() {
+        // refit the cost model over the recorded spans so the report's
+        // calibration section (before/after error) is populated
+        if let Some(cal) = tr.calibrate() {
+            println!(
+                "calibration: {} span(s) fitted, makespan rel err {:.1}% -> {:.1}%",
+                cal.samples,
+                cal.before_mre * 100.0,
+                cal.after_mre * 100.0
+            );
+        }
+    }
+    if let Some(path) = report_out {
+        match tr.report_json() {
+            Some(json) => {
+                std::fs::write(path, json)
+                    .map_err(|e| CliError::Other(format!("--report-out {path}: {e}")))?;
+                println!("wrote run report to {path} — render with `lr-cnn report --in {path}`");
+            }
+            None => eprintln!("--report-out: no report recorded"),
+        }
+    }
+    if let Some(path) = perfetto_out {
+        match tr.perfetto_json() {
+            Some(json) => {
+                std::fs::write(path, json)
+                    .map_err(|e| CliError::Other(format!("--perfetto-out {path}: {e}")))?;
+                println!("wrote unified trace to {path} — open in ui.perfetto.dev");
+            }
+            None => eprintln!("--perfetto-out: no spans recorded"),
+        }
+    }
     if let Some(path) = flags.get("trace-out") {
         match tr.trace_json() {
             Some(json) => {
@@ -473,7 +526,7 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<(), CliError> {
                     .map_err(|e| CliError::Other(format!("--trace-out {path}: {e}")))?;
                 println!("wrote per-device trace to {path}");
             }
-            None => eprintln!("--trace-out: no trace recorded (serial mode?)"),
+            None => eprintln!("--trace-out: no trace recorded (zero steps?)"),
         }
     }
     let head = losses.iter().take(10).sum::<f32>() / losses.len().min(10) as f32;
@@ -566,12 +619,27 @@ fn cmd_trace(flags: &HashMap<String, String>) -> Result<(), String> {
     Ok(())
 }
 
+/// `report --in FILE`: render a `train --report-out` JSON as tables.
+fn cmd_report(flags: &HashMap<String, String>) -> Result<(), String> {
+    let path = flags
+        .get("in")
+        .filter(|p| !p.is_empty())
+        .ok_or("report: pass --in FILE (a `train --report-out` JSON)")?;
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    let rep = lr_cnn::obs::RunReport::from_json(&text).map_err(|e| format!("{path}: {e}"))?;
+    for t in rep.tables() {
+        t.print();
+        println!();
+    }
+    Ok(())
+}
+
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let (cmd, rest) = match args.split_first() {
         Some((c, r)) => (c.as_str(), r.to_vec()),
         None => {
-            eprintln!("usage: lr-cnn <plan|train|info|trace> [flags]");
+            eprintln!("usage: lr-cnn <plan|train|info|trace|report> [flags]");
             return ExitCode::FAILURE;
         }
     };
@@ -581,6 +649,7 @@ fn main() -> ExitCode {
         "train" => cmd_train(&flags),
         "info" => cmd_info(&flags).map_err(CliError::Other),
         "trace" => cmd_trace(&flags).map_err(CliError::Other),
+        "report" => cmd_report(&flags).map_err(CliError::Other),
         other => Err(CliError::Usage(format!("unknown command {other}"))),
     };
     match res {

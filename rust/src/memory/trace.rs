@@ -6,73 +6,81 @@
 //! what matters is the shape and where the peak lands.
 
 use std::collections::HashMap;
-use std::fmt::Write as _;
 
 use super::sim::{Event, Schedule};
 use crate::error::Result;
+use crate::util::json::escape;
 
-/// Render a schedule as a Chrome trace JSON string.
-pub fn to_chrome_trace(s: &Schedule, title: &str) -> Result<String> {
+/// Replay a schedule into its resident-bytes curve: one `(event_index,
+/// resident_bytes)` sample per event, plus the phase slices between
+/// `Mark` events as `(label, start_event, end_event)`.  Shared by
+/// [`to_chrome_trace`] and the unified `obs::perfetto` export.
+pub fn resident_samples(s: &Schedule) -> (Vec<(usize, u64)>, Vec<(String, usize, usize)>) {
     let mut live: HashMap<&str, u64> = HashMap::new();
     let mut cur = 0u64;
-    let mut out = String::from("[\n");
-    let mut phase_start: Option<(String, usize)> = None;
-    let mut first = true;
-    let mut emit = |out: &mut String, json: String| {
-        if !first {
-            out.push_str(",\n");
-        }
-        first = false;
-        out.push_str(&json);
-    };
-    // id and raw string events resolve to the same (name, bytes) currency
-    enum Act<'a> {
-        Alloc(&'a str, u64),
-        Free(&'a str),
-        Mark(&'a str),
-    }
+    let mut samples = Vec::with_capacity(s.events.len());
+    let mut phases: Vec<(String, usize, usize)> = Vec::new();
+    let mut open: Option<(String, usize)> = None;
     for (t, ev) in s.events.iter().enumerate() {
-        let act = match ev {
-            Event::Alloc { id, bytes } => Act::Alloc(id.as_str(), *bytes),
-            Event::AllocId { id, bytes } => Act::Alloc(s.name(*id), *bytes),
-            Event::Free { id } => Act::Free(id.as_str()),
-            Event::FreeId { id } => Act::Free(s.name(*id)),
-            Event::Mark { label } => Act::Mark(label.as_str()),
-            Event::MarkId { id } => Act::Mark(s.name(*id)),
-        };
-        match act {
-            Act::Alloc(id, bytes) => {
-                live.insert(id, bytes);
-                cur += bytes;
+        // id and raw string events resolve to the same (name, bytes) currency
+        match ev {
+            Event::Alloc { id, bytes } => {
+                live.insert(id.as_str(), *bytes);
+                cur += *bytes;
             }
-            Act::Free(id) => {
-                cur -= live.remove(id).unwrap_or(0);
+            Event::AllocId { id, bytes } => {
+                live.insert(s.name(*id), *bytes);
+                cur += *bytes;
             }
-            Act::Mark(label) => {
-                if let Some((prev, start)) = phase_start.take() {
-                    emit(&mut out, format!(
-                        "{{\"name\":{prev:?},\"ph\":\"X\",\"ts\":{start},\"dur\":{},\"pid\":1,\"tid\":1}}",
-                        t - start
-                    ));
+            Event::Free { id } => {
+                cur -= live.remove(id.as_str()).unwrap_or(0);
+            }
+            Event::FreeId { id } => {
+                cur -= live.remove(s.name(*id)).unwrap_or(0);
+            }
+            Event::Mark { .. } | Event::MarkId { .. } => {
+                let label = match ev {
+                    Event::Mark { label } => label.as_str(),
+                    Event::MarkId { id } => s.name(*id),
+                    _ => unreachable!(),
+                };
+                if let Some((prev, start)) = open.take() {
+                    phases.push((prev, start, t));
                 }
-                phase_start = Some((label.to_string(), t));
+                open = Some((label.to_string(), t));
             }
         }
-        emit(&mut out, format!(
+        samples.push((t, cur));
+    }
+    if let Some((label, start)) = open {
+        phases.push((label, start, s.events.len()));
+    }
+    (samples, phases)
+}
+
+/// Render a schedule as a Chrome trace JSON string.  All labels pass
+/// through [`crate::util::json::escape`], so quotes/backslashes/control
+/// characters in buffer or phase names cannot corrupt the output.
+pub fn to_chrome_trace(s: &Schedule, title: &str) -> Result<String> {
+    let (samples, phases) = resident_samples(s);
+    let mut lines: Vec<String> = Vec::new();
+    for (t, cur) in &samples {
+        lines.push(format!(
             "{{\"name\":\"resident\",\"ph\":\"C\",\"ts\":{t},\"pid\":1,\"args\":{{\"bytes\":{cur}}}}}"
         ));
     }
-    if let Some((prev, start)) = phase_start {
-        emit(&mut out, format!(
-            "{{\"name\":{prev:?},\"ph\":\"X\",\"ts\":{start},\"dur\":{},\"pid\":1,\"tid\":1}}",
-            s.events.len() - start
+    for (label, start, end) in &phases {
+        lines.push(format!(
+            "{{\"name\":\"{}\",\"ph\":\"X\",\"ts\":{start},\"dur\":{},\"pid\":1,\"tid\":1}}",
+            escape(label),
+            end - start
         ));
     }
-    let _ = writeln!(
-        out,
-        ",\n{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":1,\"args\":{{\"name\":{title:?}}}}}\n]"
-    );
-    Ok(out)
+    lines.push(format!(
+        "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":1,\"args\":{{\"name\":\"{}\"}}}}",
+        escape(title)
+    ));
+    Ok(format!("[\n{}\n]\n", lines.join(",\n")))
 }
 
 #[cfg(test)]
@@ -105,6 +113,44 @@ mod tests {
             .map(|e| e.get("name").unwrap().as_str().unwrap())
             .collect();
         assert_eq!(phases, vec!["fp", "bp"]);
+    }
+
+    #[test]
+    fn labels_with_quotes_and_backslashes_escape_cleanly() {
+        let mut s = Schedule::new();
+        s.mark("fp \"quoted\" \\ phase");
+        s.alloc("a", 10);
+        s.free("a");
+        let trace = to_chrome_trace(&s, "ti\ttle \"x\"").unwrap();
+        let v = JsonValue::parse(&trace).expect("valid JSON despite nasty labels");
+        let events = v.as_array().unwrap();
+        let phase = events
+            .iter()
+            .find(|e| e.opt("ph").map(|p| p.as_str().unwrap() == "X").unwrap_or(false))
+            .expect("phase slice present");
+        assert_eq!(
+            phase.get("name").unwrap().as_str().unwrap(),
+            "fp \"quoted\" \\ phase",
+            "label survives the escape round-trip"
+        );
+        let meta = events.last().unwrap();
+        assert_eq!(meta.get("args").unwrap().get("name").unwrap().as_str().unwrap(), "ti\ttle \"x\"");
+    }
+
+    #[test]
+    fn resident_samples_replays_the_curve() {
+        let mut s = Schedule::new();
+        s.mark("fp");
+        s.alloc("a", 100);
+        s.alloc("b", 50);
+        s.mark("bp");
+        s.free("a");
+        s.free("b");
+        let (samples, phases) = resident_samples(&s);
+        assert_eq!(samples.len(), 6);
+        assert_eq!(samples[2], (2, 150), "peak after both allocs");
+        assert_eq!(samples[5], (5, 0), "drains to zero");
+        assert_eq!(phases, vec![("fp".to_string(), 0, 3), ("bp".to_string(), 3, 6)]);
     }
 
     #[test]

@@ -62,11 +62,23 @@ impl Table {
         out
     }
 
+    /// RFC 4180 CSV: cells containing commas, quotes, or line breaks are
+    /// quoted, with embedded quotes doubled; plain cells stay bare.
     pub fn csv(&self) -> String {
-        let mut out = self.headers.join(",");
+        fn cell(s: &str) -> String {
+            if s.contains(',') || s.contains('"') || s.contains('\n') || s.contains('\r') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        }
+        fn line(cells: &[String]) -> String {
+            cells.iter().map(|c| cell(c)).collect::<Vec<_>>().join(",")
+        }
+        let mut out = line(&self.headers);
         out.push('\n');
         for row in &self.rows {
-            out.push_str(&row.join(","));
+            out.push_str(&line(row));
             out.push('\n');
         }
         out
@@ -193,6 +205,67 @@ mod tests {
         assert!(md.contains("### demo"));
         assert!(md.contains("| a | bb |"));
         assert_eq!(t.csv(), "a,bb\n1,2\n");
+    }
+
+    /// Minimal RFC 4180 reader for the round-trip proof: splits records
+    /// on unquoted newlines, fields on unquoted commas, and collapses
+    /// doubled quotes inside quoted fields.
+    fn parse_csv(text: &str) -> Vec<Vec<String>> {
+        let mut rows = Vec::new();
+        let mut row = Vec::new();
+        let mut field = String::new();
+        let mut quoted = false;
+        let mut chars = text.chars().peekable();
+        while let Some(c) = chars.next() {
+            if quoted {
+                match c {
+                    '"' if chars.peek() == Some(&'"') => {
+                        chars.next();
+                        field.push('"');
+                    }
+                    '"' => quoted = false,
+                    c => field.push(c),
+                }
+            } else {
+                match c {
+                    '"' => quoted = true,
+                    ',' => row.push(std::mem::take(&mut field)),
+                    '\n' => {
+                        row.push(std::mem::take(&mut field));
+                        rows.push(std::mem::take(&mut row));
+                    }
+                    c => field.push(c),
+                }
+            }
+        }
+        if !field.is_empty() || !row.is_empty() {
+            row.push(field);
+            rows.push(row);
+        }
+        rows
+    }
+
+    #[test]
+    fn csv_quotes_special_cells_and_round_trips() {
+        let nasty = vec![
+            "plain".to_string(),
+            "has,comma".to_string(),
+            "has \"quote\"".to_string(),
+            "multi\nline".to_string(),
+            "cr\rcell".to_string(),
+        ];
+        let mut t = Table::new(
+            "rfc4180",
+            &["plain", "comma,col", "quote\"col", "nl\ncol", "cr\rcol"],
+        );
+        t.row(nasty.clone());
+        let csv = t.csv();
+        let parsed = parse_csv(&csv);
+        assert_eq!(parsed.len(), 2);
+        assert_eq!(parsed[0], t.headers, "header row survives");
+        assert_eq!(parsed[1], nasty, "data row survives");
+        // plain cells stay unquoted (the historical format is preserved)
+        assert!(csv.starts_with("plain,"));
     }
 
     #[test]

@@ -1,0 +1,284 @@
+//! `obs` — unified run telemetry (docs/OBSERVABILITY.md).
+//!
+//! Every driver of a `RowProgram` (serial `rowir::interp`, the pipelined
+//! worker pool, the sharded executor including its retry/recovery phases)
+//! can record wall-clock [`Span`]s into a [`Recorder`].  Timing is
+//! **strictly observational**: no scheduling decision ever reads a span,
+//! so recording cannot perturb dispatch order and bit-identity to serial
+//! is untouched (the overhead bound is asserted in
+//! `benches/obs_overhead.rs`).
+//!
+//! The recorder is lock-cheap by construction: one `Vec` lane per worker
+//! behind its own mutex, so a worker only ever takes an uncontended lock,
+//! and lanes are merged once at step end by [`Recorder::drain`].
+//!
+//! | module | role |
+//! |---|---|
+//! | [`report`] | versioned [`report::RunReport`] JSON + `metrics::Table` rendering |
+//! | [`perfetto`] | one Perfetto/Chrome trace: execution lanes + resident counters + retry/lost markers |
+
+pub mod perfetto;
+pub mod report;
+
+pub use report::{DeviceTime, KindBreakdown, RunReport, StepInput, StepReport, Totals};
+
+use crate::rowir::{NodeId, NodeKind};
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// One timed dispatch of one graph node by one worker — the unit of
+/// measurement everything in this module aggregates.
+///
+/// Spans are self-contained (label/kind/bytes ride along) because the
+/// sharded recovery path re-partitions between phases: a `node` id is
+/// only meaningful within its phase's graph, so consumers must never
+/// need the graph to interpret a span.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    /// Node id *within the phase's graph* (see note above).
+    pub node: NodeId,
+    pub kind: NodeKind,
+    pub label: String,
+    /// Device lane (0 on the unsharded executors).
+    pub device: usize,
+    /// Worker thread index (0 on the serial driver).
+    pub worker: usize,
+    /// 1-based dispatch attempt (> 1 only after transient retries).
+    pub attempt: u32,
+    /// Recovery phase within the step (0 = the initial dispatch phase).
+    pub phase: u32,
+    /// Step index the span belongs to.
+    pub step: u32,
+    /// The node's projected working set (`Node::est_bytes`).
+    pub bytes: u64,
+    /// Admission in-flight bytes on `device` at dispatch (0 on the
+    /// serial driver, which has no admission ledger).
+    pub in_flight_bytes: u64,
+    /// Start, nanoseconds since the recorder's origin.
+    pub start_ns: u64,
+    /// Wall-clock duration in nanoseconds.  Transfer nodes and
+    /// injected-fault dispatches (which never reach the runner) record
+    /// (near-)zero durations — they exist so span *counts* match
+    /// dispatch counts exactly.
+    pub dur_ns: u64,
+}
+
+impl Span {
+    /// End of the span, nanoseconds since the recorder's origin.
+    pub fn end_ns(&self) -> u64 {
+        self.start_ns + self.dur_ns
+    }
+}
+
+/// One step's wall-clock window (`begin_step`..`end_step`), used by the
+/// nesting property test and the per-step idle-time accounting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StepWindow {
+    pub step: u32,
+    pub start_ns: u64,
+    pub end_ns: u64,
+}
+
+/// Per-worker span lanes with a shared clock origin.
+///
+/// `push` locks only the calling worker's own lane, so recording is
+/// contention-free; the merge happens once per step in [`drain`].
+/// `phase`/`step` are advisory tags the drivers stamp onto spans —
+/// atomics, because the recovery loop bumps `phase` while workers of the
+/// *previous* phase have already quiesced (the executor returns before
+/// the driver re-partitions, so there is no torn read in practice).
+///
+/// [`drain`]: Recorder::drain
+pub struct Recorder {
+    origin: Instant,
+    lanes: Vec<Mutex<Vec<Span>>>,
+    phase: AtomicU32,
+    step: AtomicU32,
+    windows: Mutex<Vec<StepWindow>>,
+}
+
+impl Recorder {
+    /// A recorder with one lane per worker (clamped to ≥ 1).
+    pub fn new(workers: usize) -> Recorder {
+        let lanes = (0..workers.max(1)).map(|_| Mutex::new(Vec::new())).collect();
+        Recorder {
+            origin: Instant::now(),
+            lanes,
+            phase: AtomicU32::new(0),
+            step: AtomicU32::new(0),
+            windows: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Nanoseconds since the recorder's origin.
+    pub fn now_ns(&self) -> u64 {
+        self.origin.elapsed().as_nanos() as u64
+    }
+
+    /// Append a span to `worker`'s lane (wrapped into range, so a caller
+    /// with more workers than lanes still records safely).
+    pub fn push(&self, worker: usize, span: Span) {
+        let lane = worker % self.lanes.len();
+        self.lanes[lane].lock().expect("obs lane poisoned").push(span);
+    }
+
+    /// Current recovery-phase tag (stamped onto spans by the executors).
+    pub fn phase(&self) -> u32 {
+        self.phase.load(Ordering::Relaxed)
+    }
+
+    /// Set the recovery-phase tag; the sharded recovery loop bumps this
+    /// between re-partition phases.
+    pub fn set_phase(&self, p: u32) {
+        self.phase.store(p, Ordering::Relaxed);
+    }
+
+    /// Current step tag.
+    pub fn step(&self) -> u32 {
+        self.step.load(Ordering::Relaxed)
+    }
+
+    /// Open a step window: sets the step tag, resets the phase tag to 0
+    /// and records the window start.
+    pub fn begin_step(&self, step: u32) {
+        self.step.store(step, Ordering::Relaxed);
+        self.phase.store(0, Ordering::Relaxed);
+        let start = self.now_ns();
+        self.windows.lock().expect("obs windows poisoned").push(StepWindow {
+            step,
+            start_ns: start,
+            end_ns: start,
+        });
+    }
+
+    /// Close the most recent step window.
+    pub fn end_step(&self) {
+        let end = self.now_ns();
+        if let Some(w) = self.windows.lock().expect("obs windows poisoned").last_mut() {
+            w.end_ns = end;
+        }
+    }
+
+    /// All recorded step windows, in `begin_step` order.
+    pub fn step_windows(&self) -> Vec<StepWindow> {
+        self.windows.lock().expect("obs windows poisoned").clone()
+    }
+
+    /// Merge and clear every lane.  Spans come back sorted by
+    /// `(step, phase, start_ns, node, attempt)` — a deterministic order
+    /// whenever dispatch itself was deterministic (serial, or one
+    /// worker), and a stable presentation order otherwise.
+    pub fn drain(&self) -> Vec<Span> {
+        let mut all = Vec::new();
+        for lane in &self.lanes {
+            all.append(&mut *lane.lock().expect("obs lane poisoned"));
+        }
+        all.sort_by(|a, b| {
+            (a.step, a.phase, a.start_ns, a.node, a.attempt)
+                .cmp(&(b.step, b.phase, b.start_ns, b.node, b.attempt))
+        });
+        all
+    }
+
+    /// Spans currently buffered across all lanes.
+    pub fn len(&self) -> usize {
+        self.lanes
+            .iter()
+            .map(|l| l.lock().expect("obs lane poisoned").len())
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop all buffered spans and windows; tags reset to 0.
+    pub fn clear(&self) {
+        for lane in &self.lanes {
+            lane.lock().expect("obs lane poisoned").clear();
+        }
+        self.windows.lock().expect("obs windows poisoned").clear();
+        self.phase.store(0, Ordering::Relaxed);
+        self.step.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(node: NodeId, worker: usize, step: u32, start_ns: u64) -> Span {
+        Span {
+            node,
+            kind: NodeKind::Row,
+            label: format!("n{node}"),
+            device: 0,
+            worker,
+            attempt: 1,
+            phase: 0,
+            step,
+            bytes: 1,
+            in_flight_bytes: 1,
+            start_ns,
+            dur_ns: 5,
+        }
+    }
+
+    #[test]
+    fn drain_merges_lanes_in_deterministic_order() {
+        let rec = Recorder::new(2);
+        rec.push(1, span(3, 1, 0, 30));
+        rec.push(0, span(1, 0, 0, 10));
+        rec.push(1, span(2, 1, 0, 10));
+        assert_eq!(rec.len(), 3);
+        let spans = rec.drain();
+        assert!(rec.is_empty());
+        assert_eq!(
+            spans.iter().map(|s| s.node).collect::<Vec<_>>(),
+            vec![1, 2, 3],
+            "ties on start_ns break by node id"
+        );
+        assert_eq!(spans[0].end_ns(), 15);
+    }
+
+    #[test]
+    fn worker_index_wraps_into_lane_range() {
+        let rec = Recorder::new(2);
+        rec.push(7, span(0, 7, 0, 0)); // lands in lane 1, no panic
+        assert_eq!(rec.drain().len(), 1);
+    }
+
+    #[test]
+    fn step_windows_and_tags() {
+        let rec = Recorder::new(1);
+        rec.set_phase(3);
+        rec.begin_step(2);
+        assert_eq!(rec.step(), 2);
+        assert_eq!(rec.phase(), 0, "begin_step resets the phase tag");
+        rec.set_phase(1);
+        assert_eq!(rec.phase(), 1);
+        rec.end_step();
+        let w = rec.step_windows();
+        assert_eq!(w.len(), 1);
+        assert_eq!(w[0].step, 2);
+        assert!(w[0].end_ns >= w[0].start_ns);
+        rec.clear();
+        assert!(rec.step_windows().is_empty());
+        assert_eq!(rec.phase(), 0);
+    }
+
+    #[test]
+    fn spans_sort_by_step_then_phase() {
+        let rec = Recorder::new(1);
+        let mut s1 = span(9, 0, 1, 0);
+        s1.phase = 0;
+        let mut s0 = span(0, 0, 0, 50);
+        s0.phase = 2;
+        rec.push(0, s1);
+        rec.push(0, s0);
+        let spans = rec.drain();
+        assert_eq!(spans[0].step, 0, "step outranks start_ns");
+        assert_eq!(spans[1].step, 1);
+    }
+}

@@ -1,0 +1,279 @@
+//! One Perfetto/Chrome trace for a whole run (open in `ui.perfetto.dev`
+//! or `chrome://tracing`).
+//!
+//! Unifies three previously separate views:
+//!
+//! * **execution lanes** (pid 1, one thread per device) — every recorded
+//!   [`Span`] as a `ph:"X"` slice, step windows on their own lane, and a
+//!   per-device `in-flight bytes` counter sampled at each dispatch;
+//! * **retry / device-loss markers** — instant events lifted from a
+//!   `sched::Trace`, placed at the matching span's end;
+//! * **the memory plan** (pid 2) — `memory::trace`'s resident-bytes
+//!   counter and phase slices.  The plan simulator is untimed, so its
+//!   timestamps are event indices; it lives in its own process lane
+//!   precisely so the two timebases never mix.
+//!
+//! Every label passes through [`crate::util::json::escape`], one event is
+//! emitted per line, and iteration order is fixed by the caller's span
+//! order — so for a deterministic dispatch order the file is
+//! byte-deterministic modulo the timestamp fields.
+
+use super::{Span, StepWindow};
+use crate::memory::trace::resident_samples;
+use crate::memory::Schedule;
+use crate::sched::{Trace, TraceKind};
+use crate::util::json::escape;
+
+/// Thread id used for the step-window lane on pid 1 (devices are their
+/// own tids, so a high sentinel keeps the lanes apart).
+pub const STEP_LANE_TID: usize = 999;
+
+fn us(ns: u64) -> String {
+    format!("{:.3}", ns as f64 / 1e3)
+}
+
+/// Render the unified trace; `sched_trace` contributes retry/loss
+/// markers and `memory_plan` contributes the pid-2 resident counter.
+pub fn chrome_trace(
+    title: &str,
+    spans: &[Span],
+    windows: &[StepWindow],
+    sched_trace: Option<&Trace>,
+    memory_plan: Option<&Schedule>,
+) -> String {
+    let mut lines: Vec<String> = Vec::new();
+
+    // ---- metadata ------------------------------------------------------
+    lines.push(format!(
+        "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":1,\"args\":{{\"name\":\"{} — execution\"}}}}",
+        escape(title)
+    ));
+    let mut devices: Vec<usize> = spans.iter().map(|s| s.device).collect();
+    devices.sort_unstable();
+    devices.dedup();
+    for &d in &devices {
+        lines.push(format!(
+            "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{d},\"args\":{{\"name\":\"device {d}\"}}}}"
+        ));
+    }
+    lines.push(format!(
+        "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{STEP_LANE_TID},\"args\":{{\"name\":\"steps\"}}}}"
+    ));
+
+    // ---- execution slices ---------------------------------------------
+    for s in spans {
+        lines.push(format!(
+            "{{\"name\":\"{}\",\"ph\":\"X\",\"pid\":1,\"tid\":{},\"ts\":{},\"dur\":{},\"args\":{{\
+\"node\":{},\"kind\":\"{:?}\",\"worker\":{},\"attempt\":{},\"phase\":{},\"step\":{},\
+\"bytes\":{},\"in_flight_bytes\":{}}}}}",
+            escape(&s.label),
+            s.device,
+            us(s.start_ns),
+            us(s.dur_ns),
+            s.node,
+            s.kind,
+            s.worker,
+            s.attempt,
+            s.phase,
+            s.step,
+            s.bytes,
+            s.in_flight_bytes,
+        ));
+    }
+    for w in windows {
+        lines.push(format!(
+            "{{\"name\":\"step {}\",\"ph\":\"X\",\"pid\":1,\"tid\":{STEP_LANE_TID},\"ts\":{},\"dur\":{}}}",
+            w.step,
+            us(w.start_ns),
+            us(w.end_ns.saturating_sub(w.start_ns)),
+        ));
+    }
+
+    // ---- per-device in-flight counters --------------------------------
+    for s in spans {
+        lines.push(format!(
+            "{{\"name\":\"in-flight d{}\",\"ph\":\"C\",\"pid\":1,\"ts\":{},\"args\":{{\"bytes\":{}}}}}",
+            s.device,
+            us(s.start_ns),
+            s.in_flight_bytes,
+        ));
+    }
+    for &d in &devices {
+        let end = spans
+            .iter()
+            .filter(|s| s.device == d)
+            .map(|s| s.end_ns())
+            .max()
+            .unwrap_or(0);
+        lines.push(format!(
+            "{{\"name\":\"in-flight d{d}\",\"ph\":\"C\",\"pid\":1,\"ts\":{},\"args\":{{\"bytes\":0}}}}",
+            us(end)
+        ));
+    }
+
+    // ---- retry / loss markers -----------------------------------------
+    if let Some(trace) = sched_trace {
+        for ev in &trace.events {
+            match ev.kind {
+                TraceKind::Retried => {
+                    // place at the end of the attempt's span (injected
+                    // faults record zero-duration spans, so one exists)
+                    let ts = spans
+                        .iter()
+                        .find(|s| s.node == ev.node && s.attempt == ev.attempt)
+                        .map(|s| s.end_ns())
+                        .unwrap_or(0);
+                    lines.push(format!(
+                        "{{\"name\":\"retry n{} a{}\",\"ph\":\"i\",\"s\":\"t\",\"pid\":1,\"tid\":{},\"ts\":{}}}",
+                        ev.node,
+                        ev.attempt,
+                        ev.device,
+                        us(ts)
+                    ));
+                }
+                TraceKind::Lost => {
+                    let ts = spans
+                        .iter()
+                        .filter(|s| s.device == ev.device)
+                        .map(|s| s.end_ns())
+                        .max()
+                        .unwrap_or(0);
+                    lines.push(format!(
+                        "{{\"name\":\"device {} lost\",\"ph\":\"i\",\"s\":\"g\",\"pid\":1,\"tid\":{},\"ts\":{}}}",
+                        ev.device,
+                        ev.device,
+                        us(ts)
+                    ));
+                }
+                _ => {}
+            }
+        }
+    }
+
+    // ---- memory plan (pid 2, event-index timebase) --------------------
+    if let Some(plan) = memory_plan {
+        lines.push(
+            "{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":2,\"args\":{\"name\":\"memory plan\"}}"
+                .to_string(),
+        );
+        let (samples, phases) = resident_samples(plan);
+        for (t, cur) in &samples {
+            lines.push(format!(
+                "{{\"name\":\"resident\",\"ph\":\"C\",\"pid\":2,\"ts\":{t},\"args\":{{\"bytes\":{cur}}}}}"
+            ));
+        }
+        for (label, start, end) in &phases {
+            lines.push(format!(
+                "{{\"name\":\"{}\",\"ph\":\"X\",\"pid\":2,\"tid\":1,\"ts\":{start},\"dur\":{}}}",
+                escape(label),
+                end - start
+            ));
+        }
+    }
+
+    format!("{{\"traceEvents\": [\n{}\n]}}\n", lines.join(",\n"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rowir::NodeKind;
+    use crate::sched::TraceEvent;
+    use crate::util::json::JsonValue;
+
+    fn span(node: usize, device: usize, start_ns: u64, dur_ns: u64, attempt: u32) -> Span {
+        Span {
+            node,
+            kind: if node == 1 { NodeKind::Transfer } else { NodeKind::Row },
+            label: format!("row \"{node}\""),
+            device,
+            worker: 0,
+            attempt,
+            phase: 0,
+            step: 0,
+            bytes: 64,
+            in_flight_bytes: 64,
+            start_ns,
+            dur_ns,
+        }
+    }
+
+    fn demo_trace() -> String {
+        let spans = vec![span(0, 0, 0, 1000, 1), span(1, 1, 1200, 10, 1), span(0, 0, 1300, 900, 2)];
+        let windows = vec![StepWindow {
+            step: 0,
+            start_ns: 0,
+            end_ns: 2500,
+        }];
+        let sched_trace = Trace {
+            events: vec![
+                TraceEvent {
+                    seq: 0,
+                    node: 0,
+                    kind: TraceKind::Retried,
+                    worker: 0,
+                    device: 0,
+                    in_flight_bytes: 64,
+                    attempt: 1,
+                },
+                TraceEvent {
+                    seq: 1,
+                    node: 1,
+                    kind: TraceKind::Lost,
+                    worker: 0,
+                    device: 1,
+                    in_flight_bytes: 0,
+                    attempt: 1,
+                },
+            ],
+        };
+        let mut plan = Schedule::new();
+        plan.mark("fp");
+        plan.alloc("a", 100);
+        plan.free("a");
+        chrome_trace("demo", &spans, &windows, Some(&sched_trace), Some(&plan))
+    }
+
+    #[test]
+    fn unified_trace_parses_and_has_all_lanes() {
+        let json = demo_trace();
+        let v = JsonValue::parse(&json).expect("valid JSON");
+        let events = v.get("traceEvents").unwrap();
+        let events = events.as_array().unwrap();
+        let ph = |p: &str| {
+            events
+                .iter()
+                .filter(|e| e.opt("ph").map(|x| x.as_str().unwrap() == p).unwrap_or(false))
+                .count()
+        };
+        // slices: 3 spans + 1 step window + 1 memory phase
+        assert_eq!(ph("X"), 5);
+        // counters: 3 span samples + 2 device closers + 3 plan samples
+        assert_eq!(ph("C"), 8);
+        // instants: 1 retry + 1 loss
+        assert_eq!(ph("i"), 2);
+        // escaped span label survives
+        assert!(events.iter().any(|e| {
+            e.opt("name").map(|n| n.as_str().unwrap() == "row \"0\"").unwrap_or(false)
+        }));
+        // both processes named
+        let procs: Vec<&str> = events
+            .iter()
+            .filter(|e| e.opt("name").map(|n| n.as_str().unwrap() == "process_name").unwrap_or(false))
+            .map(|e| e.get("args").unwrap().get("name").unwrap().as_str().unwrap())
+            .collect();
+        assert_eq!(procs.len(), 2);
+        assert!(procs[1] == "memory plan");
+    }
+
+    #[test]
+    fn trace_is_byte_deterministic_for_fixed_input() {
+        assert_eq!(demo_trace(), demo_trace());
+    }
+
+    #[test]
+    fn empty_input_still_renders_valid_json() {
+        let json = chrome_trace("empty", &[], &[], None, None);
+        assert!(JsonValue::parse(&json).is_ok(), "{json}");
+    }
+}

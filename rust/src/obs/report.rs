@@ -1,0 +1,722 @@
+//! Versioned per-run report: counters, per-device time accounting and
+//! predicted-vs-measured makespans, merged from `StepStats`-level
+//! numbers and recorded [`Span`]s (schema in docs/OBSERVABILITY.md).
+//!
+//! The JSON is emitted one key per line so the property tests can mask
+//! the timing-derived lines and byte-compare everything else, and it
+//! parses back with [`crate::util::json::JsonValue`] — the `report` CLI
+//! subcommand renders any saved report as [`crate::metrics::Table`]s.
+
+use super::Span;
+use crate::costmodel::{CalibrationReport, CostModel, DeviceFit};
+use crate::error::{Error, Result};
+use crate::metrics::Table;
+use crate::rowir::NodeKind;
+use crate::util::json::{escape, JsonValue};
+
+/// Report schema version (bump on any breaking layout change).
+pub const SCHEMA: u32 = 1;
+
+/// The per-step numbers a driver already has (the trainer copies them
+/// out of its `StepStats`; benches fill them directly) — keeping this a
+/// plain value struct means `obs` never depends on the coordinator.
+#[derive(Debug, Clone, Default)]
+pub struct StepInput {
+    pub step: u32,
+    pub loss: f64,
+    pub peak_bytes: u64,
+    pub device_peaks: Vec<u64>,
+    /// Whole-step wall-clock as the driver measured it (includes
+    /// lowering/optimizer work outside the span window).
+    pub step_ms: f64,
+    pub executions: u64,
+    pub retries: u64,
+    pub modeled_backoff_s: f64,
+    pub lost_devices: u64,
+    pub recomputed_nodes: u64,
+}
+
+/// Predicted-vs-measured for one `NodeKind` within one step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KindBreakdown {
+    pub kind: String,
+    pub spans: usize,
+    pub predicted_s: f64,
+    pub measured_s: f64,
+    /// `|predicted − measured| / measured` (0 when nothing measured).
+    pub rel_err: f64,
+}
+
+/// One step's merged record.
+#[derive(Debug, Clone)]
+pub struct StepReport {
+    pub step: u32,
+    pub loss: f64,
+    pub peak_bytes: u64,
+    pub device_peaks: Vec<u64>,
+    pub step_ms: f64,
+    pub spans: usize,
+    /// Recovery phases observed (1 = no device loss).
+    pub phases: u32,
+    pub retries: u64,
+    /// Modeled makespan of the step's (fault-free) plan.
+    pub predicted_s: f64,
+    /// Span-window wall-clock: latest span end − earliest span start.
+    pub measured_s: f64,
+    pub rel_err: f64,
+    pub kinds: Vec<KindBreakdown>,
+}
+
+/// Per-device time accounting accumulated over the whole run.
+#[derive(Debug, Clone, Default)]
+pub struct DeviceTime {
+    pub device: usize,
+    pub spans: usize,
+    /// Seconds inside compute spans (any phase).
+    pub busy_s: f64,
+    /// Seconds inside `Transfer` spans.
+    pub transfer_s: f64,
+    /// Seconds inside spans of recovery phases (phase > 0); a subset of
+    /// `busy_s`/`transfer_s`, not additional time.
+    pub recovery_s: f64,
+    /// Per-step span-window time minus this device's busy+transfer time,
+    /// summed over steps.
+    pub idle_s: f64,
+    /// Peak admission in-flight bytes observed at any dispatch.
+    pub in_flight_peak: u64,
+}
+
+/// Run-level counters.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Totals {
+    pub steps: usize,
+    pub executions: u64,
+    pub retries: u64,
+    pub modeled_backoff_s: f64,
+    pub lost_devices: u64,
+    pub recomputed_nodes: u64,
+}
+
+/// The whole document.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub schema: u32,
+    pub title: String,
+    pub mode: String,
+    pub workers: usize,
+    pub devices: usize,
+    pub totals: Totals,
+    pub steps: Vec<StepReport>,
+    pub device_time: Vec<DeviceTime>,
+    pub calibration: Option<CalibrationReport>,
+}
+
+const KIND_ORDER: [NodeKind; 4] = [
+    NodeKind::Row,
+    NodeKind::TpsRow,
+    NodeKind::Barrier,
+    NodeKind::Transfer,
+];
+
+fn secs(span: &Span) -> f64 {
+    span.dur_ns as f64 * 1e-9
+}
+
+impl RunReport {
+    pub fn new(
+        title: impl Into<String>,
+        mode: impl Into<String>,
+        workers: usize,
+        devices: usize,
+    ) -> RunReport {
+        let device_time = (0..devices.max(1))
+            .map(|device| DeviceTime {
+                device,
+                ..DeviceTime::default()
+            })
+            .collect();
+        RunReport {
+            schema: SCHEMA,
+            title: title.into(),
+            mode: mode.into(),
+            workers,
+            devices: devices.max(1),
+            totals: Totals::default(),
+            steps: Vec::new(),
+            device_time,
+            calibration: None,
+        }
+    }
+
+    /// Merge one step: the driver's counters, its drained spans, and the
+    /// model's makespan prediction for the step's (fault-free) plan.
+    pub fn push_step(
+        &mut self,
+        input: &StepInput,
+        spans: &[Span],
+        model: &CostModel,
+        predicted_s: f64,
+    ) {
+        for s in spans {
+            if s.device >= self.device_time.len() {
+                for device in self.device_time.len()..=s.device {
+                    self.device_time.push(DeviceTime {
+                        device,
+                        ..DeviceTime::default()
+                    });
+                }
+                self.devices = self.device_time.len();
+            }
+        }
+        let measured_s = match (
+            spans.iter().map(|s| s.start_ns).min(),
+            spans.iter().map(|s| s.end_ns()).max(),
+        ) {
+            (Some(a), Some(b)) => (b - a) as f64 * 1e-9,
+            _ => 0.0,
+        };
+        let rel_err = if measured_s > 0.0 {
+            (predicted_s - measured_s).abs() / measured_s
+        } else {
+            0.0
+        };
+        let phases = spans.iter().map(|s| s.phase + 1).max().unwrap_or(1);
+
+        let mut kinds = Vec::new();
+        for kind in KIND_ORDER {
+            let of_kind: Vec<&Span> = spans.iter().filter(|s| s.kind == kind).collect();
+            if of_kind.is_empty() {
+                continue;
+            }
+            let predicted: f64 = of_kind.iter().map(|s| model.span_seconds(s)).sum();
+            let measured: f64 = of_kind.iter().map(|s| secs(s)).sum();
+            kinds.push(KindBreakdown {
+                kind: format!("{kind:?}"),
+                spans: of_kind.len(),
+                predicted_s: predicted,
+                measured_s: measured,
+                rel_err: if measured > 0.0 {
+                    (predicted - measured).abs() / measured
+                } else {
+                    0.0
+                },
+            });
+        }
+
+        // per-device accounting for this step
+        let mut step_busy = vec![0.0f64; self.device_time.len()];
+        for s in spans {
+            let dt = &mut self.device_time[s.device];
+            dt.spans += 1;
+            if s.kind == NodeKind::Transfer {
+                dt.transfer_s += secs(s);
+            } else {
+                dt.busy_s += secs(s);
+            }
+            if s.phase > 0 {
+                dt.recovery_s += secs(s);
+            }
+            dt.in_flight_peak = dt.in_flight_peak.max(s.in_flight_bytes);
+            step_busy[s.device] += secs(s);
+        }
+        for (d, busy) in step_busy.iter().enumerate() {
+            self.device_time[d].idle_s += (measured_s - busy).max(0.0);
+        }
+
+        self.totals.steps += 1;
+        self.totals.executions += input.executions;
+        self.totals.retries += input.retries;
+        self.totals.modeled_backoff_s += input.modeled_backoff_s;
+        self.totals.lost_devices += input.lost_devices;
+        self.totals.recomputed_nodes += input.recomputed_nodes;
+
+        self.steps.push(StepReport {
+            step: input.step,
+            loss: input.loss,
+            peak_bytes: input.peak_bytes,
+            device_peaks: input.device_peaks.clone(),
+            step_ms: input.step_ms,
+            spans: spans.len(),
+            phases,
+            retries: input.retries,
+            predicted_s,
+            measured_s,
+            rel_err,
+            kinds,
+        });
+    }
+
+    pub fn set_calibration(&mut self, cal: CalibrationReport) {
+        self.calibration = Some(cal);
+    }
+
+    /// Mean relative makespan-prediction error over the run's steps.
+    pub fn mean_makespan_rel_err(&self) -> f64 {
+        if self.steps.is_empty() {
+            return 0.0;
+        }
+        self.steps.iter().map(|s| s.rel_err).sum::<f64>() / self.steps.len() as f64
+    }
+
+    // ---- JSON ----------------------------------------------------------
+
+    pub fn to_json(&self) -> String {
+        fn num(v: f64) -> String {
+            if v.is_finite() {
+                format!("{v}")
+            } else {
+                "null".into()
+            }
+        }
+        fn u64s(v: &[u64]) -> String {
+            let items: Vec<String> = v.iter().map(|p| p.to_string()).collect();
+            format!("[{}]", items.join(", "))
+        }
+        let mut o = String::new();
+        o.push_str("{\n");
+        o.push_str(&format!("  \"schema\": {},\n", self.schema));
+        o.push_str("  \"kind\": \"lr-cnn-run-report\",\n");
+        o.push_str(&format!("  \"title\": \"{}\",\n", escape(&self.title)));
+        o.push_str(&format!("  \"mode\": \"{}\",\n", escape(&self.mode)));
+        o.push_str(&format!("  \"workers\": {},\n", self.workers));
+        o.push_str(&format!("  \"devices\": {},\n", self.devices));
+        o.push_str("  \"totals\": {\n");
+        o.push_str(&format!("    \"steps\": {},\n", self.totals.steps));
+        o.push_str(&format!("    \"executions\": {},\n", self.totals.executions));
+        o.push_str(&format!("    \"retries\": {},\n", self.totals.retries));
+        o.push_str(&format!(
+            "    \"modeled_backoff_s\": {},\n",
+            num(self.totals.modeled_backoff_s)
+        ));
+        o.push_str(&format!("    \"lost_devices\": {},\n", self.totals.lost_devices));
+        o.push_str(&format!(
+            "    \"recomputed_nodes\": {}\n",
+            self.totals.recomputed_nodes
+        ));
+        o.push_str("  },\n");
+        o.push_str("  \"steps\": [\n");
+        for (i, s) in self.steps.iter().enumerate() {
+            o.push_str("    {\n");
+            o.push_str(&format!("      \"step\": {},\n", s.step));
+            o.push_str(&format!("      \"loss\": {},\n", num(s.loss)));
+            o.push_str(&format!("      \"peak_bytes\": {},\n", s.peak_bytes));
+            o.push_str(&format!("      \"device_peaks\": {},\n", u64s(&s.device_peaks)));
+            o.push_str(&format!("      \"step_ms\": {},\n", num(s.step_ms)));
+            o.push_str(&format!("      \"spans\": {},\n", s.spans));
+            o.push_str(&format!("      \"phases\": {},\n", s.phases));
+            o.push_str(&format!("      \"retries\": {},\n", s.retries));
+            o.push_str(&format!("      \"predicted_s\": {},\n", num(s.predicted_s)));
+            o.push_str(&format!("      \"measured_s\": {},\n", num(s.measured_s)));
+            o.push_str(&format!("      \"rel_err\": {},\n", num(s.rel_err)));
+            o.push_str("      \"kinds\": [\n");
+            for (j, k) in s.kinds.iter().enumerate() {
+                o.push_str("        {\n");
+                o.push_str(&format!("          \"kind\": \"{}\",\n", escape(&k.kind)));
+                o.push_str(&format!("          \"spans\": {},\n", k.spans));
+                o.push_str(&format!("          \"predicted_s\": {},\n", num(k.predicted_s)));
+                o.push_str(&format!("          \"measured_s\": {},\n", num(k.measured_s)));
+                o.push_str(&format!("          \"rel_err\": {}\n", num(k.rel_err)));
+                o.push_str(if j + 1 < s.kinds.len() { "        },\n" } else { "        }\n" });
+            }
+            o.push_str("      ]\n");
+            o.push_str(if i + 1 < self.steps.len() { "    },\n" } else { "    }\n" });
+        }
+        o.push_str("  ],\n");
+        o.push_str("  \"device_time\": [\n");
+        for (i, d) in self.device_time.iter().enumerate() {
+            o.push_str("    {\n");
+            o.push_str(&format!("      \"device\": {},\n", d.device));
+            o.push_str(&format!("      \"spans\": {},\n", d.spans));
+            o.push_str(&format!("      \"busy_s\": {},\n", num(d.busy_s)));
+            o.push_str(&format!("      \"transfer_s\": {},\n", num(d.transfer_s)));
+            o.push_str(&format!("      \"recovery_s\": {},\n", num(d.recovery_s)));
+            o.push_str(&format!("      \"idle_s\": {},\n", num(d.idle_s)));
+            o.push_str(&format!("      \"in_flight_peak\": {}\n", d.in_flight_peak));
+            o.push_str(if i + 1 < self.device_time.len() { "    },\n" } else { "    }\n" });
+        }
+        o.push_str("  ],\n");
+        match &self.calibration {
+            None => o.push_str("  \"calibration\": null\n"),
+            Some(c) => {
+                o.push_str("  \"calibration\": {\n");
+                o.push_str(&format!("    \"samples\": {},\n", c.samples));
+                o.push_str(&format!("    \"transfer_samples\": {},\n", c.transfer_samples));
+                o.push_str(&format!("    \"before_mre\": {},\n", num(c.before_mre)));
+                o.push_str(&format!("    \"after_mre\": {},\n", num(c.after_mre)));
+                o.push_str("    \"devices\": [\n");
+                for (i, d) in c.devices.iter().enumerate() {
+                    o.push_str("      {\n");
+                    o.push_str(&format!("        \"device\": {},\n", d.device));
+                    o.push_str(&format!("        \"samples\": {},\n", d.samples));
+                    o.push_str(&format!("        \"secs_per_byte\": {},\n", num(d.secs_per_byte)));
+                    o.push_str(&format!("        \"before_mre\": {},\n", num(d.before_mre)));
+                    o.push_str(&format!("        \"after_mre\": {}\n", num(d.after_mre)));
+                    o.push_str(if i + 1 < c.devices.len() { "      },\n" } else { "      }\n" });
+                }
+                o.push_str("    ]\n");
+                o.push_str("  }\n");
+            }
+        }
+        o.push_str("}\n");
+        o
+    }
+
+    pub fn from_json(text: &str) -> Result<RunReport> {
+        fn f64_of(v: &JsonValue) -> Result<f64> {
+            v.as_f64()
+        }
+        fn u64_of(v: &JsonValue) -> Result<u64> {
+            let n = v.as_f64()?;
+            if n < 0.0 || n.fract() != 0.0 {
+                return Err(Error::Json2(format!("expected u64, got {n}")));
+            }
+            Ok(n as u64)
+        }
+        let v = JsonValue::parse(text)?;
+        let schema = v.get("schema")?.as_usize()? as u32;
+        if schema != SCHEMA {
+            return Err(Error::Json2(format!(
+                "run report schema {schema} (this build reads {SCHEMA})"
+            )));
+        }
+        let t = v.get("totals")?;
+        let totals = Totals {
+            steps: t.get("steps")?.as_usize()?,
+            executions: u64_of(t.get("executions")?)?,
+            retries: u64_of(t.get("retries")?)?,
+            modeled_backoff_s: f64_of(t.get("modeled_backoff_s")?)?,
+            lost_devices: u64_of(t.get("lost_devices")?)?,
+            recomputed_nodes: u64_of(t.get("recomputed_nodes")?)?,
+        };
+        let mut steps = Vec::new();
+        for s in v.get("steps")?.as_array()? {
+            let mut kinds = Vec::new();
+            for k in s.get("kinds")?.as_array()? {
+                kinds.push(KindBreakdown {
+                    kind: k.get("kind")?.as_str()?.to_string(),
+                    spans: k.get("spans")?.as_usize()?,
+                    predicted_s: f64_of(k.get("predicted_s")?)?,
+                    measured_s: f64_of(k.get("measured_s")?)?,
+                    rel_err: f64_of(k.get("rel_err")?)?,
+                });
+            }
+            let device_peaks = s
+                .get("device_peaks")?
+                .as_array()?
+                .iter()
+                .map(u64_of)
+                .collect::<Result<Vec<u64>>>()?;
+            steps.push(StepReport {
+                step: s.get("step")?.as_usize()? as u32,
+                loss: f64_of(s.get("loss")?)?,
+                peak_bytes: u64_of(s.get("peak_bytes")?)?,
+                device_peaks,
+                step_ms: f64_of(s.get("step_ms")?)?,
+                spans: s.get("spans")?.as_usize()?,
+                phases: s.get("phases")?.as_usize()? as u32,
+                retries: u64_of(s.get("retries")?)?,
+                predicted_s: f64_of(s.get("predicted_s")?)?,
+                measured_s: f64_of(s.get("measured_s")?)?,
+                rel_err: f64_of(s.get("rel_err")?)?,
+                kinds,
+            });
+        }
+        let mut device_time = Vec::new();
+        for d in v.get("device_time")?.as_array()? {
+            device_time.push(DeviceTime {
+                device: d.get("device")?.as_usize()?,
+                spans: d.get("spans")?.as_usize()?,
+                busy_s: f64_of(d.get("busy_s")?)?,
+                transfer_s: f64_of(d.get("transfer_s")?)?,
+                recovery_s: f64_of(d.get("recovery_s")?)?,
+                idle_s: f64_of(d.get("idle_s")?)?,
+                in_flight_peak: u64_of(d.get("in_flight_peak")?)?,
+            });
+        }
+        let calibration = match v.opt("calibration") {
+            None => None,
+            Some(c) => {
+                let mut devices = Vec::new();
+                for d in c.get("devices")?.as_array()? {
+                    devices.push(DeviceFit {
+                        device: d.get("device")?.as_usize()?,
+                        samples: d.get("samples")?.as_usize()?,
+                        secs_per_byte: f64_of(d.get("secs_per_byte")?)?,
+                        before_mre: f64_of(d.get("before_mre")?)?,
+                        after_mre: f64_of(d.get("after_mre")?)?,
+                    });
+                }
+                Some(CalibrationReport {
+                    samples: c.get("samples")?.as_usize()?,
+                    transfer_samples: c.get("transfer_samples")?.as_usize()?,
+                    before_mre: f64_of(c.get("before_mre")?)?,
+                    after_mre: f64_of(c.get("after_mre")?)?,
+                    devices,
+                })
+            }
+        };
+        Ok(RunReport {
+            schema,
+            title: v.get("title")?.as_str()?.to_string(),
+            mode: v.get("mode")?.as_str()?.to_string(),
+            workers: v.get("workers")?.as_usize()?,
+            devices: v.get("devices")?.as_usize()?,
+            totals,
+            steps,
+            device_time,
+            calibration,
+        })
+    }
+
+    // ---- rendering -----------------------------------------------------
+
+    /// Render the report as printable tables (the `report` subcommand).
+    pub fn tables(&self) -> Vec<Table> {
+        fn ms(v: f64) -> String {
+            format!("{:.3}", v * 1e3)
+        }
+        fn pct(v: f64) -> String {
+            format!("{:.1}%", v * 100.0)
+        }
+        let mut out = Vec::new();
+
+        let mut run = Table::new(format!("run: {}", self.title), &["metric", "value"]);
+        run.row(vec!["mode".into(), self.mode.clone()]);
+        run.row(vec!["workers".into(), self.workers.to_string()]);
+        run.row(vec!["devices".into(), self.devices.to_string()]);
+        run.row(vec!["steps".into(), self.totals.steps.to_string()]);
+        run.row(vec!["executions".into(), self.totals.executions.to_string()]);
+        run.row(vec!["retries".into(), self.totals.retries.to_string()]);
+        run.row(vec![
+            "modeled_backoff_ms".into(),
+            ms(self.totals.modeled_backoff_s),
+        ]);
+        run.row(vec!["lost_devices".into(), self.totals.lost_devices.to_string()]);
+        run.row(vec![
+            "recomputed_nodes".into(),
+            self.totals.recomputed_nodes.to_string(),
+        ]);
+        run.row(vec![
+            "mean_makespan_rel_err".into(),
+            pct(self.mean_makespan_rel_err()),
+        ]);
+        out.push(run);
+
+        let mut steps = Table::new(
+            "steps (predicted vs measured makespan)",
+            &[
+                "step", "loss", "peak_bytes", "step_ms", "spans", "phases", "retries",
+                "predicted_ms", "measured_ms", "rel_err",
+            ],
+        );
+        for s in &self.steps {
+            steps.row(vec![
+                s.step.to_string(),
+                format!("{:.6}", s.loss),
+                s.peak_bytes.to_string(),
+                format!("{:.3}", s.step_ms),
+                s.spans.to_string(),
+                s.phases.to_string(),
+                s.retries.to_string(),
+                ms(s.predicted_s),
+                ms(s.measured_s),
+                pct(s.rel_err),
+            ]);
+        }
+        out.push(steps);
+
+        let mut dev = Table::new(
+            "device time",
+            &[
+                "device", "spans", "busy_ms", "transfer_ms", "recovery_ms", "idle_ms",
+                "in_flight_peak",
+            ],
+        );
+        for d in &self.device_time {
+            dev.row(vec![
+                d.device.to_string(),
+                d.spans.to_string(),
+                ms(d.busy_s),
+                ms(d.transfer_s),
+                ms(d.recovery_s),
+                ms(d.idle_s),
+                d.in_flight_peak.to_string(),
+            ]);
+        }
+        out.push(dev);
+
+        // per-kind error, aggregated across steps in KIND_ORDER
+        let mut agg: Vec<(String, usize, f64, f64)> = Vec::new();
+        for s in &self.steps {
+            for k in &s.kinds {
+                match agg.iter_mut().find(|(name, ..)| *name == k.kind) {
+                    Some((_, n, p, m)) => {
+                        *n += k.spans;
+                        *p += k.predicted_s;
+                        *m += k.measured_s;
+                    }
+                    None => agg.push((k.kind.clone(), k.spans, k.predicted_s, k.measured_s)),
+                }
+            }
+        }
+        let mut kinds = Table::new(
+            "predicted vs measured by node kind",
+            &["kind", "spans", "predicted_ms", "measured_ms", "rel_err"],
+        );
+        for (name, n, p, m) in &agg {
+            let err = if *m > 0.0 { (p - m).abs() / m } else { 0.0 };
+            kinds.row(vec![name.clone(), n.to_string(), ms(*p), ms(*m), pct(err)]);
+        }
+        out.push(kinds);
+
+        if let Some(c) = &self.calibration {
+            let mut cal = Table::new(
+                "cost-model calibration",
+                &["scope", "samples", "secs_per_byte", "before_mre", "after_mre"],
+            );
+            cal.row(vec![
+                "all spans".into(),
+                c.samples.to_string(),
+                "-".into(),
+                pct(c.before_mre),
+                pct(c.after_mre),
+            ]);
+            cal.row(vec![
+                "transfers".into(),
+                c.transfer_samples.to_string(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+            ]);
+            for d in &c.devices {
+                cal.row(vec![
+                    format!("device {}", d.device),
+                    d.samples.to_string(),
+                    format!("{:.3e}", d.secs_per_byte),
+                    pct(d.before_mre),
+                    pct(d.after_mre),
+                ]);
+            }
+            out.push(cal);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::DeviceModel;
+
+    fn span(node: usize, kind: NodeKind, device: usize, start_ns: u64, dur_ns: u64) -> Span {
+        Span {
+            node,
+            kind,
+            label: format!("n{node}"),
+            device,
+            worker: 0,
+            attempt: 1,
+            phase: 0,
+            step: 0,
+            bytes: 1 << 20,
+            in_flight_bytes: 1 << 20,
+            start_ns,
+            dur_ns,
+        }
+    }
+
+    fn demo_report() -> RunReport {
+        let model = CostModel::analytic(&[DeviceModel::rtx3090(), DeviceModel::rtx3090()], 12e9);
+        let mut rep = RunReport::new("unit \"demo\"", "hybrid", 2, 2);
+        let spans = vec![
+            span(0, NodeKind::Row, 0, 0, 1000),
+            span(1, NodeKind::Transfer, 1, 500, 10),
+            span(2, NodeKind::Barrier, 1, 1000, 400),
+        ];
+        rep.push_step(
+            &StepInput {
+                step: 0,
+                loss: 1.5,
+                peak_bytes: 77,
+                device_peaks: vec![50, 27],
+                step_ms: 0.9,
+                executions: 3,
+                retries: 1,
+                modeled_backoff_s: 0.25,
+                lost_devices: 0,
+                recomputed_nodes: 0,
+            },
+            &spans,
+            &model,
+            2.5e-6,
+        );
+        rep
+    }
+
+    #[test]
+    fn push_step_accumulates_device_time_and_kinds() {
+        let rep = demo_report();
+        assert_eq!(rep.totals.steps, 1);
+        assert_eq!(rep.totals.retries, 1);
+        let s = &rep.steps[0];
+        assert_eq!(s.spans, 3);
+        assert_eq!(s.phases, 1);
+        assert!((s.measured_s - 1400e-9).abs() < 1e-15, "{}", s.measured_s);
+        assert!(s.rel_err > 0.0);
+        let kinds: Vec<&str> = s.kinds.iter().map(|k| k.kind.as_str()).collect();
+        assert_eq!(kinds, vec!["Row", "Barrier", "Transfer"], "fixed kind order");
+        assert!((rep.device_time[0].busy_s - 1000e-9).abs() < 1e-15);
+        assert!((rep.device_time[1].transfer_s - 10e-9).abs() < 1e-15);
+        assert!(rep.device_time[1].idle_s > 0.0);
+        assert_eq!(rep.device_time[0].in_flight_peak, 1 << 20);
+    }
+
+    #[test]
+    fn json_round_trips_through_the_parser() {
+        let mut rep = demo_report();
+        rep.set_calibration(CalibrationReport {
+            samples: 2,
+            transfer_samples: 1,
+            before_mre: 10.0,
+            after_mre: 0.01,
+            devices: vec![DeviceFit {
+                device: 0,
+                samples: 1,
+                secs_per_byte: 2e-9,
+                before_mre: 10.0,
+                after_mre: 0.01,
+            }],
+        });
+        let json = rep.to_json();
+        let back = RunReport::from_json(&json).expect("parses");
+        assert_eq!(back.schema, SCHEMA);
+        assert_eq!(back.title, rep.title, "escaped title survives");
+        assert_eq!(back.steps.len(), 1);
+        assert_eq!(back.steps[0].device_peaks, vec![50, 27]);
+        assert_eq!(back.steps[0].kinds.len(), 3);
+        assert_eq!(back.totals, rep.totals);
+        let cal = back.calibration.expect("calibration present");
+        assert_eq!(cal.devices.len(), 1);
+        assert_eq!(cal.devices[0].secs_per_byte, 2e-9);
+        // emitting the parsed report reproduces the bytes exactly
+        assert_eq!(back.to_json(), json);
+    }
+
+    #[test]
+    fn schema_mismatch_is_rejected() {
+        let json = demo_report().to_json().replace("\"schema\": 1", "\"schema\": 9");
+        assert!(RunReport::from_json(&json).is_err());
+    }
+
+    #[test]
+    fn tables_render() {
+        let rep = demo_report();
+        let tables = rep.tables();
+        assert!(tables.len() >= 4);
+        let all: String = tables.iter().map(|t| t.markdown()).collect();
+        assert!(all.contains("predicted vs measured"));
+        assert!(all.contains("device time"));
+        // csv stays parseable even with the quoted title
+        assert!(tables[0].csv().starts_with("metric,value"));
+    }
+}

@@ -103,7 +103,9 @@ std::thread_local! {
 /// additionally requires the real bindings' client/executable types to be
 /// `Send + Sync` (wrap them if the chosen bindings crate's are not).
 pub struct Runtime {
-    client: xla::PjRtClient,
+    /// `None` for the offline demo runtime ([`Runtime::demo`]), which
+    /// executes [`demo_exec`] instead of PJRT.
+    client: Option<xla::PjRtClient>,
     dir: PathBuf,
     pub manifest: Manifest,
     /// Compiled executables, indexed by [`ExecHandle`].  `OnceLock` gives
@@ -124,7 +126,7 @@ impl Runtime {
             .map(|_| OnceLock::new())
             .collect();
         Ok(Runtime {
-            client,
+            client: Some(client),
             dir,
             manifest,
             compiled,
@@ -132,8 +134,35 @@ impl Runtime {
         })
     }
 
+    /// The offline runtime over the shape-accurate demo bundle: no PJRT
+    /// client, no artifacts on disk — `execute_h` runs [`demo_exec`], the
+    /// same deterministic arithmetic the proof suites' fake backend uses,
+    /// so `train --demo` drives the full trainer path (all three drivers,
+    /// recording, reports) end-to-end in any build, including CI's stub.
+    pub fn demo() -> Runtime {
+        let manifest = Manifest::demo(2);
+        let compiled = (0..manifest.executables.len())
+            .map(|_| OnceLock::new())
+            .collect();
+        Runtime {
+            client: None,
+            dir: PathBuf::new(),
+            manifest,
+            compiled,
+            stats: Mutex::new(RuntimeStats::default()),
+        }
+    }
+
+    /// True for the offline demo runtime ([`Runtime::demo`]).
+    pub fn is_demo(&self) -> bool {
+        self.client.is_none()
+    }
+
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        match &self.client {
+            Some(c) => c.platform_name(),
+            None => "demo (offline deterministic backend)".to_string(),
+        }
     }
 
     /// Stats mutex, poisoning-tolerant: a panicked worker must not take
@@ -176,14 +205,17 @@ impl Runtime {
         if cell.get().is_some() {
             return Ok(());
         }
+        // the demo runtime has nothing to compile
+        let Some(client) = &self.client else {
+            return Ok(());
+        };
         let info = &self.manifest.executables[h.0];
         let path = self.dir.join(&info.path);
         let t0 = Instant::now();
         let proto = xla::HloModuleProto::from_text_file(&path)
             .map_err(|e| Error::Artifact(format!("parse {}: {e}", path.display())))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
+        let exe = client
             .compile(&comp)
             .map_err(|e| Error::Runtime(format!("compile {}: {e}", info.name)))?;
         let mut stats = self.lock_stats();
@@ -254,6 +286,15 @@ impl Runtime {
         }
         self.ensure_compiled_h(h)?;
 
+        if self.client.is_none() {
+            let t0 = Instant::now();
+            let out = demo_exec(&self.manifest, h, inputs)?;
+            let mut stats = self.lock_stats();
+            stats.executions += 1;
+            stats.execute_ms += t0.elapsed().as_secs_f64() * 1e3;
+            return Ok(out);
+        }
+
         let t0 = Instant::now();
         let literals: Vec<xla::Literal> = SCRATCH.with(|scratch| {
             let mut scratch = scratch.borrow_mut();
@@ -302,6 +343,63 @@ impl Runtime {
     }
 }
 
+/// Deterministic offline stand-in for one executable call: outputs are a
+/// pure function of the executable identity and every input element
+/// (shape-checked against the manifest signature), so any arg-reorder /
+/// wrong-cache / wrong-slice bug in any driver changes the bits.  This is
+/// the arithmetic behind [`Runtime::demo`] **and** the proof suites' fake
+/// backend — `train --demo` exercises exactly what the bit-identity
+/// matrix proves over.
+pub fn demo_exec(man: &Manifest, h: ExecHandle, args: &[TensorView<'_>]) -> Result<Vec<Tensor>> {
+    let info = man
+        .executables
+        .get(h.index())
+        .ok_or_else(|| Error::Artifact(format!("demo: bad handle {}", h.index())))?;
+    if args.len() != info.inputs.len() {
+        return Err(Error::Artifact(format!(
+            "demo {}: {} args, signature wants {}",
+            info.name,
+            args.len(),
+            info.inputs.len()
+        )));
+    }
+    for (i, (v, expect)) in args.iter().zip(&info.inputs).enumerate() {
+        if v.dims() != expect.as_slice() {
+            return Err(Error::Artifact(format!(
+                "demo {}: input {i} shape {:?} != {:?}",
+                info.name,
+                v.dims(),
+                expect
+            )));
+        }
+    }
+    // position-weighted checksum over all inputs, in arg order
+    let mut acc = 0.0f32;
+    for (i, v) in args.iter().enumerate() {
+        let mut s = 0.0f32;
+        let mut e = 0usize;
+        for chunk in v.chunks() {
+            for val in chunk {
+                s += val * ((e % 7 + 1) as f32);
+                e += 1;
+            }
+        }
+        acc += s * ((i + 1) as f32) * 0.01;
+    }
+    info.outputs
+        .iter()
+        .enumerate()
+        .map(|(k, shape)| {
+            let n: usize = shape.iter().product();
+            let base = (h.index() * 31 + k * 7) as f32 * 0.001;
+            let data = (0..n)
+                .map(|j| ((j % 13) as f32) * 0.01 + (base + acc * 0.25).sin() * 0.1)
+                .collect();
+            Tensor::new(shape.clone(), data)
+        })
+        .collect()
+}
+
 /// Build a PJRT literal from a (possibly strided) view.  Contiguous views
 /// are single-copy straight from the parent storage; strided views gather
 /// into `scratch` first (reused across calls, so the steady state performs
@@ -344,5 +442,34 @@ mod tests {
         assert_send_sync::<Runtime>();
         assert_send_sync::<&Runtime>();
         assert_send_sync::<&dyn ExecBackend>();
+    }
+
+    /// The demo runtime works in every build (no PJRT, no disk): compile
+    /// is a no-op, execution is `demo_exec`, and stats count it.
+    #[test]
+    fn demo_runtime_executes_offline() {
+        let rt = Runtime::demo();
+        assert!(rt.is_demo());
+        assert!(rt.platform().contains("demo"));
+        rt.compile_all().expect("demo compile is a no-op");
+        let h = rt.handle("head").expect("demo bundle has a head");
+        let info = &rt.manifest.executables[h.index()];
+        let ins: Vec<Tensor> = info
+            .inputs
+            .iter()
+            .map(|s| Tensor::zeros(s))
+            .collect();
+        let views: Vec<TensorView> = ins.iter().map(|t| t.view()).collect();
+        let out = rt.execute_h(h, &views).expect("demo executes");
+        assert_eq!(out.len(), info.outputs.len());
+        // deterministic: same inputs, same bits
+        let again = rt.execute_h(h, &views).unwrap();
+        for (a, b) in out.iter().zip(&again) {
+            assert_eq!(a.data, b.data);
+        }
+        assert_eq!(rt.stats().executions, 2);
+        // direct demo_exec agrees with the runtime path
+        let direct = demo_exec(&rt.manifest, h, &views).unwrap();
+        assert_eq!(direct[0].data, out[0].data);
     }
 }

@@ -94,6 +94,23 @@ pub fn run<F>(graph: &Graph, cfg: &SchedConfig, runner: F) -> Result<ExecOutcome
 where
     F: Fn(NodeId) -> Result<()> + Sync,
 {
+    run_recorded(graph, cfg, runner, None)
+}
+
+/// [`run`], with optional wall-clock span recording into an
+/// [`obs::Recorder`](crate::obs::Recorder).  Recording is strictly
+/// observational — the span clock is read outside the state lock and no
+/// scheduling decision consults it, so dispatch order (and therefore
+/// bit-identity to the unrecorded run) is untouched.
+pub fn run_recorded<F>(
+    graph: &Graph,
+    cfg: &SchedConfig,
+    runner: F,
+    rec: Option<&crate::obs::Recorder>,
+) -> Result<ExecOutcome>
+where
+    F: Fn(NodeId) -> Result<()> + Sync,
+{
     graph.validate()?;
     let n = graph.len();
     if n == 0 {
@@ -136,7 +153,7 @@ where
             let cv = &cv;
             let succ = &succ;
             let runner = &runner;
-            scope.spawn(move || worker_loop(w, graph, succ, state, cv, runner));
+            scope.spawn(move || worker_loop(w, graph, succ, state, cv, runner, rec));
         }
     });
 
@@ -169,6 +186,7 @@ fn worker_loop<F>(
     state: &Mutex<State>,
     cv: &Condvar,
     runner: &F,
+    rec: Option<&crate::obs::Recorder>,
 ) where
     F: Fn(NodeId) -> Result<()> + Sync,
 {
@@ -216,7 +234,9 @@ fn worker_loop<F>(
         let is_transfer = graph.node(id).task.is_transfer();
         st.admission.admit(est);
         st.record(id, TraceKind::Dispatched, w);
+        let in_flight = st.admission.in_flight();
         drop(st);
+        let t0 = rec.map(|r| r.now_ns());
 
         // A panic must not unwind past this frame: it would skip the grant
         // release and the notify below, leaving sibling workers parked in
@@ -243,6 +263,27 @@ fn worker_loop<F>(
                     )))
                 })
         };
+
+        if let (Some(r), Some(start)) = (rec, t0) {
+            let node = graph.node(id);
+            r.push(
+                w,
+                crate::obs::Span {
+                    node: id,
+                    kind: node.kind,
+                    label: node.label.clone(),
+                    device: 0,
+                    worker: w,
+                    attempt: 1,
+                    phase: r.phase(),
+                    step: r.step(),
+                    bytes: est,
+                    in_flight_bytes: in_flight,
+                    start_ns: start,
+                    dur_ns: r.now_ns().saturating_sub(start),
+                },
+            );
+        }
 
         st = match state.lock() {
             Ok(g) => g,
@@ -492,6 +533,37 @@ mod tests {
         seen[a].take("seen").unwrap();
         assert!(seen[t].take("seen").is_err(), "transfer skipped the runner");
         seen[2].take("seen").unwrap();
+    }
+
+    /// Recording is observational: one span per dispatched node (transfers
+    /// included), the canonical trace matches the unrecorded run, and
+    /// spans carry the admission in-flight bytes seen at dispatch.
+    #[test]
+    fn recorded_run_captures_one_span_per_node() {
+        use crate::obs::Recorder;
+        let dag = fan_dag(5, 10);
+        let rec = Recorder::new(4);
+        rec.begin_step(3);
+        let out = run_recorded(&dag, &cfg(4, u64::MAX), |_| Ok(()), Some(&rec)).unwrap();
+        rec.end_step();
+        out.trace.check_complete(&dag).unwrap();
+        let spans = rec.drain();
+        assert_eq!(spans.len(), dag.len(), "one span per node");
+        let mut nodes: Vec<NodeId> = spans.iter().map(|s| s.node).collect();
+        nodes.sort_unstable();
+        assert_eq!(nodes, (0..dag.len()).collect::<Vec<_>>());
+        for s in &spans {
+            assert_eq!(s.step, 3);
+            assert_eq!(s.phase, 0);
+            assert_eq!(s.attempt, 1);
+            assert!(s.in_flight_bytes >= s.bytes, "grant visible at dispatch");
+        }
+        let w = rec.step_windows();
+        assert_eq!(w.len(), 1);
+        assert!(spans.iter().all(|s| s.start_ns >= w[0].start_ns && s.end_ns() <= w[0].end_ns));
+        // unrecorded run is canonically identical
+        let plain = run(&dag, &cfg(4, u64::MAX), |_| Ok(())).unwrap();
+        assert_eq!(plain.trace.canonical(), out.trace.canonical());
     }
 
     #[test]

@@ -32,7 +32,7 @@ pub mod trace;
 
 pub use crate::rowir::{Graph, Node, NodeId, NodeKind, Task};
 pub use admission::{Admission, RetryPolicy};
-pub use executor::{run, ExecOutcome, Slot};
+pub use executor::{run, run_recorded, ExecOutcome, Slot};
 pub use trace::{Trace, TraceEvent, TraceKind};
 
 use crate::memory::DeviceModel;

@@ -14,6 +14,7 @@
 use crate::error::{Error, Result};
 
 use crate::rowir::{Graph, NodeId};
+use crate::util::json::escape;
 
 /// What happened to a node.  `Ord` follows a node's lifecycle so the
 /// canonical sort reads naturally.
@@ -62,6 +63,56 @@ pub struct Trace {
 }
 
 impl Trace {
+    /// Synthesize the trace of a **serial** run of `graph`: the single
+    /// worker dispatches and finishes every node in id order, replaying
+    /// the serial interpreter's byte ledger so `in_flight_bytes` tracks
+    /// the exact resident-set checkpoints the interpreter peaks over
+    /// (working set at dispatch; working set plus the parked output at
+    /// finish, *before* consumed dep outputs are released).  The result
+    /// always passes [`Trace::check_complete`], which is what makes
+    /// `--trace-out` meaningful on the serial driver.
+    pub fn serial(graph: &Graph) -> Trace {
+        let n = graph.len();
+        let mut left = vec![0u32; n];
+        for node in graph.nodes() {
+            for &d in &node.deps {
+                left[d] += 1;
+            }
+        }
+        let mut cur = 0u64;
+        let mut events = Vec::with_capacity(2 * n);
+        let mut seq = 0u64;
+        let mut ev = |seq: &mut u64, node: NodeId, kind: TraceKind, in_flight: u64| {
+            events.push(TraceEvent {
+                seq: *seq,
+                node,
+                kind,
+                worker: 0,
+                device: 0,
+                in_flight_bytes: in_flight,
+                attempt: 1,
+            });
+            *seq += 1;
+        };
+        for id in 0..n {
+            let node = graph.node(id);
+            cur += node.est_bytes;
+            ev(&mut seq, id, TraceKind::Dispatched, cur);
+            cur -= node.est_bytes;
+            if left[id] > 0 && node.out_bytes > 0 {
+                cur += node.out_bytes;
+            }
+            ev(&mut seq, id, TraceKind::Finished, cur);
+            for &d in &node.deps {
+                left[d] -= 1;
+                if left[d] == 0 && graph.node(d).out_bytes > 0 {
+                    cur -= graph.node(d).out_bytes;
+                }
+            }
+        }
+        Trace { events }
+    }
+
     /// Deterministic view: `(node, kind)` pairs sorted — identical across
     /// runs of the same DAG regardless of worker count or timing.
     pub fn canonical(&self) -> Vec<(NodeId, TraceKind)> {
@@ -195,7 +246,7 @@ impl Trace {
                 out,
                 "    {{\"id\": {id}, \"label\": \"{}\", \"kind\": \"{:?}\", \
                  \"est_bytes\": {}, \"out_bytes\": {}, \"device\": {}, \"deps\": [{}]}}",
-                node.label,
+                escape(&node.label),
                 node.kind,
                 node.est_bytes,
                 node.out_bytes,
@@ -231,7 +282,7 @@ impl Trace {
             let _ = write!(
                 out,
                 "    {{\"id\": {id}, \"label\": \"{}\", \"bytes\": {}, \"device\": {}}}",
-                graph.node(id).label,
+                escape(&graph.node(id).label),
                 graph.node(id).est_bytes,
                 dev[id]
             );
@@ -342,6 +393,47 @@ mod tests {
         };
         assert!(lost.check_complete(&dag).is_err());
         assert_eq!(lost.retries(), 0);
+    }
+
+    #[test]
+    fn serial_trace_is_complete_and_replays_the_interp_ledger() {
+        // a(est 10, out 4) -> b(est 6, out 2) -> c(est 3)
+        let mut dag = Graph::new();
+        let a = dag.push_out(NodeKind::Row, "a", vec![], 10, 4);
+        let b = dag.push_out(NodeKind::Row, "b", vec![a], 6, 2);
+        dag.push(NodeKind::Barrier, "c", vec![b], 3);
+        let t = Trace::serial(&dag);
+        t.check_complete(&dag).expect("serial trace is a clean run");
+        assert_eq!(t.events.len(), 6, "dispatch + finish per node");
+        let flights: Vec<u64> = t.events.iter().map(|e| e.in_flight_bytes).collect();
+        // a: dispatch 10; finish parks out 4.  b: dispatch 4+6; finish
+        // parks 2 with a's 4 not yet released.  c: dispatch 2+3; finish
+        // leaves b's parked 2 (released after the event).
+        assert_eq!(flights, vec![10, 4, 10, 6, 5, 2]);
+        assert_eq!(t.max_in_flight(), 10, "matches the interp peak");
+        assert_eq!(t.retries(), 0);
+    }
+
+    #[test]
+    fn serial_trace_of_single_node_graph() {
+        let mut dag = Graph::new();
+        dag.push(NodeKind::Row, "only", vec![], 7);
+        let t = Trace::serial(&dag);
+        t.check_complete(&dag).expect("clean");
+        assert_eq!(t.max_in_flight(), 7);
+    }
+
+    #[test]
+    fn json_escapes_hostile_labels() {
+        let mut dag = Graph::new();
+        let a = dag.push(NodeKind::Row, "row \"0\" \\ fp\nline", vec![], 5);
+        dag.push_out(NodeKind::Transfer, "xfer \"a\"", vec![a], 8, 8);
+        let t = Trace::serial(&dag);
+        let json = t.to_json(&dag);
+        let v = crate::util::json::JsonValue::parse(&json).expect("valid JSON");
+        let nodes = v.get("nodes").unwrap();
+        let label = nodes.as_array().unwrap()[0].get("label").unwrap();
+        assert_eq!(label.as_str().unwrap(), "row \"0\" \\ fp\nline");
     }
 
     #[test]

@@ -55,6 +55,7 @@ use std::thread::JoinHandle;
 
 use crate::error::{Error, Result};
 use crate::faults::{FaultInjector, FaultKind};
+use crate::obs::{Recorder, Span};
 use crate::rowir::NodeId;
 use crate::sched::admission::{Admission, RetryPolicy};
 use crate::sched::trace::{Trace, TraceEvent, TraceKind};
@@ -79,6 +80,11 @@ pub struct FaultArgs<'a> {
     pub retry: RetryPolicy,
     /// Training-step number the injector resolves its schedule against.
     pub step: u64,
+    /// Optional wall-clock span recorder (`obs`).  Strictly
+    /// observational: the clock is read outside the pool lock on the
+    /// normal path and no scheduling decision consults it, so dispatch
+    /// order — and bit-identity to the unrecorded run — is untouched.
+    pub recorder: Option<&'a Recorder>,
 }
 
 impl FaultArgs<'_> {
@@ -88,6 +94,7 @@ impl FaultArgs<'_> {
             injector: None,
             retry: RetryPolicy::default(),
             step: 0,
+            recorder: None,
         }
     }
 }
@@ -118,6 +125,9 @@ struct Step {
     /// Dispatch-level fault injector (kept alive by `run_step_faulty`,
     /// same pin protocol as `plan`/`runner`).
     injector: Option<*const FaultInjector>,
+    /// Span recorder (same pin protocol as `plan`/`runner`; `Recorder`
+    /// is internally synchronized).
+    recorder: Option<*const Recorder>,
     /// Resolved fault schedule for this phase: node id → spec index.
     fault_map: BTreeMap<NodeId, usize>,
     retry: RetryPolicy,
@@ -377,6 +387,7 @@ impl ShardedExecutor {
             plan: plan as *const ShardPlan,
             runner: dyn_runner as *const DynRunner,
             injector: faults.injector.map(|i| i as *const FaultInjector),
+            recorder: faults.recorder.map(|r| r as *const Recorder),
             fault_map,
             retry: faults.retry,
             include: include.to_vec(),
@@ -528,6 +539,32 @@ fn worker_loop(w: usize, shared: &Shared) {
                     job.attempts[id] += 1;
                     job.ledgers[device].admit(est);
                     job.record(id, TraceKind::Dispatched, w, device);
+                    if let Some(rp) = job.recorder {
+                        // SAFETY: the step (and its recorder borrow) stays
+                        // alive while the job is published (module docs).
+                        // Zero-duration span: the runner never starts, but
+                        // span counts must match dispatch counts.
+                        let r = unsafe { &*rp };
+                        let node = graph.node(id);
+                        let now = r.now_ns();
+                        r.push(
+                            w,
+                            Span {
+                                node: id,
+                                kind: node.kind,
+                                label: node.label.clone(),
+                                device,
+                                worker: w,
+                                attempt: job.attempts[id],
+                                phase: r.phase(),
+                                step: r.step(),
+                                bytes: est,
+                                in_flight_bytes: job.ledgers[device].in_flight(),
+                                start_ns: now,
+                                dur_ns: 0,
+                            },
+                        );
+                    }
                     job.ledgers[device].release(est);
                     let label = &graph.node(id).label;
                     let e = kind.injected_error(label);
@@ -546,7 +583,13 @@ fn worker_loop(w: usize, shared: &Shared) {
         job.ledgers[device].admit(est);
         job.running += 1;
         job.record(id, TraceKind::Dispatched, w, device);
+        let attempt = job.attempts[id];
+        let in_flight = job.ledgers[device].in_flight();
+        let recorder = job.recorder;
         drop(st);
+        // SAFETY: `running` pins the step's borrows, the recorder included
+        let rec = recorder.map(|r| unsafe { &*r });
+        let t0 = rec.map(|r| r.now_ns());
 
         // run outside the lock; a panic must not skip the bookkeeping
         // below (it would strand parked siblings), so convert it to the
@@ -569,6 +612,27 @@ fn worker_loop(w: usize, shared: &Shared) {
                 Err(Error::Sched(format!("node {id} panicked: {msg}")))
             })
         };
+
+        if let (Some(r), Some(start)) = (rec, t0) {
+            let node = graph.node(id);
+            r.push(
+                w,
+                Span {
+                    node: id,
+                    kind: node.kind,
+                    label: node.label.clone(),
+                    device,
+                    worker: w,
+                    attempt,
+                    phase: r.phase(),
+                    step: r.step(),
+                    bytes: est,
+                    in_flight_bytes: in_flight,
+                    start_ns: start,
+                    dur_ns: r.now_ns().saturating_sub(start),
+                },
+            );
+        }
 
         st = lock(shared);
         let job = match st.job.as_mut() {
@@ -870,6 +934,7 @@ mod tests {
             injector: Some(&inj),
             retry,
             step: 0,
+            recorder: None,
         };
         let out = match run_faulty(&exec, &p, args) {
             StepRun::Done(out) => out,
@@ -894,6 +959,7 @@ mod tests {
                 injector: Some(&inj),
                 retry,
                 step: 1,
+                recorder: None,
             },
         ) {
             StepRun::Done(out) => out,
@@ -915,6 +981,7 @@ mod tests {
                 injector: Some(&inj),
                 retry: RetryPolicy::new(2),
                 step: 0,
+                recorder: None,
             },
             |_| Ok(()),
         );
@@ -941,6 +1008,7 @@ mod tests {
             injector: Some(&inj),
             retry: RetryPolicy::default(),
             step: 0,
+            recorder: None,
         };
         match run_faulty(&exec, &p, args) {
             StepRun::Lost {
@@ -988,6 +1056,52 @@ mod tests {
         assert_eq!(called.load(Ordering::SeqCst), 4, "head, bp0, bp1, reduce");
     }
 
+    /// Recording on the sharded path: every Dispatched trace event —
+    /// including the synthesized dispatches of injected transient faults —
+    /// has exactly one matching span, and the injected-failure spans are
+    /// zero-duration.
+    #[test]
+    fn recorded_faulty_step_matches_dispatch_counts() {
+        let p = plan(4, 2, PartitionPolicy::Blocked);
+        let inj = FaultInjector::new(FaultPlan::parse("s0.nfp1=transient*2").unwrap());
+        let rec = Recorder::new(2);
+        rec.begin_step(0);
+        let exec = ShardedExecutor::new(2);
+        let args = FaultArgs {
+            injector: Some(&inj),
+            retry: RetryPolicy::new(3),
+            step: 0,
+            recorder: Some(&rec),
+        };
+        let out = match run_faulty(&exec, &p, args) {
+            StepRun::Done(out) => out,
+            other => panic!("expected Done, got {other:?}"),
+        };
+        rec.end_step();
+        let spans = rec.drain();
+        let dispatched = out
+            .trace
+            .events
+            .iter()
+            .filter(|e| e.kind == TraceKind::Dispatched)
+            .count();
+        assert_eq!(spans.len(), dispatched, "one span per dispatch, attempts included");
+        let fp1 = p.graph().find("fp1").unwrap();
+        let fp1_spans: Vec<&crate::obs::Span> =
+            spans.iter().filter(|s| s.node == fp1).collect();
+        assert_eq!(fp1_spans.len(), 3, "two failed attempts + the success");
+        let mut attempts: Vec<u32> = fp1_spans.iter().map(|s| s.attempt).collect();
+        attempts.sort_unstable();
+        assert_eq!(attempts, vec![1, 2, 3]);
+        assert!(
+            fp1_spans.iter().filter(|s| s.dur_ns == 0).count() >= 2,
+            "injected-failure dispatches record zero-duration spans"
+        );
+        for s in &spans {
+            assert_eq!(s.device, p.device_of()[s.node], "span carries the plan's device");
+        }
+    }
+
     /// Regression (transfer single-charge): a retried transfer must charge
     /// its destination ledger's parked bytes exactly once.  A double park
     /// would inflate the destination peak and leave residual in-flight
@@ -1010,6 +1124,7 @@ mod tests {
             injector: Some(&inj),
             retry: RetryPolicy::new(3),
             step: 0,
+            recorder: None,
         };
         let out = match run_faulty(&exec, &p, args) {
             StepRun::Done(out) => out,

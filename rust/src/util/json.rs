@@ -10,6 +10,31 @@ use std::fmt;
 
 use crate::error::{Error, Result};
 
+/// Escape `s` for embedding inside a JSON string literal (the emitter
+/// dual of [`JsonValue::parse`]'s string rules).  Every hand-rolled JSON
+/// writer in the crate routes labels and titles through this — raw
+/// interpolation breaks on quotes/backslashes and on Rust's `{:?}`
+/// control-character forms (`\u{8}` is not valid JSON).
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            '\u{8}' => out.push_str("\\b"),
+            '\u{c}' => out.push_str("\\f"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 #[derive(Debug, Clone, PartialEq)]
 pub enum JsonValue {
     Null,
@@ -322,6 +347,24 @@ mod tests {
         assert!(JsonValue::parse("[1,]").is_err());
         assert!(JsonValue::parse("12 34").is_err());
         assert!(JsonValue::parse("\"unterminated").is_err());
+    }
+
+    #[test]
+    fn escape_round_trips_through_the_parser() {
+        // quotes, backslashes, control chars, unicode — the label
+        // alphabet that used to break the raw emitters
+        let nasty = "row \"q\" \\ path\\to\nnl\ttab\r\u{8}\u{c}\u{1}bell\u{7}é日本";
+        let doc = format!("{{\"label\": \"{}\"}}", escape(nasty));
+        let v = JsonValue::parse(&doc).expect("escaped string must parse");
+        assert_eq!(v.get("label").unwrap().as_str().unwrap(), nasty);
+    }
+
+    #[test]
+    fn escape_leaves_plain_text_alone() {
+        assert_eq!(escape("fp.row3[h0:h8]"), "fp.row3[h0:h8]");
+        assert_eq!(escape("a\"b"), "a\\\"b");
+        assert_eq!(escape("a\\b"), "a\\\\b");
+        assert_eq!(escape("\u{1}"), "\\u0001");
     }
 
     #[test]

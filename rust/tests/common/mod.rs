@@ -13,7 +13,7 @@
 #![allow(dead_code)]
 
 use lr_cnn::coordinator::{Mode, Optimizer, ParamSet, ShardState, StepPlan};
-use lr_cnn::error::{Error, Result};
+use lr_cnn::error::Result;
 use lr_cnn::memory::DeviceModel;
 use lr_cnn::rowir::{Graph, NodeId, NodeKind, RowProgram};
 use lr_cnn::runtime::{ExecBackend, ExecHandle, Manifest, Tensor, TensorView};
@@ -44,10 +44,12 @@ pub fn demo_program(mode: Mode) -> (StepPlan, RowProgram) {
     (plan, program)
 }
 
-/// Deterministic stand-in backend: outputs are a pure function of the
-/// executable identity and every input element (shape-checked against
-/// the manifest signature), so any arg-reorder / wrong-cache /
-/// wrong-slice bug in any driver changes the bits.
+/// Deterministic stand-in backend: a thin wrapper over the library's
+/// [`lr_cnn::runtime::demo_exec`] (also what `Runtime::demo` executes),
+/// so the proof suites and `train --demo` run the exact same arithmetic —
+/// outputs are a pure function of the executable identity and every input
+/// element, and any arg-reorder / wrong-cache / wrong-slice bug in any
+/// driver changes the bits.
 pub struct FakeExec {
     pub man: Manifest,
 }
@@ -62,54 +64,7 @@ impl FakeExec {
 
 impl ExecBackend for FakeExec {
     fn exec(&self, h: ExecHandle, args: &[TensorView<'_>]) -> Result<Vec<Tensor>> {
-        let info = self
-            .man
-            .executables
-            .get(h.index())
-            .ok_or_else(|| Error::Artifact(format!("fake: bad handle {}", h.index())))?;
-        if args.len() != info.inputs.len() {
-            return Err(Error::Artifact(format!(
-                "fake {}: {} args, signature wants {}",
-                info.name,
-                args.len(),
-                info.inputs.len()
-            )));
-        }
-        for (i, (v, expect)) in args.iter().zip(&info.inputs).enumerate() {
-            if v.dims() != expect.as_slice() {
-                return Err(Error::Artifact(format!(
-                    "fake {}: input {i} shape {:?} != {:?}",
-                    info.name,
-                    v.dims(),
-                    expect
-                )));
-            }
-        }
-        // position-weighted checksum over all inputs, in arg order
-        let mut acc = 0.0f32;
-        for (i, v) in args.iter().enumerate() {
-            let mut s = 0.0f32;
-            let mut e = 0usize;
-            for chunk in v.chunks() {
-                for val in chunk {
-                    s += val * ((e % 7 + 1) as f32);
-                    e += 1;
-                }
-            }
-            acc += s * ((i + 1) as f32) * 0.01;
-        }
-        info.outputs
-            .iter()
-            .enumerate()
-            .map(|(k, shape)| {
-                let n: usize = shape.iter().product();
-                let base = (h.index() * 31 + k * 7) as f32 * 0.001;
-                let data = (0..n)
-                    .map(|j| ((j % 13) as f32) * 0.01 + (base + acc * 0.25).sin() * 0.1)
-                    .collect();
-                Tensor::new(shape.clone(), data)
-            })
-            .collect()
+        lr_cnn::runtime::demo_exec(&self.man, h, args)
     }
 }
 

@@ -1,0 +1,492 @@
+//! Integration: unified run telemetry (docs/OBSERVABILITY.md) — the
+//! observability properties:
+//!
+//! 1. **Recording never changes the bits.**  Per-step losses and final
+//!    parameters with a live `Recorder` are `to_bits()`-identical to the
+//!    unrecorded serial reference across the whole mode × workers ×
+//!    devices × policy × fault matrix (timing is strictly observational).
+//! 2. **Spans cover every dispatch exactly `attempts` times.**  Per
+//!    phase, the per-node span count equals the per-node `Dispatched`
+//!    count of the executor trace — retries and injected faults
+//!    included.
+//! 3. **Spans nest inside their step's recorder window.**
+//! 4. The serial driver synthesizes a complete single-worker trace
+//!    (`--trace-out` works without `--workers`).
+//! 5. `RunReport` JSON parses with `util::json` and re-emits
+//!    byte-identically; the Perfetto export parses too.
+//! 6. With one worker the report is byte-deterministic modulo the
+//!    timing-derived lines.
+
+mod common;
+
+use common::{
+    assert_bits_equal, demo_manifest, demo_program, run_serial, test_batch, FakeExec,
+    ALL_MODES, ALL_POLICIES,
+};
+
+use lr_cnn::coordinator::{
+    trainer::train_loop, Mode, Optimizer, ParamSet, ShardState, StepPlan, Trainer,
+};
+use lr_cnn::data::SyntheticCorpus;
+use lr_cnn::error::Result;
+use lr_cnn::faults::{DeviceLostPolicy, FaultConfig, FaultPlan};
+use lr_cnn::obs::{Recorder, RunReport, Span};
+use lr_cnn::runtime::Runtime;
+use lr_cnn::sched::{RetryPolicy, SchedConfig, Trace, TraceKind};
+use lr_cnn::shard::ShardConfig;
+use lr_cnn::util::json::JsonValue;
+
+/// One recorded run: per-step losses, final params, and per step the
+/// drained spans plus the executor's trace (final phase under recovery).
+struct Recorded {
+    losses: Vec<f32>,
+    params: ParamSet,
+    steps: Vec<(Vec<Span>, Trace, u64)>, // (spans, trace, retries)
+}
+
+fn run_serial_recorded(mode: Mode, steps: usize, rec: &Recorder) -> Recorded {
+    let man = demo_manifest();
+    let plan = StepPlan::build(&man, mode).unwrap();
+    let program = plan.lower(&man).unwrap();
+    let ex = FakeExec { man: man.clone() };
+    let mut params = ParamSet::init(&man.model, 42);
+    let mut opt = Optimizer::sgd(0.05);
+    let (x, y) = test_batch();
+    let mut out = Recorded {
+        losses: Vec::new(),
+        params: ParamSet::init(&man.model, 42),
+        steps: Vec::new(),
+    };
+    for s in 0..steps {
+        rec.begin_step(s as u32);
+        let (loss, grads, _) = plan
+            .step_serial_recorded(&ex, &program, &params, &x, &y, Some(rec))
+            .unwrap();
+        rec.end_step();
+        opt.step(&mut params, &grads).unwrap();
+        out.losses.push(loss);
+        out.steps
+            .push((rec.drain(), Trace::serial(program.graph()), 0));
+    }
+    out.params = params;
+    out
+}
+
+fn run_pipelined_recorded(mode: Mode, steps: usize, workers: usize, rec: &Recorder) -> Recorded {
+    let man = demo_manifest();
+    let plan = StepPlan::build(&man, mode).unwrap();
+    let program = plan.lower(&man).unwrap();
+    let ex = FakeExec { man: man.clone() };
+    let cfg = SchedConfig::pipelined(workers);
+    let mut params = ParamSet::init(&man.model, 42);
+    let mut opt = Optimizer::sgd(0.05);
+    let (x, y) = test_batch();
+    let mut out = Recorded {
+        losses: Vec::new(),
+        params: ParamSet::init(&man.model, 42),
+        steps: Vec::new(),
+    };
+    for s in 0..steps {
+        rec.begin_step(s as u32);
+        let (loss, grads, outcome) = plan
+            .step_pipelined_recorded(&ex, &program, &params, &cfg, None, &x, &y, Some(rec))
+            .unwrap();
+        rec.end_step();
+        opt.step(&mut params, &grads).unwrap();
+        out.losses.push(loss);
+        out.steps.push((rec.drain(), outcome.trace, outcome.retries));
+    }
+    out.params = params;
+    out
+}
+
+/// The trainer-path sharded driver (`ShardState::build`, recovery
+/// context included) with a live recorder and optional fault knobs.
+fn run_sharded_recorded(
+    mode: Mode,
+    steps: usize,
+    workers: usize,
+    shard: ShardConfig,
+    faults: Option<&FaultConfig>,
+    rec: &Recorder,
+) -> Result<Recorded> {
+    let man = demo_manifest();
+    let plan = StepPlan::build(&man, mode)?;
+    let program = plan.lower(&man)?;
+    let ex = FakeExec { man: man.clone() };
+    let cfg = SchedConfig::pipelined(workers).with_shard(shard);
+    let mut state = ShardState::build(&program, &cfg, 0)?;
+    if let Some(f) = faults {
+        state.set_faults(f);
+    }
+    let mut params = ParamSet::init(&man.model, 42);
+    let mut opt = Optimizer::sgd(0.05);
+    let (x, y) = test_batch();
+    let mut out = Recorded {
+        losses: Vec::new(),
+        params: ParamSet::init(&man.model, 42),
+        steps: Vec::new(),
+    };
+    for s in 0..steps {
+        rec.begin_step(s as u32);
+        let (loss, grads, outcome) = plan.step_pipelined_recorded(
+            &ex,
+            &program,
+            &params,
+            &cfg,
+            Some(&mut state),
+            &x,
+            &y,
+            Some(rec),
+        )?;
+        rec.end_step();
+        opt.step(&mut params, &grads)?;
+        out.losses.push(loss);
+        out.steps.push((rec.drain(), outcome.trace, outcome.retries));
+    }
+    out.params = params;
+    Ok(out)
+}
+
+fn assert_matches_serial(got: &Recorded, mode: Mode, ctx: &str) {
+    let man = demo_manifest();
+    let (serial_losses, serial_params, _) = run_serial(&man, mode, got.losses.len());
+    for (s, (a, b)) in got.losses.iter().zip(&serial_losses).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: loss step {s}");
+    }
+    assert_bits_equal(&got.params, &serial_params, ctx);
+}
+
+/// Assert that the spans of one recovery phase cover every `Dispatched`
+/// trace event exactly once — i.e. per node, span count == dispatch
+/// count, sized over whichever side mentions the larger node id so a
+/// missing span (or a phantom one) can never hide past the array end.
+fn assert_span_coverage(spans: &[Span], phase: u32, trace: &Trace, ctx: &str) {
+    let n = trace
+        .events
+        .iter()
+        .map(|e| e.node + 1)
+        .chain(spans.iter().map(|s| s.node + 1))
+        .max()
+        .unwrap_or(0);
+    let mut dispatched = vec![0u32; n];
+    for e in &trace.events {
+        if e.kind == TraceKind::Dispatched {
+            dispatched[e.node] += 1;
+        }
+    }
+    let mut recorded = vec![0u32; n];
+    for s in spans.iter().filter(|s| s.phase == phase) {
+        recorded[s.node] += 1;
+    }
+    assert_eq!(recorded, dispatched, "{ctx}: spans == dispatches per node");
+    // and per node the attempts are exactly 1..=count (each dispatch is
+    // covered by its own attempt, no duplicates, no gaps)
+    for node in 0..n {
+        let mut attempts: Vec<u32> = spans
+            .iter()
+            .filter(|s| s.phase == phase && s.node == node)
+            .map(|s| s.attempt)
+            .collect();
+        attempts.sort_unstable();
+        let want: Vec<u32> = (1..=dispatched[node]).collect();
+        assert_eq!(attempts, want, "{ctx}: node {node} attempt sequence");
+    }
+}
+
+// ---- 1. recording never changes the bits -------------------------------
+
+#[test]
+fn recording_never_changes_the_bits() {
+    let steps = 2usize;
+    for mode in ALL_MODES {
+        let serial = run_serial_recorded(mode, steps, &Recorder::new(1));
+        assert_matches_serial(&serial, mode, &format!("{mode:?} serial+rec"));
+
+        for workers in [1usize, 3] {
+            let piped = run_pipelined_recorded(mode, steps, workers, &Recorder::new(workers));
+            assert_matches_serial(&piped, mode, &format!("{mode:?} w{workers}+rec"));
+        }
+
+        for devices in [2usize, 4] {
+            for policy in ALL_POLICIES {
+                let ctx = format!("{mode:?} d{devices} {policy:?}+rec");
+                let got = run_sharded_recorded(
+                    mode,
+                    steps,
+                    2,
+                    ShardConfig::new(devices).with_policy(policy),
+                    None,
+                    &Recorder::new(2),
+                )
+                .unwrap_or_else(|e| panic!("{ctx}: {e}"));
+                assert_matches_serial(&got, mode, &ctx);
+            }
+        }
+
+        // seeded-random faults (transients, OOMs, losses) with recovery,
+        // recorder live the whole time
+        for policy in ALL_POLICIES {
+            let ctx = format!("{mode:?} faulty {policy:?}+rec");
+            let faults = FaultConfig {
+                plan: Some(FaultPlan::random(11, steps as u64, 2, 4)),
+                retry: RetryPolicy::new(3),
+                on_device_lost: DeviceLostPolicy::Degrade,
+            };
+            let got = run_sharded_recorded(
+                mode,
+                steps,
+                2,
+                ShardConfig::new(2).with_policy(policy),
+                Some(&faults),
+                &Recorder::new(2),
+            )
+            .unwrap_or_else(|e| panic!("{ctx}: {e}"));
+            assert_matches_serial(&got, mode, &ctx);
+        }
+    }
+}
+
+// ---- 2. spans cover every dispatch exactly `attempts` times -------------
+
+#[test]
+fn spans_cover_every_dispatch_exactly_attempts_times() {
+    // serial: one span per node, id order, attempt 1
+    let (_, program) = demo_program(Mode::RowHybrid);
+    let n = program.graph().len();
+    let rec = Recorder::new(1);
+    let serial = run_serial_recorded(Mode::RowHybrid, 1, &rec);
+    let (spans, _, _) = &serial.steps[0];
+    assert_eq!(spans.len(), n, "serial: one span per node");
+    for (i, s) in spans.iter().enumerate() {
+        assert_eq!((s.node, s.attempt, s.worker, s.device), (i, 1, 0, 0));
+        assert_eq!(s.bytes, program.graph().node(i).est_bytes);
+    }
+
+    // pipelined: span counts == Dispatched counts (all 1, no faults)
+    for workers in [1usize, 3] {
+        let piped = run_pipelined_recorded(Mode::Tps, 2, workers, &Recorder::new(workers));
+        for (step, (spans, trace, _)) in piped.steps.iter().enumerate() {
+            assert_span_coverage(spans, 0, trace, &format!("w{workers} step {step}"));
+            assert!(spans.iter().all(|s| s.attempt == 1 && s.phase == 0));
+            assert!(spans.iter().all(|s| s.step == step as u32));
+        }
+    }
+
+    // sharded with transient retries: every redispatch is a span with a
+    // bumped attempt, and counts still match the trace exactly
+    let faults = FaultConfig {
+        plan: Some(FaultPlan::parse("s0.d0=transient*2").unwrap()),
+        retry: RetryPolicy::new(3),
+        on_device_lost: DeviceLostPolicy::Degrade,
+    };
+    let got = run_sharded_recorded(
+        Mode::RowHybrid,
+        2,
+        2,
+        ShardConfig::new(2),
+        Some(&faults),
+        &Recorder::new(2),
+    )
+    .unwrap();
+    for (step, (spans, trace, retries)) in got.steps.iter().enumerate() {
+        assert_span_coverage(spans, 0, trace, &format!("faulty step {step}"));
+        let redispatches = spans.iter().filter(|s| s.attempt > 1).count() as u64;
+        assert_eq!(redispatches, *retries, "faulty step {step}: retry spans");
+    }
+    assert!(
+        got.steps[0].2 > 0,
+        "the injected transients actually fired"
+    );
+
+    // device loss: recovery phases carry phase > 0 spans, and the final
+    // phase's spans match the returned (final-phase) trace
+    let faults = FaultConfig {
+        plan: Some(FaultPlan::parse("s1.d1=lost").unwrap()),
+        retry: RetryPolicy::default(),
+        on_device_lost: DeviceLostPolicy::Degrade,
+    };
+    let got = run_sharded_recorded(
+        Mode::RowHybrid,
+        3,
+        2,
+        ShardConfig::new(2),
+        Some(&faults),
+        &Recorder::new(2),
+    )
+    .unwrap();
+    let (spans, trace, _) = &got.steps[1];
+    let last_phase = spans.iter().map(|s| s.phase).max().unwrap();
+    assert!(last_phase > 0, "the loss opened a recovery phase");
+    assert!(
+        spans.iter().any(|s| s.phase == 0),
+        "phase-0 spans from before the loss survive"
+    );
+    assert_span_coverage(spans, last_phase, trace, "final recovery phase");
+    // clean steps on either side stay single-phase
+    for step in [0usize, 2] {
+        assert!(got.steps[step].0.iter().all(|s| s.phase == 0), "step {step}");
+    }
+}
+
+// ---- 3. spans nest inside their step window -----------------------------
+
+#[test]
+fn spans_nest_inside_their_step_window() {
+    let rec = Recorder::new(2);
+    let got = run_sharded_recorded(Mode::Tps, 3, 2, ShardConfig::new(2), None, &rec).unwrap();
+    let windows = rec.step_windows();
+    assert_eq!(windows.len(), 3);
+    for (i, w) in windows.iter().enumerate() {
+        assert_eq!(w.step, i as u32);
+        assert!(w.end_ns >= w.start_ns);
+        if i > 0 {
+            assert!(w.start_ns >= windows[i - 1].end_ns, "windows are disjoint");
+        }
+    }
+    for (step, (spans, _, _)) in got.steps.iter().enumerate() {
+        let w = &windows[step];
+        assert!(!spans.is_empty(), "step {step} recorded spans");
+        for s in spans {
+            assert_eq!(s.step, step as u32);
+            assert!(s.start_ns >= w.start_ns, "step {step} node {}", s.node);
+            assert!(s.end_ns() <= w.end_ns, "step {step} node {}", s.node);
+        }
+    }
+}
+
+// ---- 4. the serial driver synthesizes a complete trace ------------------
+
+#[test]
+fn serial_driver_synthesizes_a_complete_trace() {
+    // library level: the synthetic trace replays the interpreter exactly
+    for mode in ALL_MODES {
+        let (_, program) = demo_program(mode);
+        let t = Trace::serial(program.graph());
+        t.check_complete(program.graph())
+            .unwrap_or_else(|e| panic!("{mode:?}: {e}"));
+        assert!(t.events.iter().all(|e| e.worker == 0 && e.device == 0));
+    }
+    // trainer level: `--trace-out` has something to write in serial mode
+    let rt = Runtime::demo();
+    let m = rt.manifest.model.clone();
+    let corpus = SyntheticCorpus::new(m.n_classes, 3, m.h, m.w, 1234);
+    let mut tr = Trainer::new(&rt, Mode::RowHybrid, 0.02, 7).unwrap();
+    train_loop(&mut tr, &corpus, 2, 1).unwrap();
+    let json = tr.trace_json().expect("serial trace synthesized");
+    JsonValue::parse(&json).expect("serial trace JSON parses");
+}
+
+// ---- 5. RunReport round-trips; Perfetto parses --------------------------
+
+#[test]
+fn run_report_round_trips_and_perfetto_parses() {
+    let rt = Runtime::demo();
+    let m = rt.manifest.model.clone();
+    let corpus = SyntheticCorpus::new(m.n_classes, 3, m.h, m.w, 1234);
+    let mut tr = Trainer::new(&rt, Mode::RowHybrid, 0.02, 7).unwrap();
+    tr.set_sched(SchedConfig::pipelined(2).with_shard(ShardConfig::new(2)))
+        .unwrap();
+    tr.set_recording(true);
+    train_loop(&mut tr, &corpus, 3, 1).unwrap();
+
+    let cal = tr.calibrate().expect("recording armed");
+    assert!(cal.samples > 0, "compute spans were fitted");
+    assert!(
+        cal.after_mre < cal.before_mre,
+        "calibration reduces the error: {} -> {}",
+        cal.before_mre,
+        cal.after_mre
+    );
+
+    let report = tr.run_report().unwrap();
+    assert_eq!(report.totals.steps, 3);
+    assert!(report.steps.iter().all(|s| s.spans > 0));
+    assert!(report.calibration.is_some());
+    assert!(!report.tables().is_empty());
+
+    // JSON: parses with the in-tree parser and re-emits byte-identically
+    let json = tr.report_json().unwrap();
+    JsonValue::parse(&json).expect("report JSON parses");
+    let back = RunReport::from_json(&json).expect("report JSON loads");
+    assert_eq!(back.to_json(), json, "from_json -> to_json is byte-exact");
+
+    // Perfetto: valid JSON with a populated traceEvents array
+    let pf = tr.perfetto_json().unwrap();
+    let v = JsonValue::parse(&pf).expect("perfetto JSON parses");
+    let events = v.get("traceEvents").unwrap().as_array().unwrap();
+    assert!(!events.is_empty());
+    let phases: Vec<&str> = events
+        .iter()
+        .map(|e| e.get("ph").unwrap().as_str().unwrap())
+        .collect();
+    assert!(phases.contains(&"X"), "duration events present");
+    assert!(phases.contains(&"M"), "lane metadata present");
+}
+
+// ---- 6. byte-determinism modulo timing ----------------------------------
+
+/// Mask the timing-derived lines of a one-key-per-line report JSON.
+fn normalized(report: &str) -> String {
+    const TIMING: [&str; 14] = [
+        "step_ms",
+        "predicted_s",
+        "measured_s",
+        "rel_err",
+        "busy_s",
+        "transfer_s",
+        "recovery_s",
+        "idle_s",
+        "before_mre",
+        "after_mre",
+        "secs_per_byte",
+        "modeled_backoff_s",
+        "samples",
+        "transfer_samples",
+    ];
+    report
+        .lines()
+        .map(|line| {
+            let key = line
+                .trim_start()
+                .strip_prefix('"')
+                .and_then(|rest| rest.split('"').next());
+            match key {
+                Some(k) if TIMING.contains(&k) => {
+                    let cut = line.find(':').map(|i| i + 1).unwrap_or(line.len());
+                    format!("{}<t>", &line[..cut])
+                }
+                _ => line.to_string(),
+            }
+        })
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+#[test]
+fn one_worker_reports_are_byte_deterministic_modulo_timing() {
+    let run = || {
+        let rt = Runtime::demo();
+        let m = rt.manifest.model.clone();
+        let corpus = SyntheticCorpus::new(m.n_classes, 3, m.h, m.w, 1234);
+        let mut tr = Trainer::new(&rt, Mode::Tps, 0.02, 7).unwrap();
+        tr.set_sched(SchedConfig::pipelined(1)).unwrap();
+        tr.set_recording(true);
+        train_loop(&mut tr, &corpus, 2, 1).unwrap();
+        let _ = tr.calibrate();
+        let meta: Vec<(usize, u32, u32, u32, u64)> = tr
+            .spans()
+            .iter()
+            .map(|s| (s.node, s.attempt, s.phase, s.step, s.bytes))
+            .collect();
+        (tr.report_json().unwrap(), meta)
+    };
+    let (a, ma) = run();
+    let (b, mb) = run();
+    assert_eq!(ma, mb, "span structure is deterministic with one worker");
+    assert_eq!(
+        normalized(&a),
+        normalized(&b),
+        "report bytes differ outside the timing lines"
+    );
+}

@@ -1,0 +1,168 @@
+#!/usr/bin/env python3
+"""Bench regression gate: compare repo-root BENCH_*.json against bench/baselines/.
+
+Every bench binary writes a BENCH_<name>.json trajectory file at the repo
+root (see the [[bench]] entries in rust/Cargo.toml).  This script pairs
+each of those with bench/baselines/BENCH_<name>.json and fails (exit 1)
+when any matched run entry's ``mean_ms`` regressed by more than
+REGRESSION_PCT versus the baseline.
+
+Matching is schema-agnostic: for every top-level key whose value is a
+list of objects (``runs``, ``ops``, ``pipelined``, ``sharded``,
+``live_steps``...), entries are keyed by their *identity* fields — every
+key except the known timing/derived ones — so adding a scenario to a
+bench never breaks the gate; the new entry is simply unmatched (advisory).
+
+Escape hatches:
+  * a baseline with ``"baseline_seed": true`` is a placeholder checked in
+    before real CI numbers exist — timings are printed, never enforced;
+  * ``BENCH_DIFF_SKIP=1`` skips the whole gate (e.g. a known-noisy runner);
+  * a bench JSON with no baseline file at all is advisory.
+
+Stdlib only; python3.8+.
+"""
+
+import json
+import os
+import sys
+
+REGRESSION_PCT = 20.0  # fail when mean_ms grows past baseline by this much
+
+# Measured / derived fields: never part of an entry's identity, and only
+# mean_ms is gated (p50/p95 and ratios are too noisy on shared runners).
+TIMING_KEYS = {
+    "mean_ms",
+    "p50_ms",
+    "p95_ms",
+    "mean_us",
+    "exec_us",
+    "conv_us",
+    "coord_us",
+    "coord_ms",
+    "speedup",
+    "efficiency",
+    "overhead_vs_off",
+    "overhead_vs_fault_free",
+    "makespan_model_s",
+    "retries",
+    "backoff_s",
+    "peak_bytes",
+    "peak_mb",
+    "device_peaks_mb",
+    "execs_per_step",
+}
+
+
+def identity(entry):
+    """Hashable identity of one run entry: all non-timing fields."""
+    items = []
+    for k in sorted(entry):
+        if k in TIMING_KEYS:
+            continue
+        v = entry[k]
+        if isinstance(v, (list, dict)):
+            v = json.dumps(v, sort_keys=True)
+        items.append((k, v))
+    return tuple(items)
+
+
+def run_entries(doc):
+    """Yield (section, identity, entry) for every list-of-objects section."""
+    for key, val in doc.items():
+        if not (isinstance(val, list) and val and all(isinstance(e, dict) for e in val)):
+            continue
+        for entry in val:
+            if "mean_ms" in entry:
+                yield key, identity(entry), entry
+
+
+def fmt_id(section, ident):
+    parts = ", ".join(f"{k}={v}" for k, v in ident)
+    return f"{section}[{parts}]" if parts else section
+
+
+def diff_one(name, current, baseline):
+    """Compare one bench doc against its baseline; return list of failures."""
+    if baseline.get("baseline_seed"):
+        print(f"  {name}: baseline is a seed placeholder — advisory only")
+        for section, ident, entry in run_entries(current):
+            print(f"    {fmt_id(section, ident)}: mean {entry['mean_ms']:.3f} ms")
+        return []
+
+    base_map = {}
+    for section, ident, entry in run_entries(baseline):
+        base_map[(section, ident)] = entry
+
+    failures = []
+    matched = 0
+    for section, ident, entry in run_entries(current):
+        base = base_map.get((section, ident))
+        label = fmt_id(section, ident)
+        if base is None:
+            print(f"    {label}: no baseline entry (new scenario?) — advisory")
+            continue
+        matched += 1
+        cur_ms, base_ms = entry["mean_ms"], base["mean_ms"]
+        if not (isinstance(base_ms, (int, float)) and base_ms > 0):
+            continue
+        delta_pct = (cur_ms / base_ms - 1.0) * 100.0
+        line = f"    {label}: {base_ms:.3f} -> {cur_ms:.3f} ms ({delta_pct:+.1f}%)"
+        if delta_pct > REGRESSION_PCT:
+            failures.append(f"{name}: {label} regressed {delta_pct:+.1f}% "
+                            f"(limit +{REGRESSION_PCT:.0f}%)")
+            print(line + "  REGRESSION")
+        else:
+            print(line)
+    if matched == 0:
+        print("    (no matching entries between current and baseline)")
+    return failures
+
+
+def main():
+    if os.environ.get("BENCH_DIFF_SKIP") == "1":
+        print("bench_diff: BENCH_DIFF_SKIP=1 — gate skipped")
+        return 0
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    baseline_dir = os.path.join(root, "bench", "baselines")
+
+    names = sorted(
+        f for f in os.listdir(root)
+        if f.startswith("BENCH_") and f.endswith(".json")
+    )
+    if not names:
+        print("bench_diff: no BENCH_*.json at the repo root — run `make bench-*` first")
+        return 0
+
+    failures = []
+    for name in names:
+        with open(os.path.join(root, name)) as fh:
+            try:
+                current = json.load(fh)
+            except ValueError as e:
+                failures.append(f"{name}: unparseable bench JSON: {e}")
+                continue
+        base_path = os.path.join(baseline_dir, name)
+        print(f"{name}:")
+        if not os.path.exists(base_path):
+            print("  no baseline in bench/baselines/ — advisory only")
+            continue
+        with open(base_path) as fh:
+            try:
+                baseline = json.load(fh)
+            except ValueError as e:
+                failures.append(f"{name}: unparseable baseline: {e}")
+                continue
+        failures.extend(diff_one(name, current, baseline))
+
+    if failures:
+        print("\nbench_diff: FAILED")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print("\nbench_diff: ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
