@@ -7,7 +7,7 @@
 
 RUST_MANIFEST := rust/Cargo.toml
 
-.PHONY: build test artifacts ir-dump bench-hotpath bench-hotpath-quick bench-sched bench-sched-quick bench-shard bench-shard-quick bench-fault bench-fault-quick bench-obs bench-obs-quick bench-diff fault-matrix lint
+.PHONY: build test artifacts ir-dump bench-hotpath bench-hotpath-quick bench-sched bench-sched-quick bench-shard bench-shard-quick bench-fault bench-fault-quick bench-obs bench-obs-quick bench-diff arm-baselines fault-matrix lint
 
 build:
 	cargo build --release --manifest-path $(RUST_MANIFEST)
@@ -83,11 +83,22 @@ bench-obs-quick:
 bench-diff:
 	python3 scripts/bench_diff.py
 
+# Promote the current repo-root BENCH_*.json (e.g. downloaded from CI's
+# bench-jsons artifact) into bench/baselines/, stripping the advisory
+# "baseline_seed" flag so the regression gate becomes binding.  Preview
+# with `make arm-baselines ARM_FLAGS=--dry-run`.
+arm-baselines:
+	python3 scripts/arm_baselines.py $(ARM_FLAGS)
+
 # The fault-injection matrix on its own: the seeded random-schedule ×
 # mode × devices × policy bit-identity sweep plus the typed-error and
-# degraded-survivor cases (rust/tests/fault_properties.rs).
+# degraded-survivor cases (rust/tests/fault_properties.rs), and the
+# online-telemetry-loop properties — recalibrate-every-step bit-identity,
+# guarded never-slower repartitioning, crash-report capture
+# (rust/tests/telemetry_loop.rs).
 fault-matrix:
 	cargo test -q --test fault_properties --manifest-path $(RUST_MANIFEST)
+	cargo test -q --test telemetry_loop --manifest-path $(RUST_MANIFEST)
 
 # What CI's lint job runs.
 lint:

@@ -95,6 +95,15 @@ fn main() {
         assert_eq!(spans.len(), dag.len(), "one span per dispatch");
         out
     });
+    // the metrics registry rides inside Recorder::push, so the 5% band
+    // above already prices it; here we check it counted every dispatch
+    let snap = rec.metrics().snapshot();
+    assert_eq!(
+        snap.dispatches,
+        (dag.len() * (warmup + iters)) as u64,
+        "registry counts one dispatch per span across all timed+warmup runs"
+    );
+    assert_eq!(snap.span_ns.count, snap.dispatches, "histogram saw every span");
     let ratio = on.mean_ms / off.mean_ms;
     println!("{}   [×{ratio:.3} vs off]", on.report());
     // the bound: 5% relative, plus an absolute cushion so sub-millisecond
@@ -135,6 +144,9 @@ fn main() {
                 modeled_backoff_s: out.modeled_backoff_s,
                 lost_devices: 0,
                 recomputed_nodes: 0,
+                drift_max: 0.0,
+                drifting: 0,
+                stragglers: Vec::new(),
             },
             &spans,
             &model,
@@ -176,6 +188,7 @@ fn main() {
         "obs_overhead synth run",
         &all_spans,
         &rec.step_windows(),
+        &[],
         None,
         None,
     );

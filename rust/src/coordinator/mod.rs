@@ -28,5 +28,5 @@ pub mod trainer;
 pub use optim::{Optimizer, OptimizerKind};
 pub use params::ParamSet;
 pub use trainer::{
-    naive_row_extents, train_loop, Mode, ShardState, StepPlan, StepStats, Trainer,
+    naive_row_extents, train_loop, Mode, Recalibration, ShardState, StepPlan, StepStats, Trainer,
 };

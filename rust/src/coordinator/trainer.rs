@@ -77,6 +77,19 @@ pub struct StepStats {
     pub lost_devices: Vec<usize>,
     /// Sharded nodes re-executed by recovery phases after device losses.
     pub recomputed_nodes: u64,
+    /// Max |EWMA relative error| across the drift monitor's
+    /// (device, kind) cells after this step (0 when not recording).
+    pub drift_max: f64,
+    /// Drift cells past the relative-error threshold this step.
+    pub drifting: u64,
+    /// Devices flagged as busy-time stragglers this step.
+    pub stragglers: Vec<usize>,
+    /// The online loop refit the cost model after this step
+    /// ([`Trainer::recalibrate_every`]).
+    pub recalibrated: bool,
+    /// The refit also swapped in a re-partitioned shard plan (guarded:
+    /// never modeled slower than the stale plan).
+    pub repartitioned: bool,
 }
 
 /// One row of a segment in the prebuilt execution table.
@@ -772,6 +785,63 @@ impl ShardState {
             }
         }
     }
+
+    /// Feed calibrated per-device rates back into the partitioner: apply
+    /// `rates` (`CostModel::secs_per_byte` after `costmodel::calibrate`)
+    /// to the recovery topology so DpBoundary/greedy price with measured
+    /// reality, rebuild the plan over the survivors, and swap it in only
+    /// when its modeled makespan under `model` is **no worse** than the
+    /// stale plan's — a recalibration can never make the modeled schedule
+    /// slower, by construction (docs/SHARDING.md, docs/OBSERVABILITY.md).
+    ///
+    /// Between-step plan swaps preserve bit-identity for the same reason
+    /// the device-loss recovery's mid-step swaps do: placement never
+    /// changes arithmetic, every f32 reduction stays inside barrier tasks
+    /// running in base-node id order.
+    ///
+    /// Returns `None` when there is no recovery context
+    /// ([`ShardState::with_plan`]) or no budget-feasible rebuild — the
+    /// stale plan stays in place either way.
+    pub fn recalibrate(
+        &mut self,
+        rates: &[f64],
+        model: &crate::costmodel::CostModel,
+    ) -> Option<Recalibration> {
+        let ctx = self.recovery.as_mut()?;
+        ctx.topo.apply_secs_per_byte(rates);
+        let budgets: Vec<u64> = ctx
+            .topo
+            .budgets(ctx.xi)
+            .into_iter()
+            .map(|cap| cap.min(ctx.mem_budget))
+            .collect();
+        let plan = ShardPlan::build(&ctx.base, &ctx.topo, ctx.policy, budgets).ok()?;
+        if plan.check_budgets().is_err() {
+            return None;
+        }
+        let stale_s = model.makespan(self.plan.graph(), self.plan.device_of(), self.plan.devices());
+        let fresh_s = model.makespan(plan.graph(), plan.device_of(), plan.devices());
+        let swapped = fresh_s <= stale_s;
+        if swapped {
+            self.plan = plan;
+        }
+        Some(Recalibration {
+            stale_s,
+            fresh_s,
+            swapped,
+        })
+    }
+}
+
+/// Outcome of one [`ShardState::recalibrate`] guarded plan swap: the
+/// stale and freshly-rebuilt plans' modeled makespans under the same
+/// calibrated model, and whether the fresh plan was adopted
+/// (`fresh_s <= stale_s` — asserted by `tests/telemetry_loop.rs`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Recalibration {
+    pub stale_s: f64,
+    pub fresh_s: f64,
+    pub swapped: bool,
 }
 
 /// Scheduler state carried by the trainer: the active [`SchedConfig`]
@@ -820,15 +890,21 @@ impl SchedState {
 /// Telemetry carried by a recording trainer ([`Trainer::set_recording`]):
 /// the span [`Recorder`] every driver writes into, the [`obs::RunReport`]
 /// accumulated step by step, the [`CostModel`] used for makespan
-/// predictions (replaced in place by [`Trainer::calibrate`]), and every
-/// drained span — kept because calibration and the Perfetto export both
-/// need the whole run.
+/// predictions (replaced in place by [`Trainer::calibrate`] and the
+/// online loop), every drained span — kept because calibration and the
+/// Perfetto export both need the whole run — plus the online loop's
+/// state: the per-(device, kind) [`obs::drift::DriftMonitor`], the
+/// bounded [`obs::flight::FlightRecorder`] crash ring, and the Perfetto
+/// instant marks accumulated when drift flags.
 struct ObsState {
     recorder: Recorder,
     report: obs::RunReport,
     model: CostModel,
     spans: Vec<obs::Span>,
     step_no: u32,
+    drift: obs::drift::DriftMonitor,
+    flight: obs::flight::FlightRecorder,
+    marks: Vec<obs::perfetto::InstantMark>,
 }
 
 /// Row-centric trainer over an artifact bundle.
@@ -856,6 +932,9 @@ pub struct Trainer<'r> {
     last_trace: Option<Trace>,
     /// Telemetry (`None` until [`Trainer::set_recording`]).
     obs: Option<ObsState>,
+    /// Refit the cost model from accumulated spans every n steps (0 = off;
+    /// [`Trainer::recalibrate_every`]).  Survives `set_sched` re-arming.
+    recalibrate_every: u32,
 }
 
 impl<'r> Trainer<'r> {
@@ -896,6 +975,7 @@ impl<'r> Trainer<'r> {
             program,
             last_trace: None,
             obs: None,
+            recalibrate_every: 0,
         })
     }
 
@@ -1026,6 +1106,9 @@ impl<'r> Trainer<'r> {
             model,
             spans: Vec::new(),
             step_no: 0,
+            drift: obs::drift::DriftMonitor::default(),
+            flight: obs::flight::FlightRecorder::default(),
+            marks: Vec::new(),
         });
     }
 
@@ -1068,6 +1151,34 @@ impl<'r> Trainer<'r> {
         Some(rep)
     }
 
+    /// Arm the online feedback loop: every `n` steps, refit the cost
+    /// model from the accumulated spans ([`costmodel::calibrate`]) and —
+    /// if the step's drift monitor flagged — rebuild the shard plan under
+    /// the calibrated per-device rates, adopting it only when its modeled
+    /// makespan is no worse than the stale plan's
+    /// ([`ShardState::recalibrate`]).  `0` disables the loop (the
+    /// default).  Requires recording ([`Trainer::set_recording`]); the
+    /// whole loop is observational on the numerics — loss and parameters
+    /// stay bit-identical to a serial run.
+    pub fn recalibrate_every(&mut self, n: u32) {
+        self.recalibrate_every = n;
+    }
+
+    /// The flight recorder's crash report as JSON (what `--flight-out`
+    /// writes): the bounded ring of recent spans + noted events + a
+    /// metrics snapshot, under the given `reason`.  `None` when recording
+    /// is off.
+    pub fn flight_json(&self, reason: &str) -> Option<String> {
+        let o = self.obs.as_ref()?;
+        Some(o.flight.to_json(reason, Some(&o.recorder.metrics().snapshot())))
+    }
+
+    /// A snapshot of the lock-cheap metrics registry fed by every
+    /// dispatch ([`Recorder::push`]).  `None` when recording is off.
+    pub fn metrics_snapshot(&self) -> Option<obs::metrics::MetricsSnapshot> {
+        self.obs.as_ref().map(|o| o.recorder.metrics().snapshot())
+    }
+
     /// The unified Perfetto/Chrome trace of the recorded run (what
     /// `--perfetto-out` writes): execution lanes + per-device in-flight
     /// counters from the spans, retry/loss markers from the most recent
@@ -1078,6 +1189,7 @@ impl<'r> Trainer<'r> {
             &o.report.title,
             &o.spans,
             &o.recorder.step_windows(),
+            &o.marks,
             self.last_trace.as_ref(),
             None,
         ))
@@ -1112,40 +1224,61 @@ impl<'r> Trainer<'r> {
             o.recorder.begin_step(o.step_no);
         }
         let rec = self.obs.as_ref().map(|o| &o.recorder);
-        let (loss, grads, peak_bytes, device_peaks, retries, backoff_s) = if pipelined {
-            let (loss, grads, outcome) = self.plan.step_pipelined_recorded(
-                self.rt,
-                program,
-                &self.params,
-                &self.sched.cfg,
-                self.sched.shard.as_mut(),
-                x,
-                y1h,
-                rec,
-            )?;
-            let peak = outcome.peak_bytes;
-            let device_peaks = outcome.device_peaks.clone();
-            let (retries, backoff_s) = (outcome.retries, outcome.modeled_backoff_s);
-            self.last_trace = Some(outcome.trace);
-            (loss, grads, peak, device_peaks, retries, backoff_s)
+        let dispatched = if pipelined {
+            self.plan
+                .step_pipelined_recorded(
+                    self.rt,
+                    program,
+                    &self.params,
+                    &self.sched.cfg,
+                    self.sched.shard.as_mut(),
+                    x,
+                    y1h,
+                    rec,
+                )
+                .map(|(loss, grads, outcome)| {
+                    let peak = outcome.peak_bytes;
+                    let device_peaks = outcome.device_peaks.clone();
+                    let (retries, backoff_s) = (outcome.retries, outcome.modeled_backoff_s);
+                    self.last_trace = Some(outcome.trace);
+                    (loss, grads, peak, device_peaks, retries, backoff_s)
+                })
         } else {
-            let (loss, grads, outcome) =
-                self.plan
-                    .step_serial_recorded(self.rt, program, &self.params, x, y1h, rec)?;
-            let peak = outcome.peak_bytes;
-            // the serial driver emits no pool events; synthesize the
-            // single-worker trace replaying the interpreter's ledger so
-            // `--trace-out` works (and `check_complete` holds) in serial
-            // mode too
-            self.last_trace = Some(Trace::serial(program.graph()));
-            (loss, grads, peak, vec![peak], 0, 0.0)
+            self.plan
+                .step_serial_recorded(self.rt, program, &self.params, x, y1h, rec)
+                .map(|(loss, grads, outcome)| {
+                    let peak = outcome.peak_bytes;
+                    // the serial driver emits no pool events; synthesize
+                    // the single-worker trace replaying the interpreter's
+                    // ledger so `--trace-out` works (and `check_complete`
+                    // holds) in serial mode too
+                    self.last_trace = Some(Trace::serial(program.graph()));
+                    (loss, grads, peak, vec![peak], 0, 0.0)
+                })
+        };
+        let (loss, grads, peak_bytes, device_peaks, retries, backoff_s) = match dispatched {
+            Ok(v) => v,
+            Err(e) => {
+                // a failed step is exactly what the flight recorder
+                // exists for: capture the partial dispatch record (the
+                // failing dispatch included — injected faults record
+                // zero-duration spans) before propagating
+                if let Some(o) = self.obs.as_mut() {
+                    o.recorder.end_step();
+                    let spans = o.recorder.drain();
+                    o.flight.push_spans(&spans);
+                    o.flight.note(format!("step {}: {e}", o.step_no));
+                    o.spans.extend(spans);
+                }
+                return Err(e);
+            }
         };
         let (lost_devices, recomputed_nodes) = match &self.sched.shard {
             Some(ss) if pipelined => (ss.last_lost().to_vec(), ss.last_recomputed()),
             _ => (Vec::new(), 0),
         };
         self.optimizer.step(&mut self.params, &grads)?;
-        let stats = StepStats {
+        let mut stats = StepStats {
             loss,
             peak_bytes,
             device_peaks,
@@ -1155,10 +1288,37 @@ impl<'r> Trainer<'r> {
             modeled_backoff_s: backoff_s,
             lost_devices,
             recomputed_nodes,
+            drift_max: 0.0,
+            drifting: 0,
+            stragglers: Vec::new(),
+            recalibrated: false,
+            repartitioned: false,
         };
         if let Some(o) = self.obs.as_mut() {
             o.recorder.end_step();
             let spans = o.recorder.drain();
+            // drift is judged against the model that made this step's
+            // predictions — the pre-recalibration one
+            let drift = o.drift.observe(&spans, &o.model);
+            o.flight.push_spans(&spans);
+            if !drift.stragglers.is_empty() {
+                o.flight.note(format!(
+                    "step {}: straggler device(s) {:?}",
+                    o.step_no, drift.stragglers
+                ));
+            }
+            if drift.flagged() {
+                let ts_ns = spans.iter().map(|s| s.end_ns()).max().unwrap_or(0);
+                o.marks.push(obs::perfetto::InstantMark {
+                    ts_ns,
+                    label: format!(
+                        "drift step {}: {} cell(s), {} straggler(s)",
+                        o.step_no,
+                        drift.drifting.len(),
+                        drift.stragglers.len()
+                    ),
+                });
+            }
             let input = obs::StepInput {
                 step: o.step_no,
                 loss: stats.loss as f64,
@@ -1170,11 +1330,53 @@ impl<'r> Trainer<'r> {
                 modeled_backoff_s: stats.modeled_backoff_s,
                 lost_devices: stats.lost_devices.len() as u64,
                 recomputed_nodes: stats.recomputed_nodes,
+                drift_max: drift.max_abs_ewma,
+                drifting: drift.drifting.len() as u64,
+                stragglers: drift.stragglers.iter().map(|&d| d as u64).collect(),
             };
             o.report
                 .push_step(&input, &spans, &o.model, predicted_s.unwrap_or(0.0));
             o.spans.extend(spans);
             o.step_no += 1;
+            stats.drift_max = drift.max_abs_ewma;
+            stats.drifting = drift.drifting.len() as u64;
+            stats.stragglers = drift.stragglers.clone();
+            // the feedback edge: refit the model from everything recorded
+            // so far, and — only when drift actually flagged — rebuild the
+            // shard plan under the calibrated rates, adopting it only if
+            // its modeled makespan is no worse than the stale plan's
+            if self.recalibrate_every > 0 && o.step_no % self.recalibrate_every == 0 {
+                let (fitted, rep) = costmodel::calibrate(&o.spans, &o.model);
+                o.model = fitted;
+                o.report.set_calibration(rep);
+                stats.recalibrated = true;
+                let mut repartitioned = false;
+                if drift.flagged() {
+                    if let Some(ss) = self.sched.shard.as_mut() {
+                        if let Some(out) = ss.recalibrate(&o.model.secs_per_byte, &o.model) {
+                            debug_assert!(
+                                !out.swapped || out.fresh_s <= out.stale_s,
+                                "a repartition must never worsen the modeled makespan"
+                            );
+                            if out.swapped {
+                                repartitioned = true;
+                                // the old trace pairs with the old plan's
+                                // graph; keeping it would let trace_json
+                                // mix the two
+                                self.last_trace = None;
+                                o.flight.note(format!(
+                                    "step {}: repartitioned (makespan {:.3e}s -> {:.3e}s)",
+                                    o.step_no - 1,
+                                    out.stale_s,
+                                    out.fresh_s
+                                ));
+                            }
+                        }
+                    }
+                }
+                o.report.record_recalibration(repartitioned);
+                stats.repartitioned = repartitioned;
+            }
         }
         Ok(stats)
     }

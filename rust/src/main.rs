@@ -16,7 +16,8 @@
 //!          [--policy blocked|balanced|dp] [--link pcie|nvlink]
 //!          [--fault-plan SPEC] [--retry N[:BACKOFF_US]]
 //!          [--on-device-lost fail|degrade] [--trace-out FILE]
-//!          [--report-out FILE] [--perfetto-out FILE]
+//!          [--report-out FILE] [--perfetto-out FILE] [--flight-out FILE]
+//!          [--recalibrate-every N]
 //!          — live training on the PJRT artifacts (MiniVGG, synthetic data);
 //!          --workers enables the pipelined scheduler, --devices shards the
 //!          row DAG over N identical RTX 3090s, --device-spec over an
@@ -31,7 +32,12 @@
 //!          bundle needed); --report-out records timed spans and writes the
 //!          versioned RunReport JSON (cost model calibrated over the run —
 //!          docs/OBSERVABILITY.md); --perfetto-out writes the unified
-//!          Perfetto/Chrome trace (execution lanes + counters + markers)
+//!          Perfetto/Chrome trace (execution lanes + counters + markers);
+//!          --flight-out writes the flight recorder's bounded crash
+//!          report — on a failed run it captures the failing dispatch,
+//!          on success the last spans on demand; --recalibrate-every N
+//!          arms the online loop (refit the cost model every N steps and
+//!          repartition under drift, guarded never-slower)
 //!   info   [--artifacts DIR]
 //!          — print the artifact bundle inventory
 //!   trace  --net vgg16 --strategy overl-h [--batch B] [--rows N] [--out FILE]
@@ -481,12 +487,37 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<(), CliError> {
     }
     let report_out = flags.get("report-out").filter(|p| !p.is_empty());
     let perfetto_out = flags.get("perfetto-out").filter(|p| !p.is_empty());
-    if report_out.is_some() || perfetto_out.is_some() {
+    let flight_out = flags.get("flight-out").filter(|p| !p.is_empty());
+    let recal_every: u32 = flags
+        .get("recalibrate-every")
+        .map(String::as_str)
+        .unwrap_or("0")
+        .parse()
+        .map_err(|_| "bad --recalibrate-every")?;
+    let recording =
+        report_out.is_some() || perfetto_out.is_some() || flight_out.is_some() || recal_every > 0;
+    if recording {
         // after set_sched, so the recorder sizes to the final worker pool
         tr.set_recording(true);
+        tr.recalibrate_every(recal_every);
     }
-    let losses =
-        train_loop(&mut tr, &corpus, steps, (steps / 20).max(1)).map_err(CliError::Run)?;
+    let losses = match train_loop(&mut tr, &corpus, steps, (steps / 20).max(1)) {
+        Ok(l) => l,
+        Err(e) => {
+            // the flight recorder exists for exactly this moment: dump the
+            // crash report (bounded ring of recent dispatches + noted
+            // events + metrics) before the error propagates
+            if let Some(path) = flight_out {
+                if let Some(json) = tr.flight_json(&e.to_string()) {
+                    match std::fs::write(path, json) {
+                        Ok(()) => eprintln!("wrote flight crash report to {path}"),
+                        Err(io) => eprintln!("--flight-out {path}: {io}"),
+                    }
+                }
+            }
+            return Err(CliError::Run(e));
+        }
+    };
     if report_out.is_some() || perfetto_out.is_some() {
         // refit the cost model over the recorded spans so the report's
         // calibration section (before/after error) is populated
@@ -517,6 +548,16 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<(), CliError> {
                 println!("wrote unified trace to {path} — open in ui.perfetto.dev");
             }
             None => eprintln!("--perfetto-out: no spans recorded"),
+        }
+    }
+    if let Some(path) = flight_out {
+        match tr.flight_json("on-demand (--flight-out)") {
+            Some(json) => {
+                std::fs::write(path, json)
+                    .map_err(|e| CliError::Other(format!("--flight-out {path}: {e}")))?;
+                println!("wrote flight report to {path}");
+            }
+            None => eprintln!("--flight-out: no spans recorded"),
         }
     }
     if let Some(path) = flags.get("trace-out") {

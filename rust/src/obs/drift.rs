@@ -1,0 +1,362 @@
+//! Drift & straggler detection over recorded spans.
+//!
+//! The cost model that drives DpBoundary partitioning and admission is
+//! only as good as its measurements; this monitor watches a *running* job
+//! and tells the trainer when the model and reality have diverged enough
+//! that re-fitting ([`crate::costmodel::calibrate`]) — and re-partitioning
+//! under the fitted rates — is worth it (docs/OBSERVABILITY.md, "Online
+//! loop").
+//!
+//! **Drift**: per (device, [`NodeKind`]) cell, an EWMA of the signed
+//! relative prediction error `(measured − predicted) / predicted` over
+//! that cell's spans.  A cell with at least `min_samples` observations
+//! whose `|ewma|` exceeds `rel_err_threshold` is *drifting*.  The EWMA is
+//! over signed errors so alternating over/under-prediction cancels instead
+//! of accumulating — only a systematic bias flags.
+//!
+//! **Stragglers**: per step, each device's busy seconds (span durations
+//! summed) are compared across devices; a device is a straggler when its
+//! z-score (population std over the devices that ran spans this step)
+//! reaches `straggler_z` *and* its busy time exceeds `straggler_ratio ×`
+//! the mean.  The ratio guard matters: a z-score alone is scale-free, so
+//! three equal devices plus one *slightly* slower one would always max the
+//! z-score.  At least three active devices are required — with two, the
+//! deviations are symmetric and the z-score carries no information.
+//!
+//! Everything here is deterministic in the spans: cells are kept sorted by
+//! (device, kind rank) and updated in span order, so two identical runs
+//! produce identical monitors.
+
+use super::Span;
+use crate::costmodel::CostModel;
+use crate::rowir::NodeKind;
+
+/// EWMA weight of the newest observation.
+pub const DEFAULT_ALPHA: f64 = 0.25;
+/// `|ewma relative error|` past this ⇒ the cell is drifting.
+pub const DEFAULT_REL_ERR_THRESHOLD: f64 = 0.5;
+/// Busy-time z-score at or past this (with the ratio guard) ⇒ straggler.
+pub const DEFAULT_STRAGGLER_Z: f64 = 1.0;
+/// Straggler must also be this many times the mean busy time.
+pub const DEFAULT_STRAGGLER_RATIO: f64 = 1.5;
+/// Cells younger than this never flag (EWMA still warming up).
+pub const DEFAULT_MIN_SAMPLES: u64 = 4;
+
+/// Tunables for [`DriftMonitor`]; `Default` gives the constants above.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DriftConfig {
+    pub alpha: f64,
+    pub rel_err_threshold: f64,
+    pub straggler_z: f64,
+    pub straggler_ratio: f64,
+    pub min_samples: u64,
+}
+
+impl Default for DriftConfig {
+    fn default() -> Self {
+        DriftConfig {
+            alpha: DEFAULT_ALPHA,
+            rel_err_threshold: DEFAULT_REL_ERR_THRESHOLD,
+            straggler_z: DEFAULT_STRAGGLER_Z,
+            straggler_ratio: DEFAULT_STRAGGLER_RATIO,
+            min_samples: DEFAULT_MIN_SAMPLES,
+        }
+    }
+}
+
+/// One (device, kind) EWMA cell.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Cell {
+    pub device: usize,
+    pub kind: NodeKind,
+    /// EWMA of the signed relative error `(measured − predicted)/predicted`.
+    pub ewma: f64,
+    pub samples: u64,
+}
+
+/// Deterministic ordering rank for cells (NodeKind derives no `Ord`).
+fn kind_rank(kind: NodeKind) -> u8 {
+    match kind {
+        NodeKind::Row => 0,
+        NodeKind::TpsRow => 1,
+        NodeKind::Barrier => 2,
+        NodeKind::Transfer => 3,
+    }
+}
+
+/// What one [`DriftMonitor::observe`] call concluded about a step.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StepDrift {
+    /// Max `|ewma|` over all cells with enough samples (0 when none).
+    pub max_abs_ewma: f64,
+    /// Cells past the threshold, in (device, kind rank) order.
+    pub drifting: Vec<Cell>,
+    /// Devices flagged as stragglers this step, ascending.
+    pub stragglers: Vec<usize>,
+}
+
+impl StepDrift {
+    /// Anything worth acting on (re-partitioning) this step?
+    pub fn flagged(&self) -> bool {
+        !self.drifting.is_empty() || !self.stragglers.is_empty()
+    }
+}
+
+/// Streaming predicted-vs-measured monitor; feed it each step's drained
+/// spans plus the model that made the predictions.
+#[derive(Debug, Default)]
+pub struct DriftMonitor {
+    cfg: DriftConfig,
+    cells: Vec<Cell>,
+}
+
+impl DriftMonitor {
+    pub fn new(cfg: DriftConfig) -> Self {
+        DriftMonitor { cfg, cells: Vec::new() }
+    }
+
+    /// All cells, sorted by (device, kind rank).
+    pub fn cells(&self) -> &[Cell] {
+        &self.cells
+    }
+
+    /// Fold one step's spans in and report the step's drift/straggler
+    /// state.  Zero-duration spans (injected-fault dispatches that never
+    /// reached a runner) and non-finite or non-positive predictions carry
+    /// no signal and are skipped.
+    pub fn observe(&mut self, spans: &[Span], model: &CostModel) -> StepDrift {
+        for span in spans {
+            if span.dur_ns == 0 {
+                continue;
+            }
+            let predicted = model.span_seconds(span);
+            if !(predicted.is_finite() && predicted > 0.0) {
+                continue;
+            }
+            let measured = span.dur_ns as f64 * 1e-9;
+            let rel = (measured - predicted) / predicted;
+            let key = (span.device, kind_rank(span.kind));
+            match self.cells.binary_search_by_key(&key, |c| (c.device, kind_rank(c.kind))) {
+                Ok(i) => {
+                    let c = &mut self.cells[i];
+                    c.ewma = self.cfg.alpha * rel + (1.0 - self.cfg.alpha) * c.ewma;
+                    c.samples += 1;
+                }
+                Err(i) => self.cells.insert(
+                    i,
+                    Cell { device: span.device, kind: span.kind, ewma: rel, samples: 1 },
+                ),
+            }
+        }
+
+        let mut out = StepDrift::default();
+        for c in &self.cells {
+            if c.samples < self.cfg.min_samples {
+                continue;
+            }
+            out.max_abs_ewma = out.max_abs_ewma.max(c.ewma.abs());
+            if c.ewma.abs() > self.cfg.rel_err_threshold {
+                out.drifting.push(*c);
+            }
+        }
+        out.stragglers = self.stragglers(spans);
+        out
+    }
+
+    /// Busy-time outliers among the devices that ran spans this step.
+    fn stragglers(&self, spans: &[Span]) -> Vec<usize> {
+        let devices = spans.iter().map(|s| s.device + 1).max().unwrap_or(0);
+        let mut busy = vec![0.0f64; devices];
+        let mut active = vec![false; devices];
+        for s in spans {
+            if s.dur_ns == 0 {
+                continue;
+            }
+            busy[s.device] += s.dur_ns as f64 * 1e-9;
+            active[s.device] = true;
+        }
+        let samples: Vec<(usize, f64)> = (0..devices).filter(|&d| active[d]).map(|d| (d, busy[d])).collect();
+        if samples.len() < 3 {
+            return Vec::new();
+        }
+        let n = samples.len() as f64;
+        let mean = samples.iter().map(|&(_, b)| b).sum::<f64>() / n;
+        let var = samples.iter().map(|&(_, b)| (b - mean) * (b - mean)).sum::<f64>() / n;
+        let std = var.sqrt();
+        if !(std > 0.0 && mean > 0.0) {
+            return Vec::new();
+        }
+        samples
+            .iter()
+            .filter(|&&(_, b)| (b - mean) / std >= self.cfg.straggler_z && b > self.cfg.straggler_ratio * mean)
+            .map(|&(d, _)| d)
+            .collect()
+    }
+
+    pub fn reset(&mut self) {
+        self.cells.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::DeviceModel;
+
+    /// Model with a clean 1 ns/byte rate so predictions are exact.
+    fn unit_model(devices: usize) -> CostModel {
+        CostModel {
+            secs_per_byte: vec![1e-9; devices],
+            transfer_latency_s: 0.0,
+            transfer_bytes_per_sec: f64::INFINITY,
+        }
+    }
+
+    /// A Row span of `bytes` on `device` measuring `rel`-relative error
+    /// against the unit model (rel = 0 ⇒ measured == predicted).
+    fn span(device: usize, bytes: u64, rel: f64) -> Span {
+        Span {
+            node: 0,
+            kind: NodeKind::Row,
+            label: String::new(),
+            device,
+            worker: 0,
+            attempt: 1,
+            phase: 0,
+            step: 0,
+            bytes,
+            in_flight_bytes: 0,
+            start_ns: 0,
+            dur_ns: ((bytes as f64) * (1.0 + rel)).round() as u64,
+        }
+    }
+
+    #[test]
+    fn no_drift_stays_quiet() {
+        let mut mon = DriftMonitor::default();
+        let model = unit_model(1);
+        for _ in 0..10 {
+            let d = mon.observe(&[span(0, 1_000_000, 0.0)], &model);
+            assert!(d.drifting.is_empty(), "{d:?}");
+            assert_eq!(d.max_abs_ewma, 0.0);
+        }
+        assert_eq!(mon.cells().len(), 1);
+        assert_eq!(mon.cells()[0].samples, 10);
+    }
+
+    #[test]
+    fn ramp_crosses_the_threshold_eventually_not_immediately() {
+        let mut mon = DriftMonitor::default();
+        let model = unit_model(1);
+        let mut first_flag = None;
+        for i in 0..20 {
+            let rel = 0.1 * i as f64; // 0.0, 0.1, ... slow ramp
+            let d = mon.observe(&[span(0, 1_000_000, rel)], &model);
+            if !d.drifting.is_empty() && first_flag.is_none() {
+                first_flag = Some(i);
+            }
+        }
+        let first = first_flag.expect("a ramp past 100% error must flag");
+        // the EWMA trails the ramp: it must not flag while the raw error
+        // is still small, and must flag before the ramp ends
+        assert!(first >= DEFAULT_MIN_SAMPLES as usize, "flagged at {first}");
+        assert!(first < 15, "flagged only at {first}");
+    }
+
+    #[test]
+    fn step_change_flags_within_a_few_observations() {
+        let mut mon = DriftMonitor::default();
+        let model = unit_model(1);
+        for _ in 0..8 {
+            let d = mon.observe(&[span(0, 1_000_000, 0.0)], &model);
+            assert!(d.drifting.is_empty());
+        }
+        // rate suddenly 3× the model (rel = 2.0): ewma = 2(1-(1-α)^j)
+        let mut flagged_at = None;
+        for j in 1..=8 {
+            let d = mon.observe(&[span(0, 1_000_000, 2.0)], &model);
+            if !d.drifting.is_empty() {
+                flagged_at = Some(j);
+                break;
+            }
+        }
+        let j = flagged_at.expect("a 3x step change must flag");
+        assert!(j <= 2, "took {j} observations");
+        let d = mon.observe(&[span(0, 1_000_000, 2.0)], &model);
+        assert!(d.max_abs_ewma > 0.5 && d.max_abs_ewma < 2.0, "{d:?}");
+    }
+
+    #[test]
+    fn signed_errors_cancel() {
+        let mut mon = DriftMonitor::default();
+        let model = unit_model(1);
+        // alternate ±60% error: each |raw| is past the threshold but the
+        // EWMA of the signed errors hovers near zero
+        let mut d = StepDrift::default();
+        for i in 0..20 {
+            let rel = if i % 2 == 0 { 0.6 } else { -0.6 };
+            d = mon.observe(&[span(0, 1_000_000, rel)], &model);
+        }
+        assert!(d.drifting.is_empty(), "{d:?}");
+        assert!(d.max_abs_ewma < 0.5);
+    }
+
+    #[test]
+    fn straggler_flags_the_synthetic_slow_device() {
+        let mut mon = DriftMonitor::default();
+        let model = unit_model(4);
+        // devices 0-2 balanced, device 3 ~8× busier
+        let spans: Vec<Span> = (0..4).map(|d| span(d, if d == 3 { 8_000_000 } else { 1_000_000 }, 0.0)).collect();
+        let d = mon.observe(&spans, &model);
+        assert_eq!(d.stragglers, vec![3], "{d:?}");
+    }
+
+    #[test]
+    fn balanced_and_two_device_steps_never_flag_stragglers() {
+        let mut mon = DriftMonitor::default();
+        let model = unit_model(4);
+        // near-balanced: max deviation z is high (3 equal + 1) but the
+        // ratio guard holds it back
+        let spans: Vec<Span> = (0..4).map(|d| span(d, if d == 3 { 1_200_000 } else { 1_000_000 }, 0.0)).collect();
+        assert!(mon.observe(&spans, &model).stragglers.is_empty());
+        // two devices: symmetric deviations, no signal
+        let spans: Vec<Span> = vec![span(0, 1_000_000, 0.0), span(1, 9_000_000, 0.0)];
+        assert!(mon.observe(&spans, &model).stragglers.is_empty());
+    }
+
+    #[test]
+    fn drift_is_per_device_and_kind() {
+        let mut mon = DriftMonitor::default();
+        let model = unit_model(2);
+        for _ in 0..8 {
+            // device 1 systematically 3×; device 0 on-model
+            mon.observe(&[span(0, 1_000_000, 0.0), span(1, 1_000_000, 2.0)], &model);
+        }
+        let d = mon.observe(&[span(0, 1_000_000, 0.0), span(1, 1_000_000, 2.0)], &model);
+        assert_eq!(d.drifting.len(), 1, "{d:?}");
+        assert_eq!(d.drifting[0].device, 1);
+        assert_eq!(d.drifting[0].kind, NodeKind::Row);
+        // a real device model prediction also works end-to-end
+        let analytic = CostModel::analytic(&[DeviceModel::rtx3090()], 12.0e9);
+        let mut mon2 = DriftMonitor::default();
+        for _ in 0..8 {
+            // CPU-ish wall clock vs GPU model: enormous relative error
+            let d2 = mon2.observe(&[span(0, 1_000_000, 0.0)], &analytic);
+            if d2.flagged() {
+                return;
+            }
+        }
+        panic!("analytic-vs-measured gap must register as drift");
+    }
+
+    #[test]
+    fn zero_duration_spans_carry_no_signal() {
+        let mut mon = DriftMonitor::default();
+        let model = unit_model(1);
+        let mut s = span(0, 1_000_000, 0.0);
+        s.dur_ns = 0;
+        let d = mon.observe(&[s], &model);
+        assert!(mon.cells().is_empty());
+        assert!(!d.flagged());
+    }
+}

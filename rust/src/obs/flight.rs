@@ -1,0 +1,201 @@
+//! Flight recorder: a bounded ring of recent spans and events, dumped as
+//! a JSON crash report when a step dies (`DeviceLost`, `Retryable`
+//! exhaustion, an infeasible re-partition) or on demand
+//! (`train --flight-out`, docs/RESILIENCE.md).
+//!
+//! The run report answers "what did the whole run do"; the flight
+//! recorder answers "what were the last things that happened before it
+//! fell over" — including the failing dispatch itself, because drivers
+//! emit a span for every dispatch *even when the runner errors* (an
+//! injected fault shows up as a zero-duration span on the lost device).
+//! Capacity is fixed at construction, so the crash report is bounded no
+//! matter how long the run was; overwritten history is accounted for in
+//! `dropped_spans`, never silently lost.
+
+use std::collections::VecDeque;
+
+use super::metrics::MetricsSnapshot;
+use super::Span;
+use crate::util::json::escape;
+
+/// Default span ring capacity (a few steps of the demo program).
+pub const DEFAULT_SPAN_CAPACITY: usize = 256;
+/// Default event ring capacity.
+pub const DEFAULT_EVENT_CAPACITY: usize = 64;
+
+/// Bounded ring buffer of recent spans plus free-text events.
+#[derive(Debug)]
+pub struct FlightRecorder {
+    span_cap: usize,
+    event_cap: usize,
+    spans: VecDeque<Span>,
+    events: VecDeque<String>,
+    dropped_spans: u64,
+}
+
+impl Default for FlightRecorder {
+    fn default() -> Self {
+        FlightRecorder::new(DEFAULT_SPAN_CAPACITY, DEFAULT_EVENT_CAPACITY)
+    }
+}
+
+impl FlightRecorder {
+    pub fn new(span_cap: usize, event_cap: usize) -> Self {
+        FlightRecorder {
+            span_cap: span_cap.max(1),
+            event_cap: event_cap.max(1),
+            spans: VecDeque::new(),
+            events: VecDeque::new(),
+            dropped_spans: 0,
+        }
+    }
+
+    /// Fold a step's drained spans into the ring, evicting the oldest.
+    pub fn push_spans(&mut self, spans: &[Span]) {
+        for span in spans {
+            if self.spans.len() == self.span_cap {
+                self.spans.pop_front();
+                self.dropped_spans += 1;
+            }
+            self.spans.push_back(span.clone());
+        }
+    }
+
+    /// Record a free-text event (drift flags, recalibrations, errors).
+    pub fn note(&mut self, msg: impl Into<String>) {
+        if self.events.len() == self.event_cap {
+            self.events.pop_front();
+        }
+        self.events.push_back(msg.into());
+    }
+
+    pub fn len(&self) -> usize {
+        self.spans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    pub fn span_capacity(&self) -> usize {
+        self.span_cap
+    }
+
+    /// The crash report: valid JSON, bounded by the ring capacities.
+    pub fn to_json(&self, reason: &str, metrics: Option<&MetricsSnapshot>) -> String {
+        let mut out = String::with_capacity(4096);
+        out.push_str("{\n");
+        out.push_str("  \"kind\": \"lr-cnn-flight-report\",\n");
+        out.push_str(&format!("  \"reason\": \"{}\",\n", escape(reason)));
+        out.push_str(&format!("  \"span_capacity\": {},\n", self.span_cap));
+        out.push_str(&format!("  \"dropped_spans\": {},\n", self.dropped_spans));
+        out.push_str("  \"events\": [");
+        for (i, e) in self.events.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&format!("\"{}\"", escape(e)));
+        }
+        out.push_str("],\n");
+        match metrics {
+            Some(m) => out.push_str(&format!("  \"metrics\": {},\n", m.to_json())),
+            None => out.push_str("  \"metrics\": null,\n"),
+        }
+        out.push_str("  \"spans\": [\n");
+        for (i, s) in self.spans.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"node\": {}, \"kind\": \"{:?}\", \"label\": \"{}\", \"device\": {}, \
+                 \"worker\": {}, \"attempt\": {}, \"phase\": {}, \"step\": {}, \"bytes\": {}, \
+                 \"in_flight_bytes\": {}, \"start_ns\": {}, \"dur_ns\": {}}}{}\n",
+                s.node,
+                s.kind,
+                escape(&s.label),
+                s.device,
+                s.worker,
+                s.attempt,
+                s.phase,
+                s.step,
+                s.bytes,
+                s.in_flight_bytes,
+                s.start_ns,
+                s.dur_ns,
+                if i + 1 < self.spans.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rowir::NodeKind;
+    use crate::util::json::JsonValue;
+
+    fn span(node: usize, device: usize) -> Span {
+        Span {
+            node,
+            kind: NodeKind::Row,
+            label: format!("fp.row{node}"),
+            device,
+            worker: 0,
+            attempt: 1,
+            phase: 0,
+            step: 0,
+            bytes: 64,
+            in_flight_bytes: 64,
+            start_ns: node as u64 * 10,
+            dur_ns: 5,
+        }
+    }
+
+    #[test]
+    fn ring_is_bounded_and_counts_evictions() {
+        let mut fr = FlightRecorder::new(4, 2);
+        let spans: Vec<Span> = (0..10).map(|i| span(i, 0)).collect();
+        fr.push_spans(&spans);
+        assert_eq!(fr.len(), 4);
+        // the *latest* spans survive
+        let json = fr.to_json("test", None);
+        assert!(json.contains("fp.row9"));
+        assert!(!json.contains("fp.row5"));
+        assert!(json.contains("\"dropped_spans\": 6"));
+        for i in 0..5 {
+            fr.note(format!("event {i}"));
+        }
+        let json = fr.to_json("test", None);
+        assert!(json.contains("event 4") && !json.contains("event 2"));
+    }
+
+    #[test]
+    fn crash_report_is_valid_json_with_the_failing_dispatch() {
+        let mut fr = FlightRecorder::default();
+        fr.push_spans(&[span(0, 0)]);
+        let mut lost = span(7, 1);
+        lost.dur_ns = 0; // injected fault: dispatched, never ran
+        fr.push_spans(&[lost]);
+        fr.note("step 0: device 1 lost \"boom\"");
+        let reg = crate::obs::metrics::MetricsRegistry::default();
+        let json = fr.to_json("DeviceLost { device: 1, node: 7 }", Some(&reg.snapshot()));
+
+        let v = JsonValue::parse(&json).expect("crash report must be valid JSON");
+        assert_eq!(
+            v.get("kind").and_then(|k| k.as_str()).unwrap(),
+            "lr-cnn-flight-report"
+        );
+        assert!(json.contains("\"device\": 1"));
+        assert!(json.contains("\"dur_ns\": 0"));
+        assert!(json.contains("\\\"boom\\\""), "events are escaped: {json}");
+        assert!(json.contains("\"metrics\": {"));
+    }
+
+    #[test]
+    fn empty_recorder_still_dumps_valid_json() {
+        let fr = FlightRecorder::default();
+        let json = fr.to_json("on-demand", None);
+        JsonValue::parse(&json).expect("valid JSON");
+        assert!(fr.is_empty());
+        assert_eq!(fr.span_capacity(), DEFAULT_SPAN_CAPACITY);
+    }
+}

@@ -1,0 +1,383 @@
+//! Lock-cheap metrics registry: monotonic counters, gauges, and
+//! fixed-bucket log2 histograms, updated per dispatch by every driver.
+//!
+//! The registry lives inside [`Recorder`](super::Recorder) and is fed from
+//! [`Recorder::push`](super::Recorder::push) — the single funnel all three
+//! drivers (serial interpreter, pipelined pool, sharded executor incl.
+//! retry/recovery phases) route their spans through — so no driver carries
+//! metrics code of its own.  Every update is one or two relaxed atomic RMW
+//! ops on the worker thread: no locks, no allocation, no ordering
+//! dependency between workers.  Reads ([`MetricsRegistry::snapshot`]) are
+//! racy per counter but each counter is monotonic, so a snapshot taken at
+//! quiescence (after `drain`) is exact.
+//!
+//! Histograms use 64 fixed log2 buckets: bucket 0 holds the value 0 and
+//! bucket *i* (i ≥ 1) holds `[2^(i-1), 2^i)`, with the top bucket
+//! absorbing overflow.  Bucket placement depends only on the value — never
+//! on insertion order or thread interleaving — and snapshot merge is
+//! bucket-wise addition, hence associative and commutative (unit-tested
+//! below): merging per-worker or per-shard snapshots in any order yields
+//! the same totals.
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+use super::Span;
+
+/// Number of histogram buckets: value 0, then one per power of two up to
+/// `u64::MAX` (the top bucket absorbs `>= 2^62`).
+pub const BUCKETS: usize = 64;
+
+/// Bucket index for a value: 0 for 0, else `floor(log2(v)) + 1`, clamped
+/// to the top bucket.  Deterministic in the value alone.
+#[inline]
+pub fn bucket_of(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        ((64 - v.leading_zeros()) as usize).min(BUCKETS - 1)
+    }
+}
+
+/// Monotonic counter (relaxed atomic adds).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    #[inline]
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Relaxed);
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Relaxed)
+    }
+
+    fn reset(&self) {
+        self.0.store(0, Relaxed);
+    }
+}
+
+/// Gauge tracking a running maximum (the only gauge flavor the dispatch
+/// path needs — last-write gauges are racy across workers, maxima are
+/// order-free).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    #[inline]
+    pub fn observe_max(&self, v: u64) {
+        self.0.fetch_max(v, Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Relaxed)
+    }
+
+    fn reset(&self) {
+        self.0.store(0, Relaxed);
+    }
+}
+
+/// Fixed-bucket log2 histogram with count and sum.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_of(v)].fetch_add(1, Relaxed);
+        self.count.fetch_add(1, Relaxed);
+        self.sum.fetch_add(v, Relaxed);
+    }
+
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: self.buckets.iter().map(|b| b.load(Relaxed)).collect(),
+            count: self.count.load(Relaxed),
+            sum: self.sum.load(Relaxed),
+        }
+    }
+
+    fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Relaxed);
+        }
+        self.count.store(0, Relaxed);
+        self.sum.store(0, Relaxed);
+    }
+}
+
+/// Plain-data histogram snapshot; `merge` is bucket-wise addition.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct HistogramSnapshot {
+    /// `BUCKETS` entries (empty only for `Default`).
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum: u64,
+}
+
+impl HistogramSnapshot {
+    /// Bucket-wise merge — associative and commutative, so per-worker or
+    /// per-shard snapshots combine in any order to the same totals.
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        if self.buckets.len() < other.buckets.len() {
+            self.buckets.resize(other.buckets.len(), 0);
+        }
+        for (i, v) in other.buckets.iter().enumerate() {
+            self.buckets[i] += v;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+    }
+
+    /// Compact JSON object with sparse buckets in ascending index order.
+    pub fn to_json(&self) -> String {
+        let mut s = format!("{{\"count\":{},\"sum\":{},\"buckets\":{{", self.count, self.sum);
+        let mut first = true;
+        for (i, &v) in self.buckets.iter().enumerate() {
+            if v == 0 {
+                continue;
+            }
+            if !first {
+                s.push(',');
+            }
+            first = false;
+            s.push_str(&format!("\"{i}\":{v}"));
+        }
+        s.push_str("}}");
+        s
+    }
+}
+
+/// The per-run registry: what the dispatch path counts about itself.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    /// Every span pushed (one per dispatch, per attempt).
+    pub dispatches: Counter,
+    /// Spans with `attempt > 1` (retry re-dispatches).
+    pub retries: Counter,
+    /// Spans with `phase > 0` (device-loss recovery re-dispatches).
+    pub recovery_dispatches: Counter,
+    /// Spans for `Transfer` nodes.
+    pub transfer_dispatches: Counter,
+    /// Sum of `est_bytes` over all dispatches.
+    pub bytes_dispatched: Counter,
+    /// Peak admission-ledger reading observed at any dispatch.
+    pub in_flight_peak: Gauge,
+    /// Span durations (ns).
+    pub span_ns: Histogram,
+    /// Span byte estimates.
+    pub span_bytes: Histogram,
+}
+
+impl MetricsRegistry {
+    /// One dispatch = one call, from `Recorder::push`.
+    #[inline]
+    pub fn observe(&self, span: &Span) {
+        self.dispatches.inc();
+        if span.attempt > 1 {
+            self.retries.inc();
+        }
+        if span.phase > 0 {
+            self.recovery_dispatches.inc();
+        }
+        if span.kind == crate::rowir::NodeKind::Transfer {
+            self.transfer_dispatches.inc();
+        }
+        self.bytes_dispatched.add(span.bytes);
+        self.in_flight_peak.observe_max(span.in_flight_bytes);
+        self.span_ns.record(span.dur_ns);
+        self.span_bytes.record(span.bytes);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            dispatches: self.dispatches.get(),
+            retries: self.retries.get(),
+            recovery_dispatches: self.recovery_dispatches.get(),
+            transfer_dispatches: self.transfer_dispatches.get(),
+            bytes_dispatched: self.bytes_dispatched.get(),
+            in_flight_peak: self.in_flight_peak.get(),
+            span_ns: self.span_ns.snapshot(),
+            span_bytes: self.span_bytes.snapshot(),
+        }
+    }
+
+    /// Zero everything (`Recorder::clear`).
+    pub fn reset(&self) {
+        self.dispatches.reset();
+        self.retries.reset();
+        self.recovery_dispatches.reset();
+        self.transfer_dispatches.reset();
+        self.bytes_dispatched.reset();
+        self.in_flight_peak.reset();
+        self.span_ns.reset();
+        self.span_bytes.reset();
+    }
+}
+
+/// Plain-data registry snapshot (embedded in flight-recorder dumps).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct MetricsSnapshot {
+    pub dispatches: u64,
+    pub retries: u64,
+    pub recovery_dispatches: u64,
+    pub transfer_dispatches: u64,
+    pub bytes_dispatched: u64,
+    pub in_flight_peak: u64,
+    pub span_ns: HistogramSnapshot,
+    pub span_bytes: HistogramSnapshot,
+}
+
+impl MetricsSnapshot {
+    /// Compact JSON object (deterministic key and bucket order).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"dispatches\":{},\"retries\":{},\"recovery_dispatches\":{},\
+             \"transfer_dispatches\":{},\"bytes_dispatched\":{},\"in_flight_peak\":{},\
+             \"span_ns\":{},\"span_bytes\":{}}}",
+            self.dispatches,
+            self.retries,
+            self.recovery_dispatches,
+            self.transfer_dispatches,
+            self.bytes_dispatched,
+            self.in_flight_peak,
+            self.span_ns.to_json(),
+            self.span_bytes.to_json()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rowir::NodeKind;
+
+    fn span(device: usize, kind: NodeKind, attempt: u32, phase: u32, bytes: u64, dur: u64) -> Span {
+        Span {
+            node: 0,
+            kind,
+            label: String::new(),
+            device,
+            worker: 0,
+            attempt,
+            phase,
+            step: 0,
+            bytes,
+            in_flight_bytes: bytes,
+            start_ns: 0,
+            dur_ns: dur,
+        }
+    }
+
+    #[test]
+    fn bucket_placement_is_deterministic_at_boundaries() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of((1 << 20) - 1), 20);
+        assert_eq!(bucket_of(1 << 20), 21);
+        assert_eq!(bucket_of(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn histogram_is_insertion_order_independent() {
+        let vals = [0u64, 1, 7, 8, 1024, 1 << 40, u64::MAX, 3, 3];
+        let a = Histogram::default();
+        let b = Histogram::default();
+        for v in vals {
+            a.record(v);
+        }
+        for v in vals.iter().rev() {
+            b.record(*v);
+        }
+        assert_eq!(a.snapshot(), b.snapshot());
+        assert_eq!(a.snapshot().count, vals.len() as u64);
+    }
+
+    #[test]
+    fn snapshot_merge_is_associative_and_commutative() {
+        let mk = |vals: &[u64]| {
+            let h = Histogram::default();
+            for &v in vals {
+                h.record(v);
+            }
+            h.snapshot()
+        };
+        let (a, b, c) = (mk(&[1, 2, 3]), mk(&[0, 1 << 30]), mk(&[5, 5, u64::MAX]));
+
+        // (a ⊕ b) ⊕ c
+        let mut left = a.clone();
+        left.merge(&b);
+        left.merge(&c);
+        // a ⊕ (b ⊕ c)
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut right = a.clone();
+        right.merge(&bc);
+        assert_eq!(left, right);
+
+        // a ⊕ b == b ⊕ a
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab, ba);
+    }
+
+    #[test]
+    fn registry_classifies_dispatches() {
+        let reg = MetricsRegistry::default();
+        reg.observe(&span(0, NodeKind::Row, 1, 0, 100, 10));
+        reg.observe(&span(0, NodeKind::Row, 2, 0, 100, 10)); // retry
+        reg.observe(&span(1, NodeKind::Transfer, 1, 1, 50, 5)); // recovery transfer
+        reg.observe(&span(1, NodeKind::Barrier, 1, 0, 0, 1));
+
+        let s = reg.snapshot();
+        assert_eq!(s.dispatches, 4);
+        assert_eq!(s.retries, 1);
+        assert_eq!(s.recovery_dispatches, 1);
+        assert_eq!(s.transfer_dispatches, 1);
+        assert_eq!(s.bytes_dispatched, 250);
+        assert_eq!(s.in_flight_peak, 100);
+        assert_eq!(s.span_ns.count, 4);
+        assert_eq!(s.span_bytes.sum, 250);
+
+        reg.reset();
+        assert_eq!(reg.snapshot(), MetricsSnapshot::default());
+    }
+
+    #[test]
+    fn snapshot_json_is_deterministic_and_sparse() {
+        let reg = MetricsRegistry::default();
+        reg.observe(&span(0, NodeKind::Row, 1, 0, 4, 3));
+        let s = reg.snapshot();
+        let json = s.to_json();
+        assert_eq!(json, s.to_json());
+        assert!(json.contains("\"dispatches\":1"), "{json}");
+        // bytes=4 -> bucket 3, dur=3 -> bucket 2
+        assert!(json.contains("\"span_bytes\":{\"count\":1,\"sum\":4,\"buckets\":{\"3\":1}}"));
+        assert!(json.contains("\"span_ns\":{\"count\":1,\"sum\":3,\"buckets\":{\"2\":1}}"));
+    }
+}

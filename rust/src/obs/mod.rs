@@ -15,8 +15,14 @@
 //! | module | role |
 //! |---|---|
 //! | [`report`] | versioned [`report::RunReport`] JSON + `metrics::Table` rendering |
-//! | [`perfetto`] | one Perfetto/Chrome trace: execution lanes + resident counters + retry/lost markers |
+//! | [`perfetto`] | one Perfetto/Chrome trace: execution lanes + resident counters + retry/lost/drift markers |
+//! | [`metrics`] | lock-cheap counters/gauges/log2 histograms fed from [`Recorder::push`] |
+//! | [`drift`] | per-(device, kind) EWMA drift + straggler detection over spans |
+//! | [`flight`] | bounded ring of recent spans/events → JSON crash report |
 
+pub mod drift;
+pub mod flight;
+pub mod metrics;
 pub mod perfetto;
 pub mod report;
 
@@ -96,6 +102,7 @@ pub struct Recorder {
     phase: AtomicU32,
     step: AtomicU32,
     windows: Mutex<Vec<StepWindow>>,
+    metrics: metrics::MetricsRegistry,
 }
 
 impl Recorder {
@@ -108,6 +115,7 @@ impl Recorder {
             phase: AtomicU32::new(0),
             step: AtomicU32::new(0),
             windows: Mutex::new(Vec::new()),
+            metrics: metrics::MetricsRegistry::default(),
         }
     }
 
@@ -117,10 +125,19 @@ impl Recorder {
     }
 
     /// Append a span to `worker`'s lane (wrapped into range, so a caller
-    /// with more workers than lanes still records safely).
+    /// with more workers than lanes still records safely).  This is the
+    /// single funnel every driver's dispatch goes through, so the metrics
+    /// registry is updated here — no driver carries metrics code.
     pub fn push(&self, worker: usize, span: Span) {
+        self.metrics.observe(&span);
         let lane = worker % self.lanes.len();
         self.lanes[lane].lock().expect("obs lane poisoned").push(span);
+    }
+
+    /// The run's metrics registry (counters survive `drain`; `clear`
+    /// resets them).
+    pub fn metrics(&self) -> &metrics::MetricsRegistry {
+        &self.metrics
     }
 
     /// Current recovery-phase tag (stamped onto spans by the executors).
@@ -193,7 +210,7 @@ impl Recorder {
         self.len() == 0
     }
 
-    /// Drop all buffered spans and windows; tags reset to 0.
+    /// Drop all buffered spans and windows; tags and metrics reset to 0.
     pub fn clear(&self) {
         for lane in &self.lanes {
             lane.lock().expect("obs lane poisoned").clear();
@@ -201,6 +218,7 @@ impl Recorder {
         self.windows.lock().expect("obs windows poisoned").clear();
         self.phase.store(0, Ordering::Relaxed);
         self.step.store(0, Ordering::Relaxed);
+        self.metrics.reset();
     }
 }
 
@@ -266,6 +284,20 @@ mod tests {
         rec.clear();
         assert!(rec.step_windows().is_empty());
         assert_eq!(rec.phase(), 0);
+    }
+
+    #[test]
+    fn push_feeds_the_metrics_registry() {
+        let rec = Recorder::new(2);
+        rec.push(0, span(0, 0, 0, 0));
+        rec.push(1, span(1, 1, 0, 10));
+        let snap = rec.metrics().snapshot();
+        assert_eq!(snap.dispatches, 2);
+        assert_eq!(snap.bytes_dispatched, 2);
+        rec.drain();
+        assert_eq!(rec.metrics().snapshot().dispatches, 2, "drain keeps counters");
+        rec.clear();
+        assert_eq!(rec.metrics().snapshot().dispatches, 0);
     }
 
     #[test]

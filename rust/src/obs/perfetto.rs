@@ -28,16 +28,27 @@ use crate::util::json::escape;
 /// own tids, so a high sentinel keeps the lanes apart).
 pub const STEP_LANE_TID: usize = 999;
 
+/// A labeled global instant on the step lane — the online loop's drift,
+/// straggler, and recalibration annotations (docs/OBSERVABILITY.md).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InstantMark {
+    /// Nanoseconds since the recorder's origin.
+    pub ts_ns: u64,
+    pub label: String,
+}
+
 fn us(ns: u64) -> String {
     format!("{:.3}", ns as f64 / 1e3)
 }
 
 /// Render the unified trace; `sched_trace` contributes retry/loss
-/// markers and `memory_plan` contributes the pid-2 resident counter.
+/// markers, `marks` the online loop's drift/recalibration instants, and
+/// `memory_plan` contributes the pid-2 resident counter.
 pub fn chrome_trace(
     title: &str,
     spans: &[Span],
     windows: &[StepWindow],
+    marks: &[InstantMark],
     sched_trace: Option<&Trace>,
     memory_plan: Option<&Schedule>,
 ) -> String {
@@ -150,6 +161,15 @@ pub fn chrome_trace(
         }
     }
 
+    // ---- online-loop instants (drift / straggler / recalibration) -----
+    for m in marks {
+        lines.push(format!(
+            "{{\"name\":\"{}\",\"ph\":\"i\",\"s\":\"g\",\"pid\":1,\"tid\":{STEP_LANE_TID},\"ts\":{}}}",
+            escape(&m.label),
+            us(m.ts_ns)
+        ));
+    }
+
     // ---- memory plan (pid 2, event-index timebase) --------------------
     if let Some(plan) = memory_plan {
         lines.push(
@@ -231,7 +251,11 @@ mod tests {
         plan.mark("fp");
         plan.alloc("a", 100);
         plan.free("a");
-        chrome_trace("demo", &spans, &windows, Some(&sched_trace), Some(&plan))
+        let marks = vec![InstantMark {
+            ts_ns: 2400,
+            label: "drift step 0: 1 cell(s), 0 straggler(s)".into(),
+        }];
+        chrome_trace("demo", &spans, &windows, &marks, Some(&sched_trace), Some(&plan))
     }
 
     #[test]
@@ -250,8 +274,13 @@ mod tests {
         assert_eq!(ph("X"), 5);
         // counters: 3 span samples + 2 device closers + 3 plan samples
         assert_eq!(ph("C"), 8);
-        // instants: 1 retry + 1 loss
-        assert_eq!(ph("i"), 2);
+        // instants: 1 retry + 1 loss + 1 drift mark
+        assert_eq!(ph("i"), 3);
+        assert!(events.iter().any(|e| {
+            e.opt("name")
+                .map(|n| n.as_str().unwrap().starts_with("drift step 0"))
+                .unwrap_or(false)
+        }));
         // escaped span label survives
         assert!(events.iter().any(|e| {
             e.opt("name").map(|n| n.as_str().unwrap() == "row \"0\"").unwrap_or(false)
@@ -273,7 +302,7 @@ mod tests {
 
     #[test]
     fn empty_input_still_renders_valid_json() {
-        let json = chrome_trace("empty", &[], &[], None, None);
+        let json = chrome_trace("empty", &[], &[], &[], None, None);
         assert!(JsonValue::parse(&json).is_ok(), "{json}");
     }
 }

@@ -15,7 +15,26 @@ use crate::rowir::NodeKind;
 use crate::util::json::{escape, JsonValue};
 
 /// Report schema version (bump on any breaking layout change).
-pub const SCHEMA: u32 = 1;
+/// Schema 2 added the per-step drift/straggler fields and the
+/// recalibration totals (docs/OBSERVABILITY.md, "Online loop").
+pub const SCHEMA: u32 = 2;
+
+/// Every key this schema allows at the top level.  `from_json` rejects
+/// anything else *by name*: a document from a future schema that slipped
+/// past the version check (or a hand-edited report) fails loudly instead
+/// of silently dropping fields.
+const TOP_LEVEL_KEYS: [&str; 10] = [
+    "schema",
+    "kind",
+    "title",
+    "mode",
+    "workers",
+    "devices",
+    "totals",
+    "steps",
+    "device_time",
+    "calibration",
+];
 
 /// The per-step numbers a driver already has (the trainer copies them
 /// out of its `StepStats`; benches fill them directly) — keeping this a
@@ -34,6 +53,13 @@ pub struct StepInput {
     pub modeled_backoff_s: f64,
     pub lost_devices: u64,
     pub recomputed_nodes: u64,
+    /// Max |EWMA relative error| over the drift monitor's cells
+    /// (`obs::drift`) after this step; 0 when the monitor is off.
+    pub drift_max: f64,
+    /// Drift cells past the relative-error threshold this step.
+    pub drifting: u64,
+    /// Devices flagged as stragglers this step.
+    pub stragglers: Vec<u64>,
 }
 
 /// Predicted-vs-measured for one `NodeKind` within one step.
@@ -64,6 +90,10 @@ pub struct StepReport {
     /// Span-window wall-clock: latest span end − earliest span start.
     pub measured_s: f64,
     pub rel_err: f64,
+    /// Drift monitor state after this step (`StepInput` pass-through).
+    pub drift_max: f64,
+    pub drifting: u64,
+    pub stragglers: Vec<u64>,
     pub kinds: Vec<KindBreakdown>,
 }
 
@@ -95,6 +125,11 @@ pub struct Totals {
     pub modeled_backoff_s: f64,
     pub lost_devices: u64,
     pub recomputed_nodes: u64,
+    /// Cost-model refits performed by the online loop
+    /// (`Trainer::recalibrate_every`).
+    pub recalibrations: u64,
+    /// Refits that also swapped in a re-partitioned shard plan.
+    pub repartitions: u64,
 }
 
 /// The whole document.
@@ -242,12 +277,24 @@ impl RunReport {
             predicted_s,
             measured_s,
             rel_err,
+            drift_max: input.drift_max,
+            drifting: input.drifting,
+            stragglers: input.stragglers.clone(),
             kinds,
         });
     }
 
     pub fn set_calibration(&mut self, cal: CalibrationReport) {
         self.calibration = Some(cal);
+    }
+
+    /// Count one online-loop cost-model refit; `repartitioned` when the
+    /// refit also swapped in a rebuilt shard plan.
+    pub fn record_recalibration(&mut self, repartitioned: bool) {
+        self.totals.recalibrations += 1;
+        if repartitioned {
+            self.totals.repartitions += 1;
+        }
     }
 
     /// Mean relative makespan-prediction error over the run's steps.
@@ -290,9 +337,14 @@ impl RunReport {
         ));
         o.push_str(&format!("    \"lost_devices\": {},\n", self.totals.lost_devices));
         o.push_str(&format!(
-            "    \"recomputed_nodes\": {}\n",
+            "    \"recomputed_nodes\": {},\n",
             self.totals.recomputed_nodes
         ));
+        o.push_str(&format!(
+            "    \"recalibrations\": {},\n",
+            self.totals.recalibrations
+        ));
+        o.push_str(&format!("    \"repartitions\": {}\n", self.totals.repartitions));
         o.push_str("  },\n");
         o.push_str("  \"steps\": [\n");
         for (i, s) in self.steps.iter().enumerate() {
@@ -308,6 +360,9 @@ impl RunReport {
             o.push_str(&format!("      \"predicted_s\": {},\n", num(s.predicted_s)));
             o.push_str(&format!("      \"measured_s\": {},\n", num(s.measured_s)));
             o.push_str(&format!("      \"rel_err\": {},\n", num(s.rel_err)));
+            o.push_str(&format!("      \"drift_max\": {},\n", num(s.drift_max)));
+            o.push_str(&format!("      \"drifting\": {},\n", s.drifting));
+            o.push_str(&format!("      \"stragglers\": {},\n", u64s(&s.stragglers)));
             o.push_str("      \"kinds\": [\n");
             for (j, k) in s.kinds.iter().enumerate() {
                 o.push_str("        {\n");
@@ -379,6 +434,18 @@ impl RunReport {
                 "run report schema {schema} (this build reads {SCHEMA})"
             )));
         }
+        // forward-compat: an unknown top-level key means the document
+        // carries data this build would silently drop — reject it by name
+        if let JsonValue::Object(map) = &v {
+            for key in map.keys() {
+                if !TOP_LEVEL_KEYS.contains(&key.as_str()) {
+                    return Err(Error::Json2(format!(
+                        "run report: unknown top-level key '{key}' \
+                         (schema {SCHEMA} reads only {TOP_LEVEL_KEYS:?})"
+                    )));
+                }
+            }
+        }
         let t = v.get("totals")?;
         let totals = Totals {
             steps: t.get("steps")?.as_usize()?,
@@ -387,6 +454,8 @@ impl RunReport {
             modeled_backoff_s: f64_of(t.get("modeled_backoff_s")?)?,
             lost_devices: u64_of(t.get("lost_devices")?)?,
             recomputed_nodes: u64_of(t.get("recomputed_nodes")?)?,
+            recalibrations: u64_of(t.get("recalibrations")?)?,
+            repartitions: u64_of(t.get("repartitions")?)?,
         };
         let mut steps = Vec::new();
         for s in v.get("steps")?.as_array()? {
@@ -418,6 +487,14 @@ impl RunReport {
                 predicted_s: f64_of(s.get("predicted_s")?)?,
                 measured_s: f64_of(s.get("measured_s")?)?,
                 rel_err: f64_of(s.get("rel_err")?)?,
+                drift_max: f64_of(s.get("drift_max")?)?,
+                drifting: u64_of(s.get("drifting")?)?,
+                stragglers: s
+                    .get("stragglers")?
+                    .as_array()?
+                    .iter()
+                    .map(u64_of)
+                    .collect::<Result<Vec<u64>>>()?,
                 kinds,
             });
         }
@@ -497,6 +574,11 @@ impl RunReport {
             self.totals.recomputed_nodes.to_string(),
         ]);
         run.row(vec![
+            "recalibrations".into(),
+            self.totals.recalibrations.to_string(),
+        ]);
+        run.row(vec!["repartitions".into(), self.totals.repartitions.to_string()]);
+        run.row(vec![
             "mean_makespan_rel_err".into(),
             pct(self.mean_makespan_rel_err()),
         ]);
@@ -524,6 +606,28 @@ impl RunReport {
             ]);
         }
         out.push(steps);
+
+        let mut drift = Table::new(
+            "drift & stragglers",
+            &["step", "drift_max", "drifting_cells", "stragglers"],
+        );
+        for s in &self.steps {
+            drift.row(vec![
+                s.step.to_string(),
+                pct(s.drift_max),
+                s.drifting.to_string(),
+                if s.stragglers.is_empty() {
+                    "-".into()
+                } else {
+                    s.stragglers
+                        .iter()
+                        .map(|d| d.to_string())
+                        .collect::<Vec<_>>()
+                        .join(" ")
+                },
+            ]);
+        }
+        out.push(drift);
 
         let mut dev = Table::new(
             "device time",
@@ -645,6 +749,9 @@ mod tests {
                 modeled_backoff_s: 0.25,
                 lost_devices: 0,
                 recomputed_nodes: 0,
+                drift_max: 0.25,
+                drifting: 1,
+                stragglers: vec![1],
             },
             &spans,
             &model,
@@ -704,8 +811,47 @@ mod tests {
 
     #[test]
     fn schema_mismatch_is_rejected() {
-        let json = demo_report().to_json().replace("\"schema\": 1", "\"schema\": 9");
+        let json = demo_report().to_json().replace("\"schema\": 2", "\"schema\": 9");
         assert!(RunReport::from_json(&json).is_err());
+    }
+
+    #[test]
+    fn unknown_top_level_key_is_rejected_by_name() {
+        // a schema-3 probe: same version number, one extra top-level
+        // section — must fail *naming the key*, not silently drop it
+        let json = demo_report().to_json().replace(
+            "  \"kind\": \"lr-cnn-run-report\",\n",
+            "  \"kind\": \"lr-cnn-run-report\",\n  \"gpu_clock_mhz\": [1700],\n",
+        );
+        let err = RunReport::from_json(&json).expect_err("unknown key must be rejected");
+        let msg = err.to_string();
+        assert!(msg.contains("gpu_clock_mhz"), "error names the key: {msg}");
+        // a probe that also bumps the schema fails at the version gate
+        let probe = json.replace("\"schema\": 2", "\"schema\": 3");
+        let msg = RunReport::from_json(&probe).expect_err("schema 3 rejected").to_string();
+        assert!(msg.contains("schema 3"), "{msg}");
+    }
+
+    #[test]
+    fn drift_fields_round_trip_and_render() {
+        let rep = demo_report();
+        let back = RunReport::from_json(&rep.to_json()).unwrap();
+        assert_eq!(back.steps[0].drift_max, 0.25);
+        assert_eq!(back.steps[0].drifting, 1);
+        assert_eq!(back.steps[0].stragglers, vec![1]);
+        let all: String = rep.tables().iter().map(|t| t.markdown()).collect();
+        assert!(all.contains("drift & stragglers"), "{all}");
+    }
+
+    #[test]
+    fn recalibration_totals_accumulate_and_round_trip() {
+        let mut rep = demo_report();
+        rep.record_recalibration(false);
+        rep.record_recalibration(true);
+        assert_eq!(rep.totals.recalibrations, 2);
+        assert_eq!(rep.totals.repartitions, 1);
+        let back = RunReport::from_json(&rep.to_json()).unwrap();
+        assert_eq!(back.totals, rep.totals);
     }
 
     #[test]

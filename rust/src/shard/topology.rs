@@ -253,6 +253,24 @@ impl Topology {
         TRANSFER_SETUP_SEC + bytes as f64 / self.link_bytes_per_sec(a, b)
     }
 
+    /// Feed calibrated per-device compute rates back into the topology,
+    /// so every consumer that prices work from `DeviceModel`s — the
+    /// partitioner's `placed_seconds`, `PartitionPolicy::DpBoundary`,
+    /// `shard::modeled_makespan` — picks them up unchanged
+    /// (docs/SHARDING.md).  `rates[d]` is device d's *effective seconds
+    /// per byte* (`CostModel::secs_per_byte` after `costmodel::calibrate`);
+    /// it is folded back through the analytic identity
+    /// `k = NODE_FLOPS_PER_BYTE / (flops_per_sec · slab_efficiency)`.
+    /// Non-finite or non-positive rates and indices past the device list
+    /// are ignored (those devices keep their spec-sheet rate).
+    pub fn apply_secs_per_byte(&mut self, rates: &[f64]) {
+        for (dev, &k) in self.devices.iter_mut().zip(rates) {
+            if k.is_finite() && k > 0.0 {
+                dev.flops_per_sec = crate::costmodel::NODE_FLOPS_PER_BYTE / (k * dev.slab_efficiency);
+            }
+        }
+    }
+
     /// Per-device admission budgets: usable HBM minus the always-resident
     /// bytes ξ, the same headroom arithmetic as `SchedConfig::device_budget`.
     /// Failed devices budget 0 — they can neither run nor park anything.
@@ -346,6 +364,21 @@ mod tests {
         let b = t.budgets(xi);
         assert_eq!(b.len(), 2);
         assert_eq!(b[0], DeviceModel::rtx3090().usable_hbm() - xi);
+    }
+
+    #[test]
+    fn calibrated_rates_round_trip_through_the_device_model() {
+        let mut t = Topology::uniform(2, DeviceModel::rtx3090(), LinkKind::Pcie);
+        let stock = t.device(1).flops_per_sec;
+        // 2 ns/byte on device 0 (a CPU-stand-in rate), device 1 untouched
+        t.apply_secs_per_byte(&[2e-9]);
+        let got = crate::costmodel::node_seconds(1_000_000, t.device(0));
+        assert!((got - 2e-3).abs() / 2e-3 < 1e-12, "{got}");
+        assert_eq!(t.device(1).flops_per_sec, stock);
+        // junk rates are ignored
+        t.apply_secs_per_byte(&[f64::NAN, 0.0]);
+        assert_eq!(t.device(1).flops_per_sec, stock);
+        assert!((crate::costmodel::node_seconds(1_000_000, t.device(0)) - 2e-3).abs() < 1e-9);
     }
 
     #[test]

@@ -428,7 +428,7 @@ fn run_report_round_trips_and_perfetto_parses() {
 
 /// Mask the timing-derived lines of a one-key-per-line report JSON.
 fn normalized(report: &str) -> String {
-    const TIMING: [&str; 14] = [
+    const TIMING: [&str; 17] = [
         "step_ms",
         "predicted_s",
         "measured_s",
@@ -443,6 +443,11 @@ fn normalized(report: &str) -> String {
         "modeled_backoff_s",
         "samples",
         "transfer_samples",
+        // drift is a function of measured wall-clock vs prediction, so
+        // its per-step fields are timing-derived too
+        "drift_max",
+        "drifting",
+        "stragglers",
     ];
     report
         .lines()

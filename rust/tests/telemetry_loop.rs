@@ -1,0 +1,278 @@
+//! Integration: the online telemetry loop (docs/OBSERVABILITY.md) —
+//! drift-driven, calibration-guarded recalibration through the public
+//! `Trainer` API:
+//!
+//! 1. **The whole loop never changes the bits.**  With recording on and
+//!    `recalibrate_every(1)` — model refit after every step, guarded
+//!    plan rebuilds armed — per-step losses and final parameters stay
+//!    `to_bits()`-identical to the unrecorded serial trainer across the
+//!    mode × devices × policy matrix, injected device loss included.
+//! 2. **A guarded swap never worsens the modeled makespan.**  For every
+//!    topology size × policy × synthetic rate skew,
+//!    `ShardState::recalibrate` leaves the active plan's makespan at
+//!    `min(stale, fresh)` under the calibrated model.
+//! 3. **The online loop's bookkeeping is visible.**  `StepStats` carries
+//!    the recalibration/drift fields, the run report accumulates
+//!    recalibration totals and round-trips byte-exactly (schema 2), and
+//!    the Perfetto export still parses with the drift-mark lane.
+//! 4. **A failed run leaves a usable crash report.**  An injected
+//!    `lost` fault under the fail policy produces a bounded, valid
+//!    flight-recorder JSON containing the failing device's dispatch.
+
+mod common;
+
+use common::{assert_bits_equal, demo_program, ALL_MODES, ALL_POLICIES};
+
+use lr_cnn::coordinator::{trainer::train_loop, Mode, ParamSet, ShardState, Trainer};
+use lr_cnn::costmodel::CostModel;
+use lr_cnn::data::SyntheticCorpus;
+use lr_cnn::error::Error;
+use lr_cnn::faults::{DeviceLostPolicy, FaultConfig, FaultPlan};
+use lr_cnn::runtime::Runtime;
+use lr_cnn::sched::{RetryPolicy, SchedConfig};
+use lr_cnn::shard::ShardConfig;
+use lr_cnn::util::json::JsonValue;
+
+const STEPS: u64 = 3;
+
+/// The unrecorded serial trainer — the reference side of every
+/// bit-identity check below (same seed/lr/corpus as the online runs).
+fn serial_reference(mode: Mode, steps: u64) -> (Vec<f32>, ParamSet) {
+    let rt = Runtime::demo();
+    let m = rt.manifest.model.clone();
+    let corpus = SyntheticCorpus::new(m.n_classes, 3, m.h, m.w, 1234);
+    let mut tr = Trainer::new(&rt, mode, 0.02, 7).unwrap();
+    let losses = train_loop(&mut tr, &corpus, steps, 0).unwrap();
+    let params = tr.params.clone();
+    (losses, params)
+}
+
+/// A sharded trainer with the full online loop armed: recording on,
+/// `recalibrate_every(1)` (refit + guarded rebuild after every step),
+/// optional fault knobs.
+fn run_online(
+    mode: Mode,
+    steps: u64,
+    devices: usize,
+    policy: lr_cnn::shard::PartitionPolicy,
+    faults: Option<FaultConfig>,
+) -> (Vec<f32>, ParamSet, Vec<bool>) {
+    let rt = Runtime::demo();
+    let m = rt.manifest.model.clone();
+    let corpus = SyntheticCorpus::new(m.n_classes, 3, m.h, m.w, 1234);
+    let mut tr = Trainer::new(&rt, mode, 0.02, 7).unwrap();
+    let shard = ShardConfig::new(devices).with_policy(policy);
+    tr.set_sched(SchedConfig::pipelined(2).with_shard(shard)).unwrap();
+    if let Some(f) = faults {
+        tr.set_faults(f);
+    }
+    tr.set_recording(true);
+    tr.recalibrate_every(1);
+    let b = rt.manifest.model.batch;
+    let mut losses = Vec::new();
+    let mut recalibrated = Vec::new();
+    for s in 0..steps {
+        let (x, y, _) = corpus.batch(s, b);
+        let stats = tr.step(&x, &y).unwrap();
+        losses.push(stats.loss);
+        recalibrated.push(stats.recalibrated);
+    }
+    let params = tr.params.clone();
+    (losses, params, recalibrated)
+}
+
+// ---- 1. bit-identity with the whole loop enabled ------------------------
+
+#[test]
+fn online_loop_never_changes_the_bits() {
+    for mode in ALL_MODES {
+        let (serial_losses, serial_params) = serial_reference(mode, STEPS);
+        for devices in [2usize, 4] {
+            for policy in ALL_POLICIES {
+                let ctx = format!("{mode:?} d{devices} {policy:?} recal(1)");
+                let (losses, params, recalibrated) =
+                    run_online(mode, STEPS, devices, policy, None);
+                for (s, (a, b)) in losses.iter().zip(&serial_losses).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: loss step {s}");
+                }
+                assert_bits_equal(&params, &serial_params, &ctx);
+                assert!(
+                    recalibrated.iter().all(|&r| r),
+                    "{ctx}: recalibrate_every(1) refits after every step"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn online_loop_stays_bit_identical_through_a_device_loss() {
+    for mode in [Mode::RowHybrid, Mode::Tps] {
+        let ctx = format!("{mode:?} d2 lost+recal(1)");
+        let (serial_losses, serial_params) = serial_reference(mode, STEPS);
+        let faults = FaultConfig {
+            plan: Some(FaultPlan::parse("s1.d1=lost").unwrap()),
+            retry: RetryPolicy::default(),
+            on_device_lost: DeviceLostPolicy::Degrade,
+        };
+        let (losses, params, _) = run_online(
+            mode,
+            STEPS,
+            2,
+            lr_cnn::shard::PartitionPolicy::CostBalanced,
+            Some(faults),
+        );
+        for (s, (a, b)) in losses.iter().zip(&serial_losses).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: loss step {s}");
+        }
+        assert_bits_equal(&params, &serial_params, &ctx);
+    }
+}
+
+// ---- 2. the guarded swap is never modeled slower ------------------------
+
+#[test]
+fn guarded_repartition_never_worsens_the_modeled_makespan() {
+    let (_, program) = demo_program(Mode::RowHybrid);
+    for devices in [2usize, 4] {
+        for policy in ALL_POLICIES {
+            // skew < 1 makes device 0 look faster than the partitioner
+            // assumed, > 1 slower — both directions must stay guarded
+            for skew in [0.25f64, 1.0, 4.0] {
+                let ctx = format!("d{devices} {policy:?} skew {skew}");
+                let shard = ShardConfig::new(devices).with_policy(policy);
+                let cfg = SchedConfig::pipelined(2).with_shard(shard.clone());
+                let mut ss = ShardState::build(&program, &cfg, 0).unwrap();
+                let mut model = CostModel::from_topology(&shard.topology());
+                model.secs_per_byte[0] *= skew;
+                let stale = model.makespan(
+                    ss.plan().graph(),
+                    ss.plan().device_of(),
+                    ss.plan().devices(),
+                );
+                let rates = model.secs_per_byte.clone();
+                let out = ss.recalibrate(&rates, &model).expect("recovery context");
+                assert_eq!(out.stale_s, stale, "{ctx}: stale makespan matches");
+                assert!(
+                    !out.swapped || out.fresh_s <= out.stale_s,
+                    "{ctx}: swapped to a slower plan ({} > {})",
+                    out.fresh_s,
+                    out.stale_s
+                );
+                let active = model.makespan(
+                    ss.plan().graph(),
+                    ss.plan().device_of(),
+                    ss.plan().devices(),
+                );
+                let expect = if out.swapped { out.fresh_s } else { out.stale_s };
+                assert_eq!(
+                    active, expect,
+                    "{ctx}: the active plan is the guarded winner"
+                );
+                assert!(
+                    active <= stale,
+                    "{ctx}: recalibration worsened the makespan {stale} -> {active}"
+                );
+            }
+        }
+    }
+}
+
+// ---- 3. the loop's bookkeeping is visible -------------------------------
+
+#[test]
+fn recalibration_shows_up_in_stats_report_and_perfetto() {
+    let rt = Runtime::demo();
+    let m = rt.manifest.model.clone();
+    let corpus = SyntheticCorpus::new(m.n_classes, 3, m.h, m.w, 1234);
+    let mut tr = Trainer::new(&rt, Mode::RowHybrid, 0.02, 7).unwrap();
+    tr.set_sched(SchedConfig::pipelined(2).with_shard(ShardConfig::new(2))).unwrap();
+    tr.set_recording(true);
+    tr.recalibrate_every(2);
+    let b = rt.manifest.model.batch;
+    let mut recal = Vec::new();
+    for s in 0..4u64 {
+        let (x, y, _) = corpus.batch(s, b);
+        let stats = tr.step(&x, &y).unwrap();
+        assert!(stats.drift_max.is_finite() && stats.drift_max >= 0.0);
+        assert!(stats.stragglers.iter().all(|&d| d < 2), "straggler ids are devices");
+        recal.push(stats.recalibrated);
+    }
+    assert_eq!(recal, vec![false, true, false, true], "every 2nd step refits");
+
+    let report = tr.run_report().expect("recording on");
+    assert_eq!(report.totals.recalibrations, 2);
+    assert!(report.totals.repartitions <= 2);
+    // schema-2 JSON (drift fields included) round-trips byte-exactly
+    let json = tr.report_json().unwrap();
+    assert!(json.contains("\"drift_max\""));
+    assert!(json.contains("\"recalibrations\": 2"));
+    let back = lr_cnn::obs::RunReport::from_json(&json).expect("parses");
+    assert_eq!(back.to_json(), json, "byte-exact re-emission");
+    // the metrics registry counted every dispatch of the run
+    let snap = tr.metrics_snapshot().unwrap();
+    assert!(snap.dispatches > 0);
+    assert_eq!(snap.span_ns.count, snap.dispatches);
+    // the Perfetto export (drift-mark lane included) still parses
+    let perfetto = tr.perfetto_json().unwrap();
+    assert!(JsonValue::parse(&perfetto).is_ok());
+    // an on-demand flight report is valid and bounded even on success
+    let flight = tr.flight_json("on-demand").unwrap();
+    let v = JsonValue::parse(&flight).expect("valid flight JSON");
+    assert_eq!(
+        v.get("kind").and_then(|k| k.as_str()).unwrap(),
+        "lr-cnn-flight-report"
+    );
+}
+
+// ---- 4. crash report on an injected device loss -------------------------
+
+#[test]
+fn injected_loss_produces_a_bounded_crash_report_with_the_failing_dispatch() {
+    let rt = Runtime::demo();
+    let m = rt.manifest.model.clone();
+    let corpus = SyntheticCorpus::new(m.n_classes, 3, m.h, m.w, 1234);
+    let mut tr = Trainer::new(&rt, Mode::RowHybrid, 0.02, 7).unwrap();
+    tr.set_sched(SchedConfig::pipelined(2).with_shard(ShardConfig::new(2))).unwrap();
+    tr.set_faults(FaultConfig {
+        plan: Some(FaultPlan::parse("s1.d1=lost").unwrap()),
+        retry: RetryPolicy::default(),
+        on_device_lost: DeviceLostPolicy::Fail,
+    });
+    tr.set_recording(true);
+    match train_loop(&mut tr, &corpus, 4, 0) {
+        Err(Error::DeviceLost { device, .. }) => assert_eq!(device, 1),
+        other => panic!("expected DeviceLost, got ok={:?}", other.is_ok()),
+    }
+    let json = tr.flight_json("test: injected loss").expect("recording was on");
+    let v = JsonValue::parse(&json).expect("crash report is valid JSON");
+    assert_eq!(
+        v.get("kind").and_then(|k| k.as_str()).unwrap(),
+        "lr-cnn-flight-report"
+    );
+    assert_eq!(
+        v.get("reason").and_then(|r| r.as_str()).unwrap(),
+        "test: injected loss"
+    );
+    let cap = v.get("span_capacity").and_then(|c| c.as_usize()).unwrap();
+    let spans = v.get("spans").and_then(|s| s.as_array()).unwrap();
+    assert!(!spans.is_empty(), "the failed step's dispatches were captured");
+    assert!(spans.len() <= cap, "the ring stays bounded");
+    // the failing dispatch: device 1, the faulted step — injected faults
+    // record a zero-duration span, so it is present by construction
+    let failing = spans.iter().any(|s| {
+        let num = |key: &str| s.get(key).and_then(|v| v.as_f64()).unwrap_or(-1.0);
+        num("device") == 1.0 && num("step") == 1.0
+    });
+    assert!(failing, "crash report names the failing device's dispatch");
+    // the error itself was noted as an event
+    let events = v.get("events").and_then(|e| e.as_array()).unwrap();
+    assert!(
+        events
+            .iter()
+            .any(|e| e.as_str().map(|s| s.contains("step 1")).unwrap_or(false)),
+        "the step-failure note is present"
+    );
+    // the report also carries a metrics snapshot
+    assert!(json.contains("\"dispatches\""));
+}

@@ -1,0 +1,157 @@
+#!/usr/bin/env python3
+"""Arm the bench regression gate: promote repo-root BENCH_*.json into
+bench/baselines/.
+
+The gate (scripts/bench_diff.py, `make bench-diff`) only *enforces* the
+>20% regression limit once a baseline stops being a seed placeholder
+(``"baseline_seed": true``).  This script closes that loop: drop the
+bench JSONs from a trusted CI run's ``bench-jsons`` artifact at the repo
+root, then
+
+    make arm-baselines ARM_FLAGS=--dry-run   # preview
+    make arm-baselines                       # write
+
+Each promoted file is the current BENCH JSON with the seed-placeholder
+keys (``baseline_seed`` and its companion ``note``) stripped, re-emitted
+with sorted keys and 2-space indent so baseline diffs stay reviewable.
+``--dry-run`` prints, per file, whether it would be created / armed /
+updated and which gated entries change, without writing anything.
+
+``--self-test`` runs the built-in unit checks of ``arm_doc()`` /
+``describe_change()`` (CI invokes it next to bench_diff's); stdlib only.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+# Keys that mark (and annotate) a seed placeholder; never carried into
+# an armed baseline.
+SEED_KEYS = ("baseline_seed", "note")
+
+
+def arm_doc(doc):
+    """Return the armed form of a bench doc: seed markers stripped."""
+    return {k: v for k, v in doc.items() if k not in SEED_KEYS}
+
+
+def render(doc):
+    return json.dumps(doc, sort_keys=True, indent=2) + "\n"
+
+
+def describe_change(name, armed, old):
+    """One advisory line per file: what arming would do to the baseline."""
+    if old is None:
+        return f"{name}: NEW baseline (gate becomes binding)"
+    if old.get("baseline_seed"):
+        return f"{name}: seed placeholder -> armed (gate becomes binding)"
+    if arm_doc(old) == armed:
+        return f"{name}: unchanged"
+    return f"{name}: updated (already armed; numbers move)"
+
+
+def main(argv=None):
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument("--dry-run", action="store_true",
+                        help="print what would change without writing")
+    parser.add_argument("--self-test", action="store_true",
+                        help="run the built-in unit checks and exit")
+    args = parser.parse_args(argv)
+    if args.self_test:
+        return self_test()
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    baseline_dir = os.path.join(root, "bench", "baselines")
+
+    names = sorted(
+        f for f in os.listdir(root)
+        if f.startswith("BENCH_") and f.endswith(".json")
+    )
+    if not names:
+        print("arm_baselines: no BENCH_*.json at the repo root — "
+              "download CI's bench-jsons artifact (or run `make bench-*-quick`) first")
+        return 1
+
+    wrote = 0
+    for name in names:
+        with open(os.path.join(root, name)) as fh:
+            try:
+                doc = json.load(fh)
+            except ValueError as e:
+                print(f"arm_baselines: {name}: unparseable, skipped: {e}")
+                continue
+        if doc.get("baseline_seed"):
+            # root copy is itself a placeholder (e.g. copied back out of
+            # bench/baselines/) — promoting it would arm the gate on fake
+            # numbers
+            print(f"{name}: root copy is a seed placeholder, skipped")
+            continue
+        armed = arm_doc(doc)
+        dest = os.path.join(baseline_dir, name)
+        old = None
+        if os.path.exists(dest):
+            with open(dest) as fh:
+                try:
+                    old = json.load(fh)
+                except ValueError:
+                    old = {}
+        print(describe_change(name, armed, old))
+        if args.dry_run or (old is not None and arm_doc(old) == armed):
+            continue
+        with open(dest, "w") as fh:
+            fh.write(render(armed))
+        wrote += 1
+
+    verb = "would write" if args.dry_run else "wrote"
+    print(f"arm_baselines: {verb} into {os.path.relpath(baseline_dir, root)}/"
+          f"{'' if args.dry_run else f' ({wrote} file(s))'}")
+    if not args.dry_run and wrote:
+        print("review with `git diff bench/baselines/`, then commit to arm the gate")
+    return 0
+
+
+# ---- self-test (pytest-free; run by CI next to bench_diff's) ----
+
+def self_test():
+    checks = []
+
+    def check(label, cond):
+        checks.append((label, cond))
+        print(f"  {'ok' if cond else 'FAIL'}: {label}")
+
+    print("arm_baselines self-test:")
+    seed = {"bench": "x", "schema": 1, "baseline_seed": True,
+            "note": "placeholder", "runs": [{"scenario": "a", "mean_ms": 1.0}]}
+    armed = arm_doc(seed)
+    check("seed markers stripped",
+          "baseline_seed" not in armed and "note" not in armed)
+    check("payload preserved",
+          armed["runs"] == seed["runs"] and armed["schema"] == 1)
+    check("already-armed doc unchanged", arm_doc(armed) == armed)
+
+    out = render(armed)
+    check("rendered JSON round-trips", json.loads(out) == armed)
+    check("rendered JSON is sorted",
+          out.index('"bench"') < out.index('"runs"') < out.index('"schema"'))
+
+    check("new baseline described",
+          "NEW" in describe_change("B", armed, None))
+    check("seed -> armed described",
+          "armed" in describe_change("B", armed, seed))
+    check("identical baseline described",
+          describe_change("B", armed, dict(armed)) == "B: unchanged")
+    moved = dict(armed, runs=[{"scenario": "a", "mean_ms": 2.0}])
+    check("moved numbers described",
+          "updated" in describe_change("B", moved, armed))
+
+    bad = [label for label, cond in checks if not cond]
+    if bad:
+        print(f"arm_baselines self-test: FAILED ({len(bad)}/{len(checks)})")
+        return 1
+    print(f"arm_baselines self-test: ok ({len(checks)} checks)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

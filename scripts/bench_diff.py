@@ -4,7 +4,8 @@
 Every bench binary writes a BENCH_<name>.json trajectory file at the repo
 root (see the [[bench]] entries in rust/Cargo.toml).  This script pairs
 each of those with bench/baselines/BENCH_<name>.json and fails (exit 1)
-when any matched run entry's ``mean_ms`` regressed by more than
+when any matched run entry's ``mean_ms`` — or, for the shard-scaling
+bench, its modeled ``makespan_s`` — regressed by more than
 REGRESSION_PCT versus the baseline.
 
 Matching is schema-agnostic: for every top-level key whose value is a
@@ -13,11 +14,21 @@ list of objects (``runs``, ``ops``, ``pipelined``, ``sharded``,
 key except the known timing/derived ones — so adding a scenario to a
 bench never breaks the gate; the new entry is simply unmatched (advisory).
 
+For BENCH_shard_scaling.json the gate also prints the cost model's
+predicted-vs-measured makespan error per topology × policy
+(``|makespan_s·1e3 − mean_ms| / mean_ms``) — the drift the online loop
+(docs/OBSERVABILITY.md) exists to close.  The error itself is advisory:
+the analytic model prices GPU seconds while CI measures a CPU stand-in,
+so only *regressions* of either number are gated, never their gap.
+
 Escape hatches:
   * a baseline with ``"baseline_seed": true`` is a placeholder checked in
     before real CI numbers exist — timings are printed, never enforced;
   * ``BENCH_DIFF_SKIP=1`` skips the whole gate (e.g. a known-noisy runner);
   * a bench JSON with no baseline file at all is advisory.
+
+``--self-test`` runs the built-in unit checks of ``compare()`` (no
+pytest in the CI image) and exits nonzero on any failure.
 
 Stdlib only; python3.8+.
 """
@@ -26,10 +37,11 @@ import json
 import os
 import sys
 
-REGRESSION_PCT = 20.0  # fail when mean_ms grows past baseline by this much
+REGRESSION_PCT = 20.0  # fail when a gated metric grows past baseline by this
 
-# Measured / derived fields: never part of an entry's identity, and only
-# mean_ms is gated (p50/p95 and ratios are too noisy on shared runners).
+# Measured / derived fields: never part of an entry's identity.  Of
+# these, mean_ms is gated everywhere and makespan_s where present
+# (p50/p95 and ratios are too noisy on shared runners).
 TIMING_KEYS = {
     "mean_ms",
     "p50_ms",
@@ -44,13 +56,23 @@ TIMING_KEYS = {
     "overhead_vs_off",
     "overhead_vs_fault_free",
     "makespan_model_s",
+    "makespan_s",
     "retries",
     "backoff_s",
     "peak_bytes",
     "peak_mb",
+    "device_peaks",
     "device_peaks_mb",
     "execs_per_step",
+    "transfers",
+    "transfer_bytes",
+    "modeled_xfer_us",
+    "ledgers",
+    "under_ledger",
 }
+
+# Metrics gated per matched entry, in report order.
+GATED_KEYS = ("mean_ms", "makespan_s")
 
 
 def identity(entry):
@@ -81,13 +103,39 @@ def fmt_id(section, ident):
     return f"{section}[{parts}]" if parts else section
 
 
-def diff_one(name, current, baseline):
-    """Compare one bench doc against its baseline; return list of failures."""
+def makespan_error_lines(current):
+    """Predicted-vs-measured makespan error per entry carrying both
+    ``makespan_s`` (model seconds) and ``mean_ms`` (measured ms)."""
+    lines = []
+    for section, ident, entry in run_entries(current):
+        pred_ms = entry.get("makespan_s")
+        meas_ms = entry.get("mean_ms")
+        if not (isinstance(pred_ms, (int, float)) and isinstance(meas_ms, (int, float))):
+            continue
+        if meas_ms <= 0:
+            continue
+        pred_ms = pred_ms * 1e3
+        err = abs(pred_ms - meas_ms) / meas_ms
+        lines.append(
+            f"    {fmt_id(section, ident)}: predicted {pred_ms:.3f} ms "
+            f"vs measured {meas_ms:.3f} ms (rel err {err * 100.0:.0f}%)"
+        )
+    return lines
+
+
+def compare(name, current, baseline, limit_pct=REGRESSION_PCT):
+    """Pure comparison of one bench doc against its baseline.
+
+    Returns ``(failures, lines)``: the gate-failing messages and the
+    human report lines, so the function is unit-testable without
+    capturing stdout.
+    """
+    lines = []
     if baseline.get("baseline_seed"):
-        print(f"  {name}: baseline is a seed placeholder — advisory only")
+        lines.append(f"  {name}: baseline is a seed placeholder — advisory only")
         for section, ident, entry in run_entries(current):
-            print(f"    {fmt_id(section, ident)}: mean {entry['mean_ms']:.3f} ms")
-        return []
+            lines.append(f"    {fmt_id(section, ident)}: mean {entry['mean_ms']:.3f} ms")
+        return [], lines
 
     base_map = {}
     for section, ident, entry in run_entries(baseline):
@@ -99,26 +147,33 @@ def diff_one(name, current, baseline):
         base = base_map.get((section, ident))
         label = fmt_id(section, ident)
         if base is None:
-            print(f"    {label}: no baseline entry (new scenario?) — advisory")
+            lines.append(f"    {label}: no baseline entry (new scenario?) — advisory")
             continue
         matched += 1
-        cur_ms, base_ms = entry["mean_ms"], base["mean_ms"]
-        if not (isinstance(base_ms, (int, float)) and base_ms > 0):
-            continue
-        delta_pct = (cur_ms / base_ms - 1.0) * 100.0
-        line = f"    {label}: {base_ms:.3f} -> {cur_ms:.3f} ms ({delta_pct:+.1f}%)"
-        if delta_pct > REGRESSION_PCT:
-            failures.append(f"{name}: {label} regressed {delta_pct:+.1f}% "
-                            f"(limit +{REGRESSION_PCT:.0f}%)")
-            print(line + "  REGRESSION")
-        else:
-            print(line)
+        for key in GATED_KEYS:
+            cur_v, base_v = entry.get(key), base.get(key)
+            if not (isinstance(cur_v, (int, float)) and isinstance(base_v, (int, float))):
+                continue
+            if base_v <= 0:
+                continue
+            delta_pct = (cur_v / base_v - 1.0) * 100.0
+            line = f"    {label} {key}: {base_v:.3f} -> {cur_v:.3f} ({delta_pct:+.1f}%)"
+            if delta_pct > limit_pct:
+                failures.append(
+                    f"{name}: {label} {key} regressed {delta_pct:+.1f}% "
+                    f"(limit +{limit_pct:.0f}%)"
+                )
+                line += "  REGRESSION"
+            lines.append(line)
     if matched == 0:
-        print("    (no matching entries between current and baseline)")
-    return failures
+        lines.append("    (no matching entries between current and baseline)")
+    return failures, lines
 
 
-def main():
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    if "--self-test" in argv:
+        return self_test()
     if os.environ.get("BENCH_DIFF_SKIP") == "1":
         print("bench_diff: BENCH_DIFF_SKIP=1 — gate skipped")
         return 0
@@ -142,8 +197,14 @@ def main():
             except ValueError as e:
                 failures.append(f"{name}: unparseable bench JSON: {e}")
                 continue
-        base_path = os.path.join(baseline_dir, name)
         print(f"{name}:")
+        if name == "BENCH_shard_scaling.json":
+            err_lines = makespan_error_lines(current)
+            if err_lines:
+                print("  cost-model makespan error (advisory):")
+                for line in err_lines:
+                    print(line)
+        base_path = os.path.join(baseline_dir, name)
         if not os.path.exists(base_path):
             print("  no baseline in bench/baselines/ — advisory only")
             continue
@@ -153,7 +214,10 @@ def main():
             except ValueError as e:
                 failures.append(f"{name}: unparseable baseline: {e}")
                 continue
-        failures.extend(diff_one(name, current, baseline))
+        fails, lines = compare(name, current, baseline)
+        for line in lines:
+            print(line)
+        failures.extend(fails)
 
     if failures:
         print("\nbench_diff: FAILED")
@@ -161,6 +225,69 @@ def main():
             print(f"  {f}")
         return 1
     print("\nbench_diff: ok")
+    return 0
+
+
+# ---- self-test (pytest-free; run by CI as `bench_diff.py --self-test`) ----
+
+def _doc(mean_ms, makespan_s=None, seed=False):
+    entry = {"topology": "rtx3090x2", "policy": "dp", "mean_ms": mean_ms}
+    if makespan_s is not None:
+        entry["makespan_s"] = makespan_s
+    doc = {"bench": "x", "sharded": [entry]}
+    if seed:
+        doc["baseline_seed"] = True
+    return doc
+
+
+def self_test():
+    checks = []
+
+    def check(label, cond):
+        checks.append((label, cond))
+        print(f"  {'ok' if cond else 'FAIL'}: {label}")
+
+    print("bench_diff self-test:")
+    # identity ignores every timing key, so matching survives new numbers
+    a = {"topology": "t", "mean_ms": 1.0, "makespan_s": 2.0, "p95_ms": 9.0}
+    b = {"topology": "t", "mean_ms": 5.0, "makespan_s": 7.0}
+    check("identity ignores timing fields", identity(a) == identity(b))
+
+    # within the limit: no failures, one line per gated metric
+    fails, lines = compare("B", _doc(1.05, 0.002), _doc(1.0, 0.002))
+    check("5% drift passes", fails == [])
+    check("both gated metrics reported", sum("mean_ms" in l for l in lines) == 1
+          and sum("makespan_s" in l for l in lines) == 1)
+
+    # mean_ms regression past the limit fails
+    fails, _ = compare("B", _doc(1.3), _doc(1.0))
+    check("mean_ms +30% fails", len(fails) == 1 and "mean_ms" in fails[0])
+
+    # makespan_s regression fails even when mean_ms improved
+    fails, _ = compare("B", _doc(0.9, 0.0030), _doc(1.0, 0.0020))
+    check("makespan_s +50% fails", len(fails) == 1 and "makespan_s" in fails[0])
+
+    # seed baselines never fail
+    fails, lines = compare("B", _doc(99.0), _doc(1.0, seed=True))
+    check("seed baseline is advisory", fails == [] and "seed placeholder" in lines[0])
+
+    # unmatched scenarios are advisory
+    cur = {"sharded": [{"topology": "new", "mean_ms": 9.0}]}
+    fails, lines = compare("B", cur, _doc(1.0))
+    check("new scenario is advisory",
+          fails == [] and any("no baseline entry" in l for l in lines))
+
+    # predicted-vs-measured: 0.002 s model vs 1.0 ms measured = +100%
+    lines = makespan_error_lines(_doc(1.0, 0.002))
+    check("makespan error computed",
+          len(lines) == 1 and "rel err 100%" in lines[0])
+    check("no makespan -> no error lines", makespan_error_lines(_doc(1.0)) == [])
+
+    bad = [label for label, cond in checks if not cond]
+    if bad:
+        print(f"bench_diff self-test: FAILED ({len(bad)}/{len(checks)})")
+        return 1
+    print(f"bench_diff self-test: ok ({len(checks)} checks)")
     return 0
 
 
