@@ -7,7 +7,7 @@
 
 RUST_MANIFEST := rust/Cargo.toml
 
-.PHONY: build test artifacts ir-dump bench-hotpath bench-hotpath-quick bench-sched bench-sched-quick bench-shard bench-shard-quick bench-fault bench-fault-quick bench-obs bench-obs-quick bench-diff arm-baselines fault-matrix lint
+.PHONY: build test artifacts ir-dump lint-ir bench-hotpath bench-hotpath-quick bench-sched bench-sched-quick bench-shard bench-shard-quick bench-fault bench-fault-quick bench-obs bench-obs-quick bench-diff arm-baselines fault-matrix lint
 
 build:
 	cargo build --release --manifest-path $(RUST_MANIFEST)
@@ -27,6 +27,19 @@ ir-dump:
 		cargo run --release --manifest-path $(RUST_MANIFEST) -- plan --dump-ir --artifacts rust/artifacts; \
 	else \
 		cargo run --release --manifest-path $(RUST_MANIFEST) -- plan --dump-ir; \
+	fi
+
+# Statically lint the row-program IR for all 4 modes — serial graphs
+# plus 2-device shard plans under every partition policy — through
+# `rowir::analysis` (docs/ANALYSIS.md): determinism lint, liveness peak
+# bound, shard-plan race/transfer checker.  Exits non-zero on any error
+# diagnostic and writes the machine-readable report to LINT_ir.json at
+# the repo root (uploaded by CI next to the BENCH_*.json artifacts).
+lint-ir:
+	@if [ -f rust/artifacts/manifest.json ]; then \
+		cargo run --release --manifest-path $(RUST_MANIFEST) -- plan --lint --artifacts rust/artifacts --lint-out LINT_ir.json; \
+	else \
+		cargo run --release --manifest-path $(RUST_MANIFEST) -- plan --lint --lint-out LINT_ir.json; \
 	fi
 
 # Full hot-path measurement; writes BENCH_l3_hotpath.json at the repo

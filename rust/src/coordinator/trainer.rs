@@ -1095,6 +1095,12 @@ impl<'r> Trainer<'r> {
             ),
         };
         let mode = self.plan.mode.label();
+        // a crash report should say whether the plan it describes was
+        // statically clean (docs/ANALYSIS.md)
+        let mut flight = obs::flight::FlightRecorder::default();
+        if let Some(v) = self.plan_lint_verdict() {
+            flight.set_plan_lint(v);
+        }
         self.obs = Some(ObsState {
             recorder: Recorder::new(workers),
             report: obs::RunReport::new(
@@ -1107,9 +1113,29 @@ impl<'r> Trainer<'r> {
             spans: Vec::new(),
             step_no: 0,
             drift: obs::drift::DriftMonitor::default(),
-            flight: obs::flight::FlightRecorder::default(),
+            flight,
             marks: Vec::new(),
         });
+    }
+
+    /// Static-analysis report of the active plan: the sharded plan's
+    /// full report (graph passes + shard checks) when sharding is
+    /// active, else the lowered program's graph report.  `None` before a
+    /// program is lowered.  What `train --lint-strict` gates on.
+    pub fn plan_lint_report(&self) -> Option<crate::rowir::analysis::Report> {
+        match self.sched.shard.as_ref() {
+            Some(ss) => Some(ss.plan.analyze()),
+            None => self
+                .program
+                .as_ref()
+                .map(|p| crate::rowir::analysis::analyze(p.graph())),
+        }
+    }
+
+    /// The active plan's one-line static-lint verdict
+    /// ([`crate::rowir::analysis::Report::verdict`]).
+    pub fn plan_lint_verdict(&self) -> Option<String> {
+        self.plan_lint_report().map(|r| r.verdict())
     }
 
     /// Whether span recording is armed.
@@ -1301,6 +1327,13 @@ impl<'r> Trainer<'r> {
             // predictions — the pre-recalibration one
             let drift = o.drift.observe(&spans, &o.model);
             o.flight.push_spans(&spans);
+            if !stats.lost_devices.is_empty() {
+                // recovery swapped in a repartitioned plan mid-step: the
+                // crash report's verdict must describe the *active* plan
+                if let Some(ss) = self.sched.shard.as_ref() {
+                    o.flight.set_plan_lint(ss.plan.analyze().verdict());
+                }
+            }
             if !drift.stragglers.is_empty() {
                 o.flight.note(format!(
                     "step {}: straggler device(s) {:?}",
@@ -1364,6 +1397,7 @@ impl<'r> Trainer<'r> {
                                 // graph; keeping it would let trace_json
                                 // mix the two
                                 self.last_trace = None;
+                                o.flight.set_plan_lint(ss.plan.analyze().verdict());
                                 o.flight.note(format!(
                                     "step {}: repartitioned (makespan {:.3e}s -> {:.3e}s)",
                                     o.step_no - 1,

@@ -30,6 +30,7 @@
 //! | [`costmodel`] | τ/ι FLOP model, CI/OD counters, relative latency |
 //! | [`runtime`] | PJRT client, manifest, `ExecHandle` executable table, zero-copy `TensorView` plumbing |
 //! | [`rowir`] | the row-program IR (docs/ROWIR.md): task-carrying dependency graph, per-mode lowering, serial interpreter + IR-walk memory replay — the one program every driver runs |
+//! | [`rowir::analysis`] | static verification over the IR (docs/ANALYSIS.md): determinism lint (the bit-identity precondition as a checked theorem), liveness + O(V+E) static peak bound, shard-plan race/transfer checker — gates every plan-construction path |
 //! | [`sched`] | weak-dependency row scheduler: memory admission, pipelined worker-pool executor over a `rowir` graph |
 //! | [`shard`] | multi-device row sharding: heterogeneous topologies (`DeviceSpec`), `Blocked`/`CostBalanced`/`DpBoundary` partitioners, transfer lowering (transfers are ordinary IR nodes), persistent per-device-ledger executor with bounded retry + device-loss recovery |
 //! | [`faults`] | deterministic fault injection (docs/RESILIENCE.md): seeded `FaultPlan` schedules, dispatch-level `FaultInjector`, backend-level `FaultyBackend` |

@@ -11,6 +11,14 @@
 //!          manifest when given, the built-in demo bundle otherwise),
 //!          validate() each program and emit the node/task/deps/bytes
 //!          JSON (docs/ROWIR.md); nonzero exit on any lowering regression
+//!   plan   --lint [--devices N] [--artifacts DIR] [--lint-out FILE]
+//!          — run the static-analysis suite (docs/ANALYSIS.md: structure,
+//!          determinism lint, liveness, shard race/transfer checker) over
+//!          every mode's lowered program, serially and sharded over N
+//!          devices (default 2) under all three partition policies;
+//!          renders diagnostics as tables, --lint-out writes the
+//!          machine-readable JSON report, nonzero exit on any error
+//!          diagnostic
 //!   train  --mode base|overl-h|2ps|naive [--steps N] [--lr F] [--artifacts DIR]
 //!          [--demo] [--workers N] [--devices N] [--device-spec SPEC]
 //!          [--policy blocked|balanced|dp] [--link pcie|nvlink]
@@ -37,7 +45,10 @@
 //!          report — on a failed run it captures the failing dispatch,
 //!          on success the last spans on demand; --recalibrate-every N
 //!          arms the online loop (refit the cost model every N steps and
-//!          repartition under drift, guarded never-slower)
+//!          repartition under drift, guarded never-slower);
+//!          --lint-strict refuses to train unless the active plan's
+//!          static-analysis report is fully clean — warnings included
+//!          (docs/ANALYSIS.md)
 //!   info   [--artifacts DIR]
 //!          — print the artifact bundle inventory
 //!   trace  --net vgg16 --strategy overl-h [--batch B] [--rows N] [--out FILE]
@@ -218,9 +229,143 @@ fn cmd_dump_ir(flags: &HashMap<String, String>) -> Result<(), String> {
     Ok(())
 }
 
+/// `plan --lint`: the static-analysis sweep (docs/ANALYSIS.md).  Every
+/// mode's lowered program is analyzed serially and — with `--devices N`,
+/// default 2 — sharded under each partition policy, so the shard
+/// race/transfer checker runs on real lowered plans.  Diagnostics render
+/// as tables; `--lint-out FILE` writes the machine-readable JSON report
+/// (the CI artifact).  Any error-severity diagnostic fails the command.
+fn cmd_lint(flags: &HashMap<String, String>) -> Result<(), String> {
+    use lr_cnn::rowir::{self, analysis, Mode};
+    use lr_cnn::runtime::Manifest;
+    use lr_cnn::shard::ShardPlan;
+
+    let man = match flags.get("artifacts").filter(|d| !d.is_empty()) {
+        Some(dir) => Manifest::load(std::path::Path::new(dir)).map_err(|e| e.to_string())?,
+        None => {
+            eprintln!("plan --lint: no --artifacts given, linting the built-in demo bundle");
+            Manifest::demo(2)
+        }
+    };
+    let devices: usize = flags
+        .get("devices")
+        .map(String::as_str)
+        .unwrap_or("2")
+        .parse()
+        .map_err(|_| "bad --devices")?;
+    let mut entries: Vec<String> = Vec::new();
+    let mut failures: Vec<String> = Vec::new();
+    let mut clean = 0usize;
+    let esc = lr_cnn::util::json::escape;
+    let record = |entries: &mut Vec<String>, mode: Mode, scope: &str, rep: &analysis::Report| {
+        entries.push(format!(
+            "{{\"mode\": \"{}\", \"scope\": \"{}\", \"report\": {}}}",
+            esc(mode.label()),
+            esc(scope),
+            rep.to_json()
+        ));
+        if rep.is_clean() {
+            println!("lint {:<18} {:<12} clean", mode.label(), scope);
+        } else {
+            rep.to_table(format!("{} [{scope}] lint", mode.label())).print();
+        }
+    };
+    for mode in Mode::ALL {
+        let program = match rowir::lower(&man, mode) {
+            Ok(p) => p,
+            // an uneven naive split is a plan property of this bundle,
+            // not a lint finding (same contract as --dump-ir)
+            Err(lr_cnn::Error::InfeasiblePlan(msg)) => {
+                entries.push(format!(
+                    "{{\"mode\": \"{}\", \"scope\": \"serial\", \"infeasible\": \"{}\"}}",
+                    esc(mode.label()),
+                    esc(&msg)
+                ));
+                println!(
+                    "lint {:<18} {:<12} infeasible on this bundle (skipped)",
+                    mode.label(),
+                    "serial"
+                );
+                continue;
+            }
+            Err(e) => {
+                // the in-lowering gate already failed: surface it as this
+                // mode's finding and keep sweeping the other modes
+                entries.push(format!(
+                    "{{\"mode\": \"{}\", \"scope\": \"serial\", \"error\": \"{}\"}}",
+                    esc(mode.label()),
+                    esc(&e.to_string())
+                ));
+                failures.push(format!("{} [serial]: {e}", mode.label()));
+                continue;
+            }
+        };
+        let rep = rowir::analysis::analyze(program.graph());
+        if rep.has_errors() {
+            failures.push(format!("{} [serial]: {}", mode.label(), rep.verdict()));
+        } else {
+            clean += 1;
+        }
+        record(&mut entries, mode, "serial", &rep);
+        if devices < 2 {
+            continue;
+        }
+        for policy in [
+            PartitionPolicy::Blocked,
+            PartitionPolicy::CostBalanced,
+            PartitionPolicy::DpBoundary,
+        ] {
+            let scope = format!("{policy:?}@{devices}");
+            let topo = ShardConfig::new(devices).topology();
+            match ShardPlan::build(program.graph(), &topo, policy, vec![u64::MAX; devices]) {
+                Ok(plan) => {
+                    let rep = plan.analyze();
+                    if rep.has_errors() {
+                        failures.push(format!("{} [{scope}]: {}", mode.label(), rep.verdict()));
+                    } else {
+                        clean += 1;
+                    }
+                    record(&mut entries, mode, &scope, &rep);
+                }
+                Err(e) => {
+                    entries.push(format!(
+                        "{{\"mode\": \"{}\", \"scope\": \"{}\", \"error\": \"{}\"}}",
+                        esc(mode.label()),
+                        esc(&scope),
+                        esc(&e.to_string())
+                    ));
+                    failures.push(format!("{} [{scope}]: {e}", mode.label()));
+                }
+            }
+        }
+    }
+    if let Some(path) = flags.get("lint-out").filter(|p| !p.is_empty()) {
+        let json = format!(
+            "{{\n  \"kind\": \"lr-cnn-lint-report\",\n  \"failing\": {},\n  \"entries\": [\n    {}\n  ]\n}}\n",
+            failures.len(),
+            entries.join(",\n    ")
+        );
+        std::fs::write(path, json).map_err(|e| format!("--lint-out {path}: {e}"))?;
+        eprintln!("wrote lint report ({} entries) to {path}", entries.len());
+    }
+    if failures.is_empty() {
+        println!("lint: {clean} graph(s) statically clean");
+        Ok(())
+    } else {
+        Err(format!(
+            "lint: {} failing graph(s): {}",
+            failures.len(),
+            failures.join("; ")
+        ))
+    }
+}
+
 fn cmd_plan(flags: &HashMap<String, String>) -> Result<(), String> {
     if flags.contains_key("dump-ir") {
         return cmd_dump_ir(flags);
+    }
+    if flags.contains_key("lint") {
+        return cmd_lint(flags);
     }
     let net = net_by_name(flags.get("net").map(String::as_str).unwrap_or("vgg16"))
         .ok_or("unknown --net (vgg16|resnet50|minivgg)")?;
@@ -483,6 +628,23 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<(), CliError> {
                 ss.plan().transfers().len(),
                 ss.plan().modeled_transfer_seconds() * 1e6
             );
+        }
+    }
+    if flags.contains_key("lint-strict") {
+        // gate *after* set_sched so the sharded plan (not just the
+        // lowered program) is what gets judged
+        match tr.plan_lint_report() {
+            Some(rep) if rep.is_clean() => {
+                println!("lint: plan statically clean ({} pass(es))", rep.passes.len());
+            }
+            Some(rep) => {
+                rep.to_table("plan lint").print();
+                return Err(CliError::Run(Error::Sched(format!(
+                    "--lint-strict: plan is not statically clean ({})",
+                    rep.verdict()
+                ))));
+            }
+            None => eprintln!("--lint-strict: no lowered plan to lint (base mode?)"),
         }
     }
     let report_out = flags.get("report-out").filter(|p| !p.is_empty());

@@ -31,6 +31,10 @@ pub struct FlightRecorder {
     spans: VecDeque<Span>,
     events: VecDeque<String>,
     dropped_spans: u64,
+    /// Static-lint verdict of the plan that was active when the report
+    /// was cut (`rowir::analysis::Report::verdict`) — a crash report
+    /// should say whether the plan it describes was statically clean.
+    plan_lint: Option<String>,
 }
 
 impl Default for FlightRecorder {
@@ -47,7 +51,14 @@ impl FlightRecorder {
             spans: VecDeque::new(),
             events: VecDeque::new(),
             dropped_spans: 0,
+            plan_lint: None,
         }
+    }
+
+    /// Record the active plan's static-lint verdict (replaced whenever
+    /// the plan is swapped: initial build, recalibration, recovery).
+    pub fn set_plan_lint(&mut self, verdict: impl Into<String>) {
+        self.plan_lint = Some(verdict.into());
     }
 
     /// Fold a step's drained spans into the ring, evicting the oldest.
@@ -89,6 +100,10 @@ impl FlightRecorder {
         out.push_str(&format!("  \"reason\": \"{}\",\n", escape(reason)));
         out.push_str(&format!("  \"span_capacity\": {},\n", self.span_cap));
         out.push_str(&format!("  \"dropped_spans\": {},\n", self.dropped_spans));
+        match &self.plan_lint {
+            Some(v) => out.push_str(&format!("  \"plan_lint\": \"{}\",\n", escape(v))),
+            None => out.push_str("  \"plan_lint\": null,\n"),
+        }
         out.push_str("  \"events\": [");
         for (i, e) in self.events.iter().enumerate() {
             if i > 0 {
@@ -176,6 +191,7 @@ mod tests {
         lost.dur_ns = 0; // injected fault: dispatched, never ran
         fr.push_spans(&[lost]);
         fr.note("step 0: device 1 lost \"boom\"");
+        fr.set_plan_lint("clean");
         let reg = crate::obs::metrics::MetricsRegistry::default();
         let json = fr.to_json("DeviceLost { device: 1, node: 7 }", Some(&reg.snapshot()));
 
@@ -183,6 +199,11 @@ mod tests {
         assert_eq!(
             v.get("kind").and_then(|k| k.as_str()).unwrap(),
             "lr-cnn-flight-report"
+        );
+        assert_eq!(
+            v.get("plan_lint").and_then(|k| k.as_str()).unwrap(),
+            "clean",
+            "the report says whether the active plan was statically clean"
         );
         assert!(json.contains("\"device\": 1"));
         assert!(json.contains("\"dur_ns\": 0"));

@@ -1,0 +1,231 @@
+//! The determinism lint — the bit-identity precondition, checked.
+//!
+//! Every driver's "bit-identical to serial" proof rests on four
+//! structural facts about the graph (docs/ROWIR.md, docs/ANALYSIS.md):
+//!
+//! 1. **Reductions are barrier-confined** ([`Code::UnbarrieredReduction`]).
+//!    f32 addition is not associative, so a node folding two or more row
+//!    outputs is deterministic only if it is a [`NodeKind::Barrier`] —
+//!    the one kind the executors dispatch after *all* deps finished, on
+//!    one thread.  A Row/TpsRow folding row outputs would see them in
+//!    scheduling order.  Transfer chains are looked through: a copy of a
+//!    row output is still a row output.
+//! 2. **Fold order is id order** ([`Code::FoldOrder`]).  Barrier handlers
+//!    fold `deps` left-to-right; ids are the serial order, so deps must
+//!    be strictly ascending — unsorted deps fold in the wrong order,
+//!    duplicated deps fold an input twice.
+//! 3. **Single writer per buffer** ([`Code::DoubleWriter`]).  Labels name
+//!    handoff slots; two nodes with one label would race on the slot and
+//!    make `find()` lie.
+//! 4. **No cross-row write aliasing** ([`Code::CrossRowAlias`]).  Tasks
+//!    name the work *and* the output row slab; two nodes carrying the
+//!    same concrete task would write one slab twice in schedule order.
+//!    `Opaque` (id-identified hand-built work) and `Transfer` (one copy
+//!    per (producer, destination), distinguished by label/endpoint) are
+//!    exempt — their identity is not their task.
+//!
+//! A violation reports the counterexample node, which is the whole point:
+//! "this graph is non-deterministic *because of node 17*".
+
+use std::collections::HashMap;
+
+use super::super::graph::{Graph, NodeId, NodeKind};
+use super::super::task::Task;
+use super::{Code, Diag, Pass};
+
+/// Resolve a dependency to its producing computation, looking through
+/// Transfer copies (a transfer has exactly one dep; a malformed one is
+/// reported by shardcheck, so stop rather than assume).
+fn producer_kind(graph: &Graph, mut id: NodeId) -> NodeKind {
+    loop {
+        let node = graph.node(id);
+        match (node.kind, node.deps.first()) {
+            (NodeKind::Transfer, Some(&src)) => id = src,
+            _ => return node.kind,
+        }
+    }
+}
+
+pub struct DeterminismPass;
+
+impl Pass for DeterminismPass {
+    fn name(&self) -> &'static str {
+        "determinism"
+    }
+
+    fn run(&self, graph: &Graph, out: &mut Vec<Diag>) {
+        let mut labels: HashMap<&str, NodeId> = HashMap::with_capacity(graph.len());
+        let mut tasks: HashMap<Task, NodeId> = HashMap::with_capacity(graph.len());
+        for (id, node) in graph.nodes().iter().enumerate() {
+            // (2) fold order: strictly ascending deps
+            if let Some(w) = node.deps.windows(2).find(|w| w[0] >= w[1]) {
+                out.push(Diag::error(
+                    Code::FoldOrder,
+                    Some(id),
+                    format!(
+                        "node '{}' deps not strictly ascending ({} then {}) — a \
+                         reduction here would fold out of serial order",
+                        node.label, w[0], w[1]
+                    ),
+                ));
+            }
+            // (1) un-barriered reduction: ≥2 row-producing inputs outside
+            // a barrier
+            if node.kind != NodeKind::Barrier {
+                let row_inputs = node
+                    .deps
+                    .iter()
+                    .filter(|&&d| {
+                        matches!(producer_kind(graph, d), NodeKind::Row | NodeKind::TpsRow)
+                    })
+                    .count();
+                if row_inputs >= 2 {
+                    out.push(Diag::error(
+                        Code::UnbarrieredReduction,
+                        Some(id),
+                        format!(
+                            "node '{}' ({:?}) folds {row_inputs} row outputs outside a \
+                             barrier — f32 fold order would depend on scheduling",
+                            node.label, node.kind
+                        ),
+                    ));
+                }
+            }
+            // (3) single writer per buffer
+            if let Some(&first) = labels.get(node.label.as_str()) {
+                out.push(Diag::error(
+                    Code::DoubleWriter,
+                    Some(id),
+                    format!(
+                        "nodes {first} and {id} both write buffer '{}' — \
+                         single-writer precondition broken",
+                        node.label
+                    ),
+                ));
+            } else {
+                labels.insert(node.label.as_str(), id);
+            }
+            // (4) cross-row write aliasing
+            if !matches!(node.task, Task::Opaque | Task::Transfer) {
+                if let Some(&first) = tasks.get(&node.task) {
+                    out.push(Diag::error(
+                        Code::CrossRowAlias,
+                        Some(id),
+                        format!(
+                            "nodes {first} and {id} both carry task {:?} — they \
+                             would write the same row slab",
+                            node.task
+                        ),
+                    ));
+                } else {
+                    tasks.insert(node.task, id);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(graph: &Graph) -> Vec<Diag> {
+        let mut out = Vec::new();
+        DeterminismPass.run(graph, &mut out);
+        out
+    }
+
+    #[test]
+    fn barrier_confined_reduction_is_accepted() {
+        let mut g = Graph::new();
+        let a = g.push_out(NodeKind::Row, "a", vec![], 10, 4);
+        let b = g.push_out(NodeKind::Row, "b", vec![], 10, 4);
+        g.push(NodeKind::Barrier, "red", vec![a, b], 2);
+        assert!(run(&g).is_empty());
+    }
+
+    #[test]
+    fn row_folding_two_rows_is_det001_with_the_counterexample() {
+        let mut g = Graph::new();
+        let a = g.push_out(NodeKind::Row, "a", vec![], 10, 4);
+        let b = g.push_out(NodeKind::Row, "b", vec![], 10, 4);
+        let bad = g.push(NodeKind::Row, "sneaky-reduce", vec![a, b], 2);
+        let diags = run(&g);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].code, Code::UnbarrieredReduction);
+        assert_eq!(diags[0].node, Some(bad));
+    }
+
+    #[test]
+    fn det001_sees_through_transfer_chains() {
+        let mut g = Graph::new();
+        let a = g.push_out(NodeKind::Row, "a", vec![], 10, 4);
+        let b = g.push_out(NodeKind::Row, "b", vec![], 10, 4);
+        let ta = g.push_task(NodeKind::Transfer, "xfer.a.d1", vec![a], 4, 4, Task::Transfer);
+        let tb = g.push_task(NodeKind::Transfer, "xfer.b.d1", vec![b], 4, 4, Task::Transfer);
+        // a barrier folding the copies is still fine...
+        g.push(NodeKind::Barrier, "red", vec![ta, tb], 2);
+        assert!(run(&g).is_empty());
+        // ...a row folding them is still a hidden reduction
+        let bad = g.push(NodeKind::Row, "sneaky", vec![ta, tb], 2);
+        let diags = run(&g);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].code, Code::UnbarrieredReduction);
+        assert_eq!(diags[0].node, Some(bad));
+    }
+
+    #[test]
+    fn one_row_input_plus_barriers_is_not_a_reduction() {
+        // the BpRow shape: deps = [head (barrier), ck (barrier)]
+        let mut g = Graph::new();
+        let a = g.push_out(NodeKind::Row, "a", vec![], 10, 4);
+        let head = g.push_out(NodeKind::Barrier, "head", vec![a], 5, 4);
+        let ck = g.push_out(NodeKind::Barrier, "ck", vec![a], 5, 4);
+        g.push(NodeKind::Row, "bp", vec![head, ck], 3);
+        assert!(run(&g).is_empty());
+    }
+
+    #[test]
+    fn unsorted_deps_are_det002() {
+        let mut g = Graph::new();
+        let a = g.push(NodeKind::Row, "a", vec![], 1);
+        let b = g.push(NodeKind::Row, "b", vec![], 1);
+        g.push(NodeKind::Barrier, "red", vec![a, b], 1);
+        g.nodes_mut()[2].deps = vec![b, a]; // corrupt past push's sort
+        let diags = run(&g);
+        assert!(diags.iter().any(|d| d.code == Code::FoldOrder && d.node == Some(2)));
+        // duplicated deps too (fold an input twice)
+        g.nodes_mut()[2].deps = vec![a, a];
+        let diags = run(&g);
+        assert!(diags.iter().any(|d| d.code == Code::FoldOrder && d.node == Some(2)));
+    }
+
+    #[test]
+    fn duplicate_label_is_det003_naming_the_second_writer() {
+        let mut g = Graph::new();
+        g.push(NodeKind::Row, "slot", vec![], 1);
+        let second = g.push(NodeKind::Row, "slot2", vec![], 1);
+        g.nodes_mut()[second].label = "slot".into();
+        let diags = run(&g);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].code, Code::DoubleWriter);
+        assert_eq!(diags[0].node, Some(second));
+    }
+
+    #[test]
+    fn duplicate_concrete_task_is_det004_but_opaque_is_exempt() {
+        let mut g = Graph::new();
+        g.push_task(NodeKind::Row, "r0", vec![], 1, 0, Task::FpRow { seg: 0, row: 0 });
+        let second =
+            g.push_task(NodeKind::Row, "r0b", vec![], 1, 0, Task::FpRow { seg: 0, row: 0 });
+        let diags = run(&g);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].code, Code::CrossRowAlias);
+        assert_eq!(diags[0].node, Some(second));
+        // many Opaque nodes are the norm for hand-built graphs
+        let mut g = Graph::new();
+        g.push(NodeKind::Row, "a", vec![], 1);
+        g.push(NodeKind::Row, "b", vec![], 1);
+        assert!(run(&g).is_empty());
+    }
+}

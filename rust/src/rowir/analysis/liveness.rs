@@ -1,0 +1,196 @@
+//! Def-use / liveness dataflow core + the static peak-memory bound.
+//!
+//! The sweep walks nodes in ascending id order — the serial schedule —
+//! replaying exactly the event ordering of `interp::run_subset` and the
+//! `memory::sim` replay: a node's `est_bytes` working set is charged
+//! while it runs, its `out_bytes` park afterwards if anything still
+//! reads them, and a parked output is released the moment its last
+//! consumer finishes (*after* that consumer parked its own output — the
+//! order the ledger uses, so the bound never under-counts the handoff
+//! overlap).
+//!
+//! Because the sweep mirrors the replay event-for-event,
+//! [`static_peak`] equals the serial replay peak **exactly** on every
+//! graph — in particular on fan graphs — which makes it a sound `>=`
+//! admission bound that costs O(V+E) and needs no replay machinery,
+//! schedules, or simulator (property-tested against `interp::run` in
+//! `tests/analysis_properties.rs`).  [`static_device_peaks`] is the same
+//! sweep split over a device assignment, the static twin of
+//! `interp::schedules` + `memory::sim::simulate`.
+
+use super::super::graph::{Graph, NodeId};
+use super::{Code, Diag, Pass};
+
+/// Def-use facts for one graph, computed in a single O(V+E) sweep.
+#[derive(Debug, Clone)]
+pub struct Liveness {
+    /// Direct consumer count per node (how many readers its parked
+    /// output waits for) — `Graph::consumer_counts`.
+    pub consumers: Vec<usize>,
+    /// Highest-id consumer per node — the point its parked output dies
+    /// under the serial schedule.  `None` when nothing reads it.
+    pub last_use: Vec<Option<NodeId>>,
+    /// The static peak of the serial-order byte ledger (see
+    /// [`static_peak`]).
+    pub peak_bytes: u64,
+}
+
+impl Liveness {
+    pub fn of(graph: &Graph) -> Liveness {
+        let consumers = graph.consumer_counts();
+        let mut last_use: Vec<Option<NodeId>> = vec![None; graph.len()];
+        for (id, node) in graph.nodes().iter().enumerate() {
+            for &d in &node.deps {
+                // ids ascend, so the latest write wins = highest consumer
+                last_use[d] = Some(id);
+            }
+        }
+        Liveness {
+            consumers,
+            last_use,
+            peak_bytes: static_peak(graph),
+        }
+    }
+
+    /// Nodes whose parked output nothing ever reads (dead bytes in the
+    /// byte plan).
+    pub fn dead_outputs(&self, graph: &Graph) -> Vec<NodeId> {
+        (0..graph.len())
+            .filter(|&id| graph.node(id).out_bytes > 0 && self.consumers[id] == 0)
+            .collect()
+    }
+}
+
+/// Static peak of the serial-order projected-byte ledger: the exact peak
+/// the interpreter replay reports, computed without running anything.
+pub fn static_peak(graph: &Graph) -> u64 {
+    static_device_peaks(graph, &vec![0; graph.len()], 1)[0]
+}
+
+/// [`static_peak`] split over a device assignment: per-device peaks of a
+/// serial-order walk, the static twin of `interp::schedules` +
+/// `memory::sim::simulate` (and therefore of `ShardPlan::replay_peaks`).
+///
+/// Event order per node — identical to the replay's:
+/// 1. charge `est_bytes` to the node's device while it runs;
+/// 2. park `out_bytes` on its device if any consumer remains;
+/// 3. release every dep whose last consumer this node was, on the
+///    *dep's* device.
+pub fn static_device_peaks(graph: &Graph, device_of: &[usize], devices: usize) -> Vec<u64> {
+    debug_assert_eq!(device_of.len(), graph.len());
+    let mut left = graph.consumer_counts();
+    let mut live = vec![0u64; devices];
+    let mut peak = vec![0u64; devices];
+    for (id, node) in graph.nodes().iter().enumerate() {
+        let d = device_of[id];
+        peak[d] = peak[d].max(live[d] + node.est_bytes);
+        if left[id] > 0 && node.out_bytes > 0 {
+            live[d] += node.out_bytes;
+            peak[d] = peak[d].max(live[d]);
+        }
+        for &dep in &node.deps {
+            left[dep] -= 1;
+            if left[dep] == 0 && graph.node(dep).out_bytes > 0 {
+                live[device_of[dep]] -= graph.node(dep).out_bytes;
+            }
+        }
+    }
+    peak
+}
+
+/// The liveness lint: parked bytes nothing reads are dead weight the
+/// admission ledger still has to reserve — suspicious, but safe to run
+/// (a closure target legitimately parks nothing because subset consumer
+/// counts are what the executors use).  Warning-severity [`Code::DeadOutput`].
+pub struct LivenessPass;
+
+impl Pass for LivenessPass {
+    fn name(&self) -> &'static str {
+        "liveness"
+    }
+
+    fn run(&self, graph: &Graph, out: &mut Vec<Diag>) {
+        let live = Liveness::of(graph);
+        for id in live.dead_outputs(graph) {
+            out.push(Diag::warning(
+                Code::DeadOutput,
+                Some(id),
+                format!(
+                    "node '{}' parks {} byte(s) no consumer ever reads",
+                    graph.node(id).label,
+                    graph.node(id).out_bytes
+                ),
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rowir::graph::NodeKind;
+    use crate::rowir::{interp, RowProgram};
+
+    fn fan(rows: usize) -> Graph {
+        let mut g = Graph::new();
+        let fp: Vec<NodeId> = (0..rows)
+            .map(|r| g.push_out(NodeKind::Row, format!("fp{r}"), vec![], 100, 40))
+            .collect();
+        let head = g.push_out(NodeKind::Barrier, "head", fp, 100, 40);
+        let bp: Vec<NodeId> = (0..rows)
+            .map(|r| g.push_out(NodeKind::Row, format!("bp{r}"), vec![head], 100, 40))
+            .collect();
+        g.push(NodeKind::Barrier, "reduce", bp, 0);
+        g
+    }
+
+    #[test]
+    fn static_peak_equals_interp_replay_on_the_fan_shape() {
+        for rows in [1, 2, 3, 8] {
+            let g = fan(rows);
+            let prog = RowProgram::new(g.clone()).unwrap();
+            let replay = interp::run(&prog, |_, _| Ok(())).unwrap();
+            assert_eq!(static_peak(&g), replay.peak_bytes, "rows={rows}");
+        }
+    }
+
+    #[test]
+    fn parked_bytes_held_until_the_last_consumer() {
+        let mut g = Graph::new();
+        // a's 100-byte output is read only by c: parked across b's run
+        let a = g.push_out(NodeKind::Row, "a", vec![], 100, 100);
+        let b = g.push(NodeKind::Row, "b", vec![a], 10);
+        g.push(NodeKind::Barrier, "c", vec![a, b], 5);
+        assert_eq!(static_peak(&g), 110);
+        let live = Liveness::of(&g);
+        assert_eq!(live.last_use[a], Some(2));
+        assert_eq!(live.last_use[b], Some(2));
+        assert_eq!(live.consumers, vec![2, 1, 0]);
+        assert!(live.dead_outputs(&g).is_empty());
+    }
+
+    #[test]
+    fn device_split_matches_the_sim_replay_per_device() {
+        use crate::memory::sim;
+        let g = fan(2);
+        let mut dev = vec![0usize; g.len()];
+        dev[1] = 1; // fp1 on device 1
+        let stat = static_device_peaks(&g, &dev, 2);
+        let scheds = interp::schedules(&g, &dev, 2);
+        for (d, s) in scheds.iter().enumerate() {
+            assert_eq!(stat[d], sim::simulate(s).unwrap().peak_bytes, "device {d}");
+        }
+    }
+
+    #[test]
+    fn dead_output_is_flagged_as_a_warning() {
+        let mut g = Graph::new();
+        g.push_out(NodeKind::Row, "orphan", vec![], 10, 8); // nothing reads it
+        let mut diags = Vec::new();
+        LivenessPass.run(&g, &mut diags);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].code, Code::DeadOutput);
+        assert_eq!(diags[0].node, Some(0));
+        assert_eq!(diags[0].severity, super::super::Severity::Warning);
+    }
+}

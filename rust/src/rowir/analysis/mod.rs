@@ -1,0 +1,436 @@
+//! `rowir::analysis` — static verification and lint over a [`Graph`]
+//! (docs/ANALYSIS.md).
+//!
+//! Every driver in this crate rests on one argument: loss and parameters
+//! stay bit-identical to serial because all f32 reductions are confined
+//! to barrier nodes folding their inputs in id (= serial) order, and
+//! every buffer has a single writer.  Until now that invariant was
+//! enforced *by construction* and re-proven empirically per change by the
+//! test matrix.  This module makes it a **checked theorem** on the IR
+//! itself:
+//!
+//! * [`determinism`] — the determinism lint: every reduction is
+//!   barrier-confined, inputs are consumed in id order, one writer per
+//!   buffer, no cross-row write aliasing.  A violation names the
+//!   counterexample node.
+//! * [`liveness`] — the def-use/liveness dataflow core (per-buffer last
+//!   use, live-set sweep in ascending-id order) and the **static
+//!   peak-memory bound**: [`liveness::static_peak`] satisfies
+//!   `static_peak(g) >= interp replay peak` on every graph and is exact
+//!   on fan graphs — an O(V+E) admission check that needs no replay.
+//! * [`shardcheck`] — the shard-plan race/transfer checker over a
+//!   device-assigned graph: single unordered writer per host slot, every
+//!   cross-device edge carried by exactly one Transfer node with
+//!   matching endpoints.
+//!
+//! Diagnostics are typed and machine-readable ([`Diag`]); rendering
+//! reuses the crate's one JSON escaper (`util::json::escape`) and table
+//! renderer (`metrics::Table`) — no bespoke serializers here.  The
+//! passes run everywhere plans are born or rebuilt: `rowir::lower`,
+//! `ShardPlan::lower` (and through it `ShardState::build`, the
+//! fault-recovery repartition and `ShardState::recalibrate`), and the
+//! `plan --lint` / `train --lint-strict` CLI paths.
+
+pub mod determinism;
+pub mod liveness;
+pub mod shardcheck;
+
+pub use liveness::{static_device_peaks, static_peak, Liveness};
+pub use shardcheck::ShardView;
+
+use crate::error::{Error, Result};
+use crate::metrics::Table;
+use crate::util::json::escape;
+
+use super::graph::{Graph, NodeId};
+
+/// Stable, machine-readable diagnostic codes.  The string forms are part
+/// of the tool contract (`--lint-out` JSON, CI gates, docs/ANALYSIS.md)
+/// — never renumber an existing code.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Code {
+    /// `IR001` — forward/self dependency: the graph is not a DAG.
+    NotADag,
+    /// `DET001` — a node folds two or more row outputs outside a barrier
+    /// (an un-barriered f32 reduction: fold order would depend on
+    /// scheduling).
+    UnbarrieredReduction,
+    /// `DET002` — dependencies not strictly ascending: a barrier folding
+    /// them would not fold in id (= serial) order, or would fold an input
+    /// twice.
+    FoldOrder,
+    /// `DET003` — two nodes write the same buffer (duplicate label): the
+    /// single-writer precondition is broken.
+    DoubleWriter,
+    /// `DET004` — two nodes carry the same non-transfer task, i.e. write
+    /// the same row slab (cross-row write aliasing).
+    CrossRowAlias,
+    /// `LIV001` (warning) — a node parks output bytes no consumer ever
+    /// reads; the bytes are dead weight in the byte plan.
+    DeadOutput,
+    /// `LIV002` — the liveness peak bound came out *below* a replay peak:
+    /// the admission check would under-admit.  Synthesized by callers
+    /// that have both numbers (`ShardPlan::analyze`, `plan --lint`).
+    PeakBound,
+    /// `SH001` — two concurrently-admissible writers of one host slot on
+    /// different devices (a data race under the sharded executor).
+    HostSlotRace,
+    /// `SH002` — a cross-device edge with no Transfer node carrying it.
+    MissingTransfer,
+    /// `SH003` — a Transfer node whose endpoints don't match its
+    /// placement (wrong arity, same-device copy, consumer off the
+    /// destination device, or metadata disagreeing with the graph).
+    TransferEndpoint,
+    /// `SH004` — a Transfer node no consumer ever reads (dangling
+    /// endpoint).
+    DanglingTransfer,
+    /// `SH005` — malformed plan shape (assignment/orig arity, device id
+    /// outside the topology).
+    PlanShape,
+}
+
+impl Code {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Code::NotADag => "IR001",
+            Code::UnbarrieredReduction => "DET001",
+            Code::FoldOrder => "DET002",
+            Code::DoubleWriter => "DET003",
+            Code::CrossRowAlias => "DET004",
+            Code::DeadOutput => "LIV001",
+            Code::PeakBound => "LIV002",
+            Code::HostSlotRace => "SH001",
+            Code::MissingTransfer => "SH002",
+            Code::TransferEndpoint => "SH003",
+            Code::DanglingTransfer => "SH004",
+            Code::PlanShape => "SH005",
+        }
+    }
+}
+
+impl std::fmt::Display for Code {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    /// The plan must not run: a determinism/race/shape violation.
+    Error,
+    /// Suspicious but safe to run (e.g. dead parked bytes).
+    Warning,
+}
+
+impl Severity {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+        }
+    }
+}
+
+/// One typed, machine-readable diagnostic.  `node` is the counterexample
+/// node when the finding anchors to one (the second writer, the
+/// un-barriered reducer, the dangling transfer).
+#[derive(Debug, Clone)]
+pub struct Diag {
+    pub code: Code,
+    pub severity: Severity,
+    pub node: Option<NodeId>,
+    pub message: String,
+}
+
+impl Diag {
+    pub fn error(code: Code, node: Option<NodeId>, message: impl Into<String>) -> Diag {
+        Diag {
+            code,
+            severity: Severity::Error,
+            node,
+            message: message.into(),
+        }
+    }
+
+    pub fn warning(code: Code, node: Option<NodeId>, message: impl Into<String>) -> Diag {
+        Diag {
+            code,
+            severity: Severity::Warning,
+            node,
+            message: message.into(),
+        }
+    }
+}
+
+/// One analysis pass over a graph.  Passes append diagnostics; they never
+/// mutate the graph (rewrites belong to a future optimizer pipeline, and
+/// the lint must stay safe to run on anything).
+pub trait Pass {
+    fn name(&self) -> &'static str;
+    fn run(&self, graph: &Graph, out: &mut Vec<Diag>);
+}
+
+/// Structural precondition pass: the graph must be a DAG with ids in
+/// topological order — everything later passes assume.  Mirrors
+/// [`Graph::validate`]'s acyclicity rule but reports a typed [`Diag`]
+/// instead of erroring on first sight, so a corrupted graph still yields
+/// a counterexample node.
+struct StructurePass;
+
+impl Pass for StructurePass {
+    fn name(&self) -> &'static str {
+        "structure"
+    }
+
+    fn run(&self, graph: &Graph, out: &mut Vec<Diag>) {
+        for (id, node) in graph.nodes().iter().enumerate() {
+            if let Some(&bad) = node.deps.iter().find(|&&d| d >= id) {
+                out.push(Diag::error(
+                    Code::NotADag,
+                    Some(id),
+                    format!("node '{}' has forward/self dep {bad} — not a DAG", node.label),
+                ));
+            }
+        }
+    }
+}
+
+/// The default pass pipeline: structure gate, then the determinism lint,
+/// then liveness.  Passes after a failing one are skipped — they assume
+/// the earlier invariants, and the first counterexample is the one worth
+/// reading.
+pub struct Analyzer {
+    passes: Vec<Box<dyn Pass>>,
+}
+
+impl Default for Analyzer {
+    fn default() -> Self {
+        Analyzer::new()
+    }
+}
+
+impl Analyzer {
+    pub fn new() -> Analyzer {
+        Analyzer {
+            passes: vec![
+                Box::new(StructurePass),
+                Box::new(determinism::DeterminismPass),
+                Box::new(liveness::LivenessPass),
+            ],
+        }
+    }
+
+    pub fn with_pass(mut self, pass: Box<dyn Pass>) -> Analyzer {
+        self.passes.push(pass);
+        self
+    }
+
+    pub fn run(&self, graph: &Graph) -> Report {
+        let mut diags = Vec::new();
+        let mut ran = Vec::new();
+        for pass in &self.passes {
+            let before = diags.len();
+            pass.run(graph, &mut diags);
+            ran.push(pass.name());
+            if diags[before..].iter().any(|d| d.severity == Severity::Error) {
+                break; // later passes assume this one's invariants
+            }
+        }
+        Report { diags, passes: ran }
+    }
+}
+
+/// The outcome of an analysis run: every diagnostic, plus which passes
+/// actually ran (a failing pass stops the pipeline).
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub diags: Vec<Diag>,
+    pub passes: Vec<&'static str>,
+}
+
+impl Report {
+    pub fn errors(&self) -> usize {
+        self.diags.iter().filter(|d| d.severity == Severity::Error).count()
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.diags.iter().filter(|d| d.severity == Severity::Warning).count()
+    }
+
+    pub fn has_errors(&self) -> bool {
+        self.errors() > 0
+    }
+
+    /// No diagnostics at all — errors *or* warnings.
+    pub fn is_clean(&self) -> bool {
+        self.diags.is_empty()
+    }
+
+    /// First diagnostic carrying `code` (test/assertion convenience).
+    pub fn find(&self, code: Code) -> Option<&Diag> {
+        self.diags.iter().find(|d| d.code == code)
+    }
+
+    /// One-line verdict for logs and crash reports: "clean", or counts
+    /// plus the distinct codes ("2 error(s), 1 warning(s): DET001 LIV001").
+    pub fn verdict(&self) -> String {
+        if self.is_clean() {
+            return "clean".to_string();
+        }
+        let mut codes: Vec<&'static str> = self.diags.iter().map(|d| d.code.as_str()).collect();
+        codes.sort_unstable();
+        codes.dedup();
+        format!(
+            "{} error(s), {} warning(s): {}",
+            self.errors(),
+            self.warnings(),
+            codes.join(" ")
+        )
+    }
+
+    /// Render the diagnostics as a [`Table`] (what `plan --lint` prints).
+    pub fn to_table(&self, title: impl Into<String>) -> Table {
+        let mut t = Table::new(title, &["code", "severity", "node", "message"]);
+        for d in &self.diags {
+            t.row(vec![
+                d.code.as_str().to_string(),
+                d.severity.as_str().to_string(),
+                d.node.map(|n| n.to_string()).unwrap_or_else(|| "-".into()),
+                d.message.clone(),
+            ]);
+        }
+        t
+    }
+
+    /// Machine-readable JSON (what `plan --lint --lint-out` writes per
+    /// graph) — strings go through the crate's one escaper.
+    pub fn to_json(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::from("{");
+        let _ = write!(
+            out,
+            "\"errors\": {}, \"warnings\": {}, \"passes\": [",
+            self.errors(),
+            self.warnings()
+        );
+        for (i, p) in self.passes.iter().enumerate() {
+            let _ = write!(out, "{}\"{}\"", if i > 0 { ", " } else { "" }, escape(p));
+        }
+        out.push_str("], \"diags\": [");
+        for (i, d) in self.diags.iter().enumerate() {
+            let node = d.node.map(|n| n.to_string()).unwrap_or_else(|| "null".into());
+            let _ = write!(
+                out,
+                "{}{{\"code\": \"{}\", \"severity\": \"{}\", \"node\": {}, \"message\": \"{}\"}}",
+                if i > 0 { ", " } else { "" },
+                d.code.as_str(),
+                d.severity.as_str(),
+                node,
+                escape(&d.message)
+            );
+        }
+        out.push_str("]}");
+        out
+    }
+
+    /// Gate: `Err(Error::Sched)` naming every error diagnostic.  Warnings
+    /// pass.  What the plan-construction paths call before adopting a
+    /// graph or plan.
+    pub fn check(&self) -> Result<()> {
+        if !self.has_errors() {
+            return Ok(());
+        }
+        let msgs: Vec<String> = self
+            .diags
+            .iter()
+            .filter(|d| d.severity == Severity::Error)
+            .map(|d| match d.node {
+                Some(n) => format!("{} at node {n}: {}", d.code, d.message),
+                None => format!("{}: {}", d.code, d.message),
+            })
+            .collect();
+        Err(Error::Sched(format!("IR lint failed: {}", msgs.join("; "))))
+    }
+}
+
+/// Run the default pass pipeline over a graph.
+pub fn analyze(graph: &Graph) -> Report {
+    Analyzer::new().run(graph)
+}
+
+/// [`analyze`] + [`Report::check`]: the gate `rowir::lower` (and every
+/// other graph-construction boundary) runs before releasing a graph.
+pub fn check_graph(graph: &Graph) -> Result<()> {
+    analyze(graph).check()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rowir::graph::NodeKind;
+    use crate::util::json::JsonValue;
+
+    fn clean_fan() -> Graph {
+        let mut g = Graph::new();
+        let a = g.push_out(NodeKind::Row, "a", vec![], 100, 40);
+        let b = g.push_out(NodeKind::Row, "b", vec![], 100, 40);
+        g.push(NodeKind::Barrier, "red", vec![a, b], 80);
+        g
+    }
+
+    #[test]
+    fn clean_graph_reports_clean() {
+        let rep = analyze(&clean_fan());
+        assert!(rep.is_clean(), "{:?}", rep.diags);
+        assert_eq!(rep.verdict(), "clean");
+        assert_eq!(rep.passes, vec!["structure", "determinism", "liveness"]);
+        assert!(rep.check().is_ok());
+        assert!(check_graph(&clean_fan()).is_ok());
+    }
+
+    #[test]
+    fn corrupted_graph_yields_ir001_and_stops_the_pipeline() {
+        let mut g = clean_fan();
+        g.nodes_mut()[0].deps.push(0); // self-dep
+        let rep = analyze(&g);
+        let d = rep.find(Code::NotADag).expect("IR001 reported");
+        assert_eq!(d.node, Some(0));
+        assert_eq!(rep.passes, vec!["structure"], "later passes skipped");
+        assert!(rep.check().is_err());
+    }
+
+    #[test]
+    fn report_renders_table_and_valid_json() {
+        let mut g = clean_fan();
+        g.nodes_mut()[2].kind = NodeKind::Row; // un-barrier the reduction
+        let rep = analyze(&g);
+        assert!(rep.has_errors());
+        let t = rep.to_table("lint");
+        assert!(t.markdown().contains("DET001"), "{}", t.markdown());
+        let json = format!("{{\"report\": {}}}", rep.to_json());
+        JsonValue::parse(&json).expect("lint JSON parses");
+        assert!(json.contains("\"code\": \"DET001\""), "{json}");
+        assert!(rep.verdict().contains("DET001"), "{}", rep.verdict());
+    }
+
+    #[test]
+    fn codes_are_stable_strings() {
+        for (code, s) in [
+            (Code::NotADag, "IR001"),
+            (Code::UnbarrieredReduction, "DET001"),
+            (Code::FoldOrder, "DET002"),
+            (Code::DoubleWriter, "DET003"),
+            (Code::CrossRowAlias, "DET004"),
+            (Code::DeadOutput, "LIV001"),
+            (Code::PeakBound, "LIV002"),
+            (Code::HostSlotRace, "SH001"),
+            (Code::MissingTransfer, "SH002"),
+            (Code::TransferEndpoint, "SH003"),
+            (Code::DanglingTransfer, "SH004"),
+            (Code::PlanShape, "SH005"),
+        ] {
+            assert_eq!(code.as_str(), s);
+            assert_eq!(code.to_string(), s);
+        }
+    }
+}

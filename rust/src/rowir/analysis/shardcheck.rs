@@ -1,0 +1,376 @@
+//! The shard-plan race/transfer checker.
+//!
+//! A sharded plan is the base graph re-lowered over devices: every node
+//! carries a device, cross-device edges are carried by Transfer nodes,
+//! and finished outputs land in *host slots* keyed by the base node that
+//! produced them (plus staged copies keyed by (producer, destination
+//! device)).  The checker proves, structurally:
+//!
+//! * [`Code::PlanShape`] — the assignment arrays have the right arity
+//!   and every device id is inside the topology (checked first; the
+//!   other checks index by them);
+//! * [`Code::HostSlotRace`] — no two *unordered* plan nodes (neither an
+//!   ancestor of the other — i.e. concurrently admissible under any
+//!   executor) write the same host slot;
+//! * [`Code::MissingTransfer`] — every cross-device edge terminates in a
+//!   Transfer node on the consumer side; a bare cross-device read would
+//!   touch another device's memory;
+//! * [`Code::TransferEndpoint`] — a Transfer has exactly one source, its
+//!   source is on a *different* device, and every consumer is on the
+//!   transfer's own device (the slab was staged there and nowhere else);
+//! * [`Code::DanglingTransfer`] — a Transfer nothing reads: a copy paid
+//!   for and thrown away, which the lowering never emits.
+//!
+//! The checker takes a [`ShardView`] of plain slices rather than a
+//! `ShardPlan` so negative tests can hand-build malformed plans without
+//! reaching into `shard`'s private fields; `ShardPlan::analyze` wraps
+//! its own state in a view and adds the metadata cross-checks only it
+//! can do (transfer records, replay-peak bounds).
+
+use std::collections::HashMap;
+
+use super::super::graph::{Graph, NodeId, NodeKind};
+use super::{Code, Diag};
+
+/// A borrowed view of a sharded plan: the lowered graph, the per-node
+/// device assignment, the per-node base-graph origin (`None` for
+/// inserted Transfers), and the device count.
+pub struct ShardView<'a> {
+    pub graph: &'a Graph,
+    pub device_of: &'a [usize],
+    /// Base-graph node each plan node materializes — the host slot it
+    /// writes.  `None` for Transfer nodes (they write staged copies).
+    pub orig: &'a [Option<NodeId>],
+    pub devices: usize,
+}
+
+/// Host-slot identity: what a finished node's output overwrites.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+enum Slot {
+    /// The base node's result slot.
+    Base(NodeId),
+    /// A staged copy of `0`'s result on device `1`.
+    Staged(NodeId, usize),
+}
+
+/// Dense ancestor bitsets: `anc[id]` covers every transitive dep of
+/// `id`.  O(V·E/64) to build — plans are step graphs (hundreds of
+/// nodes), so this stays trivial next to the replay it replaces.
+struct Ancestors {
+    words: usize,
+    bits: Vec<u64>,
+}
+
+impl Ancestors {
+    fn of(graph: &Graph) -> Ancestors {
+        let n = graph.len();
+        let words = n.div_ceil(64);
+        let mut bits = vec![0u64; n * words];
+        for (id, node) in graph.nodes().iter().enumerate() {
+            for &d in &node.deps {
+                let (dst, src) = (id * words, d * words);
+                for w in 0..words {
+                    bits[dst + w] |= bits[src + w];
+                }
+                bits[dst + d / 64] |= 1 << (d % 64);
+            }
+        }
+        Ancestors { words, bits }
+    }
+
+    fn is_ancestor(&self, anc: NodeId, of: NodeId) -> bool {
+        self.bits[of * self.words + anc / 64] & (1 << (anc % 64)) != 0
+    }
+
+    /// Neither node reaches the other: some executor interleaving runs
+    /// them concurrently.
+    fn unordered(&self, a: NodeId, b: NodeId) -> bool {
+        !self.is_ancestor(a, b) && !self.is_ancestor(b, a)
+    }
+}
+
+/// Resolve a plan node to the base node whose bytes it carries, looking
+/// through Transfer chains.  `None` if the chain dead-ends (malformed —
+/// reported separately as an endpoint error).
+fn base_of(view: &ShardView, mut id: NodeId) -> Option<NodeId> {
+    loop {
+        if view.graph.node(id).kind != NodeKind::Transfer {
+            return view.orig[id];
+        }
+        id = *view.graph.node(id).deps.first()?;
+    }
+}
+
+/// Run every shard-plan check over a view.  Shape errors short-circuit:
+/// the remaining checks index by device and origin, so there is nothing
+/// sound to say about a malformed view beyond its shape.
+pub fn check(view: &ShardView) -> Vec<Diag> {
+    let mut out = Vec::new();
+    let n = view.graph.len();
+    if view.device_of.len() != n || view.orig.len() != n {
+        out.push(Diag::error(
+            Code::PlanShape,
+            None,
+            format!(
+                "assignment arity mismatch: {} nodes, {} device entries, {} origin entries",
+                n,
+                view.device_of.len(),
+                view.orig.len()
+            ),
+        ));
+        return out;
+    }
+    for (id, &d) in view.device_of.iter().enumerate() {
+        if d >= view.devices {
+            out.push(Diag::error(
+                Code::PlanShape,
+                Some(id),
+                format!(
+                    "node '{}' assigned to device {d} but the topology has {}",
+                    view.graph.node(id).label,
+                    view.devices
+                ),
+            ));
+        }
+    }
+    if !out.is_empty() {
+        return out;
+    }
+
+    let consumers = view.graph.consumer_counts();
+    for (id, node) in view.graph.nodes().iter().enumerate() {
+        let dev = view.device_of[id];
+        if node.kind == NodeKind::Transfer {
+            // endpoints: one source, on another device
+            if node.deps.len() != 1 {
+                out.push(Diag::error(
+                    Code::TransferEndpoint,
+                    Some(id),
+                    format!(
+                        "transfer '{}' has {} source(s); a copy has exactly one",
+                        node.label,
+                        node.deps.len()
+                    ),
+                ));
+            } else {
+                let src = node.deps[0];
+                if view.device_of[src] == dev {
+                    out.push(Diag::error(
+                        Code::TransferEndpoint,
+                        Some(id),
+                        format!(
+                            "transfer '{}' copies within device {dev} — endpoints must \
+                             differ",
+                            node.label
+                        ),
+                    ));
+                }
+            }
+            if consumers[id] == 0 {
+                out.push(Diag::error(
+                    Code::DanglingTransfer,
+                    Some(id),
+                    format!(
+                        "transfer '{}' has no consumers — a copy paid for and thrown away",
+                        node.label
+                    ),
+                ));
+            }
+        } else {
+            // every cross-device edge must terminate in a Transfer on the
+            // consumer side, and the consumer of a Transfer must sit on
+            // the transfer's device
+            for &d in &node.deps {
+                let src_dev = view.device_of[d];
+                if src_dev == dev {
+                    continue;
+                }
+                let code = if view.graph.node(d).kind == NodeKind::Transfer {
+                    Code::TransferEndpoint // staged on src_dev, read from dev
+                } else {
+                    Code::MissingTransfer
+                };
+                out.push(Diag::error(
+                    code,
+                    Some(id),
+                    format!(
+                        "node '{}' (device {dev}) reads '{}' on device {src_dev} {}",
+                        node.label,
+                        view.graph.node(d).label,
+                        if code == Code::MissingTransfer {
+                            "with no transfer carrying the edge"
+                        } else {
+                            "— the copy was staged on the wrong device"
+                        }
+                    ),
+                ));
+            }
+        }
+    }
+
+    // host-slot races: unordered duplicate writers of one slot
+    let anc = Ancestors::of(view.graph);
+    let mut writers: HashMap<Slot, Vec<NodeId>> = HashMap::new();
+    for (id, node) in view.graph.nodes().iter().enumerate() {
+        let slot = if node.kind == NodeKind::Transfer {
+            match base_of(view, id) {
+                Some(base) => Slot::Staged(base, view.device_of[id]),
+                None => continue, // dead-ended chain, already reported
+            }
+        } else {
+            match view.orig[id] {
+                Some(base) => Slot::Base(base),
+                None => {
+                    out.push(Diag::error(
+                        Code::PlanShape,
+                        Some(id),
+                        format!(
+                            "non-transfer node '{}' has no base-graph origin",
+                            node.label
+                        ),
+                    ));
+                    continue;
+                }
+            }
+        };
+        writers.entry(slot).or_default().push(id);
+    }
+    for (slot, ws) in &writers {
+        for (i, &a) in ws.iter().enumerate() {
+            for &b in &ws[i + 1..] {
+                if anc.unordered(a, b) {
+                    out.push(Diag::error(
+                        Code::HostSlotRace,
+                        Some(b),
+                        format!(
+                            "nodes {a} ('{}', device {}) and {b} ('{}', device {}) write \
+                             host slot {slot:?} with no ordering between them",
+                            view.graph.node(a).label,
+                            view.device_of[a],
+                            view.graph.node(b).label,
+                            view.device_of[b],
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    out.sort_by_key(|d| d.node);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rowir::task::Task;
+
+    /// a (d0) → xfer (d1) → red (d1): the shape the lowering emits.
+    fn clean_plan() -> (Graph, Vec<usize>, Vec<Option<NodeId>>) {
+        let mut g = Graph::new();
+        let a = g.push_out(NodeKind::Row, "a", vec![], 10, 8);
+        let t = g.push_task(NodeKind::Transfer, "xfer.a.d1", vec![a], 8, 8, Task::Transfer);
+        g.push(NodeKind::Barrier, "red", vec![t], 4);
+        (g, vec![0, 1, 1], vec![Some(0), None, Some(1)])
+    }
+
+    fn diags(g: &Graph, dev: &[usize], orig: &[Option<NodeId>], devices: usize) -> Vec<Diag> {
+        check(&ShardView {
+            graph: g,
+            device_of: dev,
+            orig,
+            devices,
+        })
+    }
+
+    #[test]
+    fn the_lowerings_shape_is_clean() {
+        let (g, dev, orig) = clean_plan();
+        assert!(diags(&g, &dev, &orig, 2).is_empty());
+    }
+
+    #[test]
+    fn bare_cross_device_edge_is_sh002() {
+        let mut g = Graph::new();
+        let a = g.push_out(NodeKind::Row, "a", vec![], 10, 8);
+        let red = g.push(NodeKind::Barrier, "red", vec![a], 4);
+        let out = diags(&g, &[0, 1], &[Some(0), Some(1)], 2);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].code, Code::MissingTransfer);
+        assert_eq!(out[0].node, Some(red));
+    }
+
+    #[test]
+    fn same_device_copy_is_sh003() {
+        let (g, mut dev, orig) = clean_plan();
+        dev[1] = 0; // transfer staged on the source device...
+        dev[2] = 0; // ...and consumed there: endpoints never differ
+        let out = diags(&g, &dev, &orig, 2);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].code, Code::TransferEndpoint);
+        assert_eq!(out[0].node, Some(1));
+    }
+
+    #[test]
+    fn consumer_off_the_staging_device_is_sh003() {
+        let (g, mut dev, orig) = clean_plan();
+        dev[2] = 0; // red reads the d1-staged copy from d0
+        let out = diags(&g, &dev, &orig, 2);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].code, Code::TransferEndpoint);
+        assert_eq!(out[0].node, Some(2), "reported at the consumer");
+    }
+
+    #[test]
+    fn unread_transfer_is_sh004() {
+        let mut g = Graph::new();
+        let a = g.push_out(NodeKind::Row, "a", vec![], 10, 8);
+        let t = g.push_task(NodeKind::Transfer, "xfer.a.d1", vec![a], 8, 8, Task::Transfer);
+        let out = diags(&g, &[0, 1], &[Some(0), None], 2);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].code, Code::DanglingTransfer);
+        assert_eq!(out[0].node, Some(t));
+    }
+
+    #[test]
+    fn unordered_duplicate_slot_writers_are_sh001() {
+        let mut g = Graph::new();
+        g.push(NodeKind::Row, "w0", vec![], 10);
+        g.push(NodeKind::Row, "w1", vec![], 10);
+        // both claim base slot 0, no edge between them
+        let out = diags(&g, &[0, 1], &[Some(0), Some(0)], 2);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].code, Code::HostSlotRace);
+        // an edge between them orders the writes: no race
+        let mut g = Graph::new();
+        let a = g.push(NodeKind::Row, "w0", vec![], 10);
+        g.push(NodeKind::Row, "w1", vec![a], 10);
+        assert!(diags(&g, &[0, 1], &[Some(0), Some(0)], 2)
+            .iter()
+            .all(|d| d.code == Code::MissingTransfer)); // only the bare edge
+    }
+
+    #[test]
+    fn shape_errors_short_circuit() {
+        let (g, dev, orig) = clean_plan();
+        let out = diags(&g, &dev[..2], &orig, 2); // arity mismatch
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].code, Code::PlanShape);
+        let out = diags(&g, &dev, &orig, 1); // device 1 outside topology
+        assert!(out.iter().all(|d| d.code == Code::PlanShape));
+        assert!(!out.is_empty());
+    }
+
+    #[test]
+    fn ancestor_bitsets_cover_transitive_deps() {
+        let mut g = Graph::new();
+        let a = g.push(NodeKind::Row, "a", vec![], 1);
+        let b = g.push(NodeKind::Row, "b", vec![a], 1);
+        let c = g.push(NodeKind::Row, "c", vec![b], 1);
+        let d = g.push(NodeKind::Row, "d", vec![], 1);
+        let anc = Ancestors::of(&g);
+        assert!(anc.is_ancestor(a, c), "transitive");
+        assert!(!anc.is_ancestor(c, a));
+        assert!(anc.unordered(c, d));
+        assert!(!anc.unordered(a, c));
+    }
+}

@@ -200,6 +200,14 @@ impl Graph {
         counts
     }
 
+    /// In-crate test hook: corrupt a graph past the `push` invariants so
+    /// `validate()`/`analysis` negative paths are reachable (drivers
+    /// never mutate a graph, so there is no public mutator to misuse).
+    #[cfg(test)]
+    pub(crate) fn nodes_mut(&mut self) -> &mut Vec<Node> {
+        &mut self.nodes
+    }
+
     /// Re-check every documented invariant for graphs handed across an
     /// API boundary:
     ///

@@ -36,7 +36,7 @@ use crate::runtime::ExecHandle;
 
 use super::graph::{Graph, NodeId, NodeKind};
 use super::task::Task;
-use super::{Mode, RowProgram};
+use super::{analysis, Mode, RowProgram};
 
 /// Row extents for the naive equal-split ablation.
 ///
@@ -83,6 +83,10 @@ pub fn lower(man: &Manifest, mode: Mode) -> Result<RowProgram> {
         Mode::RowHybrid | Mode::Tps => lower_hybrid(man, mode, &mut g)?,
         Mode::Naive => lower_naive(man, &mut g)?,
     }
+    // the static gate: a freshly lowered program must pass the full lint
+    // (determinism + liveness), not just Graph::validate — a lowering
+    // regression fails here, before any driver runs it
+    analysis::check_graph(&g)?;
     RowProgram::new(g)
 }
 

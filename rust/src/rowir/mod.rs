@@ -29,7 +29,9 @@
 //! | [`task`] | the node work items, [`Task::Transfer`] included |
 //! | [`lower`] | manifest + mode → [`RowProgram`] (the only dataflow encoding) |
 //! | [`interp`] | serial driver + IR-walk memory replay |
+//! | [`analysis`] | static verification: determinism lint, liveness peak bound, shard-plan checker (docs/ANALYSIS.md) |
 
+pub mod analysis;
 pub mod graph;
 pub mod interp;
 pub mod lower;

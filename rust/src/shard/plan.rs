@@ -27,7 +27,7 @@ use std::collections::HashMap;
 
 use crate::error::{Error, Result};
 use crate::memory::sim::{self, Schedule};
-use crate::rowir::{interp, Graph, NodeId, NodeKind, Task};
+use crate::rowir::{analysis, interp, Graph, NodeId, NodeKind, Task};
 
 use super::partition::{payload_bytes, PartitionPolicy, Partitioner};
 use super::topology::{DeviceId, Topology};
@@ -165,7 +165,7 @@ impl ShardPlan {
         }
         graph.validate()?;
         let succ = successors(&graph);
-        Ok(ShardPlan {
+        let plan = ShardPlan {
             graph,
             device_of,
             orig,
@@ -173,7 +173,101 @@ impl ShardPlan {
             succ,
             budgets,
             devices: topo.len(),
-        })
+        };
+        // the static gate: every plan-construction path funnels through
+        // here (initial build, the recalibrate swap, the fault-recovery
+        // repartition), so a plan that races on a host slot, drops a
+        // cross-device edge or breaks the determinism precondition is
+        // rejected before any executor can adopt it
+        plan.analyze().check()?;
+        Ok(plan)
+    }
+
+    /// Run the full static-analysis suite over this plan: the graph
+    /// passes (structure, determinism, liveness), the shard race/transfer
+    /// checker, the [`ShardPlan::transfers`] metadata cross-check, and
+    /// the `static peaks >= replay peaks` bound self-check
+    /// (docs/ANALYSIS.md).  [`ShardPlan::lower`] gates on
+    /// `analyze().check()`; the CLI lint path renders the whole report.
+    pub fn analyze(&self) -> analysis::Report {
+        let mut report = analysis::analyze(&self.graph);
+        if report.has_errors() {
+            return report; // the shard checks index by what just failed
+        }
+        let view = analysis::ShardView {
+            graph: &self.graph,
+            device_of: &self.device_of,
+            orig: &self.orig,
+            devices: self.devices,
+        };
+        report.diags.extend(analysis::shardcheck::check(&view));
+        report.passes.push("shardcheck");
+        // metadata cross-check: the Transfer records must agree with the
+        // graph they describe (one record per Transfer node, endpoints
+        // and payload matching)
+        let xfer_nodes = self
+            .graph
+            .nodes()
+            .iter()
+            .filter(|n| n.kind == NodeKind::Transfer)
+            .count();
+        if xfer_nodes != self.transfers.len() {
+            report.diags.push(analysis::Diag::error(
+                analysis::Code::TransferEndpoint,
+                None,
+                format!(
+                    "{} transfer records for {xfer_nodes} Transfer node(s)",
+                    self.transfers.len()
+                ),
+            ));
+        }
+        for t in &self.transfers {
+            let ok = t.node < self.graph.len()
+                && self.graph.node(t.node).kind == NodeKind::Transfer
+                && self.device_of[t.node] == t.dst
+                && self.graph.node(t.node).est_bytes == t.bytes
+                && self
+                    .graph
+                    .node(t.node)
+                    .deps
+                    .first()
+                    .is_some_and(|&src| self.device_of[src] == t.src);
+            if !ok {
+                report.diags.push(analysis::Diag::error(
+                    analysis::Code::TransferEndpoint,
+                    Some(t.node.min(self.graph.len().saturating_sub(1))),
+                    format!(
+                        "transfer record (node {}, {} → {}, {} B) disagrees with the graph",
+                        t.node, t.src, t.dst, t.bytes
+                    ),
+                ));
+            }
+        }
+        report.passes.push("metadata");
+        if report.has_errors() {
+            return report; // a malformed plan has no meaningful replay
+        }
+        // LIV002 self-check: the O(V+E) static bound must cover the
+        // replay peaks on every device, or the admission check would
+        // under-admit (they are equal by construction — mirrored sweeps)
+        let stat =
+            analysis::static_device_peaks(&self.graph, &self.device_of, self.devices);
+        if let Ok(replay) = self.replay_peaks() {
+            for (d, (&s, &r)) in stat.iter().zip(replay.iter()).enumerate() {
+                if s < r {
+                    report.diags.push(analysis::Diag::error(
+                        analysis::Code::PeakBound,
+                        None,
+                        format!(
+                            "device {d}: static peak {s} B below replay peak {r} B — \
+                             the static bound under-admits"
+                        ),
+                    ));
+                }
+            }
+        }
+        report.passes.push("peakbound");
+        report
     }
 
     pub fn graph(&self) -> &Graph {

@@ -1,0 +1,333 @@
+//! Integration proofs for `rowir::analysis` (docs/ANALYSIS.md):
+//!
+//! * the static liveness peak bound dominates the interpreter replay
+//!   peak on randomized fan graphs — and is in fact *exact*, because the
+//!   sweep mirrors the replay ledger event-for-event (charge working
+//!   set, park own output, release deps at their last consumer);
+//! * per-device, `static_device_peaks` matches `ShardPlan::replay_peaks`
+//!   across the proof topologies × every partition policy;
+//! * the determinism lint accepts every graph the repo actually runs:
+//!   all 4 lowered modes, serial and sharded over every topology ×
+//!   policy, and the post-device-loss recovery plan;
+//! * hand-built negative graphs are rejected with the expected stable
+//!   `Diag.code` — an un-barriered reduction (DET001), a double writer
+//!   (DET003), cross-row task aliasing (DET004), a bare cross-device
+//!   edge (SH002), a same-device / wrong-endpoint transfer (SH003) and
+//!   a dangling transfer (SH004).
+
+mod common;
+
+use common::{
+    demo_manifest, demo_program, proof_topologies, random_fan_graph, test_batch, FakeExec,
+    ALL_MODES, ALL_POLICIES,
+};
+
+use lr_cnn::coordinator::{Optimizer, ParamSet, ShardState, StepPlan};
+use lr_cnn::faults::{DeviceLostPolicy, FaultConfig, FaultPlan};
+use lr_cnn::rowir::analysis::{self, Code, ShardView};
+use lr_cnn::rowir::{interp, Graph, NodeKind, RowProgram};
+use lr_cnn::sched::{RetryPolicy, SchedConfig};
+use lr_cnn::shard::{ShardConfig, ShardPlan};
+use lr_cnn::util::json::JsonValue;
+use lr_cnn::util::rng::XorShift;
+
+// ---------------------------------------------------------------- peaks
+
+/// `static_peak(g) >= interp replay peak` on randomized fan graphs —
+/// and exactly equal, since the static sweep replays the same ledger.
+#[test]
+fn static_peak_dominates_the_replay_peak_on_random_fans() {
+    let mut rng = XorShift::new(0x51A71C);
+    for round in 0..32 {
+        let g = random_fan_graph(&mut rng, 1 + round % 5);
+        let program = RowProgram::new(g).unwrap();
+        let stat = analysis::static_peak(program.graph());
+        let replay = interp::run(&program, |_, _| Ok(())).unwrap().peak_bytes;
+        assert!(
+            stat >= replay,
+            "round {round}: static bound {stat} below replay peak {replay}"
+        );
+        assert_eq!(stat, replay, "round {round}: the bound is exact");
+    }
+}
+
+/// Equality on *pure* fans (a single maximal fan + its barrier), the
+/// case the bound is advertised exact on.
+#[test]
+fn static_peak_is_exact_on_pure_fans() {
+    let mut rng = XorShift::new(0xFA27);
+    for round in 0..16 {
+        let g = random_fan_graph(&mut rng, 1);
+        let program = RowProgram::new(g).unwrap();
+        let stat = analysis::static_peak(program.graph());
+        let replay = interp::run(&program, |_, _| Ok(())).unwrap().peak_bytes;
+        assert_eq!(stat, replay, "round {round}: pure fan must be exact");
+    }
+}
+
+/// Per-device: the static sweep under a shard assignment reproduces
+/// `ShardPlan::replay_peaks` on every proof topology × policy.
+#[test]
+fn static_device_peaks_match_shard_replay_peaks() {
+    let mut rng = XorShift::new(0xD0D0);
+    for (name, topo) in proof_topologies() {
+        for policy in ALL_POLICIES {
+            let graph = random_fan_graph(&mut rng, 3);
+            let plan =
+                ShardPlan::build(&graph, &topo, policy, vec![u64::MAX; topo.len()]).unwrap();
+            let stat =
+                analysis::static_device_peaks(plan.graph(), plan.device_of(), plan.devices());
+            let replay = plan.replay_peaks().unwrap();
+            assert_eq!(stat.len(), replay.len(), "{name} {policy:?}");
+            for d in 0..replay.len() {
+                assert!(
+                    stat[d] >= replay[d],
+                    "{name} {policy:?} d{d}: static {} below replay {}",
+                    stat[d],
+                    replay[d]
+                );
+                assert_eq!(stat[d], replay[d], "{name} {policy:?} d{d}: exact");
+            }
+        }
+    }
+}
+
+// ----------------------------------------------- acceptance (the matrix)
+
+/// The determinism lint accepts every lowered mode, serial: the
+/// bit-identity precondition holds structurally on the graphs the
+/// proof suites then verify empirically.
+#[test]
+fn all_lowered_modes_are_statically_clean() {
+    for mode in ALL_MODES {
+        let (_plan, program) = demo_program(mode);
+        let report = analysis::analyze(program.graph());
+        assert!(
+            !report.has_errors(),
+            "{mode:?}: lowered graph must lint clean, got: {}",
+            report.verdict()
+        );
+        assert_eq!(
+            report.passes,
+            vec!["structure", "determinism", "liveness"],
+            "{mode:?}: every pass ran"
+        );
+    }
+}
+
+/// ...and sharded: every mode × proof topology × policy yields a plan
+/// whose full analysis (graph lint + shardcheck + metadata cross-check
+/// + peak-bound self-check) reports no errors.
+#[test]
+fn all_shard_plans_are_statically_clean() {
+    for mode in ALL_MODES {
+        let (_plan, program) = demo_program(mode);
+        for (name, topo) in proof_topologies() {
+            for policy in ALL_POLICIES {
+                let splan =
+                    ShardPlan::build(program.graph(), &topo, policy, topo.budgets(0)).unwrap();
+                let report = splan.analyze();
+                assert!(
+                    !report.has_errors(),
+                    "{mode:?} {name} {policy:?}: {}",
+                    report.verdict()
+                );
+                assert!(
+                    report.passes.contains(&"shardcheck")
+                        && report.passes.contains(&"metadata")
+                        && report.passes.contains(&"peakbound"),
+                    "{mode:?} {name} {policy:?}: shard passes ran: {:?}",
+                    report.passes
+                );
+            }
+        }
+    }
+}
+
+/// A device loss under `Degrade` rebuilds the plan over the survivors;
+/// the rebuilt plan must lint clean too (it passed the lower() gate, so
+/// this asserts the trainer-visible report agrees).
+#[test]
+fn post_recovery_plan_is_statically_clean() {
+    let man = demo_manifest();
+    let plan = StepPlan::build(&man, lr_cnn::coordinator::Mode::Tps).unwrap();
+    let program = plan.lower(&man).unwrap();
+    let ex = FakeExec { man: man.clone() };
+    let shard = ShardConfig::new(2);
+    let cfg = SchedConfig::pipelined(2).with_shard(shard);
+    let mut state = ShardState::build(&program, &cfg, 0).unwrap();
+    state.set_faults(&FaultConfig {
+        plan: Some(FaultPlan::parse("s1.d1=lost").unwrap()),
+        retry: RetryPolicy::new(3),
+        on_device_lost: DeviceLostPolicy::Degrade,
+    });
+    let mut params = ParamSet::init(&man.model, 42);
+    let mut opt = Optimizer::sgd(0.05);
+    let (x, y) = test_batch();
+    for step in 0..3 {
+        let (_, grads, _) = plan
+            .step_pipelined(&ex, &program, &params, &cfg, Some(&mut state), &x, &y)
+            .unwrap();
+        opt.step(&mut params, &grads).unwrap();
+        let report = state.plan().analyze();
+        assert!(
+            !report.has_errors(),
+            "step {step}: active plan not clean: {}",
+            report.verdict()
+        );
+        if step >= 1 {
+            assert_eq!(state.plan().devices(), 1, "degraded to the survivor");
+        }
+    }
+}
+
+// ------------------------------------------------------------ negatives
+
+/// An un-barriered reduction — a Row node folding two row outputs — is
+/// rejected with DET001 and the counterexample node.
+#[test]
+fn unbarriered_reduction_is_rejected_with_det001() {
+    let mut g = Graph::new();
+    let a = g.push_out(NodeKind::Row, "row.a", vec![], 64, 32);
+    let b = g.push_out(NodeKind::Row, "row.b", vec![], 64, 32);
+    let fold = g.push(NodeKind::Row, "bad.fold", vec![a, b], 64);
+    let report = analysis::analyze(&g);
+    assert!(report.has_errors());
+    let diag = report.find(Code::UnbarrieredReduction).expect("DET001");
+    assert_eq!(diag.code.as_str(), "DET001");
+    assert_eq!(diag.node, Some(fold), "anchored to the folding node");
+    // the same shape *with* a barrier is the sanctioned reduction
+    let mut ok = Graph::new();
+    let a = ok.push_out(NodeKind::Row, "row.a", vec![], 64, 32);
+    let b = ok.push_out(NodeKind::Row, "row.b", vec![], 64, 32);
+    ok.push(NodeKind::Barrier, "good.fold", vec![a, b], 64);
+    assert!(
+        analysis::analyze(&ok).find(Code::UnbarrieredReduction).is_none(),
+        "barrier-confined reduction is accepted"
+    );
+}
+
+/// Two writers of one buffer (duplicate label) → DET003, anchored at
+/// the *second* writer.
+#[test]
+fn double_writer_is_rejected_with_det003() {
+    let mut g = Graph::new();
+    let _w1 = g.push(NodeKind::Row, "fp.row0", vec![], 64);
+    let w2 = g.push(NodeKind::Row, "fp.row0", vec![], 64);
+    let report = analysis::analyze(&g);
+    let diag = report.find(Code::DoubleWriter).expect("DET003");
+    assert_eq!(diag.node, Some(w2));
+    assert!(diag.severity == lr_cnn::rowir::analysis::Severity::Error);
+}
+
+/// Two nodes carrying the same non-transfer task (same row slab) →
+/// DET004; `Task::Opaque` nodes are exempt.
+#[test]
+fn cross_row_alias_is_rejected_with_det004() {
+    use lr_cnn::rowir::Task;
+    let mut g = Graph::new();
+    g.push_task(NodeKind::Row, "a", vec![], 64, 0, Task::FpRow { seg: 0, row: 3 });
+    let dup = g.push_task(NodeKind::Row, "b", vec![], 64, 0, Task::FpRow { seg: 0, row: 3 });
+    let report = analysis::analyze(&g);
+    let diag = report.find(Code::CrossRowAlias).expect("DET004");
+    assert_eq!(diag.node, Some(dup));
+    // many Opaque nodes never alias
+    let mut ok = Graph::new();
+    ok.push(NodeKind::Row, "a", vec![], 64);
+    ok.push(NodeKind::Row, "b", vec![], 64);
+    assert!(analysis::analyze(&ok).find(Code::CrossRowAlias).is_none());
+}
+
+/// A cross-device edge with no Transfer carrying it → SH002.
+#[test]
+fn bare_cross_device_edge_is_rejected_with_sh002() {
+    let mut g = Graph::new();
+    let a = g.push_out(NodeKind::Row, "a", vec![], 64, 32);
+    let b = g.push(NodeKind::Barrier, "b", vec![a], 64);
+    let device_of = vec![0usize, 1];
+    let orig = vec![Some(a), Some(b)];
+    let view = ShardView {
+        graph: &g,
+        device_of: &device_of,
+        orig: &orig,
+        devices: 2,
+    };
+    let diags = lr_cnn::rowir::analysis::shardcheck::check(&view);
+    assert!(
+        diags.iter().any(|d| d.code == Code::MissingTransfer),
+        "expected SH002, got {diags:?}"
+    );
+}
+
+/// A same-device copy (transfer whose endpoints collapse) → SH003.
+#[test]
+fn same_device_transfer_is_rejected_with_sh003() {
+    use lr_cnn::rowir::Task;
+    let mut g = Graph::new();
+    let a = g.push_out(NodeKind::Row, "a", vec![], 64, 32);
+    let t = g.push_task(NodeKind::Transfer, "xfer", vec![a], 32, 32, Task::Transfer);
+    let b = g.push(NodeKind::Barrier, "b", vec![t], 64);
+    let device_of = vec![0usize, 0, 0];
+    let orig = vec![Some(a), None, Some(b)];
+    let view = ShardView {
+        graph: &g,
+        device_of: &device_of,
+        orig: &orig,
+        devices: 1,
+    };
+    let diags = lr_cnn::rowir::analysis::shardcheck::check(&view);
+    assert!(
+        diags.iter().any(|d| d.code == Code::TransferEndpoint),
+        "expected SH003, got {diags:?}"
+    );
+}
+
+/// A transfer no consumer reads (dangling endpoint) → SH004.
+#[test]
+fn dangling_transfer_is_rejected_with_sh004() {
+    use lr_cnn::rowir::Task;
+    let mut g = Graph::new();
+    let a = g.push_out(NodeKind::Row, "a", vec![], 64, 32);
+    let t = g.push_task(NodeKind::Transfer, "xfer", vec![a], 32, 32, Task::Transfer);
+    let device_of = vec![0usize, 1];
+    let orig = vec![Some(a), None];
+    let view = ShardView {
+        graph: &g,
+        device_of: &device_of,
+        orig: &orig,
+        devices: 2,
+    };
+    let diags = lr_cnn::rowir::analysis::shardcheck::check(&view);
+    let diag = diags
+        .iter()
+        .find(|d| d.code == Code::DanglingTransfer)
+        .unwrap_or_else(|| panic!("expected SH004, got {diags:?}"));
+    assert_eq!(diag.node, Some(t));
+}
+
+// ------------------------------------------------------------- tooling
+
+/// The machine-readable report round-trips through the repo's own JSON
+/// parser, and the code strings in it are the stable published ones.
+#[test]
+fn report_json_is_parseable_and_codes_are_stable() {
+    let mut g = Graph::new();
+    let a = g.push_out(NodeKind::Row, "row.a", vec![], 64, 32);
+    let b = g.push_out(NodeKind::Row, "row.b", vec![], 64, 32);
+    g.push(NodeKind::Row, "bad.fold", vec![a, b], 64);
+    let report = analysis::analyze(&g);
+    let v = JsonValue::parse(&report.to_json()).expect("report JSON parses");
+    assert!(v.get("errors").is_some() && v.get("diags").is_some());
+    assert!(
+        report.to_json().contains("\"DET001\""),
+        "stable code string in the JSON"
+    );
+    // clean graph: clean verdict, all passes recorded
+    let mut ok = Graph::new();
+    let r = ok.push_out(NodeKind::Row, "r", vec![], 64, 32);
+    ok.push(NodeKind::Barrier, "bar", vec![r], 16);
+    let clean = analysis::analyze(&ok);
+    assert!(clean.is_clean());
+    assert_eq!(clean.verdict(), "clean");
+    JsonValue::parse(&clean.to_json()).expect("clean report JSON parses");
+}
