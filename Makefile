@@ -7,7 +7,7 @@
 
 RUST_MANIFEST := rust/Cargo.toml
 
-.PHONY: build test artifacts ir-dump lint-ir bench-hotpath bench-hotpath-quick bench-sched bench-sched-quick bench-shard bench-shard-quick bench-fault bench-fault-quick bench-obs bench-obs-quick bench-diff arm-baselines fault-matrix lint
+.PHONY: build test artifacts ir-dump lint-ir bench-hotpath bench-hotpath-quick bench-sched bench-sched-quick bench-shard bench-shard-quick bench-fault bench-fault-quick bench-obs bench-obs-quick bench-opt bench-opt-quick bench-diff arm-baselines fault-matrix lint
 
 build:
 	cargo build --release --manifest-path $(RUST_MANIFEST)
@@ -18,15 +18,22 @@ test:
 artifacts:
 	cd python/compile && python3 aot.py --out-dir ../../rust/artifacts
 
-# Lower + validate() the row-program IR for all 4 modes and print it as
-# JSON (docs/ROWIR.md).  Uses rust/artifacts when present, else the
-# built-in demo bundle — so it runs in CI with no Python toolchain and
-# fails fast on any lowering regression.
+# Lower + validate() the row-program IR for all 4 modes and write it as
+# JSON (docs/ROWIR.md): IR_ir.json is the pristine lowering, IR_ir_opt.json
+# carries the level-2 post-optimizer program + pass report side by side
+# with the pristine one (docs/ROWIR.md § Optimizer) — a diff of the two
+# `program` objects is exactly what the optimizer did.  Both files land
+# at the repo root and CI uploads them beside LINT_*.json.  Uses
+# rust/artifacts when present, else the built-in demo bundle — so it
+# runs in CI with no Python toolchain and fails fast on any lowering or
+# optimizer regression.
 ir-dump:
 	@if [ -f rust/artifacts/manifest.json ]; then \
-		cargo run --release --manifest-path $(RUST_MANIFEST) -- plan --dump-ir --artifacts rust/artifacts; \
+		cargo run --release --manifest-path $(RUST_MANIFEST) -- plan --dump-ir --artifacts rust/artifacts --out IR_ir.json && \
+		cargo run --release --manifest-path $(RUST_MANIFEST) -- plan --dump-ir --optimized --artifacts rust/artifacts --out IR_ir_opt.json; \
 	else \
-		cargo run --release --manifest-path $(RUST_MANIFEST) -- plan --dump-ir; \
+		cargo run --release --manifest-path $(RUST_MANIFEST) -- plan --dump-ir --out IR_ir.json && \
+		cargo run --release --manifest-path $(RUST_MANIFEST) -- plan --dump-ir --optimized --out IR_ir_opt.json; \
 	fi
 
 # Statically lint the row-program IR for all 4 modes — serial graphs
@@ -89,6 +96,18 @@ bench-obs:
 
 bench-obs-quick:
 	BENCH_QUICK=1 cargo bench --bench obs_overhead --manifest-path $(RUST_MANIFEST)
+
+# Optimizer impact (docs/ROWIR.md § Optimizer): fixpoint-pipeline wall
+# time + static pre/post peaks for every demo mode (serial and sharded@2)
+# and a synthetic retain-edge graph where remat must strictly drop the
+# peak (asserted in the bench); writes BENCH_opt_impact.json at the repo
+# root.  Its peak_bytes are static-analysis numbers, gated at 0% by
+# scripts/bench_diff.py once a real baseline is armed.
+bench-opt:
+	cargo bench --bench opt_impact --manifest-path $(RUST_MANIFEST)
+
+bench-opt-quick:
+	BENCH_QUICK=1 cargo bench --bench opt_impact --manifest-path $(RUST_MANIFEST)
 
 # Regression gate over the repo-root BENCH_*.json trajectories against
 # bench/baselines/ (>20% mean_ms regression fails; seed baselines are

@@ -1,0 +1,241 @@
+//! Optimizer impact (`rowir::opt`, docs/ROWIR.md § Optimizer): what the
+//! fixpoint pipeline does to (a) every demo mode's lowered program —
+//! structurally a fixed point, so the pre/post peaks pin the honest
+//! "residency-tight" story — (b) the same programs sharded over two
+//! devices (transfer coalescing territory), and (c) a synthetic
+//! retain-edge graph where budget-driven rematerialization must fire and
+//! strictly drop the static peak.
+//!
+//! Each entry records the optimizer's wall time (`mean_ms` — the gated
+//! compile-time cost of the pass pipeline) and the *static* pre/post
+//! peaks (`peak_before_bytes` / `peak_bytes`).  The peaks come from the
+//! liveness analyzer, not a measured run, so they are bit-deterministic:
+//! `scripts/bench_diff.py` gates `peak_bytes` for this bench at **0%**
+//! tolerance — any post-opt peak increase versus the baseline fails CI.
+//!
+//! Results are printed *and* written to the repo root
+//! (`BENCH_opt_impact.json`).  `--quick` / `BENCH_QUICK=1` reduces
+//! iteration counts for CI.
+
+use lr_cnn::coordinator::StepPlan;
+use lr_cnn::metrics::bench;
+use lr_cnn::rowir::opt::optimize_graph;
+use lr_cnn::rowir::{analysis, Graph, Mode, NodeKind, OptContext, Task};
+use lr_cnn::runtime::Manifest;
+use lr_cnn::shard::{ShardConfig, ShardPlan};
+
+use std::fmt::Write as _;
+
+struct Rec {
+    name: String,
+    scope: &'static str,
+    opt_level: u8,
+    mean_ms: f64,
+    peak_before_bytes: u64,
+    peak_bytes: u64,
+    rewrites: usize,
+    iterations: usize,
+    bytes_freed: u64,
+    recompute_us: f64,
+}
+
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.4}")
+    } else {
+        "null".into()
+    }
+}
+
+/// Synthetic retain-edge workload: `skip` parks a large output across an
+/// independent chain of heavy rows, and only the terminal barrier reads
+/// it — the canonical pattern rematerialization exists for.  All chain
+/// nodes are `Opaque` (clonable); the sink is concrete so dce anchors
+/// the dataflow.
+fn retain_edge_graph(rows: usize) -> Graph {
+    let mut g = Graph::new();
+    let park = 48u64 << 20; // 48 MiB parked across the chain
+    let skip = g.push_out(NodeKind::Row, "skip", vec![], park, park);
+    let mut prev = None;
+    for r in 0..rows {
+        let deps = prev.map(|p| vec![p]).unwrap_or_default();
+        prev = Some(g.push_out(NodeKind::Row, format!("row{r}"), deps, 32 << 20, 8 << 20));
+    }
+    let mut deps = vec![skip, prev.expect("rows > 0")];
+    deps.sort_unstable();
+    g.push_task(NodeKind::Barrier, "sink", deps, 1 << 20, 0, Task::Head);
+    g
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let (warmup, iters) = if quick { (2, 10) } else { (5, 50) };
+
+    let man = Manifest::demo(2);
+    let mut recs: Vec<Rec> = Vec::new();
+
+    // (a) serial demo programs, levels 1 and 2 — the honest story: the
+    // lowered modes are residency-tight (every node concrete + live), so
+    // the optimizer proves itself a safe no-op at compile-time cost X
+    for mode in Mode::ALL {
+        let Ok(plan) = StepPlan::build(&man, mode) else {
+            continue;
+        };
+        let Ok(program) = plan.lower(&man) else {
+            continue;
+        };
+        let before = analysis::static_peak(program.graph());
+        for level in [1u8, 2] {
+            let cx = OptContext::serial();
+            let out = optimize_graph(program.graph(), level, &cx).expect("optimize");
+            let after = analysis::static_peak(&out.graph);
+            assert!(after <= before, "{mode:?} L{level}: peak rose");
+            let r = bench::time(
+                &format!("opt {} L{level} ({} nodes)", mode.label(), program.len()),
+                warmup,
+                iters,
+                || optimize_graph(program.graph(), level, &cx).unwrap().report.rewrites(),
+            );
+            println!(
+                "{}   [peak {} -> {} B, {} rewrite(s)]",
+                r.report(),
+                before,
+                after,
+                out.report.rewrites()
+            );
+            recs.push(Rec {
+                name: mode.label().into(),
+                scope: "serial",
+                opt_level: level,
+                mean_ms: r.mean_ms,
+                peak_before_bytes: before,
+                peak_bytes: after,
+                rewrites: out.report.rewrites(),
+                iterations: out.report.iterations,
+                bytes_freed: out.report.bytes_freed,
+                recompute_us: out.report.recompute_seconds_added * 1e6,
+            });
+        }
+    }
+
+    // (b) the same programs sharded over two devices — the optimizer
+    // sees the transfer-lowered plan (coalesce territory)
+    let sc = ShardConfig::new(2);
+    let topo = sc.topology();
+    for mode in Mode::ALL {
+        let Ok(plan) = StepPlan::build(&man, mode) else {
+            continue;
+        };
+        let Ok(program) = plan.lower(&man) else {
+            continue;
+        };
+        let build = || {
+            ShardPlan::build(program.graph(), &topo, sc.policy, vec![u64::MAX; 2])
+                .expect("plan builds")
+        };
+        let pre = build();
+        let before: u64 =
+            analysis::static_device_peaks(pre.graph(), pre.device_of(), pre.devices())
+                .iter()
+                .sum();
+        let mut splan = build();
+        let rep = splan.optimize(2, &topo).expect("optimize");
+        let after = rep.total_peak_after();
+        assert!(after <= before, "{mode:?} sharded: peak rose");
+        let r = bench::time(
+            &format!("opt {} sharded@2 L2", mode.label()),
+            warmup,
+            iters,
+            || build().optimize(2, &topo).unwrap().rewrites(),
+        );
+        println!(
+            "{}   [peak {} -> {} B, {} rewrite(s)]",
+            r.report(),
+            before,
+            after,
+            rep.rewrites()
+        );
+        recs.push(Rec {
+            name: mode.label().into(),
+            scope: "sharded2",
+            opt_level: 2,
+            mean_ms: r.mean_ms,
+            peak_before_bytes: before,
+            peak_bytes: after,
+            rewrites: rep.rewrites(),
+            iterations: rep.iterations,
+            bytes_freed: rep.bytes_freed,
+            recompute_us: rep.recompute_seconds_added * 1e6,
+        });
+    }
+
+    // (c) the synthetic retain edge — remat must fire and strictly win
+    let g = retain_edge_graph(6);
+    let before = analysis::static_peak(&g);
+    let cx = OptContext::serial();
+    let out = optimize_graph(&g, 2, &cx).expect("optimize");
+    let after = analysis::static_peak(&out.graph);
+    assert!(
+        after < before,
+        "retain-edge graph: remat must strictly drop the peak ({before} -> {after})"
+    );
+    assert!(out.report.bytes_freed > 0, "remat must report freed bytes");
+    let r = bench::time("opt retain_edge L2", warmup, iters, || {
+        optimize_graph(&g, 2, &cx).unwrap().report.rewrites()
+    });
+    println!(
+        "{}   [peak {} -> {} B, {} freed, {:.1} us recompute]",
+        r.report(),
+        before,
+        after,
+        out.report.bytes_freed,
+        out.report.recompute_seconds_added * 1e6
+    );
+    recs.push(Rec {
+        name: "retain_edge".into(),
+        scope: "synthetic",
+        opt_level: 2,
+        mean_ms: r.mean_ms,
+        peak_before_bytes: before,
+        peak_bytes: after,
+        rewrites: out.report.rewrites(),
+        iterations: out.report.iterations,
+        bytes_freed: out.report.bytes_freed,
+        recompute_us: out.report.recompute_seconds_added * 1e6,
+    });
+
+    // ---- JSON at the repo root (tracked trajectory) ----
+    let mut out = String::new();
+    out.push_str("{\n  \"bench\": \"opt_impact\",\n  \"schema\": 1,\n");
+    let _ = writeln!(out, "  \"quick\": {quick},");
+    out.push_str("  \"runs\": [\n");
+    for (i, rec) in recs.iter().enumerate() {
+        let _ = write!(
+            out,
+            "    {{\"name\": \"{}\", \"scope\": \"{}\", \"opt_level\": {}, \
+             \"mean_ms\": {}, \"peak_before_bytes\": {}, \"peak_bytes\": {}, \
+             \"rewrites\": {}, \"iterations\": {}, \"bytes_freed\": {}, \
+             \"recompute_us\": {}}}",
+            rec.name,
+            rec.scope,
+            rec.opt_level,
+            json_num(rec.mean_ms),
+            rec.peak_before_bytes,
+            rec.peak_bytes,
+            rec.rewrites,
+            rec.iterations,
+            rec.bytes_freed,
+            json_num(rec.recompute_us),
+        );
+        out.push_str(if i + 1 < recs.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ]\n}\n");
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_opt_impact.json");
+    match std::fs::write(&path, out) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}

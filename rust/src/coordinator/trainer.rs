@@ -495,6 +495,10 @@ struct RecoveryCtx {
     policy: PartitionPolicy,
     mem_budget: u64,
     xi: u64,
+    /// Optimizer level the original plan was built with — recovery and
+    /// recalibration rebuilds re-optimize at the same level, so a swap
+    /// never silently changes the optimization story.
+    opt_level: u8,
 }
 
 /// Fault-injection knobs installed on a shard state
@@ -529,6 +533,9 @@ pub struct ShardState {
     /// Sharded nodes re-executed by the most recent step's recovery
     /// phases.
     last_recomputed: u64,
+    /// What `ShardPlan::optimize` did to the active plan (`None` when
+    /// built at level 0 or via [`ShardState::with_plan`]).
+    opt_report: Option<rowir::OptReport>,
 }
 
 /// Map a base-graph recompute closure onto a sharded plan: a real node
@@ -564,7 +571,12 @@ impl ShardState {
     /// serial-order replay peak exceeds its clamped budget: a plan that
     /// passes admission but overflows a small device's memory would OOM
     /// on real hardware, so it is rejected here, at configuration time.
-    pub fn build(program: &RowProgram, cfg: &SchedConfig, xi: u64) -> Result<ShardState> {
+    pub fn build(
+        program: &RowProgram,
+        cfg: &SchedConfig,
+        xi: u64,
+        opt_level: u8,
+    ) -> Result<ShardState> {
         let sc = cfg.shard.clone().unwrap_or_else(|| shard::ShardConfig::new(1));
         let topo = sc.topology();
         let budgets: Vec<u64> = topo
@@ -572,7 +584,15 @@ impl ShardState {
             .into_iter()
             .map(|cap| cap.min(cfg.mem_budget))
             .collect();
-        let plan = ShardPlan::build(program.graph(), &topo, sc.policy, budgets)?;
+        let mut plan = ShardPlan::build(program.graph(), &topo, sc.policy, budgets)?;
+        // optimize post-lowering (coalescing must see the Transfer
+        // nodes), then let the replay-based budget check remain the
+        // admission authority over the optimized plan
+        let opt_report = if opt_level > 0 {
+            Some(plan.optimize(opt_level, &topo)?)
+        } else {
+            None
+        };
         plan.check_budgets()?;
         Ok(ShardState {
             plan,
@@ -583,11 +603,13 @@ impl ShardState {
                 policy: sc.policy,
                 mem_budget: cfg.mem_budget,
                 xi,
+                opt_level,
             }),
             faults: FaultState::default(),
             step_no: 0,
             last_lost: Vec::new(),
             last_recomputed: 0,
+            opt_report,
         })
     }
 
@@ -605,11 +627,18 @@ impl ShardState {
             step_no: 0,
             last_lost: Vec::new(),
             last_recomputed: 0,
+            opt_report: None,
         }
     }
 
     pub fn plan(&self) -> &ShardPlan {
         &self.plan
+    }
+
+    /// What `ShardPlan::optimize` did to the active plan (`None` at
+    /// level 0 or for externally-built plans).
+    pub fn opt_report(&self) -> Option<&rowir::OptReport> {
+        self.opt_report.as_ref()
     }
 
     /// Install fault-injection knobs (a fresh [`FaultInjector`] with its
@@ -761,11 +790,19 @@ impl ShardState {
                         .into_iter()
                         .map(|cap| cap.min(ctx.mem_budget))
                         .collect();
-                    let Ok(plan) =
+                    let Ok(mut plan) =
                         ShardPlan::build(&ctx.base, &ctx.topo, ctx.policy, budgets)
                     else {
                         return Err(lost(&label));
                     };
+                    // re-optimize at the level the lost plan was built
+                    // with, so recovery never changes the optimization
+                    // story mid-run
+                    if ctx.opt_level > 0
+                        && plan.optimize(ctx.opt_level, &ctx.topo).is_err()
+                    {
+                        return Err(lost(&label));
+                    }
                     let needed = vec![true; ctx.base.len()];
                     let closure =
                         interp::recompute_closure(&ctx.base, &needed, &finished_base);
@@ -815,7 +852,10 @@ impl ShardState {
             .into_iter()
             .map(|cap| cap.min(ctx.mem_budget))
             .collect();
-        let plan = ShardPlan::build(&ctx.base, &ctx.topo, ctx.policy, budgets).ok()?;
+        let mut plan = ShardPlan::build(&ctx.base, &ctx.topo, ctx.policy, budgets).ok()?;
+        if ctx.opt_level > 0 {
+            plan.optimize(ctx.opt_level, &ctx.topo).ok()?;
+        }
         if plan.check_budgets().is_err() {
             return None;
         }
@@ -867,7 +907,13 @@ impl SchedState {
     /// `program` is the trainer's lowered program (`None` when the plan
     /// was never lowered — a naive-infeasible manifest), `xi` the
     /// always-resident bytes.  On `Err` no field has changed.
-    fn set(&mut self, program: Option<&RowProgram>, cfg: SchedConfig, xi: u64) -> Result<()> {
+    fn set(
+        &mut self,
+        program: Option<&RowProgram>,
+        cfg: SchedConfig,
+        xi: u64,
+        opt_level: u8,
+    ) -> Result<()> {
         let shard = match cfg.policy {
             Policy::Serial => None,
             Policy::Pipelined => {
@@ -878,7 +924,7 @@ impl SchedState {
                             .into(),
                     )
                 })?;
-                Some(ShardState::build(program, &cfg, xi)?)
+                Some(ShardState::build(program, &cfg, xi, opt_level)?)
             }
         };
         self.cfg = cfg;
@@ -935,6 +981,12 @@ pub struct Trainer<'r> {
     /// Refit the cost model from accumulated spans every n steps (0 = off;
     /// [`Trainer::recalibrate_every`]).  Survives `set_sched` re-arming.
     recalibrate_every: u32,
+    /// `rowir::opt` pipeline level applied to the lowered program and to
+    /// every sharded plan built from it (0 = off; [`Trainer::set_opt_level`]).
+    opt_level: u8,
+    /// What the optimizer did to the serial program (`None` at level 0).
+    /// The sharded plan's own report lives in its [`ShardState`].
+    opt_report: Option<rowir::OptReport>,
 }
 
 impl<'r> Trainer<'r> {
@@ -976,6 +1028,8 @@ impl<'r> Trainer<'r> {
             last_trace: None,
             obs: None,
             recalibrate_every: 0,
+            opt_level: 0,
+            opt_report: None,
         })
     }
 
@@ -1001,7 +1055,7 @@ impl<'r> Trainer<'r> {
     /// trainer keeps its previous (working) configuration in full.
     pub fn set_sched(&mut self, cfg: SchedConfig) -> Result<()> {
         let xi = self.params.size_bytes() + self.optimizer.state_bytes(&self.params);
-        self.sched.set(self.program.as_ref(), cfg, xi)?;
+        self.sched.set(self.program.as_ref(), cfg, xi, self.opt_level)?;
         if let Some(ss) = self.sched.shard.as_mut() {
             ss.set_faults(&self.faults);
         }
@@ -1014,6 +1068,59 @@ impl<'r> Trainer<'r> {
             self.set_recording(true);
         }
         Ok(())
+    }
+
+    /// Set the `rowir::opt` pipeline level (`--opt-level 0|1|2`, clamped
+    /// to 2) and re-apply it end to end: the step plan is re-lowered to a
+    /// pristine program, optimized serially when `level > 0`, and the
+    /// active sched configuration is rebuilt so a sharded plan gets its
+    /// own post-partition optimization pass ([`ShardPlan::optimize`]).
+    ///
+    /// Fallible and transactional like [`Trainer::set_sched`]: on error
+    /// (e.g. the optimizer declares the budgets infeasible) the trainer
+    /// keeps its previous program, level and schedule.
+    pub fn set_opt_level(&mut self, level: u8) -> Result<()> {
+        let level = level.min(2);
+        // re-lower from scratch: optimizing an already-optimized program
+        // is a no-op, but level changes must not compound on stale state
+        let (program, report) = match &self.plan.kind {
+            PlanKind::NaiveInfeasible(_) => (None, None),
+            _ => {
+                let pristine = self.plan.lower(&self.rt.manifest)?;
+                if level > 0 {
+                    let (p, r) = rowir::optimize(&pristine, level, &rowir::OptContext::serial())?;
+                    (Some(p), Some(r))
+                } else {
+                    (Some(pristine), None)
+                }
+            }
+        };
+        let prev_level = self.opt_level;
+        let prev_program = std::mem::replace(&mut self.program, program);
+        let prev_report = std::mem::replace(&mut self.opt_report, report);
+        self.opt_level = level;
+        if let Err(e) = self.set_sched(self.sched.cfg.clone()) {
+            self.program = prev_program;
+            self.opt_report = prev_report;
+            self.opt_level = prev_level;
+            return Err(e);
+        }
+        Ok(())
+    }
+
+    /// The active optimizer level (0 = off).
+    pub fn opt_level(&self) -> u8 {
+        self.opt_level
+    }
+
+    /// What the optimizer did to the *active* plan: the sharded plan's
+    /// post-partition report when sharding is live, else the serial
+    /// program's.  `None` at level 0 or before a program is lowered.
+    pub fn opt_report(&self) -> Option<&rowir::OptReport> {
+        match self.sched.shard.as_ref() {
+            Some(ss) => ss.opt_report().or(self.opt_report.as_ref()),
+            None => self.opt_report.as_ref(),
+        }
     }
 
     /// Install fault-injection knobs (`--fault-plan`, `--retry`,
@@ -1101,14 +1208,19 @@ impl<'r> Trainer<'r> {
         if let Some(v) = self.plan_lint_verdict() {
             flight.set_plan_lint(v);
         }
+        let mut report = obs::RunReport::new(
+            format!("train {mode} ({:?})", self.sched.cfg.policy),
+            mode,
+            workers,
+            devices,
+        );
+        // the report describes the *optimized* plan when a level is set
+        if let Some(r) = self.opt_report() {
+            report.set_optimizer(obs::OptimizerSummary::from(r));
+        }
         self.obs = Some(ObsState {
             recorder: Recorder::new(workers),
-            report: obs::RunReport::new(
-                format!("train {mode} ({:?})", self.sched.cfg.policy),
-                mode,
-                workers,
-                devices,
-            ),
+            report,
             model,
             spans: Vec::new(),
             step_no: 0,
@@ -2008,11 +2120,11 @@ mod tests {
 
         let mut st = SchedState::new();
         let good = SchedConfig::pipelined(2);
-        st.set(Some(&program), good.clone(), 0).unwrap();
+        st.set(Some(&program), good.clone(), 0, 0).unwrap();
         assert!(st.shard.is_some(), "pipelined builds the sharded state");
 
         // (a) pipelined with no lowered program: Error::Sched, nothing moves
-        match st.set(None, SchedConfig::pipelined(4), 0) {
+        match st.set(None, SchedConfig::pipelined(4), 0, 0) {
             Err(Error::Sched(msg)) => assert!(msg.contains("never"), "{msg}"),
             other => panic!("expected Error::Sched, got ok={:?}", other.is_ok()),
         }
@@ -2026,7 +2138,7 @@ mod tests {
         let tiny = SchedConfig::pipelined(2).with_shard(ShardConfig::heterogeneous(vec![
             DeviceSpec::new(DevicePreset::Rtx3090).with_hbm(64),
         ]));
-        match st.set(Some(&program), tiny, 0) {
+        match st.set(Some(&program), tiny, 0, 0) {
             Err(Error::InfeasiblePlan(msg)) => {
                 assert!(msg.contains("exceeds"), "{msg}")
             }
@@ -2036,7 +2148,7 @@ mod tests {
         assert!(st.shard.is_some());
 
         // (c) falling back to serial always succeeds and drops the pool
-        st.set(None, SchedConfig::default(), 0).unwrap();
+        st.set(None, SchedConfig::default(), 0, 0).unwrap();
         assert!(st.shard.is_none());
     }
 
@@ -2058,7 +2170,7 @@ mod tests {
             DeviceSpec::new(DevicePreset::A100).with_hbm(small),
         ]));
         let xi = 1u64 << 10;
-        let ss = ShardState::build(&program, &cfg, xi).unwrap();
+        let ss = ShardState::build(&program, &cfg, xi, 0).unwrap();
         let budgets = ss.plan().budgets();
         assert_eq!(
             budgets[0],
@@ -2072,7 +2184,7 @@ mod tests {
             mem_budget: 4096,
             ..cfg
         };
-        let ss = ShardState::build(&program, &cfg, xi).unwrap();
+        let ss = ShardState::build(&program, &cfg, xi, 0).unwrap();
         assert!(ss.plan().budgets().iter().all(|&b| b == 4096));
     }
 

@@ -140,6 +140,31 @@ impl CostModel {
         self.transfer_latency_s + if wire.is_finite() { wire } else { 0.0 }
     }
 
+    /// Modeled seconds to re-execute a recompute subgraph: each item is
+    /// `(device, est_bytes, is_transfer)` — transfers priced by the link
+    /// model, compute nodes by the device lane.  This is the *cost* side
+    /// of the optimizer's recompute-vs-retain trade ([`CostModel::remat_score`]).
+    pub fn recompute_seconds(&self, items: &[(usize, u64, bool)]) -> f64 {
+        items
+            .iter()
+            .map(|&(device, bytes, is_transfer)| {
+                if is_transfer {
+                    self.transfer_seconds(bytes)
+                } else {
+                    self.node_seconds(device, bytes)
+                }
+            })
+            .sum()
+    }
+
+    /// Rematerialization victim score: bytes freed per modeled recompute
+    /// second — higher is a better victim.  The denominator is clamped
+    /// away from zero so a modeled-free subgraph ranks first instead of
+    /// dividing by zero.
+    pub fn remat_score(&self, bytes_freed: u64, recompute_seconds: f64) -> f64 {
+        bytes_freed as f64 / recompute_seconds.max(1e-12)
+    }
+
     /// Predicted seconds for one recorded span — the per-span currency
     /// the run report's predicted-vs-measured breakdown compares.
     pub fn span_seconds(&self, span: &crate::obs::Span) -> f64 {
@@ -379,6 +404,27 @@ mod tests {
             bp_flops: 2_000_000_000_000,
             ..Default::default()
         }
+    }
+
+    #[test]
+    fn recompute_seconds_prices_compute_and_transfers_separately() {
+        let dev = DeviceModel::rtx3090();
+        let m = CostModel::analytic(&[dev.clone()], dev.pcie_bytes_per_sec);
+        let items = [(0usize, 1_000_000u64, false), (0, 1_000_000, true)];
+        let secs = m.recompute_seconds(&items);
+        let expect = m.node_seconds(0, 1_000_000) + m.transfer_seconds(1_000_000);
+        assert!((secs - expect).abs() < 1e-12, "{secs} vs {expect}");
+        assert_eq!(m.recompute_seconds(&[]), 0.0);
+    }
+
+    #[test]
+    fn remat_score_ranks_cheap_recompute_first() {
+        let dev = DeviceModel::rtx3090();
+        let m = CostModel::analytic(&[dev.clone()], dev.pcie_bytes_per_sec);
+        let cheap = m.remat_score(1 << 20, 1e-6);
+        let pricey = m.remat_score(1 << 20, 1e-3);
+        assert!(cheap > pricey, "same bytes, cheaper recompute wins");
+        assert!(m.remat_score(1 << 20, 0.0).is_finite(), "clamped, not inf");
     }
 
     #[test]

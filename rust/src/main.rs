@@ -6,11 +6,18 @@
 //!   plan   --net vgg16|resnet50 --device rtx3090|rtx3080 --batch B \
 //!          [--dim H] [--rows N]
 //!          — memory-plan an iteration and print peak/fit per strategy
-//!   plan   --dump-ir [--artifacts DIR] [--out FILE]
+//!   plan   --dump-ir [--optimized] [--artifacts DIR] [--out FILE]
 //!          — lower the row-program IR for all 4 modes (artifact bundle's
 //!          manifest when given, the built-in demo bundle otherwise),
 //!          validate() each program and emit the node/task/deps/bytes
-//!          JSON (docs/ROWIR.md); nonzero exit on any lowering regression
+//!          JSON (docs/ROWIR.md); --optimized additionally runs the
+//!          rowir::opt fixpoint pipeline at level 2 and emits the
+//!          post-opt program + pass report side by side with the
+//!          pristine one; nonzero exit on any lowering regression
+//!   plan   --optimize [--opt-level 0|1|2] [--artifacts DIR]
+//!          — run the optimizer pipeline over every mode's lowered
+//!          program and print the before/after static-peak table
+//!          (docs/ROWIR.md "Optimizer")
 //!   plan   --lint [--devices N] [--artifacts DIR] [--lint-out FILE]
 //!          — run the static-analysis suite (docs/ANALYSIS.md: structure,
 //!          determinism lint, liveness, shard race/transfer checker) over
@@ -48,7 +55,11 @@
 //!          repartition under drift, guarded never-slower);
 //!          --lint-strict refuses to train unless the active plan's
 //!          static-analysis report is fully clean — warnings included
-//!          (docs/ANALYSIS.md)
+//!          (docs/ANALYSIS.md); --opt-level 0|1|2 runs the rowir::opt
+//!          fixpoint pipeline over the lowered program (and, sharded,
+//!          over the transfer-lowered plan) before training — level 1
+//!          is dce + transfer coalescing, level 2 adds budget-driven
+//!          rematerialization (docs/ROWIR.md "Optimizer")
 //!   info   [--artifacts DIR]
 //!          — print the artifact bundle inventory
 //!   trace  --net vgg16 --strategy overl-h [--batch B] [--rows N] [--out FILE]
@@ -189,6 +200,7 @@ fn cmd_dump_ir(flags: &HashMap<String, String>) -> Result<(), String> {
             Manifest::demo(2)
         }
     };
+    let optimized = flags.contains_key("optimized");
     let mut out = String::from("[\n");
     for (i, mode) in Mode::ALL.iter().enumerate() {
         match rowir::lower(&man, *mode) {
@@ -198,8 +210,26 @@ fn cmd_dump_ir(flags: &HashMap<String, String>) -> Result<(), String> {
                 program
                     .validate()
                     .map_err(|e| format!("{} IR invalid: {e}", mode.label()))?;
+                // --optimized: the post-opt program + pass report ride
+                // along beside the pristine dump, so a diff of the two
+                // `program` objects is exactly what the optimizer did
+                let opt_field = if optimized {
+                    let (optp, rep) =
+                        rowir::optimize(&program, 2, &rowir::OptContext::serial())
+                            .map_err(|e| format!("{} optimize: {e}", mode.label()))?;
+                    optp.validate()
+                        .map_err(|e| format!("{} post-opt IR invalid: {e}", mode.label()))?;
+                    format!(
+                        ", \"optimized\": {{\"len\": {}, \"report\": {}, \"program\": {}}}",
+                        optp.len(),
+                        rep.to_json(),
+                        optp.to_json()
+                    )
+                } else {
+                    String::new()
+                };
                 out.push_str(&format!(
-                    "{{\"mode\": \"{}\", \"len\": {}, \"program\": {}}}",
+                    "{{\"mode\": \"{}\", \"len\": {}, \"program\": {}{opt_field}}}",
                     mode.label(),
                     program.len(),
                     program.to_json()
@@ -360,12 +390,89 @@ fn cmd_lint(flags: &HashMap<String, String>) -> Result<(), String> {
     }
 }
 
+/// `plan --optimize`: the optimizer-impact sweep — lower every mode,
+/// run the `rowir::opt` fixpoint pipeline at `--opt-level` (default 2)
+/// and print one before/after row per mode plus each mode's per-pass
+/// table when anything rewrote.  The command itself re-checks the
+/// pipeline's core guarantee (post-opt static peak never above pre-opt)
+/// so CI catches a regression even without the test suite.
+fn cmd_optimize(flags: &HashMap<String, String>) -> Result<(), String> {
+    use lr_cnn::rowir::{self, analysis, Mode, OptContext};
+    use lr_cnn::runtime::Manifest;
+    let man = match flags.get("artifacts").filter(|d| !d.is_empty()) {
+        Some(dir) => Manifest::load(std::path::Path::new(dir)).map_err(|e| e.to_string())?,
+        None => {
+            eprintln!("plan --optimize: no --artifacts given, using the built-in demo bundle");
+            Manifest::demo(2)
+        }
+    };
+    let level: u8 = flags
+        .get("opt-level")
+        .filter(|s| !s.is_empty())
+        .map(String::as_str)
+        .unwrap_or("2")
+        .parse()
+        .map_err(|_| "bad --opt-level (0|1|2)")?;
+    let mut table = Table::new(
+        format!("optimizer impact (level {})", level.min(2)),
+        &["mode", "nodes", "peak before", "peak after", "rewrites", "iters"],
+    );
+    let mut details: Vec<Table> = Vec::new();
+    for mode in Mode::ALL {
+        let program = match rowir::lower(&man, mode) {
+            Ok(p) => p,
+            Err(lr_cnn::Error::InfeasiblePlan(_)) => {
+                table.row(vec![
+                    mode.label().into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "infeasible".into(),
+                    "-".into(),
+                ]);
+                continue;
+            }
+            Err(e) => return Err(format!("{}: {e}", mode.label())),
+        };
+        let before = analysis::static_peak(program.graph());
+        let (opt, rep) = rowir::optimize(&program, level, &OptContext::serial())
+            .map_err(|e| format!("{}: {e}", mode.label()))?;
+        let after = analysis::static_peak(opt.graph());
+        if after > before {
+            return Err(format!(
+                "{}: optimizer raised the static peak ({before} -> {after} B)",
+                mode.label()
+            ));
+        }
+        table.row(vec![
+            mode.label().into(),
+            format!("{} -> {}", program.len(), opt.len()),
+            fmt_bytes(before),
+            fmt_bytes(after),
+            rep.rewrites().to_string(),
+            rep.iterations.to_string(),
+        ]);
+        if rep.rewrites() > 0 {
+            details.push(rep.to_table(format!("{} passes", mode.label())));
+        }
+    }
+    table.print();
+    for t in details {
+        println!();
+        t.print();
+    }
+    Ok(())
+}
+
 fn cmd_plan(flags: &HashMap<String, String>) -> Result<(), String> {
     if flags.contains_key("dump-ir") {
         return cmd_dump_ir(flags);
     }
     if flags.contains_key("lint") {
         return cmd_lint(flags);
+    }
+    if flags.contains_key("optimize") {
+        return cmd_optimize(flags);
     }
     let net = net_by_name(flags.get("net").map(String::as_str).unwrap_or("vgg16"))
         .ok_or("unknown --net (vgg16|resnet50|minivgg)")?;
@@ -630,9 +737,35 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<(), CliError> {
             );
         }
     }
+    let opt_level: u8 = flags
+        .get("opt-level")
+        .filter(|s| !s.is_empty())
+        .map(String::as_str)
+        .unwrap_or("0")
+        .parse()
+        .map_err(|_| "bad --opt-level (0|1|2)")?;
+    if opt_level > 0 {
+        // after set_sched: set_opt_level re-lowers, optimizes and
+        // rebuilds the active schedule, so a sharded plan gets its
+        // post-partition pipeline run too
+        tr.set_opt_level(opt_level).map_err(CliError::Run)?;
+        if let Some(r) = tr.opt_report() {
+            println!(
+                "opt: level {}, {} rewrite(s) in {} iteration(s), peak {} -> {}, \
+                 {} freed for {:.1} us/step recompute",
+                opt_level.min(2),
+                r.rewrites(),
+                r.iterations,
+                fmt_bytes(r.total_peak_before()),
+                fmt_bytes(r.total_peak_after()),
+                fmt_bytes(r.bytes_freed),
+                r.recompute_seconds_added * 1e6
+            );
+        }
+    }
     if flags.contains_key("lint-strict") {
-        // gate *after* set_sched so the sharded plan (not just the
-        // lowered program) is what gets judged
+        // gate *after* set_sched (and --opt-level) so the plan that will
+        // actually run — sharded and optimized — is what gets judged
         match tr.plan_lint_report() {
             Some(rep) if rep.is_clean() => {
                 println!("lint: plan statically clean ({} pass(es))", rep.passes.len());

@@ -26,7 +26,9 @@ pub mod metrics;
 pub mod perfetto;
 pub mod report;
 
-pub use report::{DeviceTime, KindBreakdown, RunReport, StepInput, StepReport, Totals};
+pub use report::{
+    DeviceTime, KindBreakdown, OptimizerSummary, RunReport, StepInput, StepReport, Totals,
+};
 
 use crate::rowir::{NodeId, NodeKind};
 use std::sync::atomic::{AtomicU32, Ordering};

@@ -17,13 +17,15 @@ use crate::util::json::{escape, JsonValue};
 /// Report schema version (bump on any breaking layout change).
 /// Schema 2 added the per-step drift/straggler fields and the
 /// recalibration totals (docs/OBSERVABILITY.md, "Online loop").
-pub const SCHEMA: u32 = 2;
+/// Schema 3 added the `optimizer` section (per-pass rewrite counts and
+/// bytes freed by the `rowir::opt` pipeline; docs/ROWIR.md, "Optimizer").
+pub const SCHEMA: u32 = 3;
 
 /// Every key this schema allows at the top level.  `from_json` rejects
 /// anything else *by name*: a document from a future schema that slipped
 /// past the version check (or a hand-edited report) fails loudly instead
 /// of silently dropping fields.
-const TOP_LEVEL_KEYS: [&str; 10] = [
+const TOP_LEVEL_KEYS: [&str; 11] = [
     "schema",
     "kind",
     "title",
@@ -34,6 +36,7 @@ const TOP_LEVEL_KEYS: [&str; 10] = [
     "steps",
     "device_time",
     "calibration",
+    "optimizer",
 ];
 
 /// The per-step numbers a driver already has (the trainer copies them
@@ -132,6 +135,49 @@ pub struct Totals {
     pub repartitions: u64,
 }
 
+/// Flat summary of what the `rowir::opt` pipeline did to the plan this
+/// run executes — per-pass rewrite counts plus the headline byte and
+/// modeled-seconds accounting (`None` when the run was unoptimized).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct OptimizerSummary {
+    pub level: u8,
+    pub iterations: usize,
+    pub rewrites: usize,
+    pub dce_rewrites: usize,
+    pub coalesce_rewrites: usize,
+    pub remat_rewrites: usize,
+    pub bytes_freed: u64,
+    pub recompute_seconds_added: f64,
+    pub transfer_seconds_saved: f64,
+    pub peak_before: Vec<u64>,
+    pub peak_after: Vec<u64>,
+}
+
+impl From<&crate::rowir::OptReport> for OptimizerSummary {
+    fn from(r: &crate::rowir::OptReport) -> OptimizerSummary {
+        let count = |name: &str| {
+            r.passes
+                .iter()
+                .filter(|p| p.pass == name)
+                .map(|p| p.rewrites)
+                .sum()
+        };
+        OptimizerSummary {
+            level: r.level,
+            iterations: r.iterations,
+            rewrites: r.rewrites(),
+            dce_rewrites: count("dce"),
+            coalesce_rewrites: count("coalesce"),
+            remat_rewrites: count("remat"),
+            bytes_freed: r.bytes_freed,
+            recompute_seconds_added: r.recompute_seconds_added,
+            transfer_seconds_saved: r.transfer_seconds_saved,
+            peak_before: r.peak_before.clone(),
+            peak_after: r.peak_after.clone(),
+        }
+    }
+}
+
 /// The whole document.
 #[derive(Debug, Clone)]
 pub struct RunReport {
@@ -144,6 +190,7 @@ pub struct RunReport {
     pub steps: Vec<StepReport>,
     pub device_time: Vec<DeviceTime>,
     pub calibration: Option<CalibrationReport>,
+    pub optimizer: Option<OptimizerSummary>,
 }
 
 const KIND_ORDER: [NodeKind; 4] = [
@@ -180,6 +227,7 @@ impl RunReport {
             steps: Vec::new(),
             device_time,
             calibration: None,
+            optimizer: None,
         }
     }
 
@@ -288,6 +336,11 @@ impl RunReport {
         self.calibration = Some(cal);
     }
 
+    /// Record what the optimizer pipeline did to this run's plan.
+    pub fn set_optimizer(&mut self, opt: OptimizerSummary) {
+        self.optimizer = Some(opt);
+    }
+
     /// Count one online-loop cost-model refit; `repartitioned` when the
     /// refit also swapped in a rebuilt shard plan.
     pub fn record_recalibration(&mut self, repartitioned: bool) {
@@ -391,7 +444,7 @@ impl RunReport {
         }
         o.push_str("  ],\n");
         match &self.calibration {
-            None => o.push_str("  \"calibration\": null\n"),
+            None => o.push_str("  \"calibration\": null,\n"),
             Some(c) => {
                 o.push_str("  \"calibration\": {\n");
                 o.push_str(&format!("    \"samples\": {},\n", c.samples));
@@ -409,6 +462,30 @@ impl RunReport {
                     o.push_str(if i + 1 < c.devices.len() { "      },\n" } else { "      }\n" });
                 }
                 o.push_str("    ]\n");
+                o.push_str("  },\n");
+            }
+        }
+        match &self.optimizer {
+            None => o.push_str("  \"optimizer\": null\n"),
+            Some(p) => {
+                o.push_str("  \"optimizer\": {\n");
+                o.push_str(&format!("    \"level\": {},\n", p.level));
+                o.push_str(&format!("    \"iterations\": {},\n", p.iterations));
+                o.push_str(&format!("    \"rewrites\": {},\n", p.rewrites));
+                o.push_str(&format!("    \"dce_rewrites\": {},\n", p.dce_rewrites));
+                o.push_str(&format!("    \"coalesce_rewrites\": {},\n", p.coalesce_rewrites));
+                o.push_str(&format!("    \"remat_rewrites\": {},\n", p.remat_rewrites));
+                o.push_str(&format!("    \"bytes_freed\": {},\n", p.bytes_freed));
+                o.push_str(&format!(
+                    "    \"recompute_seconds_added\": {},\n",
+                    num(p.recompute_seconds_added)
+                ));
+                o.push_str(&format!(
+                    "    \"transfer_seconds_saved\": {},\n",
+                    num(p.transfer_seconds_saved)
+                ));
+                o.push_str(&format!("    \"peak_before\": {},\n", u64s(&p.peak_before)));
+                o.push_str(&format!("    \"peak_after\": {}\n", u64s(&p.peak_after)));
                 o.push_str("  }\n");
             }
         }
@@ -532,6 +609,27 @@ impl RunReport {
                 })
             }
         };
+        let optimizer = match v.opt("optimizer") {
+            None => None,
+            Some(p) => {
+                let peaks = |key: &str| -> Result<Vec<u64>> {
+                    p.get(key)?.as_array()?.iter().map(u64_of).collect()
+                };
+                Some(OptimizerSummary {
+                    level: p.get("level")?.as_usize()? as u8,
+                    iterations: p.get("iterations")?.as_usize()?,
+                    rewrites: p.get("rewrites")?.as_usize()?,
+                    dce_rewrites: p.get("dce_rewrites")?.as_usize()?,
+                    coalesce_rewrites: p.get("coalesce_rewrites")?.as_usize()?,
+                    remat_rewrites: p.get("remat_rewrites")?.as_usize()?,
+                    bytes_freed: u64_of(p.get("bytes_freed")?)?,
+                    recompute_seconds_added: f64_of(p.get("recompute_seconds_added")?)?,
+                    transfer_seconds_saved: f64_of(p.get("transfer_seconds_saved")?)?,
+                    peak_before: peaks("peak_before")?,
+                    peak_after: peaks("peak_after")?,
+                })
+            }
+        };
         Ok(RunReport {
             schema,
             title: v.get("title")?.as_str()?.to_string(),
@@ -542,6 +640,7 @@ impl RunReport {
             steps,
             device_time,
             calibration,
+            optimizer,
         })
     }
 
@@ -703,6 +802,26 @@ impl RunReport {
             }
             out.push(cal);
         }
+
+        if let Some(p) = &self.optimizer {
+            let mut opt = Table::new("optimizer", &["metric", "value"]);
+            opt.row(vec!["level".into(), p.level.to_string()]);
+            opt.row(vec!["iterations".into(), p.iterations.to_string()]);
+            opt.row(vec!["rewrites".into(), p.rewrites.to_string()]);
+            opt.row(vec!["dce".into(), p.dce_rewrites.to_string()]);
+            opt.row(vec!["coalesce".into(), p.coalesce_rewrites.to_string()]);
+            opt.row(vec!["remat".into(), p.remat_rewrites.to_string()]);
+            opt.row(vec!["bytes freed".into(), p.bytes_freed.to_string()]);
+            opt.row(vec![
+                "peak before (B)".into(),
+                p.peak_before.iter().sum::<u64>().to_string(),
+            ]);
+            opt.row(vec![
+                "peak after (B)".into(),
+                p.peak_after.iter().sum::<u64>().to_string(),
+            ]);
+            out.push(opt);
+        }
         out
     }
 }
@@ -811,13 +930,38 @@ mod tests {
 
     #[test]
     fn schema_mismatch_is_rejected() {
-        let json = demo_report().to_json().replace("\"schema\": 2", "\"schema\": 9");
+        let json = demo_report().to_json().replace("\"schema\": 3", "\"schema\": 9");
         assert!(RunReport::from_json(&json).is_err());
     }
 
     #[test]
+    fn optimizer_section_round_trips() {
+        let mut rep = demo_report();
+        rep.set_optimizer(OptimizerSummary {
+            level: 2,
+            iterations: 2,
+            rewrites: 3,
+            dce_rewrites: 1,
+            coalesce_rewrites: 1,
+            remat_rewrites: 1,
+            bytes_freed: 4096,
+            recompute_seconds_added: 1.5e-6,
+            transfer_seconds_saved: 2.5e-6,
+            peak_before: vec![110, 50],
+            peak_after: vec![105, 50],
+        });
+        let json = rep.to_json();
+        let back = RunReport::from_json(&json).expect("parses");
+        assert_eq!(back.optimizer, rep.optimizer);
+        assert_eq!(back.to_json(), json, "byte-exact round trip");
+        let all: String = rep.tables().iter().map(|t| t.markdown()).collect();
+        assert!(all.contains("optimizer"), "{all}");
+        assert!(all.contains("bytes freed"), "{all}");
+    }
+
+    #[test]
     fn unknown_top_level_key_is_rejected_by_name() {
-        // a schema-3 probe: same version number, one extra top-level
+        // a schema-4 probe: same version number, one extra top-level
         // section — must fail *naming the key*, not silently drop it
         let json = demo_report().to_json().replace(
             "  \"kind\": \"lr-cnn-run-report\",\n",
@@ -827,9 +971,9 @@ mod tests {
         let msg = err.to_string();
         assert!(msg.contains("gpu_clock_mhz"), "error names the key: {msg}");
         // a probe that also bumps the schema fails at the version gate
-        let probe = json.replace("\"schema\": 2", "\"schema\": 3");
-        let msg = RunReport::from_json(&probe).expect_err("schema 3 rejected").to_string();
-        assert!(msg.contains("schema 3"), "{msg}");
+        let probe = json.replace("\"schema\": 3", "\"schema\": 4");
+        let msg = RunReport::from_json(&probe).expect_err("schema 4 rejected").to_string();
+        assert!(msg.contains("schema 4"), "{msg}");
     }
 
     #[test]

@@ -35,12 +35,16 @@ pub mod analysis;
 pub mod graph;
 pub mod interp;
 pub mod lower;
+pub mod opt;
 pub mod task;
 
 pub use graph::{Graph, Node, NodeId, NodeKind};
 pub use interp::InterpOutcome;
 pub use lower::{lower, naive_row_extents};
+pub use opt::{optimize, OptContext, OptReport};
 pub use task::Task;
+
+use std::collections::HashMap;
 
 use crate::error::Result;
 
@@ -80,13 +84,23 @@ impl Mode {
 #[derive(Debug, Clone)]
 pub struct RowProgram {
     graph: Graph,
+    /// task → first node carrying it, built once at construction so
+    /// [`RowProgram::find_task`] is O(1) instead of an O(V) scan per
+    /// call (the optimizer's dedup maps and the forward-prefix boundary
+    /// lookups both hit it in loops).
+    task_index: HashMap<Task, NodeId>,
 }
 
 impl RowProgram {
     /// Wrap a graph, re-checking every invariant ([`Graph::validate`]).
     pub fn new(graph: Graph) -> Result<RowProgram> {
         graph.validate()?;
-        Ok(RowProgram { graph })
+        let mut task_index = HashMap::with_capacity(graph.len());
+        for (id, node) in graph.nodes().iter().enumerate() {
+            // first id wins: same answer `position()` used to give
+            task_index.entry(node.task).or_insert(id);
+        }
+        Ok(RowProgram { graph, task_index })
     }
 
     pub fn graph(&self) -> &Graph {
@@ -106,9 +120,10 @@ impl RowProgram {
         self.graph.node(id).task
     }
 
-    /// First node carrying `task` (the forward-prefix boundary lookup).
+    /// First node carrying `task` (the forward-prefix boundary lookup) —
+    /// an O(1) hit on the index built in [`RowProgram::new`].
     pub fn find_task(&self, task: Task) -> Option<NodeId> {
-        self.graph.nodes().iter().position(|n| n.task == task)
+        self.task_index.get(&task).copied()
     }
 
     /// Re-run the validity check (paranoia hook for callers receiving a
@@ -170,6 +185,17 @@ mod tests {
         assert_eq!(json, p.to_json(), "dump is deterministic");
         assert!(json.contains("\"task\": \"FpRow { seg: 0, row: 0 }\""), "{json}");
         assert!(json.contains("\"est_bytes\": 10"), "{json}");
+    }
+
+    #[test]
+    fn find_task_index_keeps_first_wins_semantics() {
+        let mut g = Graph::new();
+        let a = g.push(NodeKind::Row, "a", vec![], 1);
+        let _b = g.push(NodeKind::Row, "b", vec![a], 1);
+        let p = RowProgram::new(g).unwrap();
+        // both nodes carry Opaque: the index answers with the first id,
+        // exactly as the old linear scan did
+        assert_eq!(p.find_task(Task::Opaque), Some(0));
     }
 
     #[test]

@@ -1,0 +1,150 @@
+//! Transfer coalescing/dedup: two [`Task::Transfer`] nodes copying the
+//! same producer's payload to the same destination device are one copy
+//! doing double duty — the sharded lowering dedups the transfers *it*
+//! inserts, but remat clones, hand-built graphs and composed rewrites
+//! can reintroduce duplicates across fans.
+//!
+//! A merge keeps the lowest-id transfer of each (producer, device)
+//! group, redirects every consumer of a duplicate onto it (the kept id
+//! is always lower, so deps stay backward), takes the max payload and
+//! deletes the duplicate.  Each merge is priced on a trial copy first
+//! and applied **only when no device's static peak rises**: folding two
+//! copies into one extends the kept copy's park to the later consumer,
+//! which is usually a win (one payload resident instead of two) but can
+//! lose when the copies' live spans were disjoint — and an unconditional
+//! merge could silently undo a remat split, ping-ponging the fixpoint.
+//! The peak gate breaks that cycle structurally.  A rejected merge is
+//! not a rewrite, so re-examining it on the next fixpoint iteration
+//! (and rejecting it again) still quiesces.
+//!
+//! Bit-identity: a transfer's value *is* its producer's payload, so a
+//! consumer reading the kept copy reads the same bytes — and handlers
+//! read host slots keyed by task identity, never graph deps, so the
+//! rewire cannot reorder any reduction.
+
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+
+use crate::rowir::task::Task;
+
+use super::{OptContext, WorkGraph};
+
+/// Merge duplicate same-(producer, device) transfers.  Returns the
+/// number of transfers deleted; modeled link seconds saved accumulate
+/// into `saved_s`.
+pub(crate) fn run(wg: &mut WorkGraph, cx: &OptContext, saved_s: &mut f64) -> usize {
+    // Snapshot the duplicate pairs as (keep, dup) *labels*: labels are
+    // stable identities across the retain a merge performs, node ids are
+    // not.  Each pair is evaluated exactly once per pass run.
+    let mut pairs: Vec<(String, String)> = Vec::new();
+    {
+        let mut first: HashMap<(usize, usize), usize> = HashMap::new();
+        for (id, node) in wg.nodes.iter().enumerate() {
+            if node.task != Task::Transfer || node.deps.len() != 1 {
+                continue;
+            }
+            match first.entry((node.deps[0], node.device)) {
+                Entry::Vacant(e) => {
+                    e.insert(id);
+                }
+                Entry::Occupied(e) => pairs.push((
+                    wg.nodes[*e.get()].label.clone(),
+                    node.label.clone(),
+                )),
+            }
+        }
+    }
+    let mut rewrites = 0usize;
+    for (keep_label, dup_label) in pairs {
+        let find = |l: &str| wg.nodes.iter().position(|n| n.label == l);
+        let (Some(keep), Some(dup)) = (find(&keep_label), find(&dup_label)) else {
+            continue;
+        };
+        let before = wg.device_peaks();
+        let mut trial = wg.clone();
+        merge(&mut trial, keep, dup);
+        let after = trial.device_peaks();
+        if (0..wg.devices).all(|d| after[d] <= before[d]) {
+            *saved_s += cx.cost.transfer_seconds(wg.nodes[dup].est_bytes);
+            *wg = trial;
+            rewrites += 1;
+        }
+    }
+    rewrites
+}
+
+/// Redirect every consumer of `dup` onto `keep` (same producer, same
+/// device, `keep < dup`), merge the payload, delete `dup`.
+fn merge(wg: &mut WorkGraph, keep: usize, dup: usize) {
+    debug_assert!(keep < dup);
+    let est = wg.nodes[keep].est_bytes.max(wg.nodes[dup].est_bytes);
+    let out = wg.nodes[keep].out_bytes.max(wg.nodes[dup].out_bytes);
+    wg.nodes[keep].est_bytes = est;
+    wg.nodes[keep].out_bytes = out;
+    for node in wg.nodes.iter_mut() {
+        if node.deps.contains(&dup) {
+            for d in node.deps.iter_mut() {
+                if *d == dup {
+                    *d = keep;
+                }
+            }
+            node.deps.sort_unstable();
+            node.deps.dedup();
+        }
+    }
+    let mut mask = vec![true; wg.nodes.len()];
+    mask[dup] = false;
+    wg.retain(&mask);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rowir::graph::{Graph, NodeKind};
+
+    /// producer → two identical copies to the same device → two readers.
+    fn dup_graph() -> Graph {
+        let mut g = Graph::new();
+        let p = g.push_out(NodeKind::Row, "p", vec![], 100, 40);
+        let t1 = g.push_task(NodeKind::Transfer, "xfer.p.d1", vec![p], 40, 40, Task::Transfer);
+        let t2 = g.push_task(NodeKind::Transfer, "xfer.p.d1.b", vec![p], 40, 40, Task::Transfer);
+        let c1 = g.push(NodeKind::Row, "c1", vec![t1], 10);
+        g.push(NodeKind::Barrier, "red", vec![t2, c1], 5);
+        g
+    }
+
+    #[test]
+    fn merges_duplicates_and_rewires_consumers() {
+        let g = dup_graph();
+        let dev = vec![0usize, 1, 1, 1, 1];
+        let mut wg = WorkGraph::from_graph(&g, Some(&dev), 2);
+        let before = wg.device_peaks();
+        let cx = OptContext::serial();
+        let mut saved = 0.0;
+        assert_eq!(run(&mut wg, &cx, &mut saved), 1);
+        assert!(saved > 0.0, "the deleted copy's link time is credited");
+        assert_eq!(wg.nodes.len(), g.len() - 1);
+        let after = wg.device_peaks();
+        for d in 0..2 {
+            assert!(after[d] <= before[d], "device {d}");
+        }
+        // both readers now read the surviving transfer
+        let (g2, _, _) = wg.to_graph().unwrap();
+        let t = g2.find("xfer.p.d1").unwrap();
+        assert!(g2.node(g2.find("c1").unwrap()).deps.contains(&t));
+        assert!(g2.node(g2.find("red").unwrap()).deps.contains(&t));
+        assert_eq!(run(&mut wg, &cx, &mut saved), 0, "idempotent at fixpoint");
+    }
+
+    #[test]
+    fn different_devices_do_not_merge() {
+        let g = dup_graph();
+        // the two copies land on different devices: distinct payloads
+        let dev = vec![0usize, 1, 2, 1, 2];
+        let mut wg = WorkGraph::from_graph(&g, Some(&dev), 3);
+        let cx = OptContext::serial();
+        let mut saved = 0.0;
+        assert_eq!(run(&mut wg, &cx, &mut saved), 0);
+        assert_eq!(wg.nodes.len(), g.len());
+    }
+}

@@ -1,0 +1,92 @@
+//! Dead-node elimination — the rewrite form of the LIV001 dead-output
+//! lint.
+//!
+//! Anchors are the nodes whose execution is observable: every node
+//! carrying a concrete task (its handler writes host slots — deleting
+//! one would change what a driver runs) plus the terminal
+//! (highest-id) node, whose output is the step's result.  One
+//! descending sweep marks every transitive dependency of an anchor;
+//! whatever stays unmarked is `Opaque`/`Transfer` debris no observable
+//! node ever reads — dangling transfers left behind by a remat rewire,
+//! dead side fans in hand-built graphs — and is deleted.
+//!
+//! Deleting an unmarked node can only *lower* byte residency (its
+//! working set and any parked output vanish; nothing else's lifetime
+//! changes), so the pass trivially satisfies the pipeline's
+//! never-raise-the-peak verification.
+
+use crate::rowir::task::Task;
+
+use super::WorkGraph;
+
+/// Delete every non-anchor node with no transitive path to an anchor.
+/// Returns the number of nodes removed.
+pub(crate) fn run(wg: &mut WorkGraph) -> usize {
+    let n = wg.nodes.len();
+    if n == 0 {
+        return 0;
+    }
+    let mut keep = vec![false; n];
+    for (id, node) in wg.nodes.iter().enumerate() {
+        if !matches!(node.task, Task::Opaque | Task::Transfer) {
+            keep[id] = true;
+        }
+    }
+    // the terminal node's output is the result even when Opaque
+    // (hand-built/synthetic graphs carry no concrete tasks at all)
+    keep[n - 1] = true;
+    for id in (0..n).rev() {
+        if keep[id] {
+            for &d in &wg.nodes[id].deps {
+                keep[d] = true;
+            }
+        }
+    }
+    let removed = keep.iter().filter(|&&k| !k).count();
+    if removed > 0 {
+        wg.retain(&keep);
+    }
+    removed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rowir::graph::{Graph, NodeKind};
+
+    #[test]
+    fn deletes_unreachable_debris_only() {
+        let mut g = Graph::new();
+        let a = g.push_out(NodeKind::Row, "a", vec![], 10, 5);
+        let dead = g.push_out(NodeKind::Row, "dead", vec![], 7, 7);
+        let _dead2 = g.push(NodeKind::Row, "dead.reader", vec![dead], 3);
+        g.push(NodeKind::Barrier, "red", vec![a], 3);
+        let mut wg = WorkGraph::from_graph(&g, None, 1);
+        let peaks = wg.device_peaks();
+        assert_eq!(run(&mut wg), 2, "the dead chain goes, its reader too");
+        assert_eq!(wg.nodes.len(), 2);
+        assert_eq!(wg.nodes[1].label, "red");
+        assert!(wg.device_peaks()[0] <= peaks[0]);
+        assert_eq!(run(&mut wg), 0, "idempotent at fixpoint");
+    }
+
+    #[test]
+    fn concrete_tasks_are_anchors_even_as_sinks() {
+        let mut g = Graph::new();
+        let a = g.push_out(NodeKind::Row, "a", vec![], 10, 5);
+        // a concrete sink that is not the terminal node: its handler has
+        // observable effects, so it must survive
+        g.push_task(
+            NodeKind::Barrier,
+            "reduce",
+            vec![a],
+            3,
+            0,
+            Task::ReduceA,
+        );
+        g.push(NodeKind::Row, "tail", vec![], 1);
+        let mut wg = WorkGraph::from_graph(&g, None, 1);
+        assert_eq!(run(&mut wg), 0, "anchor + terminal keep everything");
+        assert_eq!(wg.nodes.len(), 3);
+    }
+}

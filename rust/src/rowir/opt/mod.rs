@@ -1,0 +1,319 @@
+//! `rowir::opt` — the fixpoint optimizer pipeline over a row program
+//! (docs/ROWIR.md § Optimizer).
+//!
+//! Since PR 5 every lowering decision was final: nothing ever rewrote
+//! the IR, so retained intermediates stayed retained even when
+//! recomputing them would be cheaper than holding them.  This module
+//! makes the lowering revisable with three **verified** rewrites that
+//! run until quiescence ([`pipeline::optimize`]):
+//!
+//! * [`dce`] — dead-node elimination: `Opaque`/`Transfer` debris with no
+//!   transitive path to a concrete task or the terminal node is deleted
+//!   (the rewrite form of the LIV001 dead-output lint);
+//! * [`coalesce`] — transfer coalescing/dedup: same-(producer,
+//!   destination-device) [`Task::Transfer`] nodes merge into one copy,
+//!   re-priced through the [`CostModel`], applied only when no device's
+//!   static peak rises;
+//! * [`remat`] — budget-driven rematerialization (Chen et al., sublinear
+//!   memory cost): a parked `out_bytes` grant held to a distant last
+//!   consumer is converted into a recompute subgraph cloned immediately
+//!   before that consumer, victims picked greedily by bytes freed per
+//!   modeled recompute second, until the per-device static peaks fit the
+//!   budget or no profitable victim remains.
+//!
+//! Every pass is re-verified after it rewrites: the rebuilt graph passes
+//! [`Graph::validate`], the static analyzer reports zero errors, and no
+//! device's [`liveness::static_device_peaks`] bound rose.  Bit-identity
+//! to the unoptimized program is structural, not empirical: rewrites
+//! only clone pure (`Opaque`/`Transfer`) subgraphs or rewire a consumer
+//! to an equivalent copy of the same payload — concrete tasks are never
+//! duplicated (DET004 makes a duplicated concrete task an analyzer
+//! *error*, and the handlers' write-once slots make re-running one
+//! unsafe), and every f32 reduction stays inside a barrier task folding
+//! rows in fixed serial order, so dependency rewiring never changes
+//! arithmetic.
+//!
+//! The passes rewrite a [`WorkGraph`] — a mutable mirror of the IR with
+//! per-node device assignment and input-graph provenance — because
+//! [`Graph`] is deliberately append-only (drivers never mutate a
+//! program); [`WorkGraph::to_graph`] rebuilds a validated graph after
+//! each rewriting pass.
+
+pub(crate) mod coalesce;
+pub(crate) mod dce;
+pub(crate) mod pipeline;
+pub(crate) mod remat;
+
+pub use pipeline::{optimize, optimize_graph, OptOutcome, OptReport, PassOutcome, MAX_ITERS};
+
+use crate::costmodel::CostModel;
+use crate::memory::DeviceModel;
+
+use super::graph::{Graph, NodeId, NodeKind};
+use super::task::Task;
+
+/// Everything the passes need beyond the graph itself: the device
+/// context (assignment + count — serial callers use one device), the
+/// optional per-device byte budgets the remat pass drives toward, and
+/// the [`CostModel`] that prices recompute subgraphs and merged
+/// transfers.
+#[derive(Debug, Clone)]
+pub struct OptContext {
+    /// Device-lane count (`>= 1`; `1` for serial programs).
+    pub devices: usize,
+    /// Device per node of the *input* graph (`None` ⇒ everything on
+    /// device 0).  Clones inherit the device of the node they clone.
+    pub device_of: Option<Vec<usize>>,
+    /// Per-device static-peak targets for [`remat`].  `None` means
+    /// best-effort: reduce peaks while profitable, never declare
+    /// infeasibility.  `Some` at level ≥ 2 turns "does not fit after the
+    /// fixpoint" into a typed [`Error::InfeasiblePlan`](crate::error::Error).
+    pub budgets: Option<Vec<u64>>,
+    /// Prices recompute-vs-retain ([`CostModel::recompute_seconds`]) and
+    /// coalesced transfers ([`CostModel::transfer_seconds`]).
+    pub cost: CostModel,
+}
+
+impl OptContext {
+    /// Single-device context with the stock analytic cost model — what
+    /// the serial trainer path and the CLI use.
+    pub fn serial() -> OptContext {
+        let dev = DeviceModel::rtx3090();
+        let link = dev.pcie_bytes_per_sec;
+        OptContext {
+            devices: 1,
+            device_of: None,
+            budgets: None,
+            cost: CostModel::analytic(&[dev], link),
+        }
+    }
+
+    /// Install per-device peak budgets (see [`OptContext::budgets`]).
+    pub fn with_budgets(mut self, budgets: Vec<u64>) -> OptContext {
+        self.budgets = Some(budgets);
+        self
+    }
+}
+
+/// One node of the optimizer's mutable graph mirror.
+#[derive(Debug, Clone)]
+pub(crate) struct WorkNode {
+    pub kind: NodeKind,
+    pub label: String,
+    /// Sorted + deduplicated, each `<` this node's index — the passes
+    /// maintain the [`Graph`] invariants at every step.
+    pub deps: Vec<usize>,
+    pub task: Task,
+    pub est_bytes: u64,
+    pub out_bytes: u64,
+    /// Device lane (0 for serial programs); clones inherit it.
+    pub device: usize,
+    /// Node id in the optimizer's *input* graph; `None` for synthesized
+    /// clones — the provenance `ShardPlan::optimize` composes with its
+    /// own `orig` map.
+    pub orig: Option<NodeId>,
+}
+
+/// Mutable mirror of a row graph: same nodes, same invariants (ids
+/// topological, deps sorted/deduped, labels unique), plus device
+/// assignment, provenance and a fresh-label counter for remat clones.
+#[derive(Debug, Clone)]
+pub(crate) struct WorkGraph {
+    pub nodes: Vec<WorkNode>,
+    pub devices: usize,
+    /// Monotone counter making `remat.<k>.<label>` clone labels unique
+    /// across rewrites (the same victim may be cloned more than once).
+    fresh: usize,
+}
+
+impl WorkGraph {
+    pub fn from_graph(graph: &Graph, device_of: Option<&[usize]>, devices: usize) -> WorkGraph {
+        let nodes = graph
+            .nodes()
+            .iter()
+            .enumerate()
+            .map(|(id, n)| WorkNode {
+                kind: n.kind,
+                label: n.label.clone(),
+                deps: n.deps.clone(),
+                task: n.task,
+                est_bytes: n.est_bytes,
+                out_bytes: n.out_bytes,
+                device: device_of.map_or(0, |d| d[id]),
+                orig: Some(id),
+            })
+            .collect();
+        WorkGraph {
+            nodes,
+            devices: devices.max(1),
+            fresh: 0,
+        }
+    }
+
+    /// Rebuild a validated [`Graph`] plus the device assignment and the
+    /// input-graph provenance of every surviving node.
+    pub fn to_graph(&self) -> crate::error::Result<(Graph, Vec<usize>, Vec<Option<NodeId>>)> {
+        let mut g = Graph::new();
+        for node in &self.nodes {
+            g.push_task(
+                node.kind,
+                node.label.clone(),
+                node.deps.clone(),
+                node.est_bytes,
+                node.out_bytes,
+                node.task,
+            );
+        }
+        g.validate()?;
+        Ok((
+            g,
+            self.nodes.iter().map(|n| n.device).collect(),
+            self.nodes.iter().map(|n| n.orig).collect(),
+        ))
+    }
+
+    /// Per-device static peaks of the serial-order byte ledger —
+    /// event-for-event the sweep of
+    /// [`liveness::static_device_peaks`](crate::rowir::analysis::static_device_peaks),
+    /// so a pass can price a trial rewrite without rebuilding a [`Graph`].
+    pub fn device_peaks(&self) -> Vec<u64> {
+        let n = self.nodes.len();
+        let mut left = vec![0usize; n];
+        for node in &self.nodes {
+            for &d in &node.deps {
+                left[d] += 1;
+            }
+        }
+        let mut live = vec![0u64; self.devices];
+        let mut peak = vec![0u64; self.devices];
+        for (id, node) in self.nodes.iter().enumerate() {
+            let dev = node.device;
+            peak[dev] = peak[dev].max(live[dev] + node.est_bytes);
+            if left[id] > 0 && node.out_bytes > 0 {
+                live[dev] += node.out_bytes;
+                peak[dev] = peak[dev].max(live[dev]);
+            }
+            for &dep in &node.deps {
+                left[dep] -= 1;
+                if left[dep] == 0 && self.nodes[dep].out_bytes > 0 {
+                    live[self.nodes[dep].device] -= self.nodes[dep].out_bytes;
+                }
+            }
+        }
+        peak
+    }
+
+    /// Highest-id consumer per node (`None` when nothing reads it) —
+    /// where a parked output dies under the serial schedule.
+    pub fn last_use(&self) -> Vec<Option<usize>> {
+        let mut last = vec![None; self.nodes.len()];
+        for (id, node) in self.nodes.iter().enumerate() {
+            for &d in &node.deps {
+                last[d] = Some(id);
+            }
+        }
+        last
+    }
+
+    /// Drop every node with `keep[id] == false`, remapping the survivors'
+    /// deps.  Callers must pass a dependency-closed mask (a kept node's
+    /// deps are kept) — both passes that delete do: DCE's mark set is
+    /// ancestor-closed, and coalesce redirects every consumer before it
+    /// deletes the duplicate.
+    pub fn retain(&mut self, keep: &[bool]) {
+        debug_assert_eq!(keep.len(), self.nodes.len());
+        let mut remap = vec![usize::MAX; self.nodes.len()];
+        let mut next = 0usize;
+        for (id, &k) in keep.iter().enumerate() {
+            if k {
+                remap[id] = next;
+                next += 1;
+            }
+        }
+        let old = std::mem::take(&mut self.nodes);
+        for (id, mut node) in old.into_iter().enumerate() {
+            if !keep[id] {
+                continue;
+            }
+            for d in node.deps.iter_mut() {
+                debug_assert_ne!(remap[*d], usize::MAX, "kept node depends on a deleted one");
+                *d = remap[*d];
+            }
+            // the remap is monotone, so sortedness survives
+            self.nodes.push(node);
+        }
+    }
+
+    /// Next value of the clone-label counter (`remat.<k>.<label>`).
+    pub fn next_fresh(&mut self) -> usize {
+        let k = self.fresh;
+        self.fresh += 1;
+        k
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rowir::analysis;
+
+    fn fan() -> Graph {
+        let mut g = Graph::new();
+        let a = g.push_out(NodeKind::Row, "a", vec![], 100, 40);
+        let b = g.push_out(NodeKind::Row, "b", vec![], 100, 40);
+        g.push(NodeKind::Barrier, "red", vec![a, b], 80);
+        g
+    }
+
+    #[test]
+    fn roundtrip_preserves_the_graph_and_provenance() {
+        let g = fan();
+        let wg = WorkGraph::from_graph(&g, None, 1);
+        let (g2, dev, orig) = wg.to_graph().unwrap();
+        assert_eq!(g2.len(), g.len());
+        assert_eq!(dev, vec![0, 0, 0]);
+        assert_eq!(orig, vec![Some(0), Some(1), Some(2)]);
+        for (a, b) in g.nodes().iter().zip(g2.nodes()) {
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.deps, b.deps);
+            assert_eq!(a.task, b.task);
+        }
+    }
+
+    #[test]
+    fn device_peaks_match_the_liveness_sweep() {
+        let g = fan();
+        // serial
+        let wg = WorkGraph::from_graph(&g, None, 1);
+        assert_eq!(wg.device_peaks(), vec![analysis::static_peak(&g)]);
+        // split: b on device 1
+        let dev = vec![0usize, 1, 0];
+        let wg = WorkGraph::from_graph(&g, Some(&dev), 2);
+        assert_eq!(
+            wg.device_peaks(),
+            analysis::static_device_peaks(&g, &dev, 2)
+        );
+    }
+
+    #[test]
+    fn retain_remaps_deps() {
+        let mut g = Graph::new();
+        let a = g.push_out(NodeKind::Row, "a", vec![], 10, 5);
+        let _dead = g.push(NodeKind::Row, "dead", vec![], 7);
+        g.push(NodeKind::Barrier, "red", vec![a], 3);
+        let mut wg = WorkGraph::from_graph(&g, None, 1);
+        wg.retain(&[true, false, true]);
+        assert_eq!(wg.nodes.len(), 2);
+        assert_eq!(wg.nodes[1].label, "red");
+        assert_eq!(wg.nodes[1].deps, vec![0]);
+        assert_eq!(wg.nodes[1].orig, Some(2), "provenance survives the remap");
+        assert!(wg.to_graph().is_ok());
+    }
+
+    #[test]
+    fn last_use_is_the_highest_consumer() {
+        let g = fan();
+        let wg = WorkGraph::from_graph(&g, None, 1);
+        assert_eq!(wg.last_use(), vec![Some(2), Some(2), None]);
+    }
+}

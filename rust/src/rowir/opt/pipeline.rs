@@ -1,0 +1,441 @@
+//! The fixpoint driver: run the passes until a full iteration performs
+//! zero rewrites, re-verifying the graph after every pass that touched
+//! it.
+//!
+//! ## Levels
+//!
+//! * `0` — identity: the input graph comes back untouched (with an
+//!   identity provenance map), so `--opt-level 0` is a true baseline.
+//! * `1` — [`dce`] + [`coalesce`]: deletions and merges only, never a
+//!   new node.
+//! * `2` — adds [`remat`], the budget-driven retain→recompute rewrite.
+//!
+//! ## Termination
+//!
+//! Every accepted rewrite strictly decreases the lexicographic measure
+//! *(objective, node count)* where the objective is
+//! `Σ_d max(peak_d − target_d, 0)`: no pass ever raises any device's
+//! static peak (verified, not assumed), remat rewrites strictly
+//! decrease the objective, and dce/coalesce rewrites strictly decrease
+//! the node count at a non-increased objective — only remat adds nodes,
+//! and only with a strictly lower objective, so no state can recur.
+//! [`MAX_ITERS`] is a defensive backstop: exceeding it is a typed error
+//! (`Error::Sched`), never a silent partial result.
+//!
+//! ## Verification
+//!
+//! After each rewriting pass the pipeline checks (a) no device's
+//! [`static_device_peaks`](crate::rowir::analysis::static_device_peaks)
+//! bound rose, (b) the rebuilt graph passes [`Graph::validate`], and
+//! (c) the PR 9 analyzer reports zero errors.  The final graph must
+//! additionally keep every concrete task of the input program alive
+//! ([`optimize`]'s semantic floor) — the optimizer may clone pure
+//! nodes and delete debris, but it may never drop observable work.
+
+use crate::error::{Error, Result};
+use crate::metrics::Table;
+use crate::rowir::analysis;
+use crate::rowir::graph::{Graph, NodeId};
+use crate::rowir::task::Task;
+use crate::rowir::RowProgram;
+
+use super::{coalesce, dce, remat, OptContext, WorkGraph};
+
+/// Defensive iteration cap — see the module docs.  Real programs
+/// quiesce in 2 (one working iteration + one proving quiescence).
+pub const MAX_ITERS: usize = 12;
+
+/// One pass invocation inside the fixpoint loop.
+#[derive(Debug, Clone)]
+pub struct PassOutcome {
+    pub pass: &'static str,
+    /// 0-based fixpoint iteration this invocation ran in.
+    pub iteration: usize,
+    pub rewrites: usize,
+    pub peak_before: Vec<u64>,
+    pub peak_after: Vec<u64>,
+}
+
+/// What the optimizer did — per-pass rewrite counts plus the headline
+/// byte/seconds accounting.  Folded into `obs::RunReport` and printed
+/// by `plan --optimize`.
+#[derive(Debug, Clone)]
+pub struct OptReport {
+    pub level: u8,
+    /// Fixpoint iterations run (the last one performs zero rewrites).
+    pub iterations: usize,
+    pub passes: Vec<PassOutcome>,
+    pub peak_before: Vec<u64>,
+    pub peak_after: Vec<u64>,
+    pub nodes_before: usize,
+    pub nodes_after: usize,
+    /// Parked bytes converted to recompute by [`remat`].
+    pub bytes_freed: u64,
+    /// Modeled seconds the remat recompute subgraphs add per step.
+    pub recompute_seconds_added: f64,
+    /// Modeled link seconds the coalesced transfers save per step.
+    pub transfer_seconds_saved: f64,
+}
+
+impl OptReport {
+    /// Total rewrites across every pass invocation.
+    pub fn rewrites(&self) -> usize {
+        self.passes.iter().map(|p| p.rewrites).sum()
+    }
+
+    /// Sum of per-device static peaks before optimization.
+    pub fn total_peak_before(&self) -> u64 {
+        self.peak_before.iter().sum()
+    }
+
+    /// Sum of per-device static peaks after optimization.
+    pub fn total_peak_after(&self) -> u64 {
+        self.peak_after.iter().sum()
+    }
+
+    /// Per-pass rewrite table (what `plan --optimize` prints per mode).
+    pub fn to_table(&self, title: impl Into<String>) -> Table {
+        let mut t = Table::new(
+            title,
+            &["pass", "iter", "rewrites", "peak before (B)", "peak after (B)"],
+        );
+        for p in &self.passes {
+            if p.rewrites == 0 {
+                continue; // quiescence proofs are noise in the table
+            }
+            t.row(vec![
+                p.pass.to_string(),
+                p.iteration.to_string(),
+                p.rewrites.to_string(),
+                p.peak_before.iter().sum::<u64>().to_string(),
+                p.peak_after.iter().sum::<u64>().to_string(),
+            ]);
+        }
+        t.row(vec![
+            "total".into(),
+            self.iterations.to_string(),
+            self.rewrites().to_string(),
+            self.total_peak_before().to_string(),
+            self.total_peak_after().to_string(),
+        ]);
+        t
+    }
+
+    /// Deterministic JSON object (embedded by `RunReport::to_json` and
+    /// the `--dump-ir --optimized` artifact).
+    pub fn to_json(&self) -> String {
+        use std::fmt::Write as _;
+        fn num(v: f64) -> String {
+            if v.is_finite() {
+                format!("{v}")
+            } else {
+                "null".into()
+            }
+        }
+        fn u64s(v: &[u64]) -> String {
+            let items: Vec<String> = v.iter().map(|p| p.to_string()).collect();
+            format!("[{}]", items.join(", "))
+        }
+        let mut o = String::from("{");
+        let _ = write!(o, "\"level\": {}", self.level);
+        let _ = write!(o, ", \"iterations\": {}", self.iterations);
+        let _ = write!(o, ", \"rewrites\": {}", self.rewrites());
+        let _ = write!(o, ", \"nodes_before\": {}", self.nodes_before);
+        let _ = write!(o, ", \"nodes_after\": {}", self.nodes_after);
+        let _ = write!(o, ", \"peak_before\": {}", u64s(&self.peak_before));
+        let _ = write!(o, ", \"peak_after\": {}", u64s(&self.peak_after));
+        let _ = write!(o, ", \"bytes_freed\": {}", self.bytes_freed);
+        let _ = write!(
+            o,
+            ", \"recompute_seconds_added\": {}",
+            num(self.recompute_seconds_added)
+        );
+        let _ = write!(
+            o,
+            ", \"transfer_seconds_saved\": {}",
+            num(self.transfer_seconds_saved)
+        );
+        o.push_str(", \"passes\": [");
+        for (i, p) in self.passes.iter().enumerate() {
+            if i > 0 {
+                o.push_str(", ");
+            }
+            let _ = write!(
+                o,
+                "{{\"pass\": \"{}\", \"iteration\": {}, \"rewrites\": {}}}",
+                p.pass, p.iteration, p.rewrites
+            );
+        }
+        o.push_str("]}");
+        o
+    }
+}
+
+/// The result of [`optimize_graph`]: the rewritten graph, its device
+/// assignment, the input-graph provenance of every surviving node
+/// (`None` for remat clones), and the report.
+#[derive(Debug, Clone)]
+pub struct OptOutcome {
+    pub graph: Graph,
+    pub device_of: Vec<usize>,
+    pub orig_of: Vec<Option<NodeId>>,
+    pub report: OptReport,
+}
+
+/// Optimize a bare graph under `cx`.  This is the engine `ShardPlan::optimize`
+/// drives with a multi-device context; serial callers use [`optimize`].
+pub fn optimize_graph(graph: &Graph, level: u8, cx: &OptContext) -> Result<OptOutcome> {
+    graph.validate()?;
+    let level = level.min(2);
+    if let Some(dev) = &cx.device_of {
+        if dev.len() != graph.len() {
+            return Err(Error::Sched(format!(
+                "optimizer device map arity {} != graph len {}",
+                dev.len(),
+                graph.len()
+            )));
+        }
+        if let Some(&bad) = dev.iter().find(|&&d| d >= cx.devices) {
+            return Err(Error::Sched(format!(
+                "optimizer device map names device {bad} outside 0..{}",
+                cx.devices
+            )));
+        }
+    }
+    if let Some(b) = &cx.budgets {
+        if b.len() != cx.devices {
+            return Err(Error::Sched(format!(
+                "optimizer budget arity {} != device count {}",
+                b.len(),
+                cx.devices
+            )));
+        }
+    }
+    let mut wg = WorkGraph::from_graph(graph, cx.device_of.as_deref(), cx.devices);
+    let peak_before = wg.device_peaks();
+    let mut report = OptReport {
+        level,
+        iterations: 0,
+        passes: Vec::new(),
+        peak_before: peak_before.clone(),
+        peak_after: peak_before.clone(),
+        nodes_before: wg.nodes.len(),
+        nodes_after: wg.nodes.len(),
+        bytes_freed: 0,
+        recompute_seconds_added: 0.0,
+        transfer_seconds_saved: 0.0,
+    };
+    if level == 0 {
+        let (g, device_of, orig_of) = wg.to_graph()?;
+        return Ok(OptOutcome {
+            graph: g,
+            device_of,
+            orig_of,
+            report,
+        });
+    }
+    let mut peaks = peak_before;
+    let mut quiesced = false;
+    for iteration in 0..MAX_ITERS {
+        report.iterations = iteration + 1;
+        let mut total = 0usize;
+
+        let before = peaks.clone();
+        let n = dce::run(&mut wg);
+        if n > 0 {
+            peaks = verify(&wg, &before, "dce")?;
+        }
+        record(&mut report, "dce", iteration, n, before, &peaks);
+        total += n;
+
+        let before = peaks.clone();
+        let n = coalesce::run(&mut wg, cx, &mut report.transfer_seconds_saved);
+        if n > 0 {
+            peaks = verify(&wg, &before, "coalesce")?;
+        }
+        record(&mut report, "coalesce", iteration, n, before, &peaks);
+        total += n;
+
+        if level >= 2 {
+            let before = peaks.clone();
+            let mut stats = remat::RematStats::default();
+            let n = remat::run(&mut wg, cx, &mut stats)?;
+            if n > 0 {
+                peaks = verify(&wg, &before, "remat")?;
+            }
+            report.bytes_freed += stats.bytes_freed;
+            report.recompute_seconds_added += stats.recompute_seconds_added;
+            record(&mut report, "remat", iteration, n, before, &peaks);
+            total += n;
+        }
+
+        if total == 0 {
+            quiesced = true;
+            break;
+        }
+    }
+    if !quiesced {
+        return Err(Error::Sched(format!(
+            "optimizer did not quiesce within {MAX_ITERS} iterations \
+             ({} rewrites so far) — rewrite cycle suspected",
+            report.rewrites()
+        )));
+    }
+    report.peak_after = peaks.clone();
+    report.nodes_after = wg.nodes.len();
+    if level >= 2 {
+        if let Some(budgets) = &cx.budgets {
+            for (d, (&p, &b)) in peaks.iter().zip(budgets).enumerate() {
+                if p > b {
+                    return Err(Error::InfeasiblePlan(format!(
+                        "post-opt static peak {p} B on device {d} exceeds budget {b} B \
+                         (remat freed {} B; no profitable victim remains)",
+                        report.bytes_freed
+                    )));
+                }
+            }
+        }
+    }
+    let (g, device_of, orig_of) = wg.to_graph()?;
+    Ok(OptOutcome {
+        graph: g,
+        device_of,
+        orig_of,
+        report,
+    })
+}
+
+/// Optimize a validated [`RowProgram`] (the serial/trainer entry point):
+/// same engine, plus the semantic floor that every concrete task of the
+/// input survives — the optimizer may drop pure debris, never work a
+/// driver would execute.
+pub fn optimize(program: &RowProgram, level: u8, cx: &OptContext) -> Result<(RowProgram, OptReport)> {
+    let outcome = optimize_graph(program.graph(), level, cx)?;
+    let optimized = RowProgram::new(outcome.graph)?;
+    for node in program.graph().nodes() {
+        if matches!(node.task, Task::Opaque | Task::Transfer) {
+            continue;
+        }
+        if optimized.find_task(node.task).is_none() {
+            return Err(Error::Sched(format!(
+                "optimizer dropped concrete task {:?} ('{}')",
+                node.task, node.label
+            )));
+        }
+    }
+    Ok((optimized, outcome.report))
+}
+
+fn record(
+    report: &mut OptReport,
+    pass: &'static str,
+    iteration: usize,
+    rewrites: usize,
+    peak_before: Vec<u64>,
+    peak_after: &[u64],
+) {
+    report.passes.push(PassOutcome {
+        pass,
+        iteration,
+        rewrites,
+        peak_before,
+        peak_after: peak_after.to_vec(),
+    });
+}
+
+/// Post-pass verification: peaks never rise, the rebuilt graph is valid,
+/// and the analyzer stays error-free.  Returns the new peaks.
+fn verify(wg: &WorkGraph, prev: &[u64], pass: &'static str) -> Result<Vec<u64>> {
+    let peaks = wg.device_peaks();
+    for (d, (&now, &was)) in peaks.iter().zip(prev).enumerate() {
+        if now > was {
+            return Err(Error::Sched(format!(
+                "pass '{pass}' raised device {d} static peak {was} -> {now} B"
+            )));
+        }
+    }
+    let (g, _, _) = wg.to_graph()?;
+    let lint = analysis::analyze(&g);
+    if lint.has_errors() {
+        return Err(Error::Sched(format!(
+            "pass '{pass}' broke the analyzer: {}",
+            lint.verdict()
+        )));
+    }
+    Ok(peaks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rowir::graph::NodeKind;
+
+    /// dead debris + duplicate transfers + a retain edge, all in one
+    /// graph — every pass has work.
+    fn composite() -> Graph {
+        let mut g = Graph::new();
+        let p = g.push_out(NodeKind::Row, "p", vec![], 100, 40);
+        let t1 = g.push_task(NodeKind::Transfer, "x1", vec![p], 40, 40, Task::Transfer);
+        let t2 = g.push_task(NodeKind::Transfer, "x2", vec![p], 40, 40, Task::Transfer);
+        let _dead = g.push(NodeKind::Row, "dead", vec![], 9);
+        let c1 = g.push(NodeKind::Row, "c1", vec![t1], 10);
+        g.push(NodeKind::Barrier, "red", vec![t2, c1], 5);
+        g
+    }
+
+    #[test]
+    fn level_zero_is_the_identity() {
+        let g = composite();
+        let cx = OptContext::serial();
+        let out = optimize_graph(&g, 0, &cx).unwrap();
+        assert_eq!(out.graph.len(), g.len());
+        assert_eq!(out.report.rewrites(), 0);
+        assert_eq!(out.report.iterations, 0);
+        let ids: Vec<Option<usize>> = (0..g.len()).map(Some).collect();
+        assert_eq!(out.orig_of, ids, "identity provenance");
+    }
+
+    #[test]
+    fn fixpoint_quiesces_and_never_raises_the_peak() {
+        let g = composite();
+        let cx = OptContext::serial();
+        let before = analysis::static_peak(&g);
+        let out = optimize_graph(&g, 2, &cx).unwrap();
+        assert!(out.report.iterations <= MAX_ITERS);
+        assert!(out.report.rewrites() >= 2, "dce + coalesce at least");
+        assert!(analysis::static_peak(&out.graph) <= before);
+        assert!(out.report.total_peak_after() <= out.report.total_peak_before());
+        // re-optimizing the output is a no-op: a true fixpoint
+        let again = optimize_graph(&out.graph, 2, &cx).unwrap();
+        assert_eq!(again.report.rewrites(), 0);
+        let json = out.report.to_json();
+        assert!(crate::util::json::JsonValue::parse(&json).is_ok(), "{json}");
+    }
+
+    #[test]
+    fn infeasible_budgets_are_a_typed_error() {
+        let g = composite();
+        let cx = OptContext::serial().with_budgets(vec![1]);
+        match optimize_graph(&g, 2, &cx) {
+            Err(Error::InfeasiblePlan(m)) => {
+                assert!(m.contains("exceeds budget"), "{m}")
+            }
+            other => panic!("expected InfeasiblePlan, got {other:?}"),
+        }
+        // level 1 never judges budgets: same context, no error
+        assert!(optimize_graph(&g, 1, &cx).is_ok());
+    }
+
+    #[test]
+    fn concrete_tasks_survive_optimization() {
+        let mut g = Graph::new();
+        let a = g.push_task(NodeKind::Row, "a", vec![], 10, 4, Task::FpRow { seg: 0, row: 0 });
+        g.push_task(NodeKind::Barrier, "red", vec![a], 3, 0, Task::ReduceA);
+        let p = RowProgram::new(g).unwrap();
+        let cx = OptContext::serial();
+        let (opt, report) = optimize(&p, 2, &cx).unwrap();
+        assert_eq!(opt.len(), p.len());
+        assert_eq!(report.rewrites(), 0, "fully concrete programs are fixed points");
+        assert!(opt.find_task(Task::ReduceA).is_some());
+    }
+}

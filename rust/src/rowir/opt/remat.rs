@@ -1,0 +1,280 @@
+//! Budget-driven rematerialization (Chen et al., *Training Deep Nets
+//! with Sublinear Memory Cost*, on the row IR): convert a retain-edge —
+//! a parked `out_bytes` grant held from its producer to a distant last
+//! consumer — into a recompute subgraph cloned immediately before that
+//! consumer, trading modeled recompute seconds for resident bytes.
+//!
+//! ## Victim selection
+//!
+//! Every node `v` with a parked output and at least one consumer is a
+//! candidate; `L = last_use(v)` is where its park dies.  The recompute
+//! subgraph is the [`recompute_closure`](crate::rowir::interp::recompute_closure)
+//! of `{v}` under the materialization rule *"a dependency is available
+//! at `L` iff its own park is still alive there"* (`out_bytes > 0` and
+//! `last_use >= L`) — anything not available is pulled into the closure
+//! and cloned too.  Candidates are ranked by **bytes freed per modeled
+//! recompute second** (`CostModel::remat_score` over
+//! [`CostModel::recompute_seconds`]) and tried greedily.
+//!
+//! ## The pure-clone constraint
+//!
+//! A closure containing any task other than `Opaque`/`Transfer` is
+//! rejected outright.  This is principled, not a limitation: DET004
+//! makes a duplicated concrete task an analyzer *error* (two nodes
+//! would race on the same host slot), and the executors' write-once
+//! slots make re-running a concrete handler unsafe.  Rematerialization
+//! therefore fires on pure synthetic subgraphs and on transfers (a
+//! re-fetch of a producer whose park is still alive) — and is
+//! structurally a no-op on the fully-concrete serial mode programs,
+//! which is exactly what keeps the executed bit-identity matrix safe.
+//!
+//! ## Acceptance and termination
+//!
+//! A rewrite is applied only when a trial evaluation shows **no
+//! device's static peak rises** and the objective
+//! `Σ_d max(peak_d − target_d, 0)` (targets = the budgets, or 0 when
+//! none were given) **strictly decreases**.  The objective is a `u64`
+//! strictly decreasing across accepted rewrites, so the pass — and with
+//! it the fixpoint — terminates.  The pass stops early the moment the
+//! budgets are satisfied; declaring the budgets infeasible after the
+//! fixpoint is the pipeline's job.
+
+use crate::error::Result;
+use crate::rowir::task::Task;
+
+use super::{OptContext, WorkGraph, WorkNode};
+
+/// Accumulated remat statistics, folded into the pipeline's `OptReport`.
+#[derive(Debug, Default, Clone, Copy)]
+pub(crate) struct RematStats {
+    pub bytes_freed: u64,
+    pub recompute_seconds_added: f64,
+}
+
+/// Greedy budget-driven rematerialization.  Returns the number of
+/// rewrites applied.
+pub(crate) fn run(wg: &mut WorkGraph, cx: &OptContext, stats: &mut RematStats) -> Result<usize> {
+    let devices = wg.devices;
+    let targets: Vec<u64> = match &cx.budgets {
+        Some(b) => b.clone(),
+        None => vec![0; devices],
+    };
+    let objective = |peaks: &[u64]| -> u64 {
+        peaks
+            .iter()
+            .zip(&targets)
+            .map(|(&p, &t)| p.saturating_sub(t))
+            .sum()
+    };
+    let mut rewrites = 0usize;
+    loop {
+        let peaks = wg.device_peaks();
+        let obj = objective(&peaks);
+        if obj == 0 {
+            break; // the budgets are satisfied — nothing left to free
+        }
+        let last_use = wg.last_use();
+        // rank candidates: bytes freed per modeled recompute second
+        let mut cands: Vec<(f64, usize, usize, Vec<usize>, f64)> = Vec::new();
+        for v in 0..wg.nodes.len() {
+            if wg.nodes[v].out_bytes == 0 {
+                continue;
+            }
+            let Some(l) = last_use[v] else { continue };
+            let Some(closure) = pure_closure(wg, v, l, &last_use) else {
+                continue;
+            };
+            let items: Vec<(usize, u64, bool)> = closure
+                .iter()
+                .map(|&c| {
+                    let n = &wg.nodes[c];
+                    (n.device, n.est_bytes, n.task.is_transfer())
+                })
+                .collect();
+            let secs = cx.cost.recompute_seconds(&items);
+            let score = cx.cost.remat_score(wg.nodes[v].out_bytes, secs);
+            cands.push((score, v, l, closure, secs));
+        }
+        cands.sort_by(|a, b| {
+            b.0.partial_cmp(&a.0)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.1.cmp(&b.1))
+        });
+        let mut applied = false;
+        for (_, v, l, closure, secs) in cands {
+            let mut trial = wg.clone();
+            apply(&mut trial, v, l, &closure);
+            let tpeaks = trial.device_peaks();
+            if (0..devices).all(|d| tpeaks[d] <= peaks[d]) && objective(&tpeaks) < obj {
+                stats.bytes_freed += wg.nodes[v].out_bytes;
+                stats.recompute_seconds_added += secs;
+                *wg = trial;
+                rewrites += 1;
+                applied = true;
+                break;
+            }
+        }
+        if !applied {
+            break; // no profitable victim remains
+        }
+    }
+    Ok(rewrites)
+}
+
+/// The recompute closure of `{v}` as seen from just before node `l`,
+/// under the park-alive materialization rule — `None` when any closure
+/// node carries a concrete task (cloning it would duplicate observable
+/// work; see the module docs).
+fn pure_closure(
+    wg: &WorkGraph,
+    v: usize,
+    l: usize,
+    last_use: &[Option<usize>],
+) -> Option<Vec<usize>> {
+    let mut include = vec![false; v + 1];
+    include[v] = true;
+    for id in (0..=v).rev() {
+        if !include[id] {
+            continue;
+        }
+        if !matches!(wg.nodes[id].task, Task::Opaque | Task::Transfer) {
+            return None;
+        }
+        for &d in &wg.nodes[id].deps {
+            // a dep is materialized at `l` iff its park is still alive
+            // there; v itself is what we are recomputing
+            let alive_at_l =
+                wg.nodes[d].out_bytes > 0 && last_use[d].is_some_and(|lu| lu >= l);
+            if !alive_at_l {
+                include[d] = true;
+            }
+        }
+    }
+    Some((0..=v).filter(|&i| include[i]).collect())
+}
+
+/// Clone `closure` (ascending ids) immediately before `l`, rewire `l`'s
+/// dependency on `v` onto the clone of `v`, leave everything else
+/// untouched.  Clone-internal deps point at clones; external deps at
+/// their (park-alive) originals, all `< l`, so ids stay topological.
+fn apply(wg: &mut WorkGraph, v: usize, l: usize, closure: &[usize]) {
+    use std::collections::HashMap;
+    let n = wg.nodes.len();
+    let m = closure.len();
+    let k = wg.next_fresh();
+    let mut clone_of: HashMap<usize, usize> = HashMap::with_capacity(m);
+    let mut nodes: Vec<WorkNode> = Vec::with_capacity(n + m);
+    nodes.extend(wg.nodes[..l].iter().cloned());
+    for (i, &c) in closure.iter().enumerate() {
+        let src = &wg.nodes[c];
+        let mut deps: Vec<usize> = src
+            .deps
+            .iter()
+            .map(|d| clone_of.get(d).copied().unwrap_or(*d))
+            .collect();
+        deps.sort_unstable();
+        deps.dedup();
+        nodes.push(WorkNode {
+            kind: src.kind,
+            label: format!("remat.{k}.{}", src.label),
+            deps,
+            task: src.task,
+            est_bytes: src.est_bytes,
+            out_bytes: src.out_bytes,
+            device: src.device,
+            orig: None,
+        });
+        clone_of.insert(c, l + i);
+    }
+    for id in l..n {
+        let mut node = wg.nodes[id].clone();
+        for d in node.deps.iter_mut() {
+            if *d >= l {
+                *d += m; // the shift is monotone: sortedness survives
+            }
+        }
+        if id == l {
+            for d in node.deps.iter_mut() {
+                if *d == v {
+                    *d = clone_of[&v];
+                }
+            }
+            node.deps.sort_unstable();
+            node.deps.dedup();
+        }
+        nodes.push(node);
+    }
+    wg.nodes = nodes;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rowir::analysis;
+    use crate::rowir::graph::{Graph, NodeKind};
+
+    /// The canonical retain-edge: `a` parks 100 B across unrelated work
+    /// `b` (which never reads `a`), and only the distant `c` consumes it.
+    /// Peak 110 = park(a) + run(b).  Rematerializing `a` just before `c`
+    /// drops the park across `b`: peak 105 = run(a') + run(c).
+    fn retain_edge() -> Graph {
+        let mut g = Graph::new();
+        let a = g.push_out(NodeKind::Row, "a", vec![], 100, 100);
+        let b = g.push(NodeKind::Row, "b", vec![], 10);
+        g.push(NodeKind::Barrier, "c", vec![a, b], 5);
+        g
+    }
+
+    #[test]
+    fn frees_the_retain_edge_and_stays_valid() {
+        let g = retain_edge();
+        assert_eq!(analysis::static_peak(&g), 110);
+        let mut wg = WorkGraph::from_graph(&g, None, 1);
+        let cx = OptContext::serial();
+        let mut stats = RematStats::default();
+        let n = run(&mut wg, &cx, &mut stats).unwrap();
+        assert!(n >= 1, "the retain edge is a victim");
+        assert!(stats.bytes_freed >= 100);
+        assert!(stats.recompute_seconds_added > 0.0);
+        let (g2, _, orig) = wg.to_graph().unwrap();
+        assert!(analysis::static_peak(&g2) < 110, "peak strictly dropped");
+        assert!(!analysis::analyze(&g2).has_errors());
+        // the clone carries provenance None and a remat label
+        let clone = g2.find("remat.0.a").expect("clone exists");
+        assert_eq!(orig[clone], None);
+        // c now reads the clone, not the original
+        let c = g2.find("c").unwrap();
+        assert!(g2.node(c).deps.contains(&clone));
+    }
+
+    #[test]
+    fn concrete_closures_are_never_cloned() {
+        let mut g = Graph::new();
+        let a = g.push_task(
+            NodeKind::Row,
+            "a",
+            vec![],
+            100,
+            100,
+            Task::FpRow { seg: 0, row: 0 },
+        );
+        let b = g.push(NodeKind::Row, "b", vec![a], 10);
+        g.push(NodeKind::Barrier, "c", vec![a, b], 5);
+        let mut wg = WorkGraph::from_graph(&g, None, 1);
+        let cx = OptContext::serial();
+        let mut stats = RematStats::default();
+        assert_eq!(run(&mut wg, &cx, &mut stats).unwrap(), 0);
+        assert_eq!(wg.nodes.len(), g.len(), "nothing rewritten");
+    }
+
+    #[test]
+    fn budget_satisfaction_stops_the_pass_early() {
+        let g = retain_edge();
+        let mut wg = WorkGraph::from_graph(&g, None, 1);
+        // 110 already fits a 110-byte budget: zero objective, zero work
+        let cx = OptContext::serial().with_budgets(vec![110]);
+        let mut stats = RematStats::default();
+        assert_eq!(run(&mut wg, &cx, &mut stats).unwrap(), 0);
+        assert_eq!(wg.nodes.len(), g.len());
+    }
+}

@@ -25,9 +25,10 @@
 
 use std::collections::HashMap;
 
+use crate::costmodel::CostModel;
 use crate::error::{Error, Result};
 use crate::memory::sim::{self, Schedule};
-use crate::rowir::{analysis, interp, Graph, NodeId, NodeKind, Task};
+use crate::rowir::{analysis, interp, opt, Graph, NodeId, NodeKind, Task};
 
 use super::partition::{payload_bytes, PartitionPolicy, Partitioner};
 use super::topology::{DeviceId, Topology};
@@ -181,6 +182,62 @@ impl ShardPlan {
         // rejected before any executor can adopt it
         plan.analyze().check()?;
         Ok(plan)
+    }
+
+    /// Run the `rowir::opt` fixpoint pipeline over the sharded graph —
+    /// post-lowering, so transfer coalescing sees the `Task::Transfer`
+    /// nodes — and rebuild the plan around the optimized graph: `orig`
+    /// provenance composed through the optimizer's map (remat clones
+    /// stay `None`), [`ShardPlan::transfers`] metadata and successor
+    /// lists re-derived from the rewritten graph, and the full
+    /// [`ShardPlan::analyze`] gate re-run before the plan is adopted.
+    ///
+    /// The admission budgets deliberately stay **out** of the optimizer
+    /// context: the static peak bound may exceed a budget the replay
+    /// peak fits (LIV002 only guarantees static ≥ replay), so letting
+    /// the optimizer judge feasibility would reject runnable plans —
+    /// [`ShardPlan::check_budgets`], replay-based, remains the admission
+    /// authority.  The optimizer still drives peaks down best-effort.
+    pub fn optimize(&mut self, level: u8, topo: &Topology) -> Result<opt::OptReport> {
+        let cx = opt::OptContext {
+            devices: self.devices,
+            device_of: Some(self.device_of.clone()),
+            budgets: None,
+            cost: CostModel::from_topology(topo),
+        };
+        let outcome = opt::optimize_graph(&self.graph, level, &cx)?;
+        if outcome.report.rewrites() == 0 {
+            return Ok(outcome.report); // identity: keep the plan as built
+        }
+        let old_orig = std::mem::take(&mut self.orig);
+        self.orig = outcome
+            .orig_of
+            .iter()
+            .map(|o| o.and_then(|i| old_orig[i]))
+            .collect();
+        self.device_of = outcome.device_of;
+        self.graph = outcome.graph;
+        self.transfers = self
+            .graph
+            .nodes()
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.task.is_transfer())
+            .map(|(id, n)| {
+                let src = self.device_of[n.deps[0]];
+                let dst = self.device_of[id];
+                Transfer {
+                    node: id,
+                    src,
+                    dst,
+                    bytes: n.est_bytes,
+                    seconds: topo.transfer_seconds(n.est_bytes, src, dst),
+                }
+            })
+            .collect();
+        self.succ = successors(&self.graph);
+        self.analyze().check()?;
+        Ok(outcome.report)
     }
 
     /// Run the full static-analysis suite over this plan: the graph
@@ -524,6 +581,48 @@ mod tests {
         assert!(plan.check_budgets_subset(&include).is_err());
         // arity is checked
         assert!(plan.replay_peaks_subset(&[true]).is_err());
+    }
+
+    #[test]
+    fn optimize_is_identity_on_tight_plans() {
+        let base = fan();
+        let t = topo(2);
+        let mut plan = ShardPlan::lower(&base, &t, &[0, 1, 0], vec![u64::MAX; 2]).unwrap();
+        let before = plan.graph().len();
+        let report = plan.optimize(2, &t).unwrap();
+        assert_eq!(report.rewrites(), 0, "the lowered fan is residency-tight");
+        assert_eq!(plan.graph().len(), before);
+        assert_eq!(plan.transfers().len(), 1, "metadata untouched");
+        assert!(plan.analyze().check().is_ok());
+    }
+
+    #[test]
+    fn optimize_remats_a_retain_edge_and_rebuilds_the_plan() {
+        // a parks 100 B across unrelated work b; only c reads it
+        let mut base = Graph::new();
+        let a = base.push_out(NodeKind::Row, "a", vec![], 100, 100);
+        let b = base.push(NodeKind::Row, "b", vec![], 10);
+        base.push(NodeKind::Barrier, "c", vec![a, b], 5);
+        let t = topo(1);
+        let mut plan = ShardPlan::lower(&base, &t, &[0, 0, 0], vec![u64::MAX]).unwrap();
+        let static_before = analysis::static_peak(plan.graph());
+        assert_eq!(static_before, 110);
+        let report = plan.optimize(2, &t).unwrap();
+        assert!(report.rewrites() >= 1, "the retain edge is rewritten");
+        assert!(report.bytes_freed >= 100);
+        assert!(report.recompute_seconds_added > 0.0);
+        assert!(analysis::static_peak(plan.graph()) < static_before);
+        assert!(plan.analyze().check().is_ok());
+        // provenance composed through the rewrite: the clone is None,
+        // survivors still point at their base nodes; the dead original
+        // producer was swept by dce after the rewire
+        let g = plan.graph();
+        let clone = g.find("remat.0.a").expect("clone exists");
+        assert_eq!(plan.orig()[clone], None);
+        assert_eq!(plan.orig()[g.find("c").unwrap()], Some(2));
+        assert!(g.find("a").is_none(), "unread original swept");
+        // re-optimizing the optimized plan is a no-op
+        assert_eq!(plan.optimize(2, &t).unwrap().rewrites(), 0);
     }
 
     #[test]

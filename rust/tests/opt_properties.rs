@@ -1,0 +1,355 @@
+//! Property proofs for the `rowir::opt` fixpoint pipeline
+//! (docs/ROWIR.md "Optimizer").
+//!
+//! Four families:
+//!
+//! 1. **Randomized fan graphs** — the fixpoint quiesces within
+//!    `MAX_ITERS` on every graph, never raises any device's static
+//!    peak, is deterministic, and its output is a true fixed point
+//!    (re-optimizing rewrites nothing).
+//! 2. **Budget-driven remat** — under tightened per-device budgets the
+//!    pipeline either produces a plan whose static peaks fit or fails
+//!    with the typed `Error::InfeasiblePlan`; nothing in between.
+//! 3. **Concrete rewrites** — a hand-built graph where exactly one
+//!    transfer coalesce and one rematerialization must fire, with the
+//!    static peak strictly dropping.
+//! 4. **The bit-identity matrix at `--opt-level 2`** — every mode runs
+//!    serially, pipelined and sharded (2 and 4 devices, all partition
+//!    policies) through *optimized* programs/plans, and losses + final
+//!    params stay `to_bits()`-identical to the serial reference.  The
+//!    trainer-level lint ordering regression rides along: after
+//!    `set_opt_level` the `--lint-strict` report judges the post-opt
+//!    plan.
+
+mod common;
+
+use common::{
+    assert_bits_equal, demo_manifest, run_serial, test_batch, FakeExec, ALL_MODES, ALL_POLICIES,
+};
+use lr_cnn::coordinator::{Optimizer, ParamSet, ShardState, StepPlan, Trainer};
+use lr_cnn::error::Error;
+use lr_cnn::memory::DeviceModel;
+use lr_cnn::rowir::opt::{optimize_graph, MAX_ITERS};
+use lr_cnn::rowir::{analysis, optimize, Graph, NodeKind, OptContext, Task};
+use lr_cnn::runtime::Runtime;
+use lr_cnn::sched::SchedConfig;
+use lr_cnn::shard::{LinkKind, ShardConfig, ShardPlan, Topology};
+use lr_cnn::util::rng::XorShift;
+
+/// Deterministic random fan-chain graph (the `tests/common` generator's
+/// shape) with food for every pass: a `skip` retain edge pushed *first*
+/// — it parks a large output across the whole independent fan chain and
+/// only the sink reads it, so rematerializing it next to the sink
+/// strictly drops the peak whenever the peak lands mid-chain — plus
+/// optional dead debris (dce food) and a duplicated transfer pair
+/// (coalesce food).  The chain ends in a *concrete* sink (`Task::Head`):
+/// every other node is `Opaque`, and without a concrete anchor dce would
+/// (correctly) classify the whole chain as debris and delete it.
+fn random_opt_graph(rng: &mut XorShift, fans: usize) -> Graph {
+    let mut g = Graph::new();
+    let sz = 1 + rng.below(1 << 20) as u64;
+    let skip = g.push_out(NodeKind::Row, "skip", vec![], sz, sz);
+    let mut prev: Option<usize> = None;
+    for f in 0..fans {
+        let width = 1 + rng.below(9);
+        let mut rows = Vec::with_capacity(width);
+        for r in 0..width {
+            let est = 1 + rng.below(1 << 20) as u64;
+            let out = rng.below(1 + est as usize / 2) as u64;
+            let deps = prev.map(|b| vec![b]).unwrap_or_default();
+            rows.push(g.push_out(NodeKind::Row, format!("f{f}r{r}"), deps, est, out));
+        }
+        let est = 1 + rng.below(1 << 18) as u64;
+        prev = Some(g.push_out(NodeKind::Barrier, format!("bar{f}"), rows, est, est / 2));
+    }
+    let last = prev.expect("at least one fan");
+    // dead debris: no consumer, Opaque task — dce food
+    if rng.below(2) == 0 {
+        g.push(NodeKind::Row, "debris", vec![], 1 + rng.below(1 << 10) as u64);
+    }
+    // duplicate transfers off a random producer, merged by a barrier —
+    // coalesce food (same producer, same device in the serial context)
+    let p = rng.below(last + 1);
+    let b = 1 + rng.below(1 << 12) as u64;
+    let t1 = g.push_task(NodeKind::Transfer, "dup.t1", vec![p], b, b, Task::Transfer);
+    let t2 = g.push_task(NodeKind::Transfer, "dup.t2", vec![p], b, b, Task::Transfer);
+    let red = g.push(NodeKind::Barrier, "dup.red", vec![t1, t2], 1);
+    let mut sink_deps = vec![skip, last, red];
+    sink_deps.sort_unstable();
+    g.push_task(NodeKind::Barrier, "sink", sink_deps, 1, 0, Task::Head);
+    g
+}
+
+#[test]
+fn fixpoint_terminates_and_never_raises_the_peak_on_random_graphs() {
+    let mut rng = XorShift::new(0x0b7a11);
+    for trial in 0..40 {
+        let g = random_opt_graph(&mut rng, 1 + trial % 6);
+        let before = analysis::static_peak(&g);
+        for level in [1u8, 2] {
+            let cx = OptContext::serial();
+            let out = optimize_graph(&g, level, &cx)
+                .unwrap_or_else(|e| panic!("trial {trial} level {level}: {e}"));
+            assert!(
+                out.report.iterations <= MAX_ITERS,
+                "trial {trial}: {} iterations",
+                out.report.iterations
+            );
+            let after = analysis::static_peak(&out.graph);
+            assert!(
+                after <= before,
+                "trial {trial} level {level}: peak {before} -> {after}"
+            );
+            assert!(out.graph.validate().is_ok());
+            assert!(!analysis::analyze(&out.graph).has_errors());
+            // determinism: the same input optimizes to the same output
+            let again = optimize_graph(&g, level, &cx).unwrap();
+            assert_eq!(
+                format!("{:?}", again.graph),
+                format!("{:?}", out.graph),
+                "trial {trial} level {level}: nondeterministic output"
+            );
+            // a true fixed point: re-optimizing rewrites nothing
+            let idem = optimize_graph(&out.graph, level, &cx).unwrap();
+            assert_eq!(
+                idem.report.rewrites(),
+                0,
+                "trial {trial} level {level}: output was not a fixpoint"
+            );
+        }
+    }
+}
+
+#[test]
+fn tightened_budgets_fit_or_fail_typed_on_random_graphs() {
+    let mut rng = XorShift::new(0x5eed);
+    let mut fitted = 0usize;
+    let mut infeasible = 0usize;
+    for trial in 0..40 {
+        let g = random_opt_graph(&mut rng, 1 + trial % 6);
+        let peak = analysis::static_peak(&g);
+        // straddle the feasibility boundary: 40%..119% of the pre-opt
+        // peak, so both arms of the contract come up across the trials
+        let pct = 40 + rng.below(80) as u64;
+        let budget = (peak * pct / 100).max(1);
+        let cx = OptContext::serial().with_budgets(vec![budget]);
+        match optimize_graph(&g, 2, &cx) {
+            Ok(out) => {
+                let peaks = analysis::static_device_peaks(&out.graph, &out.device_of, 1);
+                assert!(
+                    peaks[0] <= budget,
+                    "trial {trial}: claimed fit but peak {} > budget {budget}",
+                    peaks[0]
+                );
+                fitted += 1;
+            }
+            Err(Error::InfeasiblePlan(msg)) => {
+                assert!(msg.contains("exceeds budget"), "trial {trial}: {msg}");
+                infeasible += 1;
+            }
+            Err(e) => panic!("trial {trial}: untyped failure {e}"),
+        }
+    }
+    // both arms of the contract must actually be exercised
+    assert!(fitted > 0, "no trial ever fit its tightened budget");
+    assert!(infeasible > 0, "no trial was ever infeasible");
+}
+
+/// One concrete coalesce + one concrete remat, counted exactly.
+///
+/// `p` fans out over two identical same-device transfers (one coalesce
+/// rewrite), and `a` parks 100 B across an unrelated `b` with only the
+/// distant `c` consuming it (one remat rewrite).  The ledger: before =
+/// park(a) + the transfer fan; after, `a` is recomputed next to `c` and
+/// one transfer is gone, so the static peak strictly drops.
+#[test]
+fn hand_built_graph_takes_exactly_one_coalesce_and_one_remat() {
+    let mut g = Graph::new();
+    let p = g.push_out(NodeKind::Row, "p", vec![], 30, 20);
+    let t1 = g.push_task(NodeKind::Transfer, "t1", vec![p], 20, 20, Task::Transfer);
+    let t2 = g.push_task(NodeKind::Transfer, "t2", vec![p], 20, 20, Task::Transfer);
+    let red = g.push(NodeKind::Barrier, "red", vec![t1, t2], 10);
+    let a = g.push_out(NodeKind::Row, "a", vec![red], 100, 100);
+    let b = g.push(NodeKind::Row, "b", vec![red], 10);
+    g.push(NodeKind::Barrier, "c", vec![a, b], 5);
+
+    let before = analysis::static_peak(&g);
+    let cx = OptContext::serial();
+    let out = optimize_graph(&g, 2, &cx).unwrap();
+    let coalesces: usize = out
+        .report
+        .passes
+        .iter()
+        .filter(|p| p.pass == "coalesce")
+        .map(|p| p.rewrites)
+        .sum();
+    let remats: usize = out
+        .report
+        .passes
+        .iter()
+        .filter(|p| p.pass == "remat")
+        .map(|p| p.rewrites)
+        .sum();
+    assert_eq!(coalesces, 1, "exactly one transfer merge: {:?}", out.report);
+    assert_eq!(remats, 1, "exactly one remat: {:?}", out.report);
+    let after = analysis::static_peak(&out.graph);
+    assert!(after < before, "peak must strictly drop: {before} -> {after}");
+    assert!(out.report.bytes_freed >= 100);
+    assert!(out.report.transfer_seconds_saved > 0.0);
+    assert!(out.report.recompute_seconds_added > 0.0);
+    // the merged transfer survives, its duplicate does not; the remat
+    // clone exists with no provenance
+    assert!(out.graph.find("t1").is_some());
+    assert!(out.graph.find("t2").is_none());
+    let clone = out
+        .graph
+        .nodes()
+        .iter()
+        .position(|n| n.label.starts_with("remat.") && n.label.ends_with(".a"))
+        .expect("remat clone exists");
+    assert_eq!(out.orig_of[clone], None);
+}
+
+/// Optimizing a lowered demo program is structurally a no-op: every
+/// node carries a concrete task (remat may not clone them), there are
+/// no transfers serially (nothing to coalesce) and no dead nodes
+/// (nothing to delete).  This is the structural half of the bit-identity
+/// argument — the executed serial program *is* the pristine program.
+#[test]
+fn serial_demo_programs_are_fixed_points() {
+    let man = demo_manifest();
+    for mode in ALL_MODES {
+        let Ok(plan) = StepPlan::build(&man, mode) else {
+            continue;
+        };
+        let Ok(program) = plan.lower(&man) else {
+            continue;
+        };
+        let (opt, report) = optimize(&program, 2, &OptContext::serial()).unwrap();
+        assert_eq!(
+            report.rewrites(),
+            0,
+            "{mode:?}: lowered programs carry only concrete, live, transfer-free nodes"
+        );
+        assert_eq!(opt.len(), program.len());
+    }
+}
+
+/// The full matrix at `--opt-level 2`: serial reference vs optimized
+/// serial, optimized pipelined and optimized sharded (2 and 4 devices,
+/// every partition policy) — losses and final params `to_bits()`-equal
+/// everywhere.
+#[test]
+fn bit_identity_matrix_holds_through_the_optimizer() {
+    let man = demo_manifest();
+    let steps = 2;
+    for mode in ALL_MODES {
+        let (ref_losses, ref_params, _) = run_serial(&man, mode, steps);
+        let plan = StepPlan::build(&man, mode).unwrap();
+        let program = plan.lower(&man).unwrap();
+        let (optp, _) = optimize(&program, 2, &OptContext::serial()).unwrap();
+        let ex = FakeExec { man: man.clone() };
+        let (x, y) = test_batch();
+
+        // optimized serial
+        {
+            let mut params = ParamSet::init(&man.model, 42);
+            let mut opt = Optimizer::sgd(0.05);
+            let mut losses = Vec::new();
+            for _ in 0..steps {
+                let (loss, grads, _) = plan.step_serial(&ex, &optp, &params, &x, &y).unwrap();
+                opt.step(&mut params, &grads).unwrap();
+                losses.push(loss);
+            }
+            assert_eq!(losses, ref_losses, "{mode:?} serial+opt losses");
+            assert_bits_equal(&params, &ref_params, &format!("{mode:?} serial+opt"));
+        }
+
+        // optimized pipelined (single ledger)
+        {
+            let cfg = SchedConfig::pipelined(3);
+            let mut params = ParamSet::init(&man.model, 42);
+            let mut opt = Optimizer::sgd(0.05);
+            let mut losses = Vec::new();
+            for _ in 0..steps {
+                let (loss, grads, _) = plan
+                    .step_pipelined(&ex, &optp, &params, &cfg, None, &x, &y)
+                    .unwrap();
+                opt.step(&mut params, &grads).unwrap();
+                losses.push(loss);
+            }
+            assert_eq!(losses, ref_losses, "{mode:?} pipelined+opt losses");
+            assert_bits_equal(&params, &ref_params, &format!("{mode:?} pipelined+opt"));
+        }
+
+        // optimized sharded: 2 and 4 devices × every policy
+        for devices in [2usize, 4] {
+            let topo = Topology::uniform(devices, DeviceModel::rtx3090(), LinkKind::NvLink);
+            for policy in ALL_POLICIES {
+                let ctx = format!("{mode:?} {policy:?}@{devices}+opt");
+                let mut splan =
+                    ShardPlan::build(optp.graph(), &topo, policy, topo.budgets(0)).unwrap();
+                let rep = splan.optimize(2, &topo).unwrap();
+                assert!(
+                    rep.total_peak_after() <= rep.total_peak_before(),
+                    "{ctx}: optimizer raised the plan peak"
+                );
+                let ledgers = splan.replay_ledgers(&topo, 0).unwrap();
+                splan.set_budgets(ledgers).unwrap();
+                splan.check_budgets().unwrap();
+                let mut state = ShardState::with_plan(splan, 3);
+                let cfg = SchedConfig::pipelined(3);
+                let mut params = ParamSet::init(&man.model, 42);
+                let mut opt = Optimizer::sgd(0.05);
+                let mut losses = Vec::new();
+                for _ in 0..steps {
+                    let (loss, grads, _) = plan
+                        .step_pipelined(&ex, &optp, &params, &cfg, Some(&mut state), &x, &y)
+                        .unwrap();
+                    opt.step(&mut params, &grads).unwrap();
+                    losses.push(loss);
+                }
+                assert_eq!(losses, ref_losses, "{ctx} losses");
+                assert_bits_equal(&params, &ref_params, &ctx);
+            }
+        }
+    }
+}
+
+/// `train --lint-strict` ordering regression: after `set_opt_level` the
+/// trainer's lint report describes the *post-opt* plan — on the sharded
+/// path that is the optimized `ShardPlan`, and the optimizer's report is
+/// reachable for the run summary.  The gate itself (`plan_lint_report`
+/// in `cmd_train`) runs after `set_sched` + `set_opt_level`, so this
+/// pins the data it judges.
+#[test]
+fn lint_strict_judges_the_post_opt_plan() {
+    let rt = Runtime::demo();
+    let mut tr = Trainer::new(&rt, lr_cnn::coordinator::Mode::RowHybrid, 0.05, 7).unwrap();
+    // serial: level 2 installs an optimized (structurally identical)
+    // program and a zero-rewrite report
+    tr.set_opt_level(2).unwrap();
+    assert_eq!(tr.opt_level(), 2);
+    let rep = tr.opt_report().expect("serial opt report exists");
+    assert_eq!(rep.rewrites(), 0, "demo serial program is a fixed point");
+    let lint = tr.plan_lint_report().expect("a lowered plan to lint");
+    assert!(!lint.has_errors(), "{}", lint.verdict());
+
+    // sharded: the lint report must come from the optimized ShardPlan,
+    // and the shard's own opt report takes precedence
+    let cfg = SchedConfig::pipelined(2).with_shard(ShardConfig::new(2));
+    tr.set_sched(cfg).unwrap();
+    assert!(tr.shard_state().is_some());
+    let srep = tr.opt_report().expect("sharded opt report exists");
+    assert!(
+        srep.total_peak_after() <= srep.total_peak_before(),
+        "post-partition optimization never raises the peak"
+    );
+    let lint = tr.plan_lint_report().expect("sharded plan lint");
+    assert!(!lint.has_errors(), "{}", lint.verdict());
+
+    // back to level 0: report gone, lint still clean
+    tr.set_opt_level(0).unwrap();
+    assert!(tr.opt_report().is_none());
+    assert!(!tr.plan_lint_report().unwrap().has_errors());
+}

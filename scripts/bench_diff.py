@@ -8,6 +8,14 @@ when any matched run entry's ``mean_ms`` — or, for the shard-scaling
 bench, its modeled ``makespan_s`` — regressed by more than
 REGRESSION_PCT versus the baseline.
 
+``peak_bytes`` is additionally gated at **0% tolerance** for the benches
+listed in PEAK_GATED_BENCHES (today: the optimizer-impact bench).  Their
+peaks are *static-analysis* numbers — `rowir::analysis` byte-ledger
+bounds of the post-opt program — so they are bit-deterministic and lower
+is strictly better: any increase versus baseline means the optimizer
+lost ground and fails the gate.  Benches whose peaks are *measured*
+admission highs (timing-dependent) stay advisory.
+
 Matching is schema-agnostic: for every top-level key whose value is a
 list of objects (``runs``, ``ops``, ``pipelined``, ``sharded``,
 ``live_steps``...), entries are keyed by their *identity* fields — every
@@ -71,8 +79,15 @@ TIMING_KEYS = {
     "under_ledger",
 }
 
-# Metrics gated per matched entry, in report order.
-GATED_KEYS = ("mean_ms", "makespan_s")
+# Metrics gated per matched entry, in report order: (key, limit_pct).
+# ``None`` means the ``limit_pct`` argument of compare() (REGRESSION_PCT
+# by default); a number is an absolute per-key limit.
+GATED_KEYS = (("mean_ms", None), ("makespan_s", None))
+
+# Benches whose ``peak_bytes`` is a deterministic static-analysis bound
+# (not a measured admission high): gated at 0% — any increase fails.
+PEAK_GATED_BENCHES = {"BENCH_opt_impact.json"}
+PEAK_GATE = ("peak_bytes", 0.0)
 
 
 def identity(entry):
@@ -141,6 +156,7 @@ def compare(name, current, baseline, limit_pct=REGRESSION_PCT):
     for section, ident, entry in run_entries(baseline):
         base_map[(section, ident)] = entry
 
+    gated = GATED_KEYS + ((PEAK_GATE,) if name in PEAK_GATED_BENCHES else ())
     failures = []
     matched = 0
     for section, ident, entry in run_entries(current):
@@ -150,7 +166,8 @@ def compare(name, current, baseline, limit_pct=REGRESSION_PCT):
             lines.append(f"    {label}: no baseline entry (new scenario?) — advisory")
             continue
         matched += 1
-        for key in GATED_KEYS:
+        for key, key_limit in gated:
+            limit = limit_pct if key_limit is None else key_limit
             cur_v, base_v = entry.get(key), base.get(key)
             if not (isinstance(cur_v, (int, float)) and isinstance(base_v, (int, float))):
                 continue
@@ -158,10 +175,10 @@ def compare(name, current, baseline, limit_pct=REGRESSION_PCT):
                 continue
             delta_pct = (cur_v / base_v - 1.0) * 100.0
             line = f"    {label} {key}: {base_v:.3f} -> {cur_v:.3f} ({delta_pct:+.1f}%)"
-            if delta_pct > limit_pct:
+            if delta_pct > limit:
                 failures.append(
                     f"{name}: {label} {key} regressed {delta_pct:+.1f}% "
-                    f"(limit +{limit_pct:.0f}%)"
+                    f"(limit +{limit:.0f}%)"
                 )
                 line += "  REGRESSION"
             lines.append(line)
@@ -276,6 +293,21 @@ def self_test():
     fails, lines = compare("B", cur, _doc(1.0))
     check("new scenario is advisory",
           fails == [] and any("no baseline entry" in l for l in lines))
+
+    # peak_bytes: 0%-gated for the opt bench, advisory elsewhere
+    def _peak_doc(peak):
+        return {"runs": [{"name": "base", "mean_ms": 1.0, "peak_bytes": peak}]}
+
+    opt = "BENCH_opt_impact.json"
+    fails, _ = compare(opt, _peak_doc(1000), _peak_doc(1000))
+    check("equal peak passes the 0% gate", fails == [])
+    fails, _ = compare(opt, _peak_doc(900), _peak_doc(1000))
+    check("lower peak passes the 0% gate", fails == [])
+    fails, _ = compare(opt, _peak_doc(1001), _peak_doc(1000))
+    check("one byte of peak growth fails the opt bench",
+          len(fails) == 1 and "peak_bytes" in fails[0] and "limit +0%" in fails[0])
+    fails, _ = compare("BENCH_other.json", _peak_doc(1001), _peak_doc(1000))
+    check("peak growth is advisory outside PEAK_GATED_BENCHES", fails == [])
 
     # predicted-vs-measured: 0.002 s model vs 1.0 ms measured = +100%
     lines = makespan_error_lines(_doc(1.0, 0.002))
